@@ -1,0 +1,67 @@
+//! Quickstart: compile a model with the HyperDex stack, simulate its
+//! decode latency on the cycle-accurate LPU, and estimate the chip.
+//!
+//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart -- opt-6.7b
+
+use lpu::compiler::{compile, CompileOpts};
+use lpu::config::LpuConfig;
+use lpu::model::by_name;
+use lpu::power::{chip_estimate, system_power_w};
+use lpu::sim::simulate_generation;
+
+fn main() -> Result<(), String> {
+    let model_name =
+        std::env::args().nth(1).unwrap_or_else(|| "opt-1.3b".to_string());
+    let model = by_name(&model_name).ok_or(format!("unknown model '{model_name}'"))?;
+    let cfg = LpuConfig::asic_3_28tbs();
+    let devices = model.devices_needed(cfg.hbm.capacity());
+
+    println!("== model ==");
+    println!(
+        "{}: {:.2}B params, {:.1} GB FP16, needs {devices} device(s) of {:.0} GB",
+        model.name,
+        model.params() as f64 / 1e9,
+        model.weight_bytes() as f64 / 1e9,
+        cfg.hbm.capacity() as f64 / 1e9,
+    );
+
+    println!("\n== HyperDex compile (device 0 shard) ==");
+    let opts = CompileOpts { n_devices: devices, position: 1024, ..Default::default() };
+    let c = compile(&model, &cfg, &opts).map_err(|e| e.to_string())?;
+    println!(
+        "{} instructions, {} virtual regs -> peak {} physical, {} chains, map {:.2} GB",
+        c.stats.instrs,
+        c.stats.virtual_regs,
+        c.stats.peak_live_regs,
+        c.stats.chain.chains,
+        c.map.total_bytes() as f64 / 1e9,
+    );
+    let hist = c.program.category_histogram();
+    println!(
+        "instruction mix: MEM {} / COMP {} / NET {} / CTRL {}",
+        hist[0].1, hist[1].1, hist[2].1, hist[3].1
+    );
+
+    println!("\n== cycle-accurate simulation (in=32, out=2016) ==");
+    let r = simulate_generation(&model, &cfg, devices, 32, 2016, true)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "{:.3} ms/token ({:.1} tokens/s), bandwidth utilization {:.1}%",
+        r.ms_per_token,
+        r.tokens_per_s,
+        r.bandwidth_util * 100.0
+    );
+    println!("paper reference: OPT-1.3B 1.25 ms/token @63.3%, OPT-66B(x2) 22.2 ms @90.6%");
+
+    println!("\n== ASIC estimate ({}) ==", cfg.name);
+    let est = chip_estimate(&cfg);
+    println!(
+        "chip {:.3} mm^2 / {:.2} mW; system incl. {} HBM3 stacks: {:.0} W",
+        est.total_area_mm2(),
+        est.total_power_mw(),
+        cfg.hbm.stacks,
+        system_power_w(&cfg)
+    );
+    Ok(())
+}

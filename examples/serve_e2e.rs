@@ -1,0 +1,86 @@
+//! End-to-end driver (the EXPERIMENTS.md E2E run): serve a real model
+//! through the full stack and report latency/throughput.
+//!
+//! Composition proven here, end to end:
+//!   L1 Pallas kernels → L2 JAX decoder → AOT HLO text (`make artifacts`)
+//!   → rust PJRT runtime → coordinator (router/scheduler/sampler)
+//!   → TCP JSON-lines server → client — python never on the request path.
+//!
+//!     make artifacts && cargo run --release --example serve_e2e
+//!     cargo run --release --example serve_e2e -- opt-mini
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lpu::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SchedulerPolicy};
+use lpu::runtime::{default_artifacts_dir, Engine};
+use lpu::server::{serve, Client};
+use lpu::util::stats::Summary;
+
+fn main() -> Result<(), String> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "opt-tiny".to_string());
+    let dir = default_artifacts_dir();
+    if !Engine::artifacts_present(&dir, &model) {
+        return Err(format!("artifacts for '{model}' missing in {dir:?}; run `make artifacts`"));
+    }
+
+    // 0. Validate the bridge against the python golden vector first.
+    println!("validating PJRT bridge for '{model}' ...");
+    Engine::load(&dir, &model).map_err(|e| e.to_string())?.validate().map_err(|e| e.to_string())?;
+    println!("bridge OK (rust logits == python/JAX reference)\n");
+
+    // 1. Bring up the serving stack: 2 PJRT workers, token-interleaved.
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: 4,
+        policy: SchedulerPolicy::RoundRobin,
+    });
+    coord.add_pool(&model, 2, BackendFactory::pjrt(dir, &model));
+    let server = serve(Arc::new(coord), "127.0.0.1:0").map_err(|e| e.to_string())?;
+    println!("server on {}", server.addr);
+
+    // 2. Drive a batched workload: 8 concurrent clients, mixed lengths.
+    let n_clients = 8usize;
+    let max_new = 24usize;
+    let t0 = Instant::now();
+    let addr = server.addr;
+    let model2 = model.clone();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let model = model2.clone();
+            std::thread::spawn(move || -> Result<(usize, f64, f64), String> {
+                let mut c = Client::connect(&addr).map_err(|e| e.to_string())?;
+                let prompt: Vec<i64> = (0..4 + (i as i64 % 5)).map(|j| 3 + i as i64 * 7 + j).collect();
+                let start = Instant::now();
+                let r = c.generate(&model, &prompt, max_new, true)?;
+                let total = start.elapsed().as_secs_f64();
+                Ok((r.tokens.len(), total, total / r.tokens.len() as f64))
+            })
+        })
+        .collect();
+
+    let mut per_token = Vec::new();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let (n, total_s, per_tok) = h.join().map_err(|_| "client panicked")??;
+        total_tokens += n;
+        per_token.push(per_tok);
+        println!("client done: {n} tokens in {:.2}s ({:.1} ms/token)", total_s, per_tok * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // 3. Report.
+    let s = Summary::of(&per_token);
+    println!("\n== E2E results ({model}, 2 PJRT workers, {n_clients} concurrent clients) ==");
+    println!("total: {total_tokens} tokens in {wall:.2}s -> {:.1} tokens/s aggregate", total_tokens as f64 / wall);
+    println!(
+        "per-client per-token latency: mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p99 * 1e3
+    );
+    let mut c = Client::connect(&addr).map_err(|e| e.to_string())?;
+    println!("server metrics: {}", c.metrics()?.to_string_pretty());
+
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,143 @@
+"""AOT lowering: JAX/Pallas decode step -> HLO text + weights + manifest.
+
+Run once at build time (`make artifacts`); the rust runtime then loads
+and executes the artifacts with no Python on the request path.
+
+Interchange format is HLO **text**, not `.serialize()`: the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Per model, emits into the artifacts directory:
+  <model>.decode.hlo.txt   single-token decode step (params..., token,
+                           pos, k, v) -> (logits, k', v')
+  <model>.weights.bin      concatenated little-endian f32 parameters
+  <model>.manifest.json    arg order/shapes/offsets + model shape + a
+                           golden test vector for rust-side validation
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIGS, generate_greedy, init_params, make_decode_fn, param_specs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_model(name: str, out_dir: str, seed: int = 0) -> None:
+    cfg = CONFIGS[name]
+    params = init_params(cfg, seed=seed)
+    specs = param_specs(cfg)
+    fn = make_decode_fn(cfg)
+
+    # --- lower to HLO text ---
+    arg_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    arg_shapes += [
+        jax.ShapeDtypeStruct((1,), jnp.int32),  # token
+        jax.ShapeDtypeStruct((1,), jnp.int32),  # pos
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.max_seq, cfg.d_model), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.max_seq, cfg.d_model), jnp.float32),
+    ]
+    print(f"[{name}] lowering decode step ...", flush=True)
+    lowered = jax.jit(fn).lower(*arg_shapes)
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.decode.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    print(f"[{name}] wrote {hlo_path} ({len(hlo)} chars)")
+
+    # --- weights.bin ---
+    weights_path = os.path.join(out_dir, f"{name}.weights.bin")
+    offsets = []
+    off = 0
+    with open(weights_path, "wb") as f:
+        for (pname, shape), arr in zip(specs, params):
+            raw = np.asarray(arr, np.float32).tobytes()
+            offsets.append((pname, shape, off))
+            f.write(raw)
+            off += len(raw)
+    print(f"[{name}] wrote {weights_path} ({off} bytes)")
+
+    # --- golden test vector ---
+    prompt = [3, 1, 4, 1, 5]
+    print(f"[{name}] computing golden vector (greedy x4) ...", flush=True)
+    expected_tokens, _ = generate_greedy(cfg, params, prompt, 4)
+
+    # Logits after the prompt only (before the first generated token),
+    # for the rust bridge's allclose check.
+    fnj = jax.jit(fn)
+    k = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.d_model), jnp.float32)
+    v = jnp.zeros_like(k)
+    lg = None
+    for i, t in enumerate(prompt):
+        lg, k, v = fnj(
+            *params,
+            jnp.asarray([t], jnp.int32),
+            jnp.asarray([i], jnp.int32),
+            k,
+            v,
+        )
+    logits_prefix = [float(x) for x in np.asarray(lg[:8])]
+
+    # --- manifest ---
+    args = [
+        {"name": pname, "shape": list(shape), "dtype": "f32", "offset": o}
+        for pname, shape, o in offsets
+    ]
+    args += [
+        {"name": "token", "shape": [1], "dtype": "i32"},
+        {"name": "pos", "shape": [1], "dtype": "i32"},
+        {"name": "k", "shape": [cfg.n_layers, cfg.max_seq, cfg.d_model], "dtype": "f32"},
+        {"name": "v", "shape": [cfg.n_layers, cfg.max_seq, cfg.d_model], "dtype": "f32"},
+    ]
+    manifest = {
+        "model": name,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "max_seq": cfg.max_seq,
+        "vocab": cfg.vocab,
+        "args": args,
+        "test": {
+            "prompt": prompt,
+            "expected_tokens": expected_tokens,
+            "logits_prefix": logits_prefix,
+        },
+    }
+    manifest_path = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{name}] wrote {manifest_path}; expected tokens {expected_tokens}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", default="opt-tiny,opt-mini")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+    for name in ns.models.split(","):
+        name = name.strip()
+        if name not in CONFIGS:
+            print(f"unknown model '{name}' (have {sorted(CONFIGS)})", file=sys.stderr)
+            return 1
+        build_model(name, ns.out_dir, seed=ns.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

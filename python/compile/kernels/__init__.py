@@ -1,0 +1,3 @@
+from . import ref  # noqa: F401
+from .vecmat import vecmat  # noqa: F401
+from .attention import decode_attention  # noqa: F401

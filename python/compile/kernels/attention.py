@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: single-token decode attention (Fig 3(b) dataflow).
+
+Per head: Score = q . K^T (SXE), softmax (VXE), Ctx = probs . V (SXE),
+with the causal prefix mask applied at position `pos`. The grid walks
+heads, mirroring the head-wise tiling the HyperDex mapper gives the
+attention weights; K/V blocks stream per head like SMA KV reads.
+
+interpret=True (CPU image; see vecmat.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref):
+    """One head: q [1, Dh], K [1, S, Dh], V [1, S, Dh] -> o [1, Dh]."""
+    pos = pos_ref[0]
+    q = q_ref[...]  # [1, Dh]
+    k = k_ref[0]  # [S, Dh]
+    v = v_ref[0]  # [S, Dh]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = (q @ k.T) * scale  # [1, S]
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(s_iota <= pos, scores, jnp.finfo(scores.dtype).min)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[...] = p @ v  # [1, Dh]
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token MHA over the KV prefix.
+
+    q: [H, Dh]; k_cache/v_cache: [S, H, Dh]; pos: scalar int32.
+    Returns [H, Dh]. Matches ref.decode_attention.
+    """
+    H, Dh = q.shape
+    S = k_cache.shape[0]
+    # Head-major layout for per-head streaming blocks.
+    kh = jnp.swapaxes(k_cache, 0, 1)  # [H, S, Dh]
+    vh = jnp.swapaxes(v_cache, 0, 1)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        _attn_kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),  # pos scalar
+            pl.BlockSpec((1, Dh), lambda h: (h, 0)),
+            pl.BlockSpec((1, S, Dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, S, Dh), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Dh), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, Dh), q.dtype),
+        interpret=True,
+    )(pos_arr, q, kh, vh)
+    return out

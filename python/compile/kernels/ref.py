@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness reference: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels match to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def vecmat(x, w, bias=None):
+    """x[k] (or [1,k]) @ w[k,n] (+ bias[n]) -> [n]."""
+    x = x.reshape(-1)
+    out = x @ w
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token multi-head attention over a KV prefix.
+
+    q:        [H, Dh]      — this token's query, per head
+    k_cache:  [S, H, Dh]   — keys (rows > pos are garbage/zeros)
+    v_cache:  [S, H, Dh]   — values
+    pos:      scalar       — current position (attend to 0..=pos)
+    returns   [H, Dh]
+    """
+    S = k_cache.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    # [H, S]
+    scores = jnp.einsum("hd,shd->hs", q, k_cache) * scale
+    mask = jnp.arange(S)[None, :] <= pos
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    # [H, Dh]
+    return jnp.einsum("hs,shd->hd", probs, v_cache)

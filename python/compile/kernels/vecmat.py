@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: output-stationary vector-matrix multiply.
+
+This is the LPU's compute hot-spot, expressed as the paper's SXE
+dataflow (Fig 3): the activation vector stays resident (output
+stationary) while weight tiles stream HBM -> VMEM. The BlockSpec
+expresses exactly the SMA tiling: tiles are `tile_k` rows x `tile_n`
+columns, walked in the *vertical* direction (all k-tiles of a column
+group before the next group), so a column group's dot products retire
+before the next set begins — one partial-sum buffer, like the hardware.
+
+Hardware adaptation (ASIC -> TPU -> CPU-sim): the LPU streams tiles
+sized `vec_dim x mac_trees`; here `tile_k` plays the vector-dimension
+role and `tile_n` the MAC-tree-count role. `interpret=True` is mandatory
+on this CPU-only image — real TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot execute. Real-TPU resource usage is therefore
+*estimated* from the BlockSpec (see DESIGN.md / EXPERIMENTS.md §Perf):
+VMEM footprint per step = (tile_k*tile_n + tile_k + tile_n) * 4 bytes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vecmat_kernel(x_ref, w_ref, o_ref, *, k_tiles):
+    """One (tile_k x tile_n) MAC-tree step, accumulating into o_ref.
+
+    The output block is revisited for every k-tile of the column group
+    (its index map ignores the k grid axis), so it doubles as the psum
+    register — zeroed on the first vertical step, accumulated after.
+    """
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # x tile [1, tile_k] @ w tile [tile_k, tile_n] -> [1, tile_n]
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_k", "tile_n"))
+def vecmat(x, w, bias=None, *, tile_k=None, tile_n=None):
+    """Compute ``x @ w (+ bias)`` with the output-stationary Pallas kernel.
+
+    x: [k] or [1, k]; w: [k, n]; bias: optional [n]. Returns [n].
+    Tile extents must divide (k, n); they default to the full extent
+    (single-block execution) to bound interpret-mode overhead; tests
+    sweep small tiles to exercise the grid walk.
+    """
+    x = x.reshape(1, -1)
+    k, n = w.shape
+    assert x.shape[1] == k, f"shape mismatch: x{x.shape} w{w.shape}"
+    tile_k = min(tile_k or k, k)
+    tile_n = min(tile_n or n, n)
+    assert k % tile_k == 0, f"k={k} not divisible by tile_k={tile_k}"
+    assert n % tile_n == 0, f"n={n} not divisible by tile_n={tile_n}"
+    k_tiles = k // tile_k
+    n_tiles = n // tile_n
+
+    out = pl.pallas_call(
+        functools.partial(_vecmat_kernel, k_tiles=k_tiles),
+        grid=(n_tiles, k_tiles),  # column group outer, vertical inner
+        in_specs=[
+            pl.BlockSpec((1, tile_k), lambda ni, ki: (0, ki)),
+            pl.BlockSpec((tile_k, tile_n), lambda ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_n), lambda ni, ki: (0, ni)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=True,
+    )(x, w)
+    out = out.reshape(n)
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def vmem_bytes(tile_k, tile_n, dtype_bytes=4):
+    """Estimated VMEM working set per grid step (perf-model input)."""
+    return (tile_k * tile_n + tile_k + tile_n) * dtype_bytes

@@ -1,0 +1,179 @@
+"""L2: the OPT-family decoder in JAX, calling the L1 Pallas kernels.
+
+Single-token decode step with a functional KV cache — the computation the
+rust runtime executes per generated token after AOT lowering. Weights are
+positional arguments (flat list, manifest order) so the rust side can
+feed device buffers without a pytree library.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import decode_attention, vecmat
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """Decoder shape (mirrors rust `model::ModelConfig` for OPT family)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ffn: int
+    vocab: int
+    max_seq: int
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    "opt-tiny": TinyConfig("opt-tiny", 256, 4, 8, 1024, 512, 256),
+    "opt-mini": TinyConfig("opt-mini", 512, 8, 8, 2048, 2048, 512),
+}
+
+
+def param_specs(cfg: TinyConfig):
+    """Ordered (name, shape) list — the manifest/argument order."""
+    specs = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.max_seq, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.ln1_g", (cfg.d_model,)),
+            (f"l{l}.ln1_b", (cfg.d_model,)),
+            (f"l{l}.qkv_w", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{l}.qkv_b", (3 * cfg.d_model,)),
+            (f"l{l}.out_w", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.out_b", (cfg.d_model,)),
+            (f"l{l}.ln2_g", (cfg.d_model,)),
+            (f"l{l}.ln2_b", (cfg.d_model,)),
+            (f"l{l}.fc1_w", (cfg.d_model, cfg.d_ffn)),
+            (f"l{l}.fc1_b", (cfg.d_ffn,)),
+            (f"l{l}.fc2_w", (cfg.d_ffn, cfg.d_model)),
+            (f"l{l}.fc2_b", (cfg.d_model,)),
+        ]
+    specs += [("final_ln_g", (cfg.d_model,)), ("final_ln_b", (cfg.d_model,))]
+    return specs
+
+
+def init_params(cfg: TinyConfig, seed: int = 0):
+    """Deterministic synthetic weights (the 'small real model' stand-in:
+    proprietary checkpoints are unavailable offline; scaled-normal weights
+    exercise the identical compute path and numerics)."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        if name.endswith(("_g",)):
+            w = np.ones(shape, np.float32)
+        elif name.endswith(("_b",)):
+            w = np.zeros(shape, np.float32)
+        else:
+            std = 0.02 if "embed" in name else 0.5 / np.sqrt(shape[0])
+            w = rng.normal(0.0, std, size=shape).astype(np.float32)
+        params.append(jnp.asarray(w))
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean()
+    var = ((x - mu) ** 2).mean()
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def decode_step(cfg: TinyConfig, params, token, pos, k_cache, v_cache):
+    """One decode step.
+
+    token: i32[1]; pos: i32[1]; k_cache/v_cache: f32[L, S, D].
+    Returns (logits f32[V], k_cache', v_cache').
+    """
+    p = {name: arr for (name, _), arr in zip(param_specs(cfg), params)}
+    tok = token[0]
+    pos_i = pos[0]
+    H, Dh = cfg.n_heads, cfg.head_dim
+
+    x = p["embed"][tok] + p["pos_embed"][pos_i]  # [D]
+
+    for l in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+        qkv = vecmat(h, p[f"l{l}.qkv_w"], p[f"l{l}.qkv_b"])  # [3D]
+        q, k, v = jnp.split(qkv, 3)
+        # Append K,V at pos (strobe-transpose analogue: row write).
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.reshape(1, 1, -1), (l, pos_i, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.reshape(1, 1, -1), (l, pos_i, 0)
+        )
+        kc = k_cache[l].reshape(cfg.max_seq, H, Dh)
+        vc = v_cache[l].reshape(cfg.max_seq, H, Dh)
+        ctx = decode_attention(q.reshape(H, Dh), kc, vc, pos_i)  # [H, Dh]
+        attn = vecmat(ctx.reshape(-1), p[f"l{l}.out_w"], p[f"l{l}.out_b"])
+        x = x + attn
+        h2 = _layer_norm(x, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        f = vecmat(h2, p[f"l{l}.fc1_w"], p[f"l{l}.fc1_b"])
+        f = jnp.maximum(f, 0.0)  # OPT uses ReLU
+        x = x + vecmat(f, p[f"l{l}.fc2_w"], p[f"l{l}.fc2_b"])
+
+    x = _layer_norm(x, p["final_ln_g"], p["final_ln_b"])
+    # Weight-tied LM head: logits = x @ embed.T
+    logits = vecmat(x, p["embed"].T)
+    return logits, k_cache, v_cache
+
+
+def make_decode_fn(cfg: TinyConfig):
+    """The positional-args function that gets jitted/lowered: params...,
+    token, pos, k, v."""
+    n_params = len(param_specs(cfg))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        token, pos, k_cache, v_cache = args[n_params:]
+        return decode_step(cfg, params, token, pos, k_cache, v_cache)
+
+    return fn
+
+
+def generate_greedy(cfg: TinyConfig, params, prompt, n_tokens):
+    """Reference greedy generation (golden vector for the rust bridge)."""
+    fn = jax.jit(make_decode_fn(cfg))
+    k = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.d_model), jnp.float32)
+    v = jnp.zeros_like(k)
+    pos = 0
+    logits = None
+    for t in prompt:
+        logits, k, v = fn(
+            *params,
+            jnp.asarray([t], jnp.int32),
+            jnp.asarray([pos], jnp.int32),
+            k,
+            v,
+        )
+        pos += 1
+    out = []
+    nxt = int(jnp.argmax(logits))
+    out.append(nxt)
+    for _ in range(n_tokens - 1):
+        logits, k, v = fn(
+            *params,
+            jnp.asarray([nxt], jnp.int32),
+            jnp.asarray([pos], jnp.int32),
+            k,
+            v,
+        )
+        pos += 1
+        nxt = int(jnp.argmax(logits))
+        out.append(nxt)
+    return out, logits
+
+
+@functools.lru_cache(maxsize=None)
+def get_config(name: str) -> TinyConfig:
+    return CONFIGS[name]

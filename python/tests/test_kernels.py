@@ -1,0 +1,166 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and tilings; assert_allclose against ref.py.
+This is the CORE correctness signal for the compute hot-spot.
+"""
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels import decode_attention, ref, vecmat  # noqa: E402
+from compile.kernels.vecmat import vmem_bytes  # noqa: E402
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------- vecmat ----------------
+
+
+def divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_vecmat_matches_ref_swept(data):
+    k = data.draw(st.sampled_from([1, 2, 8, 16, 64, 96]), label="k")
+    n = data.draw(st.sampled_from([1, 3, 8, 32, 80]), label="n")
+    tile_k = data.draw(st.sampled_from(divisors(k)), label="tile_k")
+    tile_n = data.draw(st.sampled_from(divisors(n)), label="tile_n")
+    seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+    rng = np.random.default_rng(seed)
+    x = rand(rng, k)
+    w = rand(rng, k, n)
+    got = vecmat(x, w, tile_k=tile_k, tile_n=tile_n)
+    exp = ref.vecmat(x, w)
+    assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("tile_k,tile_n", [(None, None), (16, 8), (64, 64), (8, 48)])
+def test_vecmat_with_bias(tile_k, tile_n):
+    rng = np.random.default_rng(7)
+    x = rand(rng, 64)
+    w = rand(rng, 64, 48)
+    b = rand(rng, 48)
+    got = vecmat(x, w, b, tile_k=tile_k, tile_n=tile_n)
+    assert_allclose(np.asarray(got), np.asarray(ref.vecmat(x, w, b)), rtol=2e-5, atol=2e-5)
+
+
+def test_vecmat_accepts_row_vector_input():
+    rng = np.random.default_rng(9)
+    x = rand(rng, 1, 32)
+    w = rand(rng, 32, 16)
+    assert_allclose(
+        np.asarray(vecmat(x, w)), np.asarray(ref.vecmat(x, w)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_vecmat_tile_order_independent():
+    """Output-stationary accumulation must not depend on the tiling."""
+    rng = np.random.default_rng(11)
+    x = rand(rng, 96)
+    w = rand(rng, 96, 64)
+    base = np.asarray(vecmat(x, w, tile_k=96, tile_n=64))
+    for tk, tn in [(8, 8), (32, 16), (96, 8), (8, 64)]:
+        out = np.asarray(vecmat(x, w, tile_k=tk, tile_n=tn))
+        assert_allclose(out, base, rtol=2e-5, atol=2e-5)
+
+
+def test_vecmat_rejects_nondivisible_tiles():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        vecmat(rand(rng, 10), rand(rng, 10, 10), tile_k=3)
+
+
+def test_vecmat_zero_input():
+    w = jnp.ones((8, 4), jnp.float32)
+    out = vecmat(jnp.zeros(8, jnp.float32), w)
+    assert_allclose(np.asarray(out), np.zeros(4), atol=0)
+
+
+def test_vmem_estimate_monotone():
+    assert vmem_bytes(64, 32) < vmem_bytes(128, 32) < vmem_bytes(128, 64)
+
+
+# ---------------- decode attention ----------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    heads=st.sampled_from([1, 2, 4, 8]),
+    dh=st.sampled_from([4, 16, 32]),
+    seq=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_attention_matches_ref_swept(heads, dh, seq, seed, data):
+    pos = data.draw(st.integers(0, seq - 1), label="pos")
+    rng = np.random.default_rng(seed)
+    q = rand(rng, heads, dh)
+    k = rand(rng, seq, heads, dh)
+    v = rand(rng, seq, heads, dh)
+    got = decode_attention(q, k, v, pos)
+    exp = ref.decode_attention(q, k, v, pos)
+    assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_masks_future_positions():
+    """Entries beyond pos must not influence the output."""
+    rng = np.random.default_rng(3)
+    q = rand(rng, 2, 8)
+    k = rand(rng, 16, 2, 8)
+    v = rand(rng, 16, 2, 8)
+    pos = 5
+    base = np.asarray(decode_attention(q, k, v, pos))
+    # Scramble the masked tail.
+    k2 = k.at[pos + 1 :].set(rand(rng, 16 - pos - 1, 2, 8) * 100)
+    v2 = v.at[pos + 1 :].set(rand(rng, 16 - pos - 1, 2, 8) * 100)
+    out = np.asarray(decode_attention(q, k2, v2, pos))
+    assert_allclose(out, base, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_pos_zero_returns_v0():
+    """At pos 0 the softmax support is one entry: output == V[0]."""
+    rng = np.random.default_rng(4)
+    q = rand(rng, 4, 8)
+    k = rand(rng, 12, 4, 8)
+    v = rand(rng, 12, 4, 8)
+    out = np.asarray(decode_attention(q, k, v, 0))
+    assert_allclose(out, np.asarray(v[0]), rtol=1e-6, atol=1e-6)
+
+
+def test_attention_softmax_weights_normalized():
+    """Uniform V rows -> output equals that row regardless of scores."""
+    rng = np.random.default_rng(5)
+    q = rand(rng, 2, 4)
+    k = rand(rng, 10, 2, 4)
+    v = jnp.broadcast_to(jnp.asarray([1.0, 2.0, 3.0, 4.0]), (10, 2, 4)).astype(jnp.float32)
+    out = np.asarray(decode_attention(q, k, v, 7))
+    assert_allclose(out, np.broadcast_to([1.0, 2.0, 3.0, 4.0], (2, 4)), rtol=1e-6)
+
+
+def test_attention_jit_compatible():
+    """The kernel must lower inside jit (the L2 model embeds it)."""
+    rng = np.random.default_rng(6)
+    q = rand(rng, 2, 8)
+    k = rand(rng, 8, 2, 8)
+    v = rand(rng, 8, 2, 8)
+
+    @jax.jit
+    def f(q, k, v, pos):
+        return decode_attention(q, k, v, pos)
+
+    got = f(q, k, v, jnp.asarray(3))
+    exp = ref.decode_attention(q, k, v, 3)
+    assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5, atol=2e-5)

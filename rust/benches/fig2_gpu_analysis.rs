@@ -1,0 +1,83 @@
+//! Figure 2 — GPU analysis when running LLM inference.
+//!
+//! (a) H100 bandwidth utilization vs model size (paper: 28.5–28.9% at
+//!     OPT-1.3B up to 69.9–70.8% at OPT-30B, 64.9% at 2×66B);
+//! (b) H100 power consumption vs model size (paper: 1101 W for 2×66B);
+//! (c) DGX A100 strong scaling on GPT3-20B with FasterTransformer
+//!     (paper: 1.38× per doubling, 2.65× at 8 GPUs).
+
+use lpu::gpu::{calibration, scaling_speedups, GpuConfig};
+use lpu::model::by_name;
+use lpu::util::table::Table;
+
+fn main() {
+    let h100 = GpuConfig::h100();
+
+    // ---- (a) bandwidth utilization ----
+    let mut a = Table::new(
+        "Fig 2(a) — H100 bandwidth utilization vs model size",
+        &["model", "devices", "modelled util %", "paper util %"],
+    );
+    let points = [
+        ("opt-1.3b", 1usize, Some(28.9)),
+        ("opt-2.7b", 1, None),
+        ("opt-6.7b", 1, None),
+        ("opt-13b", 1, None),
+        ("opt-30b", 1, Some(70.8)),
+        ("opt-66b", 2, Some(64.9)),
+    ];
+    for (name, n, paper) in points {
+        let m = by_name(name).unwrap();
+        let shard = m.decode_stream_bytes() / n as u64;
+        let util = h100.utilization(shard) * 0.92f64.powi((n as f64).log2() as i32);
+        a.row(&[
+            name.to_string(),
+            n.to_string(),
+            format!("{:.1}", util * 100.0),
+            paper.map(|p| format!("{p:.1}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    a.note("paper: \"as low as 28.5% for the smaller OPT 1.3B ... up to 69.9% for OPT 30B\"");
+    a.print();
+
+    // ---- (b) power ----
+    let mut b = Table::new(
+        "Fig 2(b) — GPU power vs model size",
+        &["model", "devices", "modelled W", "paper W"],
+    );
+    for (name, n, paper) in [
+        ("opt-1.3b", 1usize, None),
+        ("opt-6.7b", 1, None),
+        ("opt-30b", 1, None),
+        ("opt-66b", 2, Some(calibration::H100_2X_66B_POWER_W)),
+    ] {
+        let m = by_name(name).unwrap();
+        let p = h100.decode_power(&m, n);
+        b.row(&[
+            name.to_string(),
+            n.to_string(),
+            format!("{p:.0}"),
+            paper.map(|p| format!("{p:.0}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    b.note("paper: \"two NVIDIA H100 GPUs consume an average of 1101 W\" (OPT 66B)");
+    b.print();
+
+    // ---- (c) DGX A100 scaling ----
+    let a100 = GpuConfig::a100();
+    let m = by_name("gpt3-20b").unwrap();
+    let mut c = Table::new(
+        "Fig 2(c) — DGX A100 strong scaling, GPT3-20B (FT benchmark)",
+        &["GPUs", "modelled speedup", "paper speedup"],
+    );
+    let paper_pts = [1.0, 1.45, 1.95, 2.65];
+    for ((n, s), paper) in scaling_speedups(&a100, &m, 8, 200).into_iter().zip(paper_pts) {
+        c.row(&[n.to_string(), format!("{s:.2}x"), format!("{paper:.2}x")]);
+    }
+    c.note(format!(
+        "paper per-doubling: {:.2}x; total at 8 GPUs: {:.2}x",
+        calibration::DGX_SPEEDUP_PER_DOUBLING,
+        calibration::DGX_SPEEDUP_8X
+    ));
+    c.print();
+}

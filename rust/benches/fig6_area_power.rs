@@ -1,0 +1,82 @@
+//! Figure 6(a) — LPU ASIC chip layout & specification: per-module
+//! area/power breakdown for the three HBM configurations, plus system
+//! power, with residuals against the paper's synthesized totals.
+//! Includes the vec_dim ablation the paper discusses ("an alternative is
+//! to scale down the vector dimension and proportionally scale up the
+//! number of MAC trees").
+
+use lpu::config::LpuConfig;
+use lpu::power::{chip_estimate, paper, system_power_w};
+use lpu::util::table::Table;
+
+fn main() {
+    let configs =
+        [LpuConfig::asic_819gbs(), LpuConfig::asic_1_64tbs(), LpuConfig::asic_3_28tbs()];
+
+    let mut t = Table::new(
+        "Fig 6(a) — chip area/power vs paper synthesis",
+        &["config", "MAC trees", "area mm^2", "paper", "Δ%", "power mW", "paper", "Δ%", "system W", "paper"],
+    );
+    for (cfg, ((trees, p_area, p_power), (stacks, p_sys))) in
+        configs.iter().zip(paper::CHIPS.iter().zip(paper::SYSTEMS.iter()))
+    {
+        assert_eq!(cfg.mac_trees, *trees);
+        assert_eq!(cfg.hbm.stacks, *stacks);
+        let est = chip_estimate(cfg);
+        let area = est.total_area_mm2();
+        let power = est.total_power_mw();
+        t.row(&[
+            cfg.name.clone(),
+            trees.to_string(),
+            format!("{area:.3}"),
+            format!("{p_area:.3}"),
+            format!("{:+.1}", (area - p_area) / p_area * 100.0),
+            format!("{power:.2}"),
+            format!("{p_power:.2}"),
+            format!("{:+.1}", (power - p_power) / p_power * 100.0),
+            format!("{:.1}", system_power_w(cfg)),
+            format!("{p_sys:.0}"),
+        ]);
+    }
+    t.note("model: per-module fixed + per-MAC-tree linear fit (see power/mod.rs)");
+    t.print();
+
+    // Per-module breakdown for the flagship config.
+    let flagship = LpuConfig::asic_3_28tbs();
+    let est = chip_estimate(&flagship);
+    let mut b = Table::new(
+        "Fig 6(a) — module breakdown (3.28 TB/s, 32 MAC trees)",
+        &["module", "area mm^2", "area %", "power mW", "power %"],
+    );
+    for m in &est.modules {
+        b.row(&[
+            m.name.to_string(),
+            format!("{:.3}", m.area_mm2),
+            format!("{:.1}", m.area_mm2 / est.total_area_mm2() * 100.0),
+            format!("{:.2}", m.power_mw),
+            format!("{:.1}", m.power_mw / est.total_power_mw() * 100.0),
+        ]);
+    }
+    b.note("paper: \"SXE dominates ... followed by SMA and LMU\"");
+    b.print();
+
+    // Ablation: vec_dim 32 with doubled MAC trees (paper's alternative).
+    let mut alt = flagship.clone();
+    alt.name = "lpu-asic-v32-t64 (ablation)".into();
+    alt.vec_dim = 32;
+    alt.mac_trees = 64;
+    let mut ab = Table::new(
+        "Ablation — vector dim 64x32 trees vs 32x64 trees",
+        &["config", "engine BW TB/s", "est. area mm^2", "VXE latency effect"],
+    );
+    for (cfg, note) in [(&flagship, "baseline"), (&alt, "halves VXE width, doubles its latency")] {
+        ab.row(&[
+            cfg.name.clone(),
+            format!("{:.2}", cfg.engine_bw() / 1e12),
+            format!("{:.3}", chip_estimate(cfg).total_area_mm2()),
+            note.to_string(),
+        ]);
+    }
+    ab.note("paper: the v=32 alternative \"would halve the area of VXE at the cost of doubling its latency\"");
+    ab.print();
+}

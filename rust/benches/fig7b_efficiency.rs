@@ -1,0 +1,88 @@
+//! Figure 7(b) — server energy efficiency (tokens/s/kW):
+//! Orion-cloud (8 FPGA LPUs) vs 2×H100 on OPT-66B (paper: 1.33×) and
+//! Orion-edge (2 FPGA LPUs) vs 2×L4 on OPT-1.3B/6.7B (paper: 1.32×).
+
+use lpu::config::{LpuConfig, ServerConfig};
+use lpu::gpu::GpuConfig;
+use lpu::model::by_name;
+use lpu::power::{orion_power_w, paper, tokens_per_s_per_kw};
+use lpu::sim::simulate_generation;
+use lpu::util::table::Table;
+
+fn orion_tokens_per_s(server: &ServerConfig, model: &str, out: usize) -> f64 {
+    let m = by_name(model).unwrap();
+    let r = simulate_generation(&m, &LpuConfig::fpga_u55c(), server.n_devices, 32, out, true)
+        .unwrap();
+    r.tokens_per_s
+}
+
+fn main() {
+    let out = 512; // shorter output keeps the FPGA sims quick; per-token
+                   // rates are position-averaged like the paper's run
+
+    // ---- cloud: Orion-cloud vs 2xH100, OPT-66B ----
+    let cloud = ServerConfig::orion_cloud();
+    let h100 = GpuConfig::h100();
+    let m66 = by_name("opt-66b").unwrap();
+
+    let orion_tps = orion_tokens_per_s(&cloud, "opt-66b", out);
+    let orion_w = orion_power_w(cloud.n_devices, cloud.host_power_w);
+    let orion_eff = tokens_per_s_per_kw(orion_tps, orion_w);
+
+    let h100_tps = 1.0 / h100.decode_latency(&m66, 2, 1040);
+    let h100_w = h100.decode_power(&m66, 2);
+    let h100_eff = tokens_per_s_per_kw(h100_tps, h100_w);
+
+    let mut t = Table::new(
+        "Fig 7(b) — cloud server efficiency, OPT-66B",
+        &["server", "tokens/s", "power W", "tokens/s/kW", "ratio", "paper"],
+    );
+    t.row(&[
+        "orion-cloud (8x LPU FPGA)".into(),
+        format!("{orion_tps:.1}"),
+        format!("{orion_w:.0}"),
+        format!("{orion_eff:.1}"),
+        format!("{:.2}x", orion_eff / h100_eff),
+        "1.33x".into(),
+    ]);
+    t.row(&[
+        "2x NVIDIA H100".into(),
+        format!("{h100_tps:.1}"),
+        format!("{h100_w:.0}"),
+        format!("{h100_eff:.1}"),
+        "1.00x".into(),
+        "-".into(),
+    ]);
+    t.note(format!(
+        "paper wall power: orion-cloud {} W vs H100 server {} W",
+        paper::ORION_CLOUD_POWER_W,
+        paper::H100_SERVER_POWER_W
+    ));
+    t.print();
+
+    // ---- edge: Orion-edge vs 2xL4, OPT-1.3B and 6.7B ----
+    let edge = ServerConfig::orion_edge();
+    let l4 = GpuConfig::l4();
+    let mut e = Table::new(
+        "Fig 7(b) — edge server efficiency",
+        &["model", "orion-edge t/s/kW", "2xL4 t/s/kW", "ratio", "paper"],
+    );
+    for (model, paper_ratio) in [("opt-1.3b", "-"), ("opt-6.7b", "1.32x")] {
+        let m = by_name(model).unwrap();
+        let o_tps = orion_tokens_per_s(&edge, model, out);
+        let o_eff = tokens_per_s_per_kw(o_tps, orion_power_w(edge.n_devices, edge.host_power_w));
+        let l4_tps = 1.0 / l4.decode_latency(&m, 2, 1040);
+        // 2xL4 server: two 72 W boards + host chassis.
+        let l4_w = l4.decode_power(&m, 2) + 140.0;
+        let l4_eff = tokens_per_s_per_kw(l4_tps, l4_w);
+        e.row(&[
+            model.to_string(),
+            format!("{o_eff:.1}"),
+            format!("{l4_eff:.1}"),
+            format!("{:.2}x", o_eff / l4_eff),
+            paper_ratio.to_string(),
+        ]);
+    }
+    e.note("paper: orion-edge 1.32x over 2x L4 on OPT-6.7B");
+    e.print();
+}

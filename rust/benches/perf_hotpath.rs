@@ -1,0 +1,164 @@
+//! Performance benches over the hot paths (EXPERIMENTS.md §Perf), plus
+//! design-choice ablations from DESIGN.md:
+//!
+//! * simulator throughput (simulated cycles/s and instrs/s) — the fig7a
+//!   sweeps must run in seconds;
+//! * HyperDex compile throughput;
+//! * coordinator token path (sim backend) — request-path overhead;
+//! * ablations: ESL overlap on/off, batch-mode parameter reuse,
+//!   multi-token prefill.
+
+use lpu::compiler::{compile, CompileOpts, ParallelMode};
+use lpu::config::LpuConfig;
+use lpu::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, Request, SchedulerPolicy};
+use lpu::model::by_name;
+use lpu::sim::{simulate_prefill, CoreSim};
+use lpu::util::bench::Bencher;
+use lpu::util::table::Table;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = LpuConfig::asic_3_28tbs();
+
+    // ---- compiler throughput ----
+    let m13 = by_name("opt-1.3b").unwrap();
+    let opts = CompileOpts { position: 1000, ..Default::default() };
+    let compiled = compile(&m13, &cfg, &opts).unwrap();
+    let n_instr = compiled.program.len() as f64;
+    b.bench_throughput("compile/opt-1.3b", "instr", n_instr, || {
+        compile(&m13, &cfg, &opts).unwrap()
+    });
+
+    // ---- simulator throughput ----
+    let mut sim = CoreSim::new(&cfg);
+    let cycles = sim.run(&compiled.program).unwrap().cycles as f64;
+    b.bench_throughput("sim/opt-1.3b-step (sim cycles)", "cycle", cycles, || {
+        sim.run(&compiled.program).unwrap()
+    });
+    b.bench_throughput("sim/opt-1.3b-step (instrs)", "instr", n_instr, || {
+        sim.run(&compiled.program).unwrap()
+    });
+
+    // 66B x2: the heaviest per-token program.
+    let m66 = by_name("opt-66b").unwrap();
+    let opts66 = CompileOpts { n_devices: 2, position: 1000, ..Default::default() };
+    let c66 = compile(&m66, &cfg, &opts66).unwrap();
+    let mut sim66 = CoreSim::new(&cfg);
+    b.bench_throughput("sim/opt-66b-x2-step (instrs)", "instr", c66.program.len() as f64, || {
+        sim66.run(&c66.program).unwrap()
+    });
+
+    // ---- coordinator token path (sim backend) ----
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: 4,
+        policy: SchedulerPolicy::RoundRobin,
+    });
+    coord.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+    b.bench_throughput("coordinator/8-token request (sim backend)", "token", 8.0, || {
+        coord
+            .submit(Request::greedy("opt-tiny", vec![1, 2, 3], 8))
+            .unwrap()
+            .wait()
+            .unwrap()
+    });
+
+    // ---- ablations ----
+    let mut t = Table::new("Ablations (DESIGN.md §6)", &["experiment", "value", "comparison"]);
+
+    // ESL overlap vs blocking. At 2 devices even blocking sync hides
+    // behind the decoupled SMA weight prefetch (a finding — see
+    // EXPERIMENTS.md); the ablation bites at ring size 8.
+    for (label, model, ndev) in [("66B x2", &m66, 2usize), ("20B x8", &by_name("gpt3-20b").unwrap(), 8)] {
+        let o = CompileOpts { n_devices: ndev, position: 1000, ..Default::default() };
+        let cw = compile(model, &cfg, &o).unwrap();
+        let cb = compile(model, &cfg, &CompileOpts { esl_overlap: false, ..o }).unwrap();
+        let mut s = CoreSim::new(&cfg);
+        let with = s.run(&cw.program).unwrap().cycles;
+        let without = s.run(&cb.program).unwrap().cycles;
+        t.row(&[
+            format!("ESL overlap ({label})"),
+            format!("{:.3} ms/token", with as f64 / cfg.freq_hz * 1e3),
+            format!(
+                "blocking: {:.3} ms/token ({:+.1}%)",
+                without as f64 / cfg.freq_hz * 1e3,
+                (without as f64 / with as f64 - 1.0) * 100.0
+            ),
+        ]);
+    }
+
+    // Batch-mode parameter reuse (paper future work).
+    let tiny_cfg = LpuConfig::asic_819gbs();
+    let mtiny = by_name("opt-mini").unwrap();
+    let single = {
+        let c = compile(&mtiny, &tiny_cfg, &CompileOpts { position: 100, ..Default::default() })
+            .unwrap();
+        CoreSim::new(&tiny_cfg).run(&c.program).unwrap().cycles
+    };
+    for batch in [2usize, 4, 8] {
+        let c = compile(
+            &mtiny,
+            &tiny_cfg,
+            &CompileOpts {
+                position: 100,
+                mode: ParallelMode::Batch { batch },
+                sxe_sets: batch.min(4),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let cycles = CoreSim::new(&tiny_cfg).run(&c.program).unwrap().cycles;
+        let per_tok = cycles as f64 / batch as f64;
+        t.row(&[
+            format!("batch mode x{batch} (opt-mini)"),
+            format!("{:.0} cycles/token", per_tok),
+            format!("{:.2}x throughput vs single ({single} cycles)", single as f64 / per_tok),
+        ]);
+    }
+
+    // Multi-token prefill.
+    let (mt, _) = simulate_prefill(&m13, &cfg, 1, 32, 4).unwrap();
+    let serial = 32.0 * compiled_step_time(&cfg, &compiled);
+    t.row(&[
+        "multi-token prefill (1.3B, 32 tokens)".into(),
+        format!("{:.3} ms total", mt * 1e3),
+        format!("serial decode: {:.3} ms ({:.2}x faster)", serial * 1e3, serial / mt),
+    ]);
+
+    t.print();
+
+    // ---- serving load study (open-loop Poisson, sim backend) ----
+    use lpu::coordinator::{run_open_loop, LenDist, Workload};
+    let mut load = Table::new(
+        "Serving load study (sim backend, 2 workers, RR token scheduling)",
+        &["offered req/s", "tokens/s", "TTFT p50 ms", "TTFT p99 ms", "latency p99 ms"],
+    );
+    for rate in [50.0f64, 200.0, 1000.0, 4000.0] {
+        let wl = Workload {
+            model: "opt-tiny".into(),
+            rate,
+            n_requests: 120,
+            prompt_len: LenDist::Uniform(2, 10),
+            output_len: LenDist::LongTail { min: 4, mean_extra: 12.0, cap: 64 },
+            vocab: 512,
+            seed: 7,
+        };
+        let r = run_open_loop(&coord, &wl).unwrap();
+        load.row(&[
+            format!("{rate:.0}"),
+            format!("{:.0}", r.tokens_per_s),
+            format!("{:.2}", r.ttft.p50 * 1e3),
+            format!("{:.2}", r.ttft.p99 * 1e3),
+            format!("{:.2}", r.request_latency.p99 * 1e3),
+        ]);
+    }
+    load.note("open-loop arrivals; TTFT rises once offered load exceeds worker token throughput");
+    load.print();
+
+    drop(b);
+    coord.shutdown();
+}
+
+fn compiled_step_time(cfg: &LpuConfig, c: &lpu::compiler::Compiled) -> f64 {
+    let mut sim = CoreSim::new(cfg);
+    sim.run(&c.program).unwrap().time_s()
+}

@@ -1,0 +1,89 @@
+//! Table 1 — the LPU instruction set: category table regenerated from
+//! the implementation, plus encode/decode/assemble throughput.
+
+use lpu::isa::{asm, Category, Cond, FusedOp, Instr, Program, ScalarOp, VecOp};
+use lpu::util::bench::Bencher;
+use lpu::util::table::Table;
+
+fn representative_instrs() -> Vec<(&'static str, &'static str, &'static str, Instr)> {
+    use Instr::*;
+    vec![
+        ("MEM", "Read Embedding", "HBM -> LMU", ReadEmbedding { addr: 0x1000, dst: 1, len: 2048 }),
+        ("MEM", "Read Key/Value", "HBM -> SMA", ReadKv { addr: 0x2000, len: 65536 }),
+        ("MEM", "Read Parameters", "HBM -> SMA", ReadParams { addr: 0x3000, len: 1 << 22 }),
+        ("MEM", "Read from Host", "Host -> LMU", ReadHost { addr: 0, dst: 0, len: 1 }),
+        ("MEM", "Write Key/Value", "SMA -> HBM", WriteKv { addr: 0x4000, len: 9216 }),
+        ("MEM", "Write to Host", "LMU -> Host", WriteHost { src: 2, addr: 0, len: 1 }),
+        (
+            "COMP",
+            "Matrix Computation",
+            "LMU/SMA -> LMU/SMA",
+            MatMul { src: 1, dst: 2, k: 9216, n: 36864, accum: false, to_net: true, from_lmu: false },
+        ),
+        (
+            "COMP",
+            "Vector Computation",
+            "LMU -> LMU",
+            VecCompute { op: VecOp::Softmax, a: 3, b: 0, dst: 3, len: 2048 },
+        ),
+        (
+            "COMP",
+            "Vector Fusion Computation",
+            "LMU -> LMU",
+            VecFused { op: FusedOp::AddLayerNorm, a: 4, b: 5, dst: 6, len: 9216 },
+        ),
+        ("COMP", "Sampling with Sort", "LMU -> LMU", Sample { src: 7, dst: 8, len: 50272 }),
+        ("NET", "Transmit", "LMU -> P2P", Transmit { src: 9, len: 4608, hops: 1 }),
+        ("NET", "Receive", "P2P -> LMU", Receive { dst: 10, len: 4608, hops: 1 }),
+        (
+            "CTRL",
+            "Scalar Computation",
+            "ICP/LMU -> ICP/LMU",
+            Scalar { op: ScalarOp::Add, dst: 1, a: 2, imm: 64 },
+        ),
+        ("CTRL", "Branch", "ICP -> ICP", Branch { cond: Cond::Lt, a: 1, b: 2, target: 4 }),
+        ("CTRL", "Jump", "ICP -> ICP", Jump { target: 0 }),
+    ]
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Table 1 — LPU instruction set architecture",
+        &["category", "instruction type", "source -> destination", "encoding (asm)"],
+    );
+    for (cat, name, route, instr) in representative_instrs() {
+        assert_eq!(
+            format!("{:?}", instr.category()).to_uppercase().replace("CTRL", "CTRL"),
+            match instr.category() {
+                Category::Mem => "MEM",
+                Category::Comp => "COMP",
+                Category::Net => "NET",
+                Category::Ctrl => "CTRL",
+            }
+        );
+        t.row(&[cat.to_string(), name.to_string(), route.to_string(), asm::disasm(&instr)]);
+    }
+    t.print();
+
+    // Throughput micro-benches over the ISA machinery.
+    let instrs: Vec<Instr> = representative_instrs().into_iter().map(|(_, _, _, i)| i).collect();
+    let words: Vec<u128> = instrs.iter().map(|i| i.encode().unwrap()).collect();
+    let prog = Program::new(instrs.clone());
+    let text: String = prog
+        .instrs
+        .iter()
+        .map(|i| asm::disasm(i))
+        .collect::<Vec<_>>()
+        .join("\n");
+
+    let mut b = Bencher::new();
+    let n = instrs.len() as f64;
+    b.bench_throughput("isa/encode", "instr", n, || {
+        instrs.iter().map(|i| i.encode().unwrap()).collect::<Vec<_>>()
+    });
+    b.bench_throughput("isa/decode", "instr", n, || {
+        words.iter().map(|&w| Instr::decode(w).unwrap()).collect::<Vec<_>>()
+    });
+    b.bench_throughput("isa/assemble", "instr", n, || asm::assemble(&text).unwrap());
+    b.bench_throughput("isa/program-serialize", "instr", n, || prog.to_bytes().unwrap());
+}

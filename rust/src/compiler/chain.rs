@@ -1,0 +1,191 @@
+//! Instruction-chaining verification and statistics.
+//!
+//! "Instruction chaining strategically divides the operations into a
+//! series of dependent instructions that can be executed back-to-back
+//! without any control overhead ... separates instructions utilizing
+//! independent hardware modules into distinct groups (e.g., MEM, COMP,
+//! NET, CTRL) of instruction chains [and] interleaves them so that the
+//! execution of each instruction can be overlapped."
+//!
+//! This pass verifies the invariants that make chained execution safe —
+//! primarily the SMA *stream discipline* (every stream-consuming MatMul
+//! has exactly one pending `read.params`/`read.kv`, in order, and no
+//! stream is left dangling at `halt`) and NET balance — and reports chain
+//! statistics (group interleave factor, chain lengths), which the
+//! `perf_hotpath` ablation bench consumes.
+
+use crate::isa::{Category, Instr, Program};
+
+/// Chain statistics per category.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChainReport {
+    /// Instruction count per category [MEM, COMP, NET, CTRL].
+    pub counts: [usize; 4],
+    /// Number of maximal single-category runs (chains).
+    pub chains: usize,
+    /// Longest chain length.
+    pub longest_chain: usize,
+    /// Interleave factor: chains / categories-present (≥1; higher means
+    /// the compiler alternates groups more finely, i.e. more overlap).
+    pub interleave: f64,
+    /// Peak simultaneously-outstanding SMA streams.
+    pub peak_streams: usize,
+}
+
+fn cat_idx(c: Category) -> usize {
+    match c {
+        Category::Mem => 0,
+        Category::Comp => 1,
+        Category::Net => 2,
+        Category::Ctrl => 3,
+    }
+}
+
+/// Verify chaining/stream invariants; returns statistics.
+///
+/// Invariants:
+/// 1. every non-`from_lmu` MatMul pops exactly one pending stream;
+/// 2. no pending stream remains at `halt`;
+/// 3. Transmit and Receive counts balance (ring symmetry);
+/// 4. the program ends with `halt`.
+pub fn verify_chains(p: &Program) -> Result<ChainReport, String> {
+    let mut pending_streams: usize = 0;
+    let mut peak_streams = 0usize;
+    let mut tx = 0usize;
+    let mut rx = 0usize;
+    let mut counts = [0usize; 4];
+    let mut chains = 0usize;
+    let mut longest = 0usize;
+    let mut run_len = 0usize;
+    let mut last_cat: Option<Category> = None;
+
+    if !matches!(p.instrs.last(), Some(Instr::Halt)) {
+        return Err("program does not end with halt".into());
+    }
+
+    for (i, instr) in p.instrs.iter().enumerate() {
+        let cat = instr.category();
+        counts[cat_idx(cat)] += 1;
+        if last_cat == Some(cat) {
+            run_len += 1;
+        } else {
+            chains += 1;
+            run_len = 1;
+            last_cat = Some(cat);
+        }
+        longest = longest.max(run_len);
+
+        match instr {
+            Instr::ReadParams { .. } | Instr::ReadKv { .. } => {
+                pending_streams += 1;
+                peak_streams = peak_streams.max(pending_streams);
+            }
+            Instr::MatMul { from_lmu: false, .. } => {
+                if pending_streams == 0 {
+                    return Err(format!(
+                        "instr {i}: stream-consuming matmul with no pending SMA stream"
+                    ));
+                }
+                pending_streams -= 1;
+            }
+            Instr::Transmit { .. } => tx += 1,
+            Instr::Receive { .. } => rx += 1,
+            _ => {}
+        }
+    }
+
+    if pending_streams != 0 {
+        return Err(format!("{pending_streams} SMA stream(s) never consumed"));
+    }
+    if tx != rx {
+        return Err(format!("unbalanced NET ops: {tx} transmits vs {rx} receives"));
+    }
+
+    let present = counts.iter().filter(|&&c| c > 0).count().max(1);
+    Ok(ChainReport {
+        counts,
+        chains,
+        longest_chain: longest,
+        interleave: chains as f64 / present as f64,
+        peak_streams,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    #[test]
+    fn accepts_disciplined_program() {
+        let p = assemble(
+            r#"
+            read.params 0x0, len=4096
+            matmul v0 -> v1, k=64, n=64
+            read.kv 0x100, len=640
+            matmul v1 -> v2, k=64, n=10
+            halt
+        "#,
+        )
+        .unwrap();
+        let r = verify_chains(&p).unwrap();
+        assert_eq!(r.counts[0], 2);
+        assert_eq!(r.counts[1], 2);
+        assert_eq!(r.peak_streams, 1);
+        assert!(r.chains >= 4);
+    }
+
+    #[test]
+    fn rejects_matmul_without_stream() {
+        let p = assemble("matmul v0 -> v1, k=64, n=64\nhalt").unwrap();
+        let e = verify_chains(&p).unwrap_err();
+        assert!(e.contains("no pending SMA stream"), "{e}");
+    }
+
+    #[test]
+    fn lmu_matmul_needs_no_stream() {
+        let p = assemble("matmul v0 -> v1, k=64, n=64, lmu\nhalt").unwrap();
+        assert!(verify_chains(&p).is_ok());
+    }
+
+    #[test]
+    fn rejects_dangling_stream() {
+        let p = assemble("read.params 0x0, len=64\nhalt").unwrap();
+        let e = verify_chains(&p).unwrap_err();
+        assert!(e.contains("never consumed"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unbalanced_net() {
+        let p = assemble("transmit v0, len=8, hops=1\nhalt").unwrap();
+        let e = verify_chains(&p).unwrap_err();
+        assert!(e.contains("unbalanced NET"), "{e}");
+    }
+
+    #[test]
+    fn rejects_missing_halt() {
+        let p = assemble("scalar.mov s0, s0, 1").unwrap();
+        assert!(verify_chains(&p).is_err());
+    }
+
+    #[test]
+    fn chain_stats_count_runs() {
+        // [MEM MEM][COMP COMP][MEM][COMP][CTRL] = 5 chains
+        let p = assemble(
+            r#"
+            read.params 0x0, len=64
+            read.params 0x0, len=64
+            matmul v0 -> v1, k=64, n=64
+            matmul v1 -> v2, k=64, n=64
+            read.params 0x0, len=64
+            matmul v2 -> v3, k=64, n=64
+            halt
+        "#,
+        )
+        .unwrap();
+        let r = verify_chains(&p).unwrap();
+        assert_eq!(r.chains, 5);
+        assert_eq!(r.longest_chain, 2);
+        assert_eq!(r.peak_streams, 2);
+    }
+}

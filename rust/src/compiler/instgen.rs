@@ -1,0 +1,556 @@
+//! HyperDex Instruction Generator.
+//!
+//! Converts a model architecture into LPU instruction blocks
+//! (`input_load`, `token_embed`, `decoder`, `lmhead`, `sync`,
+//! `output_store`, `hlt` — the blocks of Fig 5(b)) over *virtual* vector
+//! registers, which [`super::regalloc`] later maps onto the 64 physical
+//! LMU registers.
+//!
+//! Stream discipline: every weight/KV MatMul is immediately preceded by
+//! the `read.params`/`read.kv` that feeds it, one stream per consuming
+//! MatMul (`from_lmu` MatMuls consume no stream). Norm/bias parameters
+//! (γ/β) are folded into the adjacent weight stream — the SMA reads them
+//! in the same burst train and routes them to the VXE.
+//!
+//! Parallel modes (paper future work, first-class here): in
+//! `Batch`/`MultiToken` mode, `replicas` activation sets share each
+//! weight stream. With `sxe_sets = S` engine sets, `ceil(R/S)` timing
+//! passes are emitted per weight op (the weight stream is read once);
+//! attention and KV traffic remain per-replica since each replica has
+//! its own context.
+
+use super::mapper::MemoryMap;
+use super::{CompileOpts, ParallelMode};
+use crate::config::LpuConfig;
+use crate::isa::{FusedOp, Instr, VecOp};
+use crate::model::{Family, ModelConfig};
+
+/// A virtual-register instruction.
+#[derive(Clone, Copy, Debug)]
+pub struct VInstr {
+    /// Template with register fields zeroed.
+    pub op: Instr,
+    /// Virtual registers read (slot order matches the variant's fields).
+    pub reads: [Option<u32>; 2],
+    /// Virtual register written.
+    pub write: Option<u32>,
+    /// Write also reads its previous value (MatMul accumulate).
+    pub write_is_accum: bool,
+}
+
+/// Instruction list over virtual registers.
+#[derive(Clone, Debug, Default)]
+pub struct VProgram {
+    pub instrs: Vec<VInstr>,
+    next_virtual: u32,
+}
+
+impl VProgram {
+    pub fn n_virtuals(&self) -> usize {
+        self.next_virtual as usize
+    }
+}
+
+/// Generator state.
+pub struct InstGen<'a> {
+    #[allow(dead_code)] // kept for future family-specific emission rules
+    model: &'a ModelConfig,
+    #[allow(dead_code)] // tile sizes come via the map today
+    cfg: &'a LpuConfig,
+    map: &'a MemoryMap,
+    opts: &'a CompileOpts,
+    v: VProgram,
+}
+
+impl<'a> InstGen<'a> {
+    fn vr(&mut self) -> u32 {
+        let r = self.v.next_virtual;
+        self.v.next_virtual += 1;
+        r
+    }
+
+    fn push(&mut self, op: Instr, reads: [Option<u32>; 2], write: Option<u32>, accum: bool) {
+        self.v.instrs.push(VInstr { op, reads, write, write_is_accum: accum });
+    }
+
+    // ---- emission helpers ----
+
+    fn read_params(&mut self, addr: u64, elems: u64) {
+        debug_assert!(elems < u32::MAX as u64, "region too large for one stream: {elems}");
+        self.push(Instr::ReadParams { addr, len: elems as u32 }, [None, None], None, false);
+    }
+
+    fn read_kv(&mut self, addr: u64, elems: u64) {
+        self.push(Instr::ReadKv { addr, len: elems as u32 }, [None, None], None, false);
+    }
+
+    fn write_kv(&mut self, addr: u64, elems: u64) {
+        self.push(Instr::WriteKv { addr, len: elems as u32 }, [None, None], None, false);
+    }
+
+    fn read_embedding(&mut self, addr: u64, elems: u64) -> u32 {
+        let dst = self.vr();
+        self.push(Instr::ReadEmbedding { addr, dst: 0, len: elems as u32 }, [None, None], Some(dst), false);
+        dst
+    }
+
+    fn matmul(&mut self, src: u32, k: usize, n: usize, to_net: bool, from_lmu: bool) -> u32 {
+        let dst = self.vr();
+        self.push(
+            Instr::MatMul { src: 0, dst: 0, k: k as u32, n: n as u32, accum: false, to_net, from_lmu },
+            [Some(src), None],
+            Some(dst),
+            false,
+        );
+        dst
+    }
+
+    fn vec(&mut self, op: VecOp, a: u32, b: u32, len: usize) -> u32 {
+        let dst = self.vr();
+        self.push(
+            Instr::VecCompute { op, a: 0, b: 0, dst: 0, len: len as u32 },
+            [Some(a), Some(b)],
+            Some(dst),
+            false,
+        );
+        dst
+    }
+
+    fn fused(&mut self, op: FusedOp, a: u32, b: u32, len: usize) -> u32 {
+        let dst = self.vr();
+        self.push(
+            Instr::VecFused { op, a: 0, b: 0, dst: 0, len: len as u32 },
+            [Some(a), Some(b)],
+            Some(dst),
+            false,
+        );
+        dst
+    }
+
+    fn transmit(&mut self, src: u32, elems: usize, hops: u8) {
+        self.push(Instr::Transmit { src: 0, len: elems as u32, hops }, [Some(src), None], None, false);
+    }
+
+    fn receive(&mut self, elems: usize, hops: u8) -> u32 {
+        let dst = self.vr();
+        self.push(Instr::Receive { dst: 0, len: elems as u32, hops }, [None, None], Some(dst), false);
+        dst
+    }
+
+    /// Synchronize a `d`-element partial-sum vector across the
+    /// tensor-parallel group (the `sync` block).
+    ///
+    /// With `esl_overlap` (Fig 4(a)): the producing MatMul routed its
+    /// partial products to the TX buffer as column tasks completed, so
+    /// chunks circulate the ring *while* the MatMul computes; the ESL
+    /// dataflow arbitrates between chunks received from peers and
+    /// written back from the local SXE, accumulating in flight. Emitted
+    /// as one transmit/receive pair over `n-1` hops — the visible cost
+    /// collapses to the tail chunk's traversal.
+    ///
+    /// Without overlap (the GPU-like ablation): an explicit blocking
+    /// ring all-reduce — 2(n-1) chunk steps, each gated on the previous
+    /// step's VXE accumulation.
+    fn sync_allreduce(&mut self, mut partial: u32, d: usize) -> u32 {
+        let n = self.opts.n_devices;
+        if n == 1 {
+            return partial;
+        }
+        if self.opts.esl_overlap {
+            let vol = (d * (n - 1) / n).max(1);
+            self.transmit(partial, vol, (n - 1) as u8);
+            return self.receive(vol, (n - 1) as u8);
+        }
+        let chunk = d.div_ceil(n);
+        // Reduce-scatter.
+        for _ in 0..n - 1 {
+            self.transmit(partial, chunk, 1);
+            let rx = self.receive(chunk, 1);
+            partial = self.vec(VecOp::Add, partial, rx, chunk);
+        }
+        // All-gather.
+        for _ in 0..n - 1 {
+            self.transmit(partial, chunk, 1);
+            let rx = self.receive(chunk, 1);
+            partial = self.vec(VecOp::Add, partial, rx, chunk);
+        }
+        partial
+    }
+
+    /// One weight-streamed matmul shared across replicas: stream read
+    /// once, `ceil(replicas / sxe_sets)` timing passes. Returns one dst
+    /// per replica (replicas within a pass share the pass's register).
+    fn shared_matmul(
+        &mut self,
+        srcs: &[u32],
+        addr: u64,
+        stream_elems: u64,
+        k: usize,
+        n: usize,
+        to_net: bool,
+    ) -> Vec<u32> {
+        let replicas = srcs.len();
+        let sets = self.opts.sxe_sets;
+        let passes = replicas.div_ceil(sets);
+        self.read_params(addr, stream_elems);
+        let mut dsts = Vec::with_capacity(replicas);
+        let mut pass_dsts = Vec::with_capacity(passes);
+        for p in 0..passes {
+            let src = srcs[p * sets];
+            let dst = self.matmul(src, k, n, to_net, p > 0);
+            pass_dsts.push(dst);
+        }
+        for r in 0..replicas {
+            dsts.push(pass_dsts[r / sets]);
+        }
+        dsts
+    }
+}
+
+/// Generate the decode-step program (device 0's shard of an
+/// `opts.n_devices` ring).
+pub fn generate(
+    model: &ModelConfig,
+    cfg: &LpuConfig,
+    map: &MemoryMap,
+    opts: &CompileOpts,
+) -> VProgram {
+    let mut g = InstGen { model, cfg, map, opts, v: VProgram::default() };
+    let d = model.d_model;
+    let hd = model.head_dim();
+    let heads_local = map.heads_local;
+    let d_local = heads_local * hd;
+    let replicas = opts.mode.replicas();
+    let llama = matches!(model.family, Family::Llama);
+    let net = opts.n_devices > 1 && opts.esl_overlap;
+
+    // Context length for replica r at this step.
+    let ctx = |r: usize| -> usize {
+        match opts.mode {
+            ParallelMode::MultiToken { .. } => opts.position + r + 1,
+            _ => opts.position + 1,
+        }
+    };
+
+    // ---- input_load + token_embed ----
+    let mut xs: Vec<u32> = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let tok = {
+            let dst = g.vr();
+            g.push(Instr::ReadHost { addr: 0, dst: 0, len: 1 }, [None, None], Some(dst), false);
+            dst
+        };
+        let tok_addr = g.map.get("embed.token").expect("embed.token mapped").addr;
+        let emb = g.read_embedding(tok_addr, d as u64);
+        let x = if llama {
+            // RoPE models have no positional table; combine with token reg
+            // to keep the data dependency on the host input.
+            g.vec(VecOp::Embed, emb, tok, d)
+        } else {
+            let pos_addr = g.map.get("embed.pos").expect("embed.pos mapped").addr;
+            let pos = g.read_embedding(pos_addr, d as u64);
+            let e = g.vec(VecOp::Embed, emb, pos, d);
+            // Keep the host-token dependency explicit.
+            g.vec(VecOp::Add, e, tok, d)
+        };
+        xs.push(x);
+    }
+
+    // ---- decoder layers ----
+    for l in 0..model.n_layers {
+        let grab = |g: &InstGen, name: String| {
+            let r = g.map.get(&name).unwrap();
+            (r.addr, r.elems())
+        };
+        let (qkv_addr, qkv_w_elems) = grab(&g, format!("layer{l}.qkv"));
+        let (kc_addr, _) = grab(&g, format!("layer{l}.kcache"));
+        let (vc_addr, _) = grab(&g, format!("layer{l}.vcache"));
+        let (ao_addr, ao_elems) = grab(&g, format!("layer{l}.attn_out"));
+        let (fc1_addr, fc1_elems) = grab(&g, format!("layer{l}.fc1"));
+        let (fc2_addr, fc2_elems) = grab(&g, format!("layer{l}.fc2"));
+        let (_, ln1_elems) = grab(&g, format!("layer{l}.ln1"));
+        let (_, ln2_elems) = grab(&g, format!("layer{l}.ln2"));
+
+        // LN1 (γβ folded into the QKV stream).
+        let hs: Vec<u32> = xs
+            .iter()
+            .map(|&x| {
+                if llama {
+                    g.vec(VecOp::RmsNorm, x, x, d)
+                } else {
+                    g.vec(VecOp::LayerNorm, x, x, d)
+                }
+            })
+            .collect();
+
+        // QKV projection, head-partitioned (column-parallel).
+        let qkv_elems = qkv_w_elems + ln1_elems;
+        let qkvs = g.shared_matmul(&hs, qkv_addr, qkv_elems, d, map.qkv_local, false);
+
+        let mut head_outs: Vec<u32> = Vec::with_capacity(replicas);
+        for (r, &qkv) in qkvs.iter().enumerate() {
+            let ctx_len = ctx(r);
+            let qkv = if llama { g.vec(VecOp::Rope, qkv, qkv, 2 * d_local) } else { qkv };
+            // Append this token's K,V (strobe-transposed on write).
+            g.write_kv(kc_addr + (ctx_len as u64 - 1) * d_local as u64 * 2, d_local as u64);
+            g.write_kv(vc_addr + (ctx_len as u64 - 1) * d_local as u64 * 2, d_local as u64);
+
+            // Per-head attention (Fig 3(b) dataflow).
+            let mut head_out = qkv;
+            for h in 0..heads_local {
+                let k_addr = kc_addr + (h * hd * model.max_seq) as u64 * 2;
+                g.read_kv(k_addr, (ctx_len * hd) as u64);
+                let score = g.matmul(qkv, hd, ctx_len, false, false);
+                let prob = g.fused(FusedOp::ScaleSoftmax, score, score, ctx_len);
+                let v_addr = vc_addr + (h * hd * model.max_seq) as u64 * 2;
+                g.read_kv(v_addr, (ctx_len * hd) as u64);
+                head_out = g.matmul(prob, ctx_len, hd, false, false);
+            }
+
+            head_outs.push(head_out);
+        }
+
+        // Output projection (row-parallel, weight stream shared across
+        // replicas) + sync + residual.
+        let partials = g.shared_matmul(&head_outs, ao_addr, ao_elems, d_local, d, net);
+        for (r, &partial) in partials.iter().enumerate() {
+            let attn = g.sync_allreduce(partial, d);
+            xs[r] = g.vec(VecOp::Add, attn, xs[r], d);
+        }
+
+        // LN2 + FFN.
+        let h2s: Vec<u32> = xs
+            .iter()
+            .map(|&x| {
+                if llama {
+                    g.vec(VecOp::RmsNorm, x, x, d)
+                } else {
+                    g.vec(VecOp::LayerNorm, x, x, d)
+                }
+            })
+            .collect();
+
+        let fc1_cols = if llama { 2 * map.ffn_local } else { map.ffn_local };
+        let f1 = g.shared_matmul(&h2s, fc1_addr, fc1_elems + ln2_elems, d, fc1_cols, false);
+        let acts: Vec<u32> = f1
+            .iter()
+            .map(|&v| {
+                if llama {
+                    g.fused(FusedOp::MulSilu, v, v, map.ffn_local)
+                } else {
+                    match model.family {
+                        Family::Gpt => g.vec(VecOp::Gelu, v, v, map.ffn_local),
+                        _ => g.vec(VecOp::Relu, v, v, map.ffn_local),
+                    }
+                }
+            })
+            .collect();
+        let f2 = g.shared_matmul(&acts, fc2_addr, fc2_elems, map.ffn_local, d, net);
+        for (r, &o) in f2.iter().enumerate() {
+            let summed = g.sync_allreduce(o, d);
+            xs[r] = g.vec(VecOp::Add, summed, xs[r], d);
+        }
+    }
+
+    // ---- lmhead + sample + output_store ----
+    let fln_elems = g.map.get("final_ln").unwrap().elems();
+    let (lmh_addr, lmh_elems) = {
+        let r = g.map.get("lm_head").unwrap();
+        (r.addr, r.elems())
+    };
+    let finals: Vec<u32> = xs
+        .iter()
+        .map(|&x| {
+            if llama {
+                g.vec(VecOp::RmsNorm, x, x, d)
+            } else {
+                g.vec(VecOp::LayerNorm, x, x, d)
+            }
+        })
+        .collect();
+    let logit_shards = g.shared_matmul(&finals, lmh_addr, lmh_elems + fln_elems, d, map.vocab_local, false);
+    for &shard in &logit_shards {
+        // Gather vocabulary shards to the sampling device: each ring
+        // step forwards a shard (transmit) and takes one in (receive).
+        let mut logits = shard;
+        if opts.n_devices > 1 {
+            for _ in 0..opts.n_devices - 1 {
+                g.transmit(logits, map.vocab_local, 1);
+                let rx = g.receive(map.vocab_local, 1);
+                // Concatenation modeled as a cheap vector op touch.
+                logits = g.vec(VecOp::Add, logits, rx, 1);
+            }
+        }
+        let token = {
+            let dst = g.vr();
+            g.push(
+                Instr::Sample { src: 0, dst: 0, len: (map.vocab_local * opts.n_devices) as u32 },
+                [Some(logits), None],
+                Some(dst),
+                false,
+            );
+            dst
+        };
+        g.push(Instr::WriteHost { src: 0, addr: 0, len: 1 }, [Some(token), None], None, false);
+    }
+    g.push(Instr::Halt, [None, None], None, false);
+    g.v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::mapper::map_model;
+    use crate::model::by_name;
+
+    fn gen(model: &str, n_devices: usize, pos: usize) -> VProgram {
+        let m = by_name(model).unwrap();
+        let cfg = LpuConfig::asic_3_28tbs();
+        let map = map_model(&m, &cfg, n_devices).unwrap();
+        let opts = CompileOpts { n_devices, position: pos, ..Default::default() };
+        generate(&m, &cfg, &map, &opts)
+    }
+
+    fn weight_stream_elems(v: &VProgram) -> u64 {
+        v.instrs
+            .iter()
+            .filter_map(|vi| match vi.op {
+                Instr::ReadParams { len, .. } | Instr::ReadEmbedding { len, .. } => Some(len as u64),
+                _ => None,
+            })
+            .sum()
+    }
+
+    #[test]
+    fn stream_discipline_one_stream_per_matmul() {
+        let v = gen("opt-tiny", 1, 5);
+        let streams = v
+            .instrs
+            .iter()
+            .filter(|vi| matches!(vi.op, Instr::ReadParams { .. } | Instr::ReadKv { .. }))
+            .count();
+        let consumers = v
+            .instrs
+            .iter()
+            .filter(|vi| matches!(vi.op, Instr::MatMul { from_lmu: false, .. }))
+            .count();
+        assert_eq!(streams, consumers);
+    }
+
+    #[test]
+    fn weight_bytes_match_model_accounting() {
+        for name in ["opt-tiny", "opt-125m", "opt-1.3b"] {
+            let m = by_name(name).unwrap();
+            let v = gen(name, 1, 0);
+            let streamed = weight_stream_elems(&v) * 2;
+            let expect = m.decode_stream_bytes();
+            let rel = (streamed as f64 - expect as f64).abs() / expect as f64;
+            assert!(rel < 0.03, "{name}: streamed {streamed} vs {expect} (rel {rel:.4})");
+        }
+    }
+
+    #[test]
+    fn kv_traffic_scales_with_position() {
+        let kv = |pos: usize| -> u64 {
+            gen("opt-tiny", 1, pos)
+                .instrs
+                .iter()
+                .filter_map(|vi| match vi.op {
+                    Instr::ReadKv { len, .. } => Some(len as u64),
+                    _ => None,
+                })
+                .sum()
+        };
+        let k10 = kv(9);
+        let k100 = kv(99);
+        assert_eq!(k100 / k10, 10);
+    }
+
+    #[test]
+    fn multi_device_emits_balanced_net_ops() {
+        let v = gen("opt-1.3b", 4, 10);
+        let tx = v.instrs.iter().filter(|vi| matches!(vi.op, Instr::Transmit { .. })).count();
+        let rx = v.instrs.iter().filter(|vi| matches!(vi.op, Instr::Receive { .. })).count();
+        assert_eq!(tx, rx);
+        // Overlapped syncs: one tx/rx pair per all-reduce (2/layer)
+        // + (n-1) logit gathers.
+        assert_eq!(tx, 24 * 2 + 3);
+    }
+
+    #[test]
+    fn single_device_has_no_net_ops() {
+        let v = gen("opt-1.3b", 1, 10);
+        assert!(!v.instrs.iter().any(|vi| matches!(vi.op, Instr::Transmit { .. } | Instr::Receive { .. })));
+    }
+
+    #[test]
+    fn batch_mode_reads_weights_once() {
+        let m = by_name("opt-tiny").unwrap();
+        let cfg = LpuConfig::asic_819gbs();
+        let map = map_model(&m, &cfg, 1).unwrap();
+        let single = generate(&m, &cfg, &map, &CompileOpts::default());
+        let batch4 = generate(
+            &m,
+            &cfg,
+            &map,
+            &CompileOpts { mode: ParallelMode::Batch { batch: 4 }, ..Default::default() },
+        );
+        // Weight streams identical (embedding rows are per-token and
+        // legitimately replicate; compare read.params only).
+        let params_only = |v: &VProgram| -> u64 {
+            v.instrs
+                .iter()
+                .filter_map(|vi| match vi.op {
+                    Instr::ReadParams { len, .. } => Some(len as u64),
+                    _ => None,
+                })
+                .sum()
+        };
+        assert_eq!(params_only(&single), params_only(&batch4));
+        let kv = |v: &VProgram| {
+            v.instrs
+                .iter()
+                .filter(|vi| matches!(vi.op, Instr::ReadKv { .. }))
+                .count()
+        };
+        assert_eq!(kv(&batch4), 4 * kv(&single));
+    }
+
+    #[test]
+    fn sxe_sets_reduce_timing_passes() {
+        let m = by_name("opt-tiny").unwrap();
+        let cfg = LpuConfig::asic_819gbs();
+        let map = map_model(&m, &cfg, 1).unwrap();
+        let b4s1 = generate(
+            &m,
+            &cfg,
+            &map,
+            &CompileOpts { mode: ParallelMode::Batch { batch: 4 }, sxe_sets: 1, ..Default::default() },
+        );
+        let b4s4 = generate(
+            &m,
+            &cfg,
+            &map,
+            &CompileOpts { mode: ParallelMode::Batch { batch: 4 }, sxe_sets: 4, ..Default::default() },
+        );
+        let mm = |v: &VProgram| v.instrs.iter().filter(|vi| matches!(vi.op, Instr::MatMul { .. })).count();
+        assert!(mm(&b4s4) < mm(&b4s1));
+    }
+
+    #[test]
+    fn rope_emitted_for_llama_only() {
+        // llama-7b fits one 96GB device.
+        let v = gen("llama-7b", 1, 0);
+        assert!(v.instrs.iter().any(|vi| matches!(vi.op, Instr::VecCompute { op: VecOp::Rope, .. })));
+        let v2 = gen("opt-tiny", 1, 0);
+        assert!(!v2.instrs.iter().any(|vi| matches!(vi.op, Instr::VecCompute { op: VecOp::Rope, .. })));
+    }
+
+    #[test]
+    fn ends_with_halt_and_host_writeback() {
+        let v = gen("opt-tiny", 1, 3);
+        assert!(matches!(v.instrs.last().unwrap().op, Instr::Halt));
+        assert!(v.instrs.iter().any(|vi| matches!(vi.op, Instr::WriteHost { .. })));
+        assert!(v.instrs.iter().any(|vi| matches!(vi.op, Instr::Sample { .. })));
+    }
+}

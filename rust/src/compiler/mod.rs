@@ -1,0 +1,223 @@
+//! The HyperDex compilation layer.
+//!
+//! "The compilation layer ... performs memory mapping, instruction
+//! generation, and compilation to generate binary program for the LPU
+//! hardware." Pipeline:
+//!
+//! 1. [`mapper`] — analyzes the model and the system setup (device count,
+//!    network topology, HBM channel/burst geometry) and lays every
+//!    parameter tensor out in HBM: head-wise tiles for attention weights,
+//!    column-wise tiles for FFN weights, intra-layer (tensor) model
+//!    parallelism across devices, padding to tile boundaries.
+//! 2. [`instgen`] — walks the model's decode-step operation list and
+//!    emits instruction blocks (`token_embed`, `decoder`, `lmhead`,
+//!    `sync`, ...) over *virtual* vector registers.
+//! 3. [`regalloc`] — lifetime-based register allocation onto the 64
+//!    physical LMU vector registers ("tracks the lifetime of all
+//!    variables and automatically allocates and releases the hardware
+//!    registers").
+//! 4. [`chain`] — instruction-chaining verification & statistics: checks
+//!    the MEM/COMP/NET stream discipline that lets chains from distinct
+//!    groups execute back-to-back with no control overhead.
+//!
+//! The output is a [`crate::isa::Program`] binary plus the memory map —
+//! exactly what the runtime loads onto a device.
+
+pub mod chain;
+pub mod instgen;
+pub mod mapper;
+pub mod regalloc;
+
+use crate::config::LpuConfig;
+use crate::isa::Program;
+use crate::model::ModelConfig;
+
+pub use chain::{verify_chains, ChainReport};
+pub use instgen::{InstGen, VProgram};
+pub use mapper::{MemoryMap, Region, Tiling};
+
+/// Parameter-parallel execution modes (paper §Conclusion future work —
+/// implemented here as first-class compiler modes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// One token of one request per pass (the paper's main mode).
+    Single,
+    /// Batch mode: `batch` different requests share each weight stream.
+    Batch { batch: usize },
+    /// Multi-token mode: `tokens` consecutive tokens of one request
+    /// (summarization/prefill speedup) share each weight stream.
+    MultiToken { tokens: usize },
+}
+
+impl ParallelMode {
+    /// Number of activation replicas sharing one weight stream.
+    pub fn replicas(&self) -> usize {
+        match *self {
+            ParallelMode::Single => 1,
+            ParallelMode::Batch { batch } => batch,
+            ParallelMode::MultiToken { tokens } => tokens,
+        }
+    }
+}
+
+/// Compilation options.
+#[derive(Clone, Debug)]
+pub struct CompileOpts {
+    /// Tensor-parallel device count (ESL ring size).
+    pub n_devices: usize,
+    /// Context length before this decode step (KV entries already cached).
+    pub position: usize,
+    /// Emit the ESL overlapped dataflow (MatMul `to_net` + eager
+    /// transmit). `false` reproduces the blocking, GPU-like sync of
+    /// Fig 4(a) top.
+    pub esl_overlap: bool,
+    /// Parallel mode (Single / Batch / MultiToken).
+    pub mode: ParallelMode,
+    /// Number of SXE/VXE engine sets (≥2 enables full-rate batch mode).
+    pub sxe_sets: usize,
+}
+
+impl Default for CompileOpts {
+    fn default() -> Self {
+        CompileOpts {
+            n_devices: 1,
+            position: 0,
+            esl_overlap: true,
+            mode: ParallelMode::Single,
+            sxe_sets: 1,
+        }
+    }
+}
+
+/// Compile error.
+#[derive(Debug, thiserror::Error)]
+pub enum CompileError {
+    #[error("model does not partition over {devices} devices: {reason}")]
+    BadPartition { devices: usize, reason: String },
+    #[error("model ({need} B with KV) exceeds capacity of {devices} device(s) ({have} B)")]
+    OutOfMemory { need: u64, have: u64, devices: usize },
+    #[error("register allocation failed: {0}")]
+    RegAlloc(String),
+    #[error("instruction encoding failed: {0}")]
+    Encode(#[from] crate::isa::IsaError),
+    #[error("invalid options: {0}")]
+    BadOpts(String),
+}
+
+/// A fully compiled decode-step program.
+#[derive(Clone, Debug)]
+pub struct Compiled {
+    pub program: Program,
+    pub map: MemoryMap,
+    /// Compiler statistics (virtual register count, chain report, ...).
+    pub stats: CompileStats,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CompileStats {
+    pub virtual_regs: usize,
+    pub peak_live_regs: usize,
+    pub instrs: usize,
+    pub chain: ChainReport,
+}
+
+/// Compile one decode step for device 0 of an `opts.n_devices` ring
+/// (tensor-parallel shards are symmetric, so one device's program is the
+/// timing-representative one).
+pub fn compile(
+    model: &ModelConfig,
+    cfg: &LpuConfig,
+    opts: &CompileOpts,
+) -> Result<Compiled, CompileError> {
+    if opts.n_devices == 0 || !opts.n_devices.is_power_of_two() {
+        return Err(CompileError::BadOpts(format!(
+            "n_devices must be a power of two (ESL ring reconfiguration), got {}",
+            opts.n_devices
+        )));
+    }
+    if opts.mode.replicas() == 0 {
+        return Err(CompileError::BadOpts("mode with zero replicas".into()));
+    }
+    if opts.sxe_sets == 0 {
+        return Err(CompileError::BadOpts("sxe_sets must be >= 1".into()));
+    }
+    let map = mapper::map_model(model, cfg, opts.n_devices)?;
+    let vprog = instgen::generate(model, cfg, &map, opts);
+    let virtual_regs = vprog.n_virtuals();
+    let (program, peak_live) =
+        regalloc::allocate(&vprog).map_err(CompileError::RegAlloc)?;
+    // Validate encodability of every instruction (the binary ABI).
+    for i in &program.instrs {
+        i.encode()?;
+    }
+    let chain = chain::verify_chains(&program).map_err(CompileError::BadOpts)?;
+    Ok(Compiled {
+        stats: CompileStats {
+            virtual_regs,
+            peak_live_regs: peak_live,
+            instrs: program.len(),
+            chain,
+        },
+        program,
+        map,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+
+    #[test]
+    fn compile_opt_tiny_single_device() {
+        let m = by_name("opt-tiny").unwrap();
+        let c = compile(&m, &LpuConfig::asic_819gbs(), &CompileOpts::default()).unwrap();
+        assert!(c.program.len() > 20);
+        assert!(c.stats.peak_live_regs <= 64);
+        assert!(matches!(c.program.instrs.last(), Some(crate::isa::Instr::Halt)));
+    }
+
+    #[test]
+    fn compile_rejects_non_power_of_two_devices() {
+        let m = by_name("opt-tiny").unwrap();
+        let opts = CompileOpts { n_devices: 3, ..Default::default() };
+        assert!(matches!(
+            compile(&m, &LpuConfig::asic_3_28tbs(), &opts),
+            Err(CompileError::BadOpts(_))
+        ));
+    }
+
+    #[test]
+    fn compile_rejects_oversized_model() {
+        let m = by_name("opt-66b").unwrap();
+        // One 24 GB device cannot hold 132 GB of weights.
+        let opts = CompileOpts { n_devices: 1, ..Default::default() };
+        assert!(matches!(
+            compile(&m, &LpuConfig::asic_819gbs(), &opts),
+            Err(CompileError::OutOfMemory { .. })
+        ));
+    }
+
+    #[test]
+    fn compile_66b_on_two_devices() {
+        let m = by_name("opt-66b").unwrap();
+        let opts = CompileOpts { n_devices: 2, position: 100, ..Default::default() };
+        let c = compile(&m, &LpuConfig::asic_3_28tbs(), &opts).unwrap();
+        // Must contain NET instructions (tensor-parallel sync).
+        let h = c.program.category_histogram();
+        assert!(h[2].1 > 0, "expected NET instructions: {h:?}");
+    }
+
+    #[test]
+    fn batch_mode_emits_replica_matmuls() {
+        let m = by_name("opt-tiny").unwrap();
+        let single = compile(&m, &LpuConfig::asic_819gbs(), &CompileOpts::default()).unwrap();
+        let batched = compile(
+            &m,
+            &LpuConfig::asic_819gbs(),
+            &CompileOpts { mode: ParallelMode::Batch { batch: 4 }, ..Default::default() },
+        )
+        .unwrap();
+        assert!(batched.program.len() > single.program.len() * 2);
+    }
+}

@@ -1,0 +1,372 @@
+//! System configurations: the three synthesized ASIC variants of Fig 6(a),
+//! the Alveo U55C FPGA variant, and the two Orion server products.
+//!
+//! Configs serialize to/from JSON (via the in-tree [`crate::util::json`])
+//! so deployments are file-driven like any production launcher.
+
+use crate::util::json::{obj, Json};
+
+/// HBM generation (timing preset selector for the [`crate::hbm`] model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HbmGen {
+    Hbm2,
+    Hbm3,
+}
+
+/// Memory subsystem configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HbmConfig {
+    pub gen: HbmGen,
+    /// Number of HBM stacks.
+    pub stacks: usize,
+    /// Peak bandwidth per stack, bytes/s (HBM3 Icebolt: 819 GB/s).
+    pub bw_per_stack: f64,
+    /// Capacity per stack, bytes (HBM3 Icebolt: 24 GB).
+    pub cap_per_stack: u64,
+    /// Pseudo-channels per stack (HBM3: 16).
+    pub channels_per_stack: usize,
+}
+
+impl HbmConfig {
+    pub fn peak_bw(&self) -> f64 {
+        self.bw_per_stack * self.stacks as f64
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.cap_per_stack * self.stacks as u64
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels_per_stack * self.stacks
+    }
+}
+
+/// One LPU device configuration (chip + memory + link).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LpuConfig {
+    pub name: String,
+    /// Core clock, Hz (ASIC: 1 GHz; FPGA: 220 MHz).
+    pub freq_hz: f64,
+    /// MAC-tree vector width v (paper fixes 64).
+    pub vec_dim: usize,
+    /// Number of MAC trees l (8/16/32 for the ASIC configs).
+    pub mac_trees: usize,
+    /// SXE pipeline depth in cycles (superpipelined MAC + writeback).
+    pub pipeline_depth: u64,
+    /// VXE throughput, elements/cycle.
+    pub vxe_lanes: usize,
+    /// VXE fixed startup latency per vector op, cycles.
+    pub vxe_latency: u64,
+    /// ICP dispatch overhead per instruction chain, cycles.
+    pub icp_dispatch: u64,
+    pub hbm: HbmConfig,
+    /// ESL link bandwidth per direction, bytes/s (dual QSFP28 = 2×100Gb/s
+    /// on Orion; ASIC assumes the same board-level links).
+    pub esl_bw: f64,
+    /// ESL per-hop router latency, seconds.
+    pub esl_hop_latency: f64,
+    /// On-chip SRAM (LMU + buffers), bytes — from Fig 6(a).
+    pub sram_bytes: u64,
+}
+
+impl LpuConfig {
+    /// Engine streaming bandwidth = l × v × 2B × freq; the paper chooses
+    /// `mac_trees` so this exactly matches HBM peak bandwidth.
+    pub fn engine_bw(&self) -> f64 {
+        self.mac_trees as f64 * self.vec_dim as f64 * 2.0 * self.freq_hz
+    }
+
+    /// Bandwidth balance ratio (≈1.0 when engines match memory).
+    pub fn balance(&self) -> f64 {
+        self.engine_bw() / self.hbm.peak_bw()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.vec_dim == 0 || self.mac_trees == 0 {
+            return Err("degenerate SXE config".into());
+        }
+        let b = self.balance();
+        if !(0.5..=2.0).contains(&b) {
+            return Err(format!(
+                "{}: engine/memory bandwidth imbalance {b:.2} (engines {:.2e} B/s vs HBM {:.2e} B/s)",
+                self.name,
+                self.engine_bw(),
+                self.hbm.peak_bw()
+            ));
+        }
+        Ok(())
+    }
+
+    // ---- presets ----
+
+    fn hbm3(stacks: usize) -> HbmConfig {
+        HbmConfig {
+            gen: HbmGen::Hbm3,
+            stacks,
+            bw_per_stack: 819e9,
+            cap_per_stack: 24_000_000_000,
+            channels_per_stack: 16,
+        }
+    }
+
+    /// ASIC, 1 HBM3 stack: 819 GB/s, 8 MAC trees (Fig 6a col 1).
+    pub fn asic_819gbs() -> LpuConfig {
+        LpuConfig {
+            name: "lpu-asic-819gbs".into(),
+            freq_hz: 1e9,
+            vec_dim: 64,
+            mac_trees: 8,
+            pipeline_depth: 12,
+            vxe_lanes: 16,
+            vxe_latency: 24,
+            icp_dispatch: 4,
+            hbm: Self::hbm3(1),
+            esl_bw: 25e9, // 2×100 Gb/s full duplex
+            // QSFP28 serdes + RS-FEC + router traversal per hop.
+            esl_hop_latency: 1.0e-6,
+            sram_bytes: 812 * 1024,
+        }
+    }
+
+    /// ASIC, 2 HBM3 stacks: 1.64 TB/s, 16 MAC trees (Fig 6a col 2).
+    pub fn asic_1_64tbs() -> LpuConfig {
+        LpuConfig {
+            name: "lpu-asic-1.64tbs".into(),
+            mac_trees: 16,
+            hbm: Self::hbm3(2),
+            sram_bytes: 910 * 1024,
+            ..Self::asic_819gbs()
+        }
+    }
+
+    /// ASIC, 4 HBM3 stacks: 3.28 TB/s, 32 MAC trees (Fig 6a col 3; the
+    /// configuration compared against H100 in Fig 7).
+    pub fn asic_3_28tbs() -> LpuConfig {
+        LpuConfig {
+            name: "lpu-asic-3.28tbs".into(),
+            mac_trees: 32,
+            hbm: Self::hbm3(4),
+            sram_bytes: 1_107 * 1024,
+            ..Self::asic_819gbs()
+        }
+    }
+
+    /// Alveo U55C FPGA implementation: 220 MHz, 16 MAC trees, HBM2
+    /// 460 GB/s / 16 GB (the Orion building block).
+    pub fn fpga_u55c() -> LpuConfig {
+        LpuConfig {
+            name: "lpu-fpga-u55c".into(),
+            freq_hz: 220e6,
+            vec_dim: 64,
+            mac_trees: 16,
+            pipeline_depth: 16,
+            vxe_lanes: 16,
+            vxe_latency: 32,
+            icp_dispatch: 4,
+            hbm: HbmConfig {
+                gen: HbmGen::Hbm2,
+                stacks: 2,
+                bw_per_stack: 230e9,
+                // "16 GB" is 16 GiB physically (paper: "memory space is
+                // labeled in decimal prefix but has physical capacity
+                // based on the binary prefix") — the 66B-on-Orion fit
+                // depends on it.
+                cap_per_stack: 8 << 30,
+                channels_per_stack: 16,
+            },
+            esl_bw: 25e9,
+            esl_hop_latency: 1.2e-6,
+            sram_bytes: 910 * 1024,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<LpuConfig> {
+        match name {
+            "lpu-asic-819gbs" | "819gbs" => Some(Self::asic_819gbs()),
+            "lpu-asic-1.64tbs" | "1.64tbs" => Some(Self::asic_1_64tbs()),
+            "lpu-asic-3.28tbs" | "3.28tbs" | "asic" => Some(Self::asic_3_28tbs()),
+            "lpu-fpga-u55c" | "fpga" => Some(Self::fpga_u55c()),
+            _ => None,
+        }
+    }
+
+    // ---- JSON ----
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", self.name.clone().into()),
+            ("freq_hz", self.freq_hz.into()),
+            ("vec_dim", self.vec_dim.into()),
+            ("mac_trees", self.mac_trees.into()),
+            ("pipeline_depth", (self.pipeline_depth as u64).into()),
+            ("vxe_lanes", self.vxe_lanes.into()),
+            ("vxe_latency", (self.vxe_latency as u64).into()),
+            ("icp_dispatch", (self.icp_dispatch as u64).into()),
+            (
+                "hbm",
+                obj(vec![
+                    ("gen", if self.hbm.gen == HbmGen::Hbm3 { "hbm3" } else { "hbm2" }.into()),
+                    ("stacks", self.hbm.stacks.into()),
+                    ("bw_per_stack", self.hbm.bw_per_stack.into()),
+                    ("cap_per_stack", self.hbm.cap_per_stack.into()),
+                    ("channels_per_stack", self.hbm.channels_per_stack.into()),
+                ]),
+            ),
+            ("esl_bw", self.esl_bw.into()),
+            ("esl_hop_latency", self.esl_hop_latency.into()),
+            ("sram_bytes", self.sram_bytes.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LpuConfig, String> {
+        let req_f = |k: &str| j.get(k).as_f64().ok_or_else(|| format!("missing/invalid '{k}'"));
+        let req_u = |k: &str| j.get(k).as_u64().ok_or_else(|| format!("missing/invalid '{k}'"));
+        let h = j.get("hbm");
+        let gen = match h.get("gen").as_str() {
+            Some("hbm3") => HbmGen::Hbm3,
+            Some("hbm2") => HbmGen::Hbm2,
+            other => return Err(format!("invalid hbm.gen {other:?}")),
+        };
+        Ok(LpuConfig {
+            name: j.get("name").as_str().ok_or("missing 'name'")?.to_string(),
+            freq_hz: req_f("freq_hz")?,
+            vec_dim: req_u("vec_dim")? as usize,
+            mac_trees: req_u("mac_trees")? as usize,
+            pipeline_depth: req_u("pipeline_depth")?,
+            vxe_lanes: req_u("vxe_lanes")? as usize,
+            vxe_latency: req_u("vxe_latency")?,
+            icp_dispatch: req_u("icp_dispatch")?,
+            hbm: HbmConfig {
+                gen,
+                stacks: h.get("stacks").as_usize().ok_or("missing hbm.stacks")?,
+                bw_per_stack: h.get("bw_per_stack").as_f64().ok_or("missing hbm.bw_per_stack")?,
+                cap_per_stack: h.get("cap_per_stack").as_u64().ok_or("missing hbm.cap_per_stack")?,
+                channels_per_stack: h.get("channels_per_stack").as_usize().ok_or("missing hbm.channels_per_stack")?,
+            },
+            esl_bw: req_f("esl_bw")?,
+            esl_hop_latency: req_f("esl_hop_latency")?,
+            sram_bytes: req_u("sram_bytes")?,
+        })
+    }
+}
+
+/// A server product: N LPU devices on an ESL ring (Fig 6b).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    pub name: String,
+    pub device: LpuConfig,
+    pub n_devices: usize,
+    /// Board/host power overhead beyond the LPU systems, watts.
+    pub host_power_w: f64,
+}
+
+impl ServerConfig {
+    /// Orion-cloud: 8 FPGA LPUs, 128 GB, ~3.3 TB/s aggregate HBM (2U).
+    pub fn orion_cloud() -> ServerConfig {
+        ServerConfig {
+            name: "orion-cloud".into(),
+            device: LpuConfig::fpga_u55c(),
+            n_devices: 8,
+            host_power_w: 180.0,
+        }
+    }
+
+    /// Orion-edge: 2 FPGA LPUs, 32 GB, ~960 GB/s aggregate HBM.
+    pub fn orion_edge() -> ServerConfig {
+        ServerConfig {
+            name: "orion-edge".into(),
+            device: LpuConfig::fpga_u55c(),
+            n_devices: 2,
+            // Edge chassis (CPU, PSU losses) amortized over two cards.
+            host_power_w: 200.0,
+        }
+    }
+
+    pub fn total_capacity(&self) -> u64 {
+        self.device.hbm.capacity() * self.n_devices as u64
+    }
+
+    pub fn aggregate_bw(&self) -> f64 {
+        self.device.hbm.peak_bw() * self.n_devices as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_bandwidth_balanced() {
+        // Paper: "a number of compute units are placed to exactly match
+        // the total HBM bandwidth". l × v × 2B × freq ≈ HBM BW.
+        for cfg in [
+            LpuConfig::asic_819gbs(),
+            LpuConfig::asic_1_64tbs(),
+            LpuConfig::asic_3_28tbs(),
+            LpuConfig::fpga_u55c(),
+        ] {
+            cfg.validate().unwrap();
+            let b = cfg.balance();
+            assert!((0.95..=1.35).contains(&b), "{}: balance {b:.3}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn asic_bandwidths_match_fig6() {
+        assert!((LpuConfig::asic_819gbs().hbm.peak_bw() - 819e9).abs() < 1e6);
+        assert!((LpuConfig::asic_1_64tbs().hbm.peak_bw() - 1.638e12).abs() < 1e9);
+        assert!((LpuConfig::asic_3_28tbs().hbm.peak_bw() - 3.276e12).abs() < 1e9);
+        assert_eq!(LpuConfig::asic_3_28tbs().mac_trees, 32);
+        assert_eq!(LpuConfig::asic_3_28tbs().hbm.capacity(), 96_000_000_000);
+    }
+
+    #[test]
+    fn fpga_matches_paper_u55c() {
+        let f = LpuConfig::fpga_u55c();
+        // 16 × 64 × 2B × 220 MHz ≈ 450 GB/s ≈ 460 GB/s HBM2.
+        assert!((f.engine_bw() - 450.56e9).abs() < 1e9);
+        assert!((f.hbm.peak_bw() - 460e9).abs() < 1e9);
+        assert_eq!(f.hbm.capacity(), 16 << 30); // 16 GiB physical
+    }
+
+    #[test]
+    fn orion_configs_match_paper() {
+        let c = ServerConfig::orion_cloud();
+        assert_eq!(c.n_devices, 8);
+        assert_eq!(c.total_capacity(), 128 << 30); // "128 GB" = 128 GiB
+        assert!((c.aggregate_bw() - 3.68e12).abs() < 0.4e12); // ~3.3-3.7 TB/s
+        let e = ServerConfig::orion_edge();
+        assert_eq!(e.total_capacity(), 32 << 30); // "32 GB" = 32 GiB
+        assert!((e.aggregate_bw() - 920e9).abs() < 50e9); // ~960 GB/s
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [LpuConfig::asic_3_28tbs(), LpuConfig::fpga_u55c()] {
+            let j = cfg.to_json();
+            let back = LpuConfig::from_json(&j).unwrap();
+            assert_eq!(back, cfg);
+            // Also through text.
+            let text = j.to_string_pretty();
+            let back2 = LpuConfig::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back2, cfg);
+        }
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        let j = crate::util::json::Json::parse(r#"{"name":"x"}"#).unwrap();
+        let e = LpuConfig::from_json(&j).unwrap_err();
+        assert!(e.contains("hbm.gen"), "{e}");
+        let j2 = crate::util::json::Json::parse(r#"{"name":"x","hbm":{"gen":"hbm3"}}"#).unwrap();
+        let e2 = LpuConfig::from_json(&j2).unwrap_err();
+        assert!(e2.contains("freq_hz") || e2.contains("stacks"), "{e2}");
+    }
+
+    #[test]
+    fn by_name_aliases() {
+        assert_eq!(LpuConfig::by_name("asic").unwrap().mac_trees, 32);
+        assert_eq!(LpuConfig::by_name("fpga").unwrap().freq_hz, 220e6);
+        assert!(LpuConfig::by_name("nope").is_none());
+    }
+}

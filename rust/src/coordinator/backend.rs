@@ -1,0 +1,192 @@
+//! Device backends: the worker-side abstraction over "something that can
+//! decode tokens" — a PJRT engine running the AOT-compiled model, or a
+//! deterministic simulator backend for latency experiments and tests.
+//!
+//! PJRT handles are not `Send`, so backends are constructed *inside*
+//! worker threads from a cloneable [`BackendFactory`] descriptor.
+
+use std::any::Any;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// A decoding backend. Sessions are opaque (`Box<dyn Any>`) because each
+/// backend's KV state is a different concrete type.
+pub trait Backend {
+    /// Model served by this backend.
+    fn model_name(&self) -> &str;
+    /// Vocabulary size (logit vector length).
+    fn vocab(&self) -> usize;
+    /// Open a fresh generation session (zero KV cache).
+    fn new_session(&mut self) -> Result<Box<dyn Any>>;
+    /// Feed `token`, return next-token logits, advance the session.
+    fn decode(&mut self, session: &mut Box<dyn Any>, token: i64) -> Result<Vec<f32>>;
+}
+
+/// Cloneable backend descriptor; `build()` runs in the worker thread.
+#[derive(Clone, Debug)]
+pub enum BackendFactory {
+    /// Deterministic pseudo-model (tests, latency experiments).
+    Sim { model: String, vocab: usize },
+    /// PJRT engine over `artifacts/<model>.*`.
+    Pjrt { artifacts_dir: PathBuf, model: String },
+}
+
+impl BackendFactory {
+    pub fn sim(model: &str, vocab: usize) -> BackendFactory {
+        BackendFactory::Sim { model: model.to_string(), vocab }
+    }
+
+    pub fn pjrt(artifacts_dir: impl Into<PathBuf>, model: &str) -> BackendFactory {
+        BackendFactory::Pjrt { artifacts_dir: artifacts_dir.into(), model: model.to_string() }
+    }
+
+    pub fn build(&self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendFactory::Sim { model, vocab } => {
+                Ok(Box::new(SimBackend::new(model, *vocab)))
+            }
+            BackendFactory::Pjrt { artifacts_dir, model } => {
+                let engine = Engine::load(artifacts_dir, model)?;
+                Ok(Box::new(PjrtBackend { engine, model: model.clone() }))
+            }
+        }
+    }
+}
+
+/// Deterministic stand-in model: logits are a pure function of
+/// (model, position, token), so greedy decoding is reproducible across
+/// workers and runs.
+pub struct SimBackend {
+    model: String,
+    vocab: usize,
+    model_seed: u64,
+}
+
+struct SimSession {
+    pos: usize,
+}
+
+impl SimBackend {
+    pub fn new(model: &str, vocab: usize) -> SimBackend {
+        let mut seed = 0xcbf29ce484222325u64;
+        for b in model.bytes() {
+            seed = (seed ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        SimBackend { model: model.to_string(), vocab, model_seed: seed }
+    }
+}
+
+impl Backend for SimBackend {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn new_session(&mut self) -> Result<Box<dyn Any>> {
+        Ok(Box::new(SimSession { pos: 0 }))
+    }
+
+    fn decode(&mut self, session: &mut Box<dyn Any>, token: i64) -> Result<Vec<f32>> {
+        let s = session
+            .downcast_mut::<SimSession>()
+            .ok_or_else(|| anyhow!("foreign session type"))?;
+        let mut rng = Rng::new(
+            self.model_seed ^ (s.pos as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ token as u64,
+        );
+        let logits: Vec<f32> = (0..self.vocab).map(|_| rng.f32() * 8.0 - 4.0).collect();
+        s.pos += 1;
+        Ok(logits)
+    }
+}
+
+/// PJRT backend over the AOT artifacts.
+pub struct PjrtBackend {
+    engine: Engine,
+    model: String,
+}
+
+impl Backend for PjrtBackend {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    fn vocab(&self) -> usize {
+        self.engine.manifest.vocab
+    }
+
+    fn new_session(&mut self) -> Result<Box<dyn Any>> {
+        Ok(Box::new(self.engine.new_session()?))
+    }
+
+    fn decode(&mut self, session: &mut Box<dyn Any>, token: i64) -> Result<Vec<f32>> {
+        let s = session
+            .downcast_mut::<crate::runtime::Session>()
+            .ok_or_else(|| anyhow!("foreign session type"))?;
+        self.engine.decode_step(s, token)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_is_deterministic() {
+        let mut a = SimBackend::new("m", 64);
+        let mut b = SimBackend::new("m", 64);
+        let mut sa = a.new_session().unwrap();
+        let mut sb = b.new_session().unwrap();
+        for t in [1i64, 5, 9] {
+            assert_eq!(a.decode(&mut sa, t).unwrap(), b.decode(&mut sb, t).unwrap());
+        }
+    }
+
+    #[test]
+    fn sim_backend_depends_on_position_and_token() {
+        let mut m = SimBackend::new("m", 32);
+        let mut s1 = m.new_session().unwrap();
+        let l1 = m.decode(&mut s1, 3).unwrap();
+        let l2 = m.decode(&mut s1, 3).unwrap(); // same token, pos advanced
+        assert_ne!(l1, l2);
+        let mut s2 = m.new_session().unwrap();
+        let l3 = m.decode(&mut s2, 4).unwrap(); // different token, pos 0
+        assert_ne!(l1, l3);
+    }
+
+    #[test]
+    fn different_models_differ() {
+        let mut a = SimBackend::new("model-a", 16);
+        let mut b = SimBackend::new("model-b", 16);
+        let mut sa = a.new_session().unwrap();
+        let mut sb = b.new_session().unwrap();
+        assert_ne!(a.decode(&mut sa, 1).unwrap(), b.decode(&mut sb, 1).unwrap());
+    }
+
+    #[test]
+    fn foreign_session_rejected() {
+        let mut m = SimBackend::new("m", 8);
+        let mut bogus: Box<dyn Any> = Box::new(42u32);
+        assert!(m.decode(&mut bogus, 0).is_err());
+    }
+
+    #[test]
+    fn factory_builds_sim() {
+        let f = BackendFactory::sim("x", 100);
+        let b = f.build().unwrap();
+        assert_eq!(b.vocab(), 100);
+        assert_eq!(b.model_name(), "x");
+    }
+
+    #[test]
+    fn pjrt_factory_fails_cleanly_without_artifacts() {
+        let f = BackendFactory::pjrt("/nonexistent-dir", "opt-tiny");
+        assert!(f.build().is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Serving metrics (the paper's "monitoring tools ... crucial in managing
+//! LPU-equipped systems at the datacenter level").
+//!
+//! Lock-guarded Welford accumulators for queueing delay, time-to-first-
+//! token, per-token latency, and end-to-end request latency, plus
+//! counters. Snapshots are cheap copies; `to_json` feeds the server's
+//! `/metrics`-style endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::Welford;
+
+#[derive(Default)]
+struct Inner {
+    queue_delay: Welford,
+    ttft: Welford,
+    token_latency: Welford,
+    request_latency: Welford,
+}
+
+/// Thread-safe metrics hub shared by all workers.
+pub struct Metrics {
+    submitted: AtomicU64,
+    started: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    cancelled: AtomicU64,
+    tokens_out: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time copy of all metrics.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub started: u64,
+    pub completed: u64,
+    pub errors: u64,
+    /// Requests abandoned by their client mid-stream.
+    pub cancelled: u64,
+    pub tokens_out: u64,
+    pub mean_queue_delay_s: f64,
+    pub mean_ttft_s: f64,
+    pub mean_token_latency_s: f64,
+    pub p_token_latency_max_s: f64,
+    pub mean_request_latency_s: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            started: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            tokens_out: AtomicU64::new(0),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_start(&self, queued_for: Duration) {
+        self.started.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().queue_delay.add(queued_for.as_secs_f64());
+    }
+
+    pub fn on_first_token(&self, since_submit: Duration) {
+        self.inner.lock().unwrap().ttft.add(since_submit.as_secs_f64());
+    }
+
+    pub fn on_token(&self, step: Duration) {
+        self.tokens_out.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().token_latency.add(step.as_secs_f64());
+    }
+
+    pub fn on_done(&self, _tokens: usize, total: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().request_latency.add(total.as_secs_f64());
+    }
+
+    pub fn on_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A client disconnected mid-stream after `tokens` were generated.
+    pub fn on_cancel(&self, _tokens: usize) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().unwrap();
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            started: self.started.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            tokens_out: self.tokens_out.load(Ordering::Relaxed),
+            mean_queue_delay_s: zero_nan(inner.queue_delay.mean()),
+            mean_ttft_s: zero_nan(inner.ttft.mean()),
+            mean_token_latency_s: zero_nan(inner.token_latency.mean()),
+            p_token_latency_max_s: if inner.token_latency.count() == 0 {
+                0.0
+            } else {
+                inner.token_latency.max()
+            },
+            mean_request_latency_s: zero_nan(inner.request_latency.mean()),
+        }
+    }
+}
+
+fn zero_nan(x: f64) -> f64 {
+    if x.is_nan() { 0.0 } else { x }
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("submitted", self.submitted.into()),
+            ("started", self.started.into()),
+            ("completed", self.completed.into()),
+            ("errors", self.errors.into()),
+            ("cancelled", self.cancelled.into()),
+            ("tokens_out", self.tokens_out.into()),
+            ("mean_queue_delay_s", self.mean_queue_delay_s.into()),
+            ("mean_ttft_s", self.mean_ttft_s.into()),
+            ("mean_token_latency_s", self.mean_token_latency_s.into()),
+            ("max_token_latency_s", self.p_token_latency_max_s.into()),
+            ("mean_request_latency_s", self.mean_request_latency_s.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_start(Duration::from_millis(5));
+        m.on_first_token(Duration::from_millis(8));
+        m.on_token(Duration::from_millis(2));
+        m.on_token(Duration::from_millis(4));
+        m.on_done(2, Duration::from_millis(20));
+        m.on_error();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.started, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.tokens_out, 2);
+        assert!((s.mean_token_latency_s - 0.003).abs() < 1e-9);
+        assert!((s.p_token_latency_max_s - 0.004).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_has_no_nans() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_ttft_s, 0.0);
+        assert_eq!(s.mean_token_latency_s, 0.0);
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let m = Metrics::new();
+        m.on_submit();
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("submitted").as_u64(), Some(1));
+        assert!(j.get("mean_ttft_s").as_f64().is_some());
+    }
+
+    #[test]
+    fn thread_safety_smoke() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.on_submit();
+                        m.on_token(Duration::from_nanos(100));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 8000);
+        assert_eq!(s.tokens_out, 8000);
+    }
+}

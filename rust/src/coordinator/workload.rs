@@ -1,0 +1,231 @@
+//! Serving workload generation and load studies.
+//!
+//! The paper evaluates fixed-shape generation (in=32, out=2016); a
+//! datacenter deployment also needs the latency-vs-load curve. This
+//! module provides an open-loop Poisson request generator with
+//! configurable prompt/output length distributions and a load-sweep
+//! runner that reports throughput and latency percentiles per offered
+//! rate — the serving study behind the `perf_hotpath` load table.
+
+use std::time::{Duration, Instant};
+
+use crate::numerics::SampleParams;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+use super::{Coordinator, Request, RequestHandle, TokenEvent};
+
+/// Length distribution for prompts/outputs.
+#[derive(Clone, Copy, Debug)]
+pub enum LenDist {
+    Fixed(usize),
+    /// Uniform in [lo, hi].
+    Uniform(usize, usize),
+    /// Geometric-ish: min + exponential tail with the given mean extra.
+    LongTail { min: usize, mean_extra: f64, cap: usize },
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, hi) => rng.range(lo, hi + 1),
+            LenDist::LongTail { min, mean_extra, cap } => {
+                (min + rng.exp(1.0 / mean_extra.max(1e-9)) as usize).min(cap)
+            }
+        }
+    }
+}
+
+/// Workload specification.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub model: String,
+    /// Offered request rate, requests/second (open loop).
+    pub rate: f64,
+    pub n_requests: usize,
+    pub prompt_len: LenDist,
+    pub output_len: LenDist,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Generate the request list with Poisson inter-arrival offsets.
+    pub fn generate(&self) -> Vec<(Duration, Request)> {
+        let mut rng = Rng::new(self.seed);
+        let mut at = 0.0f64;
+        (0..self.n_requests)
+            .map(|i| {
+                at += rng.exp(self.rate);
+                let p_len = self.prompt_len.sample(&mut rng);
+                let o_len = self.output_len.sample(&mut rng).max(1);
+                let prompt =
+                    (0..p_len.max(1)).map(|_| rng.range(0, self.vocab) as i64).collect();
+                let req = Request {
+                    model: self.model.clone(),
+                    prompt,
+                    max_new_tokens: o_len,
+                    params: SampleParams::greedy(),
+                    eos_token: None,
+                    seed: self.seed ^ i as u64,
+                };
+                (Duration::from_secs_f64(at), req)
+            })
+            .collect()
+    }
+}
+
+/// Results of one load point.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub offered_rate: f64,
+    pub completed: usize,
+    pub wall_s: f64,
+    /// Achieved output tokens/second.
+    pub tokens_per_s: f64,
+    /// Time to first token, seconds.
+    pub ttft: Summary,
+    /// End-to-end request latency, seconds.
+    pub request_latency: Summary,
+}
+
+/// Run an open-loop load test against a coordinator. The submitting
+/// thread honors arrival times; each request's event stream is drained
+/// by its own collector thread so TTFT/latency are timestamped at
+/// *emission*, not at batched readback.
+pub fn run_open_loop(coord: &Coordinator, wl: &Workload) -> Result<LoadReport, String> {
+    type PerReq = Result<(f64, f64, usize), String>; // (ttft, latency, tokens)
+    fn collect(submitted: Instant, handle: RequestHandle) -> PerReq {
+        let mut first: Option<Duration> = None;
+        for ev in handle.events.iter() {
+            match ev {
+                TokenEvent::Token { index: 0, .. } => first = Some(submitted.elapsed()),
+                TokenEvent::Token { .. } => {}
+                TokenEvent::Done { tokens, .. } => {
+                    let lat = submitted.elapsed().as_secs_f64();
+                    let ttft = first.unwrap_or_else(|| submitted.elapsed()).as_secs_f64();
+                    return Ok((ttft, lat, tokens.len()));
+                }
+                TokenEvent::Error { message, .. } => return Err(message),
+            }
+        }
+        Err("stream closed without completion".into())
+    }
+
+    let plan = wl.generate();
+    let t0 = Instant::now();
+    let mut collectors = Vec::with_capacity(plan.len());
+    for (at, req) in plan {
+        if let Some(sleep) = at.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let submitted = Instant::now();
+        let handle = coord.submit(req)?;
+        collectors.push(
+            std::thread::Builder::new()
+                .name("lpu-load-collect".into())
+                .spawn(move || collect(submitted, handle))
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    let mut ttfts = Vec::with_capacity(collectors.len());
+    let mut lats = Vec::with_capacity(collectors.len());
+    let mut tokens = 0usize;
+    for c in collectors {
+        let (ttft, lat, n) = c.join().map_err(|_| "collector panicked")??;
+        ttfts.push(ttft);
+        lats.push(lat);
+        tokens += n;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(LoadReport {
+        offered_rate: wl.rate,
+        completed: lats.len(),
+        wall_s,
+        tokens_per_s: tokens as f64 / wall_s,
+        ttft: Summary::of(&ttfts),
+        request_latency: Summary::of(&lats),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendFactory, CoordinatorConfig, SchedulerPolicy};
+
+    fn wl(rate: f64, n: usize) -> Workload {
+        Workload {
+            model: "opt-tiny".into(),
+            rate,
+            n_requests: n,
+            prompt_len: LenDist::Uniform(1, 6),
+            output_len: LenDist::Fixed(5),
+            vocab: 512,
+            seed: 99,
+        }
+    }
+
+    fn coord() -> Coordinator {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 4,
+            policy: SchedulerPolicy::RoundRobin,
+        });
+        c.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+        c
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_ordered() {
+        let a = wl(100.0, 20).generate();
+        let b = wl(100.0, 20).generate();
+        assert_eq!(a.len(), 20);
+        for ((ta, ra), (tb, rb)) in a.iter().zip(&b) {
+            assert_eq!(ta, tb);
+            assert_eq!(ra.prompt, rb.prompt);
+        }
+        // Arrival times strictly increase.
+        assert!(a.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn poisson_mean_interarrival_matches_rate() {
+        let plan = Workload { n_requests: 4000, ..wl(200.0, 4000) }.generate();
+        let total = plan.last().unwrap().0.as_secs_f64();
+        let mean = total / plan.len() as f64;
+        assert!((mean - 1.0 / 200.0).abs() < 0.0008, "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn len_dists_in_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let u = LenDist::Uniform(3, 9).sample(&mut rng);
+            assert!((3..=9).contains(&u));
+            let t = LenDist::LongTail { min: 4, mean_extra: 10.0, cap: 64 }.sample(&mut rng);
+            assert!((4..=64).contains(&t));
+        }
+        assert_eq!(LenDist::Fixed(7).sample(&mut rng), 7);
+    }
+
+    #[test]
+    fn open_loop_run_conserves_and_reports() {
+        let c = coord();
+        let r = run_open_loop(&c, &wl(500.0, 30)).unwrap();
+        assert_eq!(r.completed, 30);
+        assert_eq!((r.tokens_per_s * r.wall_s).round() as usize, 30 * 5);
+        assert!(r.ttft.mean > 0.0);
+        assert!(r.request_latency.p99 >= r.request_latency.p50);
+        c.shutdown();
+    }
+
+    #[test]
+    fn higher_load_does_not_lose_requests() {
+        let c = coord();
+        for rate in [100.0, 2000.0] {
+            let r = run_open_loop(&c, &wl(rate, 25)).unwrap();
+            assert_eq!(r.completed, 25, "rate {rate}");
+        }
+        c.shutdown();
+    }
+}

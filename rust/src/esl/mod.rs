@@ -1,0 +1,320 @@
+//! Expandable Synchronization Link (ESL).
+//!
+//! The P2P interconnect of the paper: dual-QSFP full-duplex links in a
+//! ring, a custom protocol that overlaps vector–matrix computation with
+//! synchronization (the per-instruction overlap lives in
+//! [`crate::sim::core`]; this module owns the *network* itself):
+//!
+//! * [`Packet`]/[`Router`] — packet-header formulation: "the router
+//!   determines the number and direction of hops based on the device ID
+//!   to formulate a packet header that guarantees the most efficient
+//!   communication path" (Fig 4(b));
+//! * [`RingConfig`] — the reconfigurable 2/4/8-device ring partitioning:
+//!   an 8-device server can run one 8-ring, two independent 4-rings, or
+//!   four 2-rings, without rewiring ("each ring is guaranteed not to
+//!   intersect with a different ring");
+//! * [`LinkModel`] — packetization and cut-through wire timing used by
+//!   tests and the cluster driver;
+//! * [`cluster`] — multi-ring serving scenarios (different models on
+//!   different rings) and the strong-scaling sweep behind Fig 7(c).
+
+pub mod cluster;
+
+use crate::util::json::{obj, Json};
+
+/// Direction around the ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Clockwise,
+    CounterClockwise,
+}
+
+/// An ESL packet header (the router's on-wire routing decision).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Packet {
+    pub src: usize,
+    pub dst: usize,
+    pub hops: usize,
+    pub dir: Direction,
+    /// Payload bytes in this packet.
+    pub bytes: u32,
+    /// Sequence number within the transfer.
+    pub seq: u32,
+}
+
+/// Maximum payload per packet (the "bitwidth of the P2P interface" chunk
+/// the SXE column-tasks are sized to).
+pub const PACKET_MTU: u32 = 4096;
+
+/// A reconfigurable ring partitioning of `n_devices` (Fig 4(b)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RingConfig {
+    pub n_devices: usize,
+    /// Ring size (2, 4, or 8 in the paper; any power of two ≤ n here).
+    pub ring_size: usize,
+}
+
+impl RingConfig {
+    pub fn new(n_devices: usize, ring_size: usize) -> Result<RingConfig, String> {
+        if !n_devices.is_power_of_two() || !ring_size.is_power_of_two() {
+            return Err(format!("devices ({n_devices}) and ring size ({ring_size}) must be powers of two"));
+        }
+        if ring_size > n_devices {
+            return Err(format!("ring size {ring_size} exceeds device count {n_devices}"));
+        }
+        Ok(RingConfig { n_devices, ring_size })
+    }
+
+    /// Number of independent rings.
+    pub fn n_rings(&self) -> usize {
+        self.n_devices / self.ring_size
+    }
+
+    /// Ring index of a device. Contiguous blocks: the physical full ring
+    /// is split into arcs, so no two rings share a link.
+    pub fn ring_of(&self, device: usize) -> usize {
+        assert!(device < self.n_devices);
+        device / self.ring_size
+    }
+
+    /// Devices in ring `r`, in ring order.
+    pub fn members(&self, r: usize) -> Vec<usize> {
+        let base = r * self.ring_size;
+        (base..base + self.ring_size).collect()
+    }
+
+    /// All rings are disjoint and cover every device (paper invariant).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.n_devices];
+        for r in 0..self.n_rings() {
+            for d in self.members(r) {
+                if seen[d] {
+                    return Err(format!("device {d} in two rings"));
+                }
+                seen[d] = true;
+            }
+        }
+        if seen.iter().all(|&s| s) {
+            Ok(())
+        } else {
+            Err("uncovered device".into())
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("n_devices", self.n_devices.into()),
+            ("ring_size", self.ring_size.into()),
+        ])
+    }
+}
+
+/// The per-device router: computes packet headers.
+#[derive(Clone, Debug)]
+pub struct Router {
+    pub device: usize,
+    pub ring: RingConfig,
+}
+
+impl Router {
+    pub fn new(device: usize, ring: RingConfig) -> Router {
+        Router { device, ring }
+    }
+
+    /// Route to `dst`: shortest direction around this device's ring.
+    /// Errors if `dst` is not in the same ring (rings never intersect).
+    pub fn route(&self, dst: usize) -> Result<(usize, Direction), String> {
+        let r = self.ring.ring_of(self.device);
+        if self.ring.ring_of(dst) != r {
+            return Err(format!(
+                "device {dst} is in ring {} (this is ring {r}); rings do not intersect",
+                self.ring.ring_of(dst)
+            ));
+        }
+        let size = self.ring.ring_size;
+        let me = self.device % size;
+        let them = dst % size;
+        let cw = (them + size - me) % size;
+        let ccw = (me + size - them) % size;
+        if cw == 0 {
+            return Err("route to self".into());
+        }
+        if cw <= ccw {
+            Ok((cw, Direction::Clockwise))
+        } else {
+            Ok((ccw, Direction::CounterClockwise))
+        }
+    }
+
+    /// Split a transfer into MTU packets with headers.
+    pub fn packetize(&self, dst: usize, bytes: u64) -> Result<Vec<Packet>, String> {
+        let (hops, dir) = self.route(dst)?;
+        let n = bytes.div_ceil(PACKET_MTU as u64).max(1);
+        Ok((0..n)
+            .map(|seq| Packet {
+                src: self.device,
+                dst,
+                hops,
+                dir,
+                bytes: if seq == n - 1 && bytes % PACKET_MTU as u64 != 0 {
+                    (bytes % PACKET_MTU as u64) as u32
+                } else {
+                    PACKET_MTU
+                },
+                seq: seq as u32,
+            })
+            .collect())
+    }
+}
+
+/// Wire-level timing of one ESL link (per direction).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Bytes/s per direction (dual QSFP28: 25 GB/s).
+    pub bw: f64,
+    /// Per-hop router + serdes latency, seconds.
+    pub hop_latency: f64,
+}
+
+impl LinkModel {
+    /// Cut-through transfer time: packets stream back-to-back; each hop
+    /// adds latency once (pipelined forwarding, not store-and-forward).
+    pub fn transfer_time(&self, bytes: u64, hops: usize) -> f64 {
+        bytes as f64 / self.bw + self.hop_latency * hops.max(1) as f64
+    }
+
+    /// Store-and-forward time (the ablation: why cut-through matters).
+    pub fn store_and_forward_time(&self, bytes: u64, hops: usize) -> f64 {
+        (bytes as f64 / self.bw + self.hop_latency) * hops.max(1) as f64
+    }
+
+    /// Ring all-reduce wall time without any compute overlap (the
+    /// GPU-like blocking baseline): 2(n-1) sequential chunk steps.
+    pub fn blocking_allreduce_time(&self, vector_bytes: u64, ring: usize) -> f64 {
+        if ring <= 1 {
+            return 0.0;
+        }
+        let chunk = vector_bytes.div_ceil(ring as u64);
+        2.0 * (ring as f64 - 1.0) * self.transfer_time(chunk, 1)
+    }
+
+    /// Visible all-reduce time under ESL overlap: the transfer body hides
+    /// behind compute; one tail chunk per step remains.
+    pub fn overlapped_allreduce_tail(&self, vector_bytes: u64, ring: usize) -> f64 {
+        if ring <= 1 {
+            return 0.0;
+        }
+        let chunk = (vector_bytes.div_ceil(ring as u64)).min(PACKET_MTU as u64);
+        2.0 * (ring as f64 - 1.0) * self.transfer_time(chunk, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::quick;
+
+    #[test]
+    fn ring_partitions_valid() {
+        for (n, s) in [(8, 8), (8, 4), (8, 2), (4, 2), (2, 2), (4, 4)] {
+            let rc = RingConfig::new(n, s).unwrap();
+            rc.validate().unwrap();
+            assert_eq!(rc.n_rings(), n / s);
+        }
+    }
+
+    #[test]
+    fn bad_ring_configs_rejected() {
+        assert!(RingConfig::new(6, 2).is_err());
+        assert!(RingConfig::new(8, 3).is_err());
+        assert!(RingConfig::new(4, 8).is_err());
+    }
+
+    #[test]
+    fn rings_never_intersect() {
+        let rc = RingConfig::new(8, 4).unwrap();
+        let a: Vec<usize> = rc.members(0);
+        let b: Vec<usize> = rc.members(1);
+        assert_eq!(a, vec![0, 1, 2, 3]);
+        assert_eq!(b, vec![4, 5, 6, 7]);
+        assert!(a.iter().all(|d| !b.contains(d)));
+    }
+
+    #[test]
+    fn router_picks_shortest_direction() {
+        let rc = RingConfig::new(8, 8).unwrap();
+        let r = Router::new(0, rc);
+        assert_eq!(r.route(1).unwrap(), (1, Direction::Clockwise));
+        assert_eq!(r.route(7).unwrap(), (1, Direction::CounterClockwise));
+        assert_eq!(r.route(4).unwrap(), (4, Direction::Clockwise)); // tie -> cw
+        assert_eq!(r.route(6).unwrap(), (2, Direction::CounterClockwise));
+    }
+
+    #[test]
+    fn router_rejects_cross_ring_and_self() {
+        let rc = RingConfig::new(8, 4).unwrap();
+        let r = Router::new(1, rc);
+        assert!(r.route(5).is_err()); // other ring
+        assert!(r.route(1).is_err()); // self
+        assert!(r.route(2).is_ok());
+    }
+
+    #[test]
+    fn packetize_covers_bytes() {
+        let rc = RingConfig::new(4, 4).unwrap();
+        let r = Router::new(0, rc);
+        let pkts = r.packetize(2, 10_000).unwrap();
+        assert_eq!(pkts.len(), 3);
+        let total: u64 = pkts.iter().map(|p| p.bytes as u64).sum();
+        assert_eq!(total, 10_000);
+        assert_eq!(pkts[0].bytes, PACKET_MTU);
+        assert_eq!(pkts[2].bytes, 10_000 - 2 * PACKET_MTU as u64 as u32);
+        assert!(pkts.iter().enumerate().all(|(i, p)| p.seq == i as u32));
+    }
+
+    #[test]
+    fn cut_through_beats_store_and_forward() {
+        let l = LinkModel { bw: 25e9, hop_latency: 500e-9 };
+        let ct = l.transfer_time(1_000_000, 4);
+        let sf = l.store_and_forward_time(1_000_000, 4);
+        assert!(ct < sf);
+        // 4 hops of 1 MB: SF pays the wire 4x.
+        assert!(sf > 3.0 * ct * 0.8);
+    }
+
+    #[test]
+    fn overlap_tail_much_smaller_than_blocking() {
+        let l = LinkModel { bw: 25e9, hop_latency: 500e-9 };
+        let d_bytes = 9216 * 2; // opt-66b hidden vector
+        for ring in [2usize, 4, 8] {
+            let blocking = l.blocking_allreduce_time(d_bytes, ring);
+            let tail = l.overlapped_allreduce_tail(d_bytes, ring);
+            assert!(tail <= blocking, "ring {ring}");
+        }
+        // For large vectors the gap is wide.
+        let big = 1_000_000u64;
+        assert!(l.overlapped_allreduce_tail(big, 8) < 0.2 * l.blocking_allreduce_time(big, 8));
+    }
+
+    #[test]
+    fn prop_route_hops_bounded_by_half_ring() {
+        quick("route-hops-bound", |rng| {
+            let size = 1usize << rng.range(1, 4); // 2..8
+            let rc = RingConfig::new(8.max(size), size).map_err(|e| e)?;
+            let ring_idx = rng.range(0, rc.n_rings());
+            let members = rc.members(ring_idx);
+            let a = *rng.choose(&members);
+            let mut b = *rng.choose(&members);
+            if a == b {
+                b = members[(members.iter().position(|&m| m == a).unwrap() + 1) % members.len()];
+            }
+            let r = Router::new(a, rc);
+            let (hops, _) = r.route(b)?;
+            if hops >= 1 && hops <= size / 2 {
+                Ok(())
+            } else {
+                Err(format!("route {a}->{b} in ring of {size}: {hops} hops"))
+            }
+        });
+    }
+}

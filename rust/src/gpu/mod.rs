@@ -1,0 +1,290 @@
+//! Analytical GPU baselines (H100 / L4 / A100-DGX).
+//!
+//! The paper compares LPU against NVIDIA GPUs using (a) its own
+//! measurements of bandwidth utilization and power on H100/L4 (Fig 2a/b,
+//! Fig 7a/b) and (b) NVIDIA's published FasterTransformer benchmark for
+//! DGX A100 scaling (Fig 2c / 7c). We have no GPUs in this environment,
+//! so — mirroring the paper's own use of published numbers — the
+//! baselines are analytical models *calibrated to the measurements the
+//! paper reports*:
+//!
+//! * per-token latency = streamed weight bytes / (peak BW × utilization),
+//!   with utilization a smooth function of model size fit to the paper's
+//!   quoted points (28.5–28.9% @1.3B … 69.9–70.8% @30B, 64.9% @2×66B);
+//! * power = idle + dynamic·utilization, fit to Fig 2(b)'s quoted 1101 W
+//!   for 2×H100 on 66B;
+//! * multi-GPU sync: blocking NVLink all-reduce per layer (computation
+//!   stalls during communication — the paper's core claim about tensor
+//!   parallelism on GPUs), calibrated to the DGX A100 FT scaling of
+//!   1.38×/doubling.
+
+use crate::model::ModelConfig;
+
+/// A GPU device model.
+#[derive(Clone, Debug)]
+pub struct GpuConfig {
+    pub name: String,
+    /// Peak HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// HBM capacity, bytes.
+    pub capacity: u64,
+    /// Board TDP, watts.
+    pub tdp_w: f64,
+    /// Idle/static power fraction of TDP under inference load.
+    pub idle_frac: f64,
+    /// Interconnect bandwidth per direction (NVLink), bytes/s.
+    pub link_bw: f64,
+    /// Per-sync software+launch latency, seconds (kernel launch, NCCL
+    /// ring setup — the dominant term for small transfers).
+    pub sync_latency: f64,
+    /// Bandwidth-utilization curve parameters (see [`GpuConfig::utilization`]).
+    util_floor: f64,
+    util_ceil: f64,
+    /// Model size (bytes) at which utilization reaches halfway.
+    util_knee: f64,
+}
+
+impl GpuConfig {
+    /// NVIDIA H100 SXM (3.35 TB/s, 80 GB, 700 W TDP).
+    pub fn h100() -> GpuConfig {
+        GpuConfig {
+            name: "h100".into(),
+            mem_bw: 3.35e12,
+            capacity: 80_000_000_000,
+            tdp_w: 700.0,
+            idle_frac: 0.35,
+            link_bw: 450e9, // NVLink4, per direction
+            sync_latency: 12e-6,
+            util_floor: 0.262,
+            util_ceil: 0.72,
+            util_knee: 11.3e9,
+        }
+    }
+
+    /// NVIDIA L4 (300 GB/s, 24 GB, 72 W).
+    pub fn l4() -> GpuConfig {
+        GpuConfig {
+            name: "l4".into(),
+            mem_bw: 300e9,
+            capacity: 24_000_000_000,
+            tdp_w: 72.0,
+            idle_frac: 0.30,
+            link_bw: 32e9, // PCIe Gen4 x16
+            sync_latency: 25e-6,
+            // A narrow 300 GB/s part saturates far more easily than an
+            // H100: small models already keep its few SMs busy.
+            util_floor: 0.45,
+            util_ceil: 0.85,
+            util_knee: 2.0e9,
+        }
+    }
+
+    /// NVIDIA A100 SXM (2.04 TB/s, 80 GB, 400 W), NVLink3 600 GB/s
+    /// (300 GB/s per direction) — the DGX A100 node of Fig 2(c).
+    pub fn a100() -> GpuConfig {
+        GpuConfig {
+            name: "a100".into(),
+            mem_bw: 2.04e12,
+            capacity: 80_000_000_000,
+            tdp_w: 400.0,
+            idle_frac: 0.35,
+            link_bw: 300e9,
+            sync_latency: 14e-6,
+            util_floor: 0.262,
+            util_ceil: 0.72,
+            util_knee: 11.3e9,
+        }
+    }
+
+    /// Effective memory-bandwidth utilization for decoding a model of
+    /// `weight_bytes` on one GPU: saturating curve through the paper's
+    /// measured points — small models cannot keep the wide GPU busy
+    /// ("GPU cannot effectively route the incoming bandwidth to a single
+    /// core"), so utilization falls toward `util_floor`.
+    pub fn utilization(&self, weight_bytes: u64) -> f64 {
+        // Hill-2 saturation: fits the paper's 28.9% @1.3B and 70.8% @30B
+        // simultaneously (a first-order knee cannot).
+        let s = (weight_bytes as f64 / self.util_knee).powi(2);
+        self.util_floor + (self.util_ceil - self.util_floor) * s / (s + 1.0)
+    }
+
+    /// Decode latency per token on `n` GPUs (tensor parallel), seconds.
+    ///
+    /// Per device: shard streaming at the utilization-derated bandwidth;
+    /// plus per-layer blocking all-reduce over NVLink (2 syncs/layer),
+    /// which is *not* overlapped with compute (the GPU inefficiency the
+    /// paper targets). Multi-GPU also degrades per-device utilization
+    /// (the paper: "the GPU underutilization is accentuated with
+    /// additional devices", 64.9% for 2×H100 on 66B).
+    pub fn decode_latency(&self, model: &ModelConfig, n: usize, pos: usize) -> f64 {
+        assert!(n >= 1);
+        // GPUs keep the LM head weight-tied (unlike the LPU map, which
+        // stores a column-tiled copy), so charge the tied parameter set.
+        let weights = model.weight_bytes();
+        let shard = weights / n as u64;
+        // Multi-device utilization penalty (fit: 70.8% -> 64.9% for 66B
+        // at 1->2 devices; FT DGX numbers imply ~8%/doubling).
+        let util = self.utilization(shard) * 0.92f64.powi((n as f64).log2() as i32);
+        let stream = shard as f64 / (self.mem_bw * util);
+        let kv = model.kv_read_bytes(pos + 1) as f64 / n as f64 / (self.mem_bw * util);
+        let sync = if n > 1 {
+            let per_layer = self.allreduce_time(model.d_model as u64 * 2, n);
+            2.0 * model.n_layers as f64 * per_layer
+        } else {
+            0.0
+        };
+        stream + kv + sync
+    }
+
+    /// Blocking ring all-reduce over the GPU interconnect.
+    pub fn allreduce_time(&self, vector_bytes: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (n - 1);
+        let chunk = vector_bytes.div_ceil(n as u64);
+        self.sync_latency + steps as f64 * chunk as f64 / self.link_bw
+    }
+
+    /// Average board power while decoding, watts.
+    pub fn decode_power(&self, model: &ModelConfig, n: usize) -> f64 {
+        let shard = model.decode_stream_bytes() / n as u64;
+        let util = self.utilization(shard) * 0.92f64.powi((n as f64).log2() as i32);
+        // Memory-bound inference: dynamic power tracks bandwidth
+        // utilization plus a compute-army overhead that does not.
+        let per_gpu =
+            self.tdp_w * (self.idle_frac + (1.0 - self.idle_frac) * (0.25 + 0.65 * util));
+        per_gpu * n as f64
+    }
+
+    /// GPUs needed to hold the model + KV.
+    pub fn devices_needed(&self, model: &ModelConfig) -> usize {
+        model.devices_needed(self.capacity)
+    }
+}
+
+/// Paper-quoted GPU measurements used for calibration checks.
+pub mod calibration {
+    /// (model, paper-quoted H100 utilization) from Fig 2(a)/evaluation.
+    pub const H100_UTIL_POINTS: [(&str, f64); 3] =
+        [("opt-1.3b", 0.289), ("opt-30b", 0.708), ("opt-66b", 0.649)];
+
+    /// 2×H100 running OPT-66B draws ~1101 W (paper).
+    pub const H100_2X_66B_POWER_W: f64 = 1101.0;
+
+    /// DGX A100 + FasterTransformer, GPT3-20B: 1.38× per doubling, 2.65×
+    /// total at 8 GPUs (paper Fig 2(c)).
+    pub const DGX_SPEEDUP_PER_DOUBLING: f64 = 1.38;
+    pub const DGX_SPEEDUP_8X: f64 = 2.65;
+}
+
+/// Strong-scaling speedups for the DGX comparison (Fig 2c / 7c).
+pub fn scaling_speedups(gpu: &GpuConfig, model: &ModelConfig, max_devices: usize, pos: usize) -> Vec<(usize, f64)> {
+    let base = gpu.decode_latency(model, 1, pos);
+    let mut out = Vec::new();
+    let mut n = 1;
+    while n <= max_devices {
+        out.push((n, base / gpu.decode_latency(model, n, pos)));
+        n *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+
+    #[test]
+    fn h100_utilization_matches_paper_points() {
+        let g = GpuConfig::h100();
+        for (name, expect) in calibration::H100_UTIL_POINTS {
+            let m = by_name(name).unwrap();
+            let n = if name == "opt-66b" { 2 } else { 1 };
+            let shard = m.decode_stream_bytes() / n;
+            let util = g.utilization(shard) * 0.92f64.powi((n as f64).log2() as i32);
+            let rel = (util - expect).abs() / expect;
+            assert!(rel < 0.12, "{name}: model util {util:.3} vs paper {expect} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn h100_latency_1_3b_near_paper() {
+        // Paper: LPU 1.25 ms is 2.09x faster => H100 ≈ 2.61 ms/token.
+        let g = GpuConfig::h100();
+        let m = by_name("opt-1.3b").unwrap();
+        let t = g.decode_latency(&m, 1, 1024) * 1e3;
+        assert!((2.2..=3.1).contains(&t), "H100 1.3B {t:.2} ms/token");
+    }
+
+    #[test]
+    fn h100_latency_66b_near_paper() {
+        // Paper: 2 LPUs at 22.2 ms are 1.37x faster => 2xH100 ≈ 30.4 ms.
+        let g = GpuConfig::h100();
+        let m = by_name("opt-66b").unwrap();
+        let t = g.decode_latency(&m, 2, 1024) * 1e3;
+        assert!((26.0..=35.0).contains(&t), "2xH100 66B {t:.2} ms/token");
+    }
+
+    #[test]
+    fn power_calibration_2x_h100_66b() {
+        let g = GpuConfig::h100();
+        let m = by_name("opt-66b").unwrap();
+        let p = g.decode_power(&m, 2);
+        let rel = (p - calibration::H100_2X_66B_POWER_W).abs() / calibration::H100_2X_66B_POWER_W;
+        assert!(rel < 0.10, "2xH100 66B power {p:.0} W vs paper 1101 W");
+    }
+
+    #[test]
+    fn dgx_scaling_matches_ft_benchmark() {
+        let g = GpuConfig::a100();
+        let m = by_name("gpt3-20b").unwrap();
+        let s = scaling_speedups(&g, &m, 8, 200);
+        let s8 = s.last().unwrap().1;
+        let rel = (s8 - calibration::DGX_SPEEDUP_8X).abs() / calibration::DGX_SPEEDUP_8X;
+        assert!(rel < 0.15, "DGX 8x speedup {s8:.2} vs paper 2.65");
+        // Per-doubling geometric mean near 1.38x.
+        let per_doubling = s8.powf(1.0 / 3.0);
+        assert!((1.25..=1.55).contains(&per_doubling), "{per_doubling:.3}");
+    }
+
+    #[test]
+    fn utilization_monotone_in_model_size() {
+        let g = GpuConfig::h100();
+        let mut last = 0.0;
+        for b in [1e9 as u64, 5e9 as u64, 20e9 as u64, 100e9 as u64] {
+            let u = g.utilization(b);
+            assert!(u > last);
+            assert!(u < 0.75);
+            last = u;
+        }
+    }
+
+    #[test]
+    fn sync_dominates_small_models_at_scale() {
+        // The reason GPUs scale at 1.38x: blocking sync is a growing
+        // share of per-token time as devices double.
+        let g = GpuConfig::a100();
+        let m = by_name("gpt3-20b").unwrap();
+        let t1 = g.decode_latency(&m, 1, 100);
+        let t8 = g.decode_latency(&m, 8, 100);
+        let sync8 = 2.0 * m.n_layers as f64 * g.allreduce_time(m.d_model as u64 * 2, 8);
+        // Sync is a visible (unhidden) share, and utilization degradation
+        // does the rest — together they cap DGX at ~2.65x.
+        assert!(sync8 / t8 > 0.08, "sync share {:.2}", sync8 / t8);
+        assert!(t1 / t8 < 4.0, "super-linear scaling should not happen");
+    }
+
+    #[test]
+    fn l4_slower_than_h100() {
+        let m = by_name("opt-1.3b").unwrap();
+        assert!(GpuConfig::l4().decode_latency(&m, 1, 100) > GpuConfig::h100().decode_latency(&m, 1, 100));
+    }
+
+    #[test]
+    fn devices_needed_66b() {
+        let g = GpuConfig::h100();
+        assert_eq!(g.devices_needed(&by_name("opt-66b").unwrap()), 2);
+        assert_eq!(g.devices_needed(&by_name("opt-30b").unwrap()), 1);
+    }
+}

@@ -1,0 +1,493 @@
+//! Two-pass assembler and disassembler for the LPU ISA.
+//!
+//! Text format, one instruction per line:
+//! ```text
+//! loop:                         # label
+//!   read.params 0x1000, 4096   # mnemonic operands...
+//!   matmul v1 -> v2, k=2048, n=8192, net
+//!   vec.softmax v5, v0 -> v5, len=2049
+//!   scalar.add s1, s2, -4
+//!   branch.lt s3, s4, loop
+//!   halt
+//! ```
+//! Used by tests, the `lpu asm`/`lpu disasm` CLI, and as the debug dump
+//! format of the HyperDex compiler (`--emit-asm`).
+
+use super::*;
+use std::collections::HashMap;
+
+/// Disassemble one instruction to canonical text.
+pub fn disasm(i: &Instr) -> String {
+    use Instr::*;
+    match *i {
+        ReadEmbedding { addr, dst, len } => format!("read.embed {addr:#x} -> v{dst}, len={len}"),
+        ReadKv { addr, len } => format!("read.kv {addr:#x}, len={len}"),
+        ReadParams { addr, len } => format!("read.params {addr:#x}, len={len}"),
+        ReadHost { addr, dst, len } => format!("read.host {addr:#x} -> v{dst}, len={len}"),
+        WriteKv { addr, len } => format!("write.kv {addr:#x}, len={len}"),
+        WriteHost { src, addr, len } => format!("write.host v{src} -> {addr:#x}, len={len}"),
+        MatMul { src, dst, k, n, accum, to_net, from_lmu } => {
+            let mut s = format!("matmul v{src} -> v{dst}, k={k}, n={n}");
+            if accum {
+                s.push_str(", acc");
+            }
+            if to_net {
+                s.push_str(", net");
+            }
+            if from_lmu {
+                s.push_str(", lmu");
+            }
+            s
+        }
+        VecCompute { op, a, b, dst, len } => {
+            format!("vec.{} v{a}, v{b} -> v{dst}, len={len}", vecop_name(op))
+        }
+        VecFused { op, a, b, dst, len } => {
+            format!("fused.{} v{a}, v{b} -> v{dst}, len={len}", fusedop_name(op))
+        }
+        Sample { src, dst, len } => format!("sample v{src} -> v{dst}, len={len}"),
+        Transmit { src, len, hops } => format!("transmit v{src}, len={len}, hops={hops}"),
+        Receive { dst, len, hops } => format!("receive v{dst}, len={len}, hops={hops}"),
+        Scalar { op, dst, a, imm } => format!("scalar.{} s{dst}, s{a}, {imm}", scalarop_name(op)),
+        Branch { cond, a, b, target } => {
+            format!("branch.{} s{a}, s{b}, {target}", cond_name(cond))
+        }
+        Jump { target } => format!("jump {target}"),
+        Halt => "halt".to_string(),
+    }
+}
+
+/// Disassemble a whole program with addresses.
+pub fn disasm_program(p: &Program) -> String {
+    let mut out = String::new();
+    for (pc, i) in p.instrs.iter().enumerate() {
+        out.push_str(&format!("{pc:6}: {}\n", disasm(i)));
+    }
+    out
+}
+
+fn vecop_name(op: VecOp) -> &'static str {
+    use VecOp::*;
+    match op {
+        Add => "add", Sub => "sub", Mul => "mul", Scale => "scale", Relu => "relu",
+        Gelu => "gelu", Silu => "silu", Softmax => "softmax", LayerNorm => "layernorm",
+        RmsNorm => "rmsnorm", Rope => "rope", Embed => "embed",
+    }
+}
+
+fn vecop_from(name: &str) -> Option<VecOp> {
+    use VecOp::*;
+    Some(match name {
+        "add" => Add, "sub" => Sub, "mul" => Mul, "scale" => Scale, "relu" => Relu,
+        "gelu" => Gelu, "silu" => Silu, "softmax" => Softmax, "layernorm" => LayerNorm,
+        "rmsnorm" => RmsNorm, "rope" => Rope, "embed" => Embed,
+        _ => return None,
+    })
+}
+
+fn fusedop_name(op: FusedOp) -> &'static str {
+    use FusedOp::*;
+    match op {
+        AddLayerNorm => "add_layernorm",
+        AddRmsNorm => "add_rmsnorm",
+        MulSilu => "mul_silu",
+        ScaleSoftmax => "scale_softmax",
+    }
+}
+
+fn fusedop_from(name: &str) -> Option<FusedOp> {
+    use FusedOp::*;
+    Some(match name {
+        "add_layernorm" => AddLayerNorm,
+        "add_rmsnorm" => AddRmsNorm,
+        "mul_silu" => MulSilu,
+        "scale_softmax" => ScaleSoftmax,
+        _ => return None,
+    })
+}
+
+fn scalarop_name(op: ScalarOp) -> &'static str {
+    use ScalarOp::*;
+    match op {
+        Mov => "mov", Add => "add", Sub => "sub", Mul => "mul", Shl => "shl", Shr => "shr",
+        And => "and", Or => "or",
+    }
+}
+
+fn scalarop_from(name: &str) -> Option<ScalarOp> {
+    use ScalarOp::*;
+    Some(match name {
+        "mov" => Mov, "add" => Add, "sub" => Sub, "mul" => Mul, "shl" => Shl, "shr" => Shr,
+        "and" => And, "or" => Or,
+        _ => return None,
+    })
+}
+
+fn cond_name(c: Cond) -> &'static str {
+    use Cond::*;
+    match c {
+        Eq => "eq", Ne => "ne", Lt => "lt", Ge => "ge",
+    }
+}
+
+fn cond_from(name: &str) -> Option<Cond> {
+    use Cond::*;
+    Some(match name {
+        "eq" => Eq, "ne" => Ne, "lt" => Lt, "ge" => Ge,
+        _ => return None,
+    })
+}
+
+/// Assembly error with line number.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("asm error at line {line}: {msg}")]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+struct LineParser<'a> {
+    toks: Vec<&'a str>,
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> LineParser<'a> {
+    fn new(body: &'a str, line: usize) -> Self {
+        // Tokenize: split on whitespace and commas; keep '->' as a token.
+        let toks = body
+            .split(|c: char| c.is_whitespace() || c == ',')
+            .filter(|t| !t.is_empty())
+            .collect();
+        LineParser { toks, pos: 0, line }
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, AsmError> {
+        Err(AsmError { line: self.line, msg: msg.into() })
+    }
+
+    fn next(&mut self) -> Result<&'a str, AsmError> {
+        let t = self.toks.get(self.pos).copied();
+        self.pos += 1;
+        match t {
+            Some(t) => Ok(t),
+            None => Err(AsmError { line: self.line, msg: "unexpected end of line".into() }),
+        }
+    }
+
+    fn expect(&mut self, tok: &str) -> Result<(), AsmError> {
+        let t = self.next()?;
+        if t == tok {
+            Ok(())
+        } else {
+            self.err(format!("expected '{tok}', got '{t}'"))
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.toks.len()
+    }
+
+    fn num(&mut self) -> Result<u64, AsmError> {
+        let t = self.next()?;
+        parse_u64(t).ok_or(AsmError { line: self.line, msg: format!("invalid number '{t}'") })
+    }
+
+    fn imm(&mut self) -> Result<i32, AsmError> {
+        let t = self.next()?;
+        let v = if let Some(stripped) = t.strip_prefix('-') {
+            parse_u64(stripped).map(|v| -(v as i64))
+        } else {
+            parse_u64(t).map(|v| v as i64)
+        };
+        match v {
+            Some(v) if v >= i32::MIN as i64 && v <= i32::MAX as i64 => Ok(v as i32),
+            _ => self.err(format!("invalid immediate '{t}'")),
+        }
+    }
+
+    fn kv(&mut self, key: &str) -> Result<u64, AsmError> {
+        let t = self.next()?;
+        match t.strip_prefix(key).and_then(|r| r.strip_prefix('=')).and_then(parse_u64) {
+            Some(v) => Ok(v),
+            None => self.err(format!("expected {key}=<num>, got '{t}'")),
+        }
+    }
+
+    fn vreg(&mut self) -> Result<VReg, AsmError> {
+        let t = self.next()?;
+        match t.strip_prefix('v').and_then(|r| r.parse::<u8>().ok()) {
+            Some(r) if r < NUM_VREGS => Ok(r),
+            _ => self.err(format!("invalid vector register '{t}'")),
+        }
+    }
+
+    fn sreg(&mut self) -> Result<SReg, AsmError> {
+        let t = self.next()?;
+        match t.strip_prefix('s').and_then(|r| r.parse::<u8>().ok()) {
+            Some(r) if r < NUM_SREGS => Ok(r),
+            _ => self.err(format!("invalid scalar register '{t}'")),
+        }
+    }
+}
+
+fn parse_u64(t: &str) -> Option<u64> {
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        t.parse().ok()
+    }
+}
+
+/// Assemble a source text into a [`Program`]. Labels (`name:`) may be
+/// used as branch/jump targets; resolution is second-pass.
+pub fn assemble(src: &str) -> Result<Program, AsmError> {
+    // Pass 1: strip comments/labels, record label -> pc.
+    let mut labels: HashMap<String, u32> = HashMap::new();
+    let mut lines: Vec<(usize, String)> = Vec::new(); // (src line, body)
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = lineno + 1;
+        let mut body = raw;
+        if let Some(i) = body.find('#') {
+            body = &body[..i];
+        }
+        let mut body = body.trim();
+        while let Some(colon) = body.find(':') {
+            let (label, rest) = body.split_at(colon);
+            let label = label.trim();
+            if label.is_empty() || !label.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.') {
+                return Err(AsmError { line, msg: format!("invalid label '{label}'") });
+            }
+            if labels.insert(label.to_string(), lines.len() as u32).is_some() {
+                return Err(AsmError { line, msg: format!("duplicate label '{label}'") });
+            }
+            body = rest[1..].trim();
+        }
+        if !body.is_empty() {
+            lines.push((line, body.to_string()));
+        }
+    }
+
+    // Pass 2: parse instructions, resolving labels.
+    let resolve = |p: &mut LineParser, labels: &HashMap<String, u32>| -> Result<u32, AsmError> {
+        let t = p.next()?;
+        if let Some(v) = parse_u64(t) {
+            return Ok(v as u32);
+        }
+        labels
+            .get(t)
+            .copied()
+            .ok_or(AsmError { line: p.line, msg: format!("unknown label '{t}'") })
+    };
+
+    let mut instrs = Vec::with_capacity(lines.len());
+    for (line, body) in &lines {
+        let mut p = LineParser::new(body, *line);
+        let mnemonic = p.next()?;
+        let instr = match mnemonic {
+            "read.embed" => {
+                let addr = p.num()?;
+                p.expect("->")?;
+                let dst = p.vreg()?;
+                let len = p.kv("len")? as u32;
+                Instr::ReadEmbedding { addr, dst, len }
+            }
+            "read.kv" => Instr::ReadKv { addr: p.num()?, len: p.kv("len")? as u32 },
+            "read.params" => Instr::ReadParams { addr: p.num()?, len: p.kv("len")? as u32 },
+            "read.host" => {
+                let addr = p.num()?;
+                p.expect("->")?;
+                let dst = p.vreg()?;
+                let len = p.kv("len")? as u32;
+                Instr::ReadHost { addr, dst, len }
+            }
+            "write.kv" => Instr::WriteKv { addr: p.num()?, len: p.kv("len")? as u32 },
+            "write.host" => {
+                let src = p.vreg()?;
+                p.expect("->")?;
+                let addr = p.num()?;
+                let len = p.kv("len")? as u32;
+                Instr::WriteHost { src, addr, len }
+            }
+            "matmul" => {
+                let src = p.vreg()?;
+                p.expect("->")?;
+                let dst = p.vreg()?;
+                let k = p.kv("k")? as u32;
+                let n = p.kv("n")? as u32;
+                let mut accum = false;
+                let mut to_net = false;
+                let mut from_lmu = false;
+                while !p.done() {
+                    match p.next()? {
+                        "acc" => accum = true,
+                        "net" => to_net = true,
+                        "lmu" => from_lmu = true,
+                        t => return Err(AsmError { line: *line, msg: format!("unknown matmul flag '{t}'") }),
+                    }
+                }
+                Instr::MatMul { src, dst, k, n, accum, to_net, from_lmu }
+            }
+            "sample" => {
+                let src = p.vreg()?;
+                p.expect("->")?;
+                let dst = p.vreg()?;
+                let len = p.kv("len")? as u32;
+                Instr::Sample { src, dst, len }
+            }
+            "transmit" => {
+                let src = p.vreg()?;
+                let len = p.kv("len")? as u32;
+                let hops = p.kv("hops")? as u8;
+                Instr::Transmit { src, len, hops }
+            }
+            "receive" => {
+                let dst = p.vreg()?;
+                let len = p.kv("len")? as u32;
+                let hops = p.kv("hops")? as u8;
+                Instr::Receive { dst, len, hops }
+            }
+            "jump" => Instr::Jump { target: resolve(&mut p, &labels)? },
+            "halt" => Instr::Halt,
+            m => {
+                if let Some(op) = m.strip_prefix("vec.").and_then(vecop_from) {
+                    let a = p.vreg()?;
+                    let b = p.vreg()?;
+                    p.expect("->")?;
+                    let dst = p.vreg()?;
+                    let len = p.kv("len")? as u32;
+                    Instr::VecCompute { op, a, b, dst, len }
+                } else if let Some(op) = m.strip_prefix("fused.").and_then(fusedop_from) {
+                    let a = p.vreg()?;
+                    let b = p.vreg()?;
+                    p.expect("->")?;
+                    let dst = p.vreg()?;
+                    let len = p.kv("len")? as u32;
+                    Instr::VecFused { op, a, b, dst, len }
+                } else if let Some(op) = m.strip_prefix("scalar.").and_then(scalarop_from) {
+                    let dst = p.sreg()?;
+                    let a = p.sreg()?;
+                    let imm = p.imm()?;
+                    Instr::Scalar { op, dst, a, imm }
+                } else if let Some(cond) = m.strip_prefix("branch.").and_then(cond_from) {
+                    let a = p.sreg()?;
+                    let b = p.sreg()?;
+                    let target = resolve(&mut p, &labels)?;
+                    Instr::Branch { cond, a, b, target }
+                } else {
+                    return Err(AsmError { line: *line, msg: format!("unknown mnemonic '{m}'") });
+                }
+            }
+        };
+        if !p.done() {
+            return Err(AsmError { line: *line, msg: "trailing tokens".into() });
+        }
+        instrs.push(instr);
+    }
+    Ok(Program::new(instrs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_basic_program() {
+        let src = r#"
+            # token embedding
+            read.embed 0x1000 -> v1, len=2048
+            read.params 0x2000, len=4096
+            matmul v1 -> v2, k=2048, n=8192, net
+            vec.softmax v2, v0 -> v3, len=8192
+            halt
+        "#;
+        let p = assemble(src).unwrap();
+        assert_eq!(p.len(), 5);
+        assert_eq!(p.instrs[0], Instr::ReadEmbedding { addr: 0x1000, dst: 1, len: 2048 });
+        assert_eq!(
+            p.instrs[2],
+            Instr::MatMul { src: 1, dst: 2, k: 2048, n: 8192, accum: false, to_net: true, from_lmu: false }
+        );
+    }
+
+    #[test]
+    fn labels_resolve_forward_and_backward() {
+        let src = r#"
+            start:
+              scalar.add s1, s1, 1
+              branch.lt s1, s2, start
+              jump end
+              halt          # skipped
+            end:
+              halt
+        "#;
+        let p = assemble(src).unwrap();
+        assert_eq!(p.instrs[1], Instr::Branch { cond: Cond::Lt, a: 1, b: 2, target: 0 });
+        assert_eq!(p.instrs[2], Instr::Jump { target: 4 });
+    }
+
+    #[test]
+    fn duplicate_label_rejected() {
+        let e = assemble("x:\nhalt\nx:\nhalt").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn unknown_label_rejected() {
+        let e = assemble("jump nowhere").unwrap_err();
+        assert!(e.msg.contains("unknown label"));
+    }
+
+    #[test]
+    fn bad_register_rejected_with_line() {
+        let e = assemble("halt\nsample v64 -> v0, len=8").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("invalid vector register"));
+    }
+
+    #[test]
+    fn negative_immediates() {
+        let p = assemble("scalar.sub s3, s4, -100").unwrap();
+        assert_eq!(p.instrs[0], Instr::Scalar { op: ScalarOp::Sub, dst: 3, a: 4, imm: -100 });
+    }
+
+    #[test]
+    fn disasm_assemble_roundtrip() {
+        // Every sample instruction must survive disasm -> assemble.
+        let instrs = vec![
+            Instr::ReadEmbedding { addr: 0x99, dst: 3, len: 64 },
+            Instr::ReadKv { addr: 0xAB, len: 128 },
+            Instr::ReadParams { addr: 0, len: 1 },
+            Instr::ReadHost { addr: 8, dst: 0, len: 4 },
+            Instr::WriteKv { addr: 16, len: 256 },
+            Instr::WriteHost { src: 2, addr: 0x40, len: 50 },
+            Instr::MatMul { src: 1, dst: 2, k: 64, n: 128, accum: true, to_net: false, from_lmu: true },
+            Instr::MatMul { src: 0, dst: 63, k: 9216, n: 50272, accum: false, to_net: true, from_lmu: false },
+            Instr::VecCompute { op: VecOp::Rope, a: 1, b: 2, dst: 1, len: 64 },
+            Instr::VecFused { op: FusedOp::MulSilu, a: 4, b: 5, dst: 6, len: 1024 },
+            Instr::Sample { src: 9, dst: 10, len: 50272 },
+            Instr::Transmit { src: 1, len: 512, hops: 2 },
+            Instr::Receive { dst: 1, len: 512, hops: 6 },
+            Instr::Scalar { op: ScalarOp::Shl, dst: 0, a: 1, imm: 4 },
+            Instr::Branch { cond: Cond::Ge, a: 2, b: 3, target: 7 },
+            Instr::Jump { target: 0 },
+            Instr::Halt,
+        ];
+        let p = Program::new(instrs);
+        let text = disasm_program(&p);
+        // Strip the `pc:` prefixes disasm_program adds.
+        let body: String = text
+            .lines()
+            .map(|l| l.splitn(2, ": ").nth(1).unwrap())
+            .collect::<Vec<_>>()
+            .join("\n");
+        let back = assemble(&body).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn trailing_tokens_rejected() {
+        let e = assemble("halt now").unwrap_err();
+        assert!(e.msg.contains("trailing"));
+    }
+}

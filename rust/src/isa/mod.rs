@@ -1,0 +1,771 @@
+//! The LPU instruction set architecture (paper Table 1).
+//!
+//! Four instruction categories:
+//! * **MEM** — SMA DMA: read embedding/KV/parameters, host I/O, KV write.
+//! * **COMP** — SXE matrix computation, VXE vector / fused-vector
+//!   computation, sampling-with-sort.
+//! * **NET** — ESL transmit/receive of partial results.
+//! * **CTRL** — ICP scalar ALU, branch, jump (+ halt).
+//!
+//! Instructions encode to a fixed 128-bit word ([`Instr::encode`] /
+//! [`Instr::decode`]); [`asm`] provides a two-pass assembler and a
+//! disassembler over the same types. The cycle simulator executes these
+//! exact decoded forms — there is no separate "simulator IR".
+
+pub mod asm;
+
+use thiserror::Error;
+
+/// Vector register in the LMU (paper: multi-bank register file).
+pub type VReg = u8;
+/// Scalar register in the ICP.
+pub type SReg = u8;
+
+pub const NUM_VREGS: u8 = 64;
+pub const NUM_SREGS: u8 = 32;
+
+/// VXE vector operation repertoire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VecOp {
+    Add,
+    Sub,
+    Mul,
+    /// Scale by scalar register.
+    Scale,
+    Relu,
+    Gelu,
+    Silu,
+    Softmax,
+    LayerNorm,
+    RmsNorm,
+    /// Rotary positional embedding (SXE special function per paper; issued
+    /// through the vector path).
+    Rope,
+    /// Token + positional embedding combine.
+    Embed,
+}
+
+/// Fused VXE ops (paper: "Vector Fusion Computation") — one issue, two
+/// dependent vector primitives, saving a writeback round-trip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FusedOp {
+    /// residual add + layernorm
+    AddLayerNorm,
+    /// residual add + rmsnorm
+    AddRmsNorm,
+    /// elementwise mul + silu gate (SwiGLU)
+    MulSilu,
+    /// scale + softmax (attention score path)
+    ScaleSoftmax,
+}
+
+/// ICP scalar ALU ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScalarOp {
+    Mov,
+    Add,
+    Sub,
+    Mul,
+    Shl,
+    Shr,
+    And,
+    Or,
+}
+
+/// Branch conditions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+}
+
+/// One LPU instruction (decoded form).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    // ---- MEM ----
+    /// HBM → LMU: embedding row (token/positional) into a vector register.
+    ReadEmbedding { addr: u64, dst: VReg, len: u32 },
+    /// HBM → SMA stream: Key/Value tiles for attention.
+    ReadKv { addr: u64, len: u32 },
+    /// HBM → SMA stream: weight/bias/γβ parameters.
+    ReadParams { addr: u64, len: u32 },
+    /// Host → LMU (input token ids / control data).
+    ReadHost { addr: u64, dst: VReg, len: u32 },
+    /// SMA → HBM: append current K/V to cache.
+    WriteKv { addr: u64, len: u32 },
+    /// LMU → Host (output logits / token).
+    WriteHost { src: VReg, addr: u64, len: u32 },
+    // ---- COMP ----
+    /// SXE vector–matrix multiply: x in `src` (len k), streamed weights
+    /// from SMA, n output columns; result to `dst`. `to_net` routes the
+    /// partial products to the ESL TX buffer instead of the LMU (the ESL
+    /// dataflow of Fig 4a); `accum` adds into existing psums; `from_lmu`
+    /// takes the second operand from the LMU instead of an SMA stream
+    /// (attention on cached tiles, and the batch/multi-token
+    /// parameter-reuse modes where one stream feeds several MatMuls).
+    MatMul { src: VReg, dst: VReg, k: u32, n: u32, accum: bool, to_net: bool, from_lmu: bool },
+    /// VXE vector computation.
+    VecCompute { op: VecOp, a: VReg, b: VReg, dst: VReg, len: u32 },
+    /// VXE fused computation.
+    VecFused { op: FusedOp, a: VReg, b: VReg, dst: VReg, len: u32 },
+    /// VXE sampler: sort logits in `src`, sample with params from scalar
+    /// regs, token id to `dst`.
+    Sample { src: VReg, dst: VReg, len: u32 },
+    // ---- NET ----
+    /// ESL transmit `len` elements from `src` to peer `hops` away.
+    Transmit { src: VReg, len: u32, hops: u8 },
+    /// ESL receive into `dst`.
+    Receive { dst: VReg, len: u32, hops: u8 },
+    // ---- CTRL ----
+    /// Scalar ALU with immediate: dst = a <op> (b | imm).
+    Scalar { op: ScalarOp, dst: SReg, a: SReg, imm: i32 },
+    /// Conditional branch: if (a <cond> b) pc = target.
+    Branch { cond: Cond, a: SReg, b: SReg, target: u32 },
+    /// Unconditional jump.
+    Jump { target: u32 },
+    /// End of program.
+    Halt,
+}
+
+/// Functional-unit category (Table 1 row groups) — also the instruction-
+/// chaining group key used by the compiler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    Mem,
+    Comp,
+    Net,
+    Ctrl,
+}
+
+impl Instr {
+    pub fn category(&self) -> Category {
+        use Instr::*;
+        match self {
+            ReadEmbedding { .. } | ReadKv { .. } | ReadParams { .. } | ReadHost { .. }
+            | WriteKv { .. } | WriteHost { .. } => Category::Mem,
+            MatMul { .. } | VecCompute { .. } | VecFused { .. } | Sample { .. } => Category::Comp,
+            Transmit { .. } | Receive { .. } => Category::Net,
+            Scalar { .. } | Branch { .. } | Jump { .. } | Halt => Category::Ctrl,
+        }
+    }
+
+    /// Does this instruction execute on the SXE (vs VXE) within COMP?
+    pub fn is_sxe(&self) -> bool {
+        matches!(self, Instr::MatMul { .. })
+    }
+}
+
+/// Encoding error.
+#[derive(Debug, Error, PartialEq)]
+pub enum IsaError {
+    #[error("field '{field}' value {value} exceeds {bits}-bit encoding")]
+    FieldOverflow { field: &'static str, value: u64, bits: u32 },
+    #[error("invalid opcode {0:#04x}")]
+    BadOpcode(u8),
+    #[error("invalid sub-op {subop} for opcode {opcode:#04x}")]
+    BadSubOp { opcode: u8, subop: u8 },
+    #[error("register {reg} out of range (max {max})")]
+    BadReg { reg: u8, max: u8 },
+}
+
+// Opcode map (stable ABI for program binaries).
+const OP_READ_EMBED: u8 = 0x01;
+const OP_READ_KV: u8 = 0x02;
+const OP_READ_PARAMS: u8 = 0x03;
+const OP_READ_HOST: u8 = 0x04;
+const OP_WRITE_KV: u8 = 0x05;
+const OP_WRITE_HOST: u8 = 0x06;
+const OP_MATMUL: u8 = 0x10;
+const OP_VEC: u8 = 0x11;
+const OP_FUSED: u8 = 0x12;
+const OP_SAMPLE: u8 = 0x13;
+const OP_TRANSMIT: u8 = 0x20;
+const OP_RECEIVE: u8 = 0x21;
+const OP_SCALAR: u8 = 0x30;
+const OP_BRANCH: u8 = 0x31;
+const OP_JUMP: u8 = 0x32;
+const OP_HALT: u8 = 0x3F;
+
+/// 128-bit word layout (little-endian field order):
+///   [ 0: 8)  opcode
+///   [ 8:16)  sub-op / flags
+///   [16:24)  r0
+///   [24:32)  r1
+///   [32:40)  r2
+///   [40:88)  addr / target / imm (48 bits)
+///   [88:112) len / k (24 bits)
+///   [112:128) aux / n / hops (16 bits... see NOTE)
+/// NOTE: `n` for MatMul can exceed 64K (vocab logits on one device), so
+/// MatMul uses addr bits [40:72) for n instead. Each variant documents
+/// its packing below; decode is the single source of truth.
+const ADDR_BITS: u32 = 48;
+const LEN_BITS: u32 = 24;
+const AUX_BITS: u32 = 16;
+
+fn check(field: &'static str, value: u64, bits: u32) -> Result<u64, IsaError> {
+    if bits < 64 && value >= (1u64 << bits) {
+        Err(IsaError::FieldOverflow { field, value, bits })
+    } else {
+        Ok(value)
+    }
+}
+
+fn check_vreg(reg: u8) -> Result<u8, IsaError> {
+    if reg >= NUM_VREGS { Err(IsaError::BadReg { reg, max: NUM_VREGS - 1 }) } else { Ok(reg) }
+}
+
+fn check_sreg(reg: u8) -> Result<u8, IsaError> {
+    if reg >= NUM_SREGS { Err(IsaError::BadReg { reg, max: NUM_SREGS - 1 }) } else { Ok(reg) }
+}
+
+/// MEM instructions carry 32-bit element lengths: low 24 bits in the
+/// `len` field, high 8 bits in `aux`.
+fn mem_len_split(len: u32) -> (u64, u64) {
+    ((len & 0xFF_FFFF) as u64, (len >> 24) as u64)
+}
+
+fn mem_len_join(len: u32, aux: u16) -> u32 {
+    len | ((aux as u32 & 0xFF) << 24)
+}
+
+struct Word(u128);
+
+impl Word {
+    fn new(op: u8) -> Word {
+        Word(op as u128)
+    }
+    fn sub(mut self, v: u8) -> Word {
+        self.0 |= (v as u128) << 8;
+        self
+    }
+    fn r0(mut self, v: u8) -> Word {
+        self.0 |= (v as u128) << 16;
+        self
+    }
+    fn r1(mut self, v: u8) -> Word {
+        self.0 |= (v as u128) << 24;
+        self
+    }
+    fn r2(mut self, v: u8) -> Word {
+        self.0 |= (v as u128) << 32;
+        self
+    }
+    fn addr(mut self, v: u64) -> Word {
+        self.0 |= (v as u128) << 40;
+        self
+    }
+    fn len(mut self, v: u64) -> Word {
+        self.0 |= (v as u128) << 88;
+        self
+    }
+    fn aux(mut self, v: u64) -> Word {
+        self.0 |= (v as u128) << 112;
+        self
+    }
+}
+
+fn f_op(w: u128) -> u8 {
+    (w & 0xFF) as u8
+}
+fn f_sub(w: u128) -> u8 {
+    ((w >> 8) & 0xFF) as u8
+}
+fn f_r0(w: u128) -> u8 {
+    ((w >> 16) & 0xFF) as u8
+}
+fn f_r1(w: u128) -> u8 {
+    ((w >> 24) & 0xFF) as u8
+}
+fn f_r2(w: u128) -> u8 {
+    ((w >> 32) & 0xFF) as u8
+}
+fn f_addr(w: u128) -> u64 {
+    ((w >> 40) & ((1u128 << ADDR_BITS) - 1)) as u64
+}
+fn f_len(w: u128) -> u32 {
+    ((w >> 88) & ((1u128 << LEN_BITS) - 1)) as u32
+}
+fn f_aux(w: u128) -> u16 {
+    ((w >> 112) & ((1u128 << AUX_BITS) - 1)) as u16
+}
+
+impl VecOp {
+    fn to_u8(self) -> u8 {
+        use VecOp::*;
+        match self {
+            Add => 0, Sub => 1, Mul => 2, Scale => 3, Relu => 4, Gelu => 5, Silu => 6,
+            Softmax => 7, LayerNorm => 8, RmsNorm => 9, Rope => 10, Embed => 11,
+        }
+    }
+    fn from_u8(v: u8) -> Option<VecOp> {
+        use VecOp::*;
+        Some(match v {
+            0 => Add, 1 => Sub, 2 => Mul, 3 => Scale, 4 => Relu, 5 => Gelu, 6 => Silu,
+            7 => Softmax, 8 => LayerNorm, 9 => RmsNorm, 10 => Rope, 11 => Embed,
+            _ => return None,
+        })
+    }
+}
+
+impl FusedOp {
+    fn to_u8(self) -> u8 {
+        use FusedOp::*;
+        match self {
+            AddLayerNorm => 0, AddRmsNorm => 1, MulSilu => 2, ScaleSoftmax => 3,
+        }
+    }
+    fn from_u8(v: u8) -> Option<FusedOp> {
+        use FusedOp::*;
+        Some(match v {
+            0 => AddLayerNorm, 1 => AddRmsNorm, 2 => MulSilu, 3 => ScaleSoftmax,
+            _ => return None,
+        })
+    }
+}
+
+impl ScalarOp {
+    fn to_u8(self) -> u8 {
+        use ScalarOp::*;
+        match self {
+            Mov => 0, Add => 1, Sub => 2, Mul => 3, Shl => 4, Shr => 5, And => 6, Or => 7,
+        }
+    }
+    fn from_u8(v: u8) -> Option<ScalarOp> {
+        use ScalarOp::*;
+        Some(match v {
+            0 => Mov, 1 => Add, 2 => Sub, 3 => Mul, 4 => Shl, 5 => Shr, 6 => And, 7 => Or,
+            _ => return None,
+        })
+    }
+}
+
+impl Cond {
+    fn to_u8(self) -> u8 {
+        use Cond::*;
+        match self {
+            Eq => 0, Ne => 1, Lt => 2, Ge => 3,
+        }
+    }
+    fn from_u8(v: u8) -> Option<Cond> {
+        use Cond::*;
+        Some(match v {
+            0 => Eq, 1 => Ne, 2 => Lt, 3 => Ge,
+            _ => return None,
+        })
+    }
+}
+
+impl Instr {
+    /// Encode to the 128-bit binary word.
+    pub fn encode(&self) -> Result<u128, IsaError> {
+        use Instr::*;
+        Ok(match *self {
+            ReadEmbedding { addr, dst, len } => {
+                let (lo, hi) = mem_len_split(len);
+                Word::new(OP_READ_EMBED)
+                    .r0(check_vreg(dst)?)
+                    .addr(check("addr", addr, ADDR_BITS)?)
+                    .len(lo)
+                    .aux(hi)
+                    .0
+            }
+            ReadKv { addr, len } => {
+                let (lo, hi) = mem_len_split(len);
+                Word::new(OP_READ_KV).addr(check("addr", addr, ADDR_BITS)?).len(lo).aux(hi).0
+            }
+            ReadParams { addr, len } => {
+                let (lo, hi) = mem_len_split(len);
+                Word::new(OP_READ_PARAMS).addr(check("addr", addr, ADDR_BITS)?).len(lo).aux(hi).0
+            }
+            ReadHost { addr, dst, len } => {
+                let (lo, hi) = mem_len_split(len);
+                Word::new(OP_READ_HOST)
+                    .r0(check_vreg(dst)?)
+                    .addr(check("addr", addr, ADDR_BITS)?)
+                    .len(lo)
+                    .aux(hi)
+                    .0
+            }
+            WriteKv { addr, len } => {
+                let (lo, hi) = mem_len_split(len);
+                Word::new(OP_WRITE_KV).addr(check("addr", addr, ADDR_BITS)?).len(lo).aux(hi).0
+            }
+            WriteHost { src, addr, len } => {
+                let (lo, hi) = mem_len_split(len);
+                Word::new(OP_WRITE_HOST)
+                    .r0(check_vreg(src)?)
+                    .addr(check("addr", addr, ADDR_BITS)?)
+                    .len(lo)
+                    .aux(hi)
+                    .0
+            }
+            MatMul { src, dst, k, n, accum, to_net, from_lmu } => Word::new(OP_MATMUL)
+                .sub((accum as u8) | ((to_net as u8) << 1) | ((from_lmu as u8) << 2))
+                .r0(check_vreg(src)?)
+                .r1(check_vreg(dst)?)
+                .addr(check("n", n as u64, 32)?) // n in low addr bits
+                .len(check("k", k as u64, LEN_BITS)?)
+                .0,
+            VecCompute { op, a, b, dst, len } => Word::new(OP_VEC)
+                .sub(op.to_u8())
+                .r0(check_vreg(a)?)
+                .r1(check_vreg(b)?)
+                .r2(check_vreg(dst)?)
+                .len(check("len", len as u64, LEN_BITS)?)
+                .0,
+            VecFused { op, a, b, dst, len } => Word::new(OP_FUSED)
+                .sub(op.to_u8())
+                .r0(check_vreg(a)?)
+                .r1(check_vreg(b)?)
+                .r2(check_vreg(dst)?)
+                .len(check("len", len as u64, LEN_BITS)?)
+                .0,
+            Sample { src, dst, len } => Word::new(OP_SAMPLE)
+                .r0(check_vreg(src)?)
+                .r1(check_vreg(dst)?)
+                .len(check("len", len as u64, LEN_BITS)?)
+                .0,
+            Transmit { src, len, hops } => Word::new(OP_TRANSMIT)
+                .r0(check_vreg(src)?)
+                .len(check("len", len as u64, LEN_BITS)?)
+                .aux(check("hops", hops as u64, AUX_BITS)?)
+                .0,
+            Receive { dst, len, hops } => Word::new(OP_RECEIVE)
+                .r0(check_vreg(dst)?)
+                .len(check("len", len as u64, LEN_BITS)?)
+                .aux(check("hops", hops as u64, AUX_BITS)?)
+                .0,
+            Scalar { op, dst, a, imm } => Word::new(OP_SCALAR)
+                .sub(op.to_u8())
+                .r0(check_sreg(dst)?)
+                .r1(check_sreg(a)?)
+                .addr(imm as u32 as u64) // 32-bit imm, sign handled on decode
+                .0,
+            Branch { cond, a, b, target } => Word::new(OP_BRANCH)
+                .sub(cond.to_u8())
+                .r0(check_sreg(a)?)
+                .r1(check_sreg(b)?)
+                .addr(check("target", target as u64, 32)?)
+                .0,
+            Jump { target } => Word::new(OP_JUMP).addr(check("target", target as u64, 32)?).0,
+            Halt => Word::new(OP_HALT).0,
+        })
+    }
+
+    /// Decode a 128-bit word.
+    pub fn decode(w: u128) -> Result<Instr, IsaError> {
+        use Instr::*;
+        let op = f_op(w);
+        Ok(match op {
+            OP_READ_EMBED => {
+                ReadEmbedding { addr: f_addr(w), dst: f_r0(w), len: mem_len_join(f_len(w), f_aux(w)) }
+            }
+            OP_READ_KV => ReadKv { addr: f_addr(w), len: mem_len_join(f_len(w), f_aux(w)) },
+            OP_READ_PARAMS => ReadParams { addr: f_addr(w), len: mem_len_join(f_len(w), f_aux(w)) },
+            OP_READ_HOST => {
+                ReadHost { addr: f_addr(w), dst: f_r0(w), len: mem_len_join(f_len(w), f_aux(w)) }
+            }
+            OP_WRITE_KV => WriteKv { addr: f_addr(w), len: mem_len_join(f_len(w), f_aux(w)) },
+            OP_WRITE_HOST => {
+                WriteHost { src: f_r0(w), addr: f_addr(w), len: mem_len_join(f_len(w), f_aux(w)) }
+            }
+            OP_MATMUL => MatMul {
+                src: f_r0(w),
+                dst: f_r1(w),
+                k: f_len(w),
+                n: f_addr(w) as u32,
+                accum: f_sub(w) & 1 != 0,
+                to_net: f_sub(w) & 2 != 0,
+                from_lmu: f_sub(w) & 4 != 0,
+            },
+            OP_VEC => VecCompute {
+                op: VecOp::from_u8(f_sub(w)).ok_or(IsaError::BadSubOp { opcode: op, subop: f_sub(w) })?,
+                a: f_r0(w),
+                b: f_r1(w),
+                dst: f_r2(w),
+                len: f_len(w),
+            },
+            OP_FUSED => VecFused {
+                op: FusedOp::from_u8(f_sub(w)).ok_or(IsaError::BadSubOp { opcode: op, subop: f_sub(w) })?,
+                a: f_r0(w),
+                b: f_r1(w),
+                dst: f_r2(w),
+                len: f_len(w),
+            },
+            OP_SAMPLE => Sample { src: f_r0(w), dst: f_r1(w), len: f_len(w) },
+            OP_TRANSMIT => Transmit { src: f_r0(w), len: f_len(w), hops: f_aux(w) as u8 },
+            OP_RECEIVE => Receive { dst: f_r0(w), len: f_len(w), hops: f_aux(w) as u8 },
+            OP_SCALAR => Scalar {
+                op: ScalarOp::from_u8(f_sub(w)).ok_or(IsaError::BadSubOp { opcode: op, subop: f_sub(w) })?,
+                dst: f_r0(w),
+                a: f_r1(w),
+                imm: f_addr(w) as u32 as i32,
+            },
+            OP_BRANCH => Branch {
+                cond: Cond::from_u8(f_sub(w)).ok_or(IsaError::BadSubOp { opcode: op, subop: f_sub(w) })?,
+                a: f_r0(w),
+                b: f_r1(w),
+                target: f_addr(w) as u32,
+            },
+            OP_JUMP => Jump { target: f_addr(w) as u32 },
+            OP_HALT => Halt,
+            bad => return Err(IsaError::BadOpcode(bad)),
+        })
+    }
+}
+
+/// A program binary: the unit HyperDex emits and the ICP fetches.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    pub fn new(instrs: Vec<Instr>) -> Program {
+        Program { instrs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Serialize to the on-disk binary format: magic, version, count,
+    /// then little-endian 128-bit words.
+    pub fn to_bytes(&self) -> Result<Vec<u8>, IsaError> {
+        let mut out = Vec::with_capacity(16 + self.instrs.len() * 16);
+        out.extend_from_slice(b"LPUB");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(self.instrs.len() as u64).to_le_bytes());
+        for i in &self.instrs {
+            out.extend_from_slice(&i.encode()?.to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Program, String> {
+        if bytes.len() < 16 || &bytes[..4] != b"LPUB" {
+            return Err("not an LPU program binary".into());
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != 1 {
+            return Err(format!("unsupported binary version {version}"));
+        }
+        let count = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        if bytes.len() != 16 + count * 16 {
+            return Err(format!("truncated binary: expected {count} instrs"));
+        }
+        let mut instrs = Vec::with_capacity(count);
+        for c in bytes[16..].chunks_exact(16) {
+            let w = u128::from_le_bytes(c.try_into().unwrap());
+            instrs.push(Instr::decode(w).map_err(|e| e.to_string())?);
+        }
+        Ok(Program { instrs })
+    }
+
+    /// Count instructions per Table-1 category.
+    pub fn category_histogram(&self) -> [(Category, usize); 4] {
+        let mut counts = [0usize; 4];
+        for i in &self.instrs {
+            counts[match i.category() {
+                Category::Mem => 0,
+                Category::Comp => 1,
+                Category::Net => 2,
+                Category::Ctrl => 3,
+            }] += 1;
+        }
+        [
+            (Category::Mem, counts[0]),
+            (Category::Comp, counts[1]),
+            (Category::Net, counts[2]),
+            (Category::Ctrl, counts[3]),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::quick;
+    use crate::util::rng::Rng;
+
+    fn sample_instrs() -> Vec<Instr> {
+        use Instr::*;
+        vec![
+            ReadEmbedding { addr: 0x1234_5678_9A, dst: 3, len: 2048 },
+            ReadKv { addr: 0xFFFF_FFFF, len: 4096 },
+            ReadParams { addr: 0, len: 1 },
+            ReadHost { addr: 64, dst: 0, len: 32 },
+            WriteKv { addr: 0xABC0, len: 8192 },
+            WriteHost { src: 63, addr: 0x10, len: 50272 },
+            MatMul { src: 1, dst: 2, k: 9216, n: 36864, accum: false, to_net: true, from_lmu: false },
+            MatMul { src: 0, dst: 0, k: 64, n: 1, accum: true, to_net: false, from_lmu: true },
+            VecCompute { op: VecOp::Softmax, a: 5, b: 0, dst: 5, len: 2049 },
+            VecCompute { op: VecOp::LayerNorm, a: 1, b: 2, dst: 3, len: 8192 },
+            VecFused { op: FusedOp::AddLayerNorm, a: 1, b: 2, dst: 3, len: 4096 },
+            Sample { src: 10, dst: 11, len: 50272 },
+            Transmit { src: 7, len: 1152, hops: 3 },
+            Receive { dst: 8, len: 1152, hops: 7 },
+            Scalar { op: ScalarOp::Add, dst: 1, a: 2, imm: -12345 },
+            Scalar { op: ScalarOp::Mov, dst: 0, a: 0, imm: i32::MAX },
+            Branch { cond: Cond::Lt, a: 3, b: 4, target: 100 },
+            Jump { target: 0 },
+            Halt,
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_variants() {
+        for i in sample_instrs() {
+            let w = i.encode().unwrap();
+            assert_eq!(Instr::decode(w).unwrap(), i, "roundtrip failed for {i:?}");
+        }
+    }
+
+    #[test]
+    fn field_overflow_rejected() {
+        let e = Instr::ReadParams { addr: 1 << 48, len: 0 }.encode().unwrap_err();
+        assert!(matches!(e, IsaError::FieldOverflow { field: "addr", .. }));
+        // MEM lengths are 32-bit (len+aux split): a >2^24 length must
+        // round-trip, not overflow.
+        let big = Instr::ReadKv { addr: 0, len: 200_000_000 };
+        assert_eq!(Instr::decode(big.encode().unwrap()).unwrap(), big);
+    }
+
+    #[test]
+    fn bad_register_rejected() {
+        let e = Instr::Sample { src: 64, dst: 0, len: 8 }.encode().unwrap_err();
+        assert!(matches!(e, IsaError::BadReg { reg: 64, .. }));
+        let e = Instr::Scalar { op: ScalarOp::Mov, dst: 32, a: 0, imm: 0 }.encode().unwrap_err();
+        assert!(matches!(e, IsaError::BadReg { reg: 32, max: 31 }));
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        assert_eq!(Instr::decode(0xEE), Err(IsaError::BadOpcode(0xEE)));
+        // Valid opcode, invalid sub-op.
+        let w = Word::new(OP_VEC).sub(200).0;
+        assert!(matches!(Instr::decode(w), Err(IsaError::BadSubOp { .. })));
+    }
+
+    #[test]
+    fn categories_match_table1() {
+        use Category::*;
+        let expected = [
+            Mem, Mem, Mem, Mem, Mem, Mem, Comp, Comp, Comp, Comp, Comp, Comp, Net, Net,
+            Ctrl, Ctrl, Ctrl, Ctrl, Ctrl,
+        ];
+        for (i, cat) in sample_instrs().iter().zip(expected) {
+            assert_eq!(i.category(), cat, "{i:?}");
+        }
+    }
+
+    #[test]
+    fn program_binary_roundtrip() {
+        let p = Program::new(sample_instrs());
+        let bytes = p.to_bytes().unwrap();
+        assert_eq!(&bytes[..4], b"LPUB");
+        let back = Program::from_bytes(&bytes).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn program_binary_rejects_corruption() {
+        let p = Program::new(sample_instrs());
+        let mut bytes = p.to_bytes().unwrap();
+        bytes.truncate(bytes.len() - 1);
+        assert!(Program::from_bytes(&bytes).is_err());
+        assert!(Program::from_bytes(b"NOPE").is_err());
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let p = Program::new(sample_instrs());
+        let h = p.category_histogram();
+        assert_eq!(h[0], (Category::Mem, 6));
+        assert_eq!(h[1], (Category::Comp, 6));
+        assert_eq!(h[2], (Category::Net, 2));
+        assert_eq!(h[3], (Category::Ctrl, 5));
+    }
+
+    fn random_instr(rng: &mut Rng) -> Instr {
+        use Instr::*;
+        let vreg = |r: &mut Rng| r.range(0, 64) as u8;
+        let sreg = |r: &mut Rng| r.range(0, 32) as u8;
+        let len = |r: &mut Rng| r.range_u64(0, 1 << 24) as u32; // COMP k stays 24-bit
+        let mlen = |r: &mut Rng| r.next_u32(); // MEM lens are full 32-bit
+        let addr = |r: &mut Rng| r.range_u64(0, 1 << 48);
+        match rng.range(0, 14) {
+            0 => ReadEmbedding { addr: addr(rng), dst: vreg(rng), len: mlen(rng) },
+            1 => ReadKv { addr: addr(rng), len: mlen(rng) },
+            2 => ReadParams { addr: addr(rng), len: mlen(rng) },
+            3 => WriteKv { addr: addr(rng), len: mlen(rng) },
+            4 => WriteHost { src: vreg(rng), addr: addr(rng), len: mlen(rng) },
+            5 => MatMul {
+                src: vreg(rng),
+                dst: vreg(rng),
+                k: len(rng),
+                n: rng.next_u32(),
+                accum: rng.bool(0.5),
+                to_net: rng.bool(0.5),
+                from_lmu: rng.bool(0.5),
+            },
+            6 => VecCompute {
+                op: VecOp::from_u8(rng.range(0, 12) as u8).unwrap(),
+                a: vreg(rng),
+                b: vreg(rng),
+                dst: vreg(rng),
+                len: len(rng),
+            },
+            7 => VecFused {
+                op: FusedOp::from_u8(rng.range(0, 4) as u8).unwrap(),
+                a: vreg(rng),
+                b: vreg(rng),
+                dst: vreg(rng),
+                len: len(rng),
+            },
+            8 => Sample { src: vreg(rng), dst: vreg(rng), len: len(rng) },
+            9 => Transmit { src: vreg(rng), len: len(rng), hops: rng.range(0, 256) as u8 },
+            10 => Receive { dst: vreg(rng), len: len(rng), hops: rng.range(0, 256) as u8 },
+            11 => Scalar {
+                op: ScalarOp::from_u8(rng.range(0, 8) as u8).unwrap(),
+                dst: sreg(rng),
+                a: sreg(rng),
+                imm: rng.next_u32() as i32,
+            },
+            12 => Branch {
+                cond: Cond::from_u8(rng.range(0, 4) as u8).unwrap(),
+                a: sreg(rng),
+                b: sreg(rng),
+                target: rng.next_u32(),
+            },
+            _ => if rng.bool(0.5) { Jump { target: rng.next_u32() } } else { Halt },
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_random_instructions() {
+        quick("isa-roundtrip", |rng| {
+            let i = random_instr(rng);
+            let w = i.encode().map_err(|e| format!("{i:?}: {e}"))?;
+            let back = Instr::decode(w).map_err(|e| format!("{i:?}: {e}"))?;
+            if back == i { Ok(()) } else { Err(format!("{i:?} -> {back:?}")) }
+        });
+    }
+
+    #[test]
+    fn prop_program_bytes_roundtrip() {
+        quick("program-bytes-roundtrip", |rng| {
+            let n = rng.range(0, 64);
+            let p = Program::new((0..n).map(|_| random_instr(rng)).collect());
+            let back = Program::from_bytes(&p.to_bytes().map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+            if back == p { Ok(()) } else { Err("program mismatch".into()) }
+        });
+    }
+}

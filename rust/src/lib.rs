@@ -1,0 +1,48 @@
+//! # LPU — Latency Processing Unit (full-system reproduction)
+//!
+//! This crate reproduces HyperAccel's LPU (IEEE Micro 2024): a
+//! latency-optimized, highly scalable processor for large language model
+//! inference, together with every substrate the paper depends on:
+//!
+//! * [`isa`] — the custom LPU instruction set (Table 1) with an
+//!   assembler/disassembler and binary encoding.
+//! * [`hbm`] — an HBM3 timing model (the paper integrates ramulator; we
+//!   implement an equivalent channel/bank/burst-timing simulator).
+//! * [`sim`] — the cycle-accurate LPU core simulator: SMA, OIU, SXE
+//!   (MAC trees), VXE, ICP (scoreboard + out-of-order dispatch), LMU.
+//! * [`esl`] — the Expandable Synchronization Link: ring P2P interconnect
+//!   with compute/communication overlap and reconfigurable 2/4/8-device
+//!   rings.
+//! * [`compiler`] — the HyperDex compilation layer: model & memory mapper,
+//!   instruction generator, register allocator, instruction chaining.
+//! * [`model`] — LLM architecture descriptions (OPT/GPT/Llama families)
+//!   and parameter/FLOP/byte accounting.
+//! * [`gpu`] — analytical GPU baselines (H100/A100/L4) calibrated to the
+//!   paper's measured utilization/power, incl. the NVLink sync model.
+//! * [`power`] — ASIC area/power model reproducing Figure 6(a).
+//! * [`runtime`] — PJRT-backed functional execution: loads the AOT-lowered
+//!   JAX/Pallas decoder artifacts and runs real token generation.
+//! * [`coordinator`] — the serving layer: request router, scheduler,
+//!   session/KV management, device pool, streaming token output.
+//! * [`server`] — a minimal threaded TCP/JSON-line server + client.
+//! * [`numerics`] — bit-accurate FP16 and the MAC-tree arithmetic model.
+//! * [`util`] — in-tree substrates: JSON, PRNG, stats, mini property
+//!   testing, bench harness (offline environment: no external crates).
+
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod esl;
+pub mod gpu;
+pub mod hbm;
+pub mod isa;
+pub mod model;
+pub mod numerics;
+pub mod power;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+
+pub use config::LpuConfig;
+pub use model::ModelConfig;

@@ -1,0 +1,308 @@
+//! `lpu` — command-line launcher for the LPU reproduction.
+//!
+//! Subcommands mirror the deployment workflow: compile a model with the
+//! HyperDex stack, simulate latency/scaling on the cycle-accurate
+//! simulator, estimate chip area/power, serve real tokens over TCP via
+//! the PJRT runtime, and poke a running server as a client.
+
+use std::sync::Arc;
+
+use lpu::compiler::{compile, CompileOpts, ParallelMode};
+use lpu::config::LpuConfig;
+use lpu::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SchedulerPolicy};
+use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
+use lpu::isa::asm;
+use lpu::model::by_name;
+use lpu::power::{chip_estimate, system_power_w};
+use lpu::runtime::{default_artifacts_dir, Engine};
+use lpu::server;
+use lpu::sim::simulate_generation;
+use lpu::util::cli::{render_help, Args, Command};
+use lpu::util::table::Table;
+
+const COMMANDS: &[Command] = &[
+    Command { name: "simulate", about: "cycle-accurate decode-latency simulation", usage: "--model opt-1.3b [--devices 1] [--config asic] [--in 32] [--out 2016] [--no-overlap]" },
+    Command { name: "scaling", about: "strong-scaling sweep over 1..N devices", usage: "--model gpt3-20b [--max 8]" },
+    Command { name: "compile", about: "HyperDex compile; prints stats, optionally dumps asm/binary", usage: "--model opt-1.3b [--devices 1] [--pos 0] [--emit-asm] [--out prog.lpubin]" },
+    Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
+    Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
+    Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2]" },
+    Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
+    Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100]" },
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{}", render_help("lpu", "latency processing unit toolkit", COMMANDS));
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    if args.flag("help") {
+        print!("{}", render_help("lpu", "latency processing unit toolkit", COMMANDS));
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "scaling" => cmd_scaling(&args),
+        "compile" => cmd_compile(&args),
+        "asm" => cmd_asm(&args),
+        "disasm" => cmd_disasm(&args),
+        "chip" => cmd_chip(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "validate" => cmd_validate(&args),
+        "loadtest" => cmd_loadtest(&args),
+        other => {
+            print!("{}", render_help("lpu", "latency processing unit toolkit", COMMANDS));
+            Err(format!("unknown command '{other}'"))
+        }
+    }
+}
+
+fn model_arg(args: &Args) -> Result<lpu::ModelConfig, String> {
+    let name = args.opt("model").ok_or("--model is required")?;
+    by_name(name).ok_or_else(|| {
+        let names: Vec<String> = lpu::model::registry().into_iter().map(|m| m.name).collect();
+        format!("unknown model '{name}'; known: {names:?}")
+    })
+}
+
+fn config_arg(args: &Args) -> Result<LpuConfig, String> {
+    let name = args.opt_or("config", "asic");
+    LpuConfig::by_name(name).ok_or_else(|| format!("unknown config '{name}' (asic|819gbs|1.64tbs|3.28tbs|fpga)"))
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let model = model_arg(args)?;
+    let cfg = config_arg(args)?;
+    let devices = args.opt_usize("devices", 1)?;
+    let input = args.opt_usize("in", 32)?;
+    let output = args.opt_usize("out", 2016)?;
+    let overlap = !args.flag("no-overlap");
+    let r = simulate_generation(&model, &cfg, devices, input, output, overlap)
+        .map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        format!("{} on {}x {}", model.name, devices, cfg.name),
+        &["ms/token", "tokens/s", "bw util %", "cycles/token"],
+    );
+    t.row(&[
+        format!("{:.3}", r.ms_per_token),
+        format!("{:.1}", r.tokens_per_s),
+        format!("{:.1}", r.bandwidth_util * 100.0),
+        format!("{:.0}", r.cycles_per_token),
+    ]);
+    t.note(format!("in={input} out={output} esl_overlap={overlap}"));
+    t.print();
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<(), String> {
+    let model = model_arg(args)?;
+    let cfg = config_arg(args)?;
+    let max = args.opt_usize("max", 8)?;
+    let pts = scaling_sweep(&model, &cfg, max, !args.flag("no-overlap"), 32, 128)
+        .map_err(|e| e.to_string())?;
+    let mut t = Table::new(format!("strong scaling: {}", model.name), &["devices", "ms/token", "speedup"]);
+    for p in &pts {
+        t.row(&[p.devices.to_string(), format!("{:.3}", p.ms_per_token), format!("{:.2}x", p.speedup)]);
+    }
+    t.note(format!("speedup per doubling: {:.2}x", speedup_per_doubling(&pts)));
+    t.print();
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<(), String> {
+    let model = model_arg(args)?;
+    let cfg = config_arg(args)?;
+    let opts = CompileOpts {
+        n_devices: args.opt_usize("devices", 1)?,
+        position: args.opt_usize("pos", 0)?,
+        esl_overlap: !args.flag("no-overlap"),
+        mode: match args.opt_usize("batch", 1)? {
+            1 => ParallelMode::Single,
+            b => ParallelMode::Batch { batch: b },
+        },
+        sxe_sets: args.opt_usize("sxe-sets", 1)?,
+    };
+    let c = compile(&model, &cfg, &opts).map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        format!("compiled {} for {}", model.name, cfg.name),
+        &["instrs", "virtual regs", "peak live regs", "chains", "map bytes"],
+    );
+    t.row(&[
+        c.stats.instrs.to_string(),
+        c.stats.virtual_regs.to_string(),
+        c.stats.peak_live_regs.to_string(),
+        c.stats.chain.chains.to_string(),
+        lpu::util::fmt_bytes(c.map.total_bytes()),
+    ]);
+    t.print();
+    if args.flag("emit-asm") {
+        print!("{}", asm::disasm_program(&c.program));
+    }
+    if let Some(out) = args.opt("out") {
+        let bytes = c.program.to_bytes().map_err(|e| e.to_string())?;
+        std::fs::write(out, &bytes).map_err(|e| e.to_string())?;
+        println!("wrote {} ({} bytes)", out, bytes.len());
+    }
+    Ok(())
+}
+
+fn cmd_asm(args: &Args) -> Result<(), String> {
+    let [input, output] = args.positional() else {
+        return Err("usage: lpu asm <in.s> <out.lpubin>".into());
+    };
+    let src = std::fs::read_to_string(input).map_err(|e| e.to_string())?;
+    let prog = asm::assemble(&src).map_err(|e| e.to_string())?;
+    std::fs::write(output, prog.to_bytes().map_err(|e| e.to_string())?).map_err(|e| e.to_string())?;
+    println!("assembled {} instructions -> {}", prog.len(), output);
+    Ok(())
+}
+
+fn cmd_disasm(args: &Args) -> Result<(), String> {
+    let [input] = args.positional() else {
+        return Err("usage: lpu disasm <in.lpubin>".into());
+    };
+    let bytes = std::fs::read(input).map_err(|e| e.to_string())?;
+    let prog = lpu::isa::Program::from_bytes(&bytes)?;
+    print!("{}", asm::disasm_program(&prog));
+    Ok(())
+}
+
+fn cmd_chip(args: &Args) -> Result<(), String> {
+    let cfg = config_arg(args)?;
+    let est = chip_estimate(&cfg);
+    let mut t = Table::new(format!("chip estimate: {}", cfg.name), &["module", "area mm^2", "power mW"]);
+    for m in &est.modules {
+        t.row(&[m.name.to_string(), format!("{:.3}", m.area_mm2), format!("{:.2}", m.power_mw)]);
+    }
+    t.row(&["TOTAL".into(), format!("{:.3}", est.total_area_mm2()), format!("{:.2}", est.total_power_mw())]);
+    t.note(format!("system power incl. HBM: {:.1} W", system_power_w(&cfg)));
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let model = args.opt_or("model", "opt-tiny").to_string();
+    let backend = args.opt_or("backend", "pjrt");
+    let workers = args.opt_usize("workers", 2)?;
+    let addr = args.opt_or("addr", "127.0.0.1:7071");
+    let vocab = by_name(&model).map(|m| m.vocab).unwrap_or(512);
+    let factory = match backend {
+        "sim" => BackendFactory::sim(&model, vocab),
+        "pjrt" => {
+            let dir = default_artifacts_dir();
+            if !Engine::artifacts_present(&dir, &model) {
+                return Err(format!(
+                    "artifacts for '{model}' not found in {dir:?}; run `make artifacts` or use --backend sim"
+                ));
+            }
+            BackendFactory::pjrt(dir, &model)
+        }
+        other => return Err(format!("unknown backend '{other}' (pjrt|sim)")),
+    };
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: args.opt_usize("max-active", 4)?,
+        policy: SchedulerPolicy::RoundRobin,
+    });
+    coord.add_pool(&model, workers, factory);
+    let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
+    println!("serving '{model}' ({backend}) on {} with {workers} worker(s); Ctrl-C to stop", handle.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<(), String> {
+    let addr: std::net::SocketAddr = args
+        .opt_or("addr", "127.0.0.1:7071")
+        .parse()
+        .map_err(|e| format!("bad --addr: {e}"))?;
+    let model = args.opt_or("model", "opt-tiny");
+    let prompt: Vec<i64> = args
+        .opt_or("prompt", "1,2,3")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| format!("bad token '{s}'")))
+        .collect::<Result<_, _>>()?;
+    let tokens = args.opt_usize("tokens", 16)?;
+    let mut c = server::Client::connect(&addr).map_err(|e| e.to_string())?;
+    let r = c.generate(model, &prompt, tokens, true)?;
+    println!("tokens: {:?} (reason: {})", r.tokens, r.reason);
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<(), String> {
+    let model = args.opt_or("model", "opt-tiny");
+    let dir = default_artifacts_dir();
+    if !Engine::artifacts_present(&dir, model) {
+        return Err(format!("artifacts for '{model}' not found in {dir:?}; run `make artifacts`"));
+    }
+    let engine = Engine::load(&dir, model).map_err(|e| e.to_string())?;
+    engine.validate().map_err(|e| e.to_string())?;
+    println!("bridge OK: rust/PJRT decode matches the python/JAX golden vector for '{model}'");
+    Ok(())
+}
+
+fn cmd_loadtest(args: &Args) -> Result<(), String> {
+    use lpu::coordinator::{run_open_loop, LenDist, Workload};
+    let model = args.opt_or("model", "opt-tiny").to_string();
+    let backend = args.opt_or("backend", "sim");
+    let n_requests = args.opt_usize("requests", 100)?;
+    let vocab = by_name(&model).map(|m| m.vocab).unwrap_or(512);
+    let factory = match backend {
+        "sim" => BackendFactory::sim(&model, vocab),
+        "pjrt" => BackendFactory::pjrt(default_artifacts_dir(), &model),
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: args.opt_usize("max-active", 4)?,
+        policy: SchedulerPolicy::RoundRobin,
+    });
+    coord.add_pool(&model, args.opt_usize("workers", 2)?, factory);
+
+    let rates: Vec<f64> = args
+        .opt_or("rates", "50,200,1000")
+        .split(',')
+        .map(|r| r.trim().parse().map_err(|_| format!("bad rate '{r}'")))
+        .collect::<Result<_, _>>()?;
+    let mut t = Table::new(
+        format!("load study: {model} ({backend} backend)"),
+        &["req/s", "tokens/s", "TTFT p50 ms", "TTFT p99 ms", "latency p99 ms"],
+    );
+    for rate in rates {
+        let wl = Workload {
+            model: model.clone(),
+            rate,
+            n_requests,
+            prompt_len: LenDist::Uniform(2, 10),
+            output_len: LenDist::LongTail { min: 4, mean_extra: 12.0, cap: 64 },
+            vocab,
+            seed: 7,
+        };
+        let r = run_open_loop(&coord, &wl)?;
+        t.row(&[
+            format!("{rate:.0}"),
+            format!("{:.0}", r.tokens_per_s),
+            format!("{:.2}", r.ttft.p50 * 1e3),
+            format!("{:.2}", r.ttft.p99 * 1e3),
+            format!("{:.2}", r.request_latency.p99 * 1e3),
+        ]);
+    }
+    t.print();
+    coord.shutdown();
+    Ok(())
+}

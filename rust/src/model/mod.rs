@@ -1,0 +1,289 @@
+//! LLM architecture descriptions and accounting.
+//!
+//! The paper evaluates OPT 1.3B/6.7B/30B/66B (Fig 2, Fig 7a/b), GPT3-20B
+//! (Fig 2c / 7c scalability), and mentions GPT/Llama support. This module
+//! is the single source of truth for model shapes; the HyperDex mapper,
+//! the cycle simulator, the GPU analytical model, and the AOT artifact
+//! naming all consume [`ModelConfig`].
+
+pub mod ops;
+
+pub use ops::{DecoderOp, OpKind};
+
+/// Transformer family; decides norm/activation/positional scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// OPT: learned positional embeddings, pre-LN, ReLU FFN, biases.
+    Opt,
+    /// GPT-3 style: learned positions, pre-LN, GELU FFN, biases.
+    Gpt,
+    /// Llama: RoPE, RMSNorm, SwiGLU FFN, no biases.
+    Llama,
+}
+
+/// A decoder-only transformer configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: Family,
+    /// Embedding / hidden dimension.
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// FFN inner dimension.
+    pub d_ffn: usize,
+    pub vocab: usize,
+    /// Maximum sequence length (positional table size for Opt/Gpt).
+    pub max_seq: usize,
+}
+
+/// FP16 storage: bytes per parameter.
+pub const BYTES_PER_PARAM: u64 = 2;
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.d_model % self.n_heads != 0 {
+            return Err(format!("{}: d_model {} not divisible by heads {}", self.name, self.d_model, self.n_heads));
+        }
+        if self.d_model == 0 || self.n_layers == 0 || self.vocab == 0 {
+            return Err(format!("{}: degenerate config", self.name));
+        }
+        Ok(())
+    }
+
+    fn has_bias(&self) -> bool {
+        !matches!(self.family, Family::Llama)
+    }
+
+    /// SwiGLU uses three FFN matrices; ReLU/GELU use two.
+    fn ffn_mats(&self) -> usize {
+        if matches!(self.family, Family::Llama) { 3 } else { 2 }
+    }
+
+    /// Parameters in one decoder layer.
+    pub fn layer_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ffn as u64;
+        let bias = if self.has_bias() { 1 } else { 0 };
+        // QKV + output projection.
+        let attn = 4 * d * d + bias * 4 * d;
+        // FFN matrices.
+        let ffn = self.ffn_mats() as u64 * d * f + bias * (f + d);
+        // Two norms (scale [+ bias]).
+        let norms = 2 * d * (1 + bias);
+        attn + ffn + norms
+    }
+
+    /// Embedding (+ positional) parameters. LM head is weight-tied.
+    pub fn embed_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let pos = match self.family {
+            Family::Llama => 0, // RoPE has no table
+            _ => self.max_seq as u64 * d,
+        };
+        self.vocab as u64 * d + pos + d * if self.has_bias() { 2 } else { 1 } // final norm
+    }
+
+    /// Total parameter count.
+    pub fn params(&self) -> u64 {
+        self.embed_params() + self.n_layers as u64 * self.layer_params()
+    }
+
+    /// Total weight bytes in HBM (FP16).
+    pub fn weight_bytes(&self) -> u64 {
+        self.params() * BYTES_PER_PARAM
+    }
+
+    /// Weight bytes that must be *streamed from HBM per generated token*:
+    /// every decoder layer plus the LM head (vocab×d); embedding lookup
+    /// reads only one row, positional one row.
+    pub fn decode_stream_bytes(&self) -> u64 {
+        let d = self.d_model as u64;
+        let per_layer = self.layer_params();
+        let lm_head = self.vocab as u64 * d;
+        let embed_rows = 2 * d; // token + positional row
+        (self.n_layers as u64 * per_layer + lm_head + embed_rows + d * 2) * BYTES_PER_PARAM
+    }
+
+    /// KV-cache bytes appended per token (write) across all layers.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.n_layers as u64 * self.d_model as u64 * BYTES_PER_PARAM
+    }
+
+    /// KV-cache bytes *read* at decode position `pos` (attention over the
+    /// whole prefix, all layers).
+    pub fn kv_read_bytes(&self, pos: usize) -> u64 {
+        self.kv_bytes_per_token() * pos as u64
+    }
+
+    /// Total KV capacity needed for a `seq`-token context.
+    pub fn kv_capacity_bytes(&self, seq: usize) -> u64 {
+        self.kv_bytes_per_token() * seq as u64
+    }
+
+    /// FLOPs per decode token (2 × params in matmuls, + attention).
+    pub fn decode_flops(&self, pos: usize) -> u64 {
+        let d = self.d_model as u64;
+        let matmul = 2 * (self.n_layers as u64 * self.layer_params() + self.vocab as u64 * d);
+        let attn = 4 * self.n_layers as u64 * d * pos as u64;
+        matmul + attn
+    }
+
+    /// Minimum number of devices needed given per-device capacity, with
+    /// room for KV at `max_seq` (paper: "66B requires 132 GB and an
+    /// additional 5 GB for storing Key-Value").
+    pub fn devices_needed(&self, capacity_bytes: u64) -> usize {
+        let need = self.weight_bytes() + self.kv_capacity_bytes(self.max_seq);
+        need.div_ceil(capacity_bytes).max(1) as usize
+    }
+}
+
+/// Known model registry (shapes from the OPT/GPT-NeoX/Llama papers).
+pub fn registry() -> Vec<ModelConfig> {
+    use Family::*;
+    let m = |name: &str, family, d, l, h, f, vocab, max_seq| ModelConfig {
+        name: name.into(),
+        family,
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_ffn: f,
+        vocab,
+        max_seq,
+    };
+    vec![
+        m("opt-125m", Opt, 768, 12, 12, 3072, 50272, 2048),
+        m("opt-350m", Opt, 1024, 24, 16, 4096, 50272, 2048),
+        m("opt-1.3b", Opt, 2048, 24, 32, 8192, 50272, 2048),
+        m("opt-2.7b", Opt, 2560, 32, 32, 10240, 50272, 2048),
+        m("opt-6.7b", Opt, 4096, 32, 32, 16384, 50272, 2048),
+        m("opt-13b", Opt, 5120, 40, 40, 20480, 50272, 2048),
+        m("opt-30b", Opt, 7168, 48, 56, 28672, 50272, 2048),
+        m("opt-66b", Opt, 9216, 64, 72, 36864, 50272, 2048),
+        // GPT3-20B stands in for the DGX A100 FasterTransformer benchmark
+        // model (Fig 2c / 7c); GPT-NeoX-20B shape.
+        m("gpt3-20b", Gpt, 6144, 44, 64, 24576, 50257, 2048),
+        m("llama-7b", Llama, 4096, 32, 32, 11008, 32000, 2048),
+        // Tiny configs for the functional runtime / E2E example.
+        m("opt-tiny", Opt, 256, 4, 8, 1024, 512, 256),
+        m("opt-mini", Opt, 512, 8, 8, 2048, 2048, 512),
+    ]
+}
+
+/// Look up a model by name.
+pub fn by_name(name: &str) -> Option<ModelConfig> {
+    registry().into_iter().find(|m| m.name == name)
+}
+
+/// The four OPT sizes the paper's main evaluation sweeps.
+pub fn paper_eval_models() -> Vec<ModelConfig> {
+    ["opt-1.3b", "opt-6.7b", "opt-30b", "opt-66b"]
+        .iter()
+        .map(|n| by_name(n).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_valid() {
+        for m in registry() {
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("opt-1.3b").is_some());
+        assert!(by_name("opt-9000b").is_none());
+    }
+
+    /// Parameter counts must land near the advertised sizes.
+    #[test]
+    fn param_counts_match_advertised() {
+        let cases = [
+            ("opt-125m", 125e6, 0.15),
+            ("opt-1.3b", 1.3e9, 0.10),
+            ("opt-6.7b", 6.7e9, 0.05),
+            ("opt-30b", 30e9, 0.05),
+            ("opt-66b", 66e9, 0.05),
+            ("gpt3-20b", 20e9, 0.10),
+            ("llama-7b", 6.74e9, 0.05),
+        ];
+        for (name, target, tol) in cases {
+            let m = by_name(name).unwrap();
+            let p = m.params() as f64;
+            let rel = (p - target).abs() / target;
+            assert!(rel < tol, "{name}: {p:.3e} params vs advertised {target:.3e} (rel {rel:.3})");
+        }
+    }
+
+    /// Paper: "66B model requires 132 GB and additional 5 GB for KV".
+    #[test]
+    fn opt66b_memory_matches_paper() {
+        let m = by_name("opt-66b").unwrap();
+        let wb = m.weight_bytes() as f64 / 1e9;
+        assert!((wb - 132.0).abs() < 8.0, "66B weights {wb:.1} GB vs paper 132 GB");
+        let kv = m.kv_capacity_bytes(2048) as f64 / 1e9;
+        assert!((kv - 5.0).abs() < 2.0, "66B KV {kv:.1} GB vs paper ~5 GB");
+        // Two 80-GB H100s (paper) / two 96-GB LPUs needed.
+        assert_eq!(m.devices_needed(96_000_000_000), 2);
+        assert_eq!(m.devices_needed(80_000_000_000), 2);
+    }
+
+    #[test]
+    fn opt13b_fits_single_24gb_device_fails() {
+        let m = by_name("opt-13b").unwrap();
+        assert!(m.devices_needed(24_000_000_000) > 1);
+    }
+
+    #[test]
+    fn decode_stream_bytes_close_to_weight_bytes() {
+        // For big models the per-token stream is ≈ all weights (tied
+        // embeddings read once as LM head).
+        let m = by_name("opt-30b").unwrap();
+        let ratio = m.decode_stream_bytes() as f64 / m.weight_bytes() as f64;
+        assert!(ratio > 0.95 && ratio < 1.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn kv_accounting() {
+        let m = by_name("opt-1.3b").unwrap();
+        // 2 (K+V) * 24 layers * 2048 dim * 2B = 196608 B/token.
+        assert_eq!(m.kv_bytes_per_token(), 196_608);
+        assert_eq!(m.kv_read_bytes(10), 1_966_080);
+        assert_eq!(m.kv_capacity_bytes(100), 19_660_800);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in registry() {
+            assert_eq!(m.head_dim() * m.n_heads, m.d_model, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn llama_has_no_positional_table() {
+        let llama = by_name("llama-7b").unwrap();
+        let opt = by_name("opt-6.7b").unwrap();
+        // Same d_model; llama embed params should be smaller than OPT's
+        // despite such comparisons being fuzzy (different vocab) — check
+        // the pos-table term directly via embed_params structure.
+        assert!(llama.embed_params() < opt.embed_params());
+    }
+
+    #[test]
+    fn flops_grow_with_position() {
+        let m = by_name("opt-1.3b").unwrap();
+        assert!(m.decode_flops(1000) > m.decode_flops(10));
+        // Matmul term dominates: ~2*params.
+        let f = m.decode_flops(1) as f64;
+        assert!(f > 1.8 * m.params() as f64 && f < 2.6 * m.params() as f64);
+    }
+}

@@ -1,0 +1,238 @@
+//! Decoder operation inventory.
+//!
+//! Expands a [`super::ModelConfig`] into the ordered list of operations
+//! one generated token executes (Fig 1 / Fig 3(b) dataflow). This is the
+//! interface between the model zoo and the HyperDex instruction
+//! generator: instgen walks this list and emits LPU instruction blocks;
+//! the cycle simulator charges each op's bytes/cycles; the GPU analytical
+//! model charges the same byte counts against GPU bandwidth.
+
+use super::{Family, ModelConfig, BYTES_PER_PARAM};
+
+/// Kinds of operation in a decode step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Token + positional embedding lookup (HBM row reads into LMU).
+    Embed,
+    /// LayerNorm or RMSNorm (VXE).
+    Norm,
+    /// Vector–matrix multiply on SXE: x[k] × W[k×n].
+    VecMat,
+    /// Rotary positional embedding applied to Q/K (SXE special function).
+    Rope,
+    /// Attention scores: q·Kᵀ over the KV prefix (SXE, streams K).
+    AttnScore,
+    /// Softmax over scores (VXE).
+    Softmax,
+    /// Context: scores·V over the KV prefix (SXE, streams V).
+    AttnContext,
+    /// Elementwise activation (ReLU/GELU/SwiGLU gate) on VXE.
+    Activation,
+    /// Residual add (VXE).
+    Residual,
+    /// Append current K/V to the cache (SMA write to HBM).
+    KvWrite,
+    /// LM head projection to vocab logits (SXE).
+    LmHead,
+    /// Sort + temperature/top-k/top-p sampling (VXE sampler).
+    Sample,
+    /// ESL all-reduce-style synchronization of a partial result.
+    Sync,
+}
+
+/// One operation with its resource footprint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecoderOp {
+    pub kind: OpKind,
+    /// Layer index (usize::MAX for pre/post ops).
+    pub layer: usize,
+    /// Input vector length (k for vecmat; element count for vector ops).
+    pub k: usize,
+    /// Output length (n for vecmat; 0 if same as k).
+    pub n: usize,
+    /// Weight bytes streamed from HBM by this op.
+    pub weight_bytes: u64,
+    /// KV bytes read from HBM by this op.
+    pub kv_read_bytes: u64,
+    /// KV bytes written to HBM by this op.
+    pub kv_write_bytes: u64,
+    /// Bytes that must be synchronized across devices after this op
+    /// (tensor-parallel partial results), per the mapper's partitioning.
+    pub sync_bytes: u64,
+}
+
+impl DecoderOp {
+    fn new(kind: OpKind, layer: usize, k: usize, n: usize) -> Self {
+        DecoderOp { kind, layer, k, n, weight_bytes: 0, kv_read_bytes: 0, kv_write_bytes: 0, sync_bytes: 0 }
+    }
+
+    fn weights(mut self, bytes: u64) -> Self {
+        self.weight_bytes = bytes;
+        self
+    }
+}
+
+const PRE: usize = usize::MAX;
+
+/// Expand the full decode-step op list for one token at context position
+/// `pos` (0-based: attention spans `pos + 1` entries including self).
+pub fn decode_ops(m: &ModelConfig, pos: usize) -> Vec<DecoderOp> {
+    let d = m.d_model;
+    let f = m.d_ffn;
+    let ctx = pos + 1;
+    let bias = |n: usize| -> u64 {
+        if matches!(m.family, Family::Llama) { 0 } else { n as u64 * BYTES_PER_PARAM }
+    };
+    let wmat = |k: usize, n: usize| (k * n) as u64 * BYTES_PER_PARAM;
+
+    let mut ops = Vec::with_capacity(12 * m.n_layers + 4);
+    // Embedding: one token row + one positional row.
+    let embed_bytes = match m.family {
+        Family::Llama => d as u64 * BYTES_PER_PARAM,
+        _ => 2 * d as u64 * BYTES_PER_PARAM,
+    };
+    ops.push(DecoderOp::new(OpKind::Embed, PRE, 1, d).weights(embed_bytes));
+
+    for layer in 0..m.n_layers {
+        // --- attention block ---
+        ops.push(DecoderOp::new(OpKind::Norm, layer, d, 0).weights(bias(d) + d as u64 * BYTES_PER_PARAM));
+        // Fused QKV projection.
+        ops.push(DecoderOp::new(OpKind::VecMat, layer, d, 3 * d).weights(wmat(d, 3 * d) + bias(3 * d)));
+        if matches!(m.family, Family::Llama) {
+            ops.push(DecoderOp::new(OpKind::Rope, layer, 2 * d, 0));
+        }
+        // Append K,V for this token.
+        let mut kvw = DecoderOp::new(OpKind::KvWrite, layer, d, 0);
+        kvw.kv_write_bytes = 2 * d as u64 * BYTES_PER_PARAM;
+        ops.push(kvw);
+        // Scores: q·Kᵀ — streams ctx·d of K.
+        let mut score = DecoderOp::new(OpKind::AttnScore, layer, d, ctx);
+        score.kv_read_bytes = (ctx * d) as u64 * BYTES_PER_PARAM;
+        ops.push(score);
+        ops.push(DecoderOp::new(OpKind::Softmax, layer, ctx * m.n_heads / m.n_heads, 0));
+        // Context: scores·V — streams ctx·d of V.
+        let mut cv = DecoderOp::new(OpKind::AttnContext, layer, ctx, d);
+        cv.kv_read_bytes = (ctx * d) as u64 * BYTES_PER_PARAM;
+        ops.push(cv);
+        // Output projection (tensor-parallel row-split: sync afterwards).
+        let mut oproj = DecoderOp::new(OpKind::VecMat, layer, d, d).weights(wmat(d, d) + bias(d));
+        oproj.sync_bytes = d as u64 * BYTES_PER_PARAM;
+        ops.push(oproj);
+        ops.push(DecoderOp::new(OpKind::Residual, layer, d, 0));
+
+        // --- FFN block ---
+        ops.push(DecoderOp::new(OpKind::Norm, layer, d, 0).weights(bias(d) + d as u64 * BYTES_PER_PARAM));
+        match m.family {
+            Family::Llama => {
+                // SwiGLU: gate + up, elementwise, then down.
+                ops.push(DecoderOp::new(OpKind::VecMat, layer, d, 2 * f).weights(wmat(d, 2 * f)));
+                ops.push(DecoderOp::new(OpKind::Activation, layer, f, 0));
+                let mut down = DecoderOp::new(OpKind::VecMat, layer, f, d).weights(wmat(f, d));
+                down.sync_bytes = d as u64 * BYTES_PER_PARAM;
+                ops.push(down);
+            }
+            _ => {
+                ops.push(DecoderOp::new(OpKind::VecMat, layer, d, f).weights(wmat(d, f) + bias(f)));
+                ops.push(DecoderOp::new(OpKind::Activation, layer, f, 0));
+                let mut fc2 = DecoderOp::new(OpKind::VecMat, layer, f, d).weights(wmat(f, d) + bias(d));
+                fc2.sync_bytes = d as u64 * BYTES_PER_PARAM;
+                ops.push(fc2);
+            }
+        }
+        ops.push(DecoderOp::new(OpKind::Residual, layer, d, 0));
+    }
+
+    // Final norm + LM head + sampler.
+    ops.push(DecoderOp::new(OpKind::Norm, PRE, d, 0).weights(bias(d) + d as u64 * BYTES_PER_PARAM));
+    ops.push(DecoderOp::new(OpKind::LmHead, PRE, d, m.vocab).weights(wmat(d, m.vocab)));
+    ops.push(DecoderOp::new(OpKind::Sample, PRE, m.vocab, 1));
+    ops
+}
+
+/// Sum of weight bytes across an op list — must reconcile with
+/// [`ModelConfig::decode_stream_bytes`].
+pub fn total_weight_bytes(ops: &[DecoderOp]) -> u64 {
+    ops.iter().map(|o| o.weight_bytes).sum()
+}
+
+/// Sum of KV traffic (read + write).
+pub fn total_kv_bytes(ops: &[DecoderOp]) -> u64 {
+    ops.iter().map(|o| o.kv_read_bytes + o.kv_write_bytes).sum()
+}
+
+/// Number of synchronization points per token (2 per layer under
+/// tensor parallelism: attention out-proj + FC2).
+pub fn sync_points(ops: &[DecoderOp]) -> usize {
+    ops.iter().filter(|o| o.sync_bytes > 0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::by_name;
+
+    #[test]
+    fn op_list_shape_opt() {
+        let m = by_name("opt-1.3b").unwrap();
+        let ops = decode_ops(&m, 0);
+        // Embed + 13 ops/layer (norm, qkv, kvwrite, score, softmax,
+        // context, oproj, residual, norm, fc1, act, fc2, residual) * 24
+        // + final norm + lmhead + sample.
+        assert_eq!(ops.len(), 1 + 13 * 24 + 3);
+        assert_eq!(ops[0].kind, OpKind::Embed);
+        assert_eq!(ops.last().unwrap().kind, OpKind::Sample);
+    }
+
+    #[test]
+    fn weight_bytes_reconcile_with_model_accounting() {
+        for name in ["opt-1.3b", "opt-6.7b", "gpt3-20b", "llama-7b"] {
+            let m = by_name(name).unwrap();
+            let ops = decode_ops(&m, 0);
+            let from_ops = total_weight_bytes(&ops) as f64;
+            let from_model = m.decode_stream_bytes() as f64;
+            let rel = (from_ops - from_model).abs() / from_model;
+            assert!(rel < 0.01, "{name}: ops {from_ops:.3e} vs model {from_model:.3e} (rel {rel:.4})");
+        }
+    }
+
+    #[test]
+    fn kv_traffic_grows_with_position() {
+        let m = by_name("opt-1.3b").unwrap();
+        let t0 = total_kv_bytes(&decode_ops(&m, 0));
+        let t100 = total_kv_bytes(&decode_ops(&m, 100));
+        assert!(t100 > t0 * 50);
+        // Write traffic is position-independent: one K+V per layer.
+        let w: u64 = decode_ops(&m, 100).iter().map(|o| o.kv_write_bytes).sum();
+        assert_eq!(w, m.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn kv_read_matches_model_accounting() {
+        let m = by_name("opt-6.7b").unwrap();
+        let pos = 37;
+        let r: u64 = decode_ops(&m, pos).iter().map(|o| o.kv_read_bytes).sum();
+        // decode_ops reads ctx = pos+1 entries (includes the just-written one).
+        assert_eq!(r, m.kv_read_bytes(pos + 1));
+    }
+
+    #[test]
+    fn two_sync_points_per_layer() {
+        let m = by_name("opt-30b").unwrap();
+        assert_eq!(sync_points(&decode_ops(&m, 0)), 2 * m.n_layers);
+    }
+
+    #[test]
+    fn llama_has_rope_and_swiglu() {
+        let m = by_name("llama-7b").unwrap();
+        let ops = decode_ops(&m, 0);
+        assert!(ops.iter().any(|o| o.kind == OpKind::Rope));
+        // Gate+up fused: a d×2f vecmat exists.
+        assert!(ops.iter().any(|o| o.kind == OpKind::VecMat && o.n == 2 * m.d_ffn));
+    }
+
+    #[test]
+    fn opt_has_no_rope() {
+        let m = by_name("opt-1.3b").unwrap();
+        assert!(!decode_ops(&m, 0).iter().any(|o| o.kind == OpKind::Rope));
+    }
+}

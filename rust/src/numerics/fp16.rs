@@ -1,0 +1,285 @@
+//! IEEE-754 binary16 (FP16), implemented bit-exactly in software.
+//!
+//! The LPU stores all weights and activations in FP16 ("LPU supports the
+//! standard FP16 data precision ... no accuracy loss on popular
+//! datasets"). This module provides conversions with round-to-nearest-
+//! even, the arithmetic helpers the MAC-tree model needs (exponent /
+//! mantissa extraction), and a reference add/mul used in tests.
+
+/// An IEEE-754 half-precision value stored as its raw 16-bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct F16(pub u16);
+
+#[allow(dead_code)]
+const EXP_BITS: u32 = 5;
+const MAN_BITS: u32 = 10;
+const EXP_BIAS: i32 = 15;
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const NEG_ZERO: F16 = F16(0x8000);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite value, 65504.
+    pub const MAX: F16 = F16(0x7BFF);
+    /// Smallest positive normal, 2^-14.
+    pub const MIN_POSITIVE: F16 = F16(0x0400);
+
+    /// Convert from f32 with round-to-nearest-even (the hardware rounding
+    /// mode). Handles subnormals, overflow to infinity, and NaN payloads.
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // Inf or NaN.
+            return if man == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                // Quiet NaN, preserve a nonzero payload bit.
+                F16(sign | 0x7C00 | 0x0200 | ((man >> 13) as u16 & 0x3FF).max(1) & 0x3FF)
+            };
+        }
+
+        // Unbiased exponent.
+        let e = exp - 127;
+        if e > 15 {
+            return F16(sign | 0x7C00); // overflow -> inf
+        }
+        if e >= -14 {
+            // Normal range. 23-bit mantissa -> 10-bit with RNE.
+            let man16 = man >> 13;
+            let rem = man & 0x1FFF;
+            let mut h = sign | (((e + EXP_BIAS) as u16) << MAN_BITS) | man16 as u16;
+            // Round to nearest even.
+            if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+                h = h.wrapping_add(1); // may carry into exponent: correct (rounds up to inf)
+            }
+            return F16(h);
+        }
+        if e >= -25 {
+            // Subnormal half. Implicit leading 1 becomes explicit.
+            let full = man | 0x80_0000;
+            let shift = (-14 - e) as u32 + 13;
+            let man16 = full >> shift;
+            let rem = full & ((1 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            let mut h = sign | man16 as u16;
+            if rem > half || (rem == half && (man16 & 1) == 1) {
+                h = h.wrapping_add(1);
+            }
+            return F16(h);
+        }
+        F16(sign) // underflow to signed zero
+    }
+
+    /// Convert to f32 exactly (every f16 is representable).
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> MAN_BITS) & 0x1F) as u32;
+        let man = (self.0 & 0x3FF) as u32;
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign // signed zero
+            } else {
+                // Subnormal: normalize. man = 1.x * 2^(b - 24) where b is
+                // the highest set bit; f32 exponent field = 103 + b.
+                let lz = man.leading_zeros() - 21; // zeros within the 10-bit field
+                // Shift the leading 1 to bit 10 (the implicit-bit slot);
+                // bits below it become the f32 mantissa's top bits.
+                let shifted = man << lz;
+                let e = 113 - lz; // f32 exponent field = 103 + highest-set-bit
+                sign | (e << 23) | ((shifted & 0x3FF) << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (man << 13) // inf/nan
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7C00) != 0x7C00
+    }
+
+    pub fn is_sign_negative(self) -> bool {
+        self.0 & 0x8000 != 0
+    }
+
+    /// Raw biased exponent field (0..=31).
+    pub fn biased_exp(self) -> u16 {
+        (self.0 >> MAN_BITS) & 0x1F
+    }
+
+    /// Unbiased exponent of the value interpreted with its implicit bit;
+    /// subnormals report -14 (their effective scale).
+    pub fn effective_exp(self) -> i32 {
+        let e = self.biased_exp();
+        if e == 0 { 1 - EXP_BIAS } else { e as i32 - EXP_BIAS }
+    }
+
+    /// Significand including the implicit bit, as an 11-bit integer
+    /// (subnormals have no implicit bit).
+    pub fn significand(self) -> u16 {
+        let man = self.0 & 0x3FF;
+        if self.biased_exp() == 0 { man } else { man | 0x400 }
+    }
+
+    /// FP16 multiplication modelled as f32 multiply + RNE demotion — this
+    /// matches an exact-significand hardware multiplier (11×11-bit product
+    /// fits in f32's 24-bit significand exactly, so no double rounding).
+    pub fn mul(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+
+    /// FP16 addition with intermediate f32 (exact for f16 operands).
+    pub fn add(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+}
+
+impl From<f32> for F16 {
+    fn from(x: f32) -> F16 {
+        F16::from_f32(x)
+    }
+}
+
+impl From<F16> for f32 {
+    fn from(h: F16) -> f32 {
+        h.to_f32()
+    }
+}
+
+/// Quantize an f32 slice to FP16 bits (storage format of weights in HBM).
+pub fn quantize(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| F16::from_f32(x).0).collect()
+}
+
+/// Dequantize FP16 bits to f32.
+pub fn dequantize(bits: &[u16]) -> Vec<f32> {
+    bits.iter().map(|&b| F16(b).to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_constants() {
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF);
+        assert_eq!(F16::from_f32(0.5).0, 0x3800);
+        assert_eq!(F16::from_f32(f32::INFINITY).0, 0x7C00);
+        assert!(F16::from_f32(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn overflow_rounds_to_infinity() {
+        assert_eq!(F16::from_f32(65520.0).0, 0x7C00); // rounds up past MAX
+        assert_eq!(F16::from_f32(-1e9).0, 0xFC00);
+        // 65519.996 rounds down to MAX
+        assert_eq!(F16::from_f32(65519.0), F16::MAX);
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let tiny = 2.0f32.powi(-24); // smallest positive subnormal
+        let h = F16::from_f32(tiny);
+        assert_eq!(h.0, 0x0001);
+        assert_eq!(h.to_f32(), tiny);
+        // Below half of the smallest subnormal underflows to zero.
+        assert_eq!(F16::from_f32(tiny / 4.0).0, 0);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> rounds to even (1.0).
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32(x).0, 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> rounds to even (1+2^-9... check lsb).
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32(y).0, 0x3C02);
+    }
+
+    #[test]
+    fn all_f16_values_roundtrip_exactly() {
+        // Every finite f16 -> f32 -> f16 must be the identity.
+        for bits in 0u16..=0xFFFF {
+            let h = F16(bits);
+            if h.is_nan() {
+                assert!(F16::from_f32(h.to_f32()).is_nan());
+            } else {
+                let back = F16::from_f32(h.to_f32());
+                assert_eq!(back.0, bits, "bits {bits:#06x} -> {} -> {:#06x}", h.to_f32(), back.0);
+            }
+        }
+    }
+
+    #[test]
+    fn conversion_matches_rounding_oracle() {
+        // Random f32s: conversion must land on the nearest representable
+        // f16 (ties to even), verified by scanning neighbors.
+        let mut rng = Rng::new(2024);
+        for _ in 0..20_000 {
+            let x = (rng.f32() - 0.5) * 130000.0;
+            let h = F16::from_f32(x);
+            if h.is_infinite() || h.is_nan() {
+                continue;
+            }
+            let fx = h.to_f32();
+            let err = (fx - x).abs();
+            // Any adjacent representable value must not be strictly closer.
+            for delta in [-1i32, 1] {
+                let nb = F16(h.0.wrapping_add(delta as u16));
+                if nb.is_finite() && nb.is_sign_negative() == h.is_sign_negative() {
+                    let nerr = (nb.to_f32() - x).abs();
+                    assert!(nerr >= err - err * 1e-6, "x={x}: chose {fx}, neighbor {} closer", nb.to_f32());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn significand_and_exponent_fields() {
+        let h = F16::from_f32(3.0); // 1.5 * 2^1
+        assert_eq!(h.effective_exp(), 1);
+        assert_eq!(h.significand(), 0x600); // 1.1_2 << 10
+        let sub = F16(0x0001);
+        assert_eq!(sub.effective_exp(), -14);
+        assert_eq!(sub.significand(), 1);
+    }
+
+    #[test]
+    fn mul_add_basic() {
+        let a = F16::from_f32(1.5);
+        let b = F16::from_f32(2.0);
+        assert_eq!(a.mul(b).to_f32(), 3.0);
+        assert_eq!(a.add(b).to_f32(), 3.5);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let xs = vec![0.1f32, -2.5, 100.0, 0.0];
+        let back = dequantize(&quantize(&xs));
+        for (x, b) in xs.iter().zip(&back) {
+            assert!((x - b).abs() <= x.abs() * 1e-3 + 1e-6);
+        }
+    }
+}

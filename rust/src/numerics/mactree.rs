@@ -1,0 +1,246 @@
+//! Functional model of the SXE MAC tree.
+//!
+//! Paper (SXE §): each MAC tree consumes `v` FP16 operand pairs per cycle.
+//! "The preprocessing of the operands based on the exponent and mantissa
+//! of the larger floating-point operand enables the fixed-point
+//! multiplication and accumulation", and "the fixed-point adder tree for
+//! mantissa utilizes a Wallace tree for high-speed addition".
+//!
+//! We model that scheme bit-accurately:
+//!   1. each pair (a, b) produces an exact 22-bit significand product with
+//!      exponent ea + eb (FP16 significands are ≤ 11 bits, so products
+//!      are exact in 22 bits);
+//!   2. products are aligned to the *largest* product exponent in the
+//!      group (the "larger floating-point operand" preprocessing) and
+//!      accumulated in a wide two's-complement fixed-point register (the
+//!      Wallace-tree model — associativity-free integer addition, so the
+//!      result is independent of summation order, unlike float adds);
+//!   3. the final sum is renormalized and rounded once to FP16 (or kept
+//!      in FP32 for the partial-sum path that feeds the psum buffers).
+//!
+//! The accumulator carries `ACC_GUARD` guard bits; products whose aligned
+//! magnitude falls entirely below the guard range are truncated, exactly
+//! as a hardware right-shifter would.
+
+use super::fp16::F16;
+
+/// Guard bits kept below the largest product's LSB during alignment.
+/// 2·11-bit significand products aligned with 40 guard bits cover the
+/// entire finite FP16 exponent range (e_max - e_min = 30+30), so with
+/// v ≤ 4096 the accumulation is *exact* for all finite inputs.
+const ACC_GUARD: u32 = 80;
+
+/// A `v`-wide MAC tree.
+#[derive(Clone, Debug)]
+pub struct MacTree {
+    /// Number of FP16 operand pairs consumed per cycle (paper: v = 64).
+    pub width: usize,
+}
+
+impl MacTree {
+    pub fn new(width: usize) -> Self {
+        assert!(width > 0 && width <= 4096);
+        MacTree { width }
+    }
+
+    /// One MAC-tree reduction: dot(a, b) over exactly `width` pairs,
+    /// computed with the shared-exponent fixed-point scheme. Returns the
+    /// full-precision result as f64 (the psum path) — callers round to
+    /// FP16/FP32 where the hardware writes back.
+    pub fn reduce(&self, a: &[F16], b: &[F16]) -> f64 {
+        assert_eq!(a.len(), self.width, "operand a width");
+        assert_eq!(b.len(), self.width, "operand b width");
+
+        // Step 1: exact signed significand products + exponents.
+        let mut prods: Vec<(i64, i32)> = Vec::with_capacity(self.width);
+        let mut max_exp = i32::MIN;
+        for (&x, &y) in a.iter().zip(b) {
+            debug_assert!(x.is_finite() && y.is_finite(), "MAC tree operands must be finite");
+            let sig = x.significand() as i64 * y.significand() as i64; // <= 22 bits
+            if sig == 0 {
+                continue;
+            }
+            // Product exponent: value = sig * 2^(ex + ey - 20)
+            let e = x.effective_exp() + y.effective_exp() - 20;
+            let neg = x.is_sign_negative() ^ y.is_sign_negative();
+            prods.push((if neg { -sig } else { sig }, e));
+            max_exp = max_exp.max(e);
+        }
+        if prods.is_empty() {
+            return 0.0;
+        }
+
+        // Step 2: align to max exponent and accumulate in fixed point.
+        // acc holds units of 2^(max_exp - ACC_GUARD).
+        let mut acc: i128 = 0;
+        for (sig, e) in prods {
+            let shift = ACC_GUARD as i32 - (max_exp - e);
+            if shift >= 0 {
+                acc += (sig as i128) << shift;
+            } else if shift > -63 {
+                // Hardware truncation of bits below the guard range.
+                acc += (sig as i128) >> (-shift);
+            }
+            // else: product entirely below guard range -> dropped.
+        }
+
+        // Step 3: renormalize.
+        acc as f64 * 2f64.powi(max_exp - ACC_GUARD as i32)
+    }
+
+    /// Dot product of an activation vector with one matrix column tile,
+    /// rounding the final result to FP16 (register-file writeback path).
+    pub fn reduce_f16(&self, a: &[F16], b: &[F16]) -> F16 {
+        F16::from_f32(self.reduce(a, b) as f32)
+    }
+
+    /// Full vector–matrix multiply as executed over tiles: `x` (len k) ×
+    /// `w` (k×n, column-major tiles of `width` rows). Accumulates tile
+    /// partial sums in f64 psum registers (the paper's vertical tile
+    /// order: a column's dot product finishes before the next begins).
+    pub fn vecmat(&self, x: &[F16], w: &[F16], n: usize) -> Vec<f64> {
+        let k = x.len();
+        assert_eq!(w.len(), k * n, "weight shape");
+        assert_eq!(k % self.width, 0, "k must tile by MAC width");
+        let tiles = k / self.width;
+        let mut out = vec![0.0f64; n];
+        for (j, o) in out.iter_mut().enumerate() {
+            let col = &w[j * k..(j + 1) * k];
+            let mut psum = 0.0f64;
+            for t in 0..tiles {
+                let lo = t * self.width;
+                let hi = lo + self.width;
+                psum += self.reduce(&x[lo..hi], &col[lo..hi]);
+            }
+            *o = psum;
+        }
+        out
+    }
+
+    /// Cycles to stream a k×n vecmat through `trees` parallel MAC trees
+    /// (one tile of `width` elements per tree per cycle) plus pipeline
+    /// fill. This is the SXE timing contract the cycle simulator uses.
+    pub fn vecmat_cycles(&self, k: usize, n: usize, trees: usize, pipeline_depth: u64) -> u64 {
+        let tiles_per_col = k.div_ceil(self.width) as u64;
+        let col_groups = n.div_ceil(trees) as u64;
+        tiles_per_col * col_groups + pipeline_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, quick};
+    use crate::util::rng::Rng;
+
+    fn f16v(xs: &[f32]) -> Vec<F16> {
+        xs.iter().map(|&x| F16::from_f32(x)).collect()
+    }
+
+    #[test]
+    fn reduce_matches_exact_small() {
+        let t = MacTree::new(4);
+        let a = f16v(&[1.0, 2.0, 3.0, 4.0]);
+        let b = f16v(&[0.5, 0.25, -1.0, 2.0]);
+        // 0.5 + 0.5 - 3 + 8 = 6
+        assert_eq!(t.reduce(&a, &b), 6.0);
+    }
+
+    #[test]
+    fn reduce_zero_vectors() {
+        let t = MacTree::new(8);
+        let z = vec![F16::ZERO; 8];
+        assert_eq!(t.reduce(&z, &z), 0.0);
+    }
+
+    #[test]
+    fn reduce_is_exact_vs_f64_oracle() {
+        // With 80 guard bits the fixed-point accumulation is exact for
+        // FP16 inputs, so it must match the f64 dot product exactly.
+        let mut rng = Rng::new(7);
+        let t = MacTree::new(64);
+        for _ in 0..200 {
+            let a: Vec<F16> = (0..64).map(|_| F16::from_f32((rng.f32() - 0.5) * 8.0)).collect();
+            let b: Vec<F16> = (0..64).map(|_| F16::from_f32((rng.f32() - 0.5) * 8.0)).collect();
+            let oracle: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| x.to_f32() as f64 * y.to_f32() as f64)
+                .sum();
+            let got = t.reduce(&a, &b);
+            assert!(
+                (got - oracle).abs() <= oracle.abs() * 1e-12 + 1e-15,
+                "got {got}, oracle {oracle}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduce_order_invariant() {
+        // Fixed-point accumulation is associative: shuffling pairs must
+        // give bit-identical results (floats would not).
+        let mut rng = Rng::new(11);
+        let t = MacTree::new(32);
+        let a: Vec<F16> = (0..32).map(|_| F16::from_f32((rng.f32() - 0.5) * 100.0)).collect();
+        let b: Vec<F16> = (0..32).map(|_| F16::from_f32((rng.f32() - 0.5) * 100.0)).collect();
+        let base = t.reduce(&a, &b);
+        let mut idx: Vec<usize> = (0..32).collect();
+        for _ in 0..10 {
+            rng.shuffle(&mut idx);
+            let ap: Vec<F16> = idx.iter().map(|&i| a[i]).collect();
+            let bp: Vec<F16> = idx.iter().map(|&i| b[i]).collect();
+            assert_eq!(t.reduce(&ap, &bp).to_bits(), base.to_bits());
+        }
+    }
+
+    #[test]
+    fn reduce_extreme_exponent_spread() {
+        let t = MacTree::new(3);
+        // max normal * 1 + tiny subnormal products: exact sum.
+        let a = vec![F16::MAX, F16(0x0001), F16(0x0001)];
+        let b = vec![F16::ONE, F16(0x0001), F16::ONE];
+        let oracle = 65504.0 + 2f64.powi(-48) + 2f64.powi(-24);
+        let got = t.reduce(&a, &b);
+        assert!((got - oracle).abs() / oracle < 1e-12);
+    }
+
+    #[test]
+    fn vecmat_matches_columnwise_reduce() {
+        let mut rng = Rng::new(3);
+        let t = MacTree::new(16);
+        let k = 32;
+        let n = 5;
+        let x: Vec<F16> = (0..k).map(|_| F16::from_f32(rng.f32() - 0.5)).collect();
+        let w: Vec<F16> = (0..k * n).map(|_| F16::from_f32(rng.f32() - 0.5)).collect();
+        let out = t.vecmat(&x, &w, n);
+        for (j, &o) in out.iter().enumerate() {
+            let oracle: f64 = (0..k)
+                .map(|i| x[i].to_f32() as f64 * w[j * k + i].to_f32() as f64)
+                .sum();
+            assert!((o - oracle).abs() <= oracle.abs() * 1e-12 + 1e-15);
+        }
+    }
+
+    #[test]
+    fn vecmat_cycles_formula() {
+        let t = MacTree::new(64);
+        // k=128 (2 tiles/col), n=32 over 32 trees (1 col group), depth 10.
+        assert_eq!(t.vecmat_cycles(128, 32, 32, 10), 2 * 1 + 10);
+        // n=33 needs 2 col groups.
+        assert_eq!(t.vecmat_cycles(128, 33, 32, 10), 2 * 2 + 10);
+        // non-multiple k rounds up.
+        assert_eq!(t.vecmat_cycles(100, 32, 32, 0), 2);
+    }
+
+    #[test]
+    fn prop_reduce_linear_in_scalar() {
+        // reduce(2a, b) == 2 reduce(a, b) when 2a stays representable.
+        quick("mactree-scaling", |rng| {
+            let t = MacTree::new(8);
+            let a: Vec<F16> = (0..8).map(|_| F16::from_f32((rng.f32() - 0.5) * 4.0)).collect();
+            let b: Vec<F16> = (0..8).map(|_| F16::from_f32((rng.f32() - 0.5) * 4.0)).collect();
+            let a2: Vec<F16> = a.iter().map(|&x| F16::from_f32(x.to_f32() * 2.0)).collect();
+            close(t.reduce(&a2, &b), 2.0 * t.reduce(&a, &b), 1e-9)
+        });
+    }
+}

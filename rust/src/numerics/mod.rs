@@ -1,0 +1,18 @@
+//! Bit-accurate arithmetic models for the LPU datapath.
+//!
+//! The paper's SXE executes FP16 vector–matrix multiplication with MAC
+//! trees that "preprocess the operands based on the exponent and mantissa
+//! of the larger floating-point operand [to] enable fixed-point
+//! multiplication and accumulation", summed by a Wallace-tree adder.
+//! [`fp16`] implements IEEE-754 binary16 conversion exactly; [`mactree`]
+//! implements the shared-exponent fixed-point accumulation scheme and
+//! bounds its error against an f64 oracle; [`sampler`] implements the
+//! VXE's logit sampler (temperature / top-k / top-p with sort).
+
+pub mod fp16;
+pub mod mactree;
+pub mod sampler;
+
+pub use fp16::F16;
+pub use mactree::MacTree;
+pub use sampler::{SampleParams, Sampler};

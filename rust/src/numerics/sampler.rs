@@ -1,0 +1,231 @@
+//! The VXE sampler: "a sampler that sorts logits and selects an output
+//! token based on temperature, top-p, and top-k values."
+//!
+//! This is both the functional model used by the cycle simulator's VXE
+//! and the *actual* sampler the serving runtime applies to logits coming
+//! back from the PJRT-executed decoder, so its numerics matter.
+
+use crate::util::rng::Rng;
+
+/// Sampling hyperparameters, HuggingFace-compatible semantics.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleParams {
+    /// Softmax temperature; 0.0 (or `do_sample = false`) means greedy.
+    pub temperature: f32,
+    /// Keep only the k highest logits (0 = disabled).
+    pub top_k: usize,
+    /// Nucleus sampling threshold in (0, 1]; 1.0 = disabled.
+    pub top_p: f32,
+    /// If false, always pick the argmax.
+    pub do_sample: bool,
+}
+
+impl Default for SampleParams {
+    fn default() -> Self {
+        SampleParams { temperature: 1.0, top_k: 0, top_p: 1.0, do_sample: false }
+    }
+}
+
+impl SampleParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    pub fn sampled(temperature: f32, top_k: usize, top_p: f32) -> Self {
+        SampleParams { temperature, top_k, top_p, do_sample: true }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.do_sample {
+            if !(self.temperature > 0.0) {
+                return Err(format!("temperature must be > 0 when sampling, got {}", self.temperature));
+            }
+            if !(self.top_p > 0.0 && self.top_p <= 1.0) {
+                return Err(format!("top_p must be in (0,1], got {}", self.top_p));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Stateful sampler (owns its RNG stream for reproducible generation).
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(seed: u64) -> Self {
+        Sampler { rng: Rng::new(seed) }
+    }
+
+    /// Select a token id from raw logits.
+    pub fn sample(&mut self, logits: &[f32], p: &SampleParams) -> usize {
+        assert!(!logits.is_empty());
+        if !p.do_sample || p.temperature == 0.0 {
+            return argmax(logits);
+        }
+        // Sort candidate indices by logit, descending — the paper's VXE
+        // "sorts logits" in hardware; we do the same then cut by k and p.
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
+
+        let keep_k = if p.top_k == 0 { idx.len() } else { p.top_k.min(idx.len()) };
+        let idx = &idx[..keep_k];
+
+        // Temperature softmax over the kept set (numerically stabilized).
+        let max = logits[idx[0]];
+        let mut probs: Vec<f64> = idx
+            .iter()
+            .map(|&i| (((logits[i] - max) / p.temperature) as f64).exp())
+            .collect();
+        let sum: f64 = probs.iter().sum();
+        for q in &mut probs {
+            *q /= sum;
+        }
+
+        // Nucleus cut: smallest prefix with cumulative prob >= top_p.
+        let mut keep = probs.len();
+        if p.top_p < 1.0 {
+            let mut cum = 0.0;
+            for (i, &q) in probs.iter().enumerate() {
+                cum += q;
+                if cum >= p.top_p as f64 {
+                    keep = i + 1;
+                    break;
+                }
+            }
+        }
+        let probs = &probs[..keep];
+        let renorm: f64 = probs.iter().sum();
+
+        // Inverse-CDF draw.
+        let mut u = self.rng.f64() * renorm;
+        for (i, &q) in probs.iter().enumerate() {
+            u -= q;
+            if u <= 0.0 {
+                return idx[i];
+            }
+        }
+        idx[keep - 1]
+    }
+}
+
+/// Argmax with first-wins tie-breaking (matches jnp.argmax).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Numerically-stable softmax (VXE reference; also used in tests against
+/// the XLA-computed softmax).
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::new(1);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        for _ in 0..10 {
+            assert_eq!(s.sample(&logits, &SampleParams::greedy()), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_zero_is_greedy_even_when_sampling() {
+        let mut s = Sampler::new(2);
+        let p = SampleParams { temperature: 0.0, top_k: 0, top_p: 1.0, do_sample: true };
+        assert_eq!(s.sample(&[0.0, 5.0, 1.0], &p), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut s = Sampler::new(3);
+        let logits = vec![10.0, 9.0, -50.0, -60.0];
+        let p = SampleParams::sampled(1.0, 2, 1.0);
+        for _ in 0..200 {
+            let t = s.sample(&logits, &p);
+            assert!(t == 0 || t == 1, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        let mut s = Sampler::new(4);
+        // softmax ~ [0.665, 0.245, 0.09]; top_p=0.6 keeps only token 0.
+        let logits = vec![2.0, 1.0, 0.0];
+        let p = SampleParams::sampled(1.0, 0, 0.6);
+        for _ in 0..200 {
+            assert_eq!(s.sample(&logits, &p), 0);
+        }
+    }
+
+    #[test]
+    fn sampling_frequencies_track_softmax() {
+        let mut s = Sampler::new(5);
+        let logits = vec![1.0f32, 0.0, -1.0];
+        let probs = softmax(&logits);
+        let p = SampleParams::sampled(1.0, 0, 1.0);
+        let n = 50_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[s.sample(&logits, &p)] += 1;
+        }
+        for i in 0..3 {
+            let freq = counts[i] as f32 / n as f32;
+            assert!((freq - probs[i]).abs() < 0.01, "token {i}: freq {freq} vs prob {}", probs[i]);
+        }
+    }
+
+    #[test]
+    fn high_temperature_flattens() {
+        let mut s = Sampler::new(6);
+        let logits = vec![2.0f32, 0.0];
+        let hot = SampleParams::sampled(100.0, 0, 1.0);
+        let n = 20_000;
+        let picks0 = (0..n).filter(|_| s.sample(&logits, &hot) == 0).count();
+        let frac = picks0 as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "hot sampling should be ~uniform, got {frac}");
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let xs = vec![1000.0f32, 999.0, 998.0];
+        let p = softmax(&xs);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[0] > p[1] && p[1] > p[2]);
+        assert!(p.iter().all(|q| q.is_finite()));
+    }
+
+    #[test]
+    fn validate_params() {
+        assert!(SampleParams::sampled(0.0, 0, 1.0).validate().is_err());
+        assert!(SampleParams::sampled(1.0, 0, 0.0).validate().is_err());
+        assert!(SampleParams::sampled(0.7, 50, 0.9).validate().is_ok());
+        assert!(SampleParams::greedy().validate().is_ok());
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let logits = vec![0.5f32, 0.4, 0.3, 0.2];
+        let p = SampleParams::sampled(1.0, 0, 1.0);
+        let mut a = Sampler::new(42);
+        let mut b = Sampler::new(42);
+        let sa: Vec<usize> = (0..64).map(|_| a.sample(&logits, &p)).collect();
+        let sb: Vec<usize> = (0..64).map(|_| b.sample(&logits, &p)).collect();
+        assert_eq!(sa, sb);
+    }
+}

@@ -1,0 +1,393 @@
+//! PJRT functional runtime: loads the AOT-compiled JAX/Pallas decoder and
+//! executes real token generation from the Rust request path.
+//!
+//! Build-time Python (`python/compile/aot.py`) lowers the L2 JAX model
+//! (which calls the L1 Pallas kernels) to **HLO text** — the only
+//! interchange format the image's xla_extension 0.5.1 accepts from
+//! jax ≥ 0.5 (serialized protos carry 64-bit instruction ids it rejects)
+//! — and emits for each model:
+//!
+//! * `<model>.decode.hlo.txt` — the single-token decode step,
+//! * `<model>.manifest.json`  — argument order/shapes, model shape, and a
+//!   golden test vector (inputs + expected logits) for bridge validation,
+//! * `<model>.weights.bin`    — the concatenated f32 parameters.
+//!
+//! At startup [`Engine::load`] compiles the HLO once on the PJRT CPU
+//! client and uploads the weights to device buffers; each
+//! [`Session::decode_step`] then uploads only the token/position scalars
+//! and round-trips the KV cache as device buffers. Python never runs on
+//! the request path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One executable argument described by the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub dtype: String,
+    /// Byte offset into weights.bin (parameters only; runtime args have
+    /// `offset == None`).
+    pub offset: Option<u64>,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Golden test vector generated at AOT time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TestVector {
+    pub prompt: Vec<i64>,
+    /// Expected greedy continuation tokens after the prompt.
+    pub expected_tokens: Vec<i64>,
+    /// First elements of the logits after consuming the prompt.
+    pub logits_prefix: Vec<f64>,
+}
+
+/// Parsed `<model>.manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub args: Vec<ArgSpec>,
+    pub test: Option<TestVector>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow!("manifest: {e}"))?;
+        let get_usize = |k: &str| {
+            j.get(k).as_usize().ok_or_else(|| anyhow!("manifest: missing '{k}'"))
+        };
+        let args_json = j.get("args").as_arr().ok_or_else(|| anyhow!("manifest: missing 'args'"))?;
+        let mut args = Vec::with_capacity(args_json.len());
+        for a in args_json {
+            args.push(ArgSpec {
+                name: a.get("name").as_str().ok_or_else(|| anyhow!("arg missing name"))?.to_string(),
+                shape: a
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("arg missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                dtype: a.get("dtype").as_str().unwrap_or("f32").to_string(),
+                offset: a.get("offset").as_u64(),
+            });
+        }
+        let test = match j.get("test") {
+            Json::Null => None,
+            t => Some(TestVector {
+                prompt: t
+                    .get("prompt")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_f64().map(|f| f as i64))
+                    .collect(),
+                expected_tokens: t
+                    .get("expected_tokens")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_f64().map(|f| f as i64))
+                    .collect(),
+                logits_prefix: t
+                    .get("logits_prefix")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .collect(),
+            }),
+        };
+        Ok(Manifest {
+            model: j.get("model").as_str().unwrap_or("?").to_string(),
+            d_model: get_usize("d_model")?,
+            n_layers: get_usize("n_layers")?,
+            n_heads: get_usize("n_heads")?,
+            max_seq: get_usize("max_seq")?,
+            vocab: get_usize("vocab")?,
+            args,
+            test,
+        })
+    }
+
+    /// Arguments that are parameters (have a weights.bin offset).
+    pub fn param_args(&self) -> impl Iterator<Item = &ArgSpec> {
+        self.args.iter().filter(|a| a.offset.is_some())
+    }
+}
+
+/// The compiled model + resident weights. One per model; `Send`-able
+/// behind an `Arc` (PJRT objects are internally refcounted).
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    /// Device-resident parameter buffers, in argument order.
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+/// Per-request generation state: device-resident KV cache buffers.
+pub struct Session {
+    k: xla::PjRtBuffer,
+    v: xla::PjRtBuffer,
+    pub pos: usize,
+}
+
+impl Engine {
+    /// Expected artifact paths for a model.
+    pub fn artifact_paths(dir: &Path, model: &str) -> (PathBuf, PathBuf, PathBuf) {
+        (
+            dir.join(format!("{model}.decode.hlo.txt")),
+            dir.join(format!("{model}.manifest.json")),
+            dir.join(format!("{model}.weights.bin")),
+        )
+    }
+
+    /// True if all artifacts for `model` exist under `dir`.
+    pub fn artifacts_present(dir: &Path, model: &str) -> bool {
+        let (h, m, w) = Self::artifact_paths(dir, model);
+        h.exists() && m.exists() && w.exists()
+    }
+
+    /// Load + compile a model's artifacts.
+    pub fn load(dir: &Path, model: &str) -> Result<Engine> {
+        let (hlo_path, manifest_path, weights_path) = Self::artifact_paths(dir, model);
+        let manifest_src = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Manifest::parse(&manifest_src)?;
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("XLA compile: {e:?}"))?;
+
+        let raw = std::fs::read(&weights_path)
+            .with_context(|| format!("reading {weights_path:?}"))?;
+        let mut weights = Vec::new();
+        for a in manifest.param_args() {
+            let off = a.offset.unwrap() as usize;
+            let nbytes = a.elems() * 4;
+            if off + nbytes > raw.len() {
+                bail!("weights.bin too small for {} (need {} at {off})", a.name, nbytes);
+            }
+            let floats: Vec<f32> = raw[off..off + nbytes]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&floats, &a.shape, None)
+                .map_err(|e| anyhow!("uploading {}: {e:?}", a.name))?;
+            weights.push(buf);
+        }
+        Ok(Engine { client, exe, manifest, weights })
+    }
+
+    /// Fresh session with zeroed KV cache.
+    pub fn new_session(&self) -> Result<Session> {
+        let m = &self.manifest;
+        let kv_shape = [m.n_layers, m.max_seq, m.d_model];
+        let zeros = vec![0f32; kv_shape.iter().product()];
+        let k = self
+            .client
+            .buffer_from_host_buffer::<f32>(&zeros, &kv_shape, None)
+            .map_err(|e| anyhow!("kv alloc: {e:?}"))?;
+        let v = self
+            .client
+            .buffer_from_host_buffer::<f32>(&zeros, &kv_shape, None)
+            .map_err(|e| anyhow!("kv alloc: {e:?}"))?;
+        Ok(Session { k, v, pos: 0 })
+    }
+
+    /// Run one decode step: feed `token` at the session's position,
+    /// return the next-token logits and advance the KV cache in place.
+    pub fn decode_step(&self, s: &mut Session, token: i64) -> Result<Vec<f32>> {
+        if s.pos >= self.manifest.max_seq {
+            bail!("session exceeded max_seq {}", self.manifest.max_seq);
+        }
+        let tok = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[token as i32], &[1], None)
+            .map_err(|e| anyhow!("token upload: {e:?}"))?;
+        let pos = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[s.pos as i32], &[1], None)
+            .map_err(|e| anyhow!("pos upload: {e:?}"))?;
+
+        // Argument order: params..., token, pos, k, v (manifest order).
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok);
+        args.push(&pos);
+        args.push(&s.k);
+        args.push(&s.v);
+
+        let mut outs = self.exe.execute_b(&args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let mut row = outs.pop().ok_or_else(|| anyhow!("no output rows"))?;
+        // Lowered with return_tuple=True: PJRT flattens the 3-tuple
+        // (logits, k', v') into separate output buffers.
+        if row.len() == 3 {
+            let v_new = row.pop().unwrap();
+            let k_new = row.pop().unwrap();
+            let logits_buf = row.pop().unwrap();
+            let logits = logits_buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("logits readback: {e:?}"))?
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
+            s.k = k_new;
+            s.v = v_new;
+            s.pos += 1;
+            Ok(logits)
+        } else if row.len() == 1 {
+            // Tuple kept intact: decompose on host.
+            let lit = row
+                .pop()
+                .unwrap()
+                .to_literal_sync()
+                .map_err(|e| anyhow!("tuple readback: {e:?}"))?;
+            let (logits, k_new, v_new) =
+                lit.to_tuple3().map_err(|e| anyhow!("tuple decompose: {e:?}"))?;
+            let logits = logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            // Host round-trip for the caches (slow path).
+            let m = &self.manifest;
+            let kv_shape = [m.n_layers, m.max_seq, m.d_model];
+            let kv: Vec<f32> = k_new.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            s.k = self
+                .client
+                .buffer_from_host_buffer::<f32>(&kv, &kv_shape, None)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let vv: Vec<f32> = v_new.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            s.v = self
+                .client
+                .buffer_from_host_buffer::<f32>(&vv, &kv_shape, None)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            s.pos += 1;
+            Ok(logits)
+        } else {
+            bail!("unexpected output arity {}", row.len());
+        }
+    }
+
+    /// Greedy-decode `n` tokens starting from `prompt`. Returns generated
+    /// token ids. Used by the E2E example and the bridge validation test.
+    pub fn generate_greedy(&self, prompt: &[i64], n: usize) -> Result<Vec<i64>> {
+        let mut session = self.new_session()?;
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.decode_step(&mut session, t)?;
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut next = crate::numerics::sampler::argmax(&logits) as i64;
+        out.push(next);
+        for _ in 1..n {
+            logits = self.decode_step(&mut session, next)?;
+            next = crate::numerics::sampler::argmax(&logits) as i64;
+            out.push(next);
+        }
+        Ok(out)
+    }
+
+    /// Validate the compiled bridge against the manifest's golden vector.
+    pub fn validate(&self) -> Result<()> {
+        let test = self
+            .manifest
+            .test
+            .clone()
+            .ok_or_else(|| anyhow!("manifest has no test vector"))?;
+        let mut session = self.new_session()?;
+        let mut logits = Vec::new();
+        for &t in &test.prompt {
+            logits = self.decode_step(&mut session, t)?;
+        }
+        for (i, &expect) in test.logits_prefix.iter().enumerate() {
+            let got = logits[i] as f64;
+            let tol = 1e-3 * expect.abs().max(1.0);
+            if (got - expect).abs() > tol {
+                bail!("logits[{i}] = {got} but python reference says {expect}");
+            }
+        }
+        let got_tokens = self.generate_greedy(&test.prompt, test.expected_tokens.len())?;
+        if got_tokens != test.expected_tokens {
+            bail!("greedy tokens {got_tokens:?} != python reference {:?}", test.expected_tokens);
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory (repo-root relative, overridable).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("LPU_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+        "model": "opt-tiny",
+        "d_model": 256, "n_layers": 4, "n_heads": 8,
+        "max_seq": 256, "vocab": 512,
+        "args": [
+            {"name": "embed", "shape": [512, 256], "dtype": "f32", "offset": 0},
+            {"name": "qkv_0", "shape": [256, 768], "dtype": "f32", "offset": 524288},
+            {"name": "token", "shape": [1], "dtype": "i32"},
+            {"name": "pos", "shape": [1], "dtype": "i32"},
+            {"name": "k", "shape": [4, 256, 256], "dtype": "f32"},
+            {"name": "v", "shape": [4, 256, 256], "dtype": "f32"}
+        ],
+        "test": {
+            "prompt": [1, 2, 3],
+            "expected_tokens": [7, 8],
+            "logits_prefix": [0.25, -1.5]
+        }
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.model, "opt-tiny");
+        assert_eq!(m.d_model, 256);
+        assert_eq!(m.args.len(), 6);
+        assert_eq!(m.param_args().count(), 2);
+        assert_eq!(m.args[1].offset, Some(524288));
+        assert_eq!(m.args[1].elems(), 256 * 768);
+        let t = m.test.unwrap();
+        assert_eq!(t.prompt, vec![1, 2, 3]);
+        assert_eq!(t.expected_tokens, vec![7, 8]);
+        assert_eq!(t.logits_prefix, vec![0.25, -1.5]);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn artifact_paths_layout() {
+        let (h, m, w) = Engine::artifact_paths(Path::new("artifacts"), "opt-tiny");
+        assert_eq!(h, Path::new("artifacts/opt-tiny.decode.hlo.txt"));
+        assert_eq!(m, Path::new("artifacts/opt-tiny.manifest.json"));
+        assert_eq!(w, Path::new("artifacts/opt-tiny.weights.bin"));
+        assert!(!Engine::artifacts_present(Path::new("/nonexistent"), "x"));
+    }
+}

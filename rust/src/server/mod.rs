@@ -1,0 +1,377 @@
+//! Orion-style serving front end: a threaded TCP server speaking
+//! newline-delimited JSON, plus a matching client library.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"op":"generate","model":"opt-tiny","prompt":[1,2,3],
+//!    "max_new_tokens":8,"temperature":0.7,"top_k":50,"top_p":0.9,
+//!    "stream":true}
+//! ← {"type":"token","request_id":1,"index":0,"token":42}   (if stream)
+//! ← {"type":"done","request_id":1,"tokens":[42,...],"reason":"length"}
+//! → {"op":"metrics"}
+//! ← {"type":"metrics", ...snapshot fields...}
+//! → {"op":"models"}
+//! ← {"type":"models","models":["opt-tiny"]}
+//! ```
+//!
+//! No tokio in this offline environment: `std::net::TcpListener` with a
+//! thread per connection (the LPU serves token streams, not thousands of
+//! idle sockets — thread-per-conn is the right tool at this scale).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::{Coordinator, FinishReason, Request, TokenEvent};
+use crate::numerics::SampleParams;
+use crate::util::json::{obj, Json};
+
+/// A running server; dropping the handle does not stop it — call
+/// [`ServerHandle::stop`].
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and join the acceptor. In-flight connections
+    /// finish their current request.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the listener so accept() returns.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve `coordinator` on `addr` (use port 0 for an ephemeral port).
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let accept_thread = std::thread::Builder::new()
+        .name("lpu-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let coord = Arc::clone(&coordinator);
+                let _ = std::thread::Builder::new()
+                    .name("lpu-conn".into())
+                    .spawn(move || handle_conn(stream, coord));
+            }
+        })?;
+    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread) })
+}
+
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_err = |writer: &mut TcpStream, msg: String| {
+            let j = obj(vec![("type", "error".into()), ("message", msg.into())]);
+            let _ = writeln!(writer, "{j}");
+        };
+        let req = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                reply_err(&mut writer, format!("bad json: {e}"));
+                continue;
+            }
+        };
+        match req.get("op").as_str() {
+            Some("generate") => {
+                if let Err(e) = handle_generate(&req, &coord, &mut writer) {
+                    reply_err(&mut writer, e);
+                }
+            }
+            Some("metrics") => {
+                let mut j = coord.metrics.snapshot().to_json();
+                if let Json::Obj(o) = &mut j {
+                    o.insert("type", "metrics".into());
+                }
+                let _ = writeln!(writer, "{j}");
+            }
+            Some("models") => {
+                let models: Vec<Json> =
+                    coord.models().into_iter().map(Json::from).collect();
+                let j = obj(vec![("type", "models".into()), ("models", models.into())]);
+                let _ = writeln!(writer, "{j}");
+            }
+            Some("ping") => {
+                let _ = writeln!(writer, "{}", obj(vec![("type", "pong".into())]));
+            }
+            other => {
+                reply_err(&mut writer, format!("unknown op {other:?} from {peer:?}"));
+            }
+        }
+    }
+}
+
+fn handle_generate(
+    req: &Json,
+    coord: &Coordinator,
+    writer: &mut TcpStream,
+) -> Result<(), String> {
+    let model = req.get("model").as_str().ok_or("missing 'model'")?.to_string();
+    let prompt: Vec<i64> = req
+        .get("prompt")
+        .as_arr()
+        .ok_or("missing 'prompt'")?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as i64).ok_or("prompt tokens must be numbers"))
+        .collect::<Result<_, _>>()?;
+    let max_new_tokens = req.get("max_new_tokens").as_usize().unwrap_or(16);
+    let stream_tokens = req.get("stream").as_bool().unwrap_or(false);
+    let temperature = req.get("temperature").as_f64();
+    let params = match temperature {
+        None => SampleParams::greedy(),
+        Some(t) => SampleParams::sampled(
+            t as f32,
+            req.get("top_k").as_usize().unwrap_or(0),
+            req.get("top_p").as_f64().unwrap_or(1.0) as f32,
+        ),
+    };
+    let request = Request {
+        model,
+        prompt,
+        max_new_tokens,
+        params,
+        eos_token: req.get("eos_token").as_f64().map(|f| f as i64),
+        seed: req.get("seed").as_u64().unwrap_or(0),
+    };
+    let handle = coord.submit(request)?;
+    for ev in handle.events.iter() {
+        match ev {
+            TokenEvent::Token { request_id, index, token } => {
+                if stream_tokens {
+                    let j = obj(vec![
+                        ("type", "token".into()),
+                        ("request_id", request_id.into()),
+                        ("index", index.into()),
+                        ("token", (token as f64).into()),
+                    ]);
+                    writeln!(writer, "{j}").map_err(|e| e.to_string())?;
+                }
+            }
+            TokenEvent::Done { request_id, tokens, reason } => {
+                let j = obj(vec![
+                    ("type", "done".into()),
+                    ("request_id", request_id.into()),
+                    (
+                        "tokens",
+                        Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                    ),
+                    (
+                        "reason",
+                        match reason {
+                            FinishReason::Length => "length",
+                            FinishReason::Eos => "eos",
+                        }
+                        .into(),
+                    ),
+                ]);
+                writeln!(writer, "{j}").map_err(|e| e.to_string())?;
+                return Ok(());
+            }
+            TokenEvent::Error { message, .. } => return Err(message),
+        }
+    }
+    Err("stream ended unexpectedly".into())
+}
+
+/// Minimal blocking client for the JSON-lines protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Result of a generate call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateResult {
+    pub tokens: Vec<i64>,
+    pub reason: String,
+    /// Tokens observed via streaming events (empty if stream=false).
+    pub streamed: Vec<i64>,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn roundtrip(&mut self, req: &Json) -> Result<Json, String> {
+        writeln!(self.writer, "{req}").map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        Json::parse(&line).map_err(|e| e.to_string())
+    }
+
+    pub fn ping(&mut self) -> Result<(), String> {
+        let r = self.roundtrip(&obj(vec![("op", "ping".into())]))?;
+        if r.get("type").as_str() == Some("pong") { Ok(()) } else { Err(format!("bad pong: {r}")) }
+    }
+
+    pub fn models(&mut self) -> Result<Vec<String>, String> {
+        let r = self.roundtrip(&obj(vec![("op", "models".into())]))?;
+        Ok(r.get("models")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|m| m.as_str().map(String::from))
+            .collect())
+    }
+
+    pub fn metrics(&mut self) -> Result<Json, String> {
+        self.roundtrip(&obj(vec![("op", "metrics".into())]))
+    }
+
+    pub fn generate(
+        &mut self,
+        model: &str,
+        prompt: &[i64],
+        max_new_tokens: usize,
+        stream: bool,
+    ) -> Result<GenerateResult, String> {
+        let req = obj(vec![
+            ("op", "generate".into()),
+            ("model", model.into()),
+            ("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+            ("max_new_tokens", max_new_tokens.into()),
+            ("stream", stream.into()),
+        ]);
+        writeln!(self.writer, "{req}").map_err(|e| e.to_string())?;
+        let mut streamed = Vec::new();
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+            if line.is_empty() {
+                return Err("connection closed".into());
+            }
+            let j = Json::parse(&line).map_err(|e| e.to_string())?;
+            match j.get("type").as_str() {
+                Some("token") => {
+                    streamed.push(j.get("token").as_f64().unwrap_or(-1.0) as i64);
+                }
+                Some("done") => {
+                    return Ok(GenerateResult {
+                        tokens: j
+                            .get("tokens")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|t| t.as_f64().map(|f| f as i64))
+                            .collect(),
+                        reason: j.get("reason").as_str().unwrap_or("?").to_string(),
+                        streamed,
+                    });
+                }
+                Some("error") => {
+                    return Err(j.get("message").as_str().unwrap_or("unknown").to_string())
+                }
+                other => return Err(format!("unexpected frame type {other:?}")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendFactory, CoordinatorConfig, SchedulerPolicy};
+
+    fn test_server() -> (ServerHandle, SocketAddr) {
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 4,
+            policy: SchedulerPolicy::RoundRobin,
+        });
+        coord.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 128));
+        let h = serve(Arc::new(coord), "127.0.0.1:0").unwrap();
+        let addr = h.addr;
+        (h, addr)
+    }
+
+    #[test]
+    fn ping_and_models() {
+        let (h, addr) = test_server();
+        let mut c = Client::connect(&addr).unwrap();
+        c.ping().unwrap();
+        assert_eq!(c.models().unwrap(), vec!["opt-tiny".to_string()]);
+        h.stop();
+    }
+
+    #[test]
+    fn generate_blocking_and_streaming_agree() {
+        let (h, addr) = test_server();
+        let mut c = Client::connect(&addr).unwrap();
+        let blocking = c.generate("opt-tiny", &[1, 2], 6, false).unwrap();
+        assert_eq!(blocking.tokens.len(), 6);
+        assert!(blocking.streamed.is_empty());
+        let streaming = c.generate("opt-tiny", &[1, 2], 6, true).unwrap();
+        assert_eq!(streaming.streamed, streaming.tokens);
+        // Deterministic greedy backend: same completion both times.
+        assert_eq!(blocking.tokens, streaming.tokens);
+        h.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (h, addr) = test_server();
+        let threads: Vec<_> = (0..6)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    c.generate("opt-tiny", &[i + 1], 5, false).unwrap().tokens.len()
+                })
+            })
+            .collect();
+        for t in threads {
+            assert_eq!(t.join().unwrap(), 5);
+        }
+        let mut c = Client::connect(&addr).unwrap();
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("completed").as_u64(), Some(6));
+        h.stop();
+    }
+
+    #[test]
+    fn bad_requests_get_error_frames() {
+        let (h, addr) = test_server();
+        let mut c = Client::connect(&addr).unwrap();
+        let e = c.generate("no-such-model", &[1], 3, false).unwrap_err();
+        assert!(e.contains("unknown model"), "{e}");
+        // Malformed JSON line.
+        writeln!(c.writer, "this is not json").unwrap();
+        let mut line = String::new();
+        c.reader.read_line(&mut line).unwrap();
+        assert!(line.contains("bad json"));
+        h.stop();
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let (h, addr) = test_server();
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.roundtrip(&obj(vec![("op", "frobnicate".into())])).unwrap();
+        assert_eq!(r.get("type").as_str(), Some("error"));
+        h.stop();
+    }
+}

@@ -1,0 +1,35 @@
+//! Cycle-accurate LPU core simulator.
+//!
+//! Reimplements the paper's in-house C++ simulator ("we implement
+//! in-house cycle-accurate simulator ... to measure the latency of LPU.
+//! It also simulates ESL ... We integrate ramulator ... to simulate
+//! Samsung HBM3 Icebolt"). The simulator executes real [`crate::isa`]
+//! programs — the same binaries the HyperDex compiler emits — with an
+//! instruction-level timing model:
+//!
+//! * per-unit timelines (SMA / SXE / VXE / NET-TX / NET-RX / HOST) that
+//!   advance independently, giving the paper's concurrent execution of
+//!   memory, compute, and network instruction chains;
+//! * a scoreboard over the LMU vector registers and ICP scalar registers
+//!   (RAW/WAW hazards), which is what lets SXE and VXE run out of order
+//!   with respect to each other exactly where data allows (Fig 3(b):
+//!   softmax on VXE overlaps the next Key tile's MAC on SXE);
+//! * SMA streams paired to consuming MatMuls: a vector–matrix multiply
+//!   starts as soon as the first tile arrives and can finish no earlier
+//!   than its stream (the "streamlined" dataflow — compute at the rate
+//!   weights arrive);
+//! * ESL net streams: a MatMul with `to_net` routes partial products to
+//!   the TX buffer so transmission overlaps the producing computation,
+//!   leaving only a tail chunk visible (Fig 4(a));
+//! * functional execution of CTRL instructions (scalar ALU, branch,
+//!   jump), so compiled programs with real loops run as written.
+//!
+//! Timing-only: functional token generation runs through the PJRT
+//! runtime (`crate::runtime`); MAC-tree numerics are validated separately
+//! in [`crate::numerics`].
+
+pub mod core;
+pub mod driver;
+
+pub use self::core::{CoreSim, RunStats, SimError, Unit};
+pub use driver::{simulate_generation, simulate_prefill, GenerationReport};

@@ -1,0 +1,169 @@
+//! Micro-benchmark harness (offline `criterion` substitute).
+//!
+//! Provides warmup, adaptive iteration-count selection, outlier-robust
+//! statistics, and optional throughput reporting. All `cargo bench`
+//! targets (`rust/benches/*.rs`, `harness = false`) run through this.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One benchmark's measured result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub summary: Summary,
+    /// Optional throughput: (unit label, units per iteration).
+    pub throughput: Option<(String, f64)>,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let s = &self.summary;
+        let mut line = format!(
+            "{:<44} {:>12}/iter  (p50 {:>12}, p99 {:>12}, n={})",
+            self.name,
+            super::fmt_seconds(s.mean),
+            super::fmt_seconds(s.p50),
+            super::fmt_seconds(s.p99),
+            s.count,
+        );
+        if let Some((unit, per_iter)) = &self.throughput {
+            let rate = per_iter / s.mean;
+            line.push_str(&format!("  [{:.3e} {}/s]", rate, unit));
+        }
+        line
+    }
+}
+
+/// Bench runner with criterion-like defaults.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // LPU_BENCH_FAST=1 shortens runs for CI/tests.
+        let fast = std::env::var("LPU_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Bencher {
+            warmup: if fast { Duration::from_millis(20) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(100) } else { Duration::from_secs(2) },
+            max_samples: if fast { 30 } else { 200 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs one logical iteration and returns a
+    /// value (black-boxed to defeat dead-code elimination).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_throughput(name, None, move || {
+            f();
+        })
+    }
+
+    /// Benchmark with a throughput annotation: `units` of `unit` happen
+    /// per call of `f`.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        unit: &str,
+        units: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_throughput(name, Some((unit.to_string(), units)), move || {
+            f();
+        })
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: &str,
+        throughput: Option<(String, f64)>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // Warmup, and estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            black_box(&mut f)();
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Choose inner batch so one sample takes ~measure/max_samples.
+        let target_sample = self.measure.as_secs_f64() / self.max_samples as f64;
+        let batch = ((target_sample / est.max(1e-9)).round() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.max_samples);
+        let run_start = Instant::now();
+        while samples.len() < self.max_samples && run_start.elapsed() < self.measure {
+            let t = Instant::now();
+            for _ in 0..batch {
+                black_box(&mut f)();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+        }
+        if samples.is_empty() {
+            // Pathologically slow iteration: take one sample anyway.
+            let t = Instant::now();
+            black_box(&mut f)();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+
+        let result = BenchResult { name: name.to_string(), summary: Summary::of(&samples), throughput };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Opaque value sink; prevents the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_timing() {
+        std::env::set_var("LPU_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.mean < 0.01, "1k mults should be well under 10ms");
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("LPU_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let r = b.bench_throughput("tokens", "token", 8.0, || 42u64);
+        let (unit, per) = r.throughput.clone().unwrap();
+        assert_eq!(unit, "token");
+        assert_eq!(per, 8.0);
+        assert!(r.report_line().contains("token/s"));
+    }
+}

@@ -1,0 +1,150 @@
+//! Tiny declarative CLI argument parser (offline `clap` substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, positional arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program/subcommand names).
+    pub fn parse(raw: &[String]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends option parsing.
+                    a.positional.extend(raw[i + 1..].iter().cloned());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    a.opts.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A subcommand description used for help text and dispatch.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub usage: &'static str,
+}
+
+/// Render help for a command set.
+pub fn render_help(prog: &str, about: &str, commands: &[Command]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("{prog} — {about}\n\nUSAGE:\n  {prog} <command> [options]\n\nCOMMANDS:\n"));
+    let width = commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in commands {
+        s.push_str(&format!("  {:<width$}  {}\n", c.name, c.about, width = width));
+    }
+    s.push_str("\nRun with '<command> --help' for command options.\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positional() {
+        let a = Args::parse(&sv(&["--model", "opt-1.3b", "--fast", "--n=4", "file.json"])).unwrap();
+        assert_eq!(a.opt("model"), Some("opt-1.3b"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 4);
+        assert_eq!(a.positional(), &["file.json".to_string()]);
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = Args::parse(&sv(&["--x", "1", "--", "--not-an-opt"])).unwrap();
+        assert_eq!(a.opt("x"), Some("1"));
+        assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+
+    #[test]
+    fn typed_option_errors() {
+        let a = Args::parse(&sv(&["--n", "abc"])).unwrap();
+        assert!(a.opt_usize("n", 0).is_err());
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&sv(&["--a", "--b"])).unwrap();
+        assert!(a.flag("a"));
+        assert!(a.flag("b"));
+    }
+
+    #[test]
+    fn help_lists_commands() {
+        let cmds = [
+            Command { name: "serve", about: "run the server", usage: "" },
+            Command { name: "sim", about: "run the simulator", usage: "" },
+        ];
+        let h = render_help("lpu", "LPU toolkit", &cmds);
+        assert!(h.contains("serve"));
+        assert!(h.contains("run the simulator"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Mini property-based testing harness (offline `proptest` substitute).
+//!
+//! Runs a property over many generated cases with a deterministic base
+//! seed, reports the failing seed/case, and performs bounded shrinking for
+//! integer-vector inputs. Used by `rust/tests/proptests.rs` and module
+//! unit tests for invariants (ISA round-trips, mapper disjointness,
+//! scheduler conservation, ring delivery).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be overridden for reproduction via LPU_PROPTEST_SEED.
+        let seed = std::env::var("LPU_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 256, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases. The property receives a
+/// per-case RNG; return `Err(msg)` to fail. Panics with the case number
+/// and seed on failure so the case is reproducible.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {case_seed:#x}, base {:#x}): {msg}\n\
+                 reproduce with LPU_PROPTEST_SEED={}",
+                cfg.cases, cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn quick<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, Config::default(), prop);
+}
+
+/// Generate a vector of length in [min_len, max_len) with elements from
+/// `gen`.
+pub fn vec_of<T>(rng: &mut Rng, min_len: usize, max_len: usize, mut gen: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let n = rng.range(min_len, max_len.max(min_len + 1));
+    (0..n).map(|_| gen(rng)).collect()
+}
+
+/// Assert two f64s are within `tol` relative error (abs for tiny values).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    let rel = (a - b).abs() / denom;
+    if rel <= tol || (a - b).abs() <= tol * 1e-6 {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (rel err {rel:.3e} > {tol:.1e})"))
+    }
+}
+
+/// Shrink a failing `Vec<u64>` input: try removing chunks and halving
+/// elements while the property still fails; returns the smallest failing
+/// input found within `budget` attempts.
+pub fn shrink_vec<F>(mut input: Vec<u64>, budget: usize, mut fails: F) -> Vec<u64>
+where
+    F: FnMut(&[u64]) -> bool,
+{
+    debug_assert!(fails(&input), "shrink_vec requires a failing input");
+    let mut attempts = 0;
+    // Phase 1: delete chunks (binary-search style).
+    let mut chunk = input.len() / 2;
+    while chunk > 0 && attempts < budget {
+        let mut i = 0;
+        while i + chunk <= input.len() && attempts < budget {
+            let mut candidate = input.clone();
+            candidate.drain(i..i + chunk);
+            attempts += 1;
+            if fails(&candidate) {
+                input = candidate;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    // Phase 2: halve individual elements toward zero.
+    let mut progress = true;
+    while progress && attempts < budget {
+        progress = false;
+        for i in 0..input.len() {
+            if attempts >= budget {
+                break;
+            }
+            if input[i] == 0 {
+                continue;
+            }
+            let mut candidate = input.clone();
+            candidate[i] /= 2;
+            attempts += 1;
+            if fails(&candidate) {
+                input = candidate;
+                progress = true;
+            }
+        }
+    }
+    input
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_for_true_property() {
+        quick("add-commutes", |rng| {
+            let a = rng.range_u64(0, 1000);
+            let b = rng.range_u64(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn check_panics_with_seed_info() {
+        check("always-fails", Config { cases: 4, seed: 1 }, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut seen_a = Vec::new();
+        check("collect-a", Config { cases: 8, seed: 99 }, |rng| {
+            seen_a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        check("collect-b", Config { cases: 8, seed: 99 }, |rng| {
+            seen_b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+        assert!(close(0.0, 0.0, 1e-9).is_ok());
+    }
+
+    #[test]
+    fn shrink_finds_minimal_counterexample() {
+        // Property fails iff the vector contains an element >= 100.
+        let fails = |xs: &[u64]| xs.iter().any(|&x| x >= 100);
+        let input = vec![3, 7, 250, 12, 9, 180, 4];
+        let shrunk = shrink_vec(input, 10_000, fails);
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 100 && shrunk[0] < 200);
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, 2, 5, |r| r.next_u64());
+            assert!((2..5).contains(&v.len()));
+        }
+    }
+}

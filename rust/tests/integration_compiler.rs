@@ -1,0 +1,114 @@
+//! Integration: HyperDex compiler across the model zoo, including binary
+//! round-trips through the on-disk format and the assembler.
+
+use lpu::compiler::{compile, verify_chains, CompileOpts, ParallelMode};
+use lpu::config::LpuConfig;
+use lpu::isa::{asm, Program};
+use lpu::model::{by_name, paper_eval_models};
+
+fn opts(devices: usize, pos: usize) -> CompileOpts {
+    CompileOpts { n_devices: devices, position: pos, ..Default::default() }
+}
+
+#[test]
+fn all_paper_models_compile_on_flagship_config() {
+    let cfg = LpuConfig::asic_3_28tbs();
+    for m in paper_eval_models() {
+        let devices = m.devices_needed(cfg.hbm.capacity());
+        let c = compile(&m, &cfg, &opts(devices, 100)).unwrap();
+        assert!(c.stats.peak_live_regs <= 64, "{}", m.name);
+        verify_chains(&c.program).unwrap();
+    }
+}
+
+#[test]
+fn gpt3_20b_compiles_at_all_ring_sizes() {
+    let cfg = LpuConfig::asic_3_28tbs();
+    let m = by_name("gpt3-20b").unwrap();
+    for n in [1, 2, 4, 8] {
+        let c = compile(&m, &cfg, &opts(n, 50)).unwrap();
+        assert!(c.program.len() > 100, "n={n}");
+    }
+}
+
+#[test]
+fn compiled_binary_roundtrips_through_disk() {
+    let cfg = LpuConfig::asic_819gbs();
+    let m = by_name("opt-tiny").unwrap();
+    let c = compile(&m, &cfg, &opts(1, 7)).unwrap();
+    let path = std::env::temp_dir().join("lpu_test_prog.lpubin");
+    std::fs::write(&path, c.program.to_bytes().unwrap()).unwrap();
+    let back = Program::from_bytes(&std::fs::read(&path).unwrap()).unwrap();
+    assert_eq!(back, c.program);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn compiled_program_disassembles_and_reassembles() {
+    let cfg = LpuConfig::asic_819gbs();
+    let m = by_name("opt-tiny").unwrap();
+    let c = compile(&m, &cfg, &opts(1, 3)).unwrap();
+    let text = asm::disasm_program(&c.program);
+    let body: String = text
+        .lines()
+        .map(|l| l.splitn(2, ": ").nth(1).unwrap())
+        .collect::<Vec<_>>()
+        .join("\n");
+    let back = asm::assemble(&body).unwrap();
+    assert_eq!(back, c.program);
+}
+
+#[test]
+fn program_size_scales_with_layers_not_position() {
+    let cfg = LpuConfig::asic_3_28tbs();
+    let tiny = compile(&by_name("opt-tiny").unwrap(), &cfg, &opts(1, 0)).unwrap();
+    let mini = compile(&by_name("opt-mini").unwrap(), &cfg, &opts(1, 0)).unwrap();
+    assert!(mini.program.len() > tiny.program.len());
+    // Position does NOT change instruction count (only stream lengths).
+    let far = compile(&by_name("opt-tiny").unwrap(), &cfg, &opts(1, 200)).unwrap();
+    assert_eq!(far.program.len(), tiny.program.len());
+}
+
+#[test]
+fn memory_map_weight_bytes_track_shard_fraction() {
+    let cfg = LpuConfig::asic_3_28tbs();
+    let m = by_name("opt-6.7b").unwrap();
+    let c1 = compile(&m, &cfg, &opts(1, 0)).unwrap();
+    let c4 = compile(&m, &cfg, &opts(4, 0)).unwrap();
+    let frac = c4.map.weight_bytes() as f64 / c1.map.weight_bytes() as f64;
+    // Sharded weights -> ~1/4 plus replicated embeddings.
+    assert!((0.25..=0.45).contains(&frac), "shard fraction {frac:.3}");
+}
+
+#[test]
+fn batch_and_multitoken_modes_compile_and_verify() {
+    let cfg = LpuConfig::asic_819gbs();
+    let m = by_name("opt-tiny").unwrap();
+    for mode in [ParallelMode::Batch { batch: 4 }, ParallelMode::MultiToken { tokens: 8 }] {
+        let o = CompileOpts { mode, sxe_sets: 2, ..opts(1, 10) };
+        let c = compile(&m, &cfg, &o).unwrap();
+        verify_chains(&c.program).unwrap();
+        assert!(c.stats.peak_live_regs <= 64);
+    }
+}
+
+#[test]
+fn esl_overlap_flag_changes_net_instruction_count() {
+    let cfg = LpuConfig::asic_3_28tbs();
+    let m = by_name("opt-1.3b").unwrap();
+    let with = compile(&m, &cfg, &CompileOpts { esl_overlap: true, ..opts(2, 10) }).unwrap();
+    let without = compile(&m, &cfg, &CompileOpts { esl_overlap: false, ..opts(2, 10) }).unwrap();
+    let net = |p: &Program| p.category_histogram()[2].1;
+    // Blocking mode emits the explicit 2(n-1)-step ring all-reduce.
+    assert!(net(&without.program) > net(&with.program));
+}
+
+#[test]
+fn compile_stats_chain_interleave_positive() {
+    let cfg = LpuConfig::asic_3_28tbs();
+    let m = by_name("opt-1.3b").unwrap();
+    let c = compile(&m, &cfg, &opts(1, 50)).unwrap();
+    // MEM and COMP chains alternate heavily in the decoder body.
+    assert!(c.stats.chain.interleave > 10.0, "interleave {}", c.stats.chain.interleave);
+    assert!(c.stats.chain.peak_streams >= 1);
+}

@@ -1,0 +1,95 @@
+//! Integration: ESL scalability (Fig 7c) and reconfigurable rings
+//! (Fig 4b), end to end through compiler + simulator.
+
+use lpu::config::LpuConfig;
+use lpu::esl::cluster::{multi_model_deployment, scaling_sweep, speedup_per_doubling};
+use lpu::esl::{LinkModel, RingConfig, Router};
+use lpu::gpu::{scaling_speedups, GpuConfig};
+use lpu::model::by_name;
+
+/// Paper headline: LPU achieves 1.75x per doubling (5.43x at 8 devices)
+/// on GPT3-20B, vs DGX A100's 1.38x (2.65x at 8).
+#[test]
+fn fig7c_lpu_scaling_near_paper() {
+    let m = by_name("gpt3-20b").unwrap();
+    let cfg = LpuConfig::asic_3_28tbs();
+    let pts = scaling_sweep(&m, &cfg, 8, true, 32, 128).unwrap();
+    let s8 = pts.last().unwrap().speedup;
+    assert!((4.6..=7.0).contains(&s8), "8-device speedup {s8:.2} vs paper 5.43");
+    let per2 = speedup_per_doubling(&pts);
+    assert!((1.55..=1.95).contains(&per2), "per-doubling {per2:.2} vs paper 1.75");
+}
+
+#[test]
+fn fig7c_lpu_beats_dgx_scaling() {
+    let m = by_name("gpt3-20b").unwrap();
+    let lpu = scaling_sweep(&m, &LpuConfig::asic_3_28tbs(), 8, true, 32, 128).unwrap();
+    let dgx = scaling_speedups(&GpuConfig::a100(), &m, 8, 100);
+    let lpu8 = lpu.last().unwrap().speedup;
+    let dgx8 = dgx.last().unwrap().1;
+    assert!(lpu8 > 1.5 * dgx8, "LPU {lpu8:.2} vs DGX {dgx8:.2}");
+}
+
+/// Without ESL overlap (blocking sync), scaling collapses toward the
+/// GPU's regime — the ablation that isolates the paper's contribution.
+#[test]
+fn overlap_ablation_isolates_esl_benefit() {
+    let m = by_name("gpt3-20b").unwrap();
+    let cfg = LpuConfig::asic_3_28tbs();
+    let with = scaling_sweep(&m, &cfg, 8, true, 32, 64).unwrap();
+    let without = scaling_sweep(&m, &cfg, 8, false, 32, 64).unwrap();
+    let s_with = with.last().unwrap().speedup;
+    let s_without = without.last().unwrap().speedup;
+    assert!(
+        s_with > s_without + 0.4,
+        "overlap {s_with:.2} should clearly beat blocking {s_without:.2}"
+    );
+}
+
+/// Fig 4(b): an 8-device server reconfigures into two 4-rings serving
+/// two different models concurrently; both make progress with sane
+/// latency, and rings never share devices.
+#[test]
+fn reconfigurable_rings_serve_two_models() {
+    let m1 = by_name("opt-mini").unwrap();
+    let m2 = by_name("opt-tiny").unwrap();
+    let cfg = LpuConfig::fpga_u55c();
+    let reports = multi_model_deployment(8, 4, &[&m1, &m2], &cfg, 64).unwrap();
+    assert_eq!(reports.len(), 2);
+    for (_, r) in &reports {
+        assert!(r.ms_per_token > 0.0 && r.ms_per_token < 100.0);
+        assert_eq!(r.n_devices, 4);
+    }
+    // The smaller model must be faster on its ring.
+    assert!(reports[1].1.ms_per_token < reports[0].1.ms_per_token);
+}
+
+#[test]
+fn ring_reconfig_all_sizes_cover_disjointly() {
+    for size in [2, 4, 8] {
+        let rc = RingConfig::new(8, size).unwrap();
+        rc.validate().unwrap();
+        // Routing stays within each ring.
+        for r in 0..rc.n_rings() {
+            let members = rc.members(r);
+            let router = Router::new(members[0], rc.clone());
+            for &d in &members[1..] {
+                let (hops, _) = router.route(d).unwrap();
+                assert!(hops <= size / 2);
+            }
+        }
+    }
+}
+
+/// Wire-level check: the visible ESL all-reduce tail is a small fraction
+/// of the blocking cost for realistic hidden sizes.
+#[test]
+fn allreduce_tail_fraction() {
+    let l = LinkModel { bw: 25e9, hop_latency: 500e-9 };
+    for d in [2048u64, 9216, 6144] {
+        let bytes = d * 2;
+        let tail = l.overlapped_allreduce_tail(bytes, 8);
+        let blocking = l.blocking_allreduce_time(bytes, 8);
+        assert!(tail <= blocking);
+    }
+}

@@ -1,0 +1,83 @@
+//! Integration: TCP server + client over the coordinator — with the sim
+//! backend always, and over the real PJRT artifacts when present (the
+//! full request path of the paper's Orion server).
+
+use std::sync::Arc;
+
+use lpu::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SchedulerPolicy};
+use lpu::runtime::Engine;
+use lpu::server::{serve, Client};
+
+fn start(factory: BackendFactory, model: &str) -> (lpu::server::ServerHandle, std::net::SocketAddr) {
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: 4,
+        policy: SchedulerPolicy::RoundRobin,
+    });
+    coord.add_pool(model, 2, factory);
+    let h = serve(Arc::new(coord), "127.0.0.1:0").unwrap();
+    let addr = h.addr;
+    (h, addr)
+}
+
+#[test]
+fn sim_backend_full_protocol() {
+    let (h, addr) = start(BackendFactory::sim("opt-tiny", 512), "opt-tiny");
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    assert_eq!(c.models().unwrap(), vec!["opt-tiny".to_string()]);
+    let r = c.generate("opt-tiny", &[1, 2, 3], 10, true).unwrap();
+    assert_eq!(r.tokens.len(), 10);
+    assert_eq!(r.streamed, r.tokens);
+    assert_eq!(r.reason, "length");
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("completed").as_u64(), Some(1));
+    h.stop();
+}
+
+#[test]
+fn sim_backend_parallel_clients_and_throughput_counter() {
+    let (h, addr) = start(BackendFactory::sim("opt-tiny", 512), "opt-tiny");
+    let threads: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                c.generate("opt-tiny", &[i as i64 + 1], 12, false).unwrap().tokens
+            })
+        })
+        .collect();
+    let mut all = Vec::new();
+    for t in threads {
+        all.push(t.join().unwrap());
+    }
+    assert!(all.iter().all(|t| t.len() == 12));
+    let mut c = Client::connect(&addr).unwrap();
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("tokens_out").as_u64(), Some(8 * 12));
+    h.stop();
+}
+
+/// The real thing: serve the AOT-compiled opt-tiny over PJRT and check
+/// the served tokens equal the python golden continuation.
+#[test]
+fn pjrt_backend_serves_golden_tokens() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !Engine::artifacts_present(&dir, "opt-tiny") {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return;
+    }
+    // Read the golden vector straight from the manifest.
+    let engine = Engine::load(&dir, "opt-tiny").unwrap();
+    let test = engine.manifest.test.clone().expect("manifest test vector");
+    drop(engine);
+
+    let (h, addr) = start(BackendFactory::pjrt(dir, "opt-tiny"), "opt-tiny");
+    let mut c = Client::connect(&addr).unwrap();
+    let r = c
+        .generate("opt-tiny", &test.prompt, test.expected_tokens.len(), true)
+        .unwrap();
+    assert_eq!(
+        r.tokens, test.expected_tokens,
+        "served tokens diverge from python reference"
+    );
+    h.stop();
+}

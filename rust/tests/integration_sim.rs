@@ -1,0 +1,139 @@
+//! Integration: compiler → cycle simulator on the paper's evaluation
+//! points. These assertions pin the reproduction to the paper's headline
+//! numbers (methodology: in=32, out=2016 tokens, 3.28 TB/s config).
+
+use lpu::config::LpuConfig;
+use lpu::model::by_name;
+use lpu::sim::{simulate_generation, simulate_prefill};
+
+const IN: usize = 32;
+const OUT: usize = 2016;
+
+fn run(model: &str, devices: usize) -> lpu::sim::GenerationReport {
+    simulate_generation(
+        &by_name(model).unwrap(),
+        &LpuConfig::asic_3_28tbs(),
+        devices,
+        IN,
+        OUT,
+        true,
+    )
+    .unwrap()
+}
+
+/// Paper: 1.25 ms/token for OPT-1.3B on one LPU.
+#[test]
+fn opt_1_3b_latency_near_paper() {
+    let r = run("opt-1.3b", 1);
+    assert!(
+        (1.0..=1.5).contains(&r.ms_per_token),
+        "1.3B: {:.3} ms/token vs paper 1.25",
+        r.ms_per_token
+    );
+    // Paper: 63.3% bandwidth utilization.
+    assert!(
+        (0.55..=0.75).contains(&r.bandwidth_util),
+        "1.3B util {:.3} vs paper 0.633",
+        r.bandwidth_util
+    );
+}
+
+/// Paper: 4.62 ms/token for OPT-6.7B.
+#[test]
+fn opt_6_7b_latency_near_paper() {
+    let r = run("opt-6.7b", 1);
+    assert!(
+        (4.2..=5.4).contains(&r.ms_per_token),
+        "6.7B: {:.3} ms/token vs paper 4.62",
+        r.ms_per_token
+    );
+}
+
+/// Paper: 90.2% utilization on OPT-30B (latency not quoted; util implies
+/// ~20.3 ms/token).
+#[test]
+fn opt_30b_utilization_near_paper() {
+    let r = run("opt-30b", 1);
+    assert!(
+        (0.84..=0.95).contains(&r.bandwidth_util),
+        "30B util {:.3} vs paper 0.902",
+        r.bandwidth_util
+    );
+    assert!((18.0..=23.0).contains(&r.ms_per_token), "30B {:.2} ms", r.ms_per_token);
+}
+
+/// Paper: 22.2 ms/token, 90.6% util for OPT-66B on two LPUs.
+#[test]
+fn opt_66b_two_devices_near_paper() {
+    let r = run("opt-66b", 2);
+    assert!(
+        (20.0..=25.0).contains(&r.ms_per_token),
+        "66B x2: {:.2} ms/token vs paper 22.2",
+        r.ms_per_token
+    );
+    assert!(
+        (0.84..=0.95).contains(&r.bandwidth_util),
+        "66B util {:.3} vs paper 0.906",
+        r.bandwidth_util
+    );
+}
+
+/// Utilization must *rise* with model size (the LPU's key property —
+/// and the small-model regime is where the GPU collapses).
+#[test]
+fn utilization_monotone_in_model_size() {
+    let u13 = run("opt-1.3b", 1).bandwidth_util;
+    let u67 = run("opt-6.7b", 1).bandwidth_util;
+    let u30 = run("opt-30b", 1).bandwidth_util;
+    assert!(u13 < u67 && u67 < u30, "{u13:.3} {u67:.3} {u30:.3}");
+}
+
+/// The three ASIC configs keep utilization roughly flat for a model that
+/// fits them all — "maximum performance regardless of the model size".
+#[test]
+fn bandwidth_scaling_across_asic_configs() {
+    let m = by_name("opt-1.3b").unwrap();
+    let small = simulate_generation(&m, &LpuConfig::asic_819gbs(), 1, IN, 256, true).unwrap();
+    let big = simulate_generation(&m, &LpuConfig::asic_3_28tbs(), 1, IN, 256, true).unwrap();
+    // 4x bandwidth should buy ~3.2-4x latency improvement.
+    let ratio = small.ms_per_token / big.ms_per_token;
+    assert!((2.8..=4.4).contains(&ratio), "819GB/s vs 3.28TB/s ratio {ratio:.2}");
+}
+
+/// FPGA config (Orion building block): 1.3B at 460 GB/s should land in
+/// the several-ms range, slower than the ASIC by roughly the BW ratio.
+#[test]
+fn fpga_config_sane() {
+    let m = by_name("opt-1.3b").unwrap();
+    let r = simulate_generation(&m, &LpuConfig::fpga_u55c(), 1, IN, 256, true).unwrap();
+    assert!((5.0..=10.0).contains(&r.ms_per_token), "fpga 1.3B {:.2} ms", r.ms_per_token);
+}
+
+/// Multi-token (summarization) mode: prefill of the 32-token prompt must
+/// be much cheaper than 32 serial decode steps (paper future work,
+/// "reduce the latency significantly for user requests with long input").
+#[test]
+fn prefill_mode_speedup() {
+    let m = by_name("opt-1.3b").unwrap();
+    let cfg = LpuConfig::asic_3_28tbs();
+    let (prefill_s, _) = simulate_prefill(&m, &cfg, 1, 32, 4).unwrap();
+    let serial = simulate_generation(&m, &cfg, 1, 0, 32, true).unwrap();
+    let serial_s = serial.ms_per_token * 1e-3 * 32.0;
+    let speedup = serial_s / prefill_s;
+    assert!(speedup > 2.0, "multi-token prefill speedup {speedup:.2}");
+}
+
+/// Latency grows with context position (KV reads), roughly linearly.
+#[test]
+fn latency_linear_in_position() {
+    let r = run("opt-1.3b", 1);
+    let (p0, c0) = r.samples[0];
+    let (p1, c1) = *r.samples.last().unwrap();
+    let slope = (c1 as f64 - c0 as f64) / (p1 - p0) as f64;
+    assert!(slope > 0.0);
+    // Mid-sample should sit near the line (linearity).
+    let mid = r.samples[r.samples.len() / 2];
+    let interp = c0 as f64 + slope * (mid.0 - p0) as f64;
+    let rel = (mid.1 as f64 - interp).abs() / interp;
+    assert!(rel < 0.02, "nonlinear latency growth: rel {rel:.4}");
+}

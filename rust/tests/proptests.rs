@@ -1,0 +1,198 @@
+//! Cross-module property tests (in-tree harness: `lpu::util::proptest`).
+//!
+//! Invariants:
+//! * random well-formed MEM/COMP straight-line programs always simulate
+//!   to completion, and timing is monotone under instruction insertion;
+//! * the HyperDex pipeline (map → instgen → regalloc → chain-verify)
+//!   holds its invariants for random (model, devices, position, mode);
+//! * JSON round-trips arbitrary generated documents;
+//! * the sampler's support respects top-k under random logits;
+//! * mapper regions stay disjoint (delegated check, random configs).
+
+use lpu::compiler::{compile, CompileError, CompileOpts, ParallelMode};
+use lpu::config::LpuConfig;
+use lpu::isa::asm::assemble;
+use lpu::model::by_name;
+use lpu::numerics::{SampleParams, Sampler};
+use lpu::sim::CoreSim;
+use lpu::util::json::{Json, JsonObj};
+use lpu::util::proptest::{quick, Config};
+use lpu::util::rng::Rng;
+
+/// Generate a random well-formed straight-line program (stream
+/// discipline respected) as asm text; return (text, instr count).
+fn random_program(rng: &mut Rng) -> String {
+    let mut src = String::new();
+    let n_ops = rng.range(1, 30);
+    for _ in 0..n_ops {
+        match rng.range(0, 5) {
+            0 => {
+                let len = rng.range(64, 100_000);
+                let k = 64 * rng.range(1, 16);
+                let n = rng.range(1, 256);
+                src.push_str(&format!("read.params 0x0, len={len}\n"));
+                src.push_str(&format!("matmul v1 -> v2, k={k}, n={n}\n"));
+            }
+            1 => {
+                let len = rng.range(1, 8192);
+                src.push_str(&format!("vec.add v1, v2 -> v3, len={len}\n"));
+            }
+            2 => {
+                let len = rng.range(1, 4096);
+                src.push_str(&format!("fused.scale_softmax v2, v2 -> v4, len={len}\n"));
+            }
+            3 => {
+                let len = rng.range(1, 65536);
+                src.push_str(&format!("write.kv 0x100, len={len}\n"));
+            }
+            _ => {
+                let len = rng.range(64, 8192);
+                src.push_str(&format!(
+                    "matmul v1 -> v5, k=64, n={}, lmu\nsample v5 -> v6, len={len}\n",
+                    rng.range(1, 128)
+                ));
+            }
+        }
+    }
+    src.push_str("halt\n");
+    src
+}
+
+#[test]
+fn prop_random_programs_simulate_to_completion() {
+    quick("random-programs-halt", |rng| {
+        let src = random_program(rng);
+        let prog = assemble(&src).map_err(|e| format!("asm: {e}\n{src}"))?;
+        let mut sim = CoreSim::new(&LpuConfig::asic_3_28tbs());
+        let stats = sim.run(&prog).map_err(|e| format!("sim: {e}"))?;
+        if stats.cycles == 0 && prog.len() > 1 {
+            return Err("zero cycles for nonempty program".into());
+        }
+        if stats.bandwidth_util() > 1.0 {
+            return Err(format!("utilization {} > 1", stats.bandwidth_util()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adding_work_never_reduces_cycles() {
+    quick("sim-monotone", |rng| {
+        let base_src = random_program(rng);
+        let extra = "read.params 0x0, len=100000\nmatmul v1 -> v2, k=64, n=64\nhalt\n";
+        let extended = format!("{}{}", base_src.trim_end_matches("halt\n"), extra);
+        let mut sim = CoreSim::new(&LpuConfig::asic_3_28tbs());
+        let a = sim.run(&assemble(&base_src).unwrap()).map_err(|e| e.to_string())?;
+        let b = sim.run(&assemble(&extended).unwrap()).map_err(|e| e.to_string())?;
+        if b.cycles >= a.cycles {
+            Ok(())
+        } else {
+            Err(format!("extended program faster: {} < {}", b.cycles, a.cycles))
+        }
+    });
+}
+
+#[test]
+fn prop_compiler_pipeline_invariants() {
+    let models = ["opt-tiny", "opt-mini", "opt-125m", "opt-350m"];
+    quick("compiler-pipeline", |rng| {
+        let model = by_name(models[rng.range(0, models.len())]).unwrap();
+        let cfg = if rng.bool(0.5) { LpuConfig::asic_819gbs() } else { LpuConfig::fpga_u55c() };
+        let mode = match rng.range(0, 3) {
+            0 => ParallelMode::Single,
+            1 => ParallelMode::Batch { batch: rng.range(2, 5) },
+            _ => ParallelMode::MultiToken { tokens: rng.range(2, 9) },
+        };
+        let opts = CompileOpts {
+            n_devices: 1 << rng.range(0, 3),
+            position: rng.range(0, model.max_seq / 2),
+            esl_overlap: rng.bool(0.5),
+            mode,
+            sxe_sets: rng.range(1, 4),
+        };
+        match compile(&model, &cfg, &opts) {
+            Ok(c) => {
+                // chain-verified inside compile(); additionally:
+                if c.stats.peak_live_regs > 64 {
+                    return Err(format!("{}: peak regs {}", model.name, c.stats.peak_live_regs));
+                }
+                if !matches!(c.program.instrs.last(), Some(lpu::isa::Instr::Halt)) {
+                    return Err("missing halt".into());
+                }
+                // Simulate it, too: compiled programs must always run.
+                let mut sim = CoreSim::new(&cfg);
+                sim.run(&c.program).map_err(|e| format!("{}: {e}", model.name))?;
+                Ok(())
+            }
+            Err(CompileError::BadPartition { .. }) | Err(CompileError::OutOfMemory { .. }) => Ok(()),
+            Err(e) => Err(format!("{}: {e}", model.name)),
+        }
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+        3 => {
+            let n = rng.range(0, 12);
+            Json::Str((0..n).map(|_| *rng.choose(&['a', 'é', '"', '\\', '\n', '7', '中'])).collect())
+        }
+        4 => Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut o = JsonObj::new();
+            for i in 0..rng.range(0, 5) {
+                o.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(o)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    lpu::util::proptest::check("json-roundtrip", Config { cases: 512, ..Default::default() }, |rng| {
+        let v = random_json(rng, 4);
+        for text in [v.to_string(), v.to_string_pretty()] {
+            let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+            if back != v {
+                return Err(format!("roundtrip mismatch: {v} -> {text} -> {back}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampler_respects_topk_support() {
+    quick("sampler-topk", |rng| {
+        let vocab = rng.range(4, 200);
+        let logits: Vec<f32> = (0..vocab).map(|_| rng.f32() * 10.0 - 5.0).collect();
+        let k = rng.range(1, vocab);
+        let p = SampleParams::sampled(rng.range_f64(0.2, 3.0) as f32, k, 1.0);
+        let mut sampler = Sampler::new(rng.next_u64());
+        // The sampled token must be among the k largest logits.
+        let mut ranked: Vec<usize> = (0..vocab).collect();
+        ranked.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let allowed = &ranked[..k];
+        for _ in 0..16 {
+            let t = sampler.sample(&logits, &p);
+            if !allowed.contains(&t) {
+                return Err(format!("token {t} outside top-{k}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fp16_roundtrip_via_f32_stable() {
+    quick("fp16-double-roundtrip", |rng| {
+        // f32 -> f16 -> f32 -> f16 must be a fixed point after one hop.
+        let x = (rng.f32() - 0.5) * 1e5;
+        let h1 = lpu::numerics::F16::from_f32(x);
+        let h2 = lpu::numerics::F16::from_f32(h1.to_f32());
+        if h1 == h2 { Ok(()) } else { Err(format!("{x}: {:04x} != {:04x}", h1.0, h2.0)) }
+    });
+}

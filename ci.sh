@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Pre-PR gate for the LPU reproduction. Run from the repo root:
+#
+#   ./ci.sh
+#
+# Steps (tier-1 = build + test; fmt/clippy run when the components are
+# installed, and any finding fails the gate):
+#   1. cargo fmt --check
+#   2. cargo clippy -- -D warnings
+#   3. cargo build --release
+#   4. cargo test -q
+#   5. serving bench, smoke mode (LPU_BENCH_FAST=1)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+step() { printf '\n== %s ==\n' "$*"; }
+
+if cargo fmt --version >/dev/null 2>&1; then
+  step "cargo fmt --check"
+  cargo fmt --check
+else
+  step "cargo fmt --check (SKIPPED: rustfmt not installed)"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+  step "cargo clippy -- -D warnings"
+  cargo clippy --all-targets -- -D warnings
+else
+  step "cargo clippy (SKIPPED: clippy not installed)"
+fi
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q"
+cargo test -q
+
+step "serving bench (smoke)"
+LPU_BENCH_FAST=1 cargo bench --bench serving_load
+
+printf '\nci.sh: all gates green\n'

@@ -52,6 +52,7 @@ fn main() {
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: 4,
         policy: SchedulerPolicy::RoundRobin,
+        ..CoordinatorConfig::default()
     });
     coord.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
     b.bench_throughput("coordinator/8-token request (sim backend)", "token", 8.0, || {

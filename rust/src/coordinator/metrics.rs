@@ -2,22 +2,73 @@
 //! LPU-equipped systems at the datacenter level").
 //!
 //! Lock-guarded Welford accumulators for queueing delay, time-to-first-
-//! token, per-token latency, and end-to-end request latency, plus
-//! counters. Snapshots are cheap copies; `to_json` feeds the server's
-//! `/metrics`-style endpoint.
+//! token, per-token latency (TPOT), and end-to-end request latency, plus
+//! counters and bounded sample reservoirs so snapshots report p50/p95/p99
+//! tails — the numbers a latency-optimized serving layer is judged on.
+//! `snapshot()` copies the reservoirs out under the lock and does the
+//! percentile sort after releasing it, so metrics readers never stall
+//! the decode hot path; `to_json` feeds the server's `/metrics`-style
+//! endpoint.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::json::{obj, Json};
-use crate::util::stats::Welford;
+use crate::util::stats::{percentile, Welford};
+
+/// Max retained samples per latency series; once full the reservoir
+/// overwrites in arrival order (sliding window over recent traffic).
+const RESERVOIR_CAP: usize = 65_536;
+
+#[derive(Default)]
+struct Series {
+    welford: Welford,
+    samples: Vec<f64>,
+    /// Total samples ever seen (drives the overwrite cursor).
+    seen: u64,
+}
+
+impl Series {
+    fn add(&mut self, x: f64) {
+        self.welford.add(x);
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(x);
+        } else {
+            self.samples[(self.seen as usize) % RESERVOIR_CAP] = x;
+        }
+        self.seen += 1;
+    }
+
+}
+
+/// Sort + rank outside any lock (the reservoirs can hold 64Ki samples;
+/// sorting them under the hot-path mutex would stall every worker).
+fn percentiles_of(mut samples: Vec<f64>) -> Percentiles {
+    if samples.is_empty() {
+        return Percentiles::default();
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Percentiles {
+        p50: percentile(&samples, 50.0),
+        p95: percentile(&samples, 95.0),
+        p99: percentile(&samples, 99.0),
+    }
+}
+
+/// p50/p95/p99 triple, seconds. Zero when no samples exist.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
 
 #[derive(Default)]
 struct Inner {
     queue_delay: Welford,
-    ttft: Welford,
-    token_latency: Welford,
+    ttft: Series,
+    token_latency: Series,
     request_latency: Welford,
 }
 
@@ -28,7 +79,14 @@ pub struct Metrics {
     completed: AtomicU64,
     errors: AtomicU64,
     cancelled: AtomicU64,
+    /// Requests refused at admission (KV budget can never fit them).
+    rejected: AtomicU64,
     tokens_out: AtomicU64,
+    /// Fused batched decode steps executed across all workers.
+    batch_steps: AtomicU64,
+    /// Total lanes advanced across all fused steps (lanes/steps = mean
+    /// achieved batch size).
+    batch_lanes: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -41,10 +99,17 @@ pub struct Snapshot {
     pub errors: u64,
     /// Requests abandoned by their client mid-stream.
     pub cancelled: u64,
+    /// Requests refused at admission (KV need exceeds the budget).
+    pub rejected: u64,
     pub tokens_out: u64,
+    pub batch_steps: u64,
+    /// Mean lanes per fused step (batched vecmat reuse actually achieved).
+    pub mean_batch_size: f64,
     pub mean_queue_delay_s: f64,
     pub mean_ttft_s: f64,
+    pub ttft: Percentiles,
     pub mean_token_latency_s: f64,
+    pub tpot: Percentiles,
     pub p_token_latency_max_s: f64,
     pub mean_request_latency_s: f64,
 }
@@ -63,7 +128,10 @@ impl Metrics {
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
             tokens_out: AtomicU64::new(0),
+            batch_steps: AtomicU64::new(0),
+            batch_lanes: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -86,6 +154,12 @@ impl Metrics {
         self.inner.lock().unwrap().token_latency.add(step.as_secs_f64());
     }
 
+    /// One fused batched decode step advanced `lanes` slots.
+    pub fn on_batch_step(&self, lanes: usize) {
+        self.batch_steps.fetch_add(1, Ordering::Relaxed);
+        self.batch_lanes.fetch_add(lanes as u64, Ordering::Relaxed);
+    }
+
     pub fn on_done(&self, _tokens: usize, total: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.inner.lock().unwrap().request_latency.add(total.as_secs_f64());
@@ -95,35 +169,62 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A request was refused at admission (can never fit the KV budget).
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A client disconnected mid-stream after `tokens` were generated.
     pub fn on_cancel(&self, _tokens: usize) {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let inner = self.inner.lock().unwrap();
+        // Copy everything out under the lock, then do the O(n log n)
+        // percentile work after dropping it so workers never wait on a
+        // metrics reader mid-step.
+        let (queue_delay_mean, ttft_mean, ttft_samples, tok_mean, tok_count, tok_max, tok_samples, req_mean) = {
+            let inner = self.inner.lock().unwrap();
+            (
+                zero_nan(inner.queue_delay.mean()),
+                zero_nan(inner.ttft.welford.mean()),
+                inner.ttft.samples.clone(),
+                zero_nan(inner.token_latency.welford.mean()),
+                inner.token_latency.welford.count(),
+                inner.token_latency.welford.max(),
+                inner.token_latency.samples.clone(),
+                zero_nan(inner.request_latency.mean()),
+            )
+        };
+        let steps = self.batch_steps.load(Ordering::Relaxed);
+        let lanes = self.batch_lanes.load(Ordering::Relaxed);
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             started: self.started.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
             tokens_out: self.tokens_out.load(Ordering::Relaxed),
-            mean_queue_delay_s: zero_nan(inner.queue_delay.mean()),
-            mean_ttft_s: zero_nan(inner.ttft.mean()),
-            mean_token_latency_s: zero_nan(inner.token_latency.mean()),
-            p_token_latency_max_s: if inner.token_latency.count() == 0 {
-                0.0
-            } else {
-                inner.token_latency.max()
-            },
-            mean_request_latency_s: zero_nan(inner.request_latency.mean()),
+            batch_steps: steps,
+            mean_batch_size: if steps == 0 { 0.0 } else { lanes as f64 / steps as f64 },
+            mean_queue_delay_s: queue_delay_mean,
+            mean_ttft_s: ttft_mean,
+            ttft: percentiles_of(ttft_samples),
+            mean_token_latency_s: tok_mean,
+            tpot: percentiles_of(tok_samples),
+            p_token_latency_max_s: if tok_count == 0 { 0.0 } else { tok_max },
+            mean_request_latency_s: req_mean,
         }
     }
 }
 
 fn zero_nan(x: f64) -> f64 {
-    if x.is_nan() { 0.0 } else { x }
+    if x.is_nan() {
+        0.0
+    } else {
+        x
+    }
 }
 
 impl Snapshot {
@@ -134,10 +235,19 @@ impl Snapshot {
             ("completed", self.completed.into()),
             ("errors", self.errors.into()),
             ("cancelled", self.cancelled.into()),
+            ("rejected", self.rejected.into()),
             ("tokens_out", self.tokens_out.into()),
+            ("batch_steps", self.batch_steps.into()),
+            ("mean_batch_size", self.mean_batch_size.into()),
             ("mean_queue_delay_s", self.mean_queue_delay_s.into()),
             ("mean_ttft_s", self.mean_ttft_s.into()),
+            ("ttft_p50_s", self.ttft.p50.into()),
+            ("ttft_p95_s", self.ttft.p95.into()),
+            ("ttft_p99_s", self.ttft.p99.into()),
             ("mean_token_latency_s", self.mean_token_latency_s.into()),
+            ("tpot_p50_s", self.tpot.p50.into()),
+            ("tpot_p95_s", self.tpot.p95.into()),
+            ("tpot_p99_s", self.tpot.p99.into()),
             ("max_token_latency_s", self.p_token_latency_max_s.into()),
             ("mean_request_latency_s", self.mean_request_latency_s.into()),
         ])
@@ -174,6 +284,45 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_ttft_s, 0.0);
         assert_eq!(s.mean_token_latency_s, 0.0);
+        assert_eq!(s.ttft, Percentiles::default());
+        assert_eq!(s.tpot, Percentiles::default());
+        assert_eq!(s.mean_batch_size, 0.0);
+    }
+
+    #[test]
+    fn percentiles_track_distribution() {
+        let m = Metrics::new();
+        // 1..=100 ms token latencies.
+        for i in 1..=100u64 {
+            m.on_token(Duration::from_millis(i));
+        }
+        let s = m.snapshot();
+        assert!((s.tpot.p50 - 0.0505).abs() < 0.002, "p50 {}", s.tpot.p50);
+        assert!(s.tpot.p95 > 0.090 && s.tpot.p95 <= 0.100, "p95 {}", s.tpot.p95);
+        assert!(s.tpot.p99 > s.tpot.p95);
+        assert!(s.tpot.p99 <= 0.100);
+    }
+
+    #[test]
+    fn batch_step_accounting() {
+        let m = Metrics::new();
+        m.on_batch_step(4);
+        m.on_batch_step(8);
+        let s = m.snapshot();
+        assert_eq!(s.batch_steps, 2);
+        assert!((s.mean_batch_size - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_overwrites_instead_of_growing() {
+        let mut series = Series::default();
+        for i in 0..(RESERVOIR_CAP + 100) {
+            series.add(i as f64);
+        }
+        assert_eq!(series.samples.len(), RESERVOIR_CAP);
+        assert_eq!(series.seen, (RESERVOIR_CAP + 100) as u64);
+        // The first 100 entries were overwritten by the newest samples.
+        assert_eq!(series.samples[0], RESERVOIR_CAP as f64);
     }
 
     #[test]
@@ -183,6 +332,8 @@ mod tests {
         let j = m.snapshot().to_json();
         assert_eq!(j.get("submitted").as_u64(), Some(1));
         assert!(j.get("mean_ttft_s").as_f64().is_some());
+        assert!(j.get("ttft_p99_s").as_f64().is_some());
+        assert!(j.get("tpot_p95_s").as_f64().is_some());
     }
 
     #[test]

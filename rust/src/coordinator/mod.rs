@@ -15,31 +15,41 @@
 //!   TokenEvent stream ◄────────────── workers (mpsc per request)
 //! ```
 //!
-//! Each worker owns one [`backend::Backend`] (a PJRT engine or the cycle
-//! simulator) and interleaves active requests **token by token**
-//! (continuous batching at the token level — the scheduling granularity
-//! the LPU's single-token latency makes natural). Sampling runs in the
-//! coordinator with the same [`crate::numerics::Sampler`] the VXE model
-//! uses.
+//! Each worker owns one [`backend::Backend`] and runs **continuous
+//! batching**: it holds a slot table of concurrently active requests,
+//! admits new requests *between fused decode steps* (admission bounded
+//! by a KV-memory budget derived from the device HBM capacity), advances
+//! a batch of slots per step under the configured
+//! [`scheduler::SchedulerPolicy`], and retires finished slots with
+//! `swap_remove` (mirrored into the scheduler so per-slot policy state
+//! follows the churn). A fused step streams the weights once for every
+//! lane in the batch — the batch-mode vecmat reuse the paper lists as
+//! future work — so worker throughput grows with concurrency while
+//! per-token latency degrades only by the per-lane KV terms. Sampling
+//! runs in the coordinator with the same [`crate::numerics::Sampler`]
+//! the VXE model uses.
 
 pub mod backend;
 pub mod metrics;
 pub mod scheduler;
 pub mod workload;
 
-use std::collections::HashMap;
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::numerics::{SampleParams, Sampler};
 
-pub use backend::{Backend, BackendFactory, SimBackend};
-pub use metrics::Metrics;
-pub use scheduler::{Scheduler, SchedulerPolicy};
-pub use workload::{run_open_loop, LenDist, LoadReport, Workload};
+pub use backend::{Backend, BackendFactory, BatchLane, SimBackend, StepModel};
+pub use metrics::{Metrics, Percentiles};
+pub use scheduler::{KvBudget, Scheduler, SchedulerPolicy};
+pub use workload::{
+    run_open_loop, run_virtual, LenDist, LoadReport, VirtualConfig, VirtualReport, Workload,
+};
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -75,6 +85,12 @@ impl Request {
             return Err("max_new_tokens must be > 0".into());
         }
         self.params.validate()
+    }
+
+    /// Worst-case KV bytes this request can grow to (what admission
+    /// control reserves up front).
+    pub fn kv_need(&self, kv_bytes_per_token: u64) -> u64 {
+        (self.prompt.len() + self.max_new_tokens) as u64 * kv_bytes_per_token
     }
 }
 
@@ -122,23 +138,139 @@ struct Job {
     submitted: Instant,
 }
 
+/// Decision an admission closure returns after peeking the queue head.
+enum Admit {
+    /// Pop it; the caller will admit it into a slot.
+    Take,
+    /// Pop it; the caller will refuse it (can never fit anywhere).
+    Reject,
+    /// Leave it at the head for a sibling worker with more headroom.
+    Later,
+}
+
+/// Result of a peek-then-pop attempt on the pool queue.
+enum Popped {
+    Job(Job),
+    Rejected(Job),
+    None,
+    Closed,
+}
+
+struct JobQueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Shared pool queue with head-peek admission. A worker inspects the
+/// head job and only pops it if it can actually take (or must reject)
+/// it; a job the worker cannot admit right now stays at the head for a
+/// sibling with free KV — FIFO order is preserved and a saturated
+/// worker never strands work another worker could serve.
+struct JobQueue {
+    state: Mutex<JobQueueState>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue {
+            state: Mutex::new(JobQueueState { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job; `Err(job)` if the pool already shut down.
+    fn push(&self, job: Job) -> Result<(), Job> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(job);
+        }
+        st.jobs.push_back(job);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Peek the head job with `decide` and pop it if taken/rejected.
+    /// With `wait`, parks up to ~10ms for work when the queue is empty
+    /// (the condvar releases the lock while parked, so producers and
+    /// sibling workers are never blocked by an idle waiter).
+    fn pop_with(&self, wait: bool, mut decide: impl FnMut(&Job) -> Admit) -> Popped {
+        let mut st = self.state.lock().unwrap();
+        if wait && st.jobs.is_empty() && !st.closed {
+            st = self
+                .cv
+                .wait_timeout(st, std::time::Duration::from_millis(10))
+                .unwrap()
+                .0;
+        }
+        let decision = match st.jobs.front() {
+            None => return if st.closed { Popped::Closed } else { Popped::None },
+            Some(job) => decide(job),
+        };
+        match decision {
+            Admit::Take => Popped::Job(st.jobs.pop_front().expect("head exists")),
+            Admit::Reject => Popped::Rejected(st.jobs.pop_front().expect("head exists")),
+            Admit::Later => Popped::None,
+        }
+    }
+}
+
 /// Per-model worker pool.
 struct Pool {
-    tx: Sender<Job>,
+    queue: Arc<JobQueue>,
     workers: Vec<JoinHandle<()>>,
 }
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Max requests a worker interleaves concurrently.
+    /// Max requests a worker holds in its slot table.
     pub max_active_per_worker: usize,
     pub policy: SchedulerPolicy,
+    /// KV bytes one context token occupies (from
+    /// [`crate::model::ModelConfig::kv_bytes_per_token`]); 0 disables
+    /// KV admission control.
+    pub kv_bytes_per_token: u64,
+    /// Per-worker KV memory budget, bytes (`u64::MAX` = unbounded).
+    pub kv_budget_bytes: u64,
+    /// Max lanes per fused decode step (hardware batch cap); 0 means
+    /// `max_active_per_worker`.
+    pub max_batch: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { max_active_per_worker: 4, policy: SchedulerPolicy::Fcfs }
+        CoordinatorConfig {
+            max_active_per_worker: 4,
+            policy: SchedulerPolicy::Fcfs,
+            kv_bytes_per_token: 0,
+            kv_budget_bytes: u64::MAX,
+            max_batch: 0,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Derive admission limits from a device + model pair: the KV budget
+    /// is whatever HBM capacity remains after the resident weights.
+    pub fn for_device(
+        device: &crate::config::LpuConfig,
+        model: &crate::model::ModelConfig,
+        policy: SchedulerPolicy,
+    ) -> CoordinatorConfig {
+        let budget = device.hbm.capacity().saturating_sub(model.weight_bytes());
+        CoordinatorConfig {
+            max_active_per_worker: 8,
+            policy,
+            kv_bytes_per_token: model.kv_bytes_per_token(),
+            kv_budget_bytes: budget.max(1),
+            max_batch: 0,
+        }
     }
 }
 
@@ -160,15 +292,19 @@ impl Coordinator {
         }
     }
 
+    /// The scheduling policy this coordinator's workers run.
+    pub fn policy(&self) -> SchedulerPolicy {
+        self.cfg.policy
+    }
+
     /// Register a model pool with `n_workers` backend instances. The
     /// factory runs *inside* each worker thread (PJRT handles are not
     /// `Send`; each worker owns its own client).
     pub fn add_pool(&mut self, model: &str, n_workers: usize, factory: BackendFactory) {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let queue = Arc::new(JobQueue::new());
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
-            let rx = Arc::clone(&rx);
+            let queue = Arc::clone(&queue);
             let factory = factory.clone();
             let metrics = Arc::clone(&self.metrics);
             let cfg = self.cfg.clone();
@@ -176,11 +312,11 @@ impl Coordinator {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("lpu-worker-{model}-{w}"))
-                    .spawn(move || worker_loop(rx, factory, metrics, cfg))
+                    .spawn(move || worker_loop(queue, factory, metrics, cfg))
                     .expect("spawn worker"),
             );
         }
-        self.pools.insert(model.to_string(), Pool { tx, workers });
+        self.pools.insert(model.to_string(), Pool { queue, workers });
     }
 
     /// Models this coordinator serves.
@@ -200,17 +336,17 @@ impl Coordinator {
         let request_id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         self.metrics.on_submit();
-        pool.tx
-            .send(Job { request_id, request, events: tx, submitted: Instant::now() })
+        pool.queue
+            .push(Job { request_id, request, events: tx, submitted: Instant::now() })
             .map_err(|_| "pool shut down".to_string())?;
         Ok(RequestHandle { request_id, events: rx })
     }
 
-    /// Drop pool senders and join workers.
+    /// Close pool queues and join workers (in-flight requests finish).
     pub fn shutdown(mut self) {
         let pools = std::mem::take(&mut self.pools);
         for (_, pool) in pools {
-            drop(pool.tx);
+            pool.queue.close();
             for w in pool.workers {
                 let _ = w.join();
             }
@@ -218,17 +354,26 @@ impl Coordinator {
     }
 }
 
-struct Active {
+/// One active request's slot in a worker's table.
+struct Slot {
     job: Job,
-    session: Box<dyn std::any::Any>,
+    session: Box<dyn Any>,
     sampler: Sampler,
     generated: Vec<i64>,
     prompt_fed: usize,
-    first_token_at: Option<Instant>,
+    /// KV bytes reserved at admission, released at retirement.
+    kv_reserved: u64,
+}
+
+/// Why a slot leaves the table.
+enum Retire {
+    Done(FinishReason),
+    Cancelled,
+    Errored(String),
 }
 
 fn worker_loop(
-    rx: Arc<std::sync::Mutex<Receiver<Job>>>,
+    queue: Arc<JobQueue>,
     factory: BackendFactory,
     metrics: Arc<Metrics>,
     cfg: CoordinatorConfig,
@@ -237,142 +382,190 @@ fn worker_loop(
         Ok(b) => b,
         Err(e) => {
             // Drain jobs with errors so clients don't hang.
-            while let Ok(job) = rx.lock().unwrap().recv() {
-                let _ = job.events.send(TokenEvent::Error {
-                    request_id: job.request_id,
-                    message: format!("backend init failed: {e}"),
-                });
+            loop {
+                match queue.pop_with(true, |_| Admit::Take) {
+                    Popped::Job(job) | Popped::Rejected(job) => {
+                        let _ = job.events.send(TokenEvent::Error {
+                            request_id: job.request_id,
+                            message: format!("backend init failed: {e}"),
+                        });
+                    }
+                    Popped::None => {}
+                    Popped::Closed => return,
+                }
             }
-            return;
         }
     };
 
     let mut scheduler = Scheduler::new(cfg.policy);
-    let mut active: Vec<Active> = Vec::new();
-
-    enum Got {
-        Job(Job),
-        Nothing,
-        Shutdown,
-    }
+    let mut kv = KvBudget::new(cfg.kv_budget_bytes);
+    let mut slots: Vec<Slot> = Vec::new();
+    let max_batch =
+        if cfg.max_batch == 0 { cfg.max_active_per_worker } else { cfg.max_batch };
 
     loop {
-        // Admit new work. The queue mutex must never be held across a
-        // blocking recv (it would starve sibling workers), so idle
-        // workers poll with a short recv_timeout instead.
-        while active.len() < cfg.max_active_per_worker {
-            let got = if !active.is_empty() {
-                // Busy workers must never wait on the queue mutex (an
-                // idle sibling may be parked in recv_timeout holding it):
-                // opportunistic try_lock + try_recv only.
-                match rx.try_lock() {
-                    Ok(guard) => match guard.try_recv() {
-                        Ok(j) => Got::Job(j),
-                        Err(_) => Got::Nothing,
-                    },
-                    Err(_) => Got::Nothing,
+        // ---- admission: runs between every fused step, so requests
+        // join mid-decode (continuous batching). The queue pops the
+        // head only if this worker can take it (or it can never fit);
+        // otherwise it stays at the head for a sibling with free KV.
+        while slots.len() < cfg.max_active_per_worker {
+            let popped = queue.pop_with(slots.is_empty(), |job| {
+                let need = job.request.kv_need(cfg.kv_bytes_per_token);
+                if need > kv.capacity() {
+                    Admit::Reject
+                } else if need <= kv.capacity().saturating_sub(kv.reserved()) {
+                    Admit::Take
+                } else {
+                    Admit::Later
                 }
-            } else {
-                let guard = rx.lock().unwrap();
-                match guard.recv_timeout(std::time::Duration::from_millis(10)) {
-                    Ok(j) => Got::Job(j),
-                    Err(mpsc::RecvTimeoutError::Timeout) => Got::Nothing,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => Got::Shutdown,
+            });
+            match popped {
+                Popped::Job(job) => {
+                    let need = job.request.kv_need(cfg.kv_bytes_per_token);
+                    let reserved = kv.try_reserve(need);
+                    debug_assert!(reserved, "queue handed out a job beyond the KV budget");
+                    match backend.new_session() {
+                        Ok(session) => {
+                            metrics.on_start(job.submitted.elapsed());
+                            let seed = job.request.seed ^ job.request_id;
+                            slots.push(Slot {
+                                job,
+                                session,
+                                sampler: Sampler::new(seed),
+                                generated: Vec::new(),
+                                prompt_fed: 0,
+                                kv_reserved: need,
+                            });
+                            scheduler.reset_slot(slots.len() - 1);
+                        }
+                        Err(e) => {
+                            kv.release(need);
+                            metrics.on_error();
+                            let _ = job.events.send(TokenEvent::Error {
+                                request_id: job.request_id,
+                                message: format!("session: {e}"),
+                            });
+                        }
+                    }
                 }
-            };
-            let job = match got {
-                Got::Job(j) => j,
-                Got::Nothing => break,
-                Got::Shutdown => return,
-            };
-            match backend.new_session() {
-                Ok(session) => {
-                    metrics.on_start(job.submitted.elapsed());
-                    let seed = job.request.seed ^ job.request_id;
-                    active.push(Active {
-                        job,
-                        session,
-                        sampler: Sampler::new(seed),
-                        generated: Vec::new(),
-                        prompt_fed: 0,
-                        first_token_at: None,
-                    });
-                }
-                Err(e) => {
+                Popped::Rejected(job) => {
+                    // Can never fit, even on an empty device: refuse
+                    // rather than deadlock the admission queue.
+                    let need = job.request.kv_need(cfg.kv_bytes_per_token);
+                    metrics.on_reject();
                     let _ = job.events.send(TokenEvent::Error {
                         request_id: job.request_id,
-                        message: format!("session: {e}"),
+                        message: format!(
+                            "request needs {need} B of KV cache but the device budget is {} B",
+                            kv.capacity()
+                        ),
                     });
+                }
+                Popped::None => break,
+                Popped::Closed => {
+                    if slots.is_empty() {
+                        return;
+                    }
+                    break;
                 }
             }
         }
 
-        if active.is_empty() {
+        if slots.is_empty() {
             continue;
         }
 
-        // One token of progress for the scheduled request.
-        let idx = scheduler.pick(active.len());
-        let a = &mut active[idx];
+        // ---- one fused batched step over the scheduled lanes ----
+        let picked = scheduler.pick_batch(slots.len(), max_batch);
         let step_started = Instant::now();
-        let next_input = if a.prompt_fed < a.job.request.prompt.len() {
-            a.job.request.prompt[a.prompt_fed]
-        } else {
-            *a.generated.last().expect("generated nonempty after prompt")
-        };
+        let mut lanes: Vec<BatchLane> = Vec::with_capacity(picked.len());
+        for &i in &picked {
+            let s = &mut slots[i];
+            let token = if s.prompt_fed < s.job.request.prompt.len() {
+                s.job.request.prompt[s.prompt_fed]
+            } else {
+                *s.generated.last().expect("generated nonempty after prompt")
+            };
+            let session = std::mem::replace(&mut s.session, Box::new(()));
+            lanes.push(BatchLane { session, token });
+        }
+        let results = backend.decode_batch(&mut lanes);
+        metrics.on_batch_step(picked.len());
+        let step_elapsed = step_started.elapsed();
 
-        let result = backend.decode(&mut a.session, next_input);
-        match result {
-            Ok(logits) => {
-                if a.prompt_fed < a.job.request.prompt.len() {
-                    a.prompt_fed += 1;
-                    // Emit the first generated token when prompt completes.
-                    if a.prompt_fed < a.job.request.prompt.len() {
+        debug_assert_eq!(results.len(), picked.len(), "backend lane-count contract");
+        let mut retire: Vec<(usize, Retire)> = Vec::new();
+        for ((lane, &i), result) in lanes.iter_mut().zip(&picked).zip(results) {
+            slots[i].session = std::mem::replace(&mut lane.session, Box::new(()));
+            match result {
+                Ok(logits) => {
+                    let s = &mut slots[i];
+                    if s.prompt_fed < s.job.request.prompt.len() {
+                        s.prompt_fed += 1;
+                        if s.prompt_fed < s.job.request.prompt.len() {
+                            // Still prefilling: a pick without a token.
+                            scheduler.note_progress(i, s.generated.len());
+                            continue;
+                        }
+                    }
+                    let token = s.sampler.sample(&logits, &s.job.request.params) as i64;
+                    s.generated.push(token);
+                    if s.generated.len() == 1 {
+                        metrics.on_first_token(s.job.submitted.elapsed());
+                    }
+                    metrics.on_token(step_elapsed);
+                    scheduler.note_progress(i, s.generated.len());
+                    let receiver_alive = s
+                        .job
+                        .events
+                        .send(TokenEvent::Token {
+                            request_id: s.job.request_id,
+                            index: s.generated.len() - 1,
+                            token,
+                        })
+                        .is_ok();
+                    if !receiver_alive {
+                        // Client went away mid-stream: cancel so the
+                        // device stops burning tokens on it.
+                        retire.push((i, Retire::Cancelled));
                         continue;
                     }
+                    let eos_hit = s.job.request.eos_token == Some(token);
+                    let len_hit = s.generated.len() >= s.job.request.max_new_tokens;
+                    if eos_hit || len_hit {
+                        let reason =
+                            if eos_hit { FinishReason::Eos } else { FinishReason::Length };
+                        retire.push((i, Retire::Done(reason)));
+                    }
                 }
-                let token = a.sampler.sample(&logits, &a.job.request.params) as i64;
-                a.generated.push(token);
-                if a.first_token_at.is_none() {
-                    a.first_token_at = Some(Instant::now());
-                    metrics.on_first_token(a.job.submitted.elapsed());
-                }
-                metrics.on_token(step_started.elapsed());
-                let receiver_alive = a
-                    .job
-                    .events
-                    .send(TokenEvent::Token {
-                        request_id: a.job.request_id,
-                        index: a.generated.len() - 1,
-                        token,
-                    })
-                    .is_ok();
-                if !receiver_alive {
-                    // Client went away mid-stream: cancel the request so
-                    // the device stops burning tokens on it.
-                    let a = active.swap_remove(idx);
-                    metrics.on_cancel(a.generated.len());
-                    continue;
-                }
-                let eos_hit = a.job.request.eos_token == Some(token);
-                let len_hit = a.generated.len() >= a.job.request.max_new_tokens;
-                if eos_hit || len_hit {
-                    let a = active.swap_remove(idx);
-                    metrics.on_done(a.generated.len(), a.job.submitted.elapsed());
-                    let _ = a.job.events.send(TokenEvent::Done {
-                        request_id: a.job.request_id,
-                        tokens: a.generated,
-                        reason: if eos_hit { FinishReason::Eos } else { FinishReason::Length },
+                Err(e) => retire.push((i, Retire::Errored(e.to_string()))),
+            }
+        }
+
+        // Retire in descending index order so swap_remove indices stay
+        // valid; mirror every removal into the scheduler.
+        retire.sort_by(|a, b| b.0.cmp(&a.0));
+        for (i, why) in retire {
+            let s = slots.swap_remove(i);
+            scheduler.swap_remove(i);
+            kv.release(s.kv_reserved);
+            match why {
+                Retire::Done(reason) => {
+                    metrics.on_done(s.generated.len(), s.job.submitted.elapsed());
+                    let _ = s.job.events.send(TokenEvent::Done {
+                        request_id: s.job.request_id,
+                        tokens: s.generated,
+                        reason,
                     });
                 }
-            }
-            Err(e) => {
-                let a = active.swap_remove(idx);
-                metrics.on_error();
-                let _ = a.job.events.send(TokenEvent::Error {
-                    request_id: a.job.request_id,
-                    message: e.to_string(),
-                });
+                Retire::Cancelled => metrics.on_cancel(s.generated.len()),
+                Retire::Errored(message) => {
+                    metrics.on_error();
+                    let _ = s
+                        .job
+                        .events
+                        .send(TokenEvent::Error { request_id: s.job.request_id, message });
+                }
             }
         }
     }
@@ -387,6 +580,7 @@ mod tests {
         let mut c = Coordinator::new(CoordinatorConfig {
             max_active_per_worker: max_active,
             policy: SchedulerPolicy::RoundRobin,
+            ..CoordinatorConfig::default()
         });
         c.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
         c
@@ -435,6 +629,7 @@ mod tests {
         let snap = c.metrics.snapshot();
         assert_eq!(snap.completed, 16);
         assert_eq!(snap.tokens_out, 16 * 6);
+        assert!(snap.batch_steps > 0);
         c.shutdown();
     }
 
@@ -505,5 +700,90 @@ mod tests {
         let b = c.submit(Request::greedy("opt-tiny", vec![1, 2], 6)).unwrap().wait().unwrap();
         assert_eq!(a, b);
         c.shutdown();
+    }
+
+    #[test]
+    fn batching_does_not_change_tokens() {
+        // The same request must produce identical tokens whether it runs
+        // alone (batch of 1) or interleaved with 7 neighbors.
+        let solo = {
+            let c = sim_coord(1);
+            let t = c.submit(Request::greedy("opt-tiny", vec![3, 4], 10)).unwrap().wait().unwrap();
+            c.shutdown();
+            t
+        };
+        let c = sim_coord(8);
+        let noise: Vec<_> = (0..7)
+            .map(|i| c.submit(Request::greedy("opt-tiny", vec![40 + i], 10)).unwrap())
+            .collect();
+        let t = c.submit(Request::greedy("opt-tiny", vec![3, 4], 10)).unwrap().wait().unwrap();
+        for h in noise {
+            h.wait().unwrap();
+        }
+        assert_eq!(t, solo);
+        c.shutdown();
+    }
+
+    #[test]
+    fn kv_overflow_request_rejected_with_error() {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 4,
+            policy: SchedulerPolicy::RoundRobin,
+            kv_bytes_per_token: 1000,
+            kv_budget_bytes: 10_000, // 10 tokens of KV
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 64));
+        // Needs (2 + 50) * 1000 B > 10_000 B: impossible even when idle.
+        let h = c.submit(Request::greedy("opt-tiny", vec![1, 2], 50)).unwrap();
+        let err = h.wait().unwrap_err();
+        assert!(err.contains("KV"), "{err}");
+        assert_eq!(c.metrics.snapshot().rejected, 1);
+        // A request that fits still completes.
+        let ok = c.submit(Request::greedy("opt-tiny", vec![1], 4)).unwrap().wait().unwrap();
+        assert_eq!(ok.len(), 4);
+        c.shutdown();
+    }
+
+    #[test]
+    fn kv_budget_throttles_concurrency_without_losing_requests() {
+        // Budget fits exactly two in-flight requests; submit six. All
+        // must complete (head-peek admission), never more than two at
+        // once.
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 6,
+            policy: SchedulerPolicy::RoundRobin,
+            kv_bytes_per_token: 100,
+            kv_budget_bytes: 2 * (1 + 8) * 100,
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 64));
+        let handles: Vec<_> = (0..6)
+            .map(|i| c.submit(Request::greedy("opt-tiny", vec![i + 1], 8)).unwrap())
+            .collect();
+        for h in handles {
+            assert_eq!(h.wait().unwrap().len(), 8);
+        }
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.completed, 6);
+        assert_eq!(snap.rejected, 0);
+        // With ≤2 concurrent lanes, no fused step can exceed 2 lanes.
+        assert!(snap.mean_batch_size <= 2.0 + 1e-9, "{}", snap.mean_batch_size);
+        c.shutdown();
+    }
+
+    #[test]
+    fn for_device_budget_subtracts_weights() {
+        let device = crate::config::LpuConfig::asic_3_28tbs();
+        let model = crate::model::by_name("opt-6.7b").unwrap();
+        let cfg = CoordinatorConfig::for_device(&device, &model, SchedulerPolicy::RoundRobin);
+        assert_eq!(
+            cfg.kv_budget_bytes,
+            device.hbm.capacity() - model.weight_bytes()
+        );
+        assert_eq!(cfg.kv_bytes_per_token, model.kv_bytes_per_token());
+        // Sanity: the budget admits many full-length contexts.
+        let per_ctx = model.kv_capacity_bytes(model.max_seq);
+        assert!(cfg.kv_budget_bytes / per_ctx >= 8);
     }
 }

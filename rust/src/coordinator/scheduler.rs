@@ -1,14 +1,24 @@
-//! Token-level scheduling policy for a worker's active request set.
+//! Token-level scheduling policy for a worker's active slot table, plus
+//! KV-memory admission control.
 //!
 //! The LPU produces one token per pass, so the natural scheduling
-//! quantum is a single decode step. Policies:
+//! quantum is a single decode step. Under continuous batching a worker
+//! advances a *batch* of slots per fused step ([`Scheduler::pick_batch`]);
+//! the policy decides batch composition when the slot table exceeds the
+//! hardware batch cap:
 //!
-//! * `Fcfs` — always advance the oldest active request (lowest latency
-//!   for the head request; later arrivals wait);
-//! * `RoundRobin` — interleave all active requests one token at a time
-//!   (fair TTFT under load; the continuous-batching behaviour);
-//! * `ShortestFirst` — advance the request with the fewest generated
+//! * `Fcfs` — always advance the oldest active slots (lowest latency for
+//!   the head requests; later arrivals wait);
+//! * `RoundRobin` — rotate the batch window across all slots (fair TTFT
+//!   under load; no admitted request starves);
+//! * `ShortestFirst` — advance the slots with the fewest generated
 //!   tokens so far (minimizes mean completion time for mixed lengths).
+//!
+//! The worker reports ground truth back via [`Scheduler::note_progress`]
+//! (a picked slot may not emit a token — prompt prefill steps don't) and
+//! mirrors slot-table churn via [`Scheduler::swap_remove`], so policy
+//! state tracks the *same index space* as the slot table even as slots
+//! retire and admission reuses indices.
 
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -18,15 +28,44 @@ pub enum SchedulerPolicy {
     ShortestFirst,
 }
 
-/// Stateful scheduler over an index space `0..n` of active requests.
-/// The worker calls [`Scheduler::pick`] before each decode step; entries
-/// may be removed between calls (swap_remove), which the round-robin
-/// cursor tolerates by wrapping.
+impl SchedulerPolicy {
+    /// Stable identifier used in metrics/report output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerPolicy::Fcfs => "fcfs",
+            SchedulerPolicy::RoundRobin => "round_robin",
+            SchedulerPolicy::ShortestFirst => "shortest_first",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<SchedulerPolicy> {
+        match s {
+            "fcfs" => Some(SchedulerPolicy::Fcfs),
+            "rr" | "round_robin" | "round-robin" => Some(SchedulerPolicy::RoundRobin),
+            "sjf" | "shortest_first" | "shortest-first" => Some(SchedulerPolicy::ShortestFirst),
+            _ => None,
+        }
+    }
+
+    /// Every policy, for sweeps.
+    pub fn all() -> [SchedulerPolicy; 3] {
+        [SchedulerPolicy::Fcfs, SchedulerPolicy::RoundRobin, SchedulerPolicy::ShortestFirst]
+    }
+}
+
+/// Stateful scheduler over an index space `0..n` of active slots. The
+/// worker calls [`Scheduler::pick_batch`] before each fused decode step;
+/// entries may be removed between calls, which the worker mirrors via
+/// [`Scheduler::swap_remove`] so per-slot progress stays attached to the
+/// right request.
 #[derive(Clone, Debug)]
 pub struct Scheduler {
     policy: SchedulerPolicy,
     cursor: usize,
-    /// Tokens emitted per slot (approximate; refreshed via `note_progress`).
+    /// Tokens emitted per slot. `pick`/`pick_batch` bump this as an
+    /// optimistic estimate; `note_progress` overwrites it with ground
+    /// truth after the step completes.
     progress: Vec<usize>,
 }
 
@@ -35,35 +74,120 @@ impl Scheduler {
         Scheduler { policy, cursor: 0, progress: Vec::new() }
     }
 
-    /// Choose which of the `n` active requests advances next.
+    pub fn policy(&self) -> SchedulerPolicy {
+        self.policy
+    }
+
+    /// Choose which single slot of `n` advances next (legacy token-at-a-
+    /// time scheduling; `pick_batch` with `max = 1` is equivalent).
     pub fn pick(&mut self, n: usize) -> usize {
-        assert!(n > 0);
+        self.pick_batch(n, 1)[0]
+    }
+
+    /// Choose up to `max` of the `n` active slots to advance in one
+    /// fused batched step. Returns distinct indices in ascending order.
+    pub fn pick_batch(&mut self, n: usize, max: usize) -> Vec<usize> {
+        assert!(n > 0, "pick_batch on empty slot table");
+        let max = max.max(1).min(n);
         self.progress.resize(n, 0);
-        let idx = match self.policy {
-            SchedulerPolicy::Fcfs => 0,
+        let mut picked: Vec<usize> = match self.policy {
+            SchedulerPolicy::Fcfs => (0..max).collect(),
             SchedulerPolicy::RoundRobin => {
-                let i = self.cursor % n;
-                self.cursor = self.cursor.wrapping_add(1);
-                i
+                if max == n {
+                    (0..n).collect()
+                } else {
+                    let start = self.cursor % n;
+                    self.cursor = self.cursor.wrapping_add(max);
+                    (0..max).map(|i| (start + i) % n).collect()
+                }
             }
-            SchedulerPolicy::ShortestFirst => self
-                .progress[..n]
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, &p)| p)
-                .map(|(i, _)| i)
-                .unwrap_or(0),
+            SchedulerPolicy::ShortestFirst => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by_key(|&i| (self.progress[i], i));
+                idx.truncate(max);
+                idx
+            }
         };
-        self.progress[idx] += 1;
-        idx
+        picked.sort_unstable();
+        for &i in &picked {
+            self.progress[i] += 1;
+        }
+        picked
+    }
+
+    /// Report the true number of tokens slot `idx` has emitted. Replaces
+    /// the optimistic estimate `pick_batch` made (prefill steps consume a
+    /// pick without emitting a token).
+    pub fn note_progress(&mut self, idx: usize, tokens: usize) {
+        if idx < self.progress.len() {
+            self.progress[idx] = tokens;
+        }
+    }
+
+    /// Mirror a `Vec::swap_remove(idx)` on the slot table: the last
+    /// slot's progress moves into `idx`, the table shrinks by one.
+    pub fn swap_remove(&mut self, idx: usize) {
+        if idx < self.progress.len() {
+            self.progress.swap_remove(idx);
+        }
     }
 
     /// Reset progress tracking for a slot that now holds a new request
-    /// (after swap_remove re-uses an index).
+    /// (after admission re-uses an index).
     pub fn reset_slot(&mut self, idx: usize) {
         if idx < self.progress.len() {
             self.progress[idx] = 0;
         }
+    }
+}
+
+/// KV-cache memory admission control (per worker/device).
+///
+/// The paper's deployments size HBM for weights + KV ("66B requires
+/// 132 GB and an additional 5 GB for storing Key-Value"); a serving
+/// worker must therefore bound how many requests it interleaves by the
+/// KV bytes they can grow to, not just by a slot count. Admission
+/// reserves the *worst case* (prompt + max_new_tokens) up front, so an
+/// admitted request can always run to completion without evicting
+/// anyone — no deadlock, no mid-stream OOM.
+#[derive(Clone, Debug)]
+pub struct KvBudget {
+    capacity: u64,
+    reserved: u64,
+}
+
+impl KvBudget {
+    pub fn new(capacity_bytes: u64) -> KvBudget {
+        KvBudget { capacity: capacity_bytes, reserved: 0 }
+    }
+
+    /// No admission limit (slot count still bounds concurrency).
+    pub fn unlimited() -> KvBudget {
+        KvBudget::new(u64::MAX)
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn reserved(&self) -> u64 {
+        self.reserved
+    }
+
+    /// Reserve `bytes` if they fit; false (and no change) otherwise.
+    pub fn try_reserve(&mut self, bytes: u64) -> bool {
+        if bytes <= self.capacity.saturating_sub(self.reserved) {
+            self.reserved += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release a prior reservation (slot retired or cancelled).
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.reserved, "release {bytes} > reserved {}", self.reserved);
+        self.reserved = self.reserved.saturating_sub(bytes);
     }
 }
 
@@ -116,5 +240,179 @@ mod tests {
         }
         s.reset_slot(1); // new request took slot 1
         assert_eq!(s.pick(3), 1);
+    }
+
+    // ---- batched picks ----
+
+    #[test]
+    fn full_batch_when_under_cap() {
+        for policy in SchedulerPolicy::all() {
+            let mut s = Scheduler::new(policy);
+            assert_eq!(s.pick_batch(4, 8), vec![0, 1, 2, 3], "{policy:?}");
+            assert_eq!(s.pick_batch(4, 4), vec![0, 1, 2, 3], "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn fcfs_batch_is_oldest_prefix() {
+        let mut s = Scheduler::new(SchedulerPolicy::Fcfs);
+        assert_eq!(s.pick_batch(5, 2), vec![0, 1]);
+        assert_eq!(s.pick_batch(5, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn round_robin_batch_rotates_window() {
+        let mut s = Scheduler::new(SchedulerPolicy::RoundRobin);
+        assert_eq!(s.pick_batch(5, 2), vec![0, 1]);
+        assert_eq!(s.pick_batch(5, 2), vec![2, 3]);
+        let w3 = s.pick_batch(5, 2);
+        assert_eq!(w3, vec![0, 4]); // wraps, returned sorted
+        // Every slot advanced at least once across a full rotation.
+        let mut seen = [false; 5];
+        let mut s2 = Scheduler::new(SchedulerPolicy::RoundRobin);
+        for _ in 0..5 {
+            for i in s2.pick_batch(5, 2) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn shortest_first_batch_picks_least_progressed() {
+        let mut s = Scheduler::new(SchedulerPolicy::ShortestFirst);
+        s.pick_batch(4, 4);
+        s.note_progress(0, 9);
+        s.note_progress(1, 1);
+        s.note_progress(2, 7);
+        s.note_progress(3, 2);
+        assert_eq!(s.pick_batch(4, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn batch_indices_distinct_and_sorted() {
+        for policy in SchedulerPolicy::all() {
+            let mut s = Scheduler::new(policy);
+            for n in 1..=6 {
+                for max in 1..=8 {
+                    let picked = s.pick_batch(n, max);
+                    assert_eq!(picked.len(), max.min(n).max(1));
+                    assert!(picked.windows(2).all(|w| w[0] < w[1]), "{policy:?} {picked:?}");
+                    assert!(picked.iter().all(|&i| i < n));
+                }
+            }
+        }
+    }
+
+    // ---- progress under churn (the seed divergence: `pick`
+    // self-incremented and ignored real token progress, and nothing
+    // mirrored swap_remove — a retired slot's progress stuck to
+    // whichever request got swapped into its index) ----
+
+    #[test]
+    fn note_progress_overrides_optimistic_estimate() {
+        let mut s = Scheduler::new(SchedulerPolicy::ShortestFirst);
+        // Slot 0 gets picked 5 times but emits nothing (long prompt
+        // prefill): without note_progress the policy would starve it.
+        for _ in 0..5 {
+            let picked = s.pick_batch(2, 2);
+            assert_eq!(picked, vec![0, 1]);
+            s.note_progress(0, 0); // still prefilling
+            s.note_progress(1, 1); // emitted one token, then stalls
+        }
+        assert_eq!(s.pick_batch(2, 1), vec![0]);
+    }
+
+    #[test]
+    fn swap_remove_moves_last_slots_progress() {
+        let mut s = Scheduler::new(SchedulerPolicy::ShortestFirst);
+        s.pick_batch(3, 3);
+        s.note_progress(0, 10);
+        s.note_progress(1, 20);
+        s.note_progress(2, 3);
+        // Slot 1 retires; slot 2 (progress 3) moves into index 1.
+        s.swap_remove(1);
+        // Least progressed is now index 1 (the moved slot).
+        assert_eq!(s.pick_batch(2, 1), vec![1]);
+    }
+
+    #[test]
+    fn churn_grow_shrink_reuse() {
+        let mut s = Scheduler::new(SchedulerPolicy::ShortestFirst);
+        // Grow to 4 with distinct progress.
+        s.pick_batch(4, 4);
+        for (i, p) in [(0, 4), (1, 8), (2, 2), (3, 6)] {
+            s.note_progress(i, p);
+        }
+        // Retire index 2 (progress 2): index 3's progress (6) moves in.
+        s.swap_remove(2);
+        // Admission reuses the tail: table grows back to 4; the fresh
+        // slot starts at 0 and must win ShortestFirst immediately.
+        assert_eq!(s.pick_batch(4, 1), vec![3]);
+        // And after the fresh slot catches up, the moved slot's real
+        // progress (6) still ranks it behind slots 0 (4)...
+        s.note_progress(3, 100);
+        assert_eq!(s.pick_batch(4, 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn single_pick_equals_batch_of_one() {
+        let mut a = Scheduler::new(SchedulerPolicy::RoundRobin);
+        let mut b = Scheduler::new(SchedulerPolicy::RoundRobin);
+        for _ in 0..7 {
+            assert_eq!(vec![a.pick(3)], b.pick_batch(3, 1));
+        }
+    }
+
+    // ---- KV budget ----
+
+    #[test]
+    fn kv_budget_reserve_release() {
+        let mut kv = KvBudget::new(100);
+        assert!(kv.try_reserve(60));
+        assert!(!kv.try_reserve(50));
+        assert_eq!(kv.reserved(), 60);
+        assert!(kv.try_reserve(40));
+        assert_eq!(kv.reserved(), 100);
+        kv.release(60);
+        assert_eq!(kv.reserved(), 40);
+        assert!(kv.try_reserve(60));
+    }
+
+    #[test]
+    fn kv_budget_never_exceeds_capacity() {
+        let mut kv = KvBudget::new(1000);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut held: Vec<u64> = Vec::new();
+        for _ in 0..10_000 {
+            if rng.bool(0.6) {
+                let want = rng.range_u64(0, 400);
+                if kv.try_reserve(want) {
+                    held.push(want);
+                }
+            } else if let Some(w) = held.pop() {
+                kv.release(w);
+            }
+            assert!(kv.reserved() <= kv.capacity());
+            assert_eq!(kv.reserved(), held.iter().sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn unlimited_budget_admits_everything() {
+        let mut kv = KvBudget::unlimited();
+        for _ in 0..64 {
+            assert!(kv.try_reserve(1 << 40));
+        }
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in SchedulerPolicy::all() {
+            assert_eq!(SchedulerPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedulerPolicy::parse("rr"), Some(SchedulerPolicy::RoundRobin));
+        assert_eq!(SchedulerPolicy::parse("sjf"), Some(SchedulerPolicy::ShortestFirst));
+        assert_eq!(SchedulerPolicy::parse("nope"), None);
     }
 }

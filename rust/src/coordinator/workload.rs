@@ -2,17 +2,30 @@
 //!
 //! The paper evaluates fixed-shape generation (in=32, out=2016); a
 //! datacenter deployment also needs the latency-vs-load curve. This
-//! module provides an open-loop Poisson request generator with
-//! configurable prompt/output length distributions and a load-sweep
-//! runner that reports throughput and latency percentiles per offered
-//! rate — the serving study behind the `perf_hotpath` load table.
+//! module provides:
+//!
+//! * a seeded, fully deterministic open-loop Poisson request generator
+//!   with configurable prompt/output length distributions
+//!   ([`Workload::generate`]);
+//! * a wall-clock load runner against a live [`Coordinator`]
+//!   ([`run_open_loop`]) — real threads, real channels, real time;
+//! * a **virtual-time discrete-event load harness** ([`run_virtual`])
+//!   that replays the same workload through the same continuous-batching
+//!   machinery (slot tables, [`Scheduler`] policies, [`KvBudget`]
+//!   admission, the [`StepModel`] batched latency model) with no threads
+//!   and no wall clock — every run with the same seed is bit-identical,
+//!   so throughput/latency tradeoffs become a regression-trackable
+//!   surface (`benches/serving_load.rs`).
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::numerics::SampleParams;
+use crate::numerics::{SampleParams, Sampler};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
+use super::backend::{Backend, SimBackend, StepModel};
+use super::scheduler::{KvBudget, Scheduler, SchedulerPolicy};
 use super::{Coordinator, Request, RequestHandle, TokenEvent};
 
 /// Length distribution for prompts/outputs.
@@ -86,8 +99,12 @@ pub struct LoadReport {
     pub tokens_per_s: f64,
     /// Time to first token, seconds.
     pub ttft: Summary,
+    /// Inter-token latency (time per output token after the first), s.
+    pub tpot: Summary,
     /// End-to-end request latency, seconds.
     pub request_latency: Summary,
+    /// Generated tokens per request, in submission order.
+    pub token_streams: Vec<Vec<i64>>,
 }
 
 /// Run an open-loop load test against a coordinator. The submitting
@@ -95,17 +112,27 @@ pub struct LoadReport {
 /// by its own collector thread so TTFT/latency are timestamped at
 /// *emission*, not at batched readback.
 pub fn run_open_loop(coord: &Coordinator, wl: &Workload) -> Result<LoadReport, String> {
-    type PerReq = Result<(f64, f64, usize), String>; // (ttft, latency, tokens)
+    // (ttft, latency, tokens, inter-token gaps)
+    type PerReq = Result<(f64, f64, Vec<i64>, Vec<f64>), String>;
     fn collect(submitted: Instant, handle: RequestHandle) -> PerReq {
         let mut first: Option<Duration> = None;
+        let mut last_at: Option<Duration> = None;
+        let mut gaps = Vec::new();
         for ev in handle.events.iter() {
             match ev {
-                TokenEvent::Token { index: 0, .. } => first = Some(submitted.elapsed()),
-                TokenEvent::Token { .. } => {}
+                TokenEvent::Token { index, .. } => {
+                    let at = submitted.elapsed();
+                    if index == 0 {
+                        first = Some(at);
+                    } else if let Some(prev) = last_at {
+                        gaps.push((at - prev).as_secs_f64());
+                    }
+                    last_at = Some(at);
+                }
                 TokenEvent::Done { tokens, .. } => {
                     let lat = submitted.elapsed().as_secs_f64();
                     let ttft = first.unwrap_or_else(|| submitted.elapsed()).as_secs_f64();
-                    return Ok((ttft, lat, tokens.len()));
+                    return Ok((ttft, lat, tokens, gaps));
                 }
                 TokenEvent::Error { message, .. } => return Err(message),
             }
@@ -131,12 +158,16 @@ pub fn run_open_loop(coord: &Coordinator, wl: &Workload) -> Result<LoadReport, S
     }
     let mut ttfts = Vec::with_capacity(collectors.len());
     let mut lats = Vec::with_capacity(collectors.len());
+    let mut gaps_all = Vec::new();
+    let mut streams = Vec::with_capacity(collectors.len());
     let mut tokens = 0usize;
     for c in collectors {
-        let (ttft, lat, n) = c.join().map_err(|_| "collector panicked")??;
+        let (ttft, lat, toks, gaps) = c.join().map_err(|_| "collector panicked")??;
         ttfts.push(ttft);
         lats.push(lat);
-        tokens += n;
+        gaps_all.extend(gaps);
+        tokens += toks.len();
+        streams.push(toks);
     }
     let wall_s = t0.elapsed().as_secs_f64();
     Ok(LoadReport {
@@ -145,14 +176,400 @@ pub fn run_open_loop(coord: &Coordinator, wl: &Workload) -> Result<LoadReport, S
         wall_s,
         tokens_per_s: tokens as f64 / wall_s,
         ttft: Summary::of(&ttfts),
+        tpot: summary_or_zero(&gaps_all),
         request_latency: Summary::of(&lats),
+        token_streams: streams,
     })
+}
+
+fn summary_or_zero(samples: &[f64]) -> Summary {
+    if samples.is_empty() {
+        Summary::of(&[0.0])
+    } else {
+        Summary::of(samples)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Virtual-time load harness
+// ---------------------------------------------------------------------
+
+/// Configuration for the deterministic virtual-time serving simulation.
+#[derive(Clone, Debug)]
+pub struct VirtualConfig {
+    pub workers: usize,
+    pub max_active: usize,
+    /// Max lanes per fused step; 0 means `max_active`.
+    pub max_batch: usize,
+    pub policy: SchedulerPolicy,
+    /// KV bytes per context token (0 disables admission control).
+    pub kv_bytes_per_token: u64,
+    /// Per-worker KV budget, bytes.
+    pub kv_budget_bytes: u64,
+    /// Batched per-step latency model.
+    pub step: StepModel,
+}
+
+impl VirtualConfig {
+    pub fn new(
+        policy: SchedulerPolicy,
+        workers: usize,
+        max_active: usize,
+        step: StepModel,
+    ) -> VirtualConfig {
+        VirtualConfig {
+            workers,
+            max_active,
+            max_batch: 0,
+            policy,
+            kv_bytes_per_token: 0,
+            kv_budget_bytes: u64::MAX,
+            step,
+        }
+    }
+}
+
+/// One request's simulated lifetime (all times in virtual seconds from
+/// the start of the run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VirtualRecord {
+    pub request_id: usize,
+    pub arrival_s: f64,
+    pub first_token_s: f64,
+    pub done_s: f64,
+    pub tokens: Vec<i64>,
+}
+
+/// Results of one virtual load run. Every field is a pure function of
+/// (workload seed, config) — two runs are bit-identical.
+#[derive(Clone, Debug)]
+pub struct VirtualReport {
+    pub policy: SchedulerPolicy,
+    pub offered_rate: f64,
+    pub records: Vec<VirtualRecord>,
+    /// Requests refused at admission (KV need exceeds the budget).
+    pub rejected: usize,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub request_latency: Summary,
+    /// Virtual makespan, seconds.
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+    /// Peak simultaneously-active requests across all workers.
+    pub max_concurrent: usize,
+    /// Peak KV bytes reserved on any single worker.
+    pub peak_kv_reserved: u64,
+}
+
+struct VSlot {
+    rid: usize,
+    arrival_s: f64,
+    request: Request,
+    sampler: Sampler,
+    session: Box<dyn std::any::Any>,
+    generated: Vec<i64>,
+    prompt_fed: usize,
+    kv_reserved: u64,
+    first_token_s: Option<f64>,
+    last_token_s: f64,
+}
+
+struct VWorker {
+    backend: SimBackend,
+    scheduler: Scheduler,
+    kv: KvBudget,
+    slots: Vec<VSlot>,
+    /// Lane indices of the in-flight fused step (empty = idle).
+    batch: Vec<usize>,
+    busy_until: f64,
+}
+
+/// Replay `wl` through the continuous-batching serving model in virtual
+/// time. Token streams are produced by the same deterministic sim
+/// backend the threaded coordinator uses, so greedy streams here match
+/// live serving; latencies come from the batched [`StepModel`].
+pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, String> {
+    if vc.workers == 0 || vc.max_active == 0 {
+        return Err("virtual config needs >= 1 worker and >= 1 slot".into());
+    }
+    let max_batch = if vc.max_batch == 0 { vc.max_active } else { vc.max_batch };
+
+    let mut arrivals: VecDeque<(f64, usize, Request)> = wl
+        .generate()
+        .into_iter()
+        .enumerate()
+        .map(|(i, (at, req))| (at.as_secs_f64(), i, req))
+        .collect();
+    let n_requests = arrivals.len();
+    let mut queue: VecDeque<(f64, usize, Request)> = VecDeque::new();
+    let mut workers: Vec<VWorker> = (0..vc.workers)
+        .map(|_| VWorker {
+            backend: SimBackend::new(&wl.model, wl.vocab),
+            scheduler: Scheduler::new(vc.policy),
+            kv: KvBudget::new(vc.kv_budget_bytes),
+            slots: Vec::new(),
+            batch: Vec::new(),
+            busy_until: 0.0,
+        })
+        .collect();
+
+    let mut records: Vec<Option<VirtualRecord>> = (0..n_requests).map(|_| None).collect();
+    let mut tpot_samples: Vec<f64> = Vec::new();
+    let mut rejected = 0usize;
+    let mut max_concurrent = 0usize;
+    let mut peak_kv_reserved = 0u64;
+    let mut wall_s = 0.0f64;
+
+    // Admit as many queued requests as fit, FIFO with no overtaking
+    // (mirrors the threaded pool's head-peek admission queue). Each
+    // request goes to the least-loaded worker that can hold it.
+    let mut dispatch = |queue: &mut VecDeque<(f64, usize, Request)>,
+                        workers: &mut Vec<VWorker>,
+                        records: &mut Vec<Option<VirtualRecord>>,
+                        rejected: &mut usize,
+                        max_concurrent: &mut usize,
+                        peak_kv: &mut u64,
+                        now: f64| {
+        while let Some((arrival_s, rid, request)) = queue.front() {
+            let need = request.kv_need(vc.kv_bytes_per_token);
+            if need > vc.kv_budget_bytes {
+                // Impossible on any worker: refuse, record an empty
+                // stream so the report stays one-row-per-request.
+                records[*rid] = Some(VirtualRecord {
+                    request_id: *rid,
+                    arrival_s: *arrival_s,
+                    first_token_s: now,
+                    done_s: now,
+                    tokens: Vec::new(),
+                });
+                *rejected += 1;
+                queue.pop_front();
+                continue;
+            }
+            let mut best: Option<usize> = None;
+            for (i, w) in workers.iter().enumerate() {
+                let fits = w.slots.len() < vc.max_active
+                    && w.kv.capacity().saturating_sub(w.kv.reserved()) >= need;
+                if fits && best.map_or(true, |b| w.slots.len() < workers[b].slots.len()) {
+                    best = Some(i);
+                }
+            }
+            let Some(wi) = best else { break };
+            let (arrival_s, rid, request) = queue.pop_front().unwrap();
+            let w = &mut workers[wi];
+            assert!(w.kv.try_reserve(need));
+            let session = w.backend.new_session().expect("sim session");
+            let seed = request.seed ^ (rid as u64 + 1);
+            w.slots.push(VSlot {
+                rid,
+                arrival_s,
+                request,
+                sampler: Sampler::new(seed),
+                session,
+                generated: Vec::new(),
+                prompt_fed: 0,
+                kv_reserved: need,
+                first_token_s: None,
+                last_token_s: 0.0,
+            });
+            let idx = w.slots.len() - 1;
+            w.scheduler.reset_slot(idx);
+            *peak_kv = (*peak_kv).max(w.kv.reserved());
+            let active: usize = workers.iter().map(|w| w.slots.len()).sum();
+            *max_concurrent = (*max_concurrent).max(active);
+        }
+    };
+
+    loop {
+        let next_arrival = arrivals.front().map(|a| a.0);
+        let next_step = workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| !w.batch.is_empty())
+            .map(|(i, w)| (w.busy_until, i))
+            .min_by(|a, b| a.partial_cmp(b).expect("finite times"));
+
+        // Events in time order; arrivals win ties so admission sees the
+        // request before the tying step's post-retirement dispatch.
+        enum Event {
+            Arrival,
+            Step(f64, usize),
+            Drain,
+        }
+        let event = match (next_arrival, next_step) {
+            (None, None) => {
+                if queue.is_empty() {
+                    break;
+                }
+                Event::Drain
+            }
+            (Some(_), None) => Event::Arrival,
+            (None, Some((ts, wi))) => Event::Step(ts, wi),
+            (Some(ta), Some((ts, wi))) => {
+                if ta <= ts {
+                    Event::Arrival
+                } else {
+                    Event::Step(ts, wi)
+                }
+            }
+        };
+
+        match event {
+            Event::Arrival => {
+                let (ta, rid, req) = arrivals.pop_front().expect("arrival event");
+                wall_s = wall_s.max(ta);
+                let now = ta;
+                queue.push_back((ta, rid, req));
+                // Pull in any simultaneous arrivals deterministically.
+                while arrivals.front().map(|a| a.0 == now).unwrap_or(false) {
+                    let a = arrivals.pop_front().unwrap();
+                    queue.push_back(a);
+                }
+                dispatch(
+                    &mut queue,
+                    &mut workers,
+                    &mut records,
+                    &mut rejected,
+                    &mut max_concurrent,
+                    &mut peak_kv_reserved,
+                    now,
+                );
+            }
+            Event::Step(ts, wi) => {
+                wall_s = wall_s.max(ts);
+                finish_step(&mut workers[wi], ts, &mut records, &mut tpot_samples);
+                dispatch(
+                    &mut queue,
+                    &mut workers,
+                    &mut records,
+                    &mut rejected,
+                    &mut max_concurrent,
+                    &mut peak_kv_reserved,
+                    ts,
+                );
+            }
+            Event::Drain => {
+                // No arrivals left and nothing in flight, but the queue
+                // is non-empty: every worker is empty, so each head is
+                // either admitted or rejected-as-impossible here.
+                let before = queue.len();
+                dispatch(
+                    &mut queue,
+                    &mut workers,
+                    &mut records,
+                    &mut rejected,
+                    &mut max_concurrent,
+                    &mut peak_kv_reserved,
+                    wall_s,
+                );
+                if queue.len() == before {
+                    return Err(format!(
+                        "virtual scheduler stuck with {before} queued requests"
+                    ));
+                }
+            }
+        }
+
+        // (Re)start fused steps on every worker that has work but no
+        // in-flight batch — including idle workers that just admitted.
+        let now = wall_s;
+        for w in workers.iter_mut() {
+            if w.batch.is_empty() && !w.slots.is_empty() {
+                w.batch = w.scheduler.pick_batch(w.slots.len(), max_batch);
+                let positions: Vec<usize> = w
+                    .batch
+                    .iter()
+                    .map(|&i| w.slots[i].prompt_fed + w.slots[i].generated.len())
+                    .collect();
+                w.busy_until = now + vc.step.step_s(&positions);
+            }
+        }
+    }
+
+    let records: Vec<VirtualRecord> =
+        records.into_iter().map(|r| r.expect("every request recorded")).collect();
+    let completed: Vec<&VirtualRecord> =
+        records.iter().filter(|r| !r.tokens.is_empty()).collect();
+    let ttfts: Vec<f64> = completed.iter().map(|r| r.first_token_s - r.arrival_s).collect();
+    let lats: Vec<f64> = completed.iter().map(|r| r.done_s - r.arrival_s).collect();
+    let total_tokens: usize = completed.iter().map(|r| r.tokens.len()).sum();
+    Ok(VirtualReport {
+        policy: vc.policy,
+        offered_rate: wl.rate,
+        rejected,
+        ttft: summary_or_zero(&ttfts),
+        tpot: summary_or_zero(&tpot_samples),
+        request_latency: summary_or_zero(&lats),
+        wall_s,
+        tokens_per_s: if wall_s > 0.0 { total_tokens as f64 / wall_s } else { 0.0 },
+        max_concurrent,
+        peak_kv_reserved,
+        records,
+    })
+}
+
+/// Complete one fused step on `w` at virtual time `now`: decode every
+/// lane, emit/record tokens, retire finished slots (mirrored into the
+/// scheduler and KV budget, exactly like the threaded worker loop).
+fn finish_step(
+    w: &mut VWorker,
+    now: f64,
+    records: &mut [Option<VirtualRecord>],
+    tpot_samples: &mut Vec<f64>,
+) {
+    let batch = std::mem::take(&mut w.batch);
+    let mut retire: Vec<usize> = Vec::new();
+    for &i in &batch {
+        let s = &mut w.slots[i];
+        let token_in = if s.prompt_fed < s.request.prompt.len() {
+            s.request.prompt[s.prompt_fed]
+        } else {
+            *s.generated.last().expect("generated nonempty after prompt")
+        };
+        let logits = w.backend.decode(&mut s.session, token_in).expect("sim decode");
+        if s.prompt_fed < s.request.prompt.len() {
+            s.prompt_fed += 1;
+            if s.prompt_fed < s.request.prompt.len() {
+                w.scheduler.note_progress(i, s.generated.len());
+                continue;
+            }
+        }
+        let token = s.sampler.sample(&logits, &s.request.params) as i64;
+        s.generated.push(token);
+        if s.first_token_s.is_none() {
+            s.first_token_s = Some(now);
+        } else {
+            tpot_samples.push(now - s.last_token_s);
+        }
+        s.last_token_s = now;
+        w.scheduler.note_progress(i, s.generated.len());
+        let eos_hit = s.request.eos_token == Some(token);
+        let len_hit = s.generated.len() >= s.request.max_new_tokens;
+        if eos_hit || len_hit {
+            retire.push(i);
+        }
+    }
+    retire.sort_by(|a, b| b.cmp(a));
+    for i in retire {
+        let s = w.slots.swap_remove(i);
+        w.scheduler.swap_remove(i);
+        w.kv.release(s.kv_reserved);
+        records[s.rid] = Some(VirtualRecord {
+            request_id: s.rid,
+            arrival_s: s.arrival_s,
+            first_token_s: s.first_token_s.unwrap_or(now),
+            done_s: now,
+            tokens: s.generated,
+        });
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::LpuConfig;
     use crate::coordinator::{BackendFactory, CoordinatorConfig, SchedulerPolicy};
+    use crate::model::by_name;
 
     fn wl(rate: f64, n: usize) -> Workload {
         Workload {
@@ -170,9 +587,14 @@ mod tests {
         let mut c = Coordinator::new(CoordinatorConfig {
             max_active_per_worker: 4,
             policy: SchedulerPolicy::RoundRobin,
+            ..CoordinatorConfig::default()
         });
         c.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
         c
+    }
+
+    fn step_model() -> StepModel {
+        StepModel::from_config(&by_name("opt-tiny").unwrap(), &LpuConfig::asic_819gbs(), 1)
     }
 
     #[test]
@@ -216,6 +638,9 @@ mod tests {
         assert_eq!((r.tokens_per_s * r.wall_s).round() as usize, 30 * 5);
         assert!(r.ttft.mean > 0.0);
         assert!(r.request_latency.p99 >= r.request_latency.p50);
+        assert_eq!(r.token_streams.len(), 30);
+        assert!(r.token_streams.iter().all(|t| t.len() == 5));
+        assert!(r.tpot.mean >= 0.0);
         c.shutdown();
     }
 
@@ -227,5 +652,117 @@ mod tests {
             assert_eq!(r.completed, 25, "rate {rate}");
         }
         c.shutdown();
+    }
+
+    // ---- virtual-time harness ----
+
+    #[test]
+    fn virtual_run_is_bit_identical_across_runs() {
+        let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 4, step_model());
+        let a = run_virtual(&wl(2000.0, 40), &vc).unwrap();
+        let b = run_virtual(&wl(2000.0, 40), &vc).unwrap();
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.ttft.p99, b.ttft.p99);
+        assert_eq!(a.tpot.p95, b.tpot.p95);
+        assert_eq!(a.request_latency.p50, b.request_latency.p50);
+        assert_eq!(a.wall_s, b.wall_s);
+        assert_eq!(a.max_concurrent, b.max_concurrent);
+    }
+
+    #[test]
+    fn virtual_run_conserves_requests_and_tokens() {
+        let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 4, step_model());
+        let r = run_virtual(&wl(1000.0, 30), &vc).unwrap();
+        assert_eq!(r.records.len(), 30);
+        assert_eq!(r.rejected, 0);
+        assert!(r.records.iter().all(|rec| rec.tokens.len() == 5));
+        assert!(r.records.iter().all(|rec| rec.done_s >= rec.first_token_s));
+        assert!(r.records.iter().all(|rec| rec.first_token_s >= rec.arrival_s));
+        assert!(r.max_concurrent >= 1);
+    }
+
+    #[test]
+    fn virtual_tokens_match_threaded_coordinator() {
+        // Greedy streams are a pure function of (model, prompt) in the
+        // sim backend: the virtual harness and the live threaded
+        // coordinator must agree token-for-token.
+        let w = wl(500.0, 12);
+        let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 4, step_model());
+        let virt = run_virtual(&w, &vc).unwrap();
+        let c = coord();
+        let live = run_open_loop(&c, &w).unwrap();
+        c.shutdown();
+        for (i, (v, l)) in virt.records.iter().zip(&live.token_streams).enumerate() {
+            assert_eq!(&v.tokens, l, "request {i}");
+        }
+    }
+
+    #[test]
+    fn virtual_kv_admission_never_exceeds_budget() {
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 8, step_model());
+        vc.kv_bytes_per_token = 1000;
+        vc.kv_budget_bytes = 25_000; // a few requests' worth
+        let r = run_virtual(&wl(5000.0, 40), &vc).unwrap();
+        assert!(r.peak_kv_reserved <= vc.kv_budget_bytes);
+        assert_eq!(r.records.len(), 40);
+        // Nothing impossible here: (6 prompt + 5 out) * 1000 < 25_000.
+        assert_eq!(r.rejected, 0);
+    }
+
+    #[test]
+    fn virtual_rejects_impossible_requests() {
+        let mut vc = VirtualConfig::new(SchedulerPolicy::Fcfs, 1, 4, step_model());
+        vc.kv_bytes_per_token = 1000;
+        vc.kv_budget_bytes = 3_000; // smaller than any request's need
+        let r = run_virtual(&wl(100.0, 10), &vc).unwrap();
+        assert_eq!(r.rejected, 10);
+        assert!(r.records.iter().all(|rec| rec.tokens.is_empty()));
+    }
+
+    #[test]
+    fn virtual_batching_beats_serial_throughput() {
+        // Same workload, same step model: a worker that can batch 8
+        // lanes must finish the backlog sooner than one that can't,
+        // because weights stream once per fused step. Use a 1.3B step
+        // model so the weight stream (not per-lane overhead) dominates.
+        let sm = StepModel::from_config(&by_name("opt-1.3b").unwrap(), &LpuConfig::asic_819gbs(), 1);
+        let w = Workload { output_len: LenDist::Fixed(32), ..wl(100_000.0, 24) };
+        let serial = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 1, sm);
+        let batched = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 8, sm);
+        let rs = run_virtual(&w, &serial).unwrap();
+        let rb = run_virtual(&w, &batched).unwrap();
+        assert!(
+            rb.wall_s < rs.wall_s * 0.6,
+            "batched makespan {} !< 0.6 * serial {}",
+            rb.wall_s,
+            rs.wall_s
+        );
+        assert!(rb.max_concurrent >= 8, "max_concurrent {}", rb.max_concurrent);
+    }
+
+    #[test]
+    fn virtual_policies_tradeoff_visible() {
+        // Under backlog, ShortestFirst should beat FCFS on mean request
+        // latency for mixed lengths (classic SJF result).
+        let w = Workload {
+            prompt_len: LenDist::Fixed(2),
+            output_len: LenDist::LongTail { min: 2, mean_extra: 20.0, cap: 64 },
+            ..wl(50_000.0, 40)
+        };
+        // Cap the hardware batch below the slot count so policy choice
+        // actually decides which lanes advance.
+        let mk = |p| {
+            let mut vc = VirtualConfig::new(p, 1, 8, step_model());
+            vc.max_batch = 2;
+            vc
+        };
+        let fcfs = run_virtual(&w, &mk(SchedulerPolicy::Fcfs)).unwrap();
+        let sjf = run_virtual(&w, &mk(SchedulerPolicy::ShortestFirst)).unwrap();
+        assert!(
+            sjf.request_latency.mean <= fcfs.request_latency.mean * 1.05,
+            "SJF mean latency {} should not lose to FCFS {}",
+            sjf.request_latency.mean,
+            fcfs.request_latency.mean
+        );
     }
 }

@@ -117,7 +117,24 @@ impl GpuConfig {
     /// (the paper: "the GPU underutilization is accentuated with
     /// additional devices", 64.9% for 2×H100 on 66B).
     pub fn decode_latency(&self, model: &ModelConfig, n: usize, pos: usize) -> f64 {
-        assert!(n >= 1);
+        self.decode_step_latency(model, n, pos, 1)
+    }
+
+    /// Fused-step decode latency for a continuous batch of `batch`
+    /// sequences all near context position `pos`, seconds. Decoding is
+    /// memory-bound, so the weight shard streams **once** per fused
+    /// step and is reused by every sequence in the batch; only the
+    /// per-sequence KV reads and the per-layer syncs are not amortized.
+    /// Divide by `batch` for effective per-token latency — the serving
+    /// throughput lever the coordinator's batched worker loop exploits.
+    pub fn decode_step_latency(
+        &self,
+        model: &ModelConfig,
+        n: usize,
+        pos: usize,
+        batch: usize,
+    ) -> f64 {
+        assert!(n >= 1 && batch >= 1);
         // GPUs keep the LM head weight-tied (unlike the LPU map, which
         // stores a column-tiled copy), so charge the tied parameter set.
         let weights = model.weight_bytes();
@@ -126,14 +143,14 @@ impl GpuConfig {
         // at 1->2 devices; FT DGX numbers imply ~8%/doubling).
         let util = self.utilization(shard) * 0.92f64.powi((n as f64).log2() as i32);
         let stream = shard as f64 / (self.mem_bw * util);
-        let kv = model.kv_read_bytes(pos + 1) as f64 / n as f64 / (self.mem_bw * util);
+        let kv_one = model.kv_read_bytes(pos + 1) as f64 / n as f64 / (self.mem_bw * util);
         let sync = if n > 1 {
-            let per_layer = self.allreduce_time(model.d_model as u64 * 2, n);
+            let per_layer = self.allreduce_time(batch as u64 * model.d_model as u64 * 2, n);
             2.0 * model.n_layers as f64 * per_layer
         } else {
             0.0
         };
-        stream + kv + sync
+        stream + batch as f64 * kv_one + sync
     }
 
     /// Blocking ring all-reduce over the GPU interconnect.
@@ -273,6 +290,24 @@ mod tests {
         // does the rest — together they cap DGX at ~2.65x.
         assert!(sync8 / t8 > 0.08, "sync share {:.2}", sync8 / t8);
         assert!(t1 / t8 < 4.0, "super-linear scaling should not happen");
+    }
+
+    #[test]
+    fn batched_step_amortizes_weight_stream() {
+        let g = GpuConfig::h100();
+        let m = by_name("opt-6.7b").unwrap();
+        let single = g.decode_step_latency(&m, 1, 512, 1);
+        let batch16 = g.decode_step_latency(&m, 1, 512, 16);
+        // Weights stream once: the fused step is far cheaper than 16
+        // independent steps, and per-token latency drops with batch.
+        assert!(batch16 < 16.0 * single * 0.5, "{batch16} vs {}", 16.0 * single);
+        assert!(batch16 / 16.0 < single);
+        // But it is not free: per-sequence KV reads still add up.
+        assert!(batch16 > single);
+        // batch=1 degenerates to the classic per-token latency.
+        let classic = g.decode_latency(&m, 1, 512);
+        let rel = (single - classic).abs() / classic;
+        assert!(rel < 1e-9, "batch-1 fused step {single} != decode_latency {classic}");
     }
 
     #[test]

@@ -20,14 +20,19 @@
 //! * [`gpu`] — analytical GPU baselines (H100/A100/L4) calibrated to the
 //!   paper's measured utilization/power, incl. the NVLink sync model.
 //! * [`power`] — ASIC area/power model reproducing Figure 6(a).
-//! * [`runtime`] — PJRT-backed functional execution: loads the AOT-lowered
-//!   JAX/Pallas decoder artifacts and runs real token generation.
-//! * [`coordinator`] — the serving layer: request router, scheduler,
-//!   session/KV management, device pool, streaming token output.
+//! * [`runtime`] — artifact manifests for the AOT-lowered JAX/Pallas
+//!   decoder; PJRT execution is gated off in this offline build.
+//! * [`coordinator`] — the **continuous-batching serving layer**: request
+//!   router, per-worker slot tables with mid-decode admission bounded by
+//!   a KV-memory budget, batched fused decode steps (weights stream once
+//!   per step), pluggable scheduler policies (FCFS / round-robin /
+//!   shortest-first), p50/p95/p99 TTFT+TPOT metrics, a seeded Poisson
+//!   load generator, and a deterministic virtual-time load harness.
 //! * [`server`] — a minimal threaded TCP/JSON-line server + client.
 //! * [`numerics`] — bit-accurate FP16 and the MAC-tree arithmetic model.
-//! * [`util`] — in-tree substrates: JSON, PRNG, stats, mini property
-//!   testing, bench harness (offline environment: no external crates).
+//! * [`util`] — in-tree substrates: JSON, PRNG, stats, errors, mini
+//!   property testing, bench harness (offline environment: zero external
+//!   crates).
 
 pub mod compiler;
 pub mod config;

@@ -27,11 +27,17 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--max-active 8] [--max-batch 0] [--kv-budget-mb N]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf]" },
 ];
+
+fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
+    let name = args.opt_or("policy", "rr");
+    SchedulerPolicy::parse(name)
+        .ok_or_else(|| format!("unknown policy '{name}' (fcfs|rr|sjf)"))
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -215,13 +221,31 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }
         other => return Err(format!("unknown backend '{other}' (pjrt|sim)")),
     };
+    let policy = policy_arg(args)?;
+    let kv_budget_mb = args.opt_u64("kv-budget-mb", 0)?;
+    let kv_bytes_per_token = if kv_budget_mb == 0 {
+        0
+    } else {
+        // A budget without per-token accounting would silently disable
+        // admission control; refuse rather than no-op the flag.
+        by_name(&model).map(|m| m.kv_bytes_per_token()).ok_or_else(|| {
+            format!("--kv-budget-mb needs a registry model for KV accounting; '{model}' is unknown")
+        })?
+    };
     let mut coord = Coordinator::new(CoordinatorConfig {
-        max_active_per_worker: args.opt_usize("max-active", 4)?,
-        policy: SchedulerPolicy::RoundRobin,
+        max_active_per_worker: args.opt_usize("max-active", 8)?,
+        policy,
+        kv_bytes_per_token,
+        kv_budget_bytes: if kv_budget_mb == 0 { u64::MAX } else { kv_budget_mb << 20 },
+        max_batch: args.opt_usize("max-batch", 0)?,
     });
     coord.add_pool(&model, workers, factory);
     let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
-    println!("serving '{model}' ({backend}) on {} with {workers} worker(s); Ctrl-C to stop", handle.addr);
+    println!(
+        "serving '{model}' ({backend}, {} scheduling) on {} with {workers} worker(s); Ctrl-C to stop",
+        policy.name(),
+        handle.addr
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -268,9 +292,11 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         "pjrt" => BackendFactory::pjrt(default_artifacts_dir(), &model),
         other => return Err(format!("unknown backend '{other}'")),
     };
+    let policy = policy_arg(args)?;
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 4)?,
-        policy: SchedulerPolicy::RoundRobin,
+        policy,
+        ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, args.opt_usize("workers", 2)?, factory);
 
@@ -280,8 +306,8 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         .map(|r| r.trim().parse().map_err(|_| format!("bad rate '{r}'")))
         .collect::<Result<_, _>>()?;
     let mut t = Table::new(
-        format!("load study: {model} ({backend} backend)"),
-        &["req/s", "tokens/s", "TTFT p50 ms", "TTFT p99 ms", "latency p99 ms"],
+        format!("load study: {model} ({backend} backend, {} scheduling)", policy.name()),
+        &["req/s", "tokens/s", "TTFT p50 ms", "TTFT p99 ms", "TPOT p95 ms", "latency p99 ms"],
     );
     for rate in rates {
         let wl = Workload {
@@ -299,6 +325,7 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
             format!("{:.0}", r.tokens_per_s),
             format!("{:.2}", r.ttft.p50 * 1e3),
             format!("{:.2}", r.ttft.p99 * 1e3),
+            format!("{:.2}", r.tpot.p95 * 1e3),
             format!("{:.2}", r.request_latency.p99 * 1e3),
         ]);
     }

@@ -1,28 +1,29 @@
-//! PJRT functional runtime: loads the AOT-compiled JAX/Pallas decoder and
-//! executes real token generation from the Rust request path.
+//! Functional runtime: artifact manifests for the AOT-compiled JAX/Pallas
+//! decoder, and a **gated** PJRT execution engine.
 //!
 //! Build-time Python (`python/compile/aot.py`) lowers the L2 JAX model
-//! (which calls the L1 Pallas kernels) to **HLO text** — the only
-//! interchange format the image's xla_extension 0.5.1 accepts from
-//! jax ≥ 0.5 (serialized protos carry 64-bit instruction ids it rejects)
-//! — and emits for each model:
+//! (which calls the L1 Pallas kernels) to HLO text and emits per model:
 //!
 //! * `<model>.decode.hlo.txt` — the single-token decode step,
 //! * `<model>.manifest.json`  — argument order/shapes, model shape, and a
 //!   golden test vector (inputs + expected logits) for bridge validation,
 //! * `<model>.weights.bin`    — the concatenated f32 parameters.
 //!
-//! At startup [`Engine::load`] compiles the HLO once on the PJRT CPU
-//! client and uploads the weights to device buffers; each
-//! [`Session::decode_step`] then uploads only the token/position scalars
-//! and round-trips the KV cache as device buffers. Python never runs on
-//! the request path.
+//! The manifest/artifact layer below is fully functional and tested; it
+//! is what the serving coordinator's PJRT backend descriptor resolves
+//! against. Actual HLO execution requires the `xla_extension` PJRT
+//! toolchain, which this offline image does not ship — so
+//! [`Engine::load`] parses and validates artifacts, then fails with a
+//! clear gating error instead of linking XLA. The serving layer runs on
+//! the deterministic sim backend (`crate::coordinator::backend`), which
+//! exercises the identical request path (sessions, batched decode,
+//! sampling, streaming).
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{bail, err};
 
 /// One executable argument described by the manifest.
 #[derive(Clone, Debug, PartialEq)]
@@ -67,21 +68,24 @@ pub struct Manifest {
 
 impl Manifest {
     pub fn parse(src: &str) -> Result<Manifest> {
-        let j = Json::parse(src).map_err(|e| anyhow!("manifest: {e}"))?;
-        let get_usize = |k: &str| {
-            j.get(k).as_usize().ok_or_else(|| anyhow!("manifest: missing '{k}'"))
-        };
-        let args_json = j.get("args").as_arr().ok_or_else(|| anyhow!("manifest: missing 'args'"))?;
+        let j = Json::parse(src).map_err(|e| err!("manifest: {e}"))?;
+        let get_usize =
+            |k: &str| j.get(k).as_usize().ok_or_else(|| err!("manifest: missing '{k}'"));
+        let args_json = j.get("args").as_arr().ok_or_else(|| err!("manifest: missing 'args'"))?;
         let mut args = Vec::with_capacity(args_json.len());
         for a in args_json {
             args.push(ArgSpec {
-                name: a.get("name").as_str().ok_or_else(|| anyhow!("arg missing name"))?.to_string(),
+                name: a
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| err!("arg missing name"))?
+                    .to_string(),
                 shape: a
                     .get("shape")
                     .as_arr()
-                    .ok_or_else(|| anyhow!("arg missing shape"))?
+                    .ok_or_else(|| err!("arg missing shape"))?
                     .iter()
-                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .map(|d| d.as_usize().ok_or_else(|| err!("bad dim")))
                     .collect::<Result<_>>()?,
                 dtype: a.get("dtype").as_str().unwrap_or("f32").to_string(),
                 offset: a.get("offset").as_u64(),
@@ -129,24 +133,42 @@ impl Manifest {
     pub fn param_args(&self) -> impl Iterator<Item = &ArgSpec> {
         self.args.iter().filter(|a| a.offset.is_some())
     }
+
+    /// Check the weights blob covers every parameter argument.
+    pub fn validate_weights(&self, weights_len: usize) -> Result<()> {
+        for a in self.param_args() {
+            let off = a.offset.unwrap() as usize;
+            let nbytes = a.elems() * 4;
+            if off + nbytes > weights_len {
+                bail!(
+                    "weights.bin too small for {} (need {nbytes} bytes at offset {off}, have {weights_len})",
+                    a.name
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
-/// The compiled model + resident weights. One per model; `Send`-able
-/// behind an `Arc` (PJRT objects are internally refcounted).
+/// The compiled model + resident weights. The full PJRT implementation
+/// (compile HLO once, upload weights to device buffers, round-trip the
+/// KV cache as device buffers per step) lives behind the gate described
+/// in the module docs; this build validates artifacts and reports the
+/// gate instead of executing.
 pub struct Engine {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
     pub manifest: Manifest,
-    /// Device-resident parameter buffers, in argument order.
-    weights: Vec<xla::PjRtBuffer>,
 }
 
-/// Per-request generation state: device-resident KV cache buffers.
+/// Per-request generation state for the PJRT engine (device-resident KV
+/// cache buffers in a PJRT-enabled build).
 pub struct Session {
-    k: xla::PjRtBuffer,
-    v: xla::PjRtBuffer,
     pub pos: usize,
 }
+
+/// The single message every gated entry point reports.
+const GATE_MSG: &str = "PJRT/XLA execution is gated: this offline build has no xla_extension \
+     toolchain. Serve with the sim backend (`--backend sim`), which runs the same \
+     coordinator/session/batching path";
 
 impl Engine {
     /// Expected artifact paths for a model.
@@ -164,170 +186,46 @@ impl Engine {
         h.exists() && m.exists() && w.exists()
     }
 
-    /// Load + compile a model's artifacts.
+    /// Load and validate a model's artifacts, then fail on the PJRT gate.
+    /// Errors mention the missing piece (manifest, weights, gate) so
+    /// operators can tell a deployment problem from the toolchain gate.
     pub fn load(dir: &Path, model: &str) -> Result<Engine> {
-        let (hlo_path, manifest_path, weights_path) = Self::artifact_paths(dir, model);
+        let (_hlo_path, manifest_path, weights_path) = Self::artifact_paths(dir, model);
         let manifest_src = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
         let manifest = Manifest::parse(&manifest_src)?;
-
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).map_err(|e| anyhow!("XLA compile: {e:?}"))?;
-
-        let raw = std::fs::read(&weights_path)
-            .with_context(|| format!("reading {weights_path:?}"))?;
-        let mut weights = Vec::new();
-        for a in manifest.param_args() {
-            let off = a.offset.unwrap() as usize;
-            let nbytes = a.elems() * 4;
-            if off + nbytes > raw.len() {
-                bail!("weights.bin too small for {} (need {} at {off})", a.name, nbytes);
-            }
-            let floats: Vec<f32> = raw[off..off + nbytes]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            let buf = client
-                .buffer_from_host_buffer::<f32>(&floats, &a.shape, None)
-                .map_err(|e| anyhow!("uploading {}: {e:?}", a.name))?;
-            weights.push(buf);
-        }
-        Ok(Engine { client, exe, manifest, weights })
+        let raw =
+            std::fs::read(&weights_path).with_context(|| format!("reading {weights_path:?}"))?;
+        manifest.validate_weights(raw.len())?;
+        bail!("{GATE_MSG} (artifacts for '{model}' parsed OK)");
     }
 
     /// Fresh session with zeroed KV cache.
     pub fn new_session(&self) -> Result<Session> {
-        let m = &self.manifest;
-        let kv_shape = [m.n_layers, m.max_seq, m.d_model];
-        let zeros = vec![0f32; kv_shape.iter().product()];
-        let k = self
-            .client
-            .buffer_from_host_buffer::<f32>(&zeros, &kv_shape, None)
-            .map_err(|e| anyhow!("kv alloc: {e:?}"))?;
-        let v = self
-            .client
-            .buffer_from_host_buffer::<f32>(&zeros, &kv_shape, None)
-            .map_err(|e| anyhow!("kv alloc: {e:?}"))?;
-        Ok(Session { k, v, pos: 0 })
+        bail!("{GATE_MSG}");
     }
 
     /// Run one decode step: feed `token` at the session's position,
     /// return the next-token logits and advance the KV cache in place.
-    pub fn decode_step(&self, s: &mut Session, token: i64) -> Result<Vec<f32>> {
+    pub fn decode_step(&self, s: &mut Session, _token: i64) -> Result<Vec<f32>> {
         if s.pos >= self.manifest.max_seq {
             bail!("session exceeded max_seq {}", self.manifest.max_seq);
         }
-        let tok = self
-            .client
-            .buffer_from_host_buffer::<i32>(&[token as i32], &[1], None)
-            .map_err(|e| anyhow!("token upload: {e:?}"))?;
-        let pos = self
-            .client
-            .buffer_from_host_buffer::<i32>(&[s.pos as i32], &[1], None)
-            .map_err(|e| anyhow!("pos upload: {e:?}"))?;
-
-        // Argument order: params..., token, pos, k, v (manifest order).
-        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
-        args.push(&tok);
-        args.push(&pos);
-        args.push(&s.k);
-        args.push(&s.v);
-
-        let mut outs = self.exe.execute_b(&args).map_err(|e| anyhow!("execute: {e:?}"))?;
-        let mut row = outs.pop().ok_or_else(|| anyhow!("no output rows"))?;
-        // Lowered with return_tuple=True: PJRT flattens the 3-tuple
-        // (logits, k', v') into separate output buffers.
-        if row.len() == 3 {
-            let v_new = row.pop().unwrap();
-            let k_new = row.pop().unwrap();
-            let logits_buf = row.pop().unwrap();
-            let logits = logits_buf
-                .to_literal_sync()
-                .map_err(|e| anyhow!("logits readback: {e:?}"))?
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
-            s.k = k_new;
-            s.v = v_new;
-            s.pos += 1;
-            Ok(logits)
-        } else if row.len() == 1 {
-            // Tuple kept intact: decompose on host.
-            let lit = row
-                .pop()
-                .unwrap()
-                .to_literal_sync()
-                .map_err(|e| anyhow!("tuple readback: {e:?}"))?;
-            let (logits, k_new, v_new) =
-                lit.to_tuple3().map_err(|e| anyhow!("tuple decompose: {e:?}"))?;
-            let logits = logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            // Host round-trip for the caches (slow path).
-            let m = &self.manifest;
-            let kv_shape = [m.n_layers, m.max_seq, m.d_model];
-            let kv: Vec<f32> = k_new.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            s.k = self
-                .client
-                .buffer_from_host_buffer::<f32>(&kv, &kv_shape, None)
-                .map_err(|e| anyhow!("{e:?}"))?;
-            let vv: Vec<f32> = v_new.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            s.v = self
-                .client
-                .buffer_from_host_buffer::<f32>(&vv, &kv_shape, None)
-                .map_err(|e| anyhow!("{e:?}"))?;
-            s.pos += 1;
-            Ok(logits)
-        } else {
-            bail!("unexpected output arity {}", row.len());
-        }
+        bail!("{GATE_MSG}");
     }
 
-    /// Greedy-decode `n` tokens starting from `prompt`. Returns generated
-    /// token ids. Used by the E2E example and the bridge validation test.
-    pub fn generate_greedy(&self, prompt: &[i64], n: usize) -> Result<Vec<i64>> {
-        let mut session = self.new_session()?;
-        let mut logits = Vec::new();
-        for &t in prompt {
-            logits = self.decode_step(&mut session, t)?;
-        }
-        let mut out = Vec::with_capacity(n);
-        let mut next = crate::numerics::sampler::argmax(&logits) as i64;
-        out.push(next);
-        for _ in 1..n {
-            logits = self.decode_step(&mut session, next)?;
-            next = crate::numerics::sampler::argmax(&logits) as i64;
-            out.push(next);
-        }
-        Ok(out)
+    /// Greedy-decode `n` tokens starting from `prompt`.
+    pub fn generate_greedy(&self, _prompt: &[i64], _n: usize) -> Result<Vec<i64>> {
+        bail!("{GATE_MSG}");
     }
 
     /// Validate the compiled bridge against the manifest's golden vector.
     pub fn validate(&self) -> Result<()> {
-        let test = self
-            .manifest
+        self.manifest
             .test
-            .clone()
-            .ok_or_else(|| anyhow!("manifest has no test vector"))?;
-        let mut session = self.new_session()?;
-        let mut logits = Vec::new();
-        for &t in &test.prompt {
-            logits = self.decode_step(&mut session, t)?;
-        }
-        for (i, &expect) in test.logits_prefix.iter().enumerate() {
-            let got = logits[i] as f64;
-            let tol = 1e-3 * expect.abs().max(1.0);
-            if (got - expect).abs() > tol {
-                bail!("logits[{i}] = {got} but python reference says {expect}");
-            }
-        }
-        let got_tokens = self.generate_greedy(&test.prompt, test.expected_tokens.len())?;
-        if got_tokens != test.expected_tokens {
-            bail!("greedy tokens {got_tokens:?} != python reference {:?}", test.expected_tokens);
-        }
-        Ok(())
+            .as_ref()
+            .ok_or_else(|| err!("manifest has no test vector"))?;
+        bail!("{GATE_MSG}");
     }
 }
 
@@ -383,11 +281,28 @@ mod tests {
     }
 
     #[test]
+    fn weights_bounds_checked() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        // embed needs 512*256*4 B at 0; qkv_0 needs 256*768*4 B at 524288.
+        let need = 524288 + 256 * 768 * 4;
+        assert!(m.validate_weights(need).is_ok());
+        let e = m.validate_weights(need - 1).unwrap_err();
+        assert!(format!("{e}").contains("weights.bin too small"), "{e}");
+    }
+
+    #[test]
     fn artifact_paths_layout() {
         let (h, m, w) = Engine::artifact_paths(Path::new("artifacts"), "opt-tiny");
         assert_eq!(h, Path::new("artifacts/opt-tiny.decode.hlo.txt"));
         assert_eq!(m, Path::new("artifacts/opt-tiny.manifest.json"));
         assert_eq!(w, Path::new("artifacts/opt-tiny.weights.bin"));
         assert!(!Engine::artifacts_present(Path::new("/nonexistent"), "x"));
+    }
+
+    #[test]
+    fn load_without_artifacts_mentions_manifest() {
+        let e = Engine::load(Path::new("/nonexistent-dir"), "opt-tiny").unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("manifest") || msg.contains("reading"), "{msg}");
     }
 }

@@ -106,6 +106,9 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
                 let mut j = coord.metrics.snapshot().to_json();
                 if let Json::Obj(o) = &mut j {
                     o.insert("type", "metrics".into());
+                    // Latency tails are policy-dependent; tag the frame
+                    // so sweeps can label per-policy results.
+                    o.insert("policy", coord.policy().name().into());
                 }
                 let _ = writeln!(writer, "{j}");
             }
@@ -302,6 +305,7 @@ mod tests {
         let mut coord = Coordinator::new(CoordinatorConfig {
             max_active_per_worker: 4,
             policy: SchedulerPolicy::RoundRobin,
+            ..CoordinatorConfig::default()
         });
         coord.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 128));
         let h = serve(Arc::new(coord), "127.0.0.1:0").unwrap();
@@ -349,6 +353,10 @@ mod tests {
         let mut c = Client::connect(&addr).unwrap();
         let m = c.metrics().unwrap();
         assert_eq!(m.get("completed").as_u64(), Some(6));
+        // Policy tag + latency tails ride along for per-policy sweeps.
+        assert_eq!(m.get("policy").as_str(), Some("round_robin"));
+        assert!(m.get("ttft_p99_s").as_f64().unwrap() >= m.get("ttft_p50_s").as_f64().unwrap());
+        assert!(m.get("tpot_p95_s").as_f64().is_some());
         h.stop();
     }
 

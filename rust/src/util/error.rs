@@ -1,0 +1,135 @@
+//! Minimal error substrate (offline `anyhow` substitute).
+//!
+//! A string-backed error with context chaining, plus the [`crate::err!`]
+//! and [`crate::bail!`] macros. The serving runtime and backends use
+//! this instead of an external error crate so the workspace builds with
+//! zero dependencies.
+
+use std::fmt;
+
+/// A message-carrying error. Context frames added via
+/// [`Context::with_context`] render outermost-first, separated by ": ".
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend a context frame.
+    pub fn context(self, frame: impl Into<String>) -> Error {
+        Error { msg: format!("{}: {}", frame.into(), self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazily-built context to a fallible result.
+pub trait Context<T> {
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e)))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_debug_show_message() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = Error::msg("file missing").context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest: file missing");
+    }
+
+    #[test]
+    fn with_context_on_io_errors() {
+        let r: std::io::Result<()> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.with_context(|| "reading weights".to_string()).unwrap_err();
+        assert!(format!("{e}").starts_with("reading weights: "));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: usize) -> Result<()> {
+            if n > 3 {
+                bail!("n too big: {n}");
+            }
+            Err(err!("always fails with n={n}"))
+        }
+        assert_eq!(format!("{}", fails(9).unwrap_err()), "n too big: 9");
+        assert_eq!(format!("{}", fails(1).unwrap_err()), "always fails with n=1");
+    }
+
+    #[test]
+    fn conversions() {
+        let _e: Error = "static".into();
+        let _e: Error = String::from("owned").into();
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "io");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("io"));
+    }
+}

@@ -1,13 +1,13 @@
 //! In-tree infrastructure substrates.
 //!
-//! The build environment is fully offline: only the `xla` crate's vendored
-//! dependency closure is available. The usual ecosystem crates (serde,
-//! rand, criterion, proptest, clap) are therefore reimplemented here as
-//! small, well-tested modules. Each is a real substrate with its own unit
-//! tests, not a shim.
+//! The build environment is fully offline with zero external crates.
+//! The usual ecosystem crates (serde, rand, criterion, proptest, clap,
+//! anyhow) are therefore reimplemented here as small, well-tested
+//! modules. Each is a real substrate with its own unit tests, not a shim.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -96,6 +96,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -116,6 +117,7 @@ impl Summary {
             min: sorted[0],
             p50: percentile(&sorted, 50.0),
             p90: percentile(&sorted, 90.0),
+            p95: percentile(&sorted, 95.0),
             p99: percentile(&sorted, 99.0),
             max: *sorted.last().unwrap(),
         }
@@ -218,7 +220,9 @@ mod tests {
         assert_eq!(s.count, 100);
         assert!((s.mean - 50.5).abs() < 1e-12);
         assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!(s.p95 > 94.0 && s.p95 <= 96.5);
         assert!(s.p99 > 98.0 && s.p99 <= 100.0);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
     }
 
     #[test]

@@ -8,7 +8,11 @@ use lpu::numerics::SampleParams;
 use lpu::util::rng::Rng;
 
 fn coord(policy: SchedulerPolicy, workers: usize, max_active: usize) -> Coordinator {
-    let mut c = Coordinator::new(CoordinatorConfig { max_active_per_worker: max_active, policy });
+    let mut c = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: max_active,
+        policy,
+        ..CoordinatorConfig::default()
+    });
     c.add_pool("opt-tiny", workers, BackendFactory::sim("opt-tiny", 512));
     c
 }
@@ -75,6 +79,7 @@ fn multi_model_routing() {
     let mut c = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: 2,
         policy: SchedulerPolicy::RoundRobin,
+        ..CoordinatorConfig::default()
     });
     c.add_pool("model-a", 1, BackendFactory::sim("model-a", 64));
     c.add_pool("model-b", 1, BackendFactory::sim("model-b", 64));
@@ -86,14 +91,23 @@ fn multi_model_routing() {
     c.shutdown();
 }
 
-/// FCFS vs round-robin: under concurrent load, round-robin must give the
-/// later request a *much* earlier first token.
+/// FCFS vs round-robin: under concurrent load with the hardware batch
+/// capped below the slot count (so policy decides which lane advances),
+/// round-robin must give the later request a *much* earlier completion.
 #[test]
 fn round_robin_improves_ttft_fairness() {
     let ttft_rank = |policy| {
-        let c = coord(policy, 1, 2);
-        // Long request first, short request right after.
-        let long = c.submit(Request::greedy("opt-tiny", vec![1], 400)).unwrap();
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 2,
+            policy,
+            max_batch: 1,
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+        // Long request first, short request right after. Long enough
+        // that FCFS (batch cap 1) holds the short request back for a
+        // clearly measurable stretch.
+        let long = c.submit(Request::greedy("opt-tiny", vec![1], 20_000)).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(5));
         let short = c.submit(Request::greedy("opt-tiny", vec![2], 3)).unwrap();
         let t0 = std::time::Instant::now();

@@ -12,6 +12,7 @@ fn start(factory: BackendFactory, model: &str) -> (lpu::server::ServerHandle, st
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: 4,
         policy: SchedulerPolicy::RoundRobin,
+        ..CoordinatorConfig::default()
     });
     coord.add_pool(model, 2, factory);
     let h = serve(Arc::new(coord), "127.0.0.1:0").unwrap();

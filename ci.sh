@@ -35,7 +35,14 @@ cargo build --release
 step "cargo test -q"
 cargo test -q
 
-step "serving bench (smoke)"
+step "serving bench (smoke) -> BENCH_serving.json"
+# Writes machine-readable results (tok/s, peak active, TTFT/TPOT p99 per
+# cell, both KV policies) to ../BENCH_serving.json so the perf
+# trajectory is tracked in-repo. This fast-mode output IS the committed
+# baseline (deterministic per seed; the "fast" field labels the mode —
+# compare like with like). A full sweep writes the same path; use
+# LPU_BENCH_JSON=<path> to write elsewhere without touching the
+# baseline.
 LPU_BENCH_FAST=1 cargo bench --bench serving_load
 
 printf '\nci.sh: all gates green\n'

@@ -90,18 +90,38 @@ impl Default for CompileOpts {
 }
 
 /// Compile error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CompileError {
-    #[error("model does not partition over {devices} devices: {reason}")]
     BadPartition { devices: usize, reason: String },
-    #[error("model ({need} B with KV) exceeds capacity of {devices} device(s) ({have} B)")]
     OutOfMemory { need: u64, have: u64, devices: usize },
-    #[error("register allocation failed: {0}")]
     RegAlloc(String),
-    #[error("instruction encoding failed: {0}")]
-    Encode(#[from] crate::isa::IsaError),
-    #[error("invalid options: {0}")]
+    Encode(crate::isa::IsaError),
     BadOpts(String),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::BadPartition { devices, reason } => {
+                write!(f, "model does not partition over {devices} devices: {reason}")
+            }
+            CompileError::OutOfMemory { need, have, devices } => write!(
+                f,
+                "model ({need} B with KV) exceeds capacity of {devices} device(s) ({have} B)"
+            ),
+            CompileError::RegAlloc(msg) => write!(f, "register allocation failed: {msg}"),
+            CompileError::Encode(e) => write!(f, "instruction encoding failed: {e}"),
+            CompileError::BadOpts(msg) => write!(f, "invalid options: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+impl From<crate::isa::IsaError> for CompileError {
+    fn from(e: crate::isa::IsaError) -> CompileError {
+        CompileError::Encode(e)
+    }
 }
 
 /// A fully compiled decode-step program.

@@ -81,6 +81,14 @@ pub struct Metrics {
     cancelled: AtomicU64,
     /// Requests refused at admission (KV budget can never fit them).
     rejected: AtomicU64,
+    /// Slots preempted by the paged-KV allocator (blocks released,
+    /// request requeued for recompute-on-readmit).
+    preemptions: AtomicU64,
+    /// Peak KV blocks in use on any single worker (paged policy).
+    kv_blocks_peak: AtomicU64,
+    /// Per-worker KV pager capacity, blocks (paged policy; 0 = not
+    /// paged or unbounded).
+    kv_capacity_blocks: AtomicU64,
     tokens_out: AtomicU64,
     /// Fused batched decode steps executed across all workers.
     batch_steps: AtomicU64,
@@ -101,6 +109,14 @@ pub struct Snapshot {
     pub cancelled: u64,
     /// Requests refused at admission (KV need exceeds the budget).
     pub rejected: u64,
+    /// Slots preempted by the paged-KV allocator.
+    pub preemptions: u64,
+    /// Peak KV blocks in use on any single worker (paged policy).
+    pub peak_kv_blocks: u64,
+    /// Per-worker pager capacity in blocks (0 = not paged/unbounded).
+    pub kv_capacity_blocks: u64,
+    /// Peak fraction of the pager actually filled (0.0 when not paged).
+    pub kv_block_utilization: f64,
     pub tokens_out: u64,
     pub batch_steps: u64,
     /// Mean lanes per fused step (batched vecmat reuse actually achieved).
@@ -129,6 +145,9 @@ impl Metrics {
             errors: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            kv_blocks_peak: AtomicU64::new(0),
+            kv_capacity_blocks: AtomicU64::new(0),
             tokens_out: AtomicU64::new(0),
             batch_steps: AtomicU64::new(0),
             batch_lanes: AtomicU64::new(0),
@@ -174,6 +193,23 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A slot was preempted after generating `tokens` (its KV blocks
+    /// were released; it re-enters the queue for recompute-on-readmit).
+    pub fn on_preempt(&self, _tokens: usize) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Report a worker's current pager occupancy (peak is retained).
+    pub fn note_kv_blocks_in_use(&self, blocks: u64) {
+        self.kv_blocks_peak.fetch_max(blocks, Ordering::Relaxed);
+    }
+
+    /// Record the per-worker pager capacity (workers are symmetric, so
+    /// the max across workers is the per-worker figure).
+    pub fn set_kv_capacity_blocks(&self, blocks: u64) {
+        self.kv_capacity_blocks.fetch_max(blocks, Ordering::Relaxed);
+    }
+
     /// A client disconnected mid-stream after `tokens` were generated.
     pub fn on_cancel(&self, _tokens: usize) {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
@@ -205,6 +241,17 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+            peak_kv_blocks: self.kv_blocks_peak.load(Ordering::Relaxed),
+            kv_capacity_blocks: self.kv_capacity_blocks.load(Ordering::Relaxed),
+            kv_block_utilization: {
+                let cap = self.kv_capacity_blocks.load(Ordering::Relaxed);
+                if cap == 0 {
+                    0.0
+                } else {
+                    self.kv_blocks_peak.load(Ordering::Relaxed) as f64 / cap as f64
+                }
+            },
             tokens_out: self.tokens_out.load(Ordering::Relaxed),
             batch_steps: steps,
             mean_batch_size: if steps == 0 { 0.0 } else { lanes as f64 / steps as f64 },
@@ -236,6 +283,10 @@ impl Snapshot {
             ("errors", self.errors.into()),
             ("cancelled", self.cancelled.into()),
             ("rejected", self.rejected.into()),
+            ("preemptions", self.preemptions.into()),
+            ("peak_kv_blocks", self.peak_kv_blocks.into()),
+            ("kv_capacity_blocks", self.kv_capacity_blocks.into()),
+            ("kv_block_utilization", self.kv_block_utilization.into()),
             ("tokens_out", self.tokens_out.into()),
             ("batch_steps", self.batch_steps.into()),
             ("mean_batch_size", self.mean_batch_size.into()),
@@ -323,6 +374,28 @@ mod tests {
         assert_eq!(series.seen, (RESERVOIR_CAP + 100) as u64);
         // The first 100 entries were overwritten by the newest samples.
         assert_eq!(series.samples[0], RESERVOIR_CAP as f64);
+    }
+
+    #[test]
+    fn preemption_and_pager_gauges() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.preemptions, s.peak_kv_blocks, s.kv_capacity_blocks), (0, 0, 0));
+        assert_eq!(s.kv_block_utilization, 0.0);
+        m.set_kv_capacity_blocks(40);
+        m.note_kv_blocks_in_use(12);
+        m.note_kv_blocks_in_use(30);
+        m.note_kv_blocks_in_use(7); // peak is retained, not overwritten
+        m.on_preempt(5);
+        m.on_preempt(0);
+        let s = m.snapshot();
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.peak_kv_blocks, 30);
+        assert_eq!(s.kv_capacity_blocks, 40);
+        assert!((s.kv_block_utilization - 0.75).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("preemptions").as_u64(), Some(2));
+        assert_eq!(j.get("peak_kv_blocks").as_u64(), Some(30));
     }
 
     #[test]

@@ -28,6 +28,17 @@
 //! per-token latency degrades only by the per-lane KV terms. Sampling
 //! runs in the coordinator with the same [`crate::numerics::Sampler`]
 //! the VXE model uses.
+//!
+//! KV memory is accounted per [`scheduler::KvPolicy`]: `Reserve` holds
+//! the worst case (`prompt + max_new_tokens`) from admission, so the
+//! active batch is sized by what requests *could* grow to; `Paged`
+//! reserves fixed-size [`scheduler::KvPager`] blocks as each context
+//! actually grows and, when growth outruns the budget, preempts the
+//! lowest-progress slot — releasing its blocks and requeueing it at the
+//! queue head for recompute-on-readmit (the prompt *and* the tokens it
+//! already emitted are re-fed to rebuild KV; the client stream never
+//! sees a duplicate token, and the carried sampler RNG keeps stochastic
+//! sampling exact).
 
 pub mod backend;
 pub mod metrics;
@@ -46,7 +57,9 @@ use crate::numerics::{SampleParams, Sampler};
 
 pub use backend::{Backend, BackendFactory, BatchLane, SimBackend, StepModel};
 pub use metrics::{Metrics, Percentiles};
-pub use scheduler::{KvBudget, Scheduler, SchedulerPolicy};
+pub use scheduler::{
+    KvBudget, KvPager, KvPolicy, Scheduler, SchedulerPolicy, DEFAULT_KV_BLOCK_TOKENS,
+};
 pub use workload::{
     run_open_loop, run_virtual, LenDist, LoadReport, VirtualConfig, VirtualReport, Workload,
 };
@@ -131,11 +144,36 @@ impl RequestHandle {
     }
 }
 
+/// State a preempted request carries back to the queue so readmission
+/// can rebuild its KV by recompute (re-feeding prompt + generated) and
+/// then continue the stream — the sampler RNG rides along so stochastic
+/// sampling resumes exactly where it stopped, and already-emitted tokens
+/// are never re-sent to the client.
+struct Resume {
+    generated: Vec<i64>,
+    sampler: Sampler,
+}
+
 struct Job {
     request_id: u64,
     request: Request,
     events: Sender<TokenEvent>,
     submitted: Instant,
+    /// Present when this job was preempted mid-decode.
+    resume: Option<Resume>,
+}
+
+impl Job {
+    /// Context tokens that must be (re)fed before new decoding: the
+    /// prompt plus any tokens generated before a preemption.
+    fn init_ctx(&self) -> usize {
+        self.request.prompt.len() + self.resume.as_ref().map_or(0, |r| r.generated.len())
+    }
+
+    /// Largest context this request can ever grow to.
+    fn worst_case_tokens(&self) -> usize {
+        self.request.prompt.len() + self.request.max_new_tokens
+    }
 }
 
 /// Decision an admission closure returns after peeking the queue head.
@@ -190,6 +228,15 @@ impl JobQueue {
         Ok(())
     }
 
+    /// Requeue a preempted job at the head so it readmits before later
+    /// arrivals (anti-starvation). Accepted even after `close`: a
+    /// preempted job was already admitted once and must still drain.
+    fn push_front(&self, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        st.jobs.push_front(job);
+        self.cv.notify_one();
+    }
+
     fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
@@ -238,6 +285,9 @@ pub struct CoordinatorConfig {
     pub kv_bytes_per_token: u64,
     /// Per-worker KV memory budget, bytes (`u64::MAX` = unbounded).
     pub kv_budget_bytes: u64,
+    /// How the budget is accounted: worst-case reservation or paged
+    /// reserve-as-you-grow with preemption.
+    pub kv_policy: KvPolicy,
     /// Max lanes per fused decode step (hardware batch cap); 0 means
     /// `max_active_per_worker`.
     pub max_batch: usize,
@@ -250,6 +300,7 @@ impl Default for CoordinatorConfig {
             policy: SchedulerPolicy::Fcfs,
             kv_bytes_per_token: 0,
             kv_budget_bytes: u64::MAX,
+            kv_policy: KvPolicy::Reserve,
             max_batch: 0,
         }
     }
@@ -269,6 +320,7 @@ impl CoordinatorConfig {
             policy,
             kv_bytes_per_token: model.kv_bytes_per_token(),
             kv_budget_bytes: budget.max(1),
+            kv_policy: KvPolicy::Reserve,
             max_batch: 0,
         }
     }
@@ -337,7 +389,7 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel();
         self.metrics.on_submit();
         pool.queue
-            .push(Job { request_id, request, events: tx, submitted: Instant::now() })
+            .push(Job { request_id, request, events: tx, submitted: Instant::now(), resume: None })
             .map_err(|_| "pool shut down".to_string())?;
         Ok(RequestHandle { request_id, events: rx })
     }
@@ -360,9 +412,46 @@ struct Slot {
     session: Box<dyn Any>,
     sampler: Sampler,
     generated: Vec<i64>,
+    /// Context tokens fed so far (prompt, then — after a preemption —
+    /// the previously generated tokens being recomputed).
     prompt_fed: usize,
-    /// KV bytes reserved at admission, released at retirement.
+    /// Tokens of `generated` that predate this admission (recompute
+    /// prefill re-feeds them; they were already emitted to the client).
+    resumed: usize,
+    /// Reserve policy: KV bytes reserved at admission.
     kv_reserved: u64,
+    /// Paged policy: KV blocks currently held.
+    kv_blocks: usize,
+}
+
+impl Slot {
+    /// Prefill span: context tokens to feed before sampling (re)starts.
+    fn prefill_target(&self) -> usize {
+        self.job.request.prompt.len() + self.resumed
+    }
+
+    /// Token to feed at prefill position `i` (prompt, then resumed).
+    fn prefill_token(&self, i: usize) -> i64 {
+        let prompt = &self.job.request.prompt;
+        if i < prompt.len() {
+            prompt[i]
+        } else {
+            self.generated[i - prompt.len()]
+        }
+    }
+
+    /// Context size after this slot's *next* decode step: tokens fed
+    /// into the backend so far, plus the one the step feeds. This is
+    /// what the pager must cover before the lane may advance. (The
+    /// first sample rides the last prefill feed, so post-prefill the
+    /// fed count is `prompt + generated - 1`.)
+    fn kv_target(&self) -> usize {
+        if self.prompt_fed < self.prefill_target() {
+            self.prompt_fed + 1
+        } else {
+            self.job.request.prompt.len() + self.generated.len()
+        }
+    }
 }
 
 /// Why a slot leaves the table.
@@ -370,6 +459,107 @@ enum Retire {
     Done(FinishReason),
     Cancelled,
     Errored(String),
+}
+
+/// Per-worker KV accounting, selected by [`KvPolicy`].
+enum KvState {
+    Reserve(KvBudget),
+    Paged(KvPager),
+}
+
+impl KvState {
+    fn new(cfg: &CoordinatorConfig) -> KvState {
+        match cfg.kv_policy {
+            KvPolicy::Reserve => KvState::Reserve(KvBudget::new(cfg.kv_budget_bytes)),
+            KvPolicy::Paged { block_tokens } => KvState::Paged(KvPager::new(
+                cfg.kv_budget_bytes,
+                cfg.kv_bytes_per_token,
+                block_tokens,
+            )),
+        }
+    }
+
+    /// Admission decision for the queue-head job. Under the paged
+    /// policy the gate sums every active slot's *expected* footprint
+    /// (blocks held now + half its remaining worst-case growth) plus
+    /// the candidate's, against capacity — instantaneous free blocks
+    /// alone would over-admit a burst of small-context requests whose
+    /// growth then thrashes the preemption path.
+    fn admit(&self, job: &Job, kv_bytes_per_token: u64, slots: &[Slot]) -> Admit {
+        match self {
+            KvState::Reserve(b) => {
+                let need = job.request.kv_need(kv_bytes_per_token);
+                if need > b.capacity() {
+                    Admit::Reject
+                } else if need <= b.capacity().saturating_sub(b.reserved()) {
+                    Admit::Take
+                } else {
+                    Admit::Later
+                }
+            }
+            KvState::Paged(p) => {
+                let worst = job.worst_case_tokens();
+                if p.blocks_for(worst) > p.capacity_blocks() {
+                    Admit::Reject
+                } else {
+                    // Clamp each slot's estimate to what it already
+                    // holds: a resumed slot mid-re-prefill has a small
+                    // kv_target but owns blocks through its whole prior
+                    // context, and undercounting those would let the
+                    // gate admit beyond physical capacity.
+                    let committed: usize = slots
+                        .iter()
+                        .map(|s| {
+                            p.expected_blocks(s.kv_target(), s.job.worst_case_tokens())
+                                .max(s.kv_blocks)
+                        })
+                        .sum();
+                    let candidate = p.expected_blocks(job.init_ctx() + 1, worst);
+                    if committed.saturating_add(candidate) <= p.capacity_blocks() {
+                        Admit::Take
+                    } else {
+                        Admit::Later
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reserve for a just-taken job; returns (bytes, blocks) for the
+    /// slot. Infallible because `admit` said `Take` and nothing else
+    /// touched this worker's accounting in between.
+    fn reserve_admitted(&mut self, job: &Job, kv_bytes_per_token: u64) -> (u64, usize) {
+        match self {
+            KvState::Reserve(b) => {
+                let need = job.request.kv_need(kv_bytes_per_token);
+                let ok = b.try_reserve(need);
+                debug_assert!(ok, "queue handed out a job beyond the KV budget");
+                (need, 0)
+            }
+            KvState::Paged(p) => {
+                let blocks = p.admit_blocks(job.init_ctx());
+                let ok = p.try_reserve(blocks);
+                debug_assert!(ok, "admission gate admitted beyond the pager capacity");
+                (0, blocks)
+            }
+        }
+    }
+
+    /// Release a slot's holdings (retired, errored, cancelled, or
+    /// preempted) — the single choke point that keeps every exit path
+    /// leak-free.
+    fn release_slot(&mut self, slot: &Slot) {
+        self.release_parts(slot.kv_reserved, slot.kv_blocks);
+    }
+
+    /// Release raw holdings (for exits before a slot exists, e.g. a
+    /// session-open failure right after admission reserved).
+    fn release_parts(&mut self, bytes: u64, blocks: usize) {
+        match self {
+            KvState::Reserve(b) => b.release(bytes),
+            KvState::Paged(p) => p.release(blocks),
+        }
+    }
 }
 
 fn worker_loop(
@@ -398,10 +588,20 @@ fn worker_loop(
     };
 
     let mut scheduler = Scheduler::new(cfg.policy);
-    let mut kv = KvBudget::new(cfg.kv_budget_bytes);
+    let mut kv = KvState::new(&cfg);
+    if let KvState::Paged(p) = &kv {
+        if p.capacity_blocks() != usize::MAX {
+            metrics.set_kv_capacity_blocks(p.capacity_blocks() as u64);
+        }
+    }
     let mut slots: Vec<Slot> = Vec::new();
     let max_batch =
         if cfg.max_batch == 0 { cfg.max_active_per_worker } else { cfg.max_batch };
+    // Parity with `run_virtual`'s preemption guard: the liveness
+    // invariants rule out preempt/readmit livelock, but a future
+    // regression should shed a request visibly instead of silently
+    // spinning every client stream on this worker forever.
+    let mut preempts_since_done: usize = 0;
 
     loop {
         // ---- admission: runs between every fused step, so requests
@@ -410,36 +610,42 @@ fn worker_loop(
         // otherwise it stays at the head for a sibling with free KV.
         while slots.len() < cfg.max_active_per_worker {
             let popped = queue.pop_with(slots.is_empty(), |job| {
-                let need = job.request.kv_need(cfg.kv_bytes_per_token);
-                if need > kv.capacity() {
-                    Admit::Reject
-                } else if need <= kv.capacity().saturating_sub(kv.reserved()) {
-                    Admit::Take
-                } else {
-                    Admit::Later
-                }
+                kv.admit(job, cfg.kv_bytes_per_token, &slots)
             });
             match popped {
-                Popped::Job(job) => {
-                    let need = job.request.kv_need(cfg.kv_bytes_per_token);
-                    let reserved = kv.try_reserve(need);
-                    debug_assert!(reserved, "queue handed out a job beyond the KV budget");
+                Popped::Job(mut job) => {
+                    let (kv_reserved, kv_blocks) =
+                        kv.reserve_admitted(&job, cfg.kv_bytes_per_token);
+                    if let KvState::Paged(p) = &kv {
+                        // Peak occupancy can be set by admission itself
+                        // (the virtual harness records it there too).
+                        metrics.note_kv_blocks_in_use(p.blocks_in_use() as u64);
+                    }
                     match backend.new_session() {
                         Ok(session) => {
-                            metrics.on_start(job.submitted.elapsed());
+                            let resume = job.resume.take();
+                            if resume.is_none() {
+                                metrics.on_start(job.submitted.elapsed());
+                            }
                             let seed = job.request.seed ^ job.request_id;
+                            let (generated, sampler) = match resume {
+                                Some(r) => (r.generated, r.sampler),
+                                None => (Vec::new(), Sampler::new(seed)),
+                            };
                             slots.push(Slot {
+                                resumed: generated.len(),
                                 job,
                                 session,
-                                sampler: Sampler::new(seed),
-                                generated: Vec::new(),
+                                sampler,
+                                generated,
                                 prompt_fed: 0,
-                                kv_reserved: need,
+                                kv_reserved,
+                                kv_blocks,
                             });
                             scheduler.reset_slot(slots.len() - 1);
                         }
                         Err(e) => {
-                            kv.release(need);
+                            kv.release_parts(kv_reserved, kv_blocks);
                             metrics.on_error();
                             let _ = job.events.send(TokenEvent::Error {
                                 request_id: job.request_id,
@@ -450,16 +656,29 @@ fn worker_loop(
                 }
                 Popped::Rejected(job) => {
                     // Can never fit, even on an empty device: refuse
-                    // rather than deadlock the admission queue.
-                    let need = job.request.kv_need(cfg.kv_bytes_per_token);
-                    metrics.on_reject();
-                    let _ = job.events.send(TokenEvent::Error {
-                        request_id: job.request_id,
-                        message: format!(
-                            "request needs {need} B of KV cache but the device budget is {} B",
-                            kv.capacity()
+                    // rather than deadlock the admission queue. The
+                    // message states the limit in the policy's own
+                    // units (paged rejection is block-granular, so a
+                    // byte comparison could read as self-contradictory).
+                    let message = match &kv {
+                        KvState::Reserve(_) => format!(
+                            "request needs {} B of KV cache but the device budget is {} B",
+                            job.request.kv_need(cfg.kv_bytes_per_token),
+                            cfg.kv_budget_bytes
                         ),
-                    });
+                        KvState::Paged(p) => format!(
+                            "request needs {} KV blocks ({} context tokens) but the paged \
+                             budget holds {} blocks of {} tokens",
+                            p.blocks_for(job.worst_case_tokens()),
+                            job.worst_case_tokens(),
+                            p.capacity_blocks(),
+                            p.block_tokens()
+                        ),
+                    };
+                    metrics.on_reject();
+                    let _ = job
+                        .events
+                        .send(TokenEvent::Error { request_id: job.request_id, message });
                 }
                 Popped::None => break,
                 Popped::Closed => {
@@ -475,16 +694,70 @@ fn worker_loop(
             continue;
         }
 
+        // ---- pick lanes and secure their KV growth. Under the paged
+        // policy every picked lane must hold blocks covering its next
+        // context position before the step runs; when the pager can't
+        // supply them, preempt the lowest-progress slot (releasing its
+        // blocks, requeueing it at the head for recompute-on-readmit)
+        // and re-pick. Terminates: each round removes a slot, and a
+        // lone slot's worst case always fits (admission rejected it
+        // otherwise).
+        let picked = loop {
+            let picked = scheduler.pick_batch(slots.len(), max_batch);
+            let pager = match &mut kv {
+                KvState::Reserve(_) => break picked, // pre-reserved at admission
+                KvState::Paged(p) => p,
+            };
+            let mut extra = 0usize;
+            for &i in &picked {
+                let s = &slots[i];
+                extra += pager.blocks_for(s.kv_target()).saturating_sub(s.kv_blocks);
+            }
+            if extra <= pager.free_blocks() {
+                for &i in &picked {
+                    let s = &mut slots[i];
+                    s.kv_blocks =
+                        pager.try_grow(s.kv_blocks, s.kv_target()).expect("growth fits");
+                }
+                metrics.note_kv_blocks_in_use(pager.blocks_in_use() as u64);
+                break picked;
+            }
+            let victim = scheduler.pick_victim(slots.len());
+            let s = slots.swap_remove(victim);
+            scheduler.swap_remove(victim);
+            kv.release_slot(&s);
+            metrics.on_preempt(s.generated.len());
+            preempts_since_done += 1;
+            if preempts_since_done > 1000 + 100 * cfg.max_active_per_worker {
+                metrics.on_error();
+                let _ = s.job.events.send(TokenEvent::Error {
+                    request_id: s.job.request_id,
+                    message: "preemption livelock suspected: request shed after repeated \
+                              preemption without a completion"
+                        .into(),
+                });
+            } else {
+                let mut job = s.job;
+                job.resume = Some(Resume { generated: s.generated, sampler: s.sampler });
+                queue.push_front(job);
+            }
+            if slots.is_empty() {
+                break Vec::new();
+            }
+        };
+        if picked.is_empty() {
+            continue;
+        }
+
         // ---- one fused batched step over the scheduled lanes ----
-        let picked = scheduler.pick_batch(slots.len(), max_batch);
         let step_started = Instant::now();
         let mut lanes: Vec<BatchLane> = Vec::with_capacity(picked.len());
         for &i in &picked {
             let s = &mut slots[i];
-            let token = if s.prompt_fed < s.job.request.prompt.len() {
-                s.job.request.prompt[s.prompt_fed]
+            let token = if s.prompt_fed < s.prefill_target() {
+                s.prefill_token(s.prompt_fed)
             } else {
-                *s.generated.last().expect("generated nonempty after prompt")
+                *s.generated.last().expect("generated nonempty after prefill")
             };
             let session = std::mem::replace(&mut s.session, Box::new(()));
             lanes.push(BatchLane { session, token });
@@ -500,9 +773,9 @@ fn worker_loop(
             match result {
                 Ok(logits) => {
                     let s = &mut slots[i];
-                    if s.prompt_fed < s.job.request.prompt.len() {
+                    if s.prompt_fed < s.prefill_target() {
                         s.prompt_fed += 1;
-                        if s.prompt_fed < s.job.request.prompt.len() {
+                        if s.prompt_fed < s.prefill_target() {
                             // Still prefilling: a pick without a token.
                             scheduler.note_progress(i, s.generated.len());
                             continue;
@@ -511,6 +784,9 @@ fn worker_loop(
                     let token = s.sampler.sample(&logits, &s.job.request.params) as i64;
                     s.generated.push(token);
                     if s.generated.len() == 1 {
+                        // `resumed > 0` can't reach here (its generated
+                        // starts non-empty), so TTFT counts each request
+                        // once, at its true first emission.
                         metrics.on_first_token(s.job.submitted.elapsed());
                     }
                     metrics.on_token(step_elapsed);
@@ -548,9 +824,10 @@ fn worker_loop(
         for (i, why) in retire {
             let s = slots.swap_remove(i);
             scheduler.swap_remove(i);
-            kv.release(s.kv_reserved);
+            kv.release_slot(&s);
             match why {
                 Retire::Done(reason) => {
+                    preempts_since_done = 0;
                     metrics.on_done(s.generated.len(), s.job.submitted.elapsed());
                     let _ = s.job.events.send(TokenEvent::Done {
                         request_id: s.job.request_id,
@@ -770,6 +1047,96 @@ mod tests {
         // With ≤2 concurrent lanes, no fused step can exceed 2 lanes.
         assert!(snap.mean_batch_size <= 2.0 + 1e-9, "{}", snap.mean_batch_size);
         c.shutdown();
+    }
+
+    /// Drain one handle with a deadline so an accounting bug (leaked
+    /// budget starving admission) fails the test instead of hanging it.
+    fn wait_with_timeout(h: RequestHandle, secs: u64) -> Result<Vec<i64>, String> {
+        let deadline = Instant::now() + std::time::Duration::from_secs(secs);
+        loop {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| "timed out waiting for completion".to_string())?;
+            match h.events.recv_timeout(remaining) {
+                Ok(TokenEvent::Done { tokens, .. }) => return Ok(tokens),
+                Ok(TokenEvent::Error { message, .. }) => return Err(message),
+                Ok(TokenEvent::Token { .. }) => {}
+                Err(e) => return Err(format!("stream ended: {e}")),
+            }
+        }
+    }
+
+    #[test]
+    fn paged_streams_identical_to_unbounded_run() {
+        // Preemption + recompute-on-readmit must never change a token
+        // stream: greedy decoding is a pure function of (model, prompt)
+        // in the sim backend, so a run under a tight pager (which
+        // preempts and recomputes) must emit exactly what an unbounded
+        // run emits.
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| Request::greedy("opt-tiny", vec![i as i64 + 1; 8], 120))
+            .collect();
+        let run = |cfg: CoordinatorConfig| -> Vec<Vec<i64>> {
+            let mut c = Coordinator::new(cfg);
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 64));
+            let handles: Vec<_> =
+                reqs.iter().map(|r| c.submit(r.clone()).unwrap()).collect();
+            let out = handles
+                .into_iter()
+                .map(|h| wait_with_timeout(h, 60).unwrap())
+                .collect();
+            c.shutdown();
+            out
+        };
+        let unbounded = run(CoordinatorConfig {
+            max_active_per_worker: 16,
+            policy: SchedulerPolicy::RoundRobin,
+            ..CoordinatorConfig::default()
+        });
+        // 18-block pager (288 tokens of KV); every request grows to 128
+        // tokens (8 blocks), so worst-case accounting would hold 2 at a
+        // time while the pager holds 3 and preempts near the end of
+        // concurrent growth.
+        let paged = run(CoordinatorConfig {
+            max_active_per_worker: 16,
+            policy: SchedulerPolicy::RoundRobin,
+            kv_bytes_per_token: 100,
+            kv_budget_bytes: 288 * 100,
+            kv_policy: KvPolicy::Paged { block_tokens: 16 },
+            max_batch: 0,
+        });
+        assert_eq!(paged, unbounded);
+        assert!(paged.iter().all(|t| t.len() == 120));
+    }
+
+    #[test]
+    fn failing_slots_release_kv_budget() {
+        // Regression (error/cancel-path audit): a slot that errors
+        // mid-decode must release its reservation — or blocks — or the
+        // budget leaks and every later request starves at admission.
+        // The budget fits exactly one worst-case request at a time, so
+        // a single leak would block request N+1 forever; the timeout
+        // turns that hang into a failure.
+        for kv_policy in [KvPolicy::Reserve, KvPolicy::Paged { block_tokens: 4 }] {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                kv_bytes_per_token: 100,
+                kv_budget_bytes: 16 * 100,
+                kv_policy,
+                max_batch: 0,
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim_failing("opt-tiny", 64, 4));
+            for i in 0..8i64 {
+                let h = c.submit(Request::greedy("opt-tiny", vec![1, i + 1], 14)).unwrap();
+                let err = wait_with_timeout(h, 30).unwrap_err();
+                assert!(err.contains("injected fault"), "{kv_policy:?}: {err}");
+            }
+            let snap = c.metrics.snapshot();
+            assert_eq!(snap.errors, 8, "{kv_policy:?}");
+            assert_eq!(snap.rejected, 0, "{kv_policy:?}");
+            c.shutdown();
+        }
     }
 
     #[test]

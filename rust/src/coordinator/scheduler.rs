@@ -139,6 +139,26 @@ impl Scheduler {
             self.progress[idx] = 0;
         }
     }
+
+    /// Choose the preemption victim among `n` active slots: the slot
+    /// with the least token progress loses the least completed work to
+    /// recompute-on-readmit. Ties break deterministically toward the
+    /// higher slot index (which tracks admission age only until the
+    /// first `swap_remove` reshuffles indices). Liveness rests on the
+    /// progress ordering alone: unless every slot ties, the
+    /// max-progress slot survives, so some request always runs to
+    /// completion.
+    pub fn pick_victim(&mut self, n: usize) -> usize {
+        assert!(n > 0, "pick_victim on empty slot table");
+        self.progress.resize(n, 0);
+        let mut best = 0;
+        for i in 1..n {
+            if self.progress[i] <= self.progress[best] {
+                best = i;
+            }
+        }
+        best
+    }
 }
 
 /// KV-cache memory admission control (per worker/device).
@@ -188,6 +208,174 @@ impl KvBudget {
     pub fn release(&mut self, bytes: u64) {
         debug_assert!(bytes <= self.reserved, "release {bytes} > reserved {}", self.reserved);
         self.reserved = self.reserved.saturating_sub(bytes);
+    }
+}
+
+/// Default paged-KV block size, tokens. Small enough that a finished
+/// request strands < 16 tokens of KV per sequence, large enough that the
+/// pager bookkeeping stays out of the per-step hot path (one growth
+/// check per lane per step, one actual reservation every 16 tokens).
+pub const DEFAULT_KV_BLOCK_TOKENS: usize = 16;
+
+/// How a worker accounts KV memory against its budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvPolicy {
+    /// Worst-case reservation: admission reserves
+    /// `(prompt + max_new_tokens) * kv_bytes_per_token` up front, so an
+    /// admitted request can always complete — but the budget is sized by
+    /// what requests *could* grow to, not what they use, and the batch a
+    /// device holds is far smaller than its HBM could serve.
+    Reserve,
+    /// Paged allocation: fixed-size blocks of `block_tokens` tokens are
+    /// reserved as the context actually grows ([`KvPager`]); when growth
+    /// outruns the budget the scheduler preempts the lowest-progress
+    /// slot ([`Scheduler::pick_victim`]) and re-enqueues it for
+    /// recompute-on-readmit.
+    Paged { block_tokens: usize },
+}
+
+impl KvPolicy {
+    /// Stable identifier used in metrics/report/bench output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvPolicy::Reserve => "reserve",
+            KvPolicy::Paged { .. } => "paged",
+        }
+    }
+
+    /// Parse a CLI spelling: `reserve`, `paged`, or `paged:<tokens>`.
+    pub fn parse(s: &str) -> Option<KvPolicy> {
+        match s {
+            "reserve" => Some(KvPolicy::Reserve),
+            "paged" => Some(KvPolicy::Paged { block_tokens: DEFAULT_KV_BLOCK_TOKENS }),
+            _ => {
+                let rest = s.strip_prefix("paged:")?;
+                let block_tokens: usize = rest.parse().ok().filter(|&b| b > 0)?;
+                Some(KvPolicy::Paged { block_tokens })
+            }
+        }
+    }
+}
+
+/// Block-granular KV-cache allocator (per worker/device).
+///
+/// The budget is carved into fixed-size blocks of `block_tokens` context
+/// tokens each; a slot holds `ceil(context / block_tokens)` blocks and
+/// reserves the next block only when its sequence actually crosses a
+/// block boundary. Admission therefore keys on *current* context, not
+/// worst case — the fragmentation the hardware-perspective survey
+/// (arXiv:2410.04466) identifies as the dominant throughput limiter —
+/// at the price of a preemption path for when growth outruns the budget.
+#[derive(Clone, Debug)]
+pub struct KvPager {
+    block_tokens: usize,
+    capacity_blocks: usize,
+    in_use: usize,
+    peak: usize,
+}
+
+impl KvPager {
+    /// Size the pager from a byte budget and the model's per-token KV
+    /// footprint. A zero `kv_bytes_per_token` (admission disabled) or a
+    /// `u64::MAX` budget yields an effectively unbounded pager.
+    pub fn new(budget_bytes: u64, kv_bytes_per_token: u64, block_tokens: usize) -> KvPager {
+        let block_tokens = block_tokens.max(1);
+        let bytes_per_block = kv_bytes_per_token.saturating_mul(block_tokens as u64);
+        let capacity_blocks = if bytes_per_block == 0 {
+            usize::MAX
+        } else {
+            usize::try_from(budget_bytes / bytes_per_block).unwrap_or(usize::MAX)
+        };
+        KvPager { block_tokens, capacity_blocks, in_use: 0, peak: 0 }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.capacity_blocks - self.in_use
+    }
+
+    /// High-water mark of blocks in use over the pager's lifetime.
+    pub fn peak_blocks(&self) -> usize {
+        self.peak
+    }
+
+    /// Blocks a `tokens`-token context occupies.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Blocks a request must eventually hold to run to completion.
+    /// Admission rejects outright when this exceeds the pager capacity:
+    /// no preemption schedule can ever finish such a request.
+    pub fn worst_case_blocks(&self, prompt_tokens: usize, max_new_tokens: usize) -> usize {
+        self.blocks_for(prompt_tokens + max_new_tokens)
+    }
+
+    /// Blocks required to admit a request whose context (prompt plus any
+    /// resumed tokens) is `init_ctx`: enough to rebuild the context and
+    /// decode one token. This is what admission physically reserves.
+    pub fn admit_blocks(&self, init_ctx: usize) -> usize {
+        self.blocks_for(init_ctx + 1)
+    }
+
+    /// A request's *expected* block footprint at a `now_tokens` context:
+    /// the blocks covering it today plus half its remaining worst-case
+    /// growth. Admission gates on the sum of this over all active slots
+    /// plus the candidate (≤ capacity), while physical blocks stay
+    /// lazily allocated. Pure lazy admission packs the pager so tightly
+    /// that every slot then stalls on growth and the preemption path
+    /// thrashes; the half-growth estimate keeps steady-state preemption
+    /// rare while still admitting far more than worst-case reservation.
+    /// Since `expected ≥ blocks held` for every slot, a passing gate
+    /// also guarantees the candidate's physical reservation fits.
+    pub fn expected_blocks(&self, now_tokens: usize, worst_case_tokens: usize) -> usize {
+        let now = self.blocks_for(now_tokens);
+        let worst = self.blocks_for(worst_case_tokens.max(now_tokens));
+        now + (worst - now).div_ceil(2)
+    }
+
+    /// Reserve `blocks` if they fit; false (and no change) otherwise.
+    pub fn try_reserve(&mut self, blocks: usize) -> bool {
+        if blocks <= self.free_blocks() {
+            self.in_use += blocks;
+            self.peak = self.peak.max(self.in_use);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Grow a slot holding `held` blocks to cover `target_tokens` of
+    /// context. Returns the new holding on success (unchanged if the
+    /// target is already covered); `None` — reserving nothing — when the
+    /// pager lacks the blocks, which is the preemption trigger.
+    pub fn try_grow(&mut self, held: usize, target_tokens: usize) -> Option<usize> {
+        let needed = self.blocks_for(target_tokens);
+        if needed <= held {
+            return Some(held);
+        }
+        if self.try_reserve(needed - held) {
+            Some(needed)
+        } else {
+            None
+        }
+    }
+
+    /// Release a slot's blocks (retired, errored, cancelled, preempted).
+    pub fn release(&mut self, blocks: usize) {
+        debug_assert!(blocks <= self.in_use, "release {blocks} > in use {}", self.in_use);
+        self.in_use = self.in_use.saturating_sub(blocks);
     }
 }
 
@@ -404,6 +592,121 @@ mod tests {
         for _ in 0..64 {
             assert!(kv.try_reserve(1 << 40));
         }
+    }
+
+    // ---- KV pager ----
+
+    #[test]
+    fn pager_sizes_from_budget() {
+        // 1000 B/token, 16-token blocks -> 16_000 B/block; 100_000 B
+        // budget -> 6 whole blocks.
+        let p = KvPager::new(100_000, 1000, 16);
+        assert_eq!(p.capacity_blocks(), 6);
+        assert_eq!(p.block_tokens(), 16);
+        assert_eq!(p.free_blocks(), 6);
+        // Disabled accounting or unlimited budget -> unbounded.
+        assert_eq!(KvPager::new(100, 0, 16).capacity_blocks(), usize::MAX);
+        assert_eq!(KvPager::new(u64::MAX, 1, 16).capacity_blocks(), usize::MAX);
+    }
+
+    #[test]
+    fn pager_blocks_for_rounds_up() {
+        let p = KvPager::new(u64::MAX, 1, 16);
+        assert_eq!(p.blocks_for(0), 0);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+        assert_eq!(p.worst_case_blocks(8, 120), 8);
+        assert_eq!(p.admit_blocks(8), 1); // 9 tokens -> 1 block
+    }
+
+    #[test]
+    fn pager_grow_release_roundtrip() {
+        let mut p = KvPager::new(100_000, 1000, 16); // 6 blocks
+        let mut held = 0usize;
+        // Admit at context 9 -> 1 block.
+        assert!(p.try_reserve(p.admit_blocks(8)));
+        held += p.admit_blocks(8);
+        assert_eq!((held, p.blocks_in_use()), (1, 1));
+        // Growing within the block reserves nothing.
+        held = p.try_grow(held, 16).unwrap();
+        assert_eq!((held, p.blocks_in_use()), (1, 1));
+        // Crossing the boundary takes one more block.
+        held = p.try_grow(held, 17).unwrap();
+        assert_eq!((held, p.blocks_in_use()), (2, 2));
+        // A jump can take several blocks at once.
+        held = p.try_grow(held, 80).unwrap();
+        assert_eq!((held, p.blocks_in_use()), (5, 5));
+        // Beyond capacity: refused, nothing reserved.
+        assert_eq!(p.try_grow(held, 97), None);
+        assert_eq!(p.blocks_in_use(), 5);
+        assert_eq!(p.peak_blocks(), 5);
+        p.release(held);
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.peak_blocks(), 5);
+    }
+
+    #[test]
+    fn pager_expected_blocks_adds_growth_headroom() {
+        let p = KvPager::new(u64::MAX, 1, 16);
+        // Context 9 now (1 block), worst case 128 tokens (8 blocks):
+        // expected = 1 + ceil((8-1)/2) = 5 blocks, reserve only 1.
+        assert_eq!(p.expected_blocks(9, 128), 5);
+        assert!(p.expected_blocks(9, 128) >= p.admit_blocks(8));
+        // Nearly-complete resumed request: collapses to "now".
+        assert_eq!(p.expected_blocks(128, 128), 8);
+        // Expected never drops below the blocks actually held.
+        for ctx in 1..=128 {
+            assert!(p.expected_blocks(ctx, 128) >= p.blocks_for(ctx));
+        }
+    }
+
+    #[test]
+    fn kv_policy_parse_roundtrip() {
+        assert_eq!(KvPolicy::parse("reserve"), Some(KvPolicy::Reserve));
+        assert_eq!(
+            KvPolicy::parse("paged"),
+            Some(KvPolicy::Paged { block_tokens: DEFAULT_KV_BLOCK_TOKENS })
+        );
+        assert_eq!(KvPolicy::parse("paged:32"), Some(KvPolicy::Paged { block_tokens: 32 }));
+        assert_eq!(KvPolicy::parse("paged:0"), None);
+        assert_eq!(KvPolicy::parse("nope"), None);
+        for p in [KvPolicy::Reserve, KvPolicy::Paged { block_tokens: 8 }] {
+            assert!(KvPolicy::parse(p.name()).is_some());
+        }
+    }
+
+    // ---- victim selection ----
+
+    #[test]
+    fn victim_is_lowest_progress_highest_index_on_tie() {
+        let mut s = Scheduler::new(SchedulerPolicy::RoundRobin);
+        s.pick_batch(4, 4);
+        s.note_progress(0, 5);
+        s.note_progress(1, 2);
+        s.note_progress(2, 9);
+        s.note_progress(3, 2);
+        // 1 and 3 tie at 2 tokens; the higher index wins.
+        assert_eq!(s.pick_victim(4), 3);
+        s.note_progress(3, 4);
+        assert_eq!(s.pick_victim(4), 1);
+        // The max-progress slot is never the victim while others exist.
+        for _ in 0..4 {
+            assert_ne!(s.pick_victim(4), 2);
+        }
+    }
+
+    #[test]
+    fn victim_tracks_churn() {
+        let mut s = Scheduler::new(SchedulerPolicy::Fcfs);
+        s.pick_batch(3, 3);
+        s.note_progress(0, 7);
+        s.note_progress(1, 1);
+        s.note_progress(2, 3);
+        s.swap_remove(1); // slot 2's progress (3) moves into index 1
+        assert_eq!(s.pick_victim(2), 1);
+        s.note_progress(1, 10);
+        assert_eq!(s.pick_victim(2), 0);
     }
 
     #[test]

@@ -11,11 +11,12 @@
 //!   ([`run_open_loop`]) — real threads, real channels, real time;
 //! * a **virtual-time discrete-event load harness** ([`run_virtual`])
 //!   that replays the same workload through the same continuous-batching
-//!   machinery (slot tables, [`Scheduler`] policies, [`KvBudget`]
-//!   admission, the [`StepModel`] batched latency model) with no threads
-//!   and no wall clock — every run with the same seed is bit-identical,
-//!   so throughput/latency tradeoffs become a regression-trackable
-//!   surface (`benches/serving_load.rs`).
+//!   machinery (slot tables, [`Scheduler`] policies, [`KvBudget`] or
+//!   paged [`KvPager`] admission with preemption, the [`StepModel`]
+//!   batched latency model) with no threads and no wall clock — every
+//!   run with the same seed is bit-identical, preemption included, so
+//!   throughput/latency tradeoffs become a regression-trackable surface
+//!   (`benches/serving_load.rs` → `BENCH_serving.json`).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -25,7 +26,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 use super::backend::{Backend, SimBackend, StepModel};
-use super::scheduler::{KvBudget, Scheduler, SchedulerPolicy};
+use super::scheduler::{KvBudget, KvPager, KvPolicy, Scheduler, SchedulerPolicy};
 use super::{Coordinator, Request, RequestHandle, TokenEvent};
 
 /// Length distribution for prompts/outputs.
@@ -206,6 +207,9 @@ pub struct VirtualConfig {
     pub kv_bytes_per_token: u64,
     /// Per-worker KV budget, bytes.
     pub kv_budget_bytes: u64,
+    /// Budget accounting: worst-case reservation or paged
+    /// reserve-as-you-grow with preemption.
+    pub kv_policy: KvPolicy,
     /// Batched per-step latency model.
     pub step: StepModel,
 }
@@ -224,6 +228,7 @@ impl VirtualConfig {
             policy,
             kv_bytes_per_token: 0,
             kv_budget_bytes: u64::MAX,
+            kv_policy: KvPolicy::Reserve,
             step,
         }
     }
@@ -257,8 +262,17 @@ pub struct VirtualReport {
     pub tokens_per_s: f64,
     /// Peak simultaneously-active requests across all workers.
     pub max_concurrent: usize,
-    /// Peak KV bytes reserved on any single worker.
+    /// Peak KV bytes reserved on any single worker (under the paged
+    /// policy: peak blocks in use × block bytes).
     pub peak_kv_reserved: u64,
+    /// Slots preempted by the paged allocator (requeued for
+    /// recompute-on-readmit; 0 under `KvPolicy::Reserve`).
+    pub preemptions: usize,
+    /// Peak KV blocks in use on any single worker (paged policy).
+    pub peak_kv_blocks: usize,
+    /// Per-worker pager capacity, blocks (0 = reserve policy or
+    /// unbounded pager).
+    pub kv_capacity_blocks: usize,
 }
 
 struct VSlot {
@@ -269,15 +283,91 @@ struct VSlot {
     session: Box<dyn std::any::Any>,
     generated: Vec<i64>,
     prompt_fed: usize,
+    /// Tokens of `generated` that predate this admission (recompute
+    /// prefill re-feeds them; they are not re-recorded).
+    resumed: usize,
+    /// Reserve policy: bytes held. Paged policy: blocks held.
     kv_reserved: u64,
+    kv_blocks: usize,
     first_token_s: Option<f64>,
     last_token_s: f64,
+}
+
+impl VSlot {
+    /// Prefill span: context tokens to feed before sampling (re)starts.
+    fn prefill_target(&self) -> usize {
+        self.request.prompt.len() + self.resumed
+    }
+
+    /// Token to feed at prefill position `i` (prompt, then resumed).
+    fn prefill_token(&self, i: usize) -> i64 {
+        if i < self.request.prompt.len() {
+            self.request.prompt[i]
+        } else {
+            self.generated[i - self.request.prompt.len()]
+        }
+    }
+
+    /// Context size after this slot's next step — what the pager must
+    /// cover before the lane may advance (mirrors the threaded worker's
+    /// `Slot::kv_target`: the first sample rides the last prefill feed).
+    fn kv_target(&self) -> usize {
+        if self.prompt_fed < self.prefill_target() {
+            self.prompt_fed + 1
+        } else {
+            self.request.prompt.len() + self.generated.len()
+        }
+    }
+
+    /// Context position of the next fed token (drives the step model's
+    /// per-lane KV-read term).
+    fn position(&self) -> usize {
+        self.kv_target() - 1
+    }
+}
+
+/// Per-worker KV accounting for the virtual harness.
+enum VKv {
+    Reserve(KvBudget),
+    Paged(KvPager),
+}
+
+impl VKv {
+    fn release_slot(&mut self, s: &VSlot) {
+        match self {
+            VKv::Reserve(b) => b.release(s.kv_reserved),
+            VKv::Paged(p) => p.release(s.kv_blocks),
+        }
+    }
+}
+
+/// A queued request: a fresh arrival, or a preempted slot awaiting
+/// readmission with its stream state carried along.
+struct VPending {
+    arrival_s: f64,
+    rid: usize,
+    request: Request,
+    resume: Option<VResume>,
+}
+
+struct VResume {
+    generated: Vec<i64>,
+    sampler: Sampler,
+    first_token_s: Option<f64>,
+    last_token_s: f64,
+}
+
+impl VPending {
+    /// Context that must be (re)fed before new decoding.
+    fn init_ctx(&self) -> usize {
+        self.request.prompt.len() + self.resume.as_ref().map_or(0, |r| r.generated.len())
+    }
 }
 
 struct VWorker {
     backend: SimBackend,
     scheduler: Scheduler,
-    kv: KvBudget,
+    kv: VKv,
     slots: Vec<VSlot>,
     /// Lane indices of the in-flight fused step (empty = idle).
     batch: Vec<usize>,
@@ -301,43 +391,70 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
         .map(|(i, (at, req))| (at.as_secs_f64(), i, req))
         .collect();
     let n_requests = arrivals.len();
-    let mut queue: VecDeque<(f64, usize, Request)> = VecDeque::new();
+    let mut queue: VecDeque<VPending> = VecDeque::new();
     let mut workers: Vec<VWorker> = (0..vc.workers)
         .map(|_| VWorker {
             backend: SimBackend::new(&wl.model, wl.vocab),
             scheduler: Scheduler::new(vc.policy),
-            kv: KvBudget::new(vc.kv_budget_bytes),
+            kv: match vc.kv_policy {
+                KvPolicy::Reserve => VKv::Reserve(KvBudget::new(vc.kv_budget_bytes)),
+                KvPolicy::Paged { block_tokens } => VKv::Paged(KvPager::new(
+                    vc.kv_budget_bytes,
+                    vc.kv_bytes_per_token,
+                    block_tokens,
+                )),
+            },
             slots: Vec::new(),
             batch: Vec::new(),
             busy_until: 0.0,
         })
         .collect();
+    let kv_capacity_blocks = match &workers[0].kv {
+        VKv::Paged(p) if p.capacity_blocks() != usize::MAX => p.capacity_blocks(),
+        _ => 0,
+    };
+    // Bytes one pager block stands for (0 when accounting is disabled).
+    let block_bytes = match &workers[0].kv {
+        VKv::Paged(p) => vc.kv_bytes_per_token.saturating_mul(p.block_tokens() as u64),
+        VKv::Reserve(_) => 0,
+    };
 
     let mut records: Vec<Option<VirtualRecord>> = (0..n_requests).map(|_| None).collect();
     let mut tpot_samples: Vec<f64> = Vec::new();
     let mut rejected = 0usize;
+    let mut preemptions = 0usize;
     let mut max_concurrent = 0usize;
     let mut peak_kv_reserved = 0u64;
+    let mut peak_kv_blocks = 0usize;
     let mut wall_s = 0.0f64;
 
     // Admit as many queued requests as fit, FIFO with no overtaking
     // (mirrors the threaded pool's head-peek admission queue). Each
-    // request goes to the least-loaded worker that can hold it.
-    let mut dispatch = |queue: &mut VecDeque<(f64, usize, Request)>,
+    // request goes to the least-loaded worker that can hold it. Under
+    // the paged policy "fits" keys on the *current* context plus a
+    // half-growth headroom gate, not the worst case — the whole point
+    // of reserve-as-you-grow.
+    let mut dispatch = |queue: &mut VecDeque<VPending>,
                         workers: &mut Vec<VWorker>,
                         records: &mut Vec<Option<VirtualRecord>>,
                         rejected: &mut usize,
                         max_concurrent: &mut usize,
                         peak_kv: &mut u64,
+                        peak_blocks: &mut usize,
                         now: f64| {
-        while let Some((arrival_s, rid, request)) = queue.front() {
-            let need = request.kv_need(vc.kv_bytes_per_token);
-            if need > vc.kv_budget_bytes {
+        while let Some(head) = queue.front() {
+            let need = head.request.kv_need(vc.kv_bytes_per_token);
+            let worst_tokens = head.request.prompt.len() + head.request.max_new_tokens;
+            let impossible = match &workers[0].kv {
+                VKv::Reserve(_) => need > vc.kv_budget_bytes,
+                VKv::Paged(p) => p.blocks_for(worst_tokens) > p.capacity_blocks(),
+            };
+            if impossible {
                 // Impossible on any worker: refuse, record an empty
                 // stream so the report stays one-row-per-request.
-                records[*rid] = Some(VirtualRecord {
-                    request_id: *rid,
-                    arrival_s: *arrival_s,
+                records[head.rid] = Some(VirtualRecord {
+                    request_id: head.rid,
+                    arrival_s: head.arrival_s,
                     first_token_s: now,
                     done_s: now,
                     tokens: Vec::new(),
@@ -346,35 +463,83 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
                 queue.pop_front();
                 continue;
             }
+            let init_ctx = head.init_ctx();
             let mut best: Option<usize> = None;
             for (i, w) in workers.iter().enumerate() {
-                let fits = w.slots.len() < vc.max_active
-                    && w.kv.capacity().saturating_sub(w.kv.reserved()) >= need;
+                if w.slots.len() >= vc.max_active {
+                    continue;
+                }
+                let fits = match &w.kv {
+                    VKv::Reserve(b) => {
+                        b.capacity().saturating_sub(b.reserved()) >= need
+                    }
+                    VKv::Paged(p) => {
+                        // Σ expected footprints (held + half remaining
+                        // growth) of active slots + candidate ≤ capacity
+                        // — see `KvPager::expected_blocks`. Each slot's
+                        // estimate is clamped to the blocks it already
+                        // holds (a resumed slot mid-re-prefill has a
+                        // small kv_target but owns its prior context),
+                        // which keeps the gate ⇒ physical-fit proof
+                        // sound.
+                        let committed: usize = w
+                            .slots
+                            .iter()
+                            .map(|s| {
+                                p.expected_blocks(
+                                    s.kv_target(),
+                                    s.request.prompt.len() + s.request.max_new_tokens,
+                                )
+                                .max(s.kv_blocks)
+                            })
+                            .sum();
+                        let candidate = p.expected_blocks(init_ctx + 1, worst_tokens);
+                        committed.saturating_add(candidate) <= p.capacity_blocks()
+                    }
+                };
                 if fits && best.map_or(true, |b| w.slots.len() < workers[b].slots.len()) {
                     best = Some(i);
                 }
             }
             let Some(wi) = best else { break };
-            let (arrival_s, rid, request) = queue.pop_front().unwrap();
+            let pending = queue.pop_front().unwrap();
             let w = &mut workers[wi];
-            assert!(w.kv.try_reserve(need));
+            let (kv_reserved, kv_blocks) = match &mut w.kv {
+                VKv::Reserve(b) => {
+                    assert!(b.try_reserve(need));
+                    *peak_kv = (*peak_kv).max(b.reserved());
+                    (need, 0)
+                }
+                VKv::Paged(p) => {
+                    let blocks = p.admit_blocks(init_ctx);
+                    assert!(p.try_reserve(blocks));
+                    *peak_blocks = (*peak_blocks).max(p.blocks_in_use());
+                    *peak_kv = (*peak_kv).max(p.blocks_in_use() as u64 * block_bytes);
+                    (0, blocks)
+                }
+            };
             let session = w.backend.new_session().expect("sim session");
-            let seed = request.seed ^ (rid as u64 + 1);
+            let seed = pending.request.seed ^ (pending.rid as u64 + 1);
+            let (generated, sampler, first_token_s, last_token_s) = match pending.resume {
+                Some(r) => (r.generated, r.sampler, r.first_token_s, r.last_token_s),
+                None => (Vec::new(), Sampler::new(seed), None, 0.0),
+            };
             w.slots.push(VSlot {
-                rid,
-                arrival_s,
-                request,
-                sampler: Sampler::new(seed),
+                rid: pending.rid,
+                arrival_s: pending.arrival_s,
+                request: pending.request,
+                sampler,
                 session,
-                generated: Vec::new(),
+                resumed: generated.len(),
+                generated,
                 prompt_fed: 0,
-                kv_reserved: need,
-                first_token_s: None,
-                last_token_s: 0.0,
+                kv_reserved,
+                kv_blocks,
+                first_token_s,
+                last_token_s,
             });
             let idx = w.slots.len() - 1;
             w.scheduler.reset_slot(idx);
-            *peak_kv = (*peak_kv).max(w.kv.reserved());
             let active: usize = workers.iter().map(|w| w.slots.len()).sum();
             *max_concurrent = (*max_concurrent).max(active);
         }
@@ -419,11 +584,16 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
                 let (ta, rid, req) = arrivals.pop_front().expect("arrival event");
                 wall_s = wall_s.max(ta);
                 let now = ta;
-                queue.push_back((ta, rid, req));
+                queue.push_back(VPending { arrival_s: ta, rid, request: req, resume: None });
                 // Pull in any simultaneous arrivals deterministically.
                 while arrivals.front().map(|a| a.0 == now).unwrap_or(false) {
-                    let a = arrivals.pop_front().unwrap();
-                    queue.push_back(a);
+                    let (ta, rid, req) = arrivals.pop_front().unwrap();
+                    queue.push_back(VPending {
+                        arrival_s: ta,
+                        rid,
+                        request: req,
+                        resume: None,
+                    });
                 }
                 dispatch(
                     &mut queue,
@@ -432,6 +602,7 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
                     &mut rejected,
                     &mut max_concurrent,
                     &mut peak_kv_reserved,
+                    &mut peak_kv_blocks,
                     now,
                 );
             }
@@ -445,6 +616,7 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
                     &mut rejected,
                     &mut max_concurrent,
                     &mut peak_kv_reserved,
+                    &mut peak_kv_blocks,
                     ts,
                 );
             }
@@ -460,6 +632,7 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
                     &mut rejected,
                     &mut max_concurrent,
                     &mut peak_kv_reserved,
+                    &mut peak_kv_blocks,
                     wall_s,
                 );
                 if queue.len() == before {
@@ -472,17 +645,78 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
 
         // (Re)start fused steps on every worker that has work but no
         // in-flight batch — including idle workers that just admitted.
+        // Under the paged policy each picked lane must first secure the
+        // blocks covering its next context position; when the pager
+        // cannot supply them, the lowest-progress slot is preempted —
+        // its blocks released, its stream state pushed to the *front*
+        // of the queue for recompute-on-readmit — and the batch is
+        // re-picked. Terminates: each round removes a slot, and a lone
+        // slot's worst case always fits (admission rejected it
+        // otherwise).
         let now = wall_s;
         for w in workers.iter_mut() {
-            if w.batch.is_empty() && !w.slots.is_empty() {
-                w.batch = w.scheduler.pick_batch(w.slots.len(), max_batch);
-                let positions: Vec<usize> = w
-                    .batch
-                    .iter()
-                    .map(|&i| w.slots[i].prompt_fed + w.slots[i].generated.len())
-                    .collect();
-                w.busy_until = now + vc.step.step_s(&positions);
+            if !w.batch.is_empty() || w.slots.is_empty() {
+                continue;
             }
+            let picked = loop {
+                let picked = w.scheduler.pick_batch(w.slots.len(), max_batch);
+                let pager = match &mut w.kv {
+                    VKv::Reserve(_) => break picked, // pre-reserved at admission
+                    VKv::Paged(p) => p,
+                };
+                let mut extra = 0usize;
+                for &i in &picked {
+                    let s = &w.slots[i];
+                    extra += pager.blocks_for(s.kv_target()).saturating_sub(s.kv_blocks);
+                }
+                if extra <= pager.free_blocks() {
+                    for &i in &picked {
+                        let s = &mut w.slots[i];
+                        s.kv_blocks =
+                            pager.try_grow(s.kv_blocks, s.kv_target()).expect("growth fits");
+                    }
+                    peak_kv_blocks = peak_kv_blocks.max(pager.blocks_in_use());
+                    peak_kv_reserved =
+                        peak_kv_reserved.max(pager.blocks_in_use() as u64 * block_bytes);
+                    break picked;
+                }
+                let victim = w.scheduler.pick_victim(w.slots.len());
+                let s = w.slots.swap_remove(victim);
+                w.scheduler.swap_remove(victim);
+                w.kv.release_slot(&s);
+                preemptions += 1;
+                if preemptions > 1000 + 100 * n_requests {
+                    // Preemption terminates (the max-progress slot is
+                    // never evicted while others exist, and prefill
+                    // never needs growth), but a bound turns any future
+                    // regression into an error instead of a hang.
+                    return Err(format!(
+                        "preemption livelock suspected: {preemptions} preemptions \
+                         for {n_requests} requests"
+                    ));
+                }
+                queue.push_front(VPending {
+                    arrival_s: s.arrival_s,
+                    rid: s.rid,
+                    request: s.request,
+                    resume: Some(VResume {
+                        generated: s.generated,
+                        sampler: s.sampler,
+                        first_token_s: s.first_token_s,
+                        last_token_s: s.last_token_s,
+                    }),
+                });
+                if w.slots.is_empty() {
+                    break Vec::new();
+                }
+            };
+            if picked.is_empty() {
+                continue;
+            }
+            let positions: Vec<usize> =
+                picked.iter().map(|&i| w.slots[i].position()).collect();
+            w.busy_until = now + vc.step.step_s(&positions);
+            w.batch = picked;
         }
     }
 
@@ -504,6 +738,9 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
         tokens_per_s: if wall_s > 0.0 { total_tokens as f64 / wall_s } else { 0.0 },
         max_concurrent,
         peak_kv_reserved,
+        preemptions,
+        peak_kv_blocks,
+        kv_capacity_blocks,
         records,
     })
 }
@@ -521,15 +758,15 @@ fn finish_step(
     let mut retire: Vec<usize> = Vec::new();
     for &i in &batch {
         let s = &mut w.slots[i];
-        let token_in = if s.prompt_fed < s.request.prompt.len() {
-            s.request.prompt[s.prompt_fed]
+        let token_in = if s.prompt_fed < s.prefill_target() {
+            s.prefill_token(s.prompt_fed)
         } else {
-            *s.generated.last().expect("generated nonempty after prompt")
+            *s.generated.last().expect("generated nonempty after prefill")
         };
         let logits = w.backend.decode(&mut s.session, token_in).expect("sim decode");
-        if s.prompt_fed < s.request.prompt.len() {
+        if s.prompt_fed < s.prefill_target() {
             s.prompt_fed += 1;
-            if s.prompt_fed < s.request.prompt.len() {
+            if s.prompt_fed < s.prefill_target() {
                 w.scheduler.note_progress(i, s.generated.len());
                 continue;
             }
@@ -553,7 +790,7 @@ fn finish_step(
     for i in retire {
         let s = w.slots.swap_remove(i);
         w.scheduler.swap_remove(i);
-        w.kv.release(s.kv_reserved);
+        w.kv.release_slot(&s);
         records[s.rid] = Some(VirtualRecord {
             request_id: s.rid,
             arrival_s: s.arrival_s,

@@ -139,12 +139,19 @@ fn cond_from(name: &str) -> Option<Cond> {
 }
 
 /// Assembly error with line number.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("asm error at line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct AsmError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
 
 struct LineParser<'a> {
     toks: Vec<&'a str>,

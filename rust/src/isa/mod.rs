@@ -14,8 +14,6 @@
 
 pub mod asm;
 
-use thiserror::Error;
-
 /// Vector register in the LMU (paper: multi-bank register file).
 pub type VReg = u8;
 /// Scalar register in the ICP.
@@ -158,17 +156,32 @@ impl Instr {
 }
 
 /// Encoding error.
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum IsaError {
-    #[error("field '{field}' value {value} exceeds {bits}-bit encoding")]
     FieldOverflow { field: &'static str, value: u64, bits: u32 },
-    #[error("invalid opcode {0:#04x}")]
     BadOpcode(u8),
-    #[error("invalid sub-op {subop} for opcode {opcode:#04x}")]
     BadSubOp { opcode: u8, subop: u8 },
-    #[error("register {reg} out of range (max {max})")]
     BadReg { reg: u8, max: u8 },
 }
+
+impl std::fmt::Display for IsaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IsaError::FieldOverflow { field, value, bits } => {
+                write!(f, "field '{field}' value {value} exceeds {bits}-bit encoding")
+            }
+            IsaError::BadOpcode(op) => write!(f, "invalid opcode {op:#04x}"),
+            IsaError::BadSubOp { opcode, subop } => {
+                write!(f, "invalid sub-op {subop} for opcode {opcode:#04x}")
+            }
+            IsaError::BadReg { reg, max } => {
+                write!(f, "register {reg} out of range (max {max})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IsaError {}
 
 // Opcode map (stable ABI for program binaries).
 const OP_READ_EMBED: u8 = 0x01;

@@ -24,10 +24,13 @@
 //!   decoder; PJRT execution is gated off in this offline build.
 //! * [`coordinator`] — the **continuous-batching serving layer**: request
 //!   router, per-worker slot tables with mid-decode admission bounded by
-//!   a KV-memory budget, batched fused decode steps (weights stream once
-//!   per step), pluggable scheduler policies (FCFS / round-robin /
-//!   shortest-first), p50/p95/p99 TTFT+TPOT metrics, a seeded Poisson
-//!   load generator, and a deterministic virtual-time load harness.
+//!   a KV-memory budget (worst-case reservation or a **paged
+//!   reserve-as-you-grow allocator** with lowest-progress preemption and
+//!   recompute-on-readmit), batched fused decode steps (weights stream
+//!   once per step), pluggable scheduler policies (FCFS / round-robin /
+//!   shortest-first), p50/p95/p99 TTFT+TPOT metrics with KV-utilization
+//!   and preemption gauges, a seeded Poisson load generator, and a
+//!   deterministic virtual-time load harness.
 //! * [`server`] — a minimal threaded TCP/JSON-line server + client.
 //! * [`numerics`] — bit-accurate FP16 and the MAC-tree arithmetic model.
 //! * [`util`] — in-tree substrates: JSON, PRNG, stats, errors, mini

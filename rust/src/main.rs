@@ -9,7 +9,9 @@ use std::sync::Arc;
 
 use lpu::compiler::{compile, CompileOpts, ParallelMode};
 use lpu::config::LpuConfig;
-use lpu::coordinator::{BackendFactory, Coordinator, CoordinatorConfig, SchedulerPolicy};
+use lpu::coordinator::{
+    BackendFactory, Coordinator, CoordinatorConfig, KvPolicy, SchedulerPolicy,
+};
 use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
 use lpu::isa::asm;
 use lpu::model::by_name;
@@ -27,7 +29,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--max-active 8] [--max-batch 0] [--kv-budget-mb N]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
     Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf]" },
@@ -232,18 +234,30 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             format!("--kv-budget-mb needs a registry model for KV accounting; '{model}' is unknown")
         })?
     };
+    let kv_policy_name = args.opt_or("kv-policy", "reserve");
+    let kv_policy = KvPolicy::parse(kv_policy_name).ok_or_else(|| {
+        format!("unknown kv policy '{kv_policy_name}' (reserve|paged|paged:<tokens>)")
+    })?;
+    if matches!(kv_policy, KvPolicy::Paged { .. }) && kv_budget_mb == 0 {
+        // An unbounded pager never pages: refuse rather than silently
+        // no-op the flag (same stance as --kv-budget-mb with an
+        // unknown model above).
+        return Err("--kv-policy paged needs --kv-budget-mb to bound the pager".into());
+    }
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 8)?,
         policy,
         kv_bytes_per_token,
         kv_budget_bytes: if kv_budget_mb == 0 { u64::MAX } else { kv_budget_mb << 20 },
+        kv_policy,
         max_batch: args.opt_usize("max-batch", 0)?,
     });
     coord.add_pool(&model, workers, factory);
     let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
     println!(
-        "serving '{model}' ({backend}, {} scheduling) on {} with {workers} worker(s); Ctrl-C to stop",
+        "serving '{model}' ({backend}, {} scheduling, {} KV) on {} with {workers} worker(s); Ctrl-C to stop",
         policy.name(),
+        kv_policy.name(),
         handle.addr
     );
     loop {

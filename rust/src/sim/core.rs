@@ -26,15 +26,29 @@ pub enum Unit {
 pub const NUM_UNITS: usize = 6;
 
 /// Simulator error (runaway program, malformed stream pairing, ...).
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum SimError {
-    #[error("program counter {pc} out of range (program has {len} instrs)")]
     PcOutOfRange { pc: usize, len: usize },
-    #[error("instruction budget exhausted after {0} executed instructions (runaway loop?)")]
     Runaway(u64),
-    #[error("program ended without halt")]
     NoHalt,
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::PcOutOfRange { pc, len } => {
+                write!(f, "program counter {pc} out of range (program has {len} instrs)")
+            }
+            SimError::Runaway(n) => write!(
+                f,
+                "instruction budget exhausted after {n} executed instructions (runaway loop?)"
+            ),
+            SimError::NoHalt => write!(f, "program ended without halt"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// An outstanding SMA stream awaiting its consuming MatMul.
 #[derive(Clone, Copy, Debug)]

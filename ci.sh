@@ -9,7 +9,8 @@
 #   2. cargo clippy -- -D warnings
 #   3. cargo build --release
 #   4. cargo test -q
-#   5. serving bench, smoke mode (LPU_BENCH_FAST=1)
+#   5. cargo doc --no-deps with warnings denied (doc rot fails the gate)
+#   6. serving bench, smoke mode (LPU_BENCH_FAST=1)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -34,6 +35,12 @@ cargo build --release
 
 step "cargo test -q"
 cargo test -q
+
+step "cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+# Rustdoc is part of the contract (see ARCHITECTURE.md): a broken
+# intra-doc link or any other rustdoc warning fails the gate, so the
+# module docs cannot rot silently.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 step "serving bench (smoke) -> BENCH_serving.json"
 # Writes machine-readable results (tok/s, peak active, TTFT/TPOT p99 per

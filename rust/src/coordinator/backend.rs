@@ -12,6 +12,18 @@
 //! optionally sleep it, making wall-clock load tests reflect batched
 //! hardware economics.
 //!
+//! A lane's share of a step is a token **span** ([`BatchLane::tokens`]):
+//! decode lanes feed one token, prefill lanes feed a multi-token span —
+//! the whole prompt for single-pass prefill, or a bounded chunk under
+//! chunked prefill (`CoordinatorConfig::prefill_chunk`). Logits are
+//! returned for the last fed token only (earlier feeds exist to build
+//! KV). [`StepModel::mixed_step_s`] prices a step that mixes decode
+//! lanes with prefill spans: the weight stream and sync are shared, a
+//! span pays its attention KV reads over the growing prefix plus one
+//! host round trip per lane per step (not per prompt token) — which is
+//! exactly why chunking bounds how much a long prompt can stretch a
+//! co-batched decode's inter-token gap.
+//!
 //! PJRT handles are not `Send`, so backends are constructed *inside*
 //! worker threads from a cloneable [`BackendFactory`] descriptor.
 
@@ -27,10 +39,16 @@ use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// One slot's share of a fused batched step: the opaque session (taken
-/// from the slot for the duration of the call) and the token to feed.
+/// from the slot for the duration of the call) and the token span to
+/// feed.
 pub struct BatchLane {
+    /// The lane's generation session, moved in for the step.
     pub session: Box<dyn Any>,
-    pub token: i64,
+    /// Context tokens to feed, in order: one for a decode lane, a
+    /// multi-token prefill span otherwise. The step's logits correspond
+    /// to the last fed token; earlier feeds only build KV. Must be
+    /// non-empty.
+    pub tokens: Vec<i64>,
 }
 
 /// A decoding backend. Sessions are opaque (`Box<dyn Any>`) because each
@@ -51,11 +69,33 @@ pub trait Backend {
     /// Single-lane convenience over [`Backend::decode_batch`].
     fn decode(&mut self, session: &mut Box<dyn Any>, token: i64) -> Result<Vec<f32>> {
         let taken = std::mem::replace(session, Box::new(()));
-        let mut lanes = vec![BatchLane { session: taken, token }];
+        let mut lanes = vec![BatchLane { session: taken, tokens: vec![token] }];
         let mut results = self.decode_batch(&mut lanes);
         *session = std::mem::replace(&mut lanes[0].session, Box::new(()));
         results.pop().unwrap_or_else(|| Err(err!("decode_batch returned no lanes")))
     }
+}
+
+/// One lane's contribution to a fused step, for latency costing:
+/// a decode at a context position, or a prefill span over a range of
+/// positions. Built by `coordinator::lane::Lane::work` and priced by
+/// [`StepModel::mixed_step_s`] (and the GPU baseline's
+/// `GpuConfig::mixed_step_latency`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneWork {
+    /// One decode feed at context position `position`.
+    Decode {
+        /// Context position of the fed token (drives the KV-read term).
+        position: usize,
+    },
+    /// A prefill span feeding `tokens` context tokens starting at
+    /// position `start` (positions `start .. start + tokens`).
+    Prefill {
+        /// First context position of the span.
+        start: usize,
+        /// Number of context tokens the span feeds (>= 1).
+        tokens: usize,
+    },
 }
 
 /// Analytical per-step latency for a fused batched decode step on one
@@ -90,15 +130,48 @@ impl StepModel {
         }
     }
 
-    /// Latency of one fused step advancing lanes at the given context
-    /// positions. Weights stream once; KV reads and the host overhead
-    /// are per lane.
+    /// Latency of one fused step advancing decode lanes at the given
+    /// context positions. Weights stream once; KV reads and the host
+    /// overhead are per lane. Equivalent to [`StepModel::mixed_step_s`]
+    /// with all-decode work.
     pub fn step_s(&self, positions: &[usize]) -> f64 {
         let lanes: f64 = positions
             .iter()
-            .map(|&p| p as f64 * self.kv_read_s_per_pos + self.lane_overhead_s)
+            .map(|&p| self.lane_work_s(&LaneWork::Decode { position: p }))
             .sum();
         self.weight_stream_s + self.sync_s + lanes
+    }
+
+    /// One lane's share of a fused step (excludes the shared weight
+    /// stream and sync). A prefill span of `k` tokens starting at
+    /// position `p` pays the attention KV reads over its growing prefix
+    /// — `Σ_{i=p}^{p+k-1} i` positions' worth — plus **one** host round
+    /// trip for the whole span; a span of 1 therefore prices exactly
+    /// like a decode feed at the same position. This is the chunked-
+    /// prefill tradeoff in one formula: the KV-read total is conserved
+    /// however the prompt is split, but a single-pass span concentrates
+    /// all of it in one step (stalling co-batched decodes), while
+    /// chunks of `C` bound the per-step addition to ~`C × position ×
+    /// kv_read_s_per_pos`.
+    pub fn lane_work_s(&self, work: &LaneWork) -> f64 {
+        match *work {
+            LaneWork::Decode { position } => {
+                position as f64 * self.kv_read_s_per_pos + self.lane_overhead_s
+            }
+            LaneWork::Prefill { start, tokens } => {
+                let k = tokens.max(1) as f64;
+                let positions_sum = k * start as f64 + k * (k - 1.0) / 2.0;
+                positions_sum * self.kv_read_s_per_pos + self.lane_overhead_s
+            }
+        }
+    }
+
+    /// Latency of one fused step mixing decode lanes and prefill spans.
+    /// Weights stream once for the whole batch; each lane adds its
+    /// [`StepModel::lane_work_s`] share.
+    pub fn mixed_step_s(&self, lanes: &[LaneWork]) -> f64 {
+        let per_lane: f64 = lanes.iter().map(|w| self.lane_work_s(w)).sum();
+        self.weight_stream_s + self.sync_s + per_lane
     }
 
     /// Per-token latency of an unbatched step at position `pos`.
@@ -282,26 +355,44 @@ impl Backend for SimBackend {
     }
 
     fn decode_batch(&mut self, lanes: &mut [BatchLane]) -> Vec<Result<Vec<f32>>> {
-        let mut positions = Vec::with_capacity(lanes.len());
+        let mut works = Vec::with_capacity(lanes.len());
         let mut out = Vec::with_capacity(lanes.len());
         for lane in lanes.iter_mut() {
             match lane.session.downcast_mut::<SimSession>() {
                 Some(s) => {
-                    if self.fail_at_pos == Some(s.pos) {
-                        out.push(Err(err!("injected fault at position {}", s.pos)));
+                    if lane.tokens.is_empty() {
+                        out.push(Err(err!("empty token span")));
                         continue;
                     }
-                    positions.push(s.pos);
-                    let logits = self.logits_at(s.pos, lane.token);
-                    s.pos += 1;
-                    out.push(Ok(logits));
+                    let start = s.pos;
+                    let mut logits = None;
+                    let mut fault = None;
+                    for &token in &lane.tokens {
+                        if self.fail_at_pos == Some(s.pos) {
+                            fault = Some(err!("injected fault at position {}", s.pos));
+                            break;
+                        }
+                        logits = Some(self.logits_at(s.pos, token));
+                        s.pos += 1;
+                    }
+                    match fault {
+                        Some(e) => out.push(Err(e)),
+                        None => {
+                            works.push(if lane.tokens.len() == 1 {
+                                LaneWork::Decode { position: start }
+                            } else {
+                                LaneWork::Prefill { start, tokens: lane.tokens.len() }
+                            });
+                            out.push(Ok(logits.expect("span is non-empty")));
+                        }
+                    }
                 }
                 None => out.push(Err(err!("foreign session type"))),
             }
         }
         if let Some(step) = &self.step {
-            if self.time_scale > 0.0 && !positions.is_empty() {
-                let dur = step.step_s(&positions) * self.time_scale;
+            if self.time_scale > 0.0 && !works.is_empty() {
+                let dur = step.mixed_step_s(&works) * self.time_scale;
                 std::thread::sleep(std::time::Duration::from_secs_f64(dur));
             }
         }
@@ -334,7 +425,19 @@ impl Backend for PjrtBackend {
         lanes
             .iter_mut()
             .map(|lane| match lane.session.downcast_mut::<crate::runtime::Session>() {
-                Some(s) => self.engine.decode_step(s, lane.token),
+                Some(s) => {
+                    // No hardware span dimension either: a prefill span
+                    // degrades to serial feeds; the last feed's logits
+                    // are the step's output.
+                    let mut last = Err(err!("empty token span"));
+                    for &token in &lane.tokens {
+                        last = self.engine.decode_step(s, token);
+                        if last.is_err() {
+                            break;
+                        }
+                    }
+                    last
+                }
                 None => Err(err!("foreign session type")),
             })
             .collect()
@@ -396,7 +499,7 @@ mod tests {
             (0..4).map(|_| serial.new_session().unwrap()).collect();
         let mut lanes: Vec<BatchLane> = tokens
             .iter()
-            .map(|&t| BatchLane { session: batched.new_session().unwrap(), token: t })
+            .map(|&t| BatchLane { session: batched.new_session().unwrap(), tokens: vec![t] })
             .collect();
         for step in 0..3 {
             let batch_out = batched.decode_batch(&mut lanes);
@@ -406,18 +509,98 @@ mod tests {
                 assert_eq!(serial_logits, r.unwrap(), "lane {i} step {step}");
             }
             for (i, lane) in lanes.iter_mut().enumerate() {
-                lane.token = tokens[i] + step + 1;
+                lane.tokens = vec![tokens[i] + step + 1];
             }
         }
+    }
+
+    #[test]
+    fn span_feed_matches_serial_feeds() {
+        // A prefill span must build exactly the KV (positions) that
+        // serial single-token feeds build, and return the last feed's
+        // logits — spans change step latency, never streams.
+        let mut spanned = SimBackend::new("m", 32);
+        let mut serial = SimBackend::new("m", 32);
+        let feed = [4i64, 9, 2, 7, 1];
+        let mut lanes =
+            vec![BatchLane { session: spanned.new_session().unwrap(), tokens: feed.to_vec() }];
+        let span_logits = spanned.decode_batch(&mut lanes).pop().unwrap().unwrap();
+        let mut s = serial.new_session().unwrap();
+        let mut last = None;
+        for &t in &feed {
+            last = Some(serial.decode(&mut s, t).unwrap());
+        }
+        assert_eq!(span_logits, last.unwrap());
+        // The span advanced the session to position 5: the next decode
+        // agrees between the two sessions.
+        lanes[0].tokens = vec![3];
+        let next_span = spanned.decode_batch(&mut lanes).pop().unwrap().unwrap();
+        assert_eq!(next_span, serial.decode(&mut s, 3).unwrap());
+    }
+
+    #[test]
+    fn span_fault_reports_position_and_stops() {
+        // A fault mid-span errors the lane at the faulting position and
+        // leaves the session there (parity with single-token feeds).
+        let mut b = SimBackend::new("m", 16).with_fail_at(2);
+        let mut lanes =
+            vec![BatchLane { session: b.new_session().unwrap(), tokens: vec![1, 2, 3, 4] }];
+        let err = b.decode_batch(&mut lanes).pop().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("position 2"), "{err}");
+    }
+
+    #[test]
+    fn empty_span_is_an_error_not_a_panic() {
+        let mut b = SimBackend::new("m", 16);
+        let mut lanes =
+            vec![BatchLane { session: b.new_session().unwrap(), tokens: Vec::new() }];
+        assert!(b.decode_batch(&mut lanes).pop().unwrap().is_err());
+    }
+
+    #[test]
+    fn mixed_step_span_of_one_prices_like_decode() {
+        let model = crate::model::by_name("opt-1.3b").unwrap();
+        let sm = StepModel::from_config(&model, &LpuConfig::asic_3_28tbs(), 1);
+        let d = sm.lane_work_s(&LaneWork::Decode { position: 37 });
+        let p = sm.lane_work_s(&LaneWork::Prefill { start: 37, tokens: 1 });
+        assert!((d - p).abs() < 1e-15, "span of 1 must degenerate to a decode feed");
+        // All-decode mixed step equals the legacy positions API.
+        let works = [LaneWork::Decode { position: 10 }, LaneWork::Decode { position: 90 }];
+        assert!((sm.mixed_step_s(&works) - sm.step_s(&[10, 90])).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chunking_conserves_kv_reads_but_bounds_the_step() {
+        // Splitting a 256-token prefill into 32-token chunks conserves
+        // the total KV-read work (modulo one host round trip per extra
+        // step) while shrinking the largest single step — the whole
+        // interference argument in two assertions.
+        let model = crate::model::by_name("opt-1.3b").unwrap();
+        let sm = StepModel::from_config(&model, &LpuConfig::asic_3_28tbs(), 1);
+        let mono = sm.lane_work_s(&LaneWork::Prefill { start: 0, tokens: 256 });
+        let chunks: Vec<f64> = (0..8)
+            .map(|c| sm.lane_work_s(&LaneWork::Prefill { start: c * 32, tokens: 32 }))
+            .collect();
+        let total: f64 = chunks.iter().sum();
+        let overhead = 7.0 * sm.lane_overhead_s; // 7 extra host round trips
+        assert!((total - mono - overhead).abs() < 1e-12 * total.max(1.0));
+        let worst_chunk = chunks.iter().cloned().fold(0.0, f64::max);
+        // (Not /8: the last chunk reads the deepest prefix and the host
+        // round trip is per step, so the bound is ~3x here, not 8x.)
+        assert!(
+            worst_chunk < mono / 3.0,
+            "a 32-token chunk ({worst_chunk}) must cost far less than the \
+             single-pass prefill ({mono})"
+        );
     }
 
     #[test]
     fn bad_lane_does_not_poison_batch() {
         let mut m = SimBackend::new("m", 16);
         let mut lanes = vec![
-            BatchLane { session: m.new_session().unwrap(), token: 1 },
-            BatchLane { session: Box::new("not a session"), token: 2 },
-            BatchLane { session: m.new_session().unwrap(), token: 3 },
+            BatchLane { session: m.new_session().unwrap(), tokens: vec![1] },
+            BatchLane { session: Box::new("not a session"), tokens: vec![2] },
+            BatchLane { session: m.new_session().unwrap(), tokens: vec![3] },
         ];
         let out = m.decode_batch(&mut lanes);
         assert_eq!(out.len(), 3);

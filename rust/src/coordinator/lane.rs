@@ -1,0 +1,996 @@
+//! The shared lane-state core: one state machine for both serving paths.
+//!
+//! The threaded worker loop ([`super::Coordinator`]) and the virtual-time
+//! harness ([`super::run_virtual`]) must drive *identical* continuous-
+//! batching semantics — the stream-agreement tests depend on it, and
+//! before this module existed the admission/growth/preemption/resume
+//! machinery was mirrored by hand between `mod.rs` and `workload.rs`
+//! (ROADMAP-tracked divergence risk). This module is the single home for
+//! that machinery:
+//!
+//! * [`Lane`] — one request's decode state: prompt/resume prefill
+//!   progress, generated tokens, the sampler, and the KV holdings. All
+//!   mutation goes through [`Lane::absorb`]; retirement and preemption
+//!   consume the lane ([`Lane::into_finished`] / [`Lane::into_resume`]),
+//!   so stream state cannot be half-carried.
+//! * [`KvState`] — per-worker KV accounting for both policies
+//!   ([`KvPolicy::Reserve`] worst-case reservation, [`KvPolicy::Paged`]
+//!   reserve-as-you-grow), with the admission gate ([`KvState::admit`]),
+//!   the post-admission reservation, and the **single release choke
+//!   point** ([`KvState::release_lane`]) every exit path — done, error,
+//!   cancel, preempt, session-open failure — must pass through.
+//! * [`plan_step`] — compose one fused step: pick lanes under the
+//!   [`Scheduler`] policy, assign prefill spans (single-pass by default,
+//!   or token-budgeted chunks under decode-priority with progress-based
+//!   aging when `prefill_chunk > 0`), secure paged-KV growth, and preempt
+//!   the lowest-progress lane when growth cannot be secured. Evicted
+//!   slots are returned to the caller with their blocks already released
+//!   and the scheduler already mirrored; the caller only decides where
+//!   the resume state goes (pool queue vs virtual queue).
+//!
+//! Prefill execution model: a lane still feeding its initial context
+//! (prompt, plus any recomputed tokens after a preemption) feeds a
+//! multi-token **span** per fused step. With `prefill_chunk == 0` the
+//! span is the whole remaining context — single-pass prefill, the way
+//! the hardware actually executes a prompt — which makes a long prompt's
+//! step long and inflates co-batched decode lanes' TPOT (the
+//! interference chunking exists to fix). With `prefill_chunk = C`, at
+//! most `C` prefill tokens run per step across all prefill lanes,
+//! allocated most-starved-first ([`Scheduler::prefill_order`]), so decode
+//! steps stay short while the prompt still finishes in `⌈len/C⌉` steps.
+//! Spans change only *timing*: token streams are a pure function of
+//! (model, prompt, sampler), so chunked and unchunked runs emit
+//! bit-identical streams per seed (property-tested).
+
+use crate::numerics::Sampler;
+
+use super::backend::LaneWork;
+use super::scheduler::{KvBudget, KvPager, KvPolicy, Scheduler};
+use super::{FinishReason, Request};
+
+/// Admission decision for a queued request (returned by
+/// [`KvState::admit`] after peeking the queue head).
+pub enum Admit {
+    /// Pop it; the caller will admit it into a slot.
+    Take,
+    /// Pop it; the caller will refuse it (can never fit, even alone).
+    Reject,
+    /// Leave it queued for a worker with more headroom.
+    Later,
+}
+
+/// Stream state a preempted lane carries back to the queue so
+/// readmission can rebuild its KV by recompute (re-feeding prompt +
+/// generated) and then continue the stream: the tokens already emitted
+/// (never re-sent to the client) and the sampler RNG (stochastic
+/// sampling resumes exactly where it stopped).
+pub struct ResumeState {
+    /// Tokens generated before the preemption, in stream order.
+    pub generated: Vec<i64>,
+    /// The sampler mid-stream (RNG state rides along).
+    pub sampler: Sampler,
+}
+
+/// Context tokens a queued request must (re)feed before new decoding:
+/// the prompt plus any previously generated tokens being recomputed.
+pub fn init_context(request: &Request, resume: Option<&ResumeState>) -> usize {
+    request.prompt.len() + resume.map_or(0, |r| r.generated.len())
+}
+
+/// KV holdings attached to a lane at admission: bytes under the reserve
+/// policy, blocks under the paged policy (the other field is zero).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Holdings {
+    /// Reserve policy: KV bytes reserved at admission.
+    pub bytes: u64,
+    /// Paged policy: KV blocks reserved at admission.
+    pub blocks: usize,
+}
+
+/// What [`Lane::absorb`] did with a step's logits.
+pub enum Absorbed {
+    /// The span advanced prefill but the initial context is not done;
+    /// no token was emitted.
+    Prefilling,
+    /// A token was sampled (the span ended the prefill, or this was a
+    /// decode step). `finished` is set when the stream is complete.
+    Token {
+        /// The sampled token (already appended to the lane's stream).
+        token: i64,
+        /// `Some` when this token ends the request (EOS or length).
+        finished: Option<FinishReason>,
+    },
+}
+
+/// One active request's generation state — the per-lane half of the
+/// shared state machine. Owned by a slot in either serving path.
+pub struct Lane {
+    request: Request,
+    sampler: Sampler,
+    /// Generated tokens, including any produced before a preemption.
+    generated: Vec<i64>,
+    /// Context tokens fed so far this admission (prompt, then — after a
+    /// preemption — the previously generated tokens being recomputed).
+    prompt_fed: usize,
+    /// Tokens of `generated` that predate this admission (recompute
+    /// prefill re-feeds them; they were already emitted to the client).
+    resumed: usize,
+    /// Reserve policy: KV bytes reserved at admission.
+    kv_reserved: u64,
+    /// Paged policy: KV blocks currently held.
+    kv_blocks: usize,
+}
+
+impl Lane {
+    /// Build the lane for a just-admitted request. `resume` is the
+    /// carried stream state when this is a readmission after preemption;
+    /// `seed` feeds a fresh sampler otherwise. `holdings` are the KV
+    /// reservations [`KvState::reserve_admitted`] made for it.
+    pub fn admitted(
+        request: Request,
+        seed: u64,
+        resume: Option<ResumeState>,
+        holdings: Holdings,
+    ) -> Lane {
+        let (generated, sampler) = match resume {
+            Some(r) => (r.generated, r.sampler),
+            None => (Vec::new(), Sampler::new(seed)),
+        };
+        Lane {
+            resumed: generated.len(),
+            request,
+            sampler,
+            generated,
+            prompt_fed: 0,
+            kv_reserved: holdings.bytes,
+            kv_blocks: holdings.blocks,
+        }
+    }
+
+    /// The request this lane serves.
+    pub fn request(&self) -> &Request {
+        &self.request
+    }
+
+    /// Tokens emitted so far (including any resumed across preemption).
+    pub fn tokens_emitted(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// KV blocks currently held (paged policy).
+    pub fn kv_blocks(&self) -> usize {
+        self.kv_blocks
+    }
+
+    /// Whether the lane is still feeding its initial context.
+    pub fn in_prefill(&self) -> bool {
+        self.prompt_fed < self.prefill_target()
+    }
+
+    /// Prefill span end: context tokens to feed before sampling
+    /// (re)starts — the prompt plus any resumed tokens.
+    pub fn prefill_target(&self) -> usize {
+        self.request.prompt.len() + self.resumed
+    }
+
+    /// Initial-context tokens not yet fed.
+    pub fn remaining_prefill(&self) -> usize {
+        self.prefill_target() - self.prompt_fed
+    }
+
+    /// Largest context this request can ever grow to.
+    pub fn worst_case_tokens(&self) -> usize {
+        self.request.worst_case_tokens()
+    }
+
+    /// Context size after this lane's next *minimal* step (one prefill
+    /// token, or one decode). This is the conservative per-lane estimate
+    /// the admission gate sums; the pager must cover at least this
+    /// before the lane may advance. (The first sample rides the last
+    /// prefill feed, so post-prefill the fed count is
+    /// `prompt + generated - 1`.)
+    pub fn kv_target(&self) -> usize {
+        if self.in_prefill() {
+            self.prompt_fed + 1
+        } else {
+            self.request.prompt.len() + self.generated.len()
+        }
+    }
+
+    /// Context size after feeding a span of `span` tokens this step.
+    /// For decode lanes the span is always 1 and this equals
+    /// [`Lane::kv_target`].
+    pub fn kv_target_after(&self, span: usize) -> usize {
+        if self.in_prefill() {
+            self.prompt_fed + span
+        } else {
+            self.request.prompt.len() + self.generated.len()
+        }
+    }
+
+    /// Context position of the next fed token (drives the step model's
+    /// per-lane KV-read term).
+    pub fn position(&self) -> usize {
+        self.kv_target() - 1
+    }
+
+    /// Token at prefill position `i` (prompt, then resumed tokens).
+    fn prefill_token(&self, i: usize) -> i64 {
+        let prompt = &self.request.prompt;
+        if i < prompt.len() {
+            prompt[i]
+        } else {
+            self.generated[i - prompt.len()]
+        }
+    }
+
+    /// The tokens to feed the backend this step: a prefill span of
+    /// `span` context tokens, or (post-prefill, `span == 1`) the last
+    /// generated token.
+    pub fn feed_span(&self, span: usize) -> Vec<i64> {
+        if self.in_prefill() {
+            debug_assert!(span >= 1 && span <= self.remaining_prefill());
+            (self.prompt_fed..self.prompt_fed + span)
+                .map(|i| self.prefill_token(i))
+                .collect()
+        } else {
+            debug_assert_eq!(span, 1, "decode lanes feed one token per step");
+            vec![*self.generated.last().expect("generated nonempty after prefill")]
+        }
+    }
+
+    /// This step's contribution to the mixed-step latency model.
+    pub fn work(&self, span: usize) -> LaneWork {
+        if self.in_prefill() {
+            LaneWork::Prefill { start: self.prompt_fed, tokens: span }
+        } else {
+            LaneWork::Decode { position: self.position() }
+        }
+    }
+
+    /// Advance the lane with the logits of a completed step that fed a
+    /// span of `span` tokens. Mid-prefill spans emit nothing; the span
+    /// that completes the initial context samples the first (or, after
+    /// a preemption, next) token from the final feed's logits, exactly
+    /// like a decode step.
+    pub fn absorb(&mut self, span: usize, logits: &[f32]) -> Absorbed {
+        if self.in_prefill() {
+            debug_assert!(span >= 1 && span <= self.remaining_prefill());
+            self.prompt_fed += span;
+            if self.in_prefill() {
+                return Absorbed::Prefilling;
+            }
+        }
+        let token = self.sampler.sample(logits, &self.request.params) as i64;
+        self.generated.push(token);
+        let eos_hit = self.request.eos_token == Some(token);
+        let len_hit = self.generated.len() >= self.request.max_new_tokens;
+        let finished = if eos_hit {
+            Some(FinishReason::Eos)
+        } else if len_hit {
+            Some(FinishReason::Length)
+        } else {
+            None
+        };
+        Absorbed::Token { token, finished }
+    }
+
+    /// Retire the lane: yields the complete token stream.
+    pub fn into_finished(self) -> Vec<i64> {
+        self.generated
+    }
+
+    /// Preempt the lane: yields the request and the carried stream
+    /// state for recompute-on-readmit. (KV holdings must already have
+    /// been released via [`KvState::release_lane`].)
+    pub fn into_resume(self) -> (Request, ResumeState) {
+        (self.request, ResumeState { generated: self.generated, sampler: self.sampler })
+    }
+}
+
+/// Per-worker KV accounting, selected by [`KvPolicy`]. Shared verbatim
+/// by the threaded worker loop and the virtual harness so the two paths
+/// cannot drift on admission or release semantics.
+pub enum KvState {
+    /// Worst-case reservation against a byte budget.
+    Reserve {
+        /// The byte budget.
+        budget: KvBudget,
+        /// KV bytes one context token occupies (0 disables admission).
+        bytes_per_token: u64,
+    },
+    /// Block-granular reserve-as-you-grow with preemption.
+    Paged {
+        /// The block allocator.
+        pager: KvPager,
+        /// KV bytes one context token occupies (sizes a block in bytes
+        /// for occupancy gauges).
+        bytes_per_token: u64,
+    },
+}
+
+impl KvState {
+    /// Build the accounting state for one worker.
+    pub fn new(policy: KvPolicy, budget_bytes: u64, kv_bytes_per_token: u64) -> KvState {
+        match policy {
+            KvPolicy::Reserve => KvState::Reserve {
+                budget: KvBudget::new(budget_bytes),
+                bytes_per_token: kv_bytes_per_token,
+            },
+            KvPolicy::Paged { block_tokens } => KvState::Paged {
+                pager: KvPager::new(budget_bytes, kv_bytes_per_token, block_tokens),
+                bytes_per_token: kv_bytes_per_token,
+            },
+        }
+    }
+
+    /// Pager capacity in blocks, when bounded (paged policy only).
+    pub fn capacity_blocks(&self) -> Option<usize> {
+        match self {
+            KvState::Paged { pager, .. } if pager.capacity_blocks() != usize::MAX => {
+                Some(pager.capacity_blocks())
+            }
+            _ => None,
+        }
+    }
+
+    /// Blocks currently reserved (0 under the reserve policy).
+    pub fn blocks_in_use(&self) -> usize {
+        match self {
+            KvState::Reserve { .. } => 0,
+            KvState::Paged { pager, .. } => pager.blocks_in_use(),
+        }
+    }
+
+    /// Bytes currently accounted against the budget (paged: blocks in
+    /// use × block bytes).
+    pub fn bytes_in_use(&self) -> u64 {
+        match self {
+            KvState::Reserve { budget, .. } => budget.reserved(),
+            KvState::Paged { pager, bytes_per_token } => {
+                (pager.blocks_in_use() as u64)
+                    .saturating_mul(bytes_per_token.saturating_mul(pager.block_tokens() as u64))
+            }
+        }
+    }
+
+    /// Admission decision for a queued request with initial context
+    /// `init_ctx` and worst case `worst_tokens`, given this worker's
+    /// active lanes.
+    ///
+    /// Under the paged policy the gate sums every active lane's
+    /// *expected* footprint (blocks held now + half its remaining
+    /// worst-case growth) plus the candidate's, against capacity —
+    /// instantaneous free blocks alone would over-admit a burst of
+    /// small-context requests whose growth then thrashes the preemption
+    /// path. Each lane's estimate is clamped to what it already holds: a
+    /// resumed lane mid-re-prefill has a small `kv_target` but owns
+    /// blocks through its whole prior context, and undercounting those
+    /// would let the gate admit beyond physical capacity.
+    pub fn admit<'a>(
+        &self,
+        init_ctx: usize,
+        worst_tokens: usize,
+        active: impl Iterator<Item = &'a Lane>,
+    ) -> Admit {
+        match self {
+            KvState::Reserve { budget, bytes_per_token } => {
+                let need = worst_tokens as u64 * bytes_per_token;
+                if need > budget.capacity() {
+                    Admit::Reject
+                } else if need <= budget.capacity().saturating_sub(budget.reserved()) {
+                    Admit::Take
+                } else {
+                    Admit::Later
+                }
+            }
+            KvState::Paged { pager, .. } => {
+                if pager.blocks_for(worst_tokens) > pager.capacity_blocks() {
+                    Admit::Reject
+                } else {
+                    let committed: usize = active
+                        .map(|l| {
+                            pager
+                                .expected_blocks(l.kv_target(), l.worst_case_tokens())
+                                .max(l.kv_blocks)
+                        })
+                        .sum();
+                    let candidate = pager.expected_blocks(init_ctx + 1, worst_tokens);
+                    if committed.saturating_add(candidate) <= pager.capacity_blocks() {
+                        Admit::Take
+                    } else {
+                        Admit::Later
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reserve for a just-taken request; returns the lane's holdings.
+    /// Infallible because [`KvState::admit`] said [`Admit::Take`] and
+    /// nothing else touched this worker's accounting in between. The
+    /// paged reservation covers the full initial context plus the first
+    /// sampled token, which is why prefill never needs growth.
+    pub fn reserve_admitted(&mut self, init_ctx: usize, worst_tokens: usize) -> Holdings {
+        match self {
+            KvState::Reserve { budget, bytes_per_token } => {
+                let need = worst_tokens as u64 * *bytes_per_token;
+                let ok = budget.try_reserve(need);
+                debug_assert!(ok, "queue handed out a job beyond the KV budget");
+                Holdings { bytes: need, blocks: 0 }
+            }
+            KvState::Paged { pager, .. } => {
+                let blocks = pager.admit_blocks(init_ctx);
+                let ok = pager.try_reserve(blocks);
+                debug_assert!(ok, "admission gate admitted beyond the pager capacity");
+                Holdings { bytes: 0, blocks }
+            }
+        }
+    }
+
+    /// Release a lane's holdings (retired, errored, cancelled, or
+    /// preempted) — the single choke point that keeps every exit path
+    /// leak-free.
+    pub fn release_lane(&mut self, lane: &Lane) {
+        self.release_holdings(Holdings { bytes: lane.kv_reserved, blocks: lane.kv_blocks });
+    }
+
+    /// Release raw holdings (for exits before a lane exists, e.g. a
+    /// session-open failure right after admission reserved).
+    pub fn release_holdings(&mut self, h: Holdings) {
+        match self {
+            KvState::Reserve { budget, .. } => budget.release(h.bytes),
+            KvState::Paged { pager, .. } => pager.release(h.blocks),
+        }
+    }
+
+    /// Human-readable refusal for a request that can never fit, stated
+    /// in the policy's own units (the paged limit is block-granular, so
+    /// a byte comparison could read as self-contradictory).
+    pub fn reject_reason(&self, worst_tokens: usize) -> String {
+        match self {
+            KvState::Reserve { budget, bytes_per_token } => format!(
+                "request needs {} B of KV cache but the device budget is {} B",
+                worst_tokens as u64 * bytes_per_token,
+                budget.capacity()
+            ),
+            KvState::Paged { pager, .. } => format!(
+                "request needs {} KV blocks ({} context tokens) but the paged \
+                 budget holds {} blocks of {} tokens",
+                pager.blocks_for(worst_tokens),
+                worst_tokens,
+                pager.capacity_blocks(),
+                pager.block_tokens()
+            ),
+        }
+    }
+}
+
+/// Implemented by both serving paths' slot types so the shared
+/// step-composition logic can reach the embedded [`Lane`].
+pub trait HoldsLane {
+    /// The lane inside this slot.
+    fn lane(&self) -> &Lane;
+    /// Mutable access to the lane inside this slot.
+    fn lane_mut(&mut self) -> &mut Lane;
+}
+
+/// One lane's share of a planned fused step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedLane {
+    /// Slot-table index of the lane.
+    pub slot: usize,
+    /// Context tokens this step feeds: 1 for decode lanes, a prefill
+    /// span (up to the chunk budget) for prefilling lanes.
+    pub span: usize,
+}
+
+/// A composed fused step: which lanes advance and by how much.
+pub struct StepPlan {
+    /// Planned lanes in ascending slot order.
+    pub lanes: Vec<PlannedLane>,
+}
+
+impl StepPlan {
+    /// True when no lane was planned (empty slot table).
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// The step's lane work items, for [`super::StepModel::mixed_step_s`].
+    pub fn works<T: HoldsLane>(&self, slots: &[T]) -> Vec<LaneWork> {
+        self.lanes.iter().map(|p| slots[p.slot].lane().work(p.span)).collect()
+    }
+}
+
+/// Assign spans to the picked lanes. Decode lanes feed one token. With
+/// `prefill_chunk == 0` every picked prefill lane feeds its whole
+/// remaining initial context (single-pass prefill); otherwise at most
+/// `prefill_chunk` prefill tokens run this step across all prefill
+/// lanes, allocated most-starved-first (decode-priority chunking —
+/// decode lanes always advance, the chunk budget bounds how much a
+/// prompt can lengthen the step).
+fn assign_spans<T: HoldsLane>(
+    scheduler: &Scheduler,
+    slots: &[T],
+    picked: &[usize],
+    prefill_chunk: usize,
+) -> Vec<PlannedLane> {
+    let mut lanes = Vec::with_capacity(picked.len());
+    if prefill_chunk == 0 {
+        for &i in picked {
+            let l = slots[i].lane();
+            let span = if l.in_prefill() { l.remaining_prefill() } else { 1 };
+            lanes.push(PlannedLane { slot: i, span });
+        }
+        return lanes;
+    }
+    let mut prefill: Vec<usize> = Vec::new();
+    for &i in picked {
+        if slots[i].lane().in_prefill() {
+            prefill.push(i);
+        } else {
+            lanes.push(PlannedLane { slot: i, span: 1 });
+        }
+    }
+    scheduler.prefill_order(&mut prefill);
+    let mut budget = prefill_chunk;
+    for i in prefill {
+        if budget == 0 {
+            break; // this lane ages; most-starved-first repays it later
+        }
+        let span = slots[i].lane().remaining_prefill().min(budget);
+        budget -= span;
+        lanes.push(PlannedLane { slot: i, span });
+    }
+    lanes.sort_by_key(|p| p.slot);
+    lanes
+}
+
+/// Compose one fused step over the slot table: pick lanes, assign
+/// prefill spans, and secure paged-KV growth — preempting the
+/// lowest-progress slot (via [`Scheduler::pick_victim`]) whenever the
+/// pager cannot supply the picked lanes' growth blocks, then re-picking.
+///
+/// Evicted slots are removed from `slots` (scheduler state mirrored,
+/// KV blocks released) and returned so the caller can requeue them with
+/// carried resume state. Terminates: each eviction round removes a
+/// slot, and a lone slot's worst case always fits (admission rejected
+/// it otherwise). Prefill lanes never need growth — admission reserved
+/// blocks through the full initial context plus one sampled token — so
+/// only decode lanes are secured.
+///
+/// After the plan settles, ground-truth progress is restored for picked
+/// lanes that fell out of the plan (a prefill lane the chunk budget
+/// skipped must not carry the optimistic progress bump `pick_batch`
+/// gave it), and prefill aging is advanced for every lane still in
+/// prefill.
+pub fn plan_step<T: HoldsLane>(
+    scheduler: &mut Scheduler,
+    kv: &mut KvState,
+    slots: &mut Vec<T>,
+    max_batch: usize,
+    prefill_chunk: usize,
+) -> (StepPlan, Vec<T>) {
+    let mut evicted: Vec<T> = Vec::new();
+    let (plan, picked) = loop {
+        if slots.is_empty() {
+            break (StepPlan { lanes: Vec::new() }, Vec::new());
+        }
+        let picked = scheduler.pick_batch(slots.len(), max_batch);
+        let lanes = assign_spans(scheduler, slots, &picked, prefill_chunk);
+        let pager = match kv {
+            KvState::Reserve { .. } => break (StepPlan { lanes }, picked),
+            KvState::Paged { pager, .. } => pager,
+        };
+        let mut extra = 0usize;
+        for p in &lanes {
+            let l = slots[p.slot].lane();
+            if !l.in_prefill() {
+                extra += pager.blocks_for(l.kv_target()).saturating_sub(l.kv_blocks);
+            }
+        }
+        if extra <= pager.free_blocks() {
+            for p in &lanes {
+                let l = slots[p.slot].lane_mut();
+                if l.in_prefill() {
+                    debug_assert!(
+                        pager.blocks_for(l.kv_target_after(p.span)) <= l.kv_blocks,
+                        "prefill must be covered by the admission reservation"
+                    );
+                    continue;
+                }
+                l.kv_blocks = pager.try_grow(l.kv_blocks, l.kv_target()).expect("growth fits");
+            }
+            break (StepPlan { lanes }, picked);
+        }
+        let victim = scheduler.pick_victim(slots.len());
+        let s = slots.swap_remove(victim);
+        scheduler.swap_remove(victim);
+        kv.release_lane(s.lane());
+        evicted.push(s);
+    };
+    // A picked lane the chunk budget dropped must not keep pick_batch's
+    // optimistic progress bump, or a starving prefill lane looks ever
+    // more progressed and (under ShortestFirst) starves harder.
+    for &i in &picked {
+        if !plan.lanes.iter().any(|p| p.slot == i) {
+            scheduler.note_progress(i, slots[i].lane().tokens_emitted());
+        }
+    }
+    for (i, s) in slots.iter().enumerate() {
+        if s.lane().in_prefill() {
+            let advanced = plan.lanes.iter().any(|p| p.slot == i && p.span > 0);
+            scheduler.note_prefill(i, advanced);
+        }
+    }
+    (plan, evicted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scheduler::SchedulerPolicy;
+    use super::*;
+    use crate::numerics::SampleParams;
+
+    fn req(prompt: usize, max_new: usize) -> Request {
+        Request {
+            model: "m".into(),
+            prompt: (0..prompt as i64).collect(),
+            max_new_tokens: max_new,
+            params: SampleParams::greedy(),
+            eos_token: None,
+            seed: 0,
+        }
+    }
+
+    fn lane(prompt: usize, max_new: usize, holdings: Holdings) -> Lane {
+        Lane::admitted(req(prompt, max_new), 1, None, holdings)
+    }
+
+    /// Logits that make greedy sampling pick `argmax = want`.
+    fn logits_pick(vocab: usize, want: usize) -> Vec<f32> {
+        (0..vocab).map(|i| if i == want { 1.0 } else { 0.0 }).collect()
+    }
+
+    // ---- Lane state machine ----
+
+    #[test]
+    fn fresh_lane_prefills_then_decodes() {
+        let mut l = lane(3, 2, Holdings::default());
+        assert!(l.in_prefill());
+        assert_eq!(l.prefill_target(), 3);
+        assert_eq!(l.remaining_prefill(), 3);
+        assert_eq!(l.kv_target(), 1);
+        assert_eq!(l.position(), 0);
+        assert_eq!(l.feed_span(2), vec![0, 1]);
+        assert!(matches!(l.absorb(2, &logits_pick(8, 5)), Absorbed::Prefilling));
+        assert!(l.in_prefill());
+        assert_eq!(l.kv_target(), 3);
+        // Final span: samples from its logits.
+        assert_eq!(l.feed_span(1), vec![2]);
+        match l.absorb(1, &logits_pick(8, 5)) {
+            Absorbed::Token { token, finished } => {
+                assert_eq!(token, 5);
+                assert!(finished.is_none());
+            }
+            _ => panic!("expected first token"),
+        }
+        assert!(!l.in_prefill());
+        assert_eq!(l.tokens_emitted(), 1);
+        assert_eq!(l.kv_target(), 4); // prompt 3 + 1 generated
+        assert_eq!(l.feed_span(1), vec![5]); // decode feeds last token
+        // Length exit on the second token.
+        match l.absorb(1, &logits_pick(8, 6)) {
+            Absorbed::Token { token, finished } => {
+                assert_eq!(token, 6);
+                assert_eq!(finished, Some(FinishReason::Length));
+            }
+            _ => panic!("expected final token"),
+        }
+        assert_eq!(l.into_finished(), vec![5, 6]);
+    }
+
+    #[test]
+    fn single_pass_prefill_samples_on_last_feed() {
+        let mut l = lane(4, 3, Holdings::default());
+        assert_eq!(l.feed_span(4), vec![0, 1, 2, 3]);
+        match l.absorb(4, &logits_pick(8, 2)) {
+            Absorbed::Token { token, finished: None } => assert_eq!(token, 2),
+            _ => panic!("single-pass prefill must sample on its last feed"),
+        }
+    }
+
+    #[test]
+    fn eos_finishes_early() {
+        let mut l = Lane::admitted(
+            Request { eos_token: Some(7), ..req(1, 100) },
+            0,
+            None,
+            Holdings::default(),
+        );
+        match l.absorb(1, &logits_pick(8, 7)) {
+            Absorbed::Token { finished, .. } => assert_eq!(finished, Some(FinishReason::Eos)),
+            _ => panic!("expected token"),
+        }
+    }
+
+    #[test]
+    fn resume_refeeds_prompt_and_generated_without_reemitting() {
+        // Run a lane two tokens in, preempt it, readmit, and check the
+        // recompute prefill covers prompt + generated and emission
+        // continues with token index 2.
+        let mut l = lane(2, 4, Holdings::default());
+        assert!(matches!(l.absorb(2, &logits_pick(8, 3)), Absorbed::Token { token: 3, .. }));
+        assert!(matches!(l.absorb(1, &logits_pick(8, 4)), Absorbed::Token { token: 4, .. }));
+        let (request, rs) = l.into_resume();
+        assert_eq!(rs.generated, vec![3, 4]);
+        assert_eq!(init_context(&request, Some(&rs)), 4);
+
+        let mut r = Lane::admitted(request, 0, Some(rs), Holdings::default());
+        assert!(r.in_prefill());
+        assert_eq!(r.prefill_target(), 4); // prompt 2 + resumed 2
+        assert_eq!(r.tokens_emitted(), 2); // carried, not re-emitted
+        assert_eq!(r.feed_span(4), vec![0, 1, 3, 4]); // prompt then resumed
+        match r.absorb(4, &logits_pick(8, 6)) {
+            Absorbed::Token { token, finished } => {
+                assert_eq!(token, 6);
+                assert!(finished.is_none());
+            }
+            _ => panic!("recompute prefill must end in a fresh token"),
+        }
+        assert_eq!(r.tokens_emitted(), 3);
+    }
+
+    #[test]
+    fn work_reports_prefill_span_then_decode_position() {
+        let mut l = lane(5, 2, Holdings::default());
+        assert_eq!(l.work(3), LaneWork::Prefill { start: 0, tokens: 3 });
+        assert!(matches!(l.absorb(3, &[0.0; 4]), Absorbed::Prefilling));
+        assert_eq!(l.work(2), LaneWork::Prefill { start: 3, tokens: 2 });
+        assert!(matches!(l.absorb(2, &logits_pick(4, 1)), Absorbed::Token { .. }));
+        assert_eq!(l.work(1), LaneWork::Decode { position: 5 });
+    }
+
+    // ---- KvState transition table ----
+
+    #[test]
+    fn reserve_admit_take_later_reject() {
+        let kv = KvState::new(KvPolicy::Reserve, 1000, 10);
+        // worst 200 tokens -> 2000 B > 1000 B capacity: never fits.
+        assert!(matches!(kv.admit(1, 200, std::iter::empty::<&Lane>()), Admit::Reject));
+        // worst 50 tokens -> 500 B: fits an empty worker.
+        assert!(matches!(kv.admit(1, 50, std::iter::empty::<&Lane>()), Admit::Take));
+        let mut kv = kv;
+        let h = kv.reserve_admitted(1, 50);
+        assert_eq!((h.bytes, h.blocks), (500, 0));
+        assert_eq!(kv.bytes_in_use(), 500);
+        // Another 600 B would overflow: wait for a sibling instead.
+        assert!(matches!(kv.admit(1, 60, std::iter::empty::<&Lane>()), Admit::Later));
+        // Done/error/cancel all route through the same release.
+        kv.release_holdings(h);
+        assert_eq!(kv.bytes_in_use(), 0);
+        assert!(matches!(kv.admit(1, 60, std::iter::empty::<&Lane>()), Admit::Take));
+    }
+
+    #[test]
+    fn paged_admit_gates_on_expected_footprint() {
+        // 16-token blocks, 18-block pager (288 tokens).
+        let mut kv = KvState::new(KvPolicy::Paged { block_tokens: 16 }, 288 * 100, 100);
+        assert_eq!(kv.capacity_blocks(), Some(18));
+        // Worst case 304 tokens -> 19 blocks: impossible.
+        assert!(matches!(kv.admit(8, 304, std::iter::empty::<&Lane>()), Admit::Reject));
+        // 128-token worst case: expected = 1 + ceil((8-1)/2) = 5 blocks.
+        let mut lanes: Vec<Lane> = Vec::new();
+        for _ in 0..3 {
+            assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Take));
+            let h = kv.reserve_admitted(8, 128);
+            assert_eq!(h.blocks, 1); // blocks_for(9)
+            lanes.push(lane(8, 120, h));
+        }
+        // 3 × 5 expected + 5 candidate = 20 > 18: the fourth waits.
+        assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Later));
+        // Releasing one lane reopens the gate.
+        let gone = lanes.pop().unwrap();
+        kv.release_lane(&gone);
+        assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Take));
+    }
+
+    #[test]
+    fn paged_admit_clamps_resumed_lane_to_held_blocks() {
+        let mut kv = KvState::new(KvPolicy::Paged { block_tokens: 16 }, 288 * 100, 100);
+        // A resumed lane with 100 tokens of prior context holds 7
+        // blocks (blocks_for(101)) even though mid-re-prefill its
+        // kv_target is tiny; the gate must count the held 7.
+        let rs = ResumeState { generated: (0..96).collect(), sampler: Sampler::new(0) };
+        let h = kv.reserve_admitted(100, 128);
+        assert_eq!(h.blocks, 7);
+        let resumed = Lane::admitted(req(4, 100), 0, Some(rs), h);
+        assert_eq!(resumed.kv_target(), 1);
+        assert_eq!(resumed.kv_blocks(), 7);
+        // Committed for the resumed lane must be >= 7, so 2 more
+        // 5-expected candidates fit (7+5+5=17<=18) but a third does not.
+        let mut lanes = vec![resumed];
+        for _ in 0..2 {
+            assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Take));
+            let h = kv.reserve_admitted(8, 128);
+            lanes.push(lane(8, 120, h));
+        }
+        assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Later));
+    }
+
+    #[test]
+    fn reject_reason_uses_policy_units() {
+        let kv = KvState::new(KvPolicy::Reserve, 1000, 10);
+        let msg = kv.reject_reason(200);
+        assert!(msg.contains("2000 B") && msg.contains("1000 B"), "{msg}");
+        let kv = KvState::new(KvPolicy::Paged { block_tokens: 16 }, 288 * 100, 100);
+        let msg = kv.reject_reason(304);
+        assert!(msg.contains("19 KV blocks") && msg.contains("18 blocks"), "{msg}");
+    }
+
+    // ---- plan_step ----
+
+    struct TSlot {
+        lane: Lane,
+    }
+
+    impl HoldsLane for TSlot {
+        fn lane(&self) -> &Lane {
+            &self.lane
+        }
+        fn lane_mut(&mut self) -> &mut Lane {
+            &mut self.lane
+        }
+    }
+
+    fn admit_slot(kv: &mut KvState, prompt: usize, max_new: usize) -> TSlot {
+        let h = kv.reserve_admitted(prompt, prompt + max_new);
+        TSlot { lane: Lane::admitted(req(prompt, max_new), 0, None, h) }
+    }
+
+    /// Decode every planned lane one absorb (uniform logits), mirroring
+    /// a driver's post-step bookkeeping.
+    fn run_plan(scheduler: &mut Scheduler, slots: &mut [TSlot], plan: &StepPlan) {
+        for p in &plan.lanes {
+            let span = p.span;
+            let l = slots[p.slot].lane_mut();
+            let _ = l.absorb(span, &logits_pick(8, 1));
+            let emitted = slots[p.slot].lane().tokens_emitted();
+            scheduler.note_progress(p.slot, emitted);
+        }
+    }
+
+    #[test]
+    fn plan_single_pass_prefill_spans_whole_prompt() {
+        let mut sched = Scheduler::new(SchedulerPolicy::RoundRobin);
+        let mut kv = KvState::new(KvPolicy::Reserve, u64::MAX, 0);
+        let mut slots = vec![admit_slot(&mut kv, 7, 4), admit_slot(&mut kv, 3, 4)];
+        let (plan, evicted) = plan_step(&mut sched, &mut kv, &mut slots, 8, 0);
+        assert!(evicted.is_empty());
+        assert_eq!(
+            plan.lanes,
+            vec![PlannedLane { slot: 0, span: 7 }, PlannedLane { slot: 1, span: 3 }]
+        );
+        run_plan(&mut sched, &mut slots, &plan);
+        // Both lanes finished prefill in one pass and now decode.
+        let (plan, _) = plan_step(&mut sched, &mut kv, &mut slots, 8, 0);
+        assert_eq!(
+            plan.lanes,
+            vec![PlannedLane { slot: 0, span: 1 }, PlannedLane { slot: 1, span: 1 }]
+        );
+    }
+
+    #[test]
+    fn plan_chunked_prefill_respects_budget_and_decode_priority() {
+        let mut sched = Scheduler::new(SchedulerPolicy::RoundRobin);
+        let mut kv = KvState::new(KvPolicy::Reserve, u64::MAX, 0);
+        // Slot 0: decoding (prompt 1 already fed); slots 1-2: long prompts.
+        let mut slots = vec![admit_slot(&mut kv, 1, 8)];
+        {
+            let (plan, _) = plan_step(&mut sched, &mut kv, &mut slots, 8, 4);
+            run_plan(&mut sched, &mut slots, &plan); // slot 0 leaves prefill
+        }
+        slots.push(admit_slot(&mut kv, 100, 4));
+        slots.push(admit_slot(&mut kv, 100, 4));
+        let (plan, _) = plan_step(&mut sched, &mut kv, &mut slots, 8, 4);
+        // Decode lane advances by 1; the 4-token chunk budget goes to
+        // one prefill lane (most-starved-first; fresh tie -> lower idx).
+        assert_eq!(
+            plan.lanes,
+            vec![PlannedLane { slot: 0, span: 1 }, PlannedLane { slot: 1, span: 4 }]
+        );
+        run_plan(&mut sched, &mut slots, &plan);
+        // Slot 2 aged while slot 1 advanced: budget flips to slot 2.
+        let (plan, _) = plan_step(&mut sched, &mut kv, &mut slots, 8, 4);
+        assert_eq!(
+            plan.lanes,
+            vec![PlannedLane { slot: 0, span: 1 }, PlannedLane { slot: 2, span: 4 }]
+        );
+    }
+
+    #[test]
+    fn plan_chunked_budget_splits_tail_across_lanes() {
+        let mut sched = Scheduler::new(SchedulerPolicy::RoundRobin);
+        let mut kv = KvState::new(KvPolicy::Reserve, u64::MAX, 0);
+        // Lane 0 has 2 prefill tokens left; budget 6 spills 4 to lane 1.
+        let mut slots = vec![admit_slot(&mut kv, 2, 4), admit_slot(&mut kv, 100, 4)];
+        let (plan, _) = plan_step(&mut sched, &mut kv, &mut slots, 8, 6);
+        // Fresh lanes tie on aging -> ascending index allocation.
+        assert_eq!(
+            plan.lanes,
+            vec![PlannedLane { slot: 0, span: 2 }, PlannedLane { slot: 1, span: 4 }]
+        );
+    }
+
+    #[test]
+    fn plan_preempts_lowest_progress_until_growth_fits() {
+        // 2-block pager of 8-token blocks (16 tokens). Two lanes with
+        // prompt 4 (1 block each at admission) both grow past 8 tokens;
+        // the second growth cannot fit and the lower-progress lane is
+        // evicted with its blocks released.
+        let mut sched = Scheduler::new(SchedulerPolicy::RoundRobin);
+        let mut kv = KvState::new(KvPolicy::Paged { block_tokens: 8 }, 16 * 10, 10);
+        let mut slots = vec![admit_slot(&mut kv, 4, 8), admit_slot(&mut kv, 4, 8)];
+        assert_eq!(kv.blocks_in_use(), 2);
+        // Single-pass prefill + a few decodes until growth is needed.
+        let mut evicted_total = 0;
+        for _ in 0..16 {
+            let (plan, evicted) = plan_step(&mut sched, &mut kv, &mut slots, 8, 0);
+            // Growth + the release choke point never overshoot capacity,
+            // and the books always match the survivors' holdings.
+            assert!(kv.blocks_in_use() <= 2);
+            let held: usize = slots.iter().map(|s| s.lane.kv_blocks()).sum();
+            assert_eq!(kv.blocks_in_use(), held);
+            evicted_total += evicted.len();
+            if slots.is_empty() {
+                break;
+            }
+            run_plan(&mut sched, &mut slots, &plan);
+            // Retire completions through the same release choke point.
+            let mut i = 0;
+            while i < slots.len() {
+                if slots[i].lane.tokens_emitted() >= slots[i].lane.request().max_new_tokens {
+                    let s = slots.swap_remove(i);
+                    kv.release_lane(&s.lane);
+                } else {
+                    i += 1;
+                }
+            }
+            // plan_step mirrors evictions itself; completions here are
+            // test-local, so rebuild the scheduler index space.
+            sched = Scheduler::new(SchedulerPolicy::RoundRobin);
+        }
+        assert!(evicted_total >= 1, "growth past 2 blocks must preempt");
+        // Pager never exceeded capacity and everything was released.
+        assert!(kv.blocks_in_use() <= 2);
+    }
+
+    #[test]
+    fn plan_empty_when_no_slots() {
+        let mut sched = Scheduler::new(SchedulerPolicy::Fcfs);
+        let mut kv = KvState::new(KvPolicy::Reserve, u64::MAX, 0);
+        let mut slots: Vec<TSlot> = Vec::new();
+        let (plan, evicted) = plan_step(&mut sched, &mut kv, &mut slots, 4, 0);
+        assert!(plan.is_empty());
+        assert!(evicted.is_empty());
+    }
+
+    #[test]
+    fn plan_always_advances_someone() {
+        // All-prefill batch with a 1-token chunk budget: exactly one
+        // lane advances — no starved empty step.
+        let mut sched = Scheduler::new(SchedulerPolicy::RoundRobin);
+        let mut kv = KvState::new(KvPolicy::Reserve, u64::MAX, 0);
+        let mut slots = vec![admit_slot(&mut kv, 50, 2), admit_slot(&mut kv, 50, 2)];
+        for _ in 0..4 {
+            let (plan, _) = plan_step(&mut sched, &mut kv, &mut slots, 8, 1);
+            assert_eq!(plan.lanes.len(), 1);
+            assert_eq!(plan.lanes[0].span, 1);
+            run_plan(&mut sched, &mut slots, &plan);
+        }
+        // Aging alternated the budget between the two lanes.
+        assert_eq!(slots[0].lane.kv_target(), 3);
+        assert_eq!(slots[1].lane.kv_target(), 3);
+    }
+}

@@ -95,6 +95,11 @@ pub struct Metrics {
     /// Total lanes advanced across all fused steps (lanes/steps = mean
     /// achieved batch size).
     batch_lanes: AtomicU64,
+    /// Prefill spans executed (one per prefilling lane per step: a
+    /// single-pass prompt is 1 span, a chunked prompt is ~len/chunk).
+    prefill_spans: AtomicU64,
+    /// Prompt/recompute context tokens processed across all spans.
+    prefill_tokens: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -121,6 +126,11 @@ pub struct Snapshot {
     pub batch_steps: u64,
     /// Mean lanes per fused step (batched vecmat reuse actually achieved).
     pub mean_batch_size: f64,
+    /// Prefill spans executed (single-pass prompts count 1; chunked
+    /// prompts count one per chunk).
+    pub prefill_spans: u64,
+    /// Prompt/recompute context tokens processed across all spans.
+    pub prefill_tokens: u64,
     pub mean_queue_delay_s: f64,
     pub mean_ttft_s: f64,
     pub ttft: Percentiles,
@@ -151,6 +161,8 @@ impl Metrics {
             tokens_out: AtomicU64::new(0),
             batch_steps: AtomicU64::new(0),
             batch_lanes: AtomicU64::new(0),
+            prefill_spans: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -177,6 +189,12 @@ impl Metrics {
     pub fn on_batch_step(&self, lanes: usize) {
         self.batch_steps.fetch_add(1, Ordering::Relaxed);
         self.batch_lanes.fetch_add(lanes as u64, Ordering::Relaxed);
+    }
+
+    /// One prefill span of `tokens` context tokens ran in a fused step.
+    pub fn on_prefill(&self, tokens: usize) {
+        self.prefill_spans.fetch_add(1, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
     pub fn on_done(&self, _tokens: usize, total: Duration) {
@@ -255,6 +273,8 @@ impl Metrics {
             tokens_out: self.tokens_out.load(Ordering::Relaxed),
             batch_steps: steps,
             mean_batch_size: if steps == 0 { 0.0 } else { lanes as f64 / steps as f64 },
+            prefill_spans: self.prefill_spans.load(Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
             mean_queue_delay_s: queue_delay_mean,
             mean_ttft_s: ttft_mean,
             ttft: percentiles_of(ttft_samples),
@@ -290,6 +310,8 @@ impl Snapshot {
             ("tokens_out", self.tokens_out.into()),
             ("batch_steps", self.batch_steps.into()),
             ("mean_batch_size", self.mean_batch_size.into()),
+            ("prefill_spans", self.prefill_spans.into()),
+            ("prefill_tokens", self.prefill_tokens.into()),
             ("mean_queue_delay_s", self.mean_queue_delay_s.into()),
             ("mean_ttft_s", self.mean_ttft_s.into()),
             ("ttft_p50_s", self.ttft.p50.into()),
@@ -362,6 +384,20 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.batch_steps, 2);
         assert!((s.mean_batch_size - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefill_span_accounting() {
+        let m = Metrics::new();
+        m.on_prefill(512); // one single-pass prompt
+        m.on_prefill(64); // one chunk
+        m.on_prefill(64);
+        let s = m.snapshot();
+        assert_eq!(s.prefill_spans, 3);
+        assert_eq!(s.prefill_tokens, 640);
+        let j = s.to_json();
+        assert_eq!(j.get("prefill_spans").as_u64(), Some(3));
+        assert_eq!(j.get("prefill_tokens").as_u64(), Some(640));
     }
 
     #[test]

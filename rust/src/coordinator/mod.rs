@@ -29,6 +29,26 @@
 //! runs in the coordinator with the same [`crate::numerics::Sampler`]
 //! the VXE model uses.
 //!
+//! **The state machine itself lives in [`lane`]** — lane prefill/decode
+//! transitions, KV admission and the single release choke point, and
+//! fused-step composition ([`lane::plan_step`]) — and is shared verbatim
+//! with the virtual-time harness ([`workload::run_virtual`]), so the
+//! threaded and simulated paths cannot drift (the stream-agreement tests
+//! then check equivalence rather than papering over divergence). This
+//! module owns only what is genuinely threaded: the pool queue, worker
+//! threads, client channels, wall-clock metrics, and the event fan-out.
+//!
+//! **Prefill** runs as multi-token spans. By default a prompt is fed in
+//! a single pass (`prefill_chunk = 0`, the way the hardware executes a
+//! prompt) — which makes a long prompt's step long and inflates
+//! co-batched decode lanes' TPOT. Setting
+//! [`CoordinatorConfig::prefill_chunk`] splits prefill into token-
+//! budgeted chunks interleaved with decode steps (decode lanes always
+//! advance; at most `prefill_chunk` prompt tokens run per step,
+//! allocated most-starved-first), bounding neighbor TPOT while keeping
+//! the prompt's TTFT within a small factor of single-pass. Spans change
+//! only timing — token streams are bit-identical across chunk settings.
+//!
 //! KV memory is accounted per [`scheduler::KvPolicy`]: `Reserve` holds
 //! the worst case (`prompt + max_new_tokens`) from admission, so the
 //! active batch is sized by what requests *could* grow to; `Paged`
@@ -41,11 +61,11 @@
 //! sampling exact).
 
 pub mod backend;
+pub mod lane;
 pub mod metrics;
 pub mod scheduler;
 pub mod workload;
 
-use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -53,15 +73,17 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::numerics::{SampleParams, Sampler};
+use crate::numerics::SampleParams;
 
-pub use backend::{Backend, BackendFactory, BatchLane, SimBackend, StepModel};
+pub use backend::{Backend, BackendFactory, BatchLane, LaneWork, SimBackend, StepModel};
+pub use lane::{Absorbed, Admit, HoldsLane, KvState, Lane, ResumeState};
 pub use metrics::{Metrics, Percentiles};
 pub use scheduler::{
     KvBudget, KvPager, KvPolicy, Scheduler, SchedulerPolicy, DEFAULT_KV_BLOCK_TOKENS,
 };
 pub use workload::{
-    run_open_loop, run_virtual, LenDist, LoadReport, VirtualConfig, VirtualReport, Workload,
+    run_open_loop, run_virtual, run_virtual_plan, LenDist, LoadReport, VirtualConfig,
+    VirtualReport, Workload,
 };
 
 /// A generation request.
@@ -69,8 +91,11 @@ pub use workload::{
 pub struct Request {
     /// Model to route to (pool name).
     pub model: String,
+    /// Prompt token ids (non-empty).
     pub prompt: Vec<i64>,
+    /// Maximum tokens to generate (> 0).
     pub max_new_tokens: usize,
+    /// Sampling parameters.
     pub params: SampleParams,
     /// Stop early on this token id.
     pub eos_token: Option<i64>,
@@ -79,6 +104,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// A greedy request with default parameters.
     pub fn greedy(model: &str, prompt: Vec<i64>, max_new_tokens: usize) -> Request {
         Request {
             model: model.to_string(),
@@ -90,6 +116,7 @@ impl Request {
         }
     }
 
+    /// Validate shape and sampling parameters.
     pub fn validate(&self) -> Result<(), String> {
         if self.prompt.is_empty() {
             return Err("empty prompt".into());
@@ -100,10 +127,12 @@ impl Request {
         self.params.validate()
     }
 
-    /// Worst-case KV bytes this request can grow to (what admission
-    /// control reserves up front).
-    pub fn kv_need(&self, kv_bytes_per_token: u64) -> u64 {
-        (self.prompt.len() + self.max_new_tokens) as u64 * kv_bytes_per_token
+    /// Largest context this request can ever grow to, tokens. The
+    /// reserve-policy admission gate reserves
+    /// `worst_case_tokens × kv_bytes_per_token` bytes up front
+    /// ([`lane::KvState::admit`]).
+    pub fn worst_case_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
     }
 }
 
@@ -111,22 +140,46 @@ impl Request {
 #[derive(Clone, Debug, PartialEq)]
 pub enum TokenEvent {
     /// One generated token (with its index in the completion).
-    Token { request_id: u64, index: usize, token: i64 },
+    Token {
+        /// The originating request.
+        request_id: u64,
+        /// Index of this token in the completion (0-based).
+        index: usize,
+        /// The sampled token id.
+        token: i64,
+    },
     /// Generation finished (all tokens already streamed).
-    Done { request_id: u64, tokens: Vec<i64>, reason: FinishReason },
+    Done {
+        /// The originating request.
+        request_id: u64,
+        /// The complete generated stream.
+        tokens: Vec<i64>,
+        /// Why generation stopped.
+        reason: FinishReason,
+    },
     /// The request failed.
-    Error { request_id: u64, message: String },
+    Error {
+        /// The originating request.
+        request_id: u64,
+        /// Failure description.
+        message: String,
+    },
 }
 
+/// Why a stream completed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
+    /// `max_new_tokens` generated.
     Length,
+    /// The EOS token was sampled.
     Eos,
 }
 
 /// Handle for consuming one request's event stream.
 pub struct RequestHandle {
+    /// The id assigned at submission (echoed in every event).
     pub request_id: u64,
+    /// The event stream (tokens, then `Done` or `Error`).
     pub events: Receiver<TokenEvent>,
 }
 
@@ -144,46 +197,22 @@ impl RequestHandle {
     }
 }
 
-/// State a preempted request carries back to the queue so readmission
-/// can rebuild its KV by recompute (re-feeding prompt + generated) and
-/// then continue the stream — the sampler RNG rides along so stochastic
-/// sampling resumes exactly where it stopped, and already-emitted tokens
-/// are never re-sent to the client.
-struct Resume {
-    generated: Vec<i64>,
-    sampler: Sampler,
-}
-
+/// A queued request: routing metadata plus (after a preemption) the
+/// carried stream state for recompute-on-readmit.
 struct Job {
     request_id: u64,
     request: Request,
     events: Sender<TokenEvent>,
     submitted: Instant,
     /// Present when this job was preempted mid-decode.
-    resume: Option<Resume>,
+    resume: Option<ResumeState>,
 }
 
 impl Job {
-    /// Context tokens that must be (re)fed before new decoding: the
-    /// prompt plus any tokens generated before a preemption.
+    /// Context tokens that must be (re)fed before new decoding.
     fn init_ctx(&self) -> usize {
-        self.request.prompt.len() + self.resume.as_ref().map_or(0, |r| r.generated.len())
+        lane::init_context(&self.request, self.resume.as_ref())
     }
-
-    /// Largest context this request can ever grow to.
-    fn worst_case_tokens(&self) -> usize {
-        self.request.prompt.len() + self.request.max_new_tokens
-    }
-}
-
-/// Decision an admission closure returns after peeking the queue head.
-enum Admit {
-    /// Pop it; the caller will admit it into a slot.
-    Take,
-    /// Pop it; the caller will refuse it (can never fit anywhere).
-    Reject,
-    /// Leave it at the head for a sibling worker with more headroom.
-    Later,
 }
 
 /// Result of a peek-then-pop attempt on the pool queue.
@@ -278,6 +307,7 @@ struct Pool {
 pub struct CoordinatorConfig {
     /// Max requests a worker holds in its slot table.
     pub max_active_per_worker: usize,
+    /// Token-level scheduling policy for batch composition.
     pub policy: SchedulerPolicy,
     /// KV bytes one context token occupies (from
     /// [`crate::model::ModelConfig::kv_bytes_per_token`]); 0 disables
@@ -291,6 +321,12 @@ pub struct CoordinatorConfig {
     /// Max lanes per fused decode step (hardware batch cap); 0 means
     /// `max_active_per_worker`.
     pub max_batch: usize,
+    /// Chunked prefill: max prompt/recompute tokens per fused step
+    /// across all prefilling lanes, allocated most-starved-first with
+    /// decode lanes always advancing. 0 (default) = off: each prompt is
+    /// prefilled in a single pass, which minimizes its own TTFT but can
+    /// stall co-batched decode lanes for the span's full duration.
+    pub prefill_chunk: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -302,6 +338,7 @@ impl Default for CoordinatorConfig {
             kv_budget_bytes: u64::MAX,
             kv_policy: KvPolicy::Reserve,
             max_batch: 0,
+            prefill_chunk: 0,
         }
     }
 }
@@ -322,6 +359,7 @@ impl CoordinatorConfig {
             kv_budget_bytes: budget.max(1),
             kv_policy: KvPolicy::Reserve,
             max_batch: 0,
+            prefill_chunk: 0,
         }
     }
 }
@@ -331,10 +369,12 @@ pub struct Coordinator {
     cfg: CoordinatorConfig,
     pools: HashMap<String, Pool>,
     next_id: AtomicU64,
+    /// Shared serving metrics (snapshot for the `/metrics`-style op).
     pub metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
+    /// Build a coordinator with no pools registered yet.
     pub fn new(cfg: CoordinatorConfig) -> Coordinator {
         Coordinator {
             cfg,
@@ -406,51 +446,23 @@ impl Coordinator {
     }
 }
 
-/// One active request's slot in a worker's table.
+/// One active request's slot in a worker's table: the shared [`Lane`]
+/// state machine plus the threaded-only pieces (client channel, wall
+/// clock, backend session).
 struct Slot {
-    job: Job,
-    session: Box<dyn Any>,
-    sampler: Sampler,
-    generated: Vec<i64>,
-    /// Context tokens fed so far (prompt, then — after a preemption —
-    /// the previously generated tokens being recomputed).
-    prompt_fed: usize,
-    /// Tokens of `generated` that predate this admission (recompute
-    /// prefill re-feeds them; they were already emitted to the client).
-    resumed: usize,
-    /// Reserve policy: KV bytes reserved at admission.
-    kv_reserved: u64,
-    /// Paged policy: KV blocks currently held.
-    kv_blocks: usize,
+    request_id: u64,
+    events: Sender<TokenEvent>,
+    submitted: Instant,
+    session: Box<dyn std::any::Any>,
+    lane: Lane,
 }
 
-impl Slot {
-    /// Prefill span: context tokens to feed before sampling (re)starts.
-    fn prefill_target(&self) -> usize {
-        self.job.request.prompt.len() + self.resumed
+impl HoldsLane for Slot {
+    fn lane(&self) -> &Lane {
+        &self.lane
     }
-
-    /// Token to feed at prefill position `i` (prompt, then resumed).
-    fn prefill_token(&self, i: usize) -> i64 {
-        let prompt = &self.job.request.prompt;
-        if i < prompt.len() {
-            prompt[i]
-        } else {
-            self.generated[i - prompt.len()]
-        }
-    }
-
-    /// Context size after this slot's *next* decode step: tokens fed
-    /// into the backend so far, plus the one the step feeds. This is
-    /// what the pager must cover before the lane may advance. (The
-    /// first sample rides the last prefill feed, so post-prefill the
-    /// fed count is `prompt + generated - 1`.)
-    fn kv_target(&self) -> usize {
-        if self.prompt_fed < self.prefill_target() {
-            self.prompt_fed + 1
-        } else {
-            self.job.request.prompt.len() + self.generated.len()
-        }
+    fn lane_mut(&mut self) -> &mut Lane {
+        &mut self.lane
     }
 }
 
@@ -459,107 +471,6 @@ enum Retire {
     Done(FinishReason),
     Cancelled,
     Errored(String),
-}
-
-/// Per-worker KV accounting, selected by [`KvPolicy`].
-enum KvState {
-    Reserve(KvBudget),
-    Paged(KvPager),
-}
-
-impl KvState {
-    fn new(cfg: &CoordinatorConfig) -> KvState {
-        match cfg.kv_policy {
-            KvPolicy::Reserve => KvState::Reserve(KvBudget::new(cfg.kv_budget_bytes)),
-            KvPolicy::Paged { block_tokens } => KvState::Paged(KvPager::new(
-                cfg.kv_budget_bytes,
-                cfg.kv_bytes_per_token,
-                block_tokens,
-            )),
-        }
-    }
-
-    /// Admission decision for the queue-head job. Under the paged
-    /// policy the gate sums every active slot's *expected* footprint
-    /// (blocks held now + half its remaining worst-case growth) plus
-    /// the candidate's, against capacity — instantaneous free blocks
-    /// alone would over-admit a burst of small-context requests whose
-    /// growth then thrashes the preemption path.
-    fn admit(&self, job: &Job, kv_bytes_per_token: u64, slots: &[Slot]) -> Admit {
-        match self {
-            KvState::Reserve(b) => {
-                let need = job.request.kv_need(kv_bytes_per_token);
-                if need > b.capacity() {
-                    Admit::Reject
-                } else if need <= b.capacity().saturating_sub(b.reserved()) {
-                    Admit::Take
-                } else {
-                    Admit::Later
-                }
-            }
-            KvState::Paged(p) => {
-                let worst = job.worst_case_tokens();
-                if p.blocks_for(worst) > p.capacity_blocks() {
-                    Admit::Reject
-                } else {
-                    // Clamp each slot's estimate to what it already
-                    // holds: a resumed slot mid-re-prefill has a small
-                    // kv_target but owns blocks through its whole prior
-                    // context, and undercounting those would let the
-                    // gate admit beyond physical capacity.
-                    let committed: usize = slots
-                        .iter()
-                        .map(|s| {
-                            p.expected_blocks(s.kv_target(), s.job.worst_case_tokens())
-                                .max(s.kv_blocks)
-                        })
-                        .sum();
-                    let candidate = p.expected_blocks(job.init_ctx() + 1, worst);
-                    if committed.saturating_add(candidate) <= p.capacity_blocks() {
-                        Admit::Take
-                    } else {
-                        Admit::Later
-                    }
-                }
-            }
-        }
-    }
-
-    /// Reserve for a just-taken job; returns (bytes, blocks) for the
-    /// slot. Infallible because `admit` said `Take` and nothing else
-    /// touched this worker's accounting in between.
-    fn reserve_admitted(&mut self, job: &Job, kv_bytes_per_token: u64) -> (u64, usize) {
-        match self {
-            KvState::Reserve(b) => {
-                let need = job.request.kv_need(kv_bytes_per_token);
-                let ok = b.try_reserve(need);
-                debug_assert!(ok, "queue handed out a job beyond the KV budget");
-                (need, 0)
-            }
-            KvState::Paged(p) => {
-                let blocks = p.admit_blocks(job.init_ctx());
-                let ok = p.try_reserve(blocks);
-                debug_assert!(ok, "admission gate admitted beyond the pager capacity");
-                (0, blocks)
-            }
-        }
-    }
-
-    /// Release a slot's holdings (retired, errored, cancelled, or
-    /// preempted) — the single choke point that keeps every exit path
-    /// leak-free.
-    fn release_slot(&mut self, slot: &Slot) {
-        self.release_parts(slot.kv_reserved, slot.kv_blocks);
-    }
-
-    /// Release raw holdings (for exits before a slot exists, e.g. a
-    /// session-open failure right after admission reserved).
-    fn release_parts(&mut self, bytes: u64, blocks: usize) {
-        match self {
-            KvState::Reserve(b) => b.release(bytes),
-            KvState::Paged(p) => p.release(blocks),
-        }
-    }
 }
 
 fn worker_loop(
@@ -588,11 +499,9 @@ fn worker_loop(
     };
 
     let mut scheduler = Scheduler::new(cfg.policy);
-    let mut kv = KvState::new(&cfg);
-    if let KvState::Paged(p) = &kv {
-        if p.capacity_blocks() != usize::MAX {
-            metrics.set_kv_capacity_blocks(p.capacity_blocks() as u64);
-        }
+    let mut kv = KvState::new(cfg.kv_policy, cfg.kv_budget_bytes, cfg.kv_bytes_per_token);
+    if let Some(capacity) = kv.capacity_blocks() {
+        metrics.set_kv_capacity_blocks(capacity as u64);
     }
     let mut slots: Vec<Slot> = Vec::new();
     let max_batch =
@@ -610,45 +519,35 @@ fn worker_loop(
         // otherwise it stays at the head for a sibling with free KV.
         while slots.len() < cfg.max_active_per_worker {
             let popped = queue.pop_with(slots.is_empty(), |job| {
-                kv.admit(job, cfg.kv_bytes_per_token, &slots)
+                kv.admit(
+                    job.init_ctx(),
+                    job.request.worst_case_tokens(),
+                    slots.iter().map(|s| &s.lane),
+                )
             });
             match popped {
-                Popped::Job(mut job) => {
-                    let (kv_reserved, kv_blocks) =
-                        kv.reserve_admitted(&job, cfg.kv_bytes_per_token);
-                    if let KvState::Paged(p) = &kv {
-                        // Peak occupancy can be set by admission itself
-                        // (the virtual harness records it there too).
-                        metrics.note_kv_blocks_in_use(p.blocks_in_use() as u64);
-                    }
+                Popped::Job(job) => {
+                    let holdings =
+                        kv.reserve_admitted(job.init_ctx(), job.request.worst_case_tokens());
+                    // Peak occupancy can be set by admission itself
+                    // (the virtual harness records it there too).
+                    metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
+                    let Job { request_id, request, events, submitted, resume } = job;
                     match backend.new_session() {
                         Ok(session) => {
-                            let resume = job.resume.take();
                             if resume.is_none() {
-                                metrics.on_start(job.submitted.elapsed());
+                                metrics.on_start(submitted.elapsed());
                             }
-                            let seed = job.request.seed ^ job.request_id;
-                            let (generated, sampler) = match resume {
-                                Some(r) => (r.generated, r.sampler),
-                                None => (Vec::new(), Sampler::new(seed)),
-                            };
-                            slots.push(Slot {
-                                resumed: generated.len(),
-                                job,
-                                session,
-                                sampler,
-                                generated,
-                                prompt_fed: 0,
-                                kv_reserved,
-                                kv_blocks,
-                            });
+                            let seed = request.seed ^ request_id;
+                            let lane = Lane::admitted(request, seed, resume, holdings);
+                            slots.push(Slot { request_id, events, submitted, session, lane });
                             scheduler.reset_slot(slots.len() - 1);
                         }
                         Err(e) => {
-                            kv.release_parts(kv_reserved, kv_blocks);
+                            kv.release_holdings(holdings);
                             metrics.on_error();
-                            let _ = job.events.send(TokenEvent::Error {
-                                request_id: job.request_id,
+                            let _ = events.send(TokenEvent::Error {
+                                request_id,
                                 message: format!("session: {e}"),
                             });
                         }
@@ -656,25 +555,8 @@ fn worker_loop(
                 }
                 Popped::Rejected(job) => {
                     // Can never fit, even on an empty device: refuse
-                    // rather than deadlock the admission queue. The
-                    // message states the limit in the policy's own
-                    // units (paged rejection is block-granular, so a
-                    // byte comparison could read as self-contradictory).
-                    let message = match &kv {
-                        KvState::Reserve(_) => format!(
-                            "request needs {} B of KV cache but the device budget is {} B",
-                            job.request.kv_need(cfg.kv_bytes_per_token),
-                            cfg.kv_budget_bytes
-                        ),
-                        KvState::Paged(p) => format!(
-                            "request needs {} KV blocks ({} context tokens) but the paged \
-                             budget holds {} blocks of {} tokens",
-                            p.blocks_for(job.worst_case_tokens()),
-                            job.worst_case_tokens(),
-                            p.capacity_blocks(),
-                            p.block_tokens()
-                        ),
-                    };
+                    // rather than deadlock the admission queue.
+                    let message = kv.reject_reason(job.request.worst_case_tokens());
                     metrics.on_reject();
                     let _ = job
                         .events
@@ -694,124 +576,95 @@ fn worker_loop(
             continue;
         }
 
-        // ---- pick lanes and secure their KV growth. Under the paged
-        // policy every picked lane must hold blocks covering its next
-        // context position before the step runs; when the pager can't
-        // supply them, preempt the lowest-progress slot (releasing its
-        // blocks, requeueing it at the head for recompute-on-readmit)
-        // and re-pick. Terminates: each round removes a slot, and a
-        // lone slot's worst case always fits (admission rejected it
-        // otherwise).
-        let picked = loop {
-            let picked = scheduler.pick_batch(slots.len(), max_batch);
-            let pager = match &mut kv {
-                KvState::Reserve(_) => break picked, // pre-reserved at admission
-                KvState::Paged(p) => p,
-            };
-            let mut extra = 0usize;
-            for &i in &picked {
-                let s = &slots[i];
-                extra += pager.blocks_for(s.kv_target()).saturating_sub(s.kv_blocks);
-            }
-            if extra <= pager.free_blocks() {
-                for &i in &picked {
-                    let s = &mut slots[i];
-                    s.kv_blocks =
-                        pager.try_grow(s.kv_blocks, s.kv_target()).expect("growth fits");
-                }
-                metrics.note_kv_blocks_in_use(pager.blocks_in_use() as u64);
-                break picked;
-            }
-            let victim = scheduler.pick_victim(slots.len());
-            let s = slots.swap_remove(victim);
-            scheduler.swap_remove(victim);
-            kv.release_slot(&s);
-            metrics.on_preempt(s.generated.len());
+        // ---- compose the fused step (shared logic: pick lanes, assign
+        // prefill spans, secure paged-KV growth, preempt when growth
+        // cannot be secured). Evicted slots come back with their blocks
+        // already released; this loop decides their fate (requeue with
+        // resume state, or shed visibly on suspected livelock).
+        let (plan, evicted) =
+            lane::plan_step(&mut scheduler, &mut kv, &mut slots, max_batch, cfg.prefill_chunk);
+        for s in evicted {
+            metrics.on_preempt(s.lane.tokens_emitted());
             preempts_since_done += 1;
             if preempts_since_done > 1000 + 100 * cfg.max_active_per_worker {
                 metrics.on_error();
-                let _ = s.job.events.send(TokenEvent::Error {
-                    request_id: s.job.request_id,
+                let _ = s.events.send(TokenEvent::Error {
+                    request_id: s.request_id,
                     message: "preemption livelock suspected: request shed after repeated \
                               preemption without a completion"
                         .into(),
                 });
             } else {
-                let mut job = s.job;
-                job.resume = Some(Resume { generated: s.generated, sampler: s.sampler });
-                queue.push_front(job);
+                let (request, resume) = s.lane.into_resume();
+                queue.push_front(Job {
+                    request_id: s.request_id,
+                    request,
+                    events: s.events,
+                    submitted: s.submitted,
+                    resume: Some(resume),
+                });
             }
-            if slots.is_empty() {
-                break Vec::new();
-            }
-        };
-        if picked.is_empty() {
+        }
+        metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
+        if plan.is_empty() {
             continue;
         }
 
-        // ---- one fused batched step over the scheduled lanes ----
+        // ---- one fused batched step over the planned lanes ----
         let step_started = Instant::now();
-        let mut lanes: Vec<BatchLane> = Vec::with_capacity(picked.len());
-        for &i in &picked {
-            let s = &mut slots[i];
-            let token = if s.prompt_fed < s.prefill_target() {
-                s.prefill_token(s.prompt_fed)
-            } else {
-                *s.generated.last().expect("generated nonempty after prefill")
-            };
+        let mut lanes: Vec<BatchLane> = Vec::with_capacity(plan.lanes.len());
+        for p in &plan.lanes {
+            let s = &mut slots[p.slot];
+            if s.lane.in_prefill() {
+                metrics.on_prefill(p.span);
+            }
+            let tokens = s.lane.feed_span(p.span);
             let session = std::mem::replace(&mut s.session, Box::new(()));
-            lanes.push(BatchLane { session, token });
+            lanes.push(BatchLane { session, tokens });
         }
         let results = backend.decode_batch(&mut lanes);
-        metrics.on_batch_step(picked.len());
+        metrics.on_batch_step(plan.lanes.len());
         let step_elapsed = step_started.elapsed();
 
-        debug_assert_eq!(results.len(), picked.len(), "backend lane-count contract");
+        debug_assert_eq!(results.len(), plan.lanes.len(), "backend lane-count contract");
         let mut retire: Vec<(usize, Retire)> = Vec::new();
-        for ((lane, &i), result) in lanes.iter_mut().zip(&picked).zip(results) {
-            slots[i].session = std::mem::replace(&mut lane.session, Box::new(()));
+        for ((lane_io, p), result) in lanes.iter_mut().zip(&plan.lanes).zip(results) {
+            let i = p.slot;
+            slots[i].session = std::mem::replace(&mut lane_io.session, Box::new(()));
             match result {
                 Ok(logits) => {
                     let s = &mut slots[i];
-                    if s.prompt_fed < s.prefill_target() {
-                        s.prompt_fed += 1;
-                        if s.prompt_fed < s.prefill_target() {
+                    match s.lane.absorb(p.span, &logits) {
+                        Absorbed::Prefilling => {
                             // Still prefilling: a pick without a token.
-                            scheduler.note_progress(i, s.generated.len());
-                            continue;
+                            scheduler.note_progress(i, s.lane.tokens_emitted());
                         }
-                    }
-                    let token = s.sampler.sample(&logits, &s.job.request.params) as i64;
-                    s.generated.push(token);
-                    if s.generated.len() == 1 {
-                        // `resumed > 0` can't reach here (its generated
-                        // starts non-empty), so TTFT counts each request
-                        // once, at its true first emission.
-                        metrics.on_first_token(s.job.submitted.elapsed());
-                    }
-                    metrics.on_token(step_elapsed);
-                    scheduler.note_progress(i, s.generated.len());
-                    let receiver_alive = s
-                        .job
-                        .events
-                        .send(TokenEvent::Token {
-                            request_id: s.job.request_id,
-                            index: s.generated.len() - 1,
-                            token,
-                        })
-                        .is_ok();
-                    if !receiver_alive {
-                        // Client went away mid-stream: cancel so the
-                        // device stops burning tokens on it.
-                        retire.push((i, Retire::Cancelled));
-                        continue;
-                    }
-                    let eos_hit = s.job.request.eos_token == Some(token);
-                    let len_hit = s.generated.len() >= s.job.request.max_new_tokens;
-                    if eos_hit || len_hit {
-                        let reason =
-                            if eos_hit { FinishReason::Eos } else { FinishReason::Length };
-                        retire.push((i, Retire::Done(reason)));
+                        Absorbed::Token { token, finished } => {
+                            if s.lane.tokens_emitted() == 1 {
+                                // A resumed lane can't reach here (its
+                                // stream starts non-empty), so TTFT
+                                // counts each request once, at its true
+                                // first emission.
+                                metrics.on_first_token(s.submitted.elapsed());
+                            }
+                            metrics.on_token(step_elapsed);
+                            scheduler.note_progress(i, s.lane.tokens_emitted());
+                            let receiver_alive = s
+                                .events
+                                .send(TokenEvent::Token {
+                                    request_id: s.request_id,
+                                    index: s.lane.tokens_emitted() - 1,
+                                    token,
+                                })
+                                .is_ok();
+                            if !receiver_alive {
+                                // Client went away mid-stream: cancel so
+                                // the device stops burning tokens on it.
+                                retire.push((i, Retire::Cancelled));
+                            } else if let Some(reason) = finished {
+                                retire.push((i, Retire::Done(reason)));
+                            }
+                        }
                     }
                 }
                 Err(e) => retire.push((i, Retire::Errored(e.to_string()))),
@@ -824,24 +677,22 @@ fn worker_loop(
         for (i, why) in retire {
             let s = slots.swap_remove(i);
             scheduler.swap_remove(i);
-            kv.release_slot(&s);
+            kv.release_lane(&s.lane);
+            let Slot { request_id, events, submitted, lane, .. } = s;
             match why {
                 Retire::Done(reason) => {
                     preempts_since_done = 0;
-                    metrics.on_done(s.generated.len(), s.job.submitted.elapsed());
-                    let _ = s.job.events.send(TokenEvent::Done {
-                        request_id: s.job.request_id,
-                        tokens: s.generated,
+                    metrics.on_done(lane.tokens_emitted(), submitted.elapsed());
+                    let _ = events.send(TokenEvent::Done {
+                        request_id,
+                        tokens: lane.into_finished(),
                         reason,
                     });
                 }
-                Retire::Cancelled => metrics.on_cancel(s.generated.len()),
+                Retire::Cancelled => metrics.on_cancel(lane.tokens_emitted()),
                 Retire::Errored(message) => {
                     metrics.on_error();
-                    let _ = s
-                        .job
-                        .events
-                        .send(TokenEvent::Error { request_id: s.job.request_id, message });
+                    let _ = events.send(TokenEvent::Error { request_id, message });
                 }
             }
         }
@@ -907,6 +758,9 @@ mod tests {
         assert_eq!(snap.completed, 16);
         assert_eq!(snap.tokens_out, 16 * 6);
         assert!(snap.batch_steps > 0);
+        // Every request's prompt ran as exactly one single-pass span.
+        assert_eq!(snap.prefill_spans, 16);
+        assert_eq!(snap.prefill_tokens, 16);
         c.shutdown();
     }
 
@@ -999,6 +853,55 @@ mod tests {
         }
         assert_eq!(t, solo);
         c.shutdown();
+    }
+
+    #[test]
+    fn chunked_prefill_does_not_change_tokens() {
+        // Chunking changes step composition and timing only: the same
+        // workload must stream identical tokens at any chunk setting.
+        let run = |prefill_chunk: usize| -> Vec<Vec<i64>> {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                prefill_chunk,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+            let handles: Vec<_> = (0..6)
+                .map(|i| {
+                    c.submit(Request::greedy("opt-tiny", vec![i as i64 + 1; 40], 8)).unwrap()
+                })
+                .collect();
+            let out = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+            c.shutdown();
+            out
+        };
+        let single_pass = run(0);
+        for chunk in [1usize, 7, 64] {
+            assert_eq!(run(chunk), single_pass, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_splits_spans() {
+        // A 40-token prompt under an 8-token chunk budget must take
+        // ceil(40/8) = 5 spans; single-pass takes exactly 1.
+        for (chunk, want_spans) in [(0usize, 1u64), (8, 5)] {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 2,
+                policy: SchedulerPolicy::RoundRobin,
+                prefill_chunk: chunk,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+            let toks =
+                c.submit(Request::greedy("opt-tiny", vec![3; 40], 4)).unwrap().wait().unwrap();
+            assert_eq!(toks.len(), 4);
+            let snap = c.metrics.snapshot();
+            assert_eq!(snap.prefill_spans, want_spans, "chunk {chunk}");
+            assert_eq!(snap.prefill_tokens, 40, "chunk {chunk}");
+            c.shutdown();
+        }
     }
 
     #[test]
@@ -1104,6 +1007,7 @@ mod tests {
             kv_budget_bytes: 288 * 100,
             kv_policy: KvPolicy::Paged { block_tokens: 16 },
             max_batch: 0,
+            prefill_chunk: 0,
         });
         assert_eq!(paged, unbounded);
         assert!(paged.iter().all(|t| t.len() == 120));
@@ -1125,6 +1029,7 @@ mod tests {
                 kv_budget_bytes: 16 * 100,
                 kv_policy,
                 max_batch: 0,
+                prefill_chunk: 0,
             });
             c.add_pool("opt-tiny", 1, BackendFactory::sim_failing("opt-tiny", 64, 4));
             for i in 0..8i64 {

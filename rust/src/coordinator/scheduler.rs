@@ -19,6 +19,16 @@
 //! mirrors slot-table churn via [`Scheduler::swap_remove`], so policy
 //! state tracks the *same index space* as the slot table even as slots
 //! retire and admission reuses indices.
+//!
+//! For **chunked prefill** (`CoordinatorConfig::prefill_chunk > 0`) the
+//! scheduler also tracks a per-slot aging counter: a lane still feeding
+//! its initial context that gets no share of the step's prefill token
+//! budget ages ([`Scheduler::note_prefill`]), and the budget is
+//! allocated most-starved-first ([`Scheduler::prefill_order`]) so a
+//! steady decode load can bound — but never starve — a long prompt's
+//! progress. The step composition itself lives in
+//! [`super::lane::plan_step`]; this module only owns the per-slot
+//! policy state, mirrored through the same churn calls as `progress`.
 
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,11 +77,15 @@ pub struct Scheduler {
     /// optimistic estimate; `note_progress` overwrites it with ground
     /// truth after the step completes.
     progress: Vec<usize>,
+    /// Consecutive steps each slot has sat in prefill without receiving
+    /// any of the chunked-prefill token budget (progress-based aging;
+    /// see [`Scheduler::prefill_order`]).
+    waited: Vec<u64>,
 }
 
 impl Scheduler {
     pub fn new(policy: SchedulerPolicy) -> Scheduler {
-        Scheduler { policy, cursor: 0, progress: Vec::new() }
+        Scheduler { policy, cursor: 0, progress: Vec::new(), waited: Vec::new() }
     }
 
     pub fn policy(&self) -> SchedulerPolicy {
@@ -90,6 +104,7 @@ impl Scheduler {
         assert!(n > 0, "pick_batch on empty slot table");
         let max = max.max(1).min(n);
         self.progress.resize(n, 0);
+        self.waited.resize(n, 0);
         let mut picked: Vec<usize> = match self.policy {
             SchedulerPolicy::Fcfs => (0..max).collect(),
             SchedulerPolicy::RoundRobin => {
@@ -125,18 +140,49 @@ impl Scheduler {
     }
 
     /// Mirror a `Vec::swap_remove(idx)` on the slot table: the last
-    /// slot's progress moves into `idx`, the table shrinks by one.
+    /// slot's per-slot state moves into `idx`, the table shrinks by one.
     pub fn swap_remove(&mut self, idx: usize) {
         if idx < self.progress.len() {
             self.progress.swap_remove(idx);
         }
+        if idx < self.waited.len() {
+            self.waited.swap_remove(idx);
+        }
     }
 
-    /// Reset progress tracking for a slot that now holds a new request
+    /// Reset per-slot tracking for a slot that now holds a new request
     /// (after admission re-uses an index).
     pub fn reset_slot(&mut self, idx: usize) {
         if idx < self.progress.len() {
             self.progress[idx] = 0;
+        }
+        if idx < self.waited.len() {
+            self.waited[idx] = 0;
+        }
+    }
+
+    /// Order prefill-lane indices for chunk-budget allocation:
+    /// most-starved first (descending aging counter), slot index as the
+    /// deterministic tie-break. With most-starved-first, a lane passed
+    /// over for `k` steps outranks every lane served since, so no
+    /// prefill lane waits more than (number of competing prefill lanes)
+    /// steps for its next share of the budget.
+    pub fn prefill_order(&self, idx: &mut Vec<usize>) {
+        idx.sort_by_key(|&i| {
+            (std::cmp::Reverse(self.waited.get(i).copied().unwrap_or(0)), i)
+        });
+    }
+
+    /// Report whether a prefill lane received any of this step's chunk
+    /// budget: served lanes reset their aging counter, passed-over lanes
+    /// age by one step.
+    pub fn note_prefill(&mut self, idx: usize, advanced: bool) {
+        if idx < self.waited.len() {
+            if advanced {
+                self.waited[idx] = 0;
+            } else {
+                self.waited[idx] += 1;
+            }
         }
     }
 
@@ -151,6 +197,7 @@ impl Scheduler {
     pub fn pick_victim(&mut self, n: usize) -> usize {
         assert!(n > 0, "pick_victim on empty slot table");
         self.progress.resize(n, 0);
+        self.waited.resize(n, 0);
         let mut best = 0;
         for i in 1..n {
             if self.progress[i] <= self.progress[best] {
@@ -550,6 +597,65 @@ mod tests {
         for _ in 0..7 {
             assert_eq!(vec![a.pick(3)], b.pick_batch(3, 1));
         }
+    }
+
+    // ---- prefill aging (chunked-prefill budget allocation) ----
+
+    #[test]
+    fn prefill_order_ranks_most_starved_first() {
+        let mut s = Scheduler::new(SchedulerPolicy::RoundRobin);
+        s.pick_batch(4, 4); // sizes the per-slot state
+        s.note_prefill(0, false);
+        s.note_prefill(0, false);
+        s.note_prefill(1, false);
+        s.note_prefill(2, true); // served: counter resets
+        let mut idx = vec![0, 1, 2, 3];
+        s.prefill_order(&mut idx);
+        // waited: [2, 1, 0, 0] -> starved first, index ties ascending.
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+        s.note_prefill(3, false);
+        s.note_prefill(3, false);
+        s.note_prefill(3, false);
+        let mut idx = vec![0, 1, 2, 3];
+        s.prefill_order(&mut idx);
+        assert_eq!(idx, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn prefill_aging_survives_churn() {
+        let mut s = Scheduler::new(SchedulerPolicy::Fcfs);
+        s.pick_batch(3, 3);
+        s.note_prefill(2, false);
+        s.note_prefill(2, false);
+        // Slot 0 retires; slot 2's aging (2) moves into index 0.
+        s.swap_remove(0);
+        let mut idx = vec![0, 1];
+        s.prefill_order(&mut idx);
+        assert_eq!(idx, vec![0, 1]);
+        // Admission reuses index 1: its counter must restart at 0.
+        s.note_prefill(1, false);
+        s.reset_slot(1);
+        let mut idx = vec![0, 1];
+        s.prefill_order(&mut idx);
+        assert_eq!(idx, vec![0, 1], "reset slot must not inherit aging");
+    }
+
+    #[test]
+    fn prefill_round_trips_between_two_starving_lanes() {
+        // Alternation emerges from aging alone: serve whichever ranks
+        // first, starve the other, repeat.
+        let mut s = Scheduler::new(SchedulerPolicy::RoundRobin);
+        s.pick_batch(2, 2);
+        let mut served = Vec::new();
+        for _ in 0..6 {
+            let mut idx = vec![0, 1];
+            s.prefill_order(&mut idx);
+            let winner = idx[0];
+            served.push(winner);
+            s.note_prefill(winner, true);
+            s.note_prefill(idx[1], false);
+        }
+        assert_eq!(served, vec![0, 1, 0, 1, 0, 1]);
     }
 
     // ---- KV budget ----

@@ -9,37 +9,56 @@
 //!   ([`Workload::generate`]);
 //! * a wall-clock load runner against a live [`Coordinator`]
 //!   ([`run_open_loop`]) — real threads, real channels, real time;
-//! * a **virtual-time discrete-event load harness** ([`run_virtual`])
-//!   that replays the same workload through the same continuous-batching
-//!   machinery (slot tables, [`Scheduler`] policies, [`KvBudget`] or
-//!   paged [`KvPager`] admission with preemption, the [`StepModel`]
-//!   batched latency model) with no threads and no wall clock — every
-//!   run with the same seed is bit-identical, preemption included, so
-//!   throughput/latency tradeoffs become a regression-trackable surface
-//!   (`benches/serving_load.rs` → `BENCH_serving.json`).
+//! * a **virtual-time discrete-event load harness** ([`run_virtual`],
+//!   or [`run_virtual_plan`] for a hand-built request mix) that replays
+//!   the same workload through the same continuous-batching machinery —
+//!   the shared lane-state core ([`super::lane`]): slot tables,
+//!   [`Scheduler`] policies, [`KvState`] admission with paged preemption
+//!   and resume carry, chunked or single-pass prefill spans, and the
+//!   [`StepModel`] mixed-step latency model — with no threads and no
+//!   wall clock. Every run with the same seed is bit-identical,
+//!   preemption included, so throughput/latency tradeoffs become a
+//!   regression-trackable surface (`benches/serving_load.rs` →
+//!   `BENCH_serving.json`).
+//!
+//! The virtual harness and the threaded worker loop intentionally share
+//! every state transition via `coordinator::lane`; only the event loop
+//! (virtual clock vs threads), the queue plumbing, and the metrics
+//! differ. Greedy token streams are a pure function of (model, prompt)
+//! in the sim backend, so the two paths must agree stream-for-stream —
+//! asserted in `tests/integration_serving.rs`.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::numerics::{SampleParams, Sampler};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 use super::backend::{Backend, SimBackend, StepModel};
-use super::scheduler::{KvBudget, KvPager, KvPolicy, Scheduler, SchedulerPolicy};
+use super::lane::{plan_step, Absorbed, Admit, HoldsLane, KvState, Lane, PlannedLane, ResumeState};
+use super::scheduler::{KvPolicy, Scheduler, SchedulerPolicy};
 use super::{Coordinator, Request, RequestHandle, TokenEvent};
 
 /// Length distribution for prompts/outputs.
 #[derive(Clone, Copy, Debug)]
 pub enum LenDist {
+    /// Every sample is exactly this long.
     Fixed(usize),
     /// Uniform in [lo, hi].
     Uniform(usize, usize),
     /// Geometric-ish: min + exponential tail with the given mean extra.
-    LongTail { min: usize, mean_extra: f64, cap: usize },
+    LongTail {
+        /// Minimum length.
+        min: usize,
+        /// Mean of the exponential tail added to `min`.
+        mean_extra: f64,
+        /// Hard cap on the sampled length.
+        cap: usize,
+    },
 }
 
 impl LenDist {
+    /// Draw one length.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         match *self {
             LenDist::Fixed(n) => n,
@@ -54,13 +73,19 @@ impl LenDist {
 /// Workload specification.
 #[derive(Clone, Debug)]
 pub struct Workload {
+    /// Model (pool) every request targets.
     pub model: String,
     /// Offered request rate, requests/second (open loop).
     pub rate: f64,
+    /// Number of requests to generate.
     pub n_requests: usize,
+    /// Prompt length distribution.
     pub prompt_len: LenDist,
+    /// Output length distribution.
     pub output_len: LenDist,
+    /// Vocabulary size prompts draw tokens from.
     pub vocab: usize,
+    /// Base seed: same seed, same workload, bit for bit.
     pub seed: u64,
 }
 
@@ -80,7 +105,7 @@ impl Workload {
                     model: self.model.clone(),
                     prompt,
                     max_new_tokens: o_len,
-                    params: SampleParams::greedy(),
+                    params: crate::numerics::SampleParams::greedy(),
                     eos_token: None,
                     seed: self.seed ^ i as u64,
                 };
@@ -93,8 +118,11 @@ impl Workload {
 /// Results of one load point.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
+    /// Offered rate, requests/second.
     pub offered_rate: f64,
+    /// Requests that completed.
     pub completed: usize,
+    /// Wall time of the run, seconds.
     pub wall_s: f64,
     /// Achieved output tokens/second.
     pub tokens_per_s: f64,
@@ -198,10 +226,13 @@ fn summary_or_zero(samples: &[f64]) -> Summary {
 /// Configuration for the deterministic virtual-time serving simulation.
 #[derive(Clone, Debug)]
 pub struct VirtualConfig {
+    /// Simulated worker (device) count.
     pub workers: usize,
+    /// Max requests per worker slot table.
     pub max_active: usize,
     /// Max lanes per fused step; 0 means `max_active`.
     pub max_batch: usize,
+    /// Token-level scheduling policy.
     pub policy: SchedulerPolicy,
     /// KV bytes per context token (0 disables admission control).
     pub kv_bytes_per_token: u64,
@@ -210,11 +241,16 @@ pub struct VirtualConfig {
     /// Budget accounting: worst-case reservation or paged
     /// reserve-as-you-grow with preemption.
     pub kv_policy: KvPolicy,
+    /// Chunked prefill: max prompt tokens per fused step (0 = off,
+    /// single-pass prefill). Mirrors
+    /// [`super::CoordinatorConfig::prefill_chunk`].
+    pub prefill_chunk: usize,
     /// Batched per-step latency model.
     pub step: StepModel,
 }
 
 impl VirtualConfig {
+    /// A config with unbounded KV and single-pass prefill.
     pub fn new(
         policy: SchedulerPolicy,
         workers: usize,
@@ -229,6 +265,7 @@ impl VirtualConfig {
             kv_bytes_per_token: 0,
             kv_budget_bytes: u64::MAX,
             kv_policy: KvPolicy::Reserve,
+            prefill_chunk: 0,
             step,
         }
     }
@@ -238,27 +275,44 @@ impl VirtualConfig {
 /// the start of the run).
 #[derive(Clone, Debug, PartialEq)]
 pub struct VirtualRecord {
+    /// Index of the request in the workload plan.
     pub request_id: usize,
+    /// Arrival time.
     pub arrival_s: f64,
+    /// First-token emission time.
     pub first_token_s: f64,
+    /// Completion time.
     pub done_s: f64,
+    /// The generated stream (empty for rejected requests).
     pub tokens: Vec<i64>,
+    /// Emission time of each token in `tokens` (same length; preempted
+    /// requests keep their original emission times — recompute does not
+    /// re-emit). Lets callers compute per-request or per-class TPOT,
+    /// e.g. the bench's neighbor-interference cell.
+    pub token_times: Vec<f64>,
 }
 
 /// Results of one virtual load run. Every field is a pure function of
 /// (workload seed, config) — two runs are bit-identical.
 #[derive(Clone, Debug)]
 pub struct VirtualReport {
+    /// The scheduling policy the run used.
     pub policy: SchedulerPolicy,
+    /// Offered rate, requests/second.
     pub offered_rate: f64,
+    /// Per-request lifetimes, indexed by request id.
     pub records: Vec<VirtualRecord>,
     /// Requests refused at admission (KV need exceeds the budget).
     pub rejected: usize,
+    /// Time-to-first-token distribution, seconds.
     pub ttft: Summary,
+    /// Inter-token latency distribution, seconds.
     pub tpot: Summary,
+    /// End-to-end request latency distribution, seconds.
     pub request_latency: Summary,
     /// Virtual makespan, seconds.
     pub wall_s: f64,
+    /// Achieved output tokens/second over the makespan.
     pub tokens_per_s: f64,
     /// Peak simultaneously-active requests across all workers.
     pub max_concurrent: usize,
@@ -275,69 +329,23 @@ pub struct VirtualReport {
     pub kv_capacity_blocks: usize,
 }
 
+/// A virtual slot: the shared [`Lane`] plus virtual-time bookkeeping.
 struct VSlot {
     rid: usize,
     arrival_s: f64,
-    request: Request,
-    sampler: Sampler,
     session: Box<dyn std::any::Any>,
-    generated: Vec<i64>,
-    prompt_fed: usize,
-    /// Tokens of `generated` that predate this admission (recompute
-    /// prefill re-feeds them; they are not re-recorded).
-    resumed: usize,
-    /// Reserve policy: bytes held. Paged policy: blocks held.
-    kv_reserved: u64,
-    kv_blocks: usize,
+    lane: Lane,
     first_token_s: Option<f64>,
     last_token_s: f64,
+    token_times: Vec<f64>,
 }
 
-impl VSlot {
-    /// Prefill span: context tokens to feed before sampling (re)starts.
-    fn prefill_target(&self) -> usize {
-        self.request.prompt.len() + self.resumed
+impl HoldsLane for VSlot {
+    fn lane(&self) -> &Lane {
+        &self.lane
     }
-
-    /// Token to feed at prefill position `i` (prompt, then resumed).
-    fn prefill_token(&self, i: usize) -> i64 {
-        if i < self.request.prompt.len() {
-            self.request.prompt[i]
-        } else {
-            self.generated[i - self.request.prompt.len()]
-        }
-    }
-
-    /// Context size after this slot's next step — what the pager must
-    /// cover before the lane may advance (mirrors the threaded worker's
-    /// `Slot::kv_target`: the first sample rides the last prefill feed).
-    fn kv_target(&self) -> usize {
-        if self.prompt_fed < self.prefill_target() {
-            self.prompt_fed + 1
-        } else {
-            self.request.prompt.len() + self.generated.len()
-        }
-    }
-
-    /// Context position of the next fed token (drives the step model's
-    /// per-lane KV-read term).
-    fn position(&self) -> usize {
-        self.kv_target() - 1
-    }
-}
-
-/// Per-worker KV accounting for the virtual harness.
-enum VKv {
-    Reserve(KvBudget),
-    Paged(KvPager),
-}
-
-impl VKv {
-    fn release_slot(&mut self, s: &VSlot) {
-        match self {
-            VKv::Reserve(b) => b.release(s.kv_reserved),
-            VKv::Paged(p) => p.release(s.kv_blocks),
-        }
+    fn lane_mut(&mut self) -> &mut Lane {
+        &mut self.lane
     }
 }
 
@@ -350,27 +358,30 @@ struct VPending {
     resume: Option<VResume>,
 }
 
+/// The shared resume carry plus the virtual-only timing that must
+/// survive a preemption (emission timestamps are history, not state the
+/// lane recomputes).
 struct VResume {
-    generated: Vec<i64>,
-    sampler: Sampler,
+    state: ResumeState,
     first_token_s: Option<f64>,
     last_token_s: f64,
+    token_times: Vec<f64>,
 }
 
 impl VPending {
     /// Context that must be (re)fed before new decoding.
     fn init_ctx(&self) -> usize {
-        self.request.prompt.len() + self.resume.as_ref().map_or(0, |r| r.generated.len())
+        super::lane::init_context(&self.request, self.resume.as_ref().map(|r| &r.state))
     }
 }
 
 struct VWorker {
     backend: SimBackend,
     scheduler: Scheduler,
-    kv: VKv,
+    kv: KvState,
     slots: Vec<VSlot>,
-    /// Lane indices of the in-flight fused step (empty = idle).
-    batch: Vec<usize>,
+    /// The in-flight fused step's plan (empty = idle).
+    batch: Vec<PlannedLane>,
     busy_until: f64,
 }
 
@@ -379,45 +390,53 @@ struct VWorker {
 /// backend the threaded coordinator uses, so greedy streams here match
 /// live serving; latencies come from the batched [`StepModel`].
 pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, String> {
+    let plan: Vec<(f64, Request)> = wl
+        .generate()
+        .into_iter()
+        .map(|(at, req)| (at.as_secs_f64(), req))
+        .collect();
+    run_virtual_plan(&wl.model, wl.vocab, wl.rate, plan, vc)
+}
+
+/// [`run_virtual`] over an explicit request plan: `(arrival_s, request)`
+/// pairs with non-decreasing arrival times. Lets callers build mixes a
+/// single [`LenDist`] cannot express — e.g. the bench's long-prompt
+/// interference cell, which injects a known set of long prompts into a
+/// Poisson stream of short neighbors and then reads per-class latency
+/// out of the records.
+pub fn run_virtual_plan(
+    model: &str,
+    vocab: usize,
+    offered_rate: f64,
+    plan: Vec<(f64, Request)>,
+    vc: &VirtualConfig,
+) -> Result<VirtualReport, String> {
     if vc.workers == 0 || vc.max_active == 0 {
         return Err("virtual config needs >= 1 worker and >= 1 slot".into());
     }
+    if plan.windows(2).any(|w| w[0].0 > w[1].0) {
+        return Err("virtual plan arrivals must be non-decreasing".into());
+    }
     let max_batch = if vc.max_batch == 0 { vc.max_active } else { vc.max_batch };
 
-    let mut arrivals: VecDeque<(f64, usize, Request)> = wl
-        .generate()
+    let mut arrivals: VecDeque<(f64, usize, Request)> = plan
         .into_iter()
         .enumerate()
-        .map(|(i, (at, req))| (at.as_secs_f64(), i, req))
+        .map(|(i, (at, req))| (at, i, req))
         .collect();
     let n_requests = arrivals.len();
     let mut queue: VecDeque<VPending> = VecDeque::new();
     let mut workers: Vec<VWorker> = (0..vc.workers)
         .map(|_| VWorker {
-            backend: SimBackend::new(&wl.model, wl.vocab),
+            backend: SimBackend::new(model, vocab),
             scheduler: Scheduler::new(vc.policy),
-            kv: match vc.kv_policy {
-                KvPolicy::Reserve => VKv::Reserve(KvBudget::new(vc.kv_budget_bytes)),
-                KvPolicy::Paged { block_tokens } => VKv::Paged(KvPager::new(
-                    vc.kv_budget_bytes,
-                    vc.kv_bytes_per_token,
-                    block_tokens,
-                )),
-            },
+            kv: KvState::new(vc.kv_policy, vc.kv_budget_bytes, vc.kv_bytes_per_token),
             slots: Vec::new(),
             batch: Vec::new(),
             busy_until: 0.0,
         })
         .collect();
-    let kv_capacity_blocks = match &workers[0].kv {
-        VKv::Paged(p) if p.capacity_blocks() != usize::MAX => p.capacity_blocks(),
-        _ => 0,
-    };
-    // Bytes one pager block stands for (0 when accounting is disabled).
-    let block_bytes = match &workers[0].kv {
-        VKv::Paged(p) => vc.kv_bytes_per_token.saturating_mul(p.block_tokens() as u64),
-        VKv::Reserve(_) => 0,
-    };
+    let kv_capacity_blocks = workers[0].kv.capacity_blocks().unwrap_or(0);
 
     let mut records: Vec<Option<VirtualRecord>> = (0..n_requests).map(|_| None).collect();
     let mut tpot_samples: Vec<f64> = Vec::new();
@@ -430,10 +449,8 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
 
     // Admit as many queued requests as fit, FIFO with no overtaking
     // (mirrors the threaded pool's head-peek admission queue). Each
-    // request goes to the least-loaded worker that can hold it. Under
-    // the paged policy "fits" keys on the *current* context plus a
-    // half-growth headroom gate, not the worst case — the whole point
-    // of reserve-as-you-grow.
+    // request goes to the least-loaded worker that can hold it, using
+    // the same KvState::admit gate the threaded worker loop runs.
     let mut dispatch = |queue: &mut VecDeque<VPending>,
                         workers: &mut Vec<VWorker>,
                         records: &mut Vec<Option<VirtualRecord>>,
@@ -443,100 +460,62 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
                         peak_blocks: &mut usize,
                         now: f64| {
         while let Some(head) = queue.front() {
-            let need = head.request.kv_need(vc.kv_bytes_per_token);
-            let worst_tokens = head.request.prompt.len() + head.request.max_new_tokens;
-            let impossible = match &workers[0].kv {
-                VKv::Reserve(_) => need > vc.kv_budget_bytes,
-                VKv::Paged(p) => p.blocks_for(worst_tokens) > p.capacity_blocks(),
-            };
+            let init_ctx = head.init_ctx();
+            let worst = head.request.worst_case_tokens();
+            let mut best: Option<usize> = None;
+            let mut impossible = false;
+            for (i, w) in workers.iter().enumerate() {
+                match w.kv.admit(init_ctx, worst, w.slots.iter().map(|s| &s.lane)) {
+                    Admit::Reject => {
+                        // Capacity is uniform across workers: impossible
+                        // here is impossible everywhere.
+                        impossible = true;
+                        break;
+                    }
+                    Admit::Take if w.slots.len() < vc.max_active => {
+                        if best.map_or(true, |b| w.slots.len() < workers[b].slots.len()) {
+                            best = Some(i);
+                        }
+                    }
+                    _ => {}
+                }
+            }
             if impossible {
-                // Impossible on any worker: refuse, record an empty
-                // stream so the report stays one-row-per-request.
+                // Refuse, and record an empty stream so the report
+                // stays one-row-per-request.
                 records[head.rid] = Some(VirtualRecord {
                     request_id: head.rid,
                     arrival_s: head.arrival_s,
                     first_token_s: now,
                     done_s: now,
                     tokens: Vec::new(),
+                    token_times: Vec::new(),
                 });
                 *rejected += 1;
                 queue.pop_front();
                 continue;
             }
-            let init_ctx = head.init_ctx();
-            let mut best: Option<usize> = None;
-            for (i, w) in workers.iter().enumerate() {
-                if w.slots.len() >= vc.max_active {
-                    continue;
-                }
-                let fits = match &w.kv {
-                    VKv::Reserve(b) => {
-                        b.capacity().saturating_sub(b.reserved()) >= need
-                    }
-                    VKv::Paged(p) => {
-                        // Σ expected footprints (held + half remaining
-                        // growth) of active slots + candidate ≤ capacity
-                        // — see `KvPager::expected_blocks`. Each slot's
-                        // estimate is clamped to the blocks it already
-                        // holds (a resumed slot mid-re-prefill has a
-                        // small kv_target but owns its prior context),
-                        // which keeps the gate ⇒ physical-fit proof
-                        // sound.
-                        let committed: usize = w
-                            .slots
-                            .iter()
-                            .map(|s| {
-                                p.expected_blocks(
-                                    s.kv_target(),
-                                    s.request.prompt.len() + s.request.max_new_tokens,
-                                )
-                                .max(s.kv_blocks)
-                            })
-                            .sum();
-                        let candidate = p.expected_blocks(init_ctx + 1, worst_tokens);
-                        committed.saturating_add(candidate) <= p.capacity_blocks()
-                    }
-                };
-                if fits && best.map_or(true, |b| w.slots.len() < workers[b].slots.len()) {
-                    best = Some(i);
-                }
-            }
             let Some(wi) = best else { break };
             let pending = queue.pop_front().unwrap();
             let w = &mut workers[wi];
-            let (kv_reserved, kv_blocks) = match &mut w.kv {
-                VKv::Reserve(b) => {
-                    assert!(b.try_reserve(need));
-                    *peak_kv = (*peak_kv).max(b.reserved());
-                    (need, 0)
-                }
-                VKv::Paged(p) => {
-                    let blocks = p.admit_blocks(init_ctx);
-                    assert!(p.try_reserve(blocks));
-                    *peak_blocks = (*peak_blocks).max(p.blocks_in_use());
-                    *peak_kv = (*peak_kv).max(p.blocks_in_use() as u64 * block_bytes);
-                    (0, blocks)
-                }
-            };
+            let holdings = w.kv.reserve_admitted(init_ctx, worst);
+            *peak_blocks = (*peak_blocks).max(w.kv.blocks_in_use());
+            *peak_kv = (*peak_kv).max(w.kv.bytes_in_use());
             let session = w.backend.new_session().expect("sim session");
             let seed = pending.request.seed ^ (pending.rid as u64 + 1);
-            let (generated, sampler, first_token_s, last_token_s) = match pending.resume {
-                Some(r) => (r.generated, r.sampler, r.first_token_s, r.last_token_s),
-                None => (Vec::new(), Sampler::new(seed), None, 0.0),
+            let (resume, first_token_s, last_token_s, token_times) = match pending.resume {
+                Some(r) => (Some(r.state), r.first_token_s, r.last_token_s, r.token_times),
+                None => (None, None, 0.0, Vec::new()),
             };
+            let lane = Lane::admitted(pending.request, seed, resume, holdings);
             w.slots.push(VSlot {
                 rid: pending.rid,
                 arrival_s: pending.arrival_s,
-                request: pending.request,
-                sampler,
                 session,
-                resumed: generated.len(),
-                generated,
-                prompt_fed: 0,
-                kv_reserved,
-                kv_blocks,
+                lane,
                 first_token_s,
                 last_token_s,
+                token_times,
             });
             let idx = w.slots.len() - 1;
             w.scheduler.reset_slot(idx);
@@ -645,45 +624,23 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
 
         // (Re)start fused steps on every worker that has work but no
         // in-flight batch — including idle workers that just admitted.
-        // Under the paged policy each picked lane must first secure the
-        // blocks covering its next context position; when the pager
-        // cannot supply them, the lowest-progress slot is preempted —
-        // its blocks released, its stream state pushed to the *front*
-        // of the queue for recompute-on-readmit — and the batch is
-        // re-picked. Terminates: each round removes a slot, and a lone
-        // slot's worst case always fits (admission rejected it
-        // otherwise).
+        // Step composition (lane picks, prefill spans, paged growth,
+        // preemption) is the shared `plan_step`; evicted slots carry
+        // their stream state to the *front* of the queue for
+        // recompute-on-readmit.
         let now = wall_s;
         for w in workers.iter_mut() {
             if !w.batch.is_empty() || w.slots.is_empty() {
                 continue;
             }
-            let picked = loop {
-                let picked = w.scheduler.pick_batch(w.slots.len(), max_batch);
-                let pager = match &mut w.kv {
-                    VKv::Reserve(_) => break picked, // pre-reserved at admission
-                    VKv::Paged(p) => p,
-                };
-                let mut extra = 0usize;
-                for &i in &picked {
-                    let s = &w.slots[i];
-                    extra += pager.blocks_for(s.kv_target()).saturating_sub(s.kv_blocks);
-                }
-                if extra <= pager.free_blocks() {
-                    for &i in &picked {
-                        let s = &mut w.slots[i];
-                        s.kv_blocks =
-                            pager.try_grow(s.kv_blocks, s.kv_target()).expect("growth fits");
-                    }
-                    peak_kv_blocks = peak_kv_blocks.max(pager.blocks_in_use());
-                    peak_kv_reserved =
-                        peak_kv_reserved.max(pager.blocks_in_use() as u64 * block_bytes);
-                    break picked;
-                }
-                let victim = w.scheduler.pick_victim(w.slots.len());
-                let s = w.slots.swap_remove(victim);
-                w.scheduler.swap_remove(victim);
-                w.kv.release_slot(&s);
+            let (plan, evicted) = plan_step(
+                &mut w.scheduler,
+                &mut w.kv,
+                &mut w.slots,
+                max_batch,
+                vc.prefill_chunk,
+            );
+            for s in evicted {
                 preemptions += 1;
                 if preemptions > 1000 + 100 * n_requests {
                     // Preemption terminates (the max-progress slot is
@@ -695,28 +652,27 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
                          for {n_requests} requests"
                     ));
                 }
+                let (request, state) = s.lane.into_resume();
                 queue.push_front(VPending {
                     arrival_s: s.arrival_s,
                     rid: s.rid,
-                    request: s.request,
+                    request,
                     resume: Some(VResume {
-                        generated: s.generated,
-                        sampler: s.sampler,
+                        state,
                         first_token_s: s.first_token_s,
                         last_token_s: s.last_token_s,
+                        token_times: s.token_times,
                     }),
                 });
-                if w.slots.is_empty() {
-                    break Vec::new();
-                }
-            };
-            if picked.is_empty() {
+            }
+            peak_kv_blocks = peak_kv_blocks.max(w.kv.blocks_in_use());
+            peak_kv_reserved = peak_kv_reserved.max(w.kv.bytes_in_use());
+            if plan.is_empty() {
                 continue;
             }
-            let positions: Vec<usize> =
-                picked.iter().map(|&i| w.slots[i].position()).collect();
-            w.busy_until = now + vc.step.step_s(&positions);
-            w.batch = picked;
+            let works = plan.works(&w.slots);
+            w.busy_until = now + vc.step.mixed_step_s(&works);
+            w.batch = plan.lanes;
         }
     }
 
@@ -729,7 +685,7 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
     let total_tokens: usize = completed.iter().map(|r| r.tokens.len()).sum();
     Ok(VirtualReport {
         policy: vc.policy,
-        offered_rate: wl.rate,
+        offered_rate,
         rejected,
         ttft: summary_or_zero(&ttfts),
         tpot: summary_or_zero(&tpot_samples),
@@ -745,9 +701,10 @@ pub fn run_virtual(wl: &Workload, vc: &VirtualConfig) -> Result<VirtualReport, S
     })
 }
 
-/// Complete one fused step on `w` at virtual time `now`: decode every
-/// lane, emit/record tokens, retire finished slots (mirrored into the
-/// scheduler and KV budget, exactly like the threaded worker loop).
+/// Complete one fused step on `w` at virtual time `now`: feed every
+/// planned lane its span, absorb through the shared lane state machine,
+/// record emissions, and retire finished slots (mirrored into the
+/// scheduler and KV accounting, exactly like the threaded worker loop).
 fn finish_step(
     w: &mut VWorker,
     now: f64,
@@ -756,47 +713,45 @@ fn finish_step(
 ) {
     let batch = std::mem::take(&mut w.batch);
     let mut retire: Vec<usize> = Vec::new();
-    for &i in &batch {
-        let s = &mut w.slots[i];
-        let token_in = if s.prompt_fed < s.prefill_target() {
-            s.prefill_token(s.prompt_fed)
-        } else {
-            *s.generated.last().expect("generated nonempty after prefill")
-        };
-        let logits = w.backend.decode(&mut s.session, token_in).expect("sim decode");
-        if s.prompt_fed < s.prefill_target() {
-            s.prompt_fed += 1;
-            if s.prompt_fed < s.prefill_target() {
-                w.scheduler.note_progress(i, s.generated.len());
-                continue;
+    for p in &batch {
+        let s = &mut w.slots[p.slot];
+        let feed = s.lane.feed_span(p.span);
+        let mut logits = None;
+        for token in feed {
+            logits = Some(w.backend.decode(&mut s.session, token).expect("sim decode"));
+        }
+        let logits = logits.expect("span is non-empty");
+        match s.lane.absorb(p.span, &logits) {
+            Absorbed::Prefilling => {
+                w.scheduler.note_progress(p.slot, s.lane.tokens_emitted());
             }
-        }
-        let token = s.sampler.sample(&logits, &s.request.params) as i64;
-        s.generated.push(token);
-        if s.first_token_s.is_none() {
-            s.first_token_s = Some(now);
-        } else {
-            tpot_samples.push(now - s.last_token_s);
-        }
-        s.last_token_s = now;
-        w.scheduler.note_progress(i, s.generated.len());
-        let eos_hit = s.request.eos_token == Some(token);
-        let len_hit = s.generated.len() >= s.request.max_new_tokens;
-        if eos_hit || len_hit {
-            retire.push(i);
+            Absorbed::Token { finished, .. } => {
+                if s.first_token_s.is_none() {
+                    s.first_token_s = Some(now);
+                } else {
+                    tpot_samples.push(now - s.last_token_s);
+                }
+                s.last_token_s = now;
+                s.token_times.push(now);
+                w.scheduler.note_progress(p.slot, s.lane.tokens_emitted());
+                if finished.is_some() {
+                    retire.push(p.slot);
+                }
+            }
         }
     }
     retire.sort_by(|a, b| b.cmp(a));
     for i in retire {
         let s = w.slots.swap_remove(i);
         w.scheduler.swap_remove(i);
-        w.kv.release_slot(&s);
+        w.kv.release_lane(&s.lane);
         records[s.rid] = Some(VirtualRecord {
             request_id: s.rid,
             arrival_s: s.arrival_s,
             first_token_s: s.first_token_s.unwrap_or(now),
             done_s: now,
-            tokens: s.generated,
+            tokens: s.lane.into_finished(),
+            token_times: s.token_times,
         });
     }
 }
@@ -831,7 +786,7 @@ mod tests {
     }
 
     fn step_model() -> StepModel {
-        StepModel::from_config(&by_name("opt-tiny").unwrap(), &LpuConfig::asic_819gbs(), 1)
+        StepModel::from_config(&by_name("opt-1.3b").unwrap(), &LpuConfig::asic_819gbs(), 1)
     }
 
     #[test]
@@ -919,6 +874,20 @@ mod tests {
     }
 
     #[test]
+    fn virtual_records_token_times_aligned_with_streams() {
+        let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model());
+        let r = run_virtual(&wl(1000.0, 12), &vc).unwrap();
+        for rec in &r.records {
+            assert_eq!(rec.token_times.len(), rec.tokens.len());
+            // Emission times are non-decreasing, start at the first
+            // token, end at completion.
+            assert!(rec.token_times.windows(2).all(|w| w[0] <= w[1]));
+            assert_eq!(rec.token_times.first().copied(), Some(rec.first_token_s));
+            assert_eq!(rec.token_times.last().copied(), Some(rec.done_s));
+        }
+    }
+
+    #[test]
     fn virtual_tokens_match_threaded_coordinator() {
         // Greedy streams are a pure function of (model, prompt) in the
         // sim backend: the virtual harness and the live threaded
@@ -954,6 +923,33 @@ mod tests {
         let r = run_virtual(&wl(100.0, 10), &vc).unwrap();
         assert_eq!(r.rejected, 10);
         assert!(r.records.iter().all(|rec| rec.tokens.is_empty()));
+    }
+
+    #[test]
+    fn virtual_plan_entry_matches_generated_workload() {
+        // run_virtual is a thin wrapper: handing the generated plan to
+        // run_virtual_plan must reproduce it bit for bit.
+        let w = wl(800.0, 16);
+        let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model());
+        let a = run_virtual(&w, &vc).unwrap();
+        let plan: Vec<(f64, Request)> = w
+            .generate()
+            .into_iter()
+            .map(|(at, req)| (at.as_secs_f64(), req))
+            .collect();
+        let b = run_virtual_plan(&w.model, w.vocab, w.rate, plan, &vc).unwrap();
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.wall_s, b.wall_s);
+    }
+
+    #[test]
+    fn virtual_plan_rejects_unsorted_arrivals() {
+        let vc = VirtualConfig::new(SchedulerPolicy::Fcfs, 1, 2, step_model());
+        let plan = vec![
+            (1.0, Request::greedy("opt-tiny", vec![1], 2)),
+            (0.5, Request::greedy("opt-tiny", vec![2], 2)),
+        ];
+        assert!(run_virtual_plan("opt-tiny", 512, 1.0, plan, &vc).is_err());
     }
 
     #[test]
@@ -1000,6 +996,38 @@ mod tests {
             "SJF mean latency {} should not lose to FCFS {}",
             sjf.request_latency.mean,
             fcfs.request_latency.mean
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_virtual_step_lengths() {
+        // One long prompt among short decodes: single-pass prefill puts
+        // the whole prompt's KV sweep in one step; a 16-token chunk
+        // bound must strictly shrink the longest inter-token gap of the
+        // co-resident neighbor. The long prompt arrives after the
+        // neighbor has started decoding, so the interference lands in
+        // the neighbor's inter-token gaps (not its TTFT).
+        let mk_plan = || {
+            vec![
+                (0.0, Request::greedy("opt-tiny", vec![5], 64)), // neighbor
+                (0.02, Request::greedy("opt-tiny", vec![7; 512], 4)), // long prompt
+            ]
+        };
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model());
+        let single = run_virtual_plan("opt-tiny", 512, 1.0, mk_plan(), &vc).unwrap();
+        vc.prefill_chunk = 16;
+        let chunked = run_virtual_plan("opt-tiny", 512, 1.0, mk_plan(), &vc).unwrap();
+        // Streams identical, timing different.
+        assert_eq!(single.records[0].tokens, chunked.records[0].tokens);
+        assert_eq!(single.records[1].tokens, chunked.records[1].tokens);
+        let max_gap = |rec: &VirtualRecord| -> f64 {
+            rec.token_times.windows(2).map(|w| w[1] - w[0]).fold(0.0, f64::max)
+        };
+        assert!(
+            max_gap(&chunked.records[0]) < max_gap(&single.records[0]),
+            "chunked neighbor max gap {} !< single-pass {}",
+            max_gap(&chunked.records[0]),
+            max_gap(&single.records[0])
         );
     }
 }

@@ -153,6 +153,51 @@ impl GpuConfig {
         stream + batch as f64 * kv_one + sync
     }
 
+    /// Mixed fused-step latency: decode lanes plus prefill spans in one
+    /// step, the GPU-side counterpart of
+    /// [`crate::coordinator::StepModel::mixed_step_s`]. The weight shard
+    /// streams once for the whole step; each decode lane pays its
+    /// KV-prefix read, a prefill span pays the KV reads of every
+    /// position it covers (attention over the growing prefix), and the
+    /// per-layer all-reduce syncs are charged once per step over all
+    /// lanes (activations for the whole batch travel in one ring pass).
+    /// With all-decode work this equals
+    /// [`GpuConfig::decode_step_latency`] at the same positions.
+    pub fn mixed_step_latency(
+        &self,
+        model: &ModelConfig,
+        n: usize,
+        lanes: &[crate::coordinator::LaneWork],
+    ) -> f64 {
+        use crate::coordinator::LaneWork;
+        assert!(n >= 1 && !lanes.is_empty());
+        let shard = model.weight_bytes() / n as u64;
+        let util = self.utilization(shard) * 0.92f64.powi((n as f64).log2() as i32);
+        let bw = self.mem_bw * util;
+        let stream = shard as f64 / bw;
+        let mut kv = 0.0;
+        for work in lanes {
+            match *work {
+                LaneWork::Decode { position } => {
+                    kv += model.kv_read_bytes(position + 1) as f64 / n as f64 / bw;
+                }
+                LaneWork::Prefill { start, tokens } => {
+                    for i in 0..tokens {
+                        kv += model.kv_read_bytes(start + i + 1) as f64 / n as f64 / bw;
+                    }
+                }
+            }
+        }
+        let sync = if n > 1 {
+            let per_layer =
+                self.allreduce_time(lanes.len() as u64 * model.d_model as u64 * 2, n);
+            2.0 * model.n_layers as f64 * per_layer
+        } else {
+            0.0
+        };
+        stream + kv + sync
+    }
+
     /// Blocking ring all-reduce over the GPU interconnect.
     pub fn allreduce_time(&self, vector_bytes: u64, n: usize) -> f64 {
         if n <= 1 {
@@ -223,6 +268,33 @@ mod tests {
             let rel = (util - expect).abs() / expect;
             assert!(rel < 0.12, "{name}: model util {util:.3} vs paper {expect} (rel {rel:.3})");
         }
+    }
+
+    #[test]
+    fn mixed_step_all_decode_matches_fused_step() {
+        use crate::coordinator::LaneWork;
+        let g = GpuConfig::h100();
+        let m = by_name("opt-6.7b").unwrap();
+        for n in [1usize, 2] {
+            let works = vec![LaneWork::Decode { position: 512 }; 4];
+            let a = g.mixed_step_latency(&m, n, &works);
+            let b = g.decode_step_latency(&m, n, 512, 4);
+            let rel = (a - b).abs() / b;
+            assert!(rel < 1e-12, "n={n}: mixed {a} vs fused {b}");
+        }
+    }
+
+    #[test]
+    fn mixed_step_prefill_span_beats_serial_feeds() {
+        use crate::coordinator::LaneWork;
+        // One 128-token prefill span costs one weight stream; feeding
+        // those tokens as 128 separate steps costs 128 streams.
+        let g = GpuConfig::h100();
+        let m = by_name("opt-6.7b").unwrap();
+        let span = g.mixed_step_latency(&m, 1, &[LaneWork::Prefill { start: 0, tokens: 128 }]);
+        let serial: f64 =
+            (0..128).map(|p| g.mixed_step_latency(&m, 1, &[LaneWork::Decode { position: p }])).sum();
+        assert!(span < serial / 8.0, "span {span} vs serial {serial}");
     }
 
     #[test]

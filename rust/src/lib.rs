@@ -27,10 +27,17 @@
 //!   a KV-memory budget (worst-case reservation or a **paged
 //!   reserve-as-you-grow allocator** with lowest-progress preemption and
 //!   recompute-on-readmit), batched fused decode steps (weights stream
-//!   once per step), pluggable scheduler policies (FCFS / round-robin /
-//!   shortest-first), p50/p95/p99 TTFT+TPOT metrics with KV-utilization
-//!   and preemption gauges, a seeded Poisson load generator, and a
-//!   deterministic virtual-time load harness.
+//!   once per step), **single-pass or chunked prefill** (token-budgeted
+//!   prompt chunks interleaved with decode steps so long prompts stop
+//!   inflating neighbors' TPOT), pluggable scheduler policies (FCFS /
+//!   round-robin / shortest-first), p50/p95/p99 TTFT+TPOT metrics with
+//!   KV-utilization, preemption, and prefill gauges, a seeded Poisson
+//!   load generator, and a deterministic virtual-time load harness.
+//!   Submodules: [`coordinator::lane`] (the shared lane-state core both
+//!   serving paths drive), [`coordinator::scheduler`],
+//!   [`coordinator::backend`], [`coordinator::metrics`],
+//!   [`coordinator::workload`]. See `ARCHITECTURE.md` at the repo root
+//!   for the request lifecycle and a where-to-add-a-feature map.
 //! * [`server`] — a minimal threaded TCP/JSON-line server + client.
 //! * [`numerics`] — bit-accurate FP16 and the MAC-tree arithmetic model.
 //! * [`util`] — in-tree substrates: JSON, PRNG, stats, errors, mini

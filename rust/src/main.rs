@@ -29,10 +29,10 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefill-chunk N]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--prefill-chunk N]" },
 ];
 
 fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
@@ -244,6 +244,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         // unknown model above).
         return Err("--kv-policy paged needs --kv-budget-mb to bound the pager".into());
     }
+    // Chunked prefill: 0 (default) = single-pass prompts; N = at most N
+    // prompt tokens per fused step, interleaved with decode steps so a
+    // long prompt stops inflating co-batched streams' TPOT.
+    let prefill_chunk = args.opt_usize("prefill-chunk", 0)?;
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 8)?,
         policy,
@@ -251,11 +255,17 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         kv_budget_bytes: if kv_budget_mb == 0 { u64::MAX } else { kv_budget_mb << 20 },
         kv_policy,
         max_batch: args.opt_usize("max-batch", 0)?,
+        prefill_chunk,
     });
     coord.add_pool(&model, workers, factory);
     let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
+    let prefill_desc = if prefill_chunk == 0 {
+        "single-pass prefill".to_string()
+    } else {
+        format!("{prefill_chunk}-token chunked prefill")
+    };
     println!(
-        "serving '{model}' ({backend}, {} scheduling, {} KV) on {} with {workers} worker(s); Ctrl-C to stop",
+        "serving '{model}' ({backend}, {} scheduling, {} KV, {prefill_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
         policy.name(),
         kv_policy.name(),
         handle.addr
@@ -310,6 +320,7 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 4)?,
         policy,
+        prefill_chunk: args.opt_usize("prefill-chunk", 0)?,
         ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, args.opt_usize("workers", 2)?, factory);

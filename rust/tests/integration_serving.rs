@@ -8,12 +8,16 @@
 //! * the live threaded coordinator produces the same greedy streams as
 //!   the virtual harness;
 //! * admission never exceeds the KV budget (random configs/workloads);
-//! * no admitted request starves under RoundRobin.
+//! * no admitted request starves under RoundRobin;
+//! * chunked prefill changes step timing only — streams stay
+//!   bit-identical to single-pass runs per seed, and a long prompt's
+//!   interference on co-resident decode lanes shrinks.
 
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    run_open_loop, run_virtual, BackendFactory, Coordinator, CoordinatorConfig, KvPolicy,
-    LenDist, SchedulerPolicy, StepModel, VirtualConfig, Workload,
+    run_open_loop, run_virtual, run_virtual_plan, BackendFactory, Coordinator,
+    CoordinatorConfig, KvPolicy, LenDist, Request, SchedulerPolicy, StepModel, VirtualConfig,
+    Workload,
 };
 use lpu::model::by_name;
 use lpu::util::proptest::quick;
@@ -392,6 +396,110 @@ fn prop_paged_preemption_preserves_streams_and_completes() {
         }
         Ok(())
     });
+}
+
+// ---- chunked prefill ----
+
+/// Property: chunked-prefill streams are bit-identical to unchunked
+/// (single-pass) streams per seed, for random policies, budgets, and
+/// chunk sizes — including under paged preemption. Chunking changes
+/// step composition and timing only.
+#[test]
+fn prop_chunked_prefill_streams_bit_identical() {
+    quick("chunked-prefill-streams", |rng| {
+        let policy = *rng.choose(&SchedulerPolicy::all());
+        let workers = rng.range(1, 3);
+        let max_active = rng.range(2, 10);
+        let mut base = VirtualConfig::new(policy, workers, max_active, step_model());
+        base.max_batch = rng.range(0, max_active + 1);
+        if rng.bool(0.5) {
+            // Tight-but-feasible budget: every request (prompt <= 40 +
+            // out <= 24 = 64 tokens max) can still complete alone.
+            base.kv_bytes_per_token = 100;
+            base.kv_budget_bytes = rng.range_u64(8_000, 60_000);
+            if rng.bool(0.5) {
+                base.kv_policy = KvPolicy::Paged { block_tokens: rng.range(2, 17) };
+            }
+        }
+        let wl = Workload {
+            model: "opt-tiny".into(),
+            rate: rng.range_f64(200.0, 20_000.0),
+            n_requests: rng.range(2, 16),
+            prompt_len: LenDist::Uniform(1, rng.range(2, 40)),
+            output_len: LenDist::Uniform(1, rng.range(2, 24)),
+            vocab: 128,
+            seed: rng.next_u64(),
+        };
+        let single = run_virtual(&wl, &base)?;
+        let mut chunked_vc = base.clone();
+        chunked_vc.prefill_chunk = rng.range(1, 33);
+        let chunked = run_virtual(&wl, &chunked_vc)?;
+        if single.rejected != chunked.rejected {
+            return Err(format!(
+                "rejection count changed by chunking: {} vs {}",
+                single.rejected, chunked.rejected
+            ));
+        }
+        for (a, b) in single.records.iter().zip(&chunked.records) {
+            if a.tokens != b.tokens {
+                return Err(format!(
+                    "request {} stream changed by chunking (chunk {})",
+                    a.request_id, chunked_vc.prefill_chunk
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Integration mirror of the bench's interference cell: a long prompt
+/// landing among active decode lanes. Single-pass prefill sweeps the
+/// whole prompt in one fused step, so every neighbor absorbs the sweep
+/// in one inter-token gap; a 32-token chunk budget must strictly shrink
+/// the neighbors' worst gap while streams stay identical and the long
+/// prompt's TTFT stays within a small factor.
+#[test]
+fn chunked_prefill_cuts_neighbor_interference() {
+    let mk_plan = || {
+        let mut plan: Vec<(f64, Request)> = (0..4)
+            .map(|i| (0.0, Request::greedy("opt-tiny", vec![i as i64 + 1], 48)))
+            .collect();
+        // Lands mid-run, while all four neighbors are decoding.
+        plan.push((0.05, Request::greedy("opt-tiny", vec![9; 768], 4)));
+        plan
+    };
+    let run = |chunk: usize| {
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 8, step_model());
+        vc.prefill_chunk = chunk;
+        run_virtual_plan("opt-tiny", 512, 1.0, mk_plan(), &vc).unwrap()
+    };
+    let single = run(0);
+    let chunked = run(32);
+    for (a, b) in single.records.iter().zip(&chunked.records) {
+        assert_eq!(a.tokens, b.tokens, "chunking changed request {}", a.request_id);
+    }
+    let neighbor_worst_gap = |r: &lpu::coordinator::VirtualReport| -> f64 {
+        (0..4)
+            .flat_map(|i| {
+                r.records[i].token_times.windows(2).map(|w| w[1] - w[0]).collect::<Vec<_>>()
+            })
+            .fold(0.0, f64::max)
+    };
+    let single_gap = neighbor_worst_gap(&single);
+    let chunked_gap = neighbor_worst_gap(&chunked);
+    assert!(
+        chunked_gap < single_gap,
+        "chunked neighbor worst gap {chunked_gap} !< single-pass {single_gap}"
+    );
+    let ttft = |r: &lpu::coordinator::VirtualReport| {
+        r.records[4].first_token_s - r.records[4].arrival_s
+    };
+    assert!(
+        ttft(&chunked) < ttft(&single) * 5.0,
+        "chunked long-prompt TTFT {} vs single-pass {} exceeds the 5x bound",
+        ttft(&chunked),
+        ttft(&single)
+    );
 }
 
 /// KV-bounded live serving: a coordinator sized from a real device

@@ -44,12 +44,26 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 step "serving bench (smoke) -> BENCH_serving.json"
 # Writes machine-readable results (tok/s, peak active, TTFT/TPOT p99 per
-# cell, both KV policies) to ../BENCH_serving.json so the perf
-# trajectory is tracked in-repo. This fast-mode output IS the committed
-# baseline (deterministic per seed; the "fast" field labels the mode —
-# compare like with like). A full sweep writes the same path; use
-# LPU_BENCH_JSON=<path> to write elsewhere without touching the
-# baseline.
+# cell, both KV policies, the chunked-prefill interference cell, and the
+# shared-prefix cache cell — all sections run in smoke mode) to
+# ../BENCH_serving.json so the perf trajectory is tracked in-repo. This
+# fast-mode output IS the committed baseline (deterministic per seed;
+# the "fast" field labels the mode — compare like with like). A full
+# sweep writes the same path; use LPU_BENCH_JSON=<path> to write
+# elsewhere without touching the baseline.
 LPU_BENCH_FAST=1 cargo bench --bench serving_load
+
+step "bench JSON sanity (no null fields survive the bench)"
+# The committed file starts life as a hand-written placeholder with
+# null summary fields (authoring containers lack a Rust toolchain). A
+# bench run must replace every one of them with measured values — a
+# null surviving here means the emitter and the placeholder schema
+# drifted, or a summary field was never computed. Check the file the
+# bench actually wrote (LPU_BENCH_JSON redirects it).
+bench_json="${LPU_BENCH_JSON:-../BENCH_serving.json}"
+if grep -n 'null' "$bench_json"; then
+  echo "error: $bench_json still contains null fields after the bench run" >&2
+  exit 1
+fi
 
 printf '\nci.sh: all gates green\n'

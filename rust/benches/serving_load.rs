@@ -26,8 +26,9 @@
 
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    run_virtual, run_virtual_plan, KvPolicy, LenDist, Request, SchedulerPolicy, StepModel,
-    VirtualConfig, VirtualReport, Workload,
+    run_virtual, run_virtual_plan, BackendFactory, Coordinator, CoordinatorConfig, KvPolicy,
+    LenDist, PrefixCacheConfig, Request, SchedulerPolicy, StepModel, VirtualConfig,
+    VirtualReport, Workload,
 };
 use lpu::model::by_name;
 use lpu::util::json::{obj, Json};
@@ -431,6 +432,152 @@ fn main() {
         single_ttft * 1e3
     );
 
+    // ---- shared-prefix (prefix cache) cell: one cold 512-token
+    // prompt, then 7 requests with the identical prompt arriving after
+    // the cold prefill completed and registered its blocks. With
+    // `--prefix-cache on` the 7 share ONE physical copy of the prefix
+    // (refcounted CoW pages) and skip 511 tokens of prefill each, so
+    // physical peak KV blocks collapse and cache-hit TTFT drops to the
+    // cost of a 1-token span — at the same budget, with bit-identical
+    // streams. This cell runs in smoke mode too (it is cheap and the
+    // assertions below are the tentpole acceptance).
+    let prefix_tokens = 512usize;
+    let n_share = 8usize;
+    let share_out = 48usize;
+    let shared_prompt: Vec<i64> = (0..prefix_tokens).map(|i| ((i * 13) % 512) as i64).collect();
+    let mk_share_plan = || -> Vec<(f64, Request)> {
+        let mut plan = vec![(0.0, Request::greedy("opt-1.3b", shared_prompt.clone(), share_out))];
+        for _ in 1..n_share {
+            plan.push((1.0, Request::greedy("opt-1.3b", shared_prompt.clone(), share_out)));
+        }
+        plan
+    };
+    // 300 blocks of 16 tokens: enough that the no-sharing cell holds
+    // all 7 simultaneous arrivals without preemption — the comparison
+    // is pure block accounting at an EQUAL budget.
+    let share_budget_blocks = 300u64;
+    let share_budget = share_budget_blocks * 16 * model.kv_bytes_per_token();
+    let run_share = |cache: PrefixCacheConfig| -> VirtualReport {
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 16, step);
+        vc.max_batch = 8;
+        vc.kv_bytes_per_token = model.kv_bytes_per_token();
+        vc.kv_budget_bytes = share_budget;
+        vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+        vc.prefix_cache = cache;
+        run_virtual_plan("opt-1.3b", 512, 1.0, mk_share_plan(), &vc).expect("virtual run")
+    };
+    let share_off = run_share(PrefixCacheConfig::off());
+    let share_on = run_share(PrefixCacheConfig::on());
+    let share_on2 = run_share(PrefixCacheConfig::on());
+    assert_eq!(share_on.records, share_on2.records, "bit-identical rerun (prefix cache)");
+    assert_eq!(share_off.rejected + share_on.rejected, 0, "the cell must fit the budget");
+    // Streams bit-identical with the cache on vs off (virtual path).
+    for (a, b) in share_off.records.iter().zip(&share_on.records) {
+        assert_eq!(a.tokens, b.tokens, "prefix cache changed stream {}", a.request_id);
+    }
+    let ttft_of = |r: &VirtualReport, i: usize| -> f64 {
+        r.records[i].first_token_s - r.records[i].arrival_s
+    };
+    let cold_ttft = ttft_of(&share_on, 0);
+    let hit_ttft_mean = (1..n_share).map(|i| ttft_of(&share_on, i)).sum::<f64>()
+        / (n_share - 1) as f64;
+    let mut st = Table::new(
+        format!(
+            "shared-prefix cache: opt-1.3b, 1 worker, {n_share}-way shared \
+             {prefix_tokens}-token prefix, {share_budget_blocks}-block budget"
+        ),
+        &["prefix cache", "peak blk", "hit tokens", "shared blk", "CoW", "TTFT cold/hit ms"],
+    );
+    for (label, r) in [("off", &share_off), ("on", &share_on)] {
+        let hit_mean = (1..n_share).map(|i| ttft_of(r, i)).sum::<f64>() / (n_share - 1) as f64;
+        st.row(&[
+            label.to_string(),
+            r.peak_kv_blocks.to_string(),
+            r.prefix_hit_tokens.to_string(),
+            r.shared_blocks.to_string(),
+            r.cow_splits.to_string(),
+            format!("{:.2}/{:.2}", ttft_of(r, 0) * 1e3, hit_mean * 1e3),
+        ]);
+        cells.push(obj(vec![
+            ("section", "prefix_cache".into()),
+            ("prefix_cache", label.into()),
+            ("prefix_tokens", prefix_tokens.into()),
+            ("n_requests", n_share.into()),
+            ("budget_blocks", share_budget_blocks.into()),
+            ("peak_kv_blocks", r.peak_kv_blocks.into()),
+            ("prefix_hit_tokens", r.prefix_hit_tokens.into()),
+            ("shared_blocks", r.shared_blocks.into()),
+            ("cow_splits", r.cow_splits.into()),
+            ("cold_ttft_ms", (ttft_of(r, 0) * 1e3).into()),
+            ("hit_ttft_mean_ms", (hit_mean * 1e3).into()),
+            ("tok_s", r.tokens_per_s.into()),
+            ("wall_s", r.wall_s.into()),
+        ]));
+    }
+    let block_ratio = share_off.peak_kv_blocks as f64 / share_on.peak_kv_blocks.max(1) as f64;
+    let share_ttft_ratio = cold_ttft / hit_ttft_mean.max(1e-12);
+    st.note(format!(
+        "sharing holds one physical prefix copy: peak blocks {block_ratio:.1}x lower, \
+         cache-hit TTFT {share_ttft_ratio:.1}x below cold"
+    ));
+    st.note("same budget, same arrivals, bit-identical streams — only the prefix cache differs");
+    st.print();
+    // The tentpole acceptance (ISSUE 4): physical peak strictly below
+    // no-sharing at equal budget; cache-hit TTFT strictly below cold.
+    assert!(
+        share_on.peak_kv_blocks < share_off.peak_kv_blocks,
+        "sharing peak {} !< no-sharing peak {}",
+        share_on.peak_kv_blocks,
+        share_off.peak_kv_blocks
+    );
+    assert!(
+        hit_ttft_mean < cold_ttft,
+        "cache-hit TTFT mean {hit_ttft_mean} !< cold TTFT {cold_ttft}"
+    );
+    assert_eq!(share_off.prefix_hit_tokens, 0);
+    assert_eq!(share_on.prefix_hit_tokens, ((n_share - 1) * (prefix_tokens - 1)) as u64);
+    assert_eq!(share_on.cow_splits, (n_share - 1) as u64);
+
+    // Threaded half of the stream-identity acceptance: the live
+    // coordinator (real threads, sim backend) must also stream
+    // bit-identically with the cache on vs off, and actually hit.
+    let run_threaded = |cache: PrefixCacheConfig| -> (Vec<Vec<i64>>, u64) {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 16,
+            policy: SchedulerPolicy::RoundRobin,
+            kv_bytes_per_token: model.kv_bytes_per_token(),
+            kv_budget_bytes: share_budget,
+            kv_policy: KvPolicy::Paged { block_tokens: 16 },
+            prefix_cache: cache,
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-1.3b", 1, BackendFactory::sim("opt-1.3b", 512));
+        let mut streams = vec![c
+            .submit(Request::greedy("opt-1.3b", shared_prompt.clone(), share_out))
+            .expect("submit")
+            .wait()
+            .expect("cold request")];
+        let handles: Vec<_> = (1..n_share)
+            .map(|_| {
+                c.submit(Request::greedy("opt-1.3b", shared_prompt.clone(), share_out))
+                    .expect("submit")
+            })
+            .collect();
+        streams.extend(handles.into_iter().map(|h| h.wait().expect("hit request")));
+        let hits = c.metrics.snapshot().prefix_hit_tokens;
+        c.shutdown();
+        (streams, hits)
+    };
+    let (threaded_off, off_hits) = run_threaded(PrefixCacheConfig::off());
+    let (threaded_on, on_hits) = run_threaded(PrefixCacheConfig::on());
+    assert_eq!(threaded_on, threaded_off, "threaded streams changed by the prefix cache");
+    assert_eq!(off_hits, 0);
+    assert_eq!(on_hits, ((n_share - 1) * (prefix_tokens - 1)) as u64);
+    // And the two paths agree with each other (lane-core invariant).
+    for (i, rec) in share_on.records.iter().enumerate() {
+        assert_eq!(rec.tokens, threaded_on[i], "virtual/threaded divergence on stream {i}");
+    }
+
     // ---- machine-readable results ----
     let out_path = std::env::var("LPU_BENCH_JSON")
         .unwrap_or_else(|_| "../BENCH_serving.json".to_string());
@@ -463,6 +610,23 @@ fn main() {
                 ("single_pass_long_ttft_mean_ms", (single_ttft * 1e3).into()),
                 ("chunked_long_ttft_mean_ms", (chunked_ttft * 1e3).into()),
                 ("long_ttft_ratio", ttft_ratio.into()),
+            ]),
+        ),
+        (
+            "prefix_cache_summary",
+            obj(vec![
+                ("prefix_tokens", prefix_tokens.into()),
+                ("n_requests", n_share.into()),
+                ("budget_blocks", share_budget_blocks.into()),
+                ("peak_kv_blocks_off", share_off.peak_kv_blocks.into()),
+                ("peak_kv_blocks_on", share_on.peak_kv_blocks.into()),
+                ("peak_block_ratio", block_ratio.into()),
+                ("cold_ttft_ms", (cold_ttft * 1e3).into()),
+                ("hit_ttft_mean_ms", (hit_ttft_mean * 1e3).into()),
+                ("cold_over_hit_ttft_ratio", share_ttft_ratio.into()),
+                ("prefix_hit_tokens", share_on.prefix_hit_tokens.into()),
+                ("shared_blocks", share_on.shared_blocks.into()),
+                ("cow_splits", share_on.cow_splits.into()),
             ]),
         ),
         ("cells", Json::Arr(cells)),

@@ -60,6 +60,26 @@ pub trait Backend {
     fn vocab(&self) -> usize;
     /// Open a fresh generation session (zero KV cache).
     fn new_session(&mut self) -> Result<Box<dyn Any>>;
+
+    /// Open a session whose KV already covers context positions
+    /// `0..position` (a prefix-cache hit: the physical blocks exist, the
+    /// lane feeds only the uncached suffix). The default refuses any
+    /// non-zero position — backends that cannot attach existing KV state
+    /// must not be offered cache hits (the worker checks
+    /// [`Backend::supports_session_restore`] and disables the prefix
+    /// index otherwise).
+    fn new_session_at(&mut self, position: usize) -> Result<Box<dyn Any>> {
+        if position == 0 {
+            self.new_session()
+        } else {
+            Err(err!("backend cannot restore a session at position {position}"))
+        }
+    }
+
+    /// Whether [`Backend::new_session_at`] works for non-zero positions.
+    fn supports_session_restore(&self) -> bool {
+        false
+    }
     /// Advance every lane one step as a single fused batch. Returns one
     /// result per lane, in lane order (a failed lane must not poison its
     /// neighbors). Implementations must return exactly `lanes.len()`
@@ -354,6 +374,18 @@ impl Backend for SimBackend {
         Ok(Box::new(SimSession { pos: 0 }))
     }
 
+    fn new_session_at(&mut self, position: usize) -> Result<Box<dyn Any>> {
+        // The sim's "KV" is just the position cursor (logits are a pure
+        // function of (model, position, token)), so restoring onto
+        // cached blocks is exact: the next feed at `position` produces
+        // identical logits to a session that fed the whole prefix.
+        Ok(Box::new(SimSession { pos: position }))
+    }
+
+    fn supports_session_restore(&self) -> bool {
+        true
+    }
+
     fn decode_batch(&mut self, lanes: &mut [BatchLane]) -> Vec<Result<Vec<f32>>> {
         let mut works = Vec::with_capacity(lanes.len());
         let mut out = Vec::with_capacity(lanes.len());
@@ -457,6 +489,51 @@ mod tests {
         for t in [1i64, 5, 9] {
             assert_eq!(a.decode(&mut sa, t).unwrap(), b.decode(&mut sb, t).unwrap());
         }
+    }
+
+    #[test]
+    fn sim_session_restore_matches_full_prefix_feed() {
+        // A session restored at position N must produce the same logits
+        // for the next feed as a session that fed N tokens — the exact
+        // contract a prefix-cache hit relies on for bit-identical
+        // streams.
+        let mut b = SimBackend::new("m", 32);
+        assert!(b.supports_session_restore());
+        let mut full = b.new_session().unwrap();
+        for t in [4i64, 9, 2] {
+            b.decode(&mut full, t).unwrap();
+        }
+        let mut restored = b.new_session_at(3).unwrap();
+        assert_eq!(b.decode(&mut restored, 7).unwrap(), b.decode(&mut full, 7).unwrap());
+    }
+
+    #[test]
+    fn default_backend_refuses_session_restore() {
+        // PJRT has no KV-attach path: restore at a non-zero position
+        // must fail loudly (the worker checks supports_session_restore
+        // and never offers hits), and position 0 must degrade to a
+        // fresh session.
+        let f = BackendFactory::pjrt("/nonexistent-dir", "opt-tiny");
+        assert!(f.build().is_err()); // no artifacts in this image
+        struct Minimal;
+        impl Backend for Minimal {
+            fn model_name(&self) -> &str {
+                "min"
+            }
+            fn vocab(&self) -> usize {
+                4
+            }
+            fn new_session(&mut self) -> Result<Box<dyn Any>> {
+                Ok(Box::new(()))
+            }
+            fn decode_batch(&mut self, lanes: &mut [BatchLane]) -> Vec<Result<Vec<f32>>> {
+                lanes.iter().map(|_| Ok(vec![0.0; 4])).collect()
+            }
+        }
+        let mut m = Minimal;
+        assert!(!m.supports_session_restore());
+        assert!(m.new_session_at(0).is_ok());
+        assert!(m.new_session_at(5).is_err());
     }
 
     #[test]

@@ -45,7 +45,9 @@
 use crate::numerics::Sampler;
 
 use super::backend::LaneWork;
-use super::scheduler::{KvBudget, KvPager, KvPolicy, Scheduler};
+use super::scheduler::{
+    KvBlockId, KvBudget, KvPager, KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler,
+};
 use super::{FinishReason, Request};
 
 /// Admission decision for a queued request (returned by
@@ -78,13 +80,19 @@ pub fn init_context(request: &Request, resume: Option<&ResumeState>) -> usize {
 }
 
 /// KV holdings attached to a lane at admission: bytes under the reserve
-/// policy, blocks under the paged policy (the other field is zero).
-#[derive(Clone, Copy, Debug, Default)]
+/// policy, a logical→physical block map under the paged policy (the
+/// other field is empty/zero).
+#[derive(Clone, Debug, Default)]
 pub struct Holdings {
     /// Reserve policy: KV bytes reserved at admission.
     pub bytes: u64,
-    /// Paged policy: KV blocks reserved at admission.
-    pub blocks: usize,
+    /// Paged policy: physical block ids in logical (context) order.
+    /// Leading blocks may be shared with the prefix index; everything
+    /// from the lane's first write position on is exclusively owned.
+    pub blocks: Vec<KvBlockId>,
+    /// Context tokens whose KV is already resident via the prefix cache
+    /// — the lane starts prefill at this position and never feeds them.
+    pub prefix_hit: usize,
 }
 
 /// What [`Lane::absorb`] did with a step's logits.
@@ -115,17 +123,23 @@ pub struct Lane {
     /// Tokens of `generated` that predate this admission (recompute
     /// prefill re-feeds them; they were already emitted to the client).
     resumed: usize,
+    /// Context tokens skipped at admission via the prefix cache (the
+    /// lane's prefill cursor started here instead of 0).
+    prefix_hit: usize,
     /// Reserve policy: KV bytes reserved at admission.
     kv_reserved: u64,
-    /// Paged policy: KV blocks currently held.
-    kv_blocks: usize,
+    /// Paged policy: the lane's logical→physical block map.
+    kv_blocks: Vec<KvBlockId>,
 }
 
 impl Lane {
     /// Build the lane for a just-admitted request. `resume` is the
     /// carried stream state when this is a readmission after preemption;
     /// `seed` feeds a fresh sampler otherwise. `holdings` are the KV
-    /// reservations [`KvState::reserve_admitted`] made for it.
+    /// reservations [`KvState::reserve_admitted`] made for it — with a
+    /// prefix hit, the prefill cursor starts at the cached position and
+    /// the lane feeds only the uncached suffix (the backend session must
+    /// be opened at the same position).
     pub fn admitted(
         request: Request,
         seed: u64,
@@ -136,12 +150,17 @@ impl Lane {
             Some(r) => (r.generated, r.sampler),
             None => (Vec::new(), Sampler::new(seed)),
         };
+        debug_assert!(
+            holdings.prefix_hit < request.prompt.len() + generated.len(),
+            "a lane must feed at least one context token for logits"
+        );
         Lane {
             resumed: generated.len(),
             request,
             sampler,
             generated,
-            prompt_fed: 0,
+            prompt_fed: holdings.prefix_hit,
+            prefix_hit: holdings.prefix_hit,
             kv_reserved: holdings.bytes,
             kv_blocks: holdings.blocks,
         }
@@ -157,9 +176,18 @@ impl Lane {
         self.generated.len()
     }
 
-    /// KV blocks currently held (paged policy).
+    /// KV blocks currently held (paged policy): the length of the
+    /// lane's logical→physical block map. Shared prefix blocks count —
+    /// this is the lane's *logical* footprint, which can exceed what it
+    /// exclusively owns physically.
     pub fn kv_blocks(&self) -> usize {
-        self.kv_blocks
+        self.kv_blocks.len()
+    }
+
+    /// Context tokens this lane skipped at admission via the prefix
+    /// cache (0 for a cold admission).
+    pub fn prefix_hit(&self) -> usize {
+        self.prefix_hit
     }
 
     /// Whether the lane is still feeding its initial context.
@@ -310,17 +338,55 @@ pub enum KvState {
 }
 
 impl KvState {
-    /// Build the accounting state for one worker.
+    /// Build the accounting state for one worker (prefix cache off).
     pub fn new(policy: KvPolicy, budget_bytes: u64, kv_bytes_per_token: u64) -> KvState {
+        KvState::with_prefix(policy, budget_bytes, kv_bytes_per_token, PrefixCacheConfig::off())
+    }
+
+    /// Build the accounting state for one worker with an explicit
+    /// prefix-cache configuration (only meaningful under the paged
+    /// policy; the reserve policy has no block identities to share).
+    pub fn with_prefix(
+        policy: KvPolicy,
+        budget_bytes: u64,
+        kv_bytes_per_token: u64,
+        prefix: PrefixCacheConfig,
+    ) -> KvState {
         match policy {
             KvPolicy::Reserve => KvState::Reserve {
                 budget: KvBudget::new(budget_bytes),
                 bytes_per_token: kv_bytes_per_token,
             },
             KvPolicy::Paged { block_tokens } => KvState::Paged {
-                pager: KvPager::new(budget_bytes, kv_bytes_per_token, block_tokens),
+                pager: KvPager::new(budget_bytes, kv_bytes_per_token, block_tokens)
+                    .with_prefix_cache(prefix),
                 bytes_per_token: kv_bytes_per_token,
             },
+        }
+    }
+
+    /// Whether the paged prefix cache is active.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        match self {
+            KvState::Reserve { .. } => false,
+            KvState::Paged { pager, .. } => pager.prefix_cache_enabled(),
+        }
+    }
+
+    /// Drop the prefix index (releasing its pinned blocks). Used by the
+    /// threaded worker when its backend cannot restore a session at a
+    /// cached position, so admission never claims hits it cannot serve.
+    pub fn disable_prefix_cache(&mut self) {
+        if let KvState::Paged { pager, .. } = self {
+            pager.disable_prefix_cache();
+        }
+    }
+
+    /// Cumulative prefix-cache counters (zero under the reserve policy).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        match self {
+            KvState::Reserve { .. } => PrefixStats::default(),
+            KvState::Paged { pager, .. } => pager.prefix_stats(),
         }
     }
 
@@ -354,9 +420,9 @@ impl KvState {
         }
     }
 
-    /// Admission decision for a queued request with initial context
-    /// `init_ctx` and worst case `worst_tokens`, given this worker's
-    /// active lanes.
+    /// Admission decision for a queued request with prompt `prompt`,
+    /// initial context `init_ctx` (prompt plus any resumed tokens), and
+    /// worst case `worst_tokens`, given this worker's active lanes.
     ///
     /// Under the paged policy the gate sums every active lane's
     /// *expected* footprint (blocks held now + half its remaining
@@ -366,9 +432,15 @@ impl KvState {
     /// path. Each lane's estimate is clamped to what it already holds: a
     /// resumed lane mid-re-prefill has a small `kv_target` but owns
     /// blocks through its whole prior context, and undercounting those
-    /// would let the gate admit beyond physical capacity.
+    /// would let the gate admit beyond physical capacity. The candidate
+    /// is credited for prompt-prefix blocks that are resident in the
+    /// prefix index **and already lane-held** — sharing those costs no
+    /// new physical blocks, so a hit-heavy workload admits deeper at
+    /// the same budget (cache-only blocks are deliberately not
+    /// credited; see [`KvPager::prefix_credit`]).
     pub fn admit<'a>(
         &self,
+        prompt: &[i64],
         init_ctx: usize,
         worst_tokens: usize,
         active: impl Iterator<Item = &'a Lane>,
@@ -392,11 +464,23 @@ impl KvState {
                         .map(|l| {
                             pager
                                 .expected_blocks(l.kv_target(), l.worst_case_tokens())
-                                .max(l.kv_blocks)
+                                .max(l.kv_blocks.len())
                         })
                         .sum();
-                    let candidate = pager.expected_blocks(init_ctx + 1, worst_tokens);
-                    if committed.saturating_add(candidate) <= pager.capacity_blocks() {
+                    let expected = pager.expected_blocks(init_ctx + 1, worst_tokens);
+                    let fits = |candidate: usize| {
+                        committed.saturating_add(candidate) <= pager.capacity_blocks()
+                    };
+                    // The prefix credit (lane-held shared blocks only —
+                    // see KvPager::prefix_credit for why cache-only
+                    // blocks must not be credited) can only loosen the
+                    // gate, so the chain hash is computed lazily, only
+                    // when the uncredited gate would refuse.
+                    if fits(expected)
+                        || fits(
+                            expected.saturating_sub(pager.prefix_credit(prompt, init_ctx)),
+                        )
+                    {
                         Admit::Take
                     } else {
                         Admit::Later
@@ -409,30 +493,45 @@ impl KvState {
     /// Reserve for a just-taken request; returns the lane's holdings.
     /// Infallible because [`KvState::admit`] said [`Admit::Take`] and
     /// nothing else touched this worker's accounting in between. The
-    /// paged reservation covers the full initial context plus the first
-    /// sampled token, which is why prefill never needs growth.
-    pub fn reserve_admitted(&mut self, init_ctx: usize, worst_tokens: usize) -> Holdings {
+    /// paged reservation maps the full initial context plus the first
+    /// sampled token — sharing resident prefix blocks where the index
+    /// has them (with a copy-on-write split if the first write would
+    /// land in a shared block) and allocating the rest — which is why
+    /// prefill never needs growth.
+    pub fn reserve_admitted(
+        &mut self,
+        prompt: &[i64],
+        init_ctx: usize,
+        worst_tokens: usize,
+    ) -> Holdings {
         match self {
             KvState::Reserve { budget, bytes_per_token } => {
                 let need = worst_tokens as u64 * *bytes_per_token;
                 let ok = budget.try_reserve(need);
                 debug_assert!(ok, "queue handed out a job beyond the KV budget");
-                Holdings { bytes: need, blocks: 0 }
+                Holdings { bytes: need, blocks: Vec::new(), prefix_hit: 0 }
             }
             KvState::Paged { pager, .. } => {
-                let blocks = pager.admit_blocks(init_ctx);
-                let ok = pager.try_reserve(blocks);
-                debug_assert!(ok, "admission gate admitted beyond the pager capacity");
-                Holdings { bytes: 0, blocks }
+                let (blocks, prefix_hit) = pager.admit_map(prompt, init_ctx);
+                debug_assert_eq!(
+                    blocks.len(),
+                    pager.admit_blocks(init_ctx),
+                    "admission must map the full initial context"
+                );
+                Holdings { bytes: 0, blocks, prefix_hit }
             }
         }
     }
 
     /// Release a lane's holdings (retired, errored, cancelled, or
     /// preempted) — the single choke point that keeps every exit path
-    /// leak-free.
+    /// leak-free. Shared prefix blocks lose one holder; index-pinned
+    /// blocks stay resident for future hits.
     pub fn release_lane(&mut self, lane: &Lane) {
-        self.release_holdings(Holdings { bytes: lane.kv_reserved, blocks: lane.kv_blocks });
+        match self {
+            KvState::Reserve { budget, .. } => budget.release(lane.kv_reserved),
+            KvState::Paged { pager, .. } => pager.release_map(&lane.kv_blocks),
+        }
     }
 
     /// Release raw holdings (for exits before a lane exists, e.g. a
@@ -440,7 +539,19 @@ impl KvState {
     pub fn release_holdings(&mut self, h: Holdings) {
         match self {
             KvState::Reserve { budget, .. } => budget.release(h.bytes),
-            KvState::Paged { pager, .. } => pager.release(h.blocks),
+            KvState::Paged { pager, .. } => pager.release_map(&h.blocks),
+        }
+    }
+
+    /// Hook for a lane that just completed prefill: its initial
+    /// context's KV is now fully written, so the prompt's block-aligned
+    /// prefix becomes indexable. Both drivers call this at the same
+    /// transition (the absorb that produced the lane's first token of
+    /// this admission), keeping the index contents identical across the
+    /// threaded and virtual paths.
+    pub fn on_prefill_complete(&mut self, lane: &Lane) {
+        if let KvState::Paged { pager, .. } = self {
+            pager.register_prefix(&lane.request.prompt, &lane.kv_blocks);
         }
     }
 
@@ -587,20 +698,25 @@ pub fn plan_step<T: HoldsLane>(
         for p in &lanes {
             let l = slots[p.slot].lane();
             if !l.in_prefill() {
-                extra += pager.blocks_for(l.kv_target()).saturating_sub(l.kv_blocks);
+                extra += pager.blocks_for(l.kv_target()).saturating_sub(l.kv_blocks.len());
             }
         }
-        if extra <= pager.free_blocks() {
+        // `allocatable` counts strictly-free blocks plus cache-only
+        // blocks, which growth reclaims LRU-first on demand — the
+        // prefix cache never forces a preemption.
+        if extra <= pager.allocatable_blocks() {
             for p in &lanes {
                 let l = slots[p.slot].lane_mut();
                 if l.in_prefill() {
                     debug_assert!(
-                        pager.blocks_for(l.kv_target_after(p.span)) <= l.kv_blocks,
+                        pager.blocks_for(l.kv_target_after(p.span)) <= l.kv_blocks.len(),
                         "prefill must be covered by the admission reservation"
                     );
                     continue;
                 }
-                l.kv_blocks = pager.try_grow(l.kv_blocks, l.kv_target()).expect("growth fits");
+                let target = l.kv_target();
+                let grew = pager.try_grow_map(&mut l.kv_blocks, target);
+                assert!(grew, "growth fits: allocatable blocks were checked above");
             }
             break (StepPlan { lanes }, picked);
         }
@@ -757,54 +873,58 @@ mod tests {
     #[test]
     fn reserve_admit_take_later_reject() {
         let kv = KvState::new(KvPolicy::Reserve, 1000, 10);
+        let p = [0i64];
         // worst 200 tokens -> 2000 B > 1000 B capacity: never fits.
-        assert!(matches!(kv.admit(1, 200, std::iter::empty::<&Lane>()), Admit::Reject));
+        assert!(matches!(kv.admit(&p, 1, 200, std::iter::empty::<&Lane>()), Admit::Reject));
         // worst 50 tokens -> 500 B: fits an empty worker.
-        assert!(matches!(kv.admit(1, 50, std::iter::empty::<&Lane>()), Admit::Take));
+        assert!(matches!(kv.admit(&p, 1, 50, std::iter::empty::<&Lane>()), Admit::Take));
         let mut kv = kv;
-        let h = kv.reserve_admitted(1, 50);
-        assert_eq!((h.bytes, h.blocks), (500, 0));
+        let h = kv.reserve_admitted(&p, 1, 50);
+        assert_eq!((h.bytes, h.blocks.len(), h.prefix_hit), (500, 0, 0));
         assert_eq!(kv.bytes_in_use(), 500);
         // Another 600 B would overflow: wait for a sibling instead.
-        assert!(matches!(kv.admit(1, 60, std::iter::empty::<&Lane>()), Admit::Later));
+        assert!(matches!(kv.admit(&p, 1, 60, std::iter::empty::<&Lane>()), Admit::Later));
         // Done/error/cancel all route through the same release.
         kv.release_holdings(h);
         assert_eq!(kv.bytes_in_use(), 0);
-        assert!(matches!(kv.admit(1, 60, std::iter::empty::<&Lane>()), Admit::Take));
+        assert!(matches!(kv.admit(&p, 1, 60, std::iter::empty::<&Lane>()), Admit::Take));
     }
 
     #[test]
     fn paged_admit_gates_on_expected_footprint() {
         // 16-token blocks, 18-block pager (288 tokens).
         let mut kv = KvState::new(KvPolicy::Paged { block_tokens: 16 }, 288 * 100, 100);
+        let p8: Vec<i64> = (0..8).collect();
         assert_eq!(kv.capacity_blocks(), Some(18));
         // Worst case 304 tokens -> 19 blocks: impossible.
-        assert!(matches!(kv.admit(8, 304, std::iter::empty::<&Lane>()), Admit::Reject));
+        assert!(matches!(kv.admit(&p8, 8, 304, std::iter::empty::<&Lane>()), Admit::Reject));
         // 128-token worst case: expected = 1 + ceil((8-1)/2) = 5 blocks.
         let mut lanes: Vec<Lane> = Vec::new();
         for _ in 0..3 {
-            assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Take));
-            let h = kv.reserve_admitted(8, 128);
-            assert_eq!(h.blocks, 1); // blocks_for(9)
+            assert!(matches!(kv.admit(&p8, 8, 128, lanes.iter()), Admit::Take));
+            let h = kv.reserve_admitted(&p8, 8, 128);
+            assert_eq!(h.blocks.len(), 1); // blocks_for(9)
             lanes.push(lane(8, 120, h));
         }
         // 3 × 5 expected + 5 candidate = 20 > 18: the fourth waits.
-        assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Later));
+        assert!(matches!(kv.admit(&p8, 8, 128, lanes.iter()), Admit::Later));
         // Releasing one lane reopens the gate.
         let gone = lanes.pop().unwrap();
         kv.release_lane(&gone);
-        assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Take));
+        assert!(matches!(kv.admit(&p8, 8, 128, lanes.iter()), Admit::Take));
     }
 
     #[test]
     fn paged_admit_clamps_resumed_lane_to_held_blocks() {
         let mut kv = KvState::new(KvPolicy::Paged { block_tokens: 16 }, 288 * 100, 100);
+        let p4: Vec<i64> = (0..4).collect();
+        let p8: Vec<i64> = (0..8).collect();
         // A resumed lane with 100 tokens of prior context holds 7
         // blocks (blocks_for(101)) even though mid-re-prefill its
         // kv_target is tiny; the gate must count the held 7.
         let rs = ResumeState { generated: (0..96).collect(), sampler: Sampler::new(0) };
-        let h = kv.reserve_admitted(100, 128);
-        assert_eq!(h.blocks, 7);
+        let h = kv.reserve_admitted(&p4, 100, 128);
+        assert_eq!(h.blocks.len(), 7);
         let resumed = Lane::admitted(req(4, 100), 0, Some(rs), h);
         assert_eq!(resumed.kv_target(), 1);
         assert_eq!(resumed.kv_blocks(), 7);
@@ -812,11 +932,95 @@ mod tests {
         // 5-expected candidates fit (7+5+5=17<=18) but a third does not.
         let mut lanes = vec![resumed];
         for _ in 0..2 {
-            assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Take));
-            let h = kv.reserve_admitted(8, 128);
+            assert!(matches!(kv.admit(&p8, 8, 128, lanes.iter()), Admit::Take));
+            let h = kv.reserve_admitted(&p8, 8, 128);
             lanes.push(lane(8, 120, h));
         }
-        assert!(matches!(kv.admit(8, 128, lanes.iter()), Admit::Later));
+        assert!(matches!(kv.admit(&p8, 8, 128, lanes.iter()), Admit::Later));
+    }
+
+    // ---- prefix cache through the KvState choke points ----
+
+    #[test]
+    fn prefix_hit_lane_starts_advanced_and_feeds_only_the_suffix() {
+        // 4-token blocks, cache on. A cold 10-token prompt prefills,
+        // completes, and registers; an identical prompt then admits with
+        // its prefill cursor already at 8 and feeds only tokens 8..10.
+        let mut kv = KvState::with_prefix(
+            KvPolicy::Paged { block_tokens: 4 },
+            12 * 4 * 100,
+            100,
+            PrefixCacheConfig::on(),
+        );
+        let r = req(10, 4);
+        let h = kv.reserve_admitted(&r.prompt, 10, 14);
+        assert_eq!(h.prefix_hit, 0);
+        let mut cold = Lane::admitted(r, 1, None, h);
+        assert_eq!(cold.remaining_prefill(), 10);
+        assert!(matches!(cold.absorb(10, &logits_pick(8, 3)), Absorbed::Token { token: 3, .. }));
+        kv.on_prefill_complete(&cold);
+        assert_eq!(kv.prefix_stats(), PrefixStats::default(), "registration is not a hit");
+
+        let r2 = req(10, 4);
+        let before = kv.blocks_in_use();
+        let h2 = kv.reserve_admitted(&r2.prompt, 10, 14);
+        assert_eq!(h2.prefix_hit, 8); // 2 full blocks cached
+        assert_eq!(kv.blocks_in_use(), before + 1, "only the uncached tail is allocated");
+        let mut hot = Lane::admitted(r2, 1, None, h2);
+        assert_eq!(hot.prefix_hit(), 8);
+        assert!(hot.in_prefill());
+        assert_eq!(hot.remaining_prefill(), 2);
+        assert_eq!(hot.position(), 8);
+        assert_eq!(hot.feed_span(2), vec![8, 9]); // only the suffix
+        // The shortened span is what both cost models price: the lane's
+        // work starts at the cached position, not 0.
+        assert_eq!(hot.work(2), LaneWork::Prefill { start: 8, tokens: 2 });
+        // The suffix-completing absorb samples exactly like a cold lane.
+        match hot.absorb(2, &logits_pick(8, 5)) {
+            Absorbed::Token { token, finished } => {
+                assert_eq!(token, 5);
+                assert!(finished.is_none());
+            }
+            _ => panic!("suffix prefill must end in a token"),
+        }
+        assert!(!hot.in_prefill());
+        let stats = kv.prefix_stats();
+        assert_eq!((stats.hit_tokens, stats.shared_blocks), (8, 2));
+        // Both exits route through the same choke point.
+        kv.release_lane(&hot);
+        kv.release_lane(&cold);
+        // The cached prefix stays resident: a third admission hits too.
+        let h3 = kv.reserve_admitted(&req(10, 4).prompt, 10, 14);
+        assert_eq!(h3.prefix_hit, 8);
+        kv.release_holdings(h3);
+    }
+
+    #[test]
+    fn prefix_hit_capped_below_full_context_with_cow() {
+        // 8-token prompt = exactly 2 full blocks: the hit is capped at
+        // 7 (one token must be fed for logits) and the first write lands
+        // in the shared tail block -> CoW split.
+        let mut kv = KvState::with_prefix(
+            KvPolicy::Paged { block_tokens: 4 },
+            12 * 4 * 100,
+            100,
+            PrefixCacheConfig::on(),
+        );
+        let r = req(8, 4);
+        let h = kv.reserve_admitted(&r.prompt, 8, 12);
+        let mut cold = Lane::admitted(r, 1, None, h);
+        assert!(matches!(cold.absorb(8, &logits_pick(8, 2)), Absorbed::Token { .. }));
+        kv.on_prefill_complete(&cold);
+
+        let h2 = kv.reserve_admitted(&req(8, 4).prompt, 8, 12);
+        assert_eq!(h2.prefix_hit, 7);
+        let hot = Lane::admitted(req(8, 4), 1, None, h2);
+        assert_eq!(hot.remaining_prefill(), 1);
+        assert_eq!(hot.feed_span(1), vec![7]);
+        let stats = kv.prefix_stats();
+        assert_eq!((stats.hit_tokens, stats.shared_blocks, stats.cow_splits), (7, 1, 1));
+        kv.release_lane(&hot);
+        kv.release_lane(&cold);
     }
 
     #[test]
@@ -845,8 +1049,9 @@ mod tests {
     }
 
     fn admit_slot(kv: &mut KvState, prompt: usize, max_new: usize) -> TSlot {
-        let h = kv.reserve_admitted(prompt, prompt + max_new);
-        TSlot { lane: Lane::admitted(req(prompt, max_new), 0, None, h) }
+        let r = req(prompt, max_new);
+        let h = kv.reserve_admitted(&r.prompt, prompt, prompt + max_new);
+        TSlot { lane: Lane::admitted(r, 0, None, h) }
     }
 
     /// Decode every planned lane one absorb (uniform logits), mirroring

@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::scheduler::PrefixStats;
 use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Welford};
 
@@ -100,6 +101,13 @@ pub struct Metrics {
     prefill_spans: AtomicU64,
     /// Prompt/recompute context tokens processed across all spans.
     prefill_tokens: AtomicU64,
+    /// Prompt tokens whose prefill was skipped via the prefix cache.
+    prefix_hit_tokens: AtomicU64,
+    /// Cached prefix blocks granted to admitted lanes (each grant is a
+    /// physical block shared instead of recomputed and re-stored).
+    shared_blocks: AtomicU64,
+    /// Copy-on-write splits of shared tail blocks at admission.
+    cow_splits: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -131,6 +139,12 @@ pub struct Snapshot {
     pub prefill_spans: u64,
     /// Prompt/recompute context tokens processed across all spans.
     pub prefill_tokens: u64,
+    /// Prompt tokens skipped at admission via cached prefix blocks.
+    pub prefix_hit_tokens: u64,
+    /// Cached prefix blocks granted to admitted lanes (cumulative).
+    pub shared_blocks: u64,
+    /// Copy-on-write tail-block splits at admission (cumulative).
+    pub cow_splits: u64,
     pub mean_queue_delay_s: f64,
     pub mean_ttft_s: f64,
     pub ttft: Percentiles,
@@ -163,6 +177,9 @@ impl Metrics {
             batch_lanes: AtomicU64::new(0),
             prefill_spans: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
+            prefix_hit_tokens: AtomicU64::new(0),
+            shared_blocks: AtomicU64::new(0),
+            cow_splits: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -195,6 +212,14 @@ impl Metrics {
     pub fn on_prefill(&self, tokens: usize) {
         self.prefill_spans.fetch_add(1, Ordering::Relaxed);
         self.prefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// An admission's prefix-cache outcome (a per-admission delta of
+    /// the worker pager's cumulative [`PrefixStats`]).
+    pub fn on_prefix(&self, d: &PrefixStats) {
+        self.prefix_hit_tokens.fetch_add(d.hit_tokens, Ordering::Relaxed);
+        self.shared_blocks.fetch_add(d.shared_blocks, Ordering::Relaxed);
+        self.cow_splits.fetch_add(d.cow_splits, Ordering::Relaxed);
     }
 
     pub fn on_done(&self, _tokens: usize, total: Duration) {
@@ -275,6 +300,9 @@ impl Metrics {
             mean_batch_size: if steps == 0 { 0.0 } else { lanes as f64 / steps as f64 },
             prefill_spans: self.prefill_spans.load(Ordering::Relaxed),
             prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            prefix_hit_tokens: self.prefix_hit_tokens.load(Ordering::Relaxed),
+            shared_blocks: self.shared_blocks.load(Ordering::Relaxed),
+            cow_splits: self.cow_splits.load(Ordering::Relaxed),
             mean_queue_delay_s: queue_delay_mean,
             mean_ttft_s: ttft_mean,
             ttft: percentiles_of(ttft_samples),
@@ -291,6 +319,50 @@ fn zero_nan(x: f64) -> f64 {
         0.0
     } else {
         x
+    }
+}
+
+/// Per-pool (per-model) serving gauges, exposed by the server's
+/// `metrics` op under `pools.<model>` so a multi-model deployment can
+/// see which pool's prompts are long, chunked, or cache-friendly. The
+/// aggregate [`Metrics`] hub keeps the same counters coordinator-wide;
+/// these are the per-pool breakdown.
+#[derive(Default)]
+pub struct PoolGauges {
+    prefill_spans: AtomicU64,
+    prefill_tokens: AtomicU64,
+    prefix_hit_tokens: AtomicU64,
+    shared_blocks: AtomicU64,
+    cow_splits: AtomicU64,
+}
+
+impl PoolGauges {
+    pub fn new() -> PoolGauges {
+        PoolGauges::default()
+    }
+
+    /// One prefill span of `tokens` context tokens ran in this pool.
+    pub fn on_prefill(&self, tokens: usize) {
+        self.prefill_spans.fetch_add(1, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// An admission's prefix-cache outcome in this pool.
+    pub fn on_prefix(&self, d: &PrefixStats) {
+        self.prefix_hit_tokens.fetch_add(d.hit_tokens, Ordering::Relaxed);
+        self.shared_blocks.fetch_add(d.shared_blocks, Ordering::Relaxed);
+        self.cow_splits.fetch_add(d.cow_splits, Ordering::Relaxed);
+    }
+
+    /// JSON frame for the server's `metrics` op.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("prefill_spans", self.prefill_spans.load(Ordering::Relaxed).into()),
+            ("prefill_tokens", self.prefill_tokens.load(Ordering::Relaxed).into()),
+            ("prefix_hit_tokens", self.prefix_hit_tokens.load(Ordering::Relaxed).into()),
+            ("shared_blocks", self.shared_blocks.load(Ordering::Relaxed).into()),
+            ("cow_splits", self.cow_splits.load(Ordering::Relaxed).into()),
+        ])
     }
 }
 
@@ -312,6 +384,9 @@ impl Snapshot {
             ("mean_batch_size", self.mean_batch_size.into()),
             ("prefill_spans", self.prefill_spans.into()),
             ("prefill_tokens", self.prefill_tokens.into()),
+            ("prefix_hit_tokens", self.prefix_hit_tokens.into()),
+            ("shared_blocks", self.shared_blocks.into()),
+            ("cow_splits", self.cow_splits.into()),
             ("mean_queue_delay_s", self.mean_queue_delay_s.into()),
             ("mean_ttft_s", self.mean_ttft_s.into()),
             ("ttft_p50_s", self.ttft.p50.into()),
@@ -398,6 +473,35 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("prefill_spans").as_u64(), Some(3));
         assert_eq!(j.get("prefill_tokens").as_u64(), Some(640));
+    }
+
+    #[test]
+    fn prefix_cache_accounting() {
+        let m = Metrics::new();
+        m.on_prefix(&PrefixStats { hit_tokens: 512, shared_blocks: 32, cow_splits: 1 });
+        m.on_prefix(&PrefixStats { hit_tokens: 511, shared_blocks: 31, cow_splits: 1 });
+        let s = m.snapshot();
+        assert_eq!(s.prefix_hit_tokens, 1023);
+        assert_eq!(s.shared_blocks, 63);
+        assert_eq!(s.cow_splits, 2);
+        let j = s.to_json();
+        assert_eq!(j.get("prefix_hit_tokens").as_u64(), Some(1023));
+        assert_eq!(j.get("shared_blocks").as_u64(), Some(63));
+        assert_eq!(j.get("cow_splits").as_u64(), Some(2));
+    }
+
+    #[test]
+    fn pool_gauges_accumulate_and_export() {
+        let g = PoolGauges::new();
+        g.on_prefill(40);
+        g.on_prefill(8);
+        g.on_prefix(&PrefixStats { hit_tokens: 16, shared_blocks: 1, cow_splits: 0 });
+        let j = g.to_json();
+        assert_eq!(j.get("prefill_spans").as_u64(), Some(2));
+        assert_eq!(j.get("prefill_tokens").as_u64(), Some(48));
+        assert_eq!(j.get("prefix_hit_tokens").as_u64(), Some(16));
+        assert_eq!(j.get("shared_blocks").as_u64(), Some(1));
+        assert_eq!(j.get("cow_splits").as_u64(), Some(0));
     }
 
     #[test]

@@ -59,6 +59,15 @@
 //! already emitted are re-fed to rebuild KV; the client stream never
 //! sees a duplicate token, and the carried sampler RNG keeps stochastic
 //! sampling exact).
+//!
+//! With [`CoordinatorConfig::prefix_cache`] enabled (paged policy only),
+//! pager blocks are shared across requests via a block-granular prefix
+//! index: a request whose prompt prefix is resident starts prefill at
+//! the cached position — one physical copy per distinct prefix, a
+//! copy-on-write split when a lane would write into a shared tail
+//! block, and LRU reclamation of cache-only blocks whenever live
+//! traffic needs them. See `ARCHITECTURE.md`'s prefix-caching section
+//! for the full lifecycle.
 
 pub mod backend;
 pub mod lane;
@@ -77,9 +86,10 @@ use crate::numerics::SampleParams;
 
 pub use backend::{Backend, BackendFactory, BatchLane, LaneWork, SimBackend, StepModel};
 pub use lane::{Absorbed, Admit, HoldsLane, KvState, Lane, ResumeState};
-pub use metrics::{Metrics, Percentiles};
+pub use metrics::{Metrics, Percentiles, PoolGauges};
 pub use scheduler::{
-    KvBudget, KvPager, KvPolicy, Scheduler, SchedulerPolicy, DEFAULT_KV_BLOCK_TOKENS,
+    KvBlockId, KvBudget, KvPager, KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler,
+    SchedulerPolicy, DEFAULT_KV_BLOCK_TOKENS,
 };
 pub use workload::{
     run_open_loop, run_virtual, run_virtual_plan, LenDist, LoadReport, VirtualConfig,
@@ -299,6 +309,9 @@ impl JobQueue {
 /// Per-model worker pool.
 struct Pool {
     queue: Arc<JobQueue>,
+    /// Per-pool prefill/prefix gauges (the server's `metrics` op
+    /// exposes them under `pools.<model>`).
+    gauges: Arc<PoolGauges>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -327,6 +340,14 @@ pub struct CoordinatorConfig {
     /// prefilled in a single pass, which minimizes its own TTFT but can
     /// stall co-batched decode lanes for the span's full duration.
     pub prefill_chunk: usize,
+    /// Copy-on-write prefix caching over the paged KV blocks
+    /// (`--prefix-cache on|off[:capacity]`): requests whose prompt
+    /// shares a block-aligned prefix with an earlier request hold one
+    /// physical copy and skip that prefill. Off by default; only
+    /// meaningful under [`KvPolicy::Paged`], and auto-disabled per
+    /// worker when the backend cannot restore sessions at a cached
+    /// position (PJRT).
+    pub prefix_cache: PrefixCacheConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -339,6 +360,7 @@ impl Default for CoordinatorConfig {
             kv_policy: KvPolicy::Reserve,
             max_batch: 0,
             prefill_chunk: 0,
+            prefix_cache: PrefixCacheConfig::off(),
         }
     }
 }
@@ -360,6 +382,7 @@ impl CoordinatorConfig {
             kv_policy: KvPolicy::Reserve,
             max_batch: 0,
             prefill_chunk: 0,
+            prefix_cache: PrefixCacheConfig::off(),
         }
     }
 }
@@ -394,21 +417,23 @@ impl Coordinator {
     /// `Send`; each worker owns its own client).
     pub fn add_pool(&mut self, model: &str, n_workers: usize, factory: BackendFactory) {
         let queue = Arc::new(JobQueue::new());
+        let gauges = Arc::new(PoolGauges::new());
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let queue = Arc::clone(&queue);
             let factory = factory.clone();
             let metrics = Arc::clone(&self.metrics);
+            let pool_gauges = Arc::clone(&gauges);
             let cfg = self.cfg.clone();
             let model = model.to_string();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("lpu-worker-{model}-{w}"))
-                    .spawn(move || worker_loop(queue, factory, metrics, cfg))
+                    .spawn(move || worker_loop(queue, factory, metrics, pool_gauges, cfg))
                     .expect("spawn worker"),
             );
         }
-        self.pools.insert(model.to_string(), Pool { queue, workers });
+        self.pools.insert(model.to_string(), Pool { queue, gauges, workers });
     }
 
     /// Models this coordinator serves.
@@ -416,6 +441,16 @@ impl Coordinator {
         let mut m: Vec<String> = self.pools.keys().cloned().collect();
         m.sort();
         m
+    }
+
+    /// Per-pool gauge frames (model name → JSON), sorted by model, for
+    /// the server's `metrics` op.
+    pub fn pools_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::JsonObj::new();
+        for model in self.models() {
+            o.insert(model.clone(), self.pools[&model].gauges.to_json());
+        }
+        crate::util::json::Json::Obj(o)
     }
 
     /// Submit a request; returns a streaming handle.
@@ -477,6 +512,7 @@ fn worker_loop(
     queue: Arc<JobQueue>,
     factory: BackendFactory,
     metrics: Arc<Metrics>,
+    pool_gauges: Arc<PoolGauges>,
     cfg: CoordinatorConfig,
 ) {
     let mut backend = match factory.build() {
@@ -499,7 +535,21 @@ fn worker_loop(
     };
 
     let mut scheduler = Scheduler::new(cfg.policy);
-    let mut kv = KvState::new(cfg.kv_policy, cfg.kv_budget_bytes, cfg.kv_bytes_per_token);
+    let mut kv = KvState::with_prefix(
+        cfg.kv_policy,
+        cfg.kv_budget_bytes,
+        cfg.kv_bytes_per_token,
+        cfg.prefix_cache,
+    );
+    if kv.prefix_cache_enabled() && !backend.supports_session_restore() {
+        // A hit is only real if the backend can attach the cached KV:
+        // without session restore (PJRT), admission must never claim
+        // one, or the lane would decode against missing context.
+        kv.disable_prefix_cache();
+    }
+    // Cumulative pager counters; the delta after each admission feeds
+    // the coordinator metrics and this pool's gauges.
+    let mut prefix_seen = kv.prefix_stats();
     if let Some(capacity) = kv.capacity_blocks() {
         metrics.set_kv_capacity_blocks(capacity as u64);
     }
@@ -520,6 +570,7 @@ fn worker_loop(
         while slots.len() < cfg.max_active_per_worker {
             let popped = queue.pop_with(slots.is_empty(), |job| {
                 kv.admit(
+                    &job.request.prompt,
                     job.init_ctx(),
                     job.request.worst_case_tokens(),
                     slots.iter().map(|s| &s.lane),
@@ -527,13 +578,21 @@ fn worker_loop(
             });
             match popped {
                 Popped::Job(job) => {
-                    let holdings =
-                        kv.reserve_admitted(job.init_ctx(), job.request.worst_case_tokens());
+                    let holdings = kv.reserve_admitted(
+                        &job.request.prompt,
+                        job.init_ctx(),
+                        job.request.worst_case_tokens(),
+                    );
+                    let stats = kv.prefix_stats();
+                    let delta = stats.delta(&prefix_seen);
+                    prefix_seen = stats;
+                    metrics.on_prefix(&delta);
+                    pool_gauges.on_prefix(&delta);
                     // Peak occupancy can be set by admission itself
                     // (the virtual harness records it there too).
                     metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
                     let Job { request_id, request, events, submitted, resume } = job;
-                    match backend.new_session() {
+                    match backend.new_session_at(holdings.prefix_hit) {
                         Ok(session) => {
                             if resume.is_none() {
                                 metrics.on_start(submitted.elapsed());
@@ -617,6 +676,7 @@ fn worker_loop(
             let s = &mut slots[p.slot];
             if s.lane.in_prefill() {
                 metrics.on_prefill(p.span);
+                pool_gauges.on_prefill(p.span);
             }
             let tokens = s.lane.feed_span(p.span);
             let session = std::mem::replace(&mut s.session, Box::new(()));
@@ -634,12 +694,19 @@ fn worker_loop(
             match result {
                 Ok(logits) => {
                     let s = &mut slots[i];
+                    let was_prefill = s.lane.in_prefill();
                     match s.lane.absorb(p.span, &logits) {
                         Absorbed::Prefilling => {
                             // Still prefilling: a pick without a token.
                             scheduler.note_progress(i, s.lane.tokens_emitted());
                         }
                         Absorbed::Token { token, finished } => {
+                            if was_prefill {
+                                // Initial context fully written: its
+                                // block-aligned prompt prefix becomes
+                                // shareable.
+                                kv.on_prefill_complete(&s.lane);
+                            }
                             if s.lane.tokens_emitted() == 1 {
                                 // A resumed lane can't reach here (its
                                 // stream starts non-empty), so TTFT
@@ -1006,11 +1073,58 @@ mod tests {
             kv_bytes_per_token: 100,
             kv_budget_bytes: 288 * 100,
             kv_policy: KvPolicy::Paged { block_tokens: 16 },
-            max_batch: 0,
-            prefill_chunk: 0,
+            ..CoordinatorConfig::default()
         });
         assert_eq!(paged, unbounded);
         assert!(paged.iter().all(|t| t.len() == 120));
+    }
+
+    #[test]
+    fn prefix_cache_shares_blocks_and_streams_stay_identical() {
+        // Three sequential identical-prompt requests under paged KV:
+        // with the prefix cache on, the 2nd and 3rd skip most of their
+        // prefill (hit tokens + shared blocks + a CoW tail split each),
+        // and every stream is bit-identical to a cache-off run.
+        let prompt: Vec<i64> = (0..64).map(|i| (i % 32) as i64).collect();
+        let run = |prefix_cache: PrefixCacheConfig| {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                kv_bytes_per_token: 100,
+                kv_budget_bytes: 64 * 16 * 100, // 64 blocks of 16 tokens
+                kv_policy: KvPolicy::Paged { block_tokens: 16 },
+                prefix_cache,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+            // Strictly sequential: each request completes before the
+            // next submits, so later prompts can only be served from a
+            // registered prefix.
+            let streams: Vec<Vec<i64>> = (0..3)
+                .map(|_| {
+                    c.submit(Request::greedy("opt-tiny", prompt.clone(), 8))
+                        .unwrap()
+                        .wait()
+                        .unwrap()
+                })
+                .collect();
+            let snap = c.metrics.snapshot();
+            c.shutdown();
+            (streams, snap)
+        };
+        let (off_streams, off_snap) = run(PrefixCacheConfig::off());
+        let (on_streams, on_snap) = run(PrefixCacheConfig::on());
+        assert_eq!(on_streams, off_streams, "prefix cache must not change streams");
+        assert_eq!(off_snap.prefix_hit_tokens, 0);
+        // 64-token prompt = 4 full 16-token blocks. Each hit request
+        // skips 63 tokens (one token must be fed for logits), shares 3
+        // blocks, and CoW-splits the written tail block.
+        assert_eq!(on_snap.prefix_hit_tokens, 2 * 63);
+        assert_eq!(on_snap.shared_blocks, 2 * 3);
+        assert_eq!(on_snap.cow_splits, 2);
+        // The skipped prefill is real work not done.
+        assert_eq!(off_snap.prefill_tokens, 3 * 64);
+        assert_eq!(on_snap.prefill_tokens, 64 + 2);
     }
 
     #[test]
@@ -1028,8 +1142,7 @@ mod tests {
                 kv_bytes_per_token: 100,
                 kv_budget_bytes: 16 * 100,
                 kv_policy,
-                max_batch: 0,
-                prefill_chunk: 0,
+                ..CoordinatorConfig::default()
             });
             c.add_pool("opt-tiny", 1, BackendFactory::sim_failing("opt-tiny", 64, 4));
             for i in 0..8i64 {

@@ -30,6 +30,8 @@
 //! [`super::lane::plan_step`]; this module only owns the per-slot
 //! policy state, mirrored through the same churn calls as `progress`.
 
+use std::collections::HashMap;
+
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedulerPolicy {
@@ -304,6 +306,141 @@ impl KvPolicy {
     }
 }
 
+/// Identity of one physical KV block inside a worker's [`KvPager`].
+pub type KvBlockId = u32;
+
+/// Prefix-cache configuration (`--prefix-cache on|off[:capacity]`).
+/// Only meaningful under [`KvPolicy::Paged`]: the cache pins
+/// block-aligned prompt-prefix blocks in the pager so later requests
+/// with the same prefix share one physical copy and skip that prefill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefixCacheConfig {
+    /// Whether the block-granular prefix index is active.
+    pub enabled: bool,
+    /// Max blocks the index may pin (`usize::MAX` = bounded only by the
+    /// pager capacity; cache-only blocks are reclaimed on demand either
+    /// way).
+    pub capacity_blocks: usize,
+}
+
+impl PrefixCacheConfig {
+    /// Prefix caching disabled (the default).
+    pub fn off() -> PrefixCacheConfig {
+        PrefixCacheConfig { enabled: false, capacity_blocks: 0 }
+    }
+
+    /// Prefix caching enabled, bounded only by the pager capacity.
+    pub fn on() -> PrefixCacheConfig {
+        PrefixCacheConfig { enabled: true, capacity_blocks: usize::MAX }
+    }
+
+    /// Parse a CLI spelling: `off`, `on`, or `on:<blocks>`.
+    pub fn parse(s: &str) -> Option<PrefixCacheConfig> {
+        match s {
+            "off" => Some(PrefixCacheConfig::off()),
+            "on" => Some(PrefixCacheConfig::on()),
+            _ => {
+                let rest = s.strip_prefix("on:")?;
+                let capacity_blocks: usize = rest.parse().ok().filter(|&c| c > 0)?;
+                Some(PrefixCacheConfig { enabled: true, capacity_blocks })
+            }
+        }
+    }
+
+    /// Stable identifier used in report/bench output.
+    pub fn name(&self) -> String {
+        if !self.enabled {
+            "off".to_string()
+        } else if self.capacity_blocks == usize::MAX {
+            "on".to_string()
+        } else {
+            format!("on:{}", self.capacity_blocks)
+        }
+    }
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig::off()
+    }
+}
+
+/// Cumulative prefix-cache counters (monotone over a pager's lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Prompt tokens whose prefill was skipped via cached blocks.
+    pub hit_tokens: u64,
+    /// Cached blocks granted to admitted lanes (each grant is one
+    /// physical block held by one more lane instead of being recomputed
+    /// and re-stored).
+    pub shared_blocks: u64,
+    /// Copy-on-write splits: admissions whose first uncached write
+    /// landed inside a shared tail block, so the tail was split into an
+    /// exclusive copy instead of shared.
+    pub cow_splits: u64,
+}
+
+impl PrefixStats {
+    /// Component-wise `self - prev` (for per-admission metric deltas).
+    pub fn delta(&self, prev: &PrefixStats) -> PrefixStats {
+        PrefixStats {
+            hit_tokens: self.hit_tokens.saturating_sub(prev.hit_tokens),
+            shared_blocks: self.shared_blocks.saturating_sub(prev.shared_blocks),
+            cow_splits: self.cow_splits.saturating_sub(prev.cow_splits),
+        }
+    }
+
+    /// Component-wise sum (for aggregating per-worker pagers).
+    pub fn plus(&self, o: &PrefixStats) -> PrefixStats {
+        PrefixStats {
+            hit_tokens: self.hit_tokens + o.hit_tokens,
+            shared_blocks: self.shared_blocks + o.shared_blocks,
+            cow_splits: self.cow_splits + o.cow_splits,
+        }
+    }
+}
+
+/// One indexed prompt-prefix block: the physical block holding the KV
+/// of a block-aligned token run, the run itself (collision check — the
+/// chain key is a hash), and an LRU stamp.
+#[derive(Clone, Debug)]
+struct CacheEntry {
+    block: KvBlockId,
+    run: Vec<i64>,
+    last_used: u64,
+}
+
+/// The block-granular prefix index: a hash-chain over block-aligned
+/// token runs (`key_i = h(key_{i-1}, run_i)`), so a lookup walks the
+/// prompt block by block and stops at the first miss. The index holds
+/// its own refcount on every entry's block, which is what keeps a
+/// prefix resident after the request that computed it retires.
+#[derive(Clone, Debug)]
+struct PrefixIndex {
+    capacity_blocks: usize,
+    entries: HashMap<u64, CacheEntry>,
+}
+
+/// Prefix-index pin bound applied when BOTH the pager and the requested
+/// cache capacity are unbounded. An unbounded pager never exhausts its
+/// id space, so nothing would ever evict: without this clamp every
+/// distinct prompt prefix a long-running server sees would pin a block
+/// and an index entry forever. (The CLI already forbids an unbounded
+/// paged budget; this guards the library API.)
+pub const DEFAULT_UNBOUNDED_PREFIX_CACHE_BLOCKS: usize = 4096;
+
+const CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Chain-hash one block-aligned token run onto the parent key.
+fn chain_key(prev: u64, run: &[i64]) -> u64 {
+    let mut h = prev.rotate_left(17) ^ (run.len() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for &t in run {
+        h ^= (t as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Block-granular KV-cache allocator (per worker/device).
 ///
 /// The budget is carved into fixed-size blocks of `block_tokens` context
@@ -313,18 +450,53 @@ impl KvPolicy {
 /// worst case — the fragmentation the hardware-perspective survey
 /// (arXiv:2410.04466) identifies as the dominant throughput limiter —
 /// at the price of a preemption path for when growth outruns the budget.
+///
+/// Blocks are **refcounted physical identities** ([`KvBlockId`]): a
+/// lane's holding is a logical→physical block map, and with the prefix
+/// cache enabled ([`KvPager::with_prefix_cache`]) N lanes with a common
+/// block-aligned prompt prefix map their leading logical blocks to
+/// *one* physical copy. A lane about to write into a shared tail block
+/// gets an exclusive copy instead (copy-on-write split, counted in
+/// [`PrefixStats::cow_splits`]), so shared blocks are only ever read.
+/// Cache-only blocks (refcount held by the index alone) stay resident
+/// for future hits but are reclaimed LRU-first the moment a lane needs
+/// a block, so caching never steals capacity from live traffic.
 #[derive(Clone, Debug)]
 pub struct KvPager {
     block_tokens: usize,
     capacity_blocks: usize,
+    /// Per-block refcount, indexed by [`KvBlockId`]. A block is live
+    /// while its count is > 0 (held by lanes and/or the prefix index).
+    refcounts: Vec<u32>,
+    /// Whether the prefix index holds block `id` (indexed like
+    /// `refcounts`). Kept so the cache-only count below stays O(1) to
+    /// maintain instead of a per-step index scan.
+    cached: Vec<bool>,
+    /// Blocks held by the index alone (refcount 1 and `cached`): the
+    /// reclaimable pool, read on every `plan_step` growth gate.
+    cache_only: usize,
+    /// Freed block ids available for reuse.
+    free: Vec<KvBlockId>,
+    /// Blocks never yet handed out: `next_block..capacity_blocks`.
+    next_block: usize,
+    /// Blocks with refcount > 0 (physical occupancy, shared counted
+    /// once; includes cache-only blocks, which do occupy HBM).
     in_use: usize,
     peak: usize,
+    cache: Option<PrefixIndex>,
+    /// LRU clock for the prefix index (logical, not wall time — virtual
+    /// runs stay deterministic).
+    tick: u64,
+    prefix_hit_tokens: u64,
+    shared_block_grants: u64,
+    cow_splits: u64,
 }
 
 impl KvPager {
     /// Size the pager from a byte budget and the model's per-token KV
     /// footprint. A zero `kv_bytes_per_token` (admission disabled) or a
-    /// `u64::MAX` budget yields an effectively unbounded pager.
+    /// `u64::MAX` budget yields an effectively unbounded pager. The
+    /// prefix cache starts disabled; see [`KvPager::with_prefix_cache`].
     pub fn new(budget_bytes: u64, kv_bytes_per_token: u64, block_tokens: usize) -> KvPager {
         let block_tokens = block_tokens.max(1);
         let bytes_per_block = kv_bytes_per_token.saturating_mul(block_tokens as u64);
@@ -333,7 +505,59 @@ impl KvPager {
         } else {
             usize::try_from(budget_bytes / bytes_per_block).unwrap_or(usize::MAX)
         };
-        KvPager { block_tokens, capacity_blocks, in_use: 0, peak: 0 }
+        KvPager {
+            block_tokens,
+            capacity_blocks,
+            refcounts: Vec::new(),
+            cached: Vec::new(),
+            cache_only: 0,
+            free: Vec::new(),
+            next_block: 0,
+            in_use: 0,
+            peak: 0,
+            cache: None,
+            tick: 0,
+            prefix_hit_tokens: 0,
+            shared_block_grants: 0,
+            cow_splits: 0,
+        }
+    }
+
+    /// Enable (or explicitly disable) the prefix index. On an unbounded
+    /// pager an unbounded index would never evict (the id space never
+    /// runs out), so the pin count is clamped to
+    /// [`DEFAULT_UNBOUNDED_PREFIX_CACHE_BLOCKS`] there.
+    pub fn with_prefix_cache(mut self, cfg: PrefixCacheConfig) -> KvPager {
+        if cfg.enabled {
+            let mut capacity_blocks = cfg.capacity_blocks.max(1);
+            if capacity_blocks == usize::MAX && self.capacity_blocks == usize::MAX {
+                capacity_blocks = DEFAULT_UNBOUNDED_PREFIX_CACHE_BLOCKS;
+            }
+            self.cache = Some(PrefixIndex { capacity_blocks, entries: HashMap::new() });
+        } else {
+            self.cache = None;
+        }
+        self
+    }
+
+    /// Whether the prefix index is active.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Drop the prefix index, releasing every cache-held block (used
+    /// when the backend cannot restore sessions at a cached position).
+    pub fn disable_prefix_cache(&mut self) {
+        if let Some(cache) = self.cache.take() {
+            for e in cache.entries.into_values() {
+                self.cached[e.block as usize] = false;
+                if self.refcounts[e.block as usize] == 1 {
+                    self.cache_only -= 1;
+                }
+                self.release_block(e.block);
+            }
+        }
+        debug_assert_eq!(self.cache_only, 0, "cache-only count must drain with the index");
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -344,17 +568,53 @@ impl KvPager {
         self.capacity_blocks
     }
 
+    /// Physical blocks with refcount > 0 (shared blocks counted once;
+    /// includes cache-only blocks — they occupy HBM until reclaimed).
     pub fn blocks_in_use(&self) -> usize {
         self.in_use
     }
 
+    /// Blocks that are strictly free (never allocated or fully
+    /// released). See [`KvPager::allocatable_blocks`] for what a lane
+    /// can actually get.
     pub fn free_blocks(&self) -> usize {
         self.capacity_blocks - self.in_use
+    }
+
+    /// Blocks an allocation could obtain right now: strictly free plus
+    /// cache-only blocks (reclaimed LRU-first on demand).
+    pub fn allocatable_blocks(&self) -> usize {
+        self.free_blocks().saturating_add(self.reclaimable_blocks())
+    }
+
+    /// Cache-only blocks (resident for future hits, evictable now).
+    /// O(1): maintained by retain/release/evict, not scanned.
+    fn reclaimable_blocks(&self) -> usize {
+        self.cache_only
+    }
+
+    /// Blocks currently pinned by the prefix index.
+    pub fn cached_blocks(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.entries.len())
+    }
+
+    /// Refcount of `id` (0 = free / never allocated). Test hook.
+    pub fn refcount(&self, id: KvBlockId) -> u32 {
+        self.refcounts.get(id as usize).copied().unwrap_or(0)
     }
 
     /// High-water mark of blocks in use over the pager's lifetime.
     pub fn peak_blocks(&self) -> usize {
         self.peak
+    }
+
+    /// Cumulative prefix-cache counters.
+    pub fn prefix_stats(&self) -> PrefixStats {
+        PrefixStats {
+            hit_tokens: self.prefix_hit_tokens,
+            shared_blocks: self.shared_block_grants,
+            cow_splits: self.cow_splits,
+        }
     }
 
     /// Blocks a `tokens`-token context occupies.
@@ -371,7 +631,8 @@ impl KvPager {
 
     /// Blocks required to admit a request whose context (prompt plus any
     /// resumed tokens) is `init_ctx`: enough to rebuild the context and
-    /// decode one token. This is what admission physically reserves.
+    /// decode one token. This is the logical footprint admission maps;
+    /// with a prefix hit, part of it is shared rather than allocated.
     pub fn admit_blocks(&self, init_ctx: usize) -> usize {
         self.blocks_for(init_ctx + 1)
     }
@@ -385,44 +646,337 @@ impl KvPager {
     /// thrashes; the half-growth estimate keeps steady-state preemption
     /// rare while still admitting far more than worst-case reservation.
     /// Since `expected ≥ blocks held` for every slot, a passing gate
-    /// also guarantees the candidate's physical reservation fits.
+    /// also guarantees the candidate's physical reservation fits
+    /// (cache-only blocks are reclaimed on demand, so they never make
+    /// the gate optimistic).
     pub fn expected_blocks(&self, now_tokens: usize, worst_case_tokens: usize) -> usize {
         let now = self.blocks_for(now_tokens);
         let worst = self.blocks_for(worst_case_tokens.max(now_tokens));
         now + (worst - now).div_ceil(2)
     }
 
-    /// Reserve `blocks` if they fit; false (and no change) otherwise.
-    pub fn try_reserve(&mut self, blocks: usize) -> bool {
-        if blocks <= self.free_blocks() {
-            self.in_use += blocks;
-            self.peak = self.peak.max(self.in_use);
-            true
-        } else {
-            false
+    /// Allocate one exclusive block (refcount 1), reclaiming the LRU
+    /// cache-only block when nothing is strictly free. `None` = the
+    /// pager is genuinely full (every block is held by a lane or a
+    /// shared prefix in use) — the preemption trigger.
+    fn alloc_block(&mut self) -> Option<KvBlockId> {
+        if self.free.is_empty() && self.next_block >= self.capacity_blocks && !self.evict_one()
+        {
+            return None;
+        }
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                let id = KvBlockId::try_from(self.next_block).expect("block id fits u32");
+                self.next_block += 1;
+                self.refcounts.push(0);
+                self.cached.push(false);
+                id
+            }
+        };
+        debug_assert_eq!(self.refcounts[id as usize], 0, "free list held a live block");
+        debug_assert!(!self.cached[id as usize], "free list held a cache-pinned block");
+        self.refcounts[id as usize] = 1;
+        self.in_use += 1;
+        self.peak = self.peak.max(self.in_use);
+        Some(id)
+    }
+
+    /// Add one holder to a live block (a lane sharing a cached prefix
+    /// block, or the index pinning a just-prefilled block).
+    fn retain_block(&mut self, id: KvBlockId) {
+        debug_assert!(self.refcounts[id as usize] > 0, "retain of a dead block {id}");
+        if self.cached[id as usize] && self.refcounts[id as usize] == 1 {
+            // A cache-only block gains a lane holder: no longer
+            // reclaimable.
+            self.cache_only -= 1;
+        }
+        self.refcounts[id as usize] += 1;
+    }
+
+    /// Drop one holder of `id`; the block returns to the free list when
+    /// its last holder releases. A refcount underflow (double release —
+    /// an accounting bug upstream) trips a debug assertion; release
+    /// builds shed the call without touching the free list, so the bug
+    /// surfaces as a visible block leak instead of list corruption.
+    pub fn release_block(&mut self, id: KvBlockId) {
+        let Some(rc) = self.refcounts.get_mut(id as usize) else {
+            if cfg!(debug_assertions) {
+                panic!("release of unknown KV block {id}");
+            }
+            return;
+        };
+        debug_assert!(*rc > 0, "refcount underflow: double release of KV block {id}");
+        if *rc == 0 {
+            return; // saturating shed in release builds
+        }
+        *rc -= 1;
+        let rc_now = *rc;
+        if rc_now == 0 {
+            self.in_use -= 1;
+            debug_assert!(!self.cached[id as usize], "cache-pinned block fully released");
+            self.free.push(id);
+        } else if rc_now == 1 && self.cached[id as usize] {
+            // Last lane holder gone; only the index holds it now.
+            self.cache_only += 1;
         }
     }
 
-    /// Grow a slot holding `held` blocks to cover `target_tokens` of
-    /// context. Returns the new holding on success (unchanged if the
-    /// target is already covered); `None` — reserving nothing — when the
-    /// pager lacks the blocks, which is the preemption trigger.
-    pub fn try_grow(&mut self, held: usize, target_tokens: usize) -> Option<usize> {
+    /// Release a lane's whole block map (retired, errored, cancelled,
+    /// preempted). Shared blocks simply lose one holder; blocks the
+    /// index still pins stay resident for future hits.
+    pub fn release_map(&mut self, map: &[KvBlockId]) {
+        for &id in map {
+            self.release_block(id);
+        }
+    }
+
+    /// Grow a lane's block map to cover `target_tokens` of context.
+    /// Appends exclusively-owned blocks; on exhaustion nothing is
+    /// retained (all-or-nothing, the preemption trigger).
+    pub fn try_grow_map(&mut self, map: &mut Vec<KvBlockId>, target_tokens: usize) -> bool {
         let needed = self.blocks_for(target_tokens);
-        if needed <= held {
-            return Some(held);
+        let start = map.len();
+        while map.len() < needed {
+            match self.alloc_block() {
+                Some(id) => map.push(id),
+                None => {
+                    let added: Vec<KvBlockId> = map.drain(start..).collect();
+                    for id in added {
+                        self.release_block(id);
+                    }
+                    return false;
+                }
+            }
         }
-        if self.try_reserve(needed - held) {
-            Some(needed)
-        } else {
-            None
+        true
+    }
+
+    /// Leading full blocks of `prompt` resident in the index right now
+    /// (non-mutating diagnostic/test probe; no LRU bump). Note this is
+    /// the raw chain length — the admission gate uses
+    /// [`KvPager::prefix_credit`], which additionally applies the
+    /// feed-one-token cap and the lane-held (refcount ≥ 2) filter.
+    pub fn lookup_prefix_blocks(&self, prompt: &[i64]) -> usize {
+        let Some(cache) = &self.cache else { return 0 };
+        let mut key = CHAIN_SEED;
+        let mut n = 0usize;
+        for run in prompt.chunks_exact(self.block_tokens) {
+            key = chain_key(key, run);
+            match cache.entries.get(&key) {
+                Some(e) if e.run == run => n += 1,
+                _ => break,
+            }
+        }
+        n
+    }
+
+    /// The (hit tokens, shared blocks) a `chain_blocks`-block resident
+    /// chain yields for an `init_ctx` initial context: the hit is
+    /// capped at `init_ctx - 1` (one token must be fed for logits), and
+    /// a mid-block cap excludes the tail block from sharing (it gets a
+    /// copy-on-write split instead). This is THE formula — the
+    /// admission gate's credit ([`KvPager::prefix_credit`]) and the
+    /// reservation ([`KvPager::admit_map`]) both derive from it, so the
+    /// gate can never over-credit what the reservation actually shares.
+    fn hit_and_shared(&self, chain_blocks: usize, init_ctx: usize) -> (usize, usize) {
+        if init_ctx <= 1 {
+            return (0, 0);
+        }
+        let hit = (chain_blocks * self.block_tokens).min(init_ctx - 1);
+        (hit, hit / self.block_tokens)
+    }
+
+    /// Capacity the admission gate may credit a candidate for sharing
+    /// this prompt's resident prefix (non-mutating; no LRU bump).
+    ///
+    /// Counts only shared-chain blocks that are **already lane-held**
+    /// (refcount ≥ 2, i.e. cache + at least one lane): those genuinely
+    /// cost the candidate nothing, and they are covered by the holding
+    /// lane's committed footprint on the gate's other side. A
+    /// *cache-only* block must NOT be credited even though the
+    /// candidate would share it — it already occupies capacity and is
+    /// tolerated only because it is reclaimable; the act of sharing it
+    /// pins it, shrinking the reclaimable pool the gate's slack relies
+    /// on. Crediting it would let `reserve_admitted` exceed physical
+    /// capacity (gate passes, then admission pins the blocks it was
+    /// credited for and the final exclusive allocation finds nothing
+    /// free or evictable).
+    pub fn prefix_credit(&self, prompt: &[i64], init_ctx: usize) -> usize {
+        let Some(cache) = &self.cache else { return 0 };
+        if init_ctx <= 1 {
+            return 0;
+        }
+        // Walk at most the blocks admission would share: capping the
+        // walk at (init_ctx - 1) / block_tokens full blocks is exactly
+        // the hit_and_shared cap (this runs on every refused admission
+        // poll, so no Vec and no probes past the shareable prefix).
+        let max_shared = (init_ctx - 1) / self.block_tokens;
+        let mut key = CHAIN_SEED;
+        let mut credit = 0usize;
+        for run in prompt.chunks_exact(self.block_tokens).take(max_shared) {
+            key = chain_key(key, run);
+            match cache.entries.get(&key) {
+                Some(e) if e.run == run => {
+                    if self.refcounts[e.block as usize] >= 2 {
+                        credit += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+        credit
+    }
+
+    /// Walk the index for `prompt`'s longest cached block chain, bump
+    /// its recency, and return the physical blocks in logical order.
+    fn matched_chain(&mut self, prompt: &[i64]) -> Vec<KvBlockId> {
+        let bt = self.block_tokens;
+        let mut tick = self.tick;
+        let mut blocks = Vec::new();
+        if let Some(cache) = &mut self.cache {
+            let mut key = CHAIN_SEED;
+            for run in prompt.chunks_exact(bt) {
+                key = chain_key(key, run);
+                match cache.entries.get_mut(&key) {
+                    Some(e) if e.run == run => {
+                        tick += 1;
+                        e.last_used = tick;
+                        blocks.push(e.block);
+                    }
+                    _ => break,
+                }
+            }
+        }
+        self.tick = tick;
+        blocks
+    }
+
+    /// Build the block map for a just-admitted request whose initial
+    /// context (prompt plus any resumed tokens) is `init_ctx`. Returns
+    /// `(map, prefix_hit)`:
+    ///
+    /// * the leading blocks are **shared** with the prefix index where
+    ///   the prompt's block chain is resident — up to `init_ctx - 1`
+    ///   tokens, because the lane must still feed at least one context
+    ///   token to produce logits;
+    /// * if that cap lands *inside* a cached block (the lane's first
+    ///   write would hit a block other lanes may be reading), the tail
+    ///   is **copy-on-write split**: allocated exclusively instead of
+    ///   shared, counted in [`PrefixStats::cow_splits`];
+    /// * the remainder (uncached suffix + one decode token) is
+    ///   allocated exclusively.
+    ///
+    /// The lane starts prefill at `prefix_hit`: those tokens' KV
+    /// already exists physically and is never recomputed or re-stored.
+    pub fn admit_map(&mut self, prompt: &[i64], init_ctx: usize) -> (Vec<KvBlockId>, usize) {
+        let total = self.admit_blocks(init_ctx);
+        let mut map: Vec<KvBlockId> = Vec::with_capacity(total);
+        let mut hit = 0usize;
+        if self.cache.is_some() && init_ctx > 1 {
+            let chain = self.matched_chain(prompt);
+            let (h, shared_n) = self.hit_and_shared(chain.len(), init_ctx);
+            hit = h;
+            for &id in &chain[..shared_n] {
+                self.retain_block(id);
+                map.push(id);
+            }
+            self.shared_block_grants += shared_n as u64;
+            self.prefix_hit_tokens += hit as u64;
+            if hit % self.block_tokens != 0 {
+                // First write at position `hit` lands inside cached
+                // block `shared_n`: split it — the exclusive copy is
+                // allocated below with the rest of the suffix.
+                self.cow_splits += 1;
+            }
+        }
+        while map.len() < total {
+            match self.alloc_block() {
+                Some(id) => map.push(id),
+                None => {
+                    if cfg!(debug_assertions) {
+                        panic!("admission gate admitted beyond the pager capacity");
+                    }
+                    break;
+                }
+            }
+        }
+        (map, hit)
+    }
+
+    /// Index `prompt`'s full blocks out of a lane's block map (called
+    /// when the lane completes prefill, i.e. the blocks' KV is fully
+    /// written). Existing entries are refreshed, new entries pin their
+    /// block; insertion stops when the cache is at capacity and nothing
+    /// is evictable, or at a hash-collision mismatch (deeper chain keys
+    /// would inherit the collision).
+    pub fn register_prefix(&mut self, prompt: &[i64], map: &[KvBlockId]) {
+        if self.cache.is_none() {
+            return;
+        }
+        let bt = self.block_tokens;
+        let full = (prompt.len() / bt).min(map.len());
+        let mut key = CHAIN_SEED;
+        for (i, &block) in map.iter().enumerate().take(full) {
+            let run = &prompt[i * bt..(i + 1) * bt];
+            key = chain_key(key, run);
+            self.tick += 1;
+            let tick = self.tick;
+            let cache = self.cache.as_mut().expect("checked above");
+            if let Some(e) = cache.entries.get_mut(&key) {
+                if e.run != run {
+                    // Collision: stop before poisoning the chain — and
+                    // do NOT refresh the foreign entry's recency, or
+                    // colliding traffic would keep it permanently hot
+                    // and this chain could never be indexed here.
+                    break;
+                }
+                e.last_used = tick;
+                continue;
+            }
+            let at_capacity = cache.entries.len() >= cache.capacity_blocks;
+            if at_capacity && !self.evict_one() {
+                break;
+            }
+            self.retain_block(block);
+            self.cached[block as usize] = true;
+            self.cache
+                .as_mut()
+                .expect("checked above")
+                .entries
+                .insert(key, CacheEntry { block, run: run.to_vec(), last_used: tick });
         }
     }
 
-    /// Release a slot's blocks (retired, errored, cancelled, preempted).
-    pub fn release(&mut self, blocks: usize) {
-        debug_assert!(blocks <= self.in_use, "release {blocks} > in use {}", self.in_use);
-        self.in_use = self.in_use.saturating_sub(blocks);
+    /// Evict the least-recently-used cache-only entry (refcount 1 —
+    /// nothing but the index holds its block). Deterministic: ties on
+    /// the LRU stamp break by key value, and the scan itself is
+    /// order-independent. Evicting a mid-chain entry orphans its
+    /// descendants (lookups stop at the gap); they age out by the same
+    /// rule. Returns false when every cached block is also lane-held.
+    fn evict_one(&mut self) -> bool {
+        let Some(cache) = &self.cache else { return false };
+        let mut victim: Option<(u64, u64)> = None;
+        for (&key, e) in &cache.entries {
+            if self.refcounts[e.block as usize] == 1 {
+                let cand = (e.last_used, key);
+                if victim.map_or(true, |v| cand < v) {
+                    victim = Some(cand);
+                }
+            }
+        }
+        let Some((_, key)) = victim else { return false };
+        let e = self
+            .cache
+            .as_mut()
+            .expect("checked above")
+            .entries
+            .remove(&key)
+            .expect("victim exists");
+        self.cached[e.block as usize] = false;
+        self.cache_only -= 1;
+        self.release_block(e.block);
+        true
     }
 }
 
@@ -729,27 +1283,252 @@ mod tests {
     #[test]
     fn pager_grow_release_roundtrip() {
         let mut p = KvPager::new(100_000, 1000, 16); // 6 blocks
-        let mut held = 0usize;
-        // Admit at context 9 -> 1 block.
-        assert!(p.try_reserve(p.admit_blocks(8)));
-        held += p.admit_blocks(8);
-        assert_eq!((held, p.blocks_in_use()), (1, 1));
-        // Growing within the block reserves nothing.
-        held = p.try_grow(held, 16).unwrap();
-        assert_eq!((held, p.blocks_in_use()), (1, 1));
+        // Admit at context 8 (+1 decode token) -> 1 exclusive block.
+        let (mut map, hit) = p.admit_map(&[1, 2, 3, 4, 5, 6, 7, 8], 8);
+        assert_eq!((map.len(), hit, p.blocks_in_use()), (1, 0, 1));
+        // Growing within the block allocates nothing.
+        assert!(p.try_grow_map(&mut map, 16));
+        assert_eq!((map.len(), p.blocks_in_use()), (1, 1));
         // Crossing the boundary takes one more block.
-        held = p.try_grow(held, 17).unwrap();
-        assert_eq!((held, p.blocks_in_use()), (2, 2));
+        assert!(p.try_grow_map(&mut map, 17));
+        assert_eq!((map.len(), p.blocks_in_use()), (2, 2));
         // A jump can take several blocks at once.
-        held = p.try_grow(held, 80).unwrap();
-        assert_eq!((held, p.blocks_in_use()), (5, 5));
-        // Beyond capacity: refused, nothing reserved.
-        assert_eq!(p.try_grow(held, 97), None);
-        assert_eq!(p.blocks_in_use(), 5);
+        assert!(p.try_grow_map(&mut map, 80));
+        assert_eq!((map.len(), p.blocks_in_use()), (5, 5));
+        // Beyond capacity: refused, nothing retained (all-or-nothing).
+        assert!(!p.try_grow_map(&mut map, 97));
+        assert_eq!((map.len(), p.blocks_in_use()), (5, 5));
         assert_eq!(p.peak_blocks(), 5);
-        p.release(held);
+        p.release_map(&map);
         assert_eq!(p.blocks_in_use(), 0);
         assert_eq!(p.peak_blocks(), 5);
+        // Freed ids recycle: the next admission reuses physical blocks.
+        let (map2, _) = p.admit_map(&[9, 9], 2);
+        assert_eq!(p.blocks_in_use(), 1);
+        p.release_map(&map2);
+    }
+
+    // ---- prefix cache (shared blocks + copy-on-write) ----
+
+    /// A 4-token-block pager with the prefix cache on: 12 blocks.
+    fn cached_pager() -> KvPager {
+        KvPager::new(12 * 4 * 10, 10, 4).with_prefix_cache(PrefixCacheConfig::on())
+    }
+
+    #[test]
+    fn prefix_cache_parse_roundtrip() {
+        assert_eq!(PrefixCacheConfig::parse("off"), Some(PrefixCacheConfig::off()));
+        assert_eq!(PrefixCacheConfig::parse("on"), Some(PrefixCacheConfig::on()));
+        assert_eq!(
+            PrefixCacheConfig::parse("on:128"),
+            Some(PrefixCacheConfig { enabled: true, capacity_blocks: 128 })
+        );
+        assert_eq!(PrefixCacheConfig::parse("on:0"), None);
+        assert_eq!(PrefixCacheConfig::parse("nope"), None);
+        for c in [
+            PrefixCacheConfig::off(),
+            PrefixCacheConfig::on(),
+            PrefixCacheConfig { enabled: true, capacity_blocks: 7 },
+        ] {
+            assert_eq!(PrefixCacheConfig::parse(&c.name()), Some(c));
+        }
+    }
+
+    #[test]
+    fn prefix_register_then_share_one_physical_copy() {
+        let mut p = cached_pager();
+        // Cold request: 10-token prompt -> 2 full blocks + partial tail.
+        let prompt: Vec<i64> = (0..10).collect();
+        let (map_a, hit_a) = p.admit_map(&prompt, 10);
+        assert_eq!((map_a.len(), hit_a), (3, 0)); // blocks_for(11)
+        assert_eq!(p.lookup_prefix_blocks(&prompt), 0);
+        p.register_prefix(&prompt, &map_a);
+        // Only the 2 FULL blocks are indexed (the tail is partial).
+        assert_eq!(p.cached_blocks(), 2);
+        assert_eq!(p.lookup_prefix_blocks(&prompt), 2);
+        assert_eq!(p.refcount(map_a[0]), 2); // lane + cache
+        assert_eq!(p.refcount(map_a[2]), 1); // tail: lane only
+        let before = p.blocks_in_use();
+
+        // Second identical prompt: shares the 2 cached blocks (8 tokens
+        // of prefill skipped), allocates only the uncached tail.
+        let (map_b, hit_b) = p.admit_map(&prompt, 10);
+        assert_eq!(hit_b, 8);
+        assert_eq!(&map_b[..2], &map_a[..2], "prefix blocks are physically shared");
+        assert_ne!(map_b[2], map_a[2], "tails are exclusive");
+        assert_eq!(p.refcount(map_a[0]), 3);
+        // One new physical block for B instead of three.
+        assert_eq!(p.blocks_in_use(), before + 1);
+        let stats = p.prefix_stats();
+        assert_eq!((stats.hit_tokens, stats.shared_blocks, stats.cow_splits), (8, 2, 0));
+
+        // Releases drop holders; cached blocks stay resident for hits.
+        p.release_map(&map_b);
+        p.release_map(&map_a);
+        assert_eq!(p.refcount(map_a[0]), 1); // cache only
+        assert_eq!(p.lookup_prefix_blocks(&prompt), 2);
+        assert_eq!(p.blocks_in_use(), 2);
+    }
+
+    #[test]
+    fn prefix_full_block_prompt_cow_splits_the_tail() {
+        let mut p = cached_pager();
+        // 8-token prompt = exactly 2 full blocks.
+        let prompt: Vec<i64> = (100..108).collect();
+        let (map_a, _) = p.admit_map(&prompt, 8);
+        p.register_prefix(&prompt, &map_a);
+        assert_eq!(p.cached_blocks(), 2);
+        // A second identical prompt can share at most init_ctx - 1 = 7
+        // tokens (it must feed one token for logits); its first write
+        // (position 7) lands inside cached block 1 -> CoW split: block 0
+        // shared, block 1 exclusive copy.
+        let (map_b, hit_b) = p.admit_map(&prompt, 8);
+        assert_eq!(hit_b, 7);
+        assert_eq!(map_b[0], map_a[0]);
+        assert_ne!(map_b[1], map_a[1], "written tail must be split, not shared");
+        let stats = p.prefix_stats();
+        assert_eq!((stats.hit_tokens, stats.shared_blocks, stats.cow_splits), (7, 1, 1));
+        p.release_map(&map_a);
+        p.release_map(&map_b);
+    }
+
+    #[test]
+    fn prefix_cache_reclaimed_lru_when_lanes_need_blocks() {
+        // 6 blocks total, 4-token blocks. Cache pa (2 full blocks) and
+        // pb (1 full block), release the lanes, then let growth demand
+        // blocks: cache-only entries must be reclaimed LRU-first, and a
+        // cached block a lane still shares must never be reclaimed.
+        let mut p = KvPager::new(6 * 4 * 10, 10, 4).with_prefix_cache(PrefixCacheConfig::on());
+        let pa: Vec<i64> = vec![1; 8];
+        let pb: Vec<i64> = vec![2; 4];
+        let (ma, _) = p.admit_map(&pa, 8); // 3 blocks
+        p.register_prefix(&pa, &ma);
+        let (mb, _) = p.admit_map(&pb, 4); // 2 blocks
+        p.register_prefix(&pb, &mb);
+        p.release_map(&ma);
+        p.release_map(&mb);
+        assert_eq!((p.cached_blocks(), p.blocks_in_use()), (3, 3));
+        assert_eq!(p.free_blocks(), 3);
+        assert_eq!(p.allocatable_blocks(), 6);
+        // Readmit pa: bumps both pa entries' recency, shares block 0
+        // (hit = min(8, 7) = 7 -> one full shared block + a CoW tail).
+        let (ma2, hit) = p.admit_map(&pa, 8);
+        assert_eq!(hit, 7);
+        assert_eq!(ma2[0], ma[0]);
+        assert_eq!(p.blocks_in_use(), 5); // 3 cached + 2 fresh
+        // Grow a new lane by 2 blocks: one strictly free, one reclaimed
+        // from the LRU evictable entry — pb, since pa was just touched.
+        let mut big: Vec<KvBlockId> = Vec::new();
+        assert!(p.try_grow_map(&mut big, 8));
+        assert_eq!(p.lookup_prefix_blocks(&pb), 0, "LRU entry evicted");
+        assert_eq!(p.lookup_prefix_blocks(&pa), 2, "recent entries survive");
+        // One more block reclaims pa's cache-only second block...
+        assert!(p.try_grow_map(&mut big, 12));
+        assert_eq!(p.lookup_prefix_blocks(&pa), 1);
+        assert_eq!(p.blocks_in_use(), 6);
+        // ...but pa's first block is shared with a live lane (ma2), so
+        // the pager is genuinely full now: growth fails, nothing moves.
+        assert!(!p.try_grow_map(&mut big, 16));
+        assert_eq!(p.blocks_in_use(), 6);
+        assert_eq!(p.lookup_prefix_blocks(&pa), 1);
+        p.release_map(&big);
+        p.release_map(&ma2);
+    }
+
+    #[test]
+    fn prefix_cache_capacity_bounds_pinned_blocks() {
+        let mut p = KvPager::new(u64::MAX, 0, 4)
+            .with_prefix_cache(PrefixCacheConfig { enabled: true, capacity_blocks: 2 });
+        let prompt: Vec<i64> = (0..16).collect(); // 4 full blocks
+        let (map, _) = p.admit_map(&prompt, 16);
+        p.register_prefix(&prompt, &map);
+        // Only 2 of the 4 full blocks fit the index; while the lane
+        // holds every block, nothing is evictable, so insertion stops.
+        assert_eq!(p.cached_blocks(), 2);
+        assert_eq!(p.lookup_prefix_blocks(&prompt), 2);
+        p.release_map(&map);
+        // Re-registering now can rotate entries through eviction, but
+        // the pin count stays bounded.
+        let (map2, hit) = p.admit_map(&prompt, 16);
+        assert_eq!(hit, 8);
+        p.register_prefix(&prompt, &map2);
+        assert!(p.cached_blocks() <= 2);
+        p.release_map(&map2);
+    }
+
+    #[test]
+    fn prefix_chain_verifies_tokens_not_just_hashes() {
+        let mut p = cached_pager();
+        let pa: Vec<i64> = (0..8).collect();
+        let (ma, _) = p.admit_map(&pa, 8);
+        p.register_prefix(&pa, &ma);
+        // Same length, different tokens: no hit.
+        let pb: Vec<i64> = (50..58).collect();
+        assert_eq!(p.lookup_prefix_blocks(&pb), 0);
+        let (mb, hit) = p.admit_map(&pb, 8);
+        assert_eq!(hit, 0);
+        // Shared first block, divergent second: chain stops at 1.
+        let mut pc: Vec<i64> = (0..8).collect();
+        pc[6] = 99;
+        assert_eq!(p.lookup_prefix_blocks(&pc), 1);
+        p.release_map(&ma);
+        p.release_map(&mb);
+    }
+
+    #[test]
+    fn disable_prefix_cache_releases_pinned_blocks() {
+        let mut p = cached_pager();
+        let prompt: Vec<i64> = (0..8).collect();
+        let (map, _) = p.admit_map(&prompt, 8);
+        p.register_prefix(&prompt, &map);
+        p.release_map(&map);
+        assert_eq!(p.blocks_in_use(), 2);
+        p.disable_prefix_cache();
+        assert!(!p.prefix_cache_enabled());
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.cached_blocks(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_off_shares_nothing() {
+        let mut p = KvPager::new(12 * 4 * 10, 10, 4);
+        let prompt: Vec<i64> = (0..8).collect();
+        let (ma, _) = p.admit_map(&prompt, 8);
+        p.register_prefix(&prompt, &ma); // no-op
+        let (mb, hit) = p.admit_map(&prompt, 8);
+        assert_eq!(hit, 0);
+        assert_eq!(p.blocks_in_use(), ma.len() + mb.len());
+        assert_eq!(p.prefix_stats(), PrefixStats::default());
+        p.release_map(&ma);
+        p.release_map(&mb);
+    }
+
+    // ---- release underflow guard ----
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "refcount underflow")]
+    fn double_release_trips_debug_assertion() {
+        let mut p = KvPager::new(100_000, 1000, 16);
+        let (map, _) = p.admit_map(&[1], 1);
+        p.release_map(&map);
+        p.release_map(&map); // double release: accounting bug upstream
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn double_release_saturates_in_release_builds() {
+        let mut p = KvPager::new(100_000, 1000, 16);
+        let (map, _) = p.admit_map(&[1], 1);
+        p.release_map(&map);
+        p.release_map(&map);
+        // The second release is shed: no underflow, no free-list
+        // corruption — the id appears once, so a fresh alloc cannot
+        // hand the same block to two owners.
+        assert_eq!(p.blocks_in_use(), 0);
+        let a = p.alloc_block().unwrap();
+        let b = p.alloc_block().unwrap();
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::util::stats::Summary;
 
 use super::backend::{Backend, SimBackend, StepModel};
 use super::lane::{plan_step, Absorbed, Admit, HoldsLane, KvState, Lane, PlannedLane, ResumeState};
-use super::scheduler::{KvPolicy, Scheduler, SchedulerPolicy};
+use super::scheduler::{KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler, SchedulerPolicy};
 use super::{Coordinator, Request, RequestHandle, TokenEvent};
 
 /// Length distribution for prompts/outputs.
@@ -245,6 +245,10 @@ pub struct VirtualConfig {
     /// single-pass prefill). Mirrors
     /// [`super::CoordinatorConfig::prefill_chunk`].
     pub prefill_chunk: usize,
+    /// Copy-on-write prefix caching over the paged KV blocks. Mirrors
+    /// [`super::CoordinatorConfig::prefix_cache`]; only meaningful with
+    /// [`KvPolicy::Paged`].
+    pub prefix_cache: PrefixCacheConfig,
     /// Batched per-step latency model.
     pub step: StepModel,
 }
@@ -266,6 +270,7 @@ impl VirtualConfig {
             kv_budget_bytes: u64::MAX,
             kv_policy: KvPolicy::Reserve,
             prefill_chunk: 0,
+            prefix_cache: PrefixCacheConfig::off(),
             step,
         }
     }
@@ -327,6 +332,13 @@ pub struct VirtualReport {
     /// Per-worker pager capacity, blocks (0 = reserve policy or
     /// unbounded pager).
     pub kv_capacity_blocks: usize,
+    /// Prompt tokens whose prefill was skipped via cached prefix blocks
+    /// (summed over workers; 0 with the prefix cache off).
+    pub prefix_hit_tokens: u64,
+    /// Cached prefix blocks granted to admitted lanes (cumulative).
+    pub shared_blocks: u64,
+    /// Copy-on-write tail-block splits at admission (cumulative).
+    pub cow_splits: u64,
 }
 
 /// A virtual slot: the shared [`Lane`] plus virtual-time bookkeeping.
@@ -430,7 +442,12 @@ pub fn run_virtual_plan(
         .map(|_| VWorker {
             backend: SimBackend::new(model, vocab),
             scheduler: Scheduler::new(vc.policy),
-            kv: KvState::new(vc.kv_policy, vc.kv_budget_bytes, vc.kv_bytes_per_token),
+            kv: KvState::with_prefix(
+                vc.kv_policy,
+                vc.kv_budget_bytes,
+                vc.kv_bytes_per_token,
+                vc.prefix_cache,
+            ),
             slots: Vec::new(),
             batch: Vec::new(),
             busy_until: 0.0,
@@ -465,7 +482,12 @@ pub fn run_virtual_plan(
             let mut best: Option<usize> = None;
             let mut impossible = false;
             for (i, w) in workers.iter().enumerate() {
-                match w.kv.admit(init_ctx, worst, w.slots.iter().map(|s| &s.lane)) {
+                match w.kv.admit(
+                    &head.request.prompt,
+                    init_ctx,
+                    worst,
+                    w.slots.iter().map(|s| &s.lane),
+                ) {
                     Admit::Reject => {
                         // Capacity is uniform across workers: impossible
                         // here is impossible everywhere.
@@ -498,10 +520,14 @@ pub fn run_virtual_plan(
             let Some(wi) = best else { break };
             let pending = queue.pop_front().unwrap();
             let w = &mut workers[wi];
-            let holdings = w.kv.reserve_admitted(init_ctx, worst);
+            let holdings =
+                w.kv.reserve_admitted(&pending.request.prompt, init_ctx, worst);
             *peak_blocks = (*peak_blocks).max(w.kv.blocks_in_use());
             *peak_kv = (*peak_kv).max(w.kv.bytes_in_use());
-            let session = w.backend.new_session().expect("sim session");
+            // A prefix hit starts the session at the cached position —
+            // the lane feeds only the uncached suffix.
+            let session =
+                w.backend.new_session_at(holdings.prefix_hit).expect("sim session");
             let seed = pending.request.seed ^ (pending.rid as u64 + 1);
             let (resume, first_token_s, last_token_s, token_times) = match pending.resume {
                 Some(r) => (Some(r.state), r.first_token_s, r.last_token_s, r.token_times),
@@ -683,6 +709,9 @@ pub fn run_virtual_plan(
     let ttfts: Vec<f64> = completed.iter().map(|r| r.first_token_s - r.arrival_s).collect();
     let lats: Vec<f64> = completed.iter().map(|r| r.done_s - r.arrival_s).collect();
     let total_tokens: usize = completed.iter().map(|r| r.tokens.len()).sum();
+    let prefix = workers
+        .iter()
+        .fold(PrefixStats::default(), |acc, w| acc.plus(&w.kv.prefix_stats()));
     Ok(VirtualReport {
         policy: vc.policy,
         offered_rate,
@@ -697,6 +726,9 @@ pub fn run_virtual_plan(
         preemptions,
         peak_kv_blocks,
         kv_capacity_blocks,
+        prefix_hit_tokens: prefix.hit_tokens,
+        shared_blocks: prefix.shared_blocks,
+        cow_splits: prefix.cow_splits,
         records,
     })
 }
@@ -721,11 +753,18 @@ fn finish_step(
             logits = Some(w.backend.decode(&mut s.session, token).expect("sim decode"));
         }
         let logits = logits.expect("span is non-empty");
+        let was_prefill = s.lane.in_prefill();
         match s.lane.absorb(p.span, &logits) {
             Absorbed::Prefilling => {
                 w.scheduler.note_progress(p.slot, s.lane.tokens_emitted());
             }
             Absorbed::Token { finished, .. } => {
+                if was_prefill {
+                    // Same hook as the threaded worker loop: the initial
+                    // context is fully written, so the prompt's block
+                    // prefix becomes shareable.
+                    w.kv.on_prefill_complete(&s.lane);
+                }
                 if s.first_token_s.is_none() {
                     s.first_token_s = Some(now);
                 } else {
@@ -997,6 +1036,60 @@ mod tests {
             sjf.request_latency.mean,
             fcfs.request_latency.mean
         );
+    }
+
+    #[test]
+    fn virtual_prefix_cache_skips_prefill_shares_blocks_keeps_streams() {
+        // One cold 512-token prompt, then 7 identical prompts arriving
+        // after its prefill completed: with the prefix cache on they
+        // share the resident blocks and skip 511 tokens of prefill each.
+        let prompt: Vec<i64> = (0..512).map(|i| (i % 256) as i64).collect();
+        let mk_plan = |prompt: &[i64]| -> Vec<(f64, Request)> {
+            let mut plan = vec![(0.0, Request::greedy("opt-tiny", prompt.to_vec(), 8))];
+            for _ in 0..7 {
+                plan.push((1.0, Request::greedy("opt-tiny", prompt.to_vec(), 8)));
+            }
+            plan
+        };
+        let run = |cache: PrefixCacheConfig| -> VirtualReport {
+            let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 8, step_model());
+            vc.kv_bytes_per_token = 100;
+            vc.kv_budget_bytes = 300 * 16 * 100; // 300 blocks of 16 tokens
+            vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+            vc.prefix_cache = cache;
+            run_virtual_plan("opt-tiny", 512, 1.0, mk_plan(&prompt), &vc).unwrap()
+        };
+        let off = run(PrefixCacheConfig::off());
+        let on = run(PrefixCacheConfig::on());
+        // Streams are bit-identical with the cache on vs off.
+        for (a, b) in off.records.iter().zip(&on.records) {
+            assert_eq!(a.tokens, b.tokens, "request {}", a.request_id);
+            assert_eq!(a.tokens.len(), 8);
+        }
+        assert_eq!((off.prefix_hit_tokens, off.shared_blocks, off.cow_splits), (0, 0, 0));
+        // 512-token prompt = 32 full blocks; each hit shares 31 blocks,
+        // skips 511 tokens, and CoW-splits the written tail block.
+        assert_eq!(on.prefix_hit_tokens, 7 * 511);
+        assert_eq!(on.shared_blocks, 7 * 31);
+        assert_eq!(on.cow_splits, 7);
+        // Sharing holds one physical copy of the prefix: peak blocks
+        // drop by roughly the 7 duplicate prefixes.
+        assert!(
+            on.peak_kv_blocks < off.peak_kv_blocks / 2,
+            "peak blocks on {} !< off {} / 2",
+            on.peak_kv_blocks,
+            off.peak_kv_blocks
+        );
+        // Every cache-hit request's TTFT is strictly below the cold one.
+        let ttft = |rec: &VirtualRecord| rec.first_token_s - rec.arrival_s;
+        let cold = ttft(&on.records[0]);
+        for rec in &on.records[1..] {
+            assert!(ttft(rec) < cold, "hit TTFT {} !< cold {}", ttft(rec), cold);
+        }
+        // Reruns stay bit-identical with the cache on.
+        let on2 = run(PrefixCacheConfig::on());
+        assert_eq!(on.records, on2.records);
+        assert_eq!(on.wall_s, on2.wall_s);
     }
 
     #[test]

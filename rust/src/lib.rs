@@ -29,7 +29,10 @@
 //!   recompute-on-readmit), batched fused decode steps (weights stream
 //!   once per step), **single-pass or chunked prefill** (token-budgeted
 //!   prompt chunks interleaved with decode steps so long prompts stop
-//!   inflating neighbors' TPOT), pluggable scheduler policies (FCFS /
+//!   inflating neighbors' TPOT), **copy-on-write prefix caching**
+//!   (refcounted blocks + a block-granular prefix index, so shared
+//!   prompt prefixes hold one physical copy and skip their prefill),
+//!   pluggable scheduler policies (FCFS /
 //!   round-robin / shortest-first), p50/p95/p99 TTFT+TPOT metrics with
 //!   KV-utilization, preemption, and prefill gauges, a seeded Poisson
 //!   load generator, and a deterministic virtual-time load harness.

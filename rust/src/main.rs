@@ -10,7 +10,8 @@ use std::sync::Arc;
 use lpu::compiler::{compile, CompileOpts, ParallelMode};
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    BackendFactory, Coordinator, CoordinatorConfig, KvPolicy, SchedulerPolicy,
+    BackendFactory, Coordinator, CoordinatorConfig, KvPolicy, PrefixCacheConfig,
+    SchedulerPolicy,
 };
 use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
 use lpu::isa::asm;
@@ -29,16 +30,61 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefill-chunk N]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--prefill-chunk N]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefix-cache on|off|on:<blocks>]" },
 ];
 
 fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
     let name = args.opt_or("policy", "rr");
     SchedulerPolicy::parse(name)
         .ok_or_else(|| format!("unknown policy '{name}' (fcfs|rr|sjf)"))
+}
+
+/// Parse the KV-accounting flags shared by `serve` and `loadtest`:
+/// `--kv-budget-mb`, `--kv-policy`, `--prefix-cache`. Returns
+/// `(kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache)`.
+fn kv_args(
+    args: &Args,
+    model: &str,
+) -> Result<(u64, u64, KvPolicy, PrefixCacheConfig), String> {
+    let kv_budget_mb = args.opt_u64("kv-budget-mb", 0)?;
+    let kv_bytes_per_token = if kv_budget_mb == 0 {
+        0
+    } else {
+        // A budget without per-token accounting would silently disable
+        // admission control; refuse rather than no-op the flag.
+        by_name(model).map(|m| m.kv_bytes_per_token()).ok_or_else(|| {
+            format!(
+                "--kv-budget-mb needs a registry model for KV accounting; '{model}' is unknown"
+            )
+        })?
+    };
+    let kv_policy_name = args.opt_or("kv-policy", "reserve");
+    let kv_policy = KvPolicy::parse(kv_policy_name).ok_or_else(|| {
+        format!("unknown kv policy '{kv_policy_name}' (reserve|paged|paged:<tokens>)")
+    })?;
+    if matches!(kv_policy, KvPolicy::Paged { .. }) && kv_budget_mb == 0 {
+        // An unbounded pager never pages: refuse rather than silently
+        // no-op the flag (same stance as --kv-budget-mb with an
+        // unknown model above).
+        return Err("--kv-policy paged needs --kv-budget-mb to bound the pager".into());
+    }
+    let prefix_name = args.opt_or("prefix-cache", "off");
+    let prefix_cache = PrefixCacheConfig::parse(prefix_name).ok_or_else(|| {
+        format!("unknown prefix-cache setting '{prefix_name}' (on|off|on:<blocks>)")
+    })?;
+    if prefix_cache.enabled && !matches!(kv_policy, KvPolicy::Paged { .. }) {
+        // Shared blocks live in the pager; the reserve policy has no
+        // block identities to share.
+        return Err(
+            "--prefix-cache on needs --kv-policy paged (shared blocks live in the pager)"
+                .into(),
+        );
+    }
+    let kv_budget_bytes = if kv_budget_mb == 0 { u64::MAX } else { kv_budget_mb << 20 };
+    Ok((kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache))
 }
 
 fn main() {
@@ -224,26 +270,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown backend '{other}' (pjrt|sim)")),
     };
     let policy = policy_arg(args)?;
-    let kv_budget_mb = args.opt_u64("kv-budget-mb", 0)?;
-    let kv_bytes_per_token = if kv_budget_mb == 0 {
-        0
-    } else {
-        // A budget without per-token accounting would silently disable
-        // admission control; refuse rather than no-op the flag.
-        by_name(&model).map(|m| m.kv_bytes_per_token()).ok_or_else(|| {
-            format!("--kv-budget-mb needs a registry model for KV accounting; '{model}' is unknown")
-        })?
-    };
-    let kv_policy_name = args.opt_or("kv-policy", "reserve");
-    let kv_policy = KvPolicy::parse(kv_policy_name).ok_or_else(|| {
-        format!("unknown kv policy '{kv_policy_name}' (reserve|paged|paged:<tokens>)")
-    })?;
-    if matches!(kv_policy, KvPolicy::Paged { .. }) && kv_budget_mb == 0 {
-        // An unbounded pager never pages: refuse rather than silently
-        // no-op the flag (same stance as --kv-budget-mb with an
-        // unknown model above).
-        return Err("--kv-policy paged needs --kv-budget-mb to bound the pager".into());
-    }
+    let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache) =
+        kv_args(args, &model)?;
     // Chunked prefill: 0 (default) = single-pass prompts; N = at most N
     // prompt tokens per fused step, interleaved with decode steps so a
     // long prompt stops inflating co-batched streams' TPOT.
@@ -252,10 +280,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         max_active_per_worker: args.opt_usize("max-active", 8)?,
         policy,
         kv_bytes_per_token,
-        kv_budget_bytes: if kv_budget_mb == 0 { u64::MAX } else { kv_budget_mb << 20 },
+        kv_budget_bytes,
         kv_policy,
         max_batch: args.opt_usize("max-batch", 0)?,
         prefill_chunk,
+        prefix_cache,
     });
     coord.add_pool(&model, workers, factory);
     let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
@@ -265,9 +294,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         format!("{prefill_chunk}-token chunked prefill")
     };
     println!(
-        "serving '{model}' ({backend}, {} scheduling, {} KV, {prefill_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
+        "serving '{model}' ({backend}, {} scheduling, {} KV, prefix cache {}, {prefill_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
         policy.name(),
         kv_policy.name(),
+        prefix_cache.name(),
         handle.addr
     );
     loop {
@@ -317,10 +347,16 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown backend '{other}'")),
     };
     let policy = policy_arg(args)?;
+    let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache) =
+        kv_args(args, &model)?;
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 4)?,
         policy,
+        kv_bytes_per_token,
+        kv_budget_bytes,
+        kv_policy,
         prefill_chunk: args.opt_usize("prefill-chunk", 0)?,
+        prefix_cache,
         ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, args.opt_usize("workers", 2)?, factory);

@@ -109,6 +109,9 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
                     // Latency tails are policy-dependent; tag the frame
                     // so sweeps can label per-policy results.
                     o.insert("policy", coord.policy().name().into());
+                    // Per-pool prefill/prefix gauges: which model's
+                    // prompts are long, chunked, or cache-friendly.
+                    o.insert("pools", coord.pools_json());
                 }
                 let _ = writeln!(writer, "{j}");
             }
@@ -357,6 +360,14 @@ mod tests {
         assert_eq!(m.get("policy").as_str(), Some("round_robin"));
         assert!(m.get("ttft_p99_s").as_f64().unwrap() >= m.get("ttft_p50_s").as_f64().unwrap());
         assert!(m.get("tpot_p95_s").as_f64().is_some());
+        // Per-pool gauges: each single-token prompt ran as one
+        // single-pass prefill span in the opt-tiny pool.
+        let pool = m.get("pools").get("opt-tiny");
+        assert_eq!(pool.get("prefill_spans").as_u64(), Some(6));
+        assert_eq!(pool.get("prefill_tokens").as_u64(), Some(6));
+        assert_eq!(pool.get("prefix_hit_tokens").as_u64(), Some(0));
+        assert_eq!(pool.get("shared_blocks").as_u64(), Some(0));
+        assert_eq!(pool.get("cow_splits").as_u64(), Some(0));
         h.stop();
     }
 

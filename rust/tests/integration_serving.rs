@@ -16,8 +16,8 @@
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
     run_open_loop, run_virtual, run_virtual_plan, BackendFactory, Coordinator,
-    CoordinatorConfig, KvPolicy, LenDist, Request, SchedulerPolicy, StepModel, VirtualConfig,
-    Workload,
+    CoordinatorConfig, KvPolicy, LenDist, PrefixCacheConfig, Request, SchedulerPolicy,
+    StepModel, VirtualConfig, Workload,
 };
 use lpu::model::by_name;
 use lpu::util::proptest::quick;
@@ -393,6 +393,143 @@ fn prop_paged_preemption_preserves_streams_and_completes() {
                     a.request_id
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---- prefix cache (shared blocks + prefill skip) ----
+
+/// Property: per-seed token streams are bit-identical with the prefix
+/// cache on vs off — including under paged preemption (tight budgets)
+/// and chunked prefill — and rejection decisions do not change. The
+/// workloads share prefixes by construction (a common prefix grafted
+/// onto every prompt) so the cache path actually fires.
+#[test]
+fn prop_prefix_cache_streams_bit_identical() {
+    quick("prefix-cache-streams", |rng| {
+        let policy = *rng.choose(&SchedulerPolicy::all());
+        let workers = rng.range(1, 3);
+        let max_active = rng.range(2, 10);
+        let block_tokens = rng.range(2, 17);
+        let mut base = VirtualConfig::new(policy, workers, max_active, step_model());
+        base.max_batch = rng.range(0, max_active + 1);
+        base.kv_bytes_per_token = 100;
+        base.kv_policy = KvPolicy::Paged { block_tokens };
+        // Tight-but-feasible budget: every request (prompt <= 48 + out
+        // <= 24 = 72 tokens max) can still complete alone; tight cells
+        // exercise preemption with shared blocks in play.
+        base.kv_budget_bytes = rng.range_u64(10_000, 60_000);
+        if rng.bool(0.3) {
+            base.prefill_chunk = rng.range(1, 33);
+        }
+        let shared_prefix_len = rng.range(1, 33);
+        let shared_prefix: Vec<i64> =
+            (0..shared_prefix_len).map(|_| rng.range(0, 128) as i64).collect();
+        let wl = Workload {
+            model: "opt-tiny".into(),
+            rate: rng.range_f64(200.0, 20_000.0),
+            n_requests: rng.range(2, 14),
+            prompt_len: LenDist::Uniform(1, rng.range(2, 16)),
+            output_len: LenDist::Uniform(1, rng.range(2, 24)),
+            vocab: 128,
+            seed: rng.next_u64(),
+        };
+        let plan: Vec<(f64, Request)> = wl
+            .generate()
+            .into_iter()
+            .map(|(at, mut req)| {
+                // Graft the shared prefix onto every prompt so block
+                // sharing genuinely occurs.
+                let mut prompt = shared_prefix.clone();
+                prompt.extend_from_slice(&req.prompt);
+                req.prompt = prompt;
+                (at.as_secs_f64(), req)
+            })
+            .collect();
+        let off = run_virtual_plan(&wl.model, wl.vocab, wl.rate, plan.clone(), &base)?;
+        let mut on_vc = base.clone();
+        on_vc.prefix_cache = PrefixCacheConfig::on();
+        let on = run_virtual_plan(&wl.model, wl.vocab, wl.rate, plan, &on_vc)?;
+        if off.rejected != on.rejected {
+            return Err(format!(
+                "rejection count changed by the prefix cache: {} vs {}",
+                off.rejected, on.rejected
+            ));
+        }
+        for (a, b) in off.records.iter().zip(&on.records) {
+            if a.tokens != b.tokens {
+                return Err(format!(
+                    "request {} stream changed by the prefix cache (block {block_tokens})",
+                    a.request_id
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: with sharing enabled, physical `blocks_in_use` never
+/// exceeds `capacity_blocks` (nor the byte budget), and no request is
+/// lost — for random budgets, block sizes, cache capacities, and
+/// shared-prefix workloads.
+#[test]
+fn prop_prefix_sharing_blocks_never_exceed_capacity() {
+    quick("prefix-sharing-bounded", |rng| {
+        let policy = *rng.choose(&SchedulerPolicy::all());
+        let workers = rng.range(1, 3);
+        let max_active = rng.range(1, 10);
+        let block_tokens = rng.range(1, 24);
+        let mut vc = VirtualConfig::new(policy, workers, max_active, step_model());
+        vc.kv_bytes_per_token = rng.range_u64(1, 1500);
+        vc.kv_budget_bytes = rng.range_u64(2_000, 150_000);
+        vc.kv_policy = KvPolicy::Paged { block_tokens };
+        vc.prefix_cache = if rng.bool(0.5) {
+            PrefixCacheConfig::on()
+        } else {
+            PrefixCacheConfig { enabled: true, capacity_blocks: rng.range(1, 32) }
+        };
+        vc.max_batch = rng.range(0, max_active + 1);
+        let shared_prefix: Vec<i64> =
+            (0..rng.range(1, 24)).map(|_| rng.range(0, 128) as i64).collect();
+        let wl = Workload {
+            model: "opt-tiny".into(),
+            rate: rng.range_f64(100.0, 20_000.0),
+            n_requests: rng.range(1, 16),
+            prompt_len: LenDist::Uniform(1, rng.range(2, 12)),
+            output_len: LenDist::Uniform(1, rng.range(2, 24)),
+            vocab: 128,
+            seed: rng.next_u64(),
+        };
+        let plan: Vec<(f64, Request)> = wl
+            .generate()
+            .into_iter()
+            .map(|(at, mut req)| {
+                let mut prompt = shared_prefix.clone();
+                prompt.extend_from_slice(&req.prompt);
+                req.prompt = prompt;
+                (at.as_secs_f64(), req)
+            })
+            .collect();
+        let r = run_virtual_plan(&wl.model, wl.vocab, wl.rate, plan, &vc)?;
+        if r.kv_capacity_blocks > 0 && r.peak_kv_blocks > r.kv_capacity_blocks {
+            return Err(format!(
+                "peak blocks {} > capacity {} with sharing enabled",
+                r.peak_kv_blocks, r.kv_capacity_blocks
+            ));
+        }
+        if r.peak_kv_reserved > vc.kv_budget_bytes {
+            return Err(format!(
+                "peak KV bytes {} > budget {}",
+                r.peak_kv_reserved, vc.kv_budget_bytes
+            ));
+        }
+        let served = r.records.iter().filter(|rec| !rec.tokens.is_empty()).count();
+        if served + r.rejected != wl.n_requests {
+            return Err(format!(
+                "lost requests: served {served} + rejected {} != {}",
+                r.rejected, wl.n_requests
+            ));
         }
         Ok(())
     });

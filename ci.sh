@@ -44,26 +44,35 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 step "serving bench (smoke) -> BENCH_serving.json"
 # Writes machine-readable results (tok/s, peak active, TTFT/TPOT p99 per
-# cell, both KV policies, the chunked-prefill interference cell, and the
-# shared-prefix cache cell — all sections run in smoke mode) to
-# ../BENCH_serving.json so the perf trajectory is tracked in-repo. This
-# fast-mode output IS the committed baseline (deterministic per seed;
-# the "fast" field labels the mode — compare like with like). A full
-# sweep writes the same path; use LPU_BENCH_JSON=<path> to write
-# elsewhere without touching the baseline.
+# cell, both KV policies, the chunked-prefill interference cell, the
+# shared-prefix cache cell, and the affinity-routing cell — all sections
+# run in smoke mode, router assertions included) to ../BENCH_serving.json
+# so the perf trajectory is tracked in-repo. This fast-mode output IS
+# the committed baseline (deterministic per seed; the "fast" field
+# labels the mode — compare like with like). A full sweep writes the
+# same path; use LPU_BENCH_JSON=<path> to write elsewhere without
+# touching the baseline.
 LPU_BENCH_FAST=1 cargo bench --bench serving_load
 
-step "bench JSON sanity (no null fields survive the bench)"
-# The committed file starts life as a hand-written placeholder with
-# null summary fields (authoring containers lack a Rust toolchain). A
-# bench run must replace every one of them with measured values — a
-# null surviving here means the emitter and the placeholder schema
-# drifted, or a summary field was never computed. Check the file the
-# bench actually wrote (LPU_BENCH_JSON redirects it).
-bench_json="${LPU_BENCH_JSON:-../BENCH_serving.json}"
-if grep -n 'null' "$bench_json"; then
-  echo "error: $bench_json still contains null fields after the bench run" >&2
-  exit 1
-fi
+step "scalability bench -> BENCH_scaling.json"
+# The ESL strong-scaling sweep (Fig 7c: devices, ms/token, speedup,
+# with/without ESL overlap, DGX baseline) is tracked in-repo like the
+# serving baseline. Config-deterministic: no smoke mode needed.
+cargo bench --bench fig7c_scalability
+
+step "bench JSON sanity (no null fields survive the benches)"
+# The committed files start life as hand-written placeholders with null
+# summary fields (authoring containers lack a Rust toolchain). A bench
+# run must replace every one of them with measured values — a null
+# surviving here means the emitter and the placeholder schema drifted,
+# or a summary field was never computed. Check the files the benches
+# actually wrote (LPU_BENCH_JSON / LPU_BENCH_SCALING_JSON redirect them).
+for bench_json in "${LPU_BENCH_JSON:-../BENCH_serving.json}" \
+                  "${LPU_BENCH_SCALING_JSON:-../BENCH_scaling.json}"; do
+  if grep -n 'null' "$bench_json"; then
+    echo "error: $bench_json still contains null fields after the bench run" >&2
+    exit 1
+  fi
+done
 
 printf '\nci.sh: all gates green\n'

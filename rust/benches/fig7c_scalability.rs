@@ -4,12 +4,37 @@
 //!
 //! Paper headlines: LPU 5.43× at 8 devices (1.75×/doubling) vs DGX
 //! 2.65× (1.38×/doubling).
+//!
+//! Results are also written as machine-readable JSON to
+//! `../BENCH_scaling.json` (override with `LPU_BENCH_SCALING_JSON=
+//! <path>`) so the scalability trajectory is tracked in-repo like
+//! `BENCH_serving.json`: every number is a pure function of the model/
+//! device configs, so a diff in review is a real change. `ci.sh` runs
+//! this bench and fails if any `null` survives in the regenerated file.
 
 use lpu::config::LpuConfig;
-use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
+use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling, ScalingPoint};
 use lpu::gpu::{scaling_speedups, GpuConfig};
 use lpu::model::by_name;
+use lpu::util::json::{obj, Json};
 use lpu::util::table::Table;
+
+/// One sweep's rows as JSON cells (devices, ms/token, speedup).
+fn points_json(points: &[ScalingPoint], esl_overlap: bool) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("devices", p.devices.into()),
+                    ("ms_per_token", p.ms_per_token.into()),
+                    ("speedup", p.speedup.into()),
+                    ("esl_overlap", esl_overlap.into()),
+                ])
+            })
+            .collect(),
+    )
+}
 
 fn main() {
     let m = by_name("gpt3-20b").unwrap();
@@ -60,4 +85,47 @@ fn main() {
     }
     s.note("small models saturate on fixed per-token costs; serve them on reconfigured smaller rings instead");
     s.print();
+
+    // ---- machine-readable results (tracked like BENCH_serving.json) ----
+    let doc = obj(vec![
+        ("bench", "fig7c_scalability".into()),
+        ("model", "gpt3-20b".into()),
+        ("device", cfg.name.clone().into()),
+        (
+            "per_doubling",
+            obj(vec![
+                ("lpu_esl_overlap", speedup_per_doubling(&lpu).into()),
+                ("lpu_no_overlap", speedup_per_doubling(&lpu_blocking).into()),
+                ("dgx_a100", dgx.last().map(|d| d.1.powf(1.0 / 3.0)).unwrap_or(1.0).into()),
+                ("paper_lpu", 1.75.into()),
+                ("paper_dgx", 1.38.into()),
+            ]),
+        ),
+        ("lpu_points", points_json(&lpu, true)),
+        ("lpu_no_overlap_points", points_json(&lpu_blocking, false)),
+        (
+            "dgx_points",
+            Json::Arr(
+                dgx.iter()
+                    .map(|&(devices, speedup)| {
+                        obj(vec![("devices", devices.into()), ("speedup", speedup.into())])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "small_model_corollary",
+            obj(vec![
+                ("model", "opt-1.3b".into()),
+                ("per_doubling", speedup_per_doubling(&small).into()),
+                ("points", points_json(&small, true)),
+            ]),
+        ),
+    ]);
+    let out_path = std::env::var("LPU_BENCH_SCALING_JSON")
+        .unwrap_or_else(|_| "../BENCH_scaling.json".to_string());
+    match std::fs::write(&out_path, doc.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nwarning: could not write {out_path}: {e}"),
+    }
 }

@@ -27,8 +27,8 @@
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
     run_virtual, run_virtual_plan, BackendFactory, Coordinator, CoordinatorConfig, KvPolicy,
-    LenDist, PrefixCacheConfig, Request, SchedulerPolicy, StepModel, VirtualConfig,
-    VirtualReport, Workload,
+    LenDist, PrefixCacheConfig, Request, RouterPolicy, SchedulerPolicy, StepModel,
+    VirtualConfig, VirtualReport, Workload,
 };
 use lpu::model::by_name;
 use lpu::util::json::{obj, Json};
@@ -578,6 +578,174 @@ fn main() {
         assert_eq!(rec.tokens, threaded_on[i], "virtual/threaded divergence on stream {i}");
     }
 
+    // ---- router cell: affinity-aware routing over a 4-worker pool.
+    // 8 clients share a 512-token prefix (distinct one-token tails so
+    // streams differ per client): one cold at t=0, seven arriving after
+    // its prefill registered. Every cell runs the SAME paged budget and
+    // prefix cache — only the routing policy differs. `round-robin`
+    // spreads the repeats across workers, so most re-prefill a prefix
+    // that is physically resident one worker over; `prefix-affinity`
+    // steers all seven to the worker holding the blocks, so they skip
+    // 512 tokens of prefill each. Runs in smoke mode too (cheap; the
+    // assertions below are the tentpole acceptance).
+    let n_route_workers = 4usize;
+    let route_out = 32usize;
+    let route_prefix: Vec<i64> =
+        (0..prefix_tokens).map(|i| ((i * 11 + 5) % 512) as i64).collect();
+    let mk_route_plan = || -> Vec<(f64, Request)> {
+        (0..n_share)
+            .map(|i| {
+                let mut prompt = route_prefix.clone();
+                prompt.push(i as i64); // distinct tail per client
+                let at = if i == 0 { 0.0 } else { 1.0 };
+                (at, Request::greedy("opt-1.3b", prompt, route_out))
+            })
+            .collect()
+    };
+    let run_route = |router: RouterPolicy| -> VirtualReport {
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, n_route_workers, 16, step);
+        vc.max_batch = 8;
+        vc.kv_bytes_per_token = model.kv_bytes_per_token();
+        vc.kv_budget_bytes = share_budget; // equal per-worker budget in every cell
+        vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+        vc.prefix_cache = PrefixCacheConfig::on();
+        vc.router = router;
+        run_virtual_plan("opt-1.3b", 512, 1.0, mk_route_plan(), &vc).expect("virtual run")
+    };
+    let mean_ttft_s = |r: &VirtualReport| -> f64 {
+        r.records.iter().map(|rec| rec.first_token_s - rec.arrival_s).sum::<f64>()
+            / r.records.len().max(1) as f64
+    };
+    let mut rt = Table::new(
+        format!(
+            "router: opt-1.3b, {n_route_workers} workers, {n_share} clients sharing a \
+             {prefix_tokens}-token prefix, {share_budget_blocks}-block budget each"
+        ),
+        &["router", "hit tokens", "shared blk", "mean TTFT ms", "peak queue", "peak lanes/worker"],
+    );
+    let mut route_reports: Vec<(RouterPolicy, VirtualReport)> = Vec::new();
+    for router in RouterPolicy::all() {
+        let r = run_route(router);
+        let r2 = run_route(router);
+        assert_eq!(r.records, r2.records, "bit-identical rerun ({})", router.name());
+        assert_eq!(r.wall_s, r2.wall_s);
+        assert_eq!(r.rejected, 0, "the router cell must fit the budget");
+        rt.row(&[
+            router.name().to_string(),
+            r.prefix_hit_tokens.to_string(),
+            r.shared_blocks.to_string(),
+            format!("{:.2}", mean_ttft_s(&r) * 1e3),
+            r.peak_queue_depth.to_string(),
+            format!("{:?}", r.worker_peak_lanes),
+        ]);
+        cells.push(obj(vec![
+            ("section", "router".into()),
+            ("router_policy", router.name().into()),
+            ("workers", n_route_workers.into()),
+            ("n_requests", n_share.into()),
+            ("prefix_tokens", prefix_tokens.into()),
+            ("budget_blocks", share_budget_blocks.into()),
+            ("prefix_hit_tokens", r.prefix_hit_tokens.into()),
+            ("shared_blocks", r.shared_blocks.into()),
+            ("mean_ttft_ms", (mean_ttft_s(&r) * 1e3).into()),
+            ("peak_queue_depth", r.peak_queue_depth.into()),
+            (
+                "worker_peak_lanes",
+                Json::Arr(r.worker_peak_lanes.iter().map(|&l| l.into()).collect()),
+            ),
+            ("tok_s", r.tokens_per_s.into()),
+            ("wall_s", r.wall_s.into()),
+        ]));
+        route_reports.push((router, r));
+    }
+    let rr_route = &route_reports[0].1;
+    let ll_route = &route_reports[1].1;
+    let aff_route = &route_reports[2].1;
+    // Routing changes placement and latency only: streams bit-identical
+    // across all three policies.
+    for (policy, r) in &route_reports[1..] {
+        for (a, b) in rr_route.records.iter().zip(&r.records) {
+            assert_eq!(
+                a.tokens,
+                b.tokens,
+                "{} changed routed stream {}",
+                policy.name(),
+                a.request_id
+            );
+        }
+    }
+    let route_ttft_ratio = mean_ttft_s(rr_route) / mean_ttft_s(aff_route).max(1e-12);
+    rt.note(format!(
+        "prefix-affinity steers repeats to the cached worker: {}x the round-robin hit \
+         tokens, mean TTFT {route_ttft_ratio:.1}x lower",
+        if rr_route.prefix_hit_tokens > 0 {
+            (aff_route.prefix_hit_tokens / rr_route.prefix_hit_tokens).to_string()
+        } else {
+            "inf".to_string()
+        }
+    ));
+    rt.note("same budget, same arrivals, bit-identical streams — only the router differs");
+    rt.print();
+    // The tentpole acceptance (ISSUE 5): strictly more prefix hits AND
+    // strictly lower mean TTFT than round-robin at equal KV budget.
+    assert!(
+        aff_route.prefix_hit_tokens > rr_route.prefix_hit_tokens,
+        "affinity hit tokens {} !> round-robin {}",
+        aff_route.prefix_hit_tokens,
+        rr_route.prefix_hit_tokens
+    );
+    assert!(
+        mean_ttft_s(aff_route) < mean_ttft_s(rr_route),
+        "affinity mean TTFT {} !< round-robin {}",
+        mean_ttft_s(aff_route),
+        mean_ttft_s(rr_route)
+    );
+    // Exact hit accounting: all 7 repeats hit the full 512-token prefix
+    // under affinity; round-robin's rotation hands exactly one repeat
+    // back to the cached worker (the others land on cold siblings).
+    assert_eq!(aff_route.prefix_hit_tokens, ((n_share - 1) * prefix_tokens) as u64);
+    assert_eq!(rr_route.prefix_hit_tokens, prefix_tokens as u64);
+
+    // Threaded half of the routing acceptance: the live coordinator
+    // (real threads, 4 workers) streams bit-identically under every
+    // routing policy, and agrees with the virtual path.
+    let run_threaded_route = |router: RouterPolicy| -> Vec<Vec<i64>> {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 16,
+            policy: SchedulerPolicy::RoundRobin,
+            kv_bytes_per_token: model.kv_bytes_per_token(),
+            kv_budget_bytes: share_budget,
+            kv_policy: KvPolicy::Paged { block_tokens: 16 },
+            prefix_cache: PrefixCacheConfig::on(),
+            router,
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-1.3b", n_route_workers, BackendFactory::sim("opt-1.3b", 512));
+        let mut reqs = mk_route_plan().into_iter().map(|(_, r)| r);
+        let cold = reqs.next().expect("cold request");
+        let mut streams =
+            vec![c.submit(cold).expect("submit").wait().expect("cold request")];
+        let handles: Vec<_> = reqs.map(|r| c.submit(r).expect("submit")).collect();
+        streams.extend(handles.into_iter().map(|h| h.wait().expect("routed request")));
+        c.shutdown();
+        streams
+    };
+    let threaded_routed: Vec<Vec<Vec<i64>>> =
+        RouterPolicy::all().iter().map(|&p| run_threaded_route(p)).collect();
+    for (i, s) in threaded_routed.iter().enumerate() {
+        assert_eq!(
+            s, &threaded_routed[0],
+            "threaded streams changed by routing policy {}",
+            RouterPolicy::all()[i].name()
+        );
+    }
+    for (i, rec) in aff_route.records.iter().enumerate() {
+        assert_eq!(
+            rec.tokens, threaded_routed[0][i],
+            "virtual/threaded divergence on routed stream {i}"
+        );
+    }
+
     // ---- machine-readable results ----
     let out_path = std::env::var("LPU_BENCH_JSON")
         .unwrap_or_else(|_| "../BENCH_serving.json".to_string());
@@ -610,6 +778,23 @@ fn main() {
                 ("single_pass_long_ttft_mean_ms", (single_ttft * 1e3).into()),
                 ("chunked_long_ttft_mean_ms", (chunked_ttft * 1e3).into()),
                 ("long_ttft_ratio", ttft_ratio.into()),
+            ]),
+        ),
+        (
+            "router_summary",
+            obj(vec![
+                ("workers", n_route_workers.into()),
+                ("n_requests", n_share.into()),
+                ("prefix_tokens", prefix_tokens.into()),
+                ("budget_blocks", share_budget_blocks.into()),
+                ("round_robin_prefix_hit_tokens", rr_route.prefix_hit_tokens.into()),
+                ("least_loaded_prefix_hit_tokens", ll_route.prefix_hit_tokens.into()),
+                ("affinity_prefix_hit_tokens", aff_route.prefix_hit_tokens.into()),
+                ("round_robin_mean_ttft_ms", (mean_ttft_s(rr_route) * 1e3).into()),
+                ("least_loaded_mean_ttft_ms", (mean_ttft_s(ll_route) * 1e3).into()),
+                ("affinity_mean_ttft_ms", (mean_ttft_s(aff_route) * 1e3).into()),
+                ("rr_over_affinity_ttft_ratio", route_ttft_ratio.into()),
+                ("affinity_peak_queue_depth", aff_route.peak_queue_depth.into()),
             ]),
         ),
         (

@@ -382,6 +382,18 @@ impl KvState {
         }
     }
 
+    /// Drain the pager's prefix-index insert/evict events (empty under
+    /// the reserve policy). The driver forwards them — tagged with its
+    /// worker index — to the pool's
+    /// [`super::router::PrefixRegistry`], which is how the
+    /// prefix-affinity router learns which workers hold which chains.
+    pub fn drain_prefix_events(&mut self) -> Vec<super::scheduler::PrefixEvent> {
+        match self {
+            KvState::Reserve { .. } => Vec::new(),
+            KvState::Paged { pager, .. } => pager.drain_prefix_events(),
+        }
+    }
+
     /// Cumulative prefix-cache counters (zero under the reserve policy).
     pub fn prefix_stats(&self) -> PrefixStats {
         match self {

@@ -324,7 +324,9 @@ fn zero_nan(x: f64) -> f64 {
 
 /// Per-pool (per-model) serving gauges, exposed by the server's
 /// `metrics` op under `pools.<model>` so a multi-model deployment can
-/// see which pool's prompts are long, chunked, or cache-friendly. The
+/// see which pool's prompts are long, chunked, or cache-friendly — and,
+/// per worker, how balanced the router is keeping the pool
+/// (`workers[i].queue_depth` / `workers[i].active_lanes`). The
 /// aggregate [`Metrics`] hub keeps the same counters coordinator-wide;
 /// these are the per-pool breakdown.
 #[derive(Default)]
@@ -334,11 +336,17 @@ pub struct PoolGauges {
     prefix_hit_tokens: AtomicU64,
     shared_blocks: AtomicU64,
     cow_splits: AtomicU64,
+    /// Per-worker instantaneous slot-table size (indexed by worker).
+    worker_lanes: Vec<AtomicU64>,
 }
 
 impl PoolGauges {
-    pub fn new() -> PoolGauges {
-        PoolGauges::default()
+    /// Gauges for an `n_workers`-worker pool.
+    pub fn with_workers(n_workers: usize) -> PoolGauges {
+        PoolGauges {
+            worker_lanes: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+            ..PoolGauges::default()
+        }
     }
 
     /// One prefill span of `tokens` context tokens ran in this pool.
@@ -354,14 +362,43 @@ impl PoolGauges {
         self.cow_splits.fetch_add(d.cow_splits, Ordering::Relaxed);
     }
 
-    /// JSON frame for the server's `metrics` op.
-    pub fn to_json(&self) -> Json {
+    /// Publish worker `worker`'s current slot-table size (called by the
+    /// worker loop whenever admission or retirement changes it).
+    pub fn set_active_lanes(&self, worker: usize, lanes: usize) {
+        if let Some(g) = self.worker_lanes.get(worker) {
+            g.store(lanes as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Worker `worker`'s last-published slot-table size (a routing
+    /// load input and a `metrics`-op gauge).
+    pub fn active_lanes(&self, worker: usize) -> usize {
+        self.worker_lanes.get(worker).map_or(0, |g| g.load(Ordering::Relaxed) as usize)
+    }
+
+    /// JSON frame for the server's `metrics` op. `queue_depths` are the
+    /// pool's live per-worker queue depths (from
+    /// [`super::router::PoolQueues::depths`]); the frame reports the
+    /// pool total as `queue_depth` plus a `workers[i]` array pairing
+    /// each worker's `queue_depth` with its `active_lanes` gauge.
+    pub fn to_json(&self, queue_depths: &[usize]) -> Json {
+        let n = self.worker_lanes.len().max(queue_depths.len());
+        let workers: Vec<Json> = (0..n)
+            .map(|i| {
+                obj(vec![
+                    ("queue_depth", queue_depths.get(i).copied().unwrap_or(0).into()),
+                    ("active_lanes", self.active_lanes(i).into()),
+                ])
+            })
+            .collect();
         obj(vec![
             ("prefill_spans", self.prefill_spans.load(Ordering::Relaxed).into()),
             ("prefill_tokens", self.prefill_tokens.load(Ordering::Relaxed).into()),
             ("prefix_hit_tokens", self.prefix_hit_tokens.load(Ordering::Relaxed).into()),
             ("shared_blocks", self.shared_blocks.load(Ordering::Relaxed).into()),
             ("cow_splits", self.cow_splits.load(Ordering::Relaxed).into()),
+            ("queue_depth", queue_depths.iter().sum::<usize>().into()),
+            ("workers", Json::Arr(workers)),
         ])
     }
 }
@@ -492,16 +529,27 @@ mod tests {
 
     #[test]
     fn pool_gauges_accumulate_and_export() {
-        let g = PoolGauges::new();
+        let g = PoolGauges::with_workers(2);
         g.on_prefill(40);
         g.on_prefill(8);
         g.on_prefix(&PrefixStats { hit_tokens: 16, shared_blocks: 1, cow_splits: 0 });
-        let j = g.to_json();
+        g.set_active_lanes(0, 3);
+        g.set_active_lanes(1, 1);
+        assert_eq!(g.active_lanes(0), 3);
+        assert_eq!(g.active_lanes(7), 0, "out-of-range worker reads as idle");
+        let j = g.to_json(&[2, 0]);
         assert_eq!(j.get("prefill_spans").as_u64(), Some(2));
         assert_eq!(j.get("prefill_tokens").as_u64(), Some(48));
         assert_eq!(j.get("prefix_hit_tokens").as_u64(), Some(16));
         assert_eq!(j.get("shared_blocks").as_u64(), Some(1));
         assert_eq!(j.get("cow_splits").as_u64(), Some(0));
+        assert_eq!(j.get("queue_depth").as_u64(), Some(2));
+        let workers = j.get("workers").as_arr().expect("workers array").to_vec();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("queue_depth").as_u64(), Some(2));
+        assert_eq!(workers[0].get("active_lanes").as_u64(), Some(3));
+        assert_eq!(workers[1].get("queue_depth").as_u64(), Some(0));
+        assert_eq!(workers[1].get("active_lanes").as_u64(), Some(1));
     }
 
     #[test]

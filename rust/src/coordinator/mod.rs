@@ -9,11 +9,23 @@
 //! Architecture (std threads + channels; the environment has no tokio):
 //!
 //! ```text
-//!   submit(Request) ──► Router ──► Pool(model A) ─► worker 0 ─┐
-//!                          │                      └ worker 1  ├─ Backend
-//!                          └─────► Pool(model B) ─► worker 0 ─┘  (PJRT or sim)
-//!   TokenEvent stream ◄────────────── workers (mpsc per request)
+//!   submit(Request) ──► Pool(model A) Router ──► worker-0 queue ─► worker 0 ─┐
+//!                  │         (steering policy +  worker-1 queue ─► worker 1  ├─ Backend
+//!                  │          prefix registry)      ▲ spill/steal ▲          │  (PJRT/sim)
+//!                  └───► Pool(model B) Router ──► ...                        │
+//!   TokenEvent stream ◄────────────────────────────── workers (mpsc per request)
 //! ```
+//!
+//! Each pool routes submissions through a [`router::Router`] onto
+//! **per-worker addressable queues** ([`router::PoolQueues`]): the
+//! steering policy ([`CoordinatorConfig::router`]) is `round-robin`,
+//! `least-loaded`, or `prefix-affinity` (steer to the worker whose
+//! pager holds the deepest cached prefix for the prompt, tracked by a
+//! pool-level [`router::PrefixRegistry`] fed from pager events). Each
+//! queue keeps head-peek admission; an idle worker steals a steered job
+//! after a bounded wait, so affinity never strands work behind a hot
+//! worker. Routing changes placement and latency only — token streams
+//! are identical under every policy.
 //!
 //! Each worker owns one [`backend::Backend`] and runs **continuous
 //! batching**: it holds a slot table of concurrently active requests,
@@ -72,13 +84,14 @@
 pub mod backend;
 pub mod lane;
 pub mod metrics;
+pub mod router;
 pub mod scheduler;
 pub mod workload;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -87,9 +100,13 @@ use crate::numerics::SampleParams;
 pub use backend::{Backend, BackendFactory, BatchLane, LaneWork, SimBackend, StepModel};
 pub use lane::{Absorbed, Admit, HoldsLane, KvState, Lane, ResumeState};
 pub use metrics::{Metrics, Percentiles, PoolGauges};
+pub use router::{
+    PoolQueues, Popped, PrefixRegistry, Router, RouterPolicy, WorkerLoad,
+    AFFINITY_IMBALANCE_LIMIT, DEFAULT_SPILL_AFTER_S,
+};
 pub use scheduler::{
-    KvBlockId, KvBudget, KvPager, KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler,
-    SchedulerPolicy, DEFAULT_KV_BLOCK_TOKENS,
+    KvBlockId, KvBudget, KvPager, KvPolicy, PrefixCacheConfig, PrefixEvent, PrefixStats,
+    Scheduler, SchedulerPolicy, DEFAULT_KV_BLOCK_TOKENS,
 };
 pub use workload::{
     run_open_loop, run_virtual, run_virtual_plan, LenDist, LoadReport, VirtualConfig,
@@ -225,93 +242,18 @@ impl Job {
     }
 }
 
-/// Result of a peek-then-pop attempt on the pool queue.
-enum Popped {
-    Job(Job),
-    Rejected(Job),
-    None,
-    Closed,
-}
-
-struct JobQueueState {
-    jobs: VecDeque<Job>,
-    closed: bool,
-}
-
-/// Shared pool queue with head-peek admission. A worker inspects the
-/// head job and only pops it if it can actually take (or must reject)
-/// it; a job the worker cannot admit right now stays at the head for a
-/// sibling with free KV — FIFO order is preserved and a saturated
-/// worker never strands work another worker could serve.
-struct JobQueue {
-    state: Mutex<JobQueueState>,
-    cv: Condvar,
-}
-
-impl JobQueue {
-    fn new() -> JobQueue {
-        JobQueue {
-            state: Mutex::new(JobQueueState { jobs: VecDeque::new(), closed: false }),
-            cv: Condvar::new(),
-        }
-    }
-
-    /// Enqueue a job; `Err(job)` if the pool already shut down.
-    fn push(&self, job: Job) -> Result<(), Job> {
-        let mut st = self.state.lock().unwrap();
-        if st.closed {
-            return Err(job);
-        }
-        st.jobs.push_back(job);
-        self.cv.notify_one();
-        Ok(())
-    }
-
-    /// Requeue a preempted job at the head so it readmits before later
-    /// arrivals (anti-starvation). Accepted even after `close`: a
-    /// preempted job was already admitted once and must still drain.
-    fn push_front(&self, job: Job) {
-        let mut st = self.state.lock().unwrap();
-        st.jobs.push_front(job);
-        self.cv.notify_one();
-    }
-
-    fn close(&self) {
-        self.state.lock().unwrap().closed = true;
-        self.cv.notify_all();
-    }
-
-    /// Peek the head job with `decide` and pop it if taken/rejected.
-    /// With `wait`, parks up to ~10ms for work when the queue is empty
-    /// (the condvar releases the lock while parked, so producers and
-    /// sibling workers are never blocked by an idle waiter).
-    fn pop_with(&self, wait: bool, mut decide: impl FnMut(&Job) -> Admit) -> Popped {
-        let mut st = self.state.lock().unwrap();
-        if wait && st.jobs.is_empty() && !st.closed {
-            st = self
-                .cv
-                .wait_timeout(st, std::time::Duration::from_millis(10))
-                .unwrap()
-                .0;
-        }
-        let decision = match st.jobs.front() {
-            None => return if st.closed { Popped::Closed } else { Popped::None },
-            Some(job) => decide(job),
-        };
-        match decision {
-            Admit::Take => Popped::Job(st.jobs.pop_front().expect("head exists")),
-            Admit::Reject => Popped::Rejected(st.jobs.pop_front().expect("head exists")),
-            Admit::Later => Popped::None,
-        }
-    }
-}
-
-/// Per-model worker pool.
+/// Per-model worker pool: per-worker queues behind a shared router.
 struct Pool {
-    queue: Arc<JobQueue>,
-    /// Per-pool prefill/prefix gauges (the server's `metrics` op
+    /// Per-worker addressable job queues (head-peek + spill/steal).
+    queues: Arc<PoolQueues<Job>>,
+    /// Steering policy state + the cross-worker prefix registry.
+    router: Arc<Mutex<Router>>,
+    /// Per-pool prefill/prefix/worker gauges (the server's `metrics` op
     /// exposes them under `pools.<model>`).
     gauges: Arc<PoolGauges>,
+    /// Pool epoch: queue timestamps (spill eligibility) are seconds
+    /// since this instant, mirroring the virtual harness's clock shape.
+    epoch: Instant,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -348,6 +290,18 @@ pub struct CoordinatorConfig {
     /// worker when the backend cannot restore sessions at a cached
     /// position (PJRT).
     pub prefix_cache: PrefixCacheConfig,
+    /// How each pool steers submissions onto its per-worker queues
+    /// (`--router round-robin|least-loaded|prefix-affinity`).
+    /// `prefix-affinity` pays off with [`CoordinatorConfig::prefix_cache`]
+    /// enabled (it steers to the worker already holding a prompt's
+    /// cached prefix blocks); without a registry it degrades to
+    /// least-loaded. Routing changes placement and latency only — token
+    /// streams are identical under every policy.
+    pub router: RouterPolicy,
+    /// How long a steered job may wait at its queue head before an idle
+    /// sibling may steal it, seconds ([`DEFAULT_SPILL_AFTER_S`] by
+    /// default). Tests pin placement by setting it larger than the run.
+    pub spill_after_s: f64,
 }
 
 impl Default for CoordinatorConfig {
@@ -361,6 +315,8 @@ impl Default for CoordinatorConfig {
             max_batch: 0,
             prefill_chunk: 0,
             prefix_cache: PrefixCacheConfig::off(),
+            router: RouterPolicy::RoundRobin,
+            spill_after_s: DEFAULT_SPILL_AFTER_S,
         }
     }
 }
@@ -383,6 +339,8 @@ impl CoordinatorConfig {
             max_batch: 0,
             prefill_chunk: 0,
             prefix_cache: PrefixCacheConfig::off(),
+            router: RouterPolicy::RoundRobin,
+            spill_after_s: DEFAULT_SPILL_AFTER_S,
         }
     }
 }
@@ -414,26 +372,40 @@ impl Coordinator {
 
     /// Register a model pool with `n_workers` backend instances. The
     /// factory runs *inside* each worker thread (PJRT handles are not
-    /// `Send`; each worker owns its own client).
+    /// `Send`; each worker owns its own client). The pool gets one
+    /// [`Router`] (policy from [`CoordinatorConfig::router`]) steering
+    /// onto `n_workers` addressable queues.
     pub fn add_pool(&mut self, model: &str, n_workers: usize, factory: BackendFactory) {
-        let queue = Arc::new(JobQueue::new());
-        let gauges = Arc::new(PoolGauges::new());
+        let n_workers = n_workers.max(1);
+        let queues =
+            Arc::new(PoolQueues::with_spill_after(n_workers, self.cfg.spill_after_s));
+        let router = Arc::new(Mutex::new(Router::new(
+            self.cfg.router,
+            self.cfg.kv_policy.registry_block_tokens(),
+        )));
+        let gauges = Arc::new(PoolGauges::with_workers(n_workers));
+        let epoch = Instant::now();
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
-            let queue = Arc::clone(&queue);
             let factory = factory.clone();
-            let metrics = Arc::clone(&self.metrics);
-            let pool_gauges = Arc::clone(&gauges);
-            let cfg = self.cfg.clone();
-            let model = model.to_string();
+            let ctx = WorkerCtx {
+                worker: w,
+                queues: Arc::clone(&queues),
+                router: Arc::clone(&router),
+                epoch,
+                metrics: Arc::clone(&self.metrics),
+                pool_gauges: Arc::clone(&gauges),
+                cfg: self.cfg.clone(),
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("lpu-worker-{model}-{w}"))
-                    .spawn(move || worker_loop(queue, factory, metrics, pool_gauges, cfg))
+                    .spawn(move || worker_loop(ctx, factory))
                     .expect("spawn worker"),
             );
         }
-        self.pools.insert(model.to_string(), Pool { queue, gauges, workers });
+        self.pools
+            .insert(model.to_string(), Pool { queues, router, gauges, epoch, workers });
     }
 
     /// Models this coordinator serves.
@@ -444,16 +416,20 @@ impl Coordinator {
     }
 
     /// Per-pool gauge frames (model name → JSON), sorted by model, for
-    /// the server's `metrics` op.
+    /// the server's `metrics` op. Includes the live per-worker
+    /// `queue_depth`/`active_lanes` gauges under `workers[i]`.
     pub fn pools_json(&self) -> crate::util::json::Json {
         let mut o = crate::util::json::JsonObj::new();
         for model in self.models() {
-            o.insert(model.clone(), self.pools[&model].gauges.to_json());
+            let pool = &self.pools[&model];
+            o.insert(model.clone(), pool.gauges.to_json(&pool.queues.depths()));
         }
         crate::util::json::Json::Obj(o)
     }
 
-    /// Submit a request; returns a streaming handle.
+    /// Submit a request; returns a streaming handle. The pool's router
+    /// steers the job onto one worker's queue using the loads (queue
+    /// depths + active lanes) at this instant.
     pub fn submit(&self, request: Request) -> Result<RequestHandle, String> {
         request.validate()?;
         let pool = self
@@ -463,8 +439,32 @@ impl Coordinator {
         let request_id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         self.metrics.on_submit();
-        pool.queue
-            .push(Job { request_id, request, events: tx, submitted: Instant::now(), resume: None })
+        let worker = {
+            let mut router = pool.router.lock().unwrap();
+            let loads: Vec<WorkerLoad> = if router.policy() == RouterPolicy::RoundRobin {
+                // Round-robin ignores loads entirely: skip the queue
+                // lock and gauge scan on the default hot path.
+                vec![WorkerLoad::default(); pool.workers.len()]
+            } else {
+                pool.queues
+                    .depths()
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, queue_depth)| WorkerLoad {
+                        queue_depth,
+                        active_lanes: pool.gauges.active_lanes(i),
+                    })
+                    .collect()
+            };
+            router.route(&request.prompt, &loads)
+        };
+        let now_s = pool.epoch.elapsed().as_secs_f64();
+        pool.queues
+            .push(
+                worker,
+                now_s,
+                Job { request_id, request, events: tx, submitted: Instant::now(), resume: None },
+            )
             .map_err(|_| "pool shut down".to_string())?;
         Ok(RequestHandle { request_id, events: rx })
     }
@@ -473,7 +473,7 @@ impl Coordinator {
     pub fn shutdown(mut self) {
         let pools = std::mem::take(&mut self.pools);
         for (_, pool) in pools {
-            pool.queue.close();
+            pool.queues.close();
             for w in pool.workers {
                 let _ = w.join();
             }
@@ -508,19 +508,48 @@ enum Retire {
     Errored(String),
 }
 
-fn worker_loop(
-    queue: Arc<JobQueue>,
-    factory: BackendFactory,
+/// Everything one worker thread needs from its pool (bundled so the
+/// loop has one coherent context instead of a parameter sprawl).
+struct WorkerCtx {
+    /// This worker's index (its queue in [`PoolQueues`], its gauges).
+    worker: usize,
+    queues: Arc<PoolQueues<Job>>,
+    router: Arc<Mutex<Router>>,
+    epoch: Instant,
     metrics: Arc<Metrics>,
     pool_gauges: Arc<PoolGauges>,
     cfg: CoordinatorConfig,
-) {
+}
+
+impl WorkerCtx {
+    /// Seconds since the pool epoch (queue timestamps / spill bound).
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Forward this worker's drained pager events to the pool router's
+    /// prefix registry (cheap no-op when nothing changed). Called after
+    /// admission (shares can evict), after `plan_step` (growth can
+    /// evict), and after the absorb loop (prefill completion inserts) —
+    /// the last one *before* `Done` events are sent, so a client that
+    /// saw a request finish can rely on its prefix being registered.
+    fn sync_registry(&self, kv: &mut KvState) {
+        let events = kv.drain_prefix_events();
+        if !events.is_empty() {
+            self.router.lock().unwrap().note_prefix_events(self.worker, &events);
+        }
+    }
+}
+
+fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
     let mut backend = match factory.build() {
         Ok(b) => b,
         Err(e) => {
-            // Drain jobs with errors so clients don't hang.
+            // Drain jobs with errors so clients don't hang (own queue
+            // first; leftovers steered here are also stolen by healthy
+            // siblings after the spill bound).
             loop {
-                match queue.pop_with(true, |_| Admit::Take) {
+                match ctx.queues.pop_for(ctx.worker, ctx.now_s(), true, |_| Admit::Take) {
                     Popped::Job(job) | Popped::Rejected(job) => {
                         let _ = job.events.send(TokenEvent::Error {
                             request_id: job.request_id,
@@ -533,13 +562,12 @@ fn worker_loop(
             }
         }
     };
-
-    let mut scheduler = Scheduler::new(cfg.policy);
+    let mut scheduler = Scheduler::new(ctx.cfg.policy);
     let mut kv = KvState::with_prefix(
-        cfg.kv_policy,
-        cfg.kv_budget_bytes,
-        cfg.kv_bytes_per_token,
-        cfg.prefix_cache,
+        ctx.cfg.kv_policy,
+        ctx.cfg.kv_budget_bytes,
+        ctx.cfg.kv_bytes_per_token,
+        ctx.cfg.prefix_cache,
     );
     if kv.prefix_cache_enabled() && !backend.supports_session_restore() {
         // A hit is only real if the backend can attach the cached KV:
@@ -551,11 +579,11 @@ fn worker_loop(
     // the coordinator metrics and this pool's gauges.
     let mut prefix_seen = kv.prefix_stats();
     if let Some(capacity) = kv.capacity_blocks() {
-        metrics.set_kv_capacity_blocks(capacity as u64);
+        ctx.metrics.set_kv_capacity_blocks(capacity as u64);
     }
     let mut slots: Vec<Slot> = Vec::new();
     let max_batch =
-        if cfg.max_batch == 0 { cfg.max_active_per_worker } else { cfg.max_batch };
+        if ctx.cfg.max_batch == 0 { ctx.cfg.max_active_per_worker } else { ctx.cfg.max_batch };
     // Parity with `run_virtual`'s preemption guard: the liveness
     // invariants rule out preempt/readmit livelock, but a future
     // regression should shed a request visibly instead of silently
@@ -564,11 +592,12 @@ fn worker_loop(
 
     loop {
         // ---- admission: runs between every fused step, so requests
-        // join mid-decode (continuous batching). The queue pops the
-        // head only if this worker can take it (or it can never fit);
-        // otherwise it stays at the head for a sibling with free KV.
-        while slots.len() < cfg.max_active_per_worker {
-            let popped = queue.pop_with(slots.is_empty(), |job| {
+        // join mid-decode (continuous batching). This worker peeks its
+        // own queue head (popping only on Take/Reject; a Later head
+        // stays queued) and, when its own queue is empty, steals the
+        // longest-waiting sibling head past the spill bound.
+        while slots.len() < ctx.cfg.max_active_per_worker {
+            let popped = ctx.queues.pop_for(ctx.worker, ctx.now_s(), slots.is_empty(), |job| {
                 kv.admit(
                     &job.request.prompt,
                     job.init_ctx(),
@@ -586,16 +615,19 @@ fn worker_loop(
                     let stats = kv.prefix_stats();
                     let delta = stats.delta(&prefix_seen);
                     prefix_seen = stats;
-                    metrics.on_prefix(&delta);
-                    pool_gauges.on_prefix(&delta);
+                    ctx.metrics.on_prefix(&delta);
+                    ctx.pool_gauges.on_prefix(&delta);
                     // Peak occupancy can be set by admission itself
                     // (the virtual harness records it there too).
-                    metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
+                    ctx.metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
+                    // Sharing can reclaim (evict) cache entries; tell
+                    // the pool registry.
+                    ctx.sync_registry(&mut kv);
                     let Job { request_id, request, events, submitted, resume } = job;
                     match backend.new_session_at(holdings.prefix_hit) {
                         Ok(session) => {
                             if resume.is_none() {
-                                metrics.on_start(submitted.elapsed());
+                                ctx.metrics.on_start(submitted.elapsed());
                             }
                             let seed = request.seed ^ request_id;
                             let lane = Lane::admitted(request, seed, resume, holdings);
@@ -604,7 +636,7 @@ fn worker_loop(
                         }
                         Err(e) => {
                             kv.release_holdings(holdings);
-                            metrics.on_error();
+                            ctx.metrics.on_error();
                             let _ = events.send(TokenEvent::Error {
                                 request_id,
                                 message: format!("session: {e}"),
@@ -616,7 +648,7 @@ fn worker_loop(
                     // Can never fit, even on an empty device: refuse
                     // rather than deadlock the admission queue.
                     let message = kv.reject_reason(job.request.worst_case_tokens());
-                    metrics.on_reject();
+                    ctx.metrics.on_reject();
                     let _ = job
                         .events
                         .send(TokenEvent::Error { request_id: job.request_id, message });
@@ -630,6 +662,7 @@ fn worker_loop(
                 }
             }
         }
+        ctx.pool_gauges.set_active_lanes(ctx.worker, slots.len());
 
         if slots.is_empty() {
             continue;
@@ -641,12 +674,12 @@ fn worker_loop(
         // already released; this loop decides their fate (requeue with
         // resume state, or shed visibly on suspected livelock).
         let (plan, evicted) =
-            lane::plan_step(&mut scheduler, &mut kv, &mut slots, max_batch, cfg.prefill_chunk);
+            lane::plan_step(&mut scheduler, &mut kv, &mut slots, max_batch, ctx.cfg.prefill_chunk);
         for s in evicted {
-            metrics.on_preempt(s.lane.tokens_emitted());
+            ctx.metrics.on_preempt(s.lane.tokens_emitted());
             preempts_since_done += 1;
-            if preempts_since_done > 1000 + 100 * cfg.max_active_per_worker {
-                metrics.on_error();
+            if preempts_since_done > 1000 + 100 * ctx.cfg.max_active_per_worker {
+                ctx.metrics.on_error();
                 let _ = s.events.send(TokenEvent::Error {
                     request_id: s.request_id,
                     message: "preemption livelock suspected: request shed after repeated \
@@ -655,16 +688,24 @@ fn worker_loop(
                 });
             } else {
                 let (request, resume) = s.lane.into_resume();
-                queue.push_front(Job {
-                    request_id: s.request_id,
-                    request,
-                    events: s.events,
-                    submitted: s.submitted,
-                    resume: Some(resume),
-                });
+                ctx.queues.push_front(
+                    ctx.worker,
+                    ctx.now_s(),
+                    Job {
+                        request_id: s.request_id,
+                        request,
+                        events: s.events,
+                        submitted: s.submitted,
+                        resume: Some(resume),
+                    },
+                );
             }
         }
-        metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
+        ctx.metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
+        // Growth may have reclaimed cache-only blocks (evicting their
+        // index entries); keep the pool registry in step.
+        ctx.sync_registry(&mut kv);
+        ctx.pool_gauges.set_active_lanes(ctx.worker, slots.len());
         if plan.is_empty() {
             continue;
         }
@@ -675,15 +716,15 @@ fn worker_loop(
         for p in &plan.lanes {
             let s = &mut slots[p.slot];
             if s.lane.in_prefill() {
-                metrics.on_prefill(p.span);
-                pool_gauges.on_prefill(p.span);
+                ctx.metrics.on_prefill(p.span);
+                ctx.pool_gauges.on_prefill(p.span);
             }
             let tokens = s.lane.feed_span(p.span);
             let session = std::mem::replace(&mut s.session, Box::new(()));
             lanes.push(BatchLane { session, tokens });
         }
         let results = backend.decode_batch(&mut lanes);
-        metrics.on_batch_step(plan.lanes.len());
+        ctx.metrics.on_batch_step(plan.lanes.len());
         let step_elapsed = step_started.elapsed();
 
         debug_assert_eq!(results.len(), plan.lanes.len(), "backend lane-count contract");
@@ -712,9 +753,9 @@ fn worker_loop(
                                 // stream starts non-empty), so TTFT
                                 // counts each request once, at its true
                                 // first emission.
-                                metrics.on_first_token(s.submitted.elapsed());
+                                ctx.metrics.on_first_token(s.submitted.elapsed());
                             }
-                            metrics.on_token(step_elapsed);
+                            ctx.metrics.on_token(step_elapsed);
                             scheduler.note_progress(i, s.lane.tokens_emitted());
                             let receiver_alive = s
                                 .events
@@ -738,6 +779,12 @@ fn worker_loop(
             }
         }
 
+        // Publish prefill-completion index inserts BEFORE any Done is
+        // sent below: a client that saw its request finish may submit a
+        // follow-up immediately and expects prefix-affinity routing to
+        // already know where the prefix lives.
+        ctx.sync_registry(&mut kv);
+
         // Retire in descending index order so swap_remove indices stay
         // valid; mirror every removal into the scheduler.
         retire.sort_by(|a, b| b.0.cmp(&a.0));
@@ -749,20 +796,21 @@ fn worker_loop(
             match why {
                 Retire::Done(reason) => {
                     preempts_since_done = 0;
-                    metrics.on_done(lane.tokens_emitted(), submitted.elapsed());
+                    ctx.metrics.on_done(lane.tokens_emitted(), submitted.elapsed());
                     let _ = events.send(TokenEvent::Done {
                         request_id,
                         tokens: lane.into_finished(),
                         reason,
                     });
                 }
-                Retire::Cancelled => metrics.on_cancel(lane.tokens_emitted()),
+                Retire::Cancelled => ctx.metrics.on_cancel(lane.tokens_emitted()),
                 Retire::Errored(message) => {
-                    metrics.on_error();
+                    ctx.metrics.on_error();
                     let _ = events.send(TokenEvent::Error { request_id, message });
                 }
             }
         }
+        ctx.pool_gauges.set_active_lanes(ctx.worker, slots.len());
     }
 }
 
@@ -1125,6 +1173,79 @@ mod tests {
         // The skipped prefill is real work not done.
         assert_eq!(off_snap.prefill_tokens, 3 * 64);
         assert_eq!(on_snap.prefill_tokens, 64 + 2);
+    }
+
+    #[test]
+    fn affinity_router_steers_repeat_prompts_to_cached_worker() {
+        // Strictly sequential identical-prompt requests on a 2-worker
+        // pool: under prefix-affinity every repeat is steered to the
+        // worker already holding the cached prefix; round-robin
+        // steering alternates workers and forfeits one of the hits.
+        let prompt: Vec<i64> = (0..64).map(|i| (i % 32) as i64).collect();
+        let run = |router: RouterPolicy| -> u64 {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                kv_bytes_per_token: 100,
+                kv_budget_bytes: 64 * 16 * 100,
+                kv_policy: KvPolicy::Paged { block_tokens: 16 },
+                prefix_cache: PrefixCacheConfig::on(),
+                router,
+                // Pin placement: no stealing, so the exact hit counts
+                // below cannot be perturbed by a descheduled worker
+                // letting the spill window lapse.
+                spill_after_s: 3600.0,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+            // Each request completes — and registers its prefix, which
+            // the worker publishes before the Done event — before the
+            // next routing decision runs.
+            for _ in 0..3 {
+                c.submit(Request::greedy("opt-tiny", prompt.clone(), 8))
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+            }
+            let hits = c.metrics.snapshot().prefix_hit_tokens;
+            c.shutdown();
+            hits
+        };
+        // 64-token prompt: a hit skips 63 tokens (one must be fed for
+        // logits). Affinity: requests 2 and 3 both hit. Round-robin:
+        // request 2 lands on the cold sibling, request 3 returns to a
+        // cached worker — exactly one hit, whichever worker served the
+        // first request.
+        assert_eq!(run(RouterPolicy::PrefixAffinity), 2 * 63);
+        assert_eq!(run(RouterPolicy::RoundRobin), 63);
+    }
+
+    #[test]
+    fn affinity_overload_spills_to_idle_workers() {
+        // max_active 1 turns the affinity target into a bottleneck: the
+        // pile-up must drain anyway (imbalance cap at routing + idle
+        // siblings stealing past the spill bound), never starve.
+        let prompt: Vec<i64> = vec![3; 32];
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 1,
+            policy: SchedulerPolicy::RoundRobin,
+            kv_bytes_per_token: 100,
+            kv_budget_bytes: 64 * 16 * 100,
+            kv_policy: KvPolicy::Paged { block_tokens: 16 },
+            prefix_cache: PrefixCacheConfig::on(),
+            router: RouterPolicy::PrefixAffinity,
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+        c.submit(Request::greedy("opt-tiny", prompt.clone(), 4)).unwrap().wait().unwrap();
+        let handles: Vec<_> = (0..6)
+            .map(|_| c.submit(Request::greedy("opt-tiny", prompt.clone(), 4)).unwrap())
+            .collect();
+        for h in handles {
+            assert_eq!(h.wait().unwrap().len(), 4);
+        }
+        assert_eq!(c.metrics.snapshot().completed, 7);
+        c.shutdown();
     }
 
     #[test]

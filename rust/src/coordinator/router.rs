@@ -1,0 +1,746 @@
+//! Affinity-aware request routing: the layer between
+//! [`super::Coordinator::submit`] and a pool's workers.
+//!
+//! Before this module existed, a pool had ONE shared job queue: any
+//! worker could pop the head, so placement was whatever thread won the
+//! race. That is work-conserving but **placement-blind** — and with the
+//! PR-4 copy-on-write prefix cache, placement is exactly what decides
+//! whether a request's cached prompt prefix is *on the worker that gets
+//! it*. A 512-token system prompt resident on worker 0 saves nothing if
+//! the request lands on worker 3.
+//!
+//! This module replaces the shared queue with:
+//!
+//! * **Per-worker addressable queues** ([`PoolQueues`]): a request is
+//!   *steered* to one worker's queue at submission. Each queue keeps the
+//!   head-peek admission semantics of the old shared queue (a head the
+//!   worker cannot admit right now stays queued; FIFO within the queue
+//!   is preserved).
+//! * **Spill/steal fallback**: an idle worker (own queue empty) may
+//!   claim the head of a sibling's queue once that head has waited at
+//!   least [`DEFAULT_SPILL_AFTER_S`] — so steering is a *preference*,
+//!   never a commitment that can starve a request behind a hot worker
+//!   or leave sibling capacity idle (no cross-worker head-of-line
+//!   blocking).
+//! * **A pool-level prefix registry** ([`PrefixRegistry`]): which
+//!   workers hold which cached prefix chains. It is maintained purely
+//!   from the per-worker pagers' insert/evict events
+//!   ([`super::scheduler::PrefixEvent`], emitted at
+//!   `KvState::on_prefill_complete` registration and LRU/capacity
+//!   eviction) and is token-verified exactly like the per-worker index,
+//!   so a hash collision can never steer a request to a worker that
+//!   does not actually hold its prefix.
+//! * **Pluggable routing policies** ([`RouterPolicy`]) behind one
+//!   decision core ([`Router::route`]): `round-robin` (baseline),
+//!   `least-loaded` (queue depth + active lanes), and `prefix-affinity`
+//!   (steer to the worker with the deepest registered hit, capped by a
+//!   load-imbalance bound so a hot prefix cannot overload one worker).
+//!
+//! **The lane-core invariant extends here**: routing decisions live in
+//! this module only. The threaded coordinator ([`super::Coordinator`])
+//! and the virtual-time harness ([`super::run_virtual`]) both drive
+//! [`Router`] + [`PoolQueues`] verbatim — the threaded path feeds wall
+//! seconds, the virtual path feeds virtual seconds — so the two paths
+//! cannot drift on steering, spill, or registry semantics. Routing
+//! changes *placement and latency only*: token streams are a pure
+//! function of (model, prompt, sampler seed), so streams are
+//! bit-identical under every policy (asserted in the serving bench and
+//! the stream proptests).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::lane::Admit;
+use super::scheduler::{chain_key, PrefixEvent, CHAIN_SEED};
+
+/// How a pool steers a submitted request to one of its workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Rotate submissions across workers (placement-blind baseline).
+    RoundRobin,
+    /// Steer to the worker with the smallest queue depth + active-lane
+    /// count (ties break toward the lower worker index).
+    LeastLoaded,
+    /// Steer to the worker holding the deepest registered prefix chain
+    /// for the request's prompt, bounded by
+    /// [`AFFINITY_IMBALANCE_LIMIT`]; with no registered hit (or a hit
+    /// behind an overloaded worker) falls back to least-loaded.
+    PrefixAffinity,
+}
+
+impl RouterPolicy {
+    /// Stable identifier used in metrics/report/bench output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::LeastLoaded => "least_loaded",
+            RouterPolicy::PrefixAffinity => "prefix_affinity",
+        }
+    }
+
+    /// Parse a CLI spelling (`--router round-robin|least-loaded|prefix-affinity`).
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "rr" | "round_robin" | "round-robin" => Some(RouterPolicy::RoundRobin),
+            "ll" | "least_loaded" | "least-loaded" => Some(RouterPolicy::LeastLoaded),
+            "affinity" | "prefix_affinity" | "prefix-affinity" => {
+                Some(RouterPolicy::PrefixAffinity)
+            }
+            _ => None,
+        }
+    }
+
+    /// Every policy, for sweeps.
+    pub fn all() -> [RouterPolicy; 3] {
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::PrefixAffinity]
+    }
+}
+
+/// One worker's load as the router sees it at a routing decision.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerLoad {
+    /// Jobs steered to (and still waiting in) the worker's queue.
+    pub queue_depth: usize,
+    /// Requests currently active in the worker's slot table.
+    pub active_lanes: usize,
+}
+
+impl WorkerLoad {
+    /// Combined load (queued + active), the least-loaded ranking key.
+    pub fn total(&self) -> usize {
+        self.queue_depth + self.active_lanes
+    }
+}
+
+/// Max queue-depth gap the prefix-affinity policy tolerates between the
+/// hit worker and the least-queued worker before it stops steering to
+/// the hit. Queue depth — not active lanes — is the overload signal: a
+/// deep slot table still batches (a fused step amortizes the weight
+/// stream across lanes), but a deep *queue* means requests are waiting
+/// behind a saturated worker while siblings idle, which is exactly the
+/// hot-prefix pile-up the bound exists to cap. Beyond the bound the
+/// request falls back to least-loaded (a cold prefill beats queueing).
+pub const AFFINITY_IMBALANCE_LIMIT: usize = 4;
+
+/// How long a steered job may wait at the head of its worker's queue
+/// before an *idle* sibling (own queue empty) may claim it, seconds —
+/// wall seconds on the threaded path, virtual seconds in the harness.
+/// Affinity is a latency optimization, not a correctness property;
+/// after this bound, any capacity beats the preferred worker.
+pub const DEFAULT_SPILL_AFTER_S: f64 = 0.005;
+
+/// One registered prefix chain entry: the token run (verification) and
+/// the workers whose pagers currently index it.
+#[derive(Clone, Debug)]
+struct RegEntry {
+    /// The block-aligned token run under this chain key.
+    run: Vec<i64>,
+    /// Workers holding this entry, sorted ascending (dedup'd).
+    holders: Vec<usize>,
+}
+
+/// Pool-level, cross-worker prefix registry: for each chain key of a
+/// block-aligned prompt run, which workers' pagers index it. Maintained
+/// exclusively from [`PrefixEvent`]s drained out of the per-worker
+/// pagers (insert on prefill-complete registration, evict on LRU or
+/// capacity reclaim), and token-verified on lookup like the per-worker
+/// index — the registry can claim *stale* hits only until the evict
+/// event arrives, and a stale or colliding claim costs a suboptimal
+/// steering decision, never a wrong token (admission re-verifies
+/// against the worker's own pager).
+#[derive(Clone, Debug)]
+pub struct PrefixRegistry {
+    block_tokens: usize,
+    entries: HashMap<u64, RegEntry>,
+}
+
+impl PrefixRegistry {
+    /// An empty registry over `block_tokens`-token runs (must match the
+    /// workers' pager block size, or chain keys will never match).
+    pub fn new(block_tokens: usize) -> PrefixRegistry {
+        PrefixRegistry { block_tokens: block_tokens.max(1), entries: HashMap::new() }
+    }
+
+    /// Registered chain entries (across all workers; shared chains count
+    /// once per key).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether no chain is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Apply one worker's drained pager events. Inserts add the worker
+    /// to the key's holder set; evicts remove it (dropping the entry
+    /// with its last holder). Applying a drained batch is
+    /// order-independent across workers, so virtual runs stay
+    /// deterministic.
+    pub fn apply(&mut self, worker: usize, events: &[PrefixEvent]) {
+        for ev in events {
+            match ev {
+                PrefixEvent::Insert { key, run } => {
+                    let e = self
+                        .entries
+                        .entry(*key)
+                        .or_insert_with(|| RegEntry { run: run.clone(), holders: Vec::new() });
+                    if let Err(at) = e.holders.binary_search(&worker) {
+                        e.holders.insert(at, worker);
+                    }
+                }
+                PrefixEvent::Evict { key } => {
+                    if let Some(e) = self.entries.get_mut(key) {
+                        if let Ok(at) = e.holders.binary_search(&worker) {
+                            e.holders.remove(at);
+                        }
+                        if e.holders.is_empty() {
+                            self.entries.remove(key);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The worker holding the deepest registered chain for `prompt`,
+    /// with its depth in blocks: walk the prompt's full blocks, chain-
+    /// hash each run, and track per worker how many *leading consecutive*
+    /// blocks it holds (token-verified). Ties break toward the lower
+    /// worker index; `None` when no worker holds even the first block.
+    pub fn deepest_hit(&self, prompt: &[i64], n_workers: usize) -> Option<(usize, usize)> {
+        if self.entries.is_empty() || n_workers == 0 {
+            return None;
+        }
+        let mut depth = vec![0usize; n_workers];
+        let mut alive = vec![true; n_workers];
+        let mut key = CHAIN_SEED;
+        for (i, run) in prompt.chunks_exact(self.block_tokens).enumerate() {
+            key = chain_key(key, run);
+            match self.entries.get(&key) {
+                Some(e) if e.run == run => {
+                    let mut any = false;
+                    for w in 0..n_workers {
+                        if alive[w] && e.holders.binary_search(&w).is_ok() {
+                            depth[w] = i + 1;
+                            any = true;
+                        } else {
+                            alive[w] = false;
+                        }
+                    }
+                    if !any {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let (best, best_depth) = depth
+            .iter()
+            .copied()
+            .enumerate()
+            .max_by_key(|&(w, d)| (d, std::cmp::Reverse(w)))?;
+        if best_depth == 0 {
+            None
+        } else {
+            Some((best, best_depth))
+        }
+    }
+}
+
+/// The routing decision core a pool shares across its workers: policy
+/// state (round-robin cursor), the cross-worker [`PrefixRegistry`], and
+/// the steering function. Wrapped in a `Mutex` by the threaded
+/// coordinator; owned directly by the single-threaded virtual harness.
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: RouterPolicy,
+    cursor: usize,
+    registry: PrefixRegistry,
+}
+
+impl Router {
+    /// A router for a pool whose pagers use `block_tokens`-token blocks.
+    pub fn new(policy: RouterPolicy, block_tokens: usize) -> Router {
+        Router { policy, cursor: 0, registry: PrefixRegistry::new(block_tokens) }
+    }
+
+    /// The steering policy this router runs.
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Read access to the cross-worker prefix registry (diagnostics).
+    pub fn registry(&self) -> &PrefixRegistry {
+        &self.registry
+    }
+
+    /// Forward one worker's drained pager events into the registry.
+    pub fn note_prefix_events(&mut self, worker: usize, events: &[PrefixEvent]) {
+        self.registry.apply(worker, events);
+    }
+
+    /// Steer a request: choose the worker whose queue receives it, given
+    /// the per-worker loads at this instant. `loads` must be non-empty
+    /// (one entry per worker).
+    ///
+    /// `prefix-affinity` steers to [`PrefixRegistry::deepest_hit`]
+    /// unless that worker's queue is more than
+    /// [`AFFINITY_IMBALANCE_LIMIT`] jobs deeper than the shallowest
+    /// queue; no hit (empty registry — e.g. prefix cache off or a
+    /// restore-incapable backend) or an over-deep hit falls back to
+    /// least-loaded.
+    pub fn route(&mut self, prompt: &[i64], loads: &[WorkerLoad]) -> usize {
+        assert!(!loads.is_empty(), "route() needs at least one worker");
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let w = self.cursor % loads.len();
+                self.cursor = self.cursor.wrapping_add(1);
+                w
+            }
+            RouterPolicy::LeastLoaded => least_loaded(loads),
+            RouterPolicy::PrefixAffinity => {
+                if let Some((w, _depth)) = self.registry.deepest_hit(prompt, loads.len()) {
+                    let min_queue =
+                        loads.iter().map(|l| l.queue_depth).min().expect("non-empty");
+                    if loads[w].queue_depth <= min_queue + AFFINITY_IMBALANCE_LIMIT {
+                        return w;
+                    }
+                }
+                least_loaded(loads)
+            }
+        }
+    }
+}
+
+/// Lowest combined load, ties toward the lower worker index.
+fn least_loaded(loads: &[WorkerLoad]) -> usize {
+    let mut best = 0usize;
+    for (i, l) in loads.iter().enumerate().skip(1) {
+        if l.total() < loads[best].total() {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Result of a peek-then-pop attempt on a pool's queues (the per-worker
+/// generalization of the old shared-queue `Popped`).
+pub enum Popped<J> {
+    /// The head was admitted; here it is.
+    Job(J),
+    /// The head can never fit any worker; the caller must refuse it.
+    Rejected(J),
+    /// Nothing this worker may take right now.
+    None,
+    /// The pool is closed and every queue has drained.
+    Closed,
+}
+
+/// One queued job with its enqueue time (drives spill eligibility).
+struct Entry<J> {
+    enqueued_s: f64,
+    job: J,
+}
+
+struct QueuesState<J> {
+    queues: Vec<VecDeque<Entry<J>>>,
+    closed: bool,
+}
+
+/// Per-worker addressable job queues with head-peek admission and a
+/// spill/steal fallback — the queue half of the routing subsystem,
+/// shared verbatim by the threaded pool (wall seconds, real contention)
+/// and the virtual harness (virtual seconds, single-threaded).
+///
+/// Semantics:
+///
+/// * [`PoolQueues::push`] enqueues at the tail of the steered worker's
+///   queue; FIFO order within a queue is preserved.
+/// * [`PoolQueues::pop_for`] lets worker `w` peek *its own* head and pop
+///   it only on [`Admit::Take`]/[`Admit::Reject`] — an
+///   [`Admit::Later`] head stays put (the worker is saturated, so it
+///   must neither pop nor steal).
+/// * Only when its own queue is empty may a worker **steal**: it claims
+///   the longest-waiting eligible sibling head, where eligible means the
+///   head has waited at least [`DEFAULT_SPILL_AFTER_S`]. Affinity can
+///   therefore delay a job by at most the spill bound while sibling
+///   capacity idles — it can never starve one.
+/// * [`PoolQueues::push_front`] requeues a preempted job at the head of
+///   its worker's queue (anti-starvation, as before), and is accepted
+///   even after [`PoolQueues::close`]: a preempted job was already
+///   admitted once and must still drain.
+pub struct PoolQueues<J> {
+    state: Mutex<QueuesState<J>>,
+    cv: Condvar,
+    spill_after_s: f64,
+}
+
+impl<J> PoolQueues<J> {
+    /// Queues for an `n_workers`-worker pool with the default spill
+    /// bound.
+    pub fn new(n_workers: usize) -> PoolQueues<J> {
+        PoolQueues::with_spill_after(n_workers, DEFAULT_SPILL_AFTER_S)
+    }
+
+    /// Queues with an explicit spill bound, seconds (tests; 0 = an idle
+    /// worker may steal immediately).
+    pub fn with_spill_after(n_workers: usize, spill_after_s: f64) -> PoolQueues<J> {
+        PoolQueues {
+            state: Mutex::new(QueuesState {
+                queues: (0..n_workers.max(1)).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            spill_after_s: spill_after_s.max(0.0),
+        }
+    }
+
+    /// Number of per-worker queues.
+    pub fn n_workers(&self) -> usize {
+        self.state.lock().unwrap().queues.len()
+    }
+
+    /// Current depth of each worker's queue (routing loads + gauges).
+    pub fn depths(&self) -> Vec<usize> {
+        self.state.lock().unwrap().queues.iter().map(|q| q.len()).collect()
+    }
+
+    /// Total jobs queued across all workers.
+    pub fn total_depth(&self) -> usize {
+        self.state.lock().unwrap().queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Enqueue a job at the tail of `worker`'s queue; `Err(job)` if the
+    /// pool already shut down. `now_s` stamps the entry for spill
+    /// eligibility.
+    pub fn push(&self, worker: usize, now_s: f64, job: J) -> Result<(), J> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(job);
+        }
+        st.queues[worker].push_back(Entry { enqueued_s: now_s, job });
+        // notify_all, not notify_one: with per-worker queues the single
+        // woken waiter might be a sibling whose steal window has not
+        // opened yet, and the owner would sleep through its own job.
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Requeue a preempted job at the head of `worker`'s queue so it
+    /// readmits before later arrivals. Accepted after `close`.
+    pub fn push_front(&self, worker: usize, now_s: f64, job: J) {
+        let mut st = self.state.lock().unwrap();
+        st.queues[worker].push_front(Entry { enqueued_s: now_s, job });
+        self.cv.notify_all();
+    }
+
+    /// Close the pool: new `push`es fail; queued jobs still drain.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Worker `worker` attempts to obtain a job at time `now_s`: peek
+    /// its own head with `decide` (popping on Take/Reject, leaving a
+    /// Later head queued), else — own queue empty — steal the
+    /// longest-waiting eligible sibling head. With `wait`, parks up to
+    /// ~10 ms first when there is nothing to examine (the condvar
+    /// releases the lock while parked).
+    pub fn pop_for(
+        &self,
+        worker: usize,
+        now_s: f64,
+        wait: bool,
+        mut decide: impl FnMut(&J) -> Admit,
+    ) -> Popped<J> {
+        let mut st = self.state.lock().unwrap();
+        if wait
+            && !st.closed
+            && st.queues[worker].is_empty()
+            && self.steal_source(&st, worker, now_s).is_none()
+        {
+            st = self.cv.wait_timeout(st, Duration::from_millis(10)).unwrap().0;
+        }
+        let source = if !st.queues[worker].is_empty() {
+            Some(worker)
+        } else {
+            self.steal_source(&st, worker, now_s)
+        };
+        if let Some(src) = source {
+            let decision = decide(&st.queues[src].front().expect("source has a head").job);
+            return match decision {
+                Admit::Take => Popped::Job(st.queues[src].pop_front().expect("head").job),
+                Admit::Reject => {
+                    Popped::Rejected(st.queues[src].pop_front().expect("head").job)
+                }
+                Admit::Later => Popped::None,
+            };
+        }
+        if st.closed && st.queues.iter().all(|q| q.is_empty()) {
+            Popped::Closed
+        } else {
+            Popped::None
+        }
+    }
+
+    /// The sibling queue `thief` may steal from right now: the one whose
+    /// head has waited longest, among heads waiting at least the spill
+    /// bound (ties break toward the lower queue index; deterministic).
+    fn steal_source(&self, st: &QueuesState<J>, thief: usize, now_s: f64) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, q) in st.queues.iter().enumerate() {
+            if i == thief {
+                continue;
+            }
+            if let Some(head) = q.front() {
+                if now_s - head.enqueued_s >= self.spill_after_s {
+                    let cand = (head.enqueued_s, i);
+                    if best.map_or(true, |b| cand < b) {
+                        best = Some(cand);
+                    }
+                }
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(queue_depth: usize, active_lanes: usize) -> WorkerLoad {
+        WorkerLoad { queue_depth, active_lanes }
+    }
+
+    fn insert_events(prompt: &[i64], block_tokens: usize) -> Vec<PrefixEvent> {
+        let mut key = CHAIN_SEED;
+        prompt
+            .chunks_exact(block_tokens)
+            .map(|run| {
+                key = chain_key(key, run);
+                PrefixEvent::Insert { key, run: run.to_vec() }
+            })
+            .collect()
+    }
+
+    // ---- policies ----
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in RouterPolicy::all() {
+            assert_eq!(RouterPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RouterPolicy::parse("round-robin"), Some(RouterPolicy::RoundRobin));
+        assert_eq!(RouterPolicy::parse("least-loaded"), Some(RouterPolicy::LeastLoaded));
+        assert_eq!(RouterPolicy::parse("prefix-affinity"), Some(RouterPolicy::PrefixAffinity));
+        assert_eq!(RouterPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn round_robin_cycles_workers() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 4);
+        let loads = vec![load(0, 0); 3];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&[1], &loads)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_counts_queue_and_lanes() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 4);
+        assert_eq!(r.route(&[1], &[load(2, 1), load(0, 2), load(0, 1)]), 2);
+        // Ties break toward the lower index.
+        assert_eq!(r.route(&[1], &[load(1, 1), load(0, 2), load(2, 0)]), 0);
+    }
+
+    // ---- registry ----
+
+    #[test]
+    fn registry_tracks_holders_and_verifies_tokens() {
+        let mut reg = PrefixRegistry::new(4);
+        let prompt: Vec<i64> = (0..12).collect();
+        reg.apply(1, &insert_events(&prompt, 4));
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((1, 3)));
+        // A shorter prompt sharing the first block hits depth 1.
+        assert_eq!(reg.deepest_hit(&prompt[..7], 2), Some((1, 1)));
+        // Same shape, different tokens: token verification rejects it.
+        let other: Vec<i64> = (100..112).collect();
+        assert_eq!(reg.deepest_hit(&other, 2), None);
+        // Worker index beyond the probed range is invisible.
+        assert_eq!(reg.deepest_hit(&prompt, 1), None);
+    }
+
+    #[test]
+    fn registry_deepest_hit_prefers_depth_then_lower_index() {
+        let mut reg = PrefixRegistry::new(4);
+        let prompt: Vec<i64> = (0..16).collect();
+        // Worker 2 holds the whole chain, worker 0 only the first block.
+        reg.apply(2, &insert_events(&prompt, 4));
+        reg.apply(0, &insert_events(&prompt[..4], 4));
+        assert_eq!(reg.deepest_hit(&prompt, 3), Some((2, 4)));
+        // Equal depth: lower worker index wins.
+        reg.apply(1, &insert_events(&prompt, 4));
+        assert_eq!(reg.deepest_hit(&prompt, 3), Some((1, 4)));
+    }
+
+    #[test]
+    fn registry_evicts_per_worker_and_drops_empty_entries() {
+        let mut reg = PrefixRegistry::new(4);
+        let prompt: Vec<i64> = (0..8).collect();
+        let inserts = insert_events(&prompt, 4);
+        reg.apply(0, &inserts);
+        reg.apply(1, &inserts);
+        let evict_tail = vec![match &inserts[1] {
+            PrefixEvent::Insert { key, .. } => PrefixEvent::Evict { key: *key },
+            _ => unreachable!(),
+        }];
+        reg.apply(1, &evict_tail);
+        // Worker 1's chain now stops at depth 1; worker 0 still has 2.
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((0, 2)));
+        reg.apply(0, &evict_tail);
+        assert_eq!(reg.len(), 1, "entry with no holders is dropped");
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((0, 1)));
+    }
+
+    #[test]
+    fn registry_chain_requires_consecutive_blocks_per_worker() {
+        let mut reg = PrefixRegistry::new(4);
+        let prompt: Vec<i64> = (0..12).collect();
+        let inserts = insert_events(&prompt, 4);
+        // Worker 0 holds blocks 0 and 2 but NOT 1: its chain depth is 1.
+        reg.apply(0, &[inserts[0].clone(), inserts[2].clone()]);
+        assert_eq!(reg.deepest_hit(&prompt, 1), Some((0, 1)));
+    }
+
+    // ---- affinity routing ----
+
+    #[test]
+    fn affinity_steers_to_hit_else_least_loaded() {
+        let mut r = Router::new(RouterPolicy::PrefixAffinity, 4);
+        let prompt: Vec<i64> = (0..8).collect();
+        // Empty registry: least-loaded fallback.
+        assert_eq!(r.route(&prompt, &[load(0, 3), load(0, 1)]), 1);
+        r.note_prefix_events(0, &insert_events(&prompt, 4));
+        // Registered hit on worker 0 wins even though it is busier.
+        assert_eq!(r.route(&prompt, &[load(0, 3), load(0, 1)]), 0);
+        // A different prompt still falls back.
+        assert_eq!(r.route(&[9, 9, 9, 9], &[load(0, 3), load(0, 1)]), 1);
+    }
+
+    #[test]
+    fn affinity_caps_queue_imbalance() {
+        let mut r = Router::new(RouterPolicy::PrefixAffinity, 4);
+        let prompt: Vec<i64> = (0..8).collect();
+        r.note_prefix_events(0, &insert_events(&prompt, 4));
+        // Hit worker within the queue-gap bound: steered to the hit.
+        let at_bound = [load(AFFINITY_IMBALANCE_LIMIT, 9), load(0, 0)];
+        assert_eq!(r.route(&prompt, &at_bound), 0);
+        // One past the bound: falls back to least-loaded.
+        let past = [load(AFFINITY_IMBALANCE_LIMIT + 1, 9), load(0, 0)];
+        assert_eq!(r.route(&prompt, &past), 1);
+        // Active lanes alone never trigger the cap (batching is cheap;
+        // queueing is not).
+        let deep_lanes = [load(0, 50), load(0, 0)];
+        assert_eq!(r.route(&prompt, &deep_lanes), 0);
+    }
+
+    // ---- pool queues ----
+
+    #[test]
+    fn queues_are_fifo_per_worker_with_head_peek() {
+        let q: PoolQueues<u32> = PoolQueues::new(2);
+        q.push(0, 0.0, 10).unwrap();
+        q.push(0, 0.0, 11).unwrap();
+        q.push(1, 0.0, 20).unwrap();
+        // A Later head stays queued.
+        assert!(matches!(q.pop_for(0, 0.0, false, |_| Admit::Later), Popped::None));
+        assert_eq!(q.depths(), vec![2, 1]);
+        // Take pops FIFO.
+        match q.pop_for(0, 0.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 10),
+            _ => panic!("expected job"),
+        }
+        // Reject pops too (the caller refuses it).
+        match q.pop_for(0, 0.0, false, |_| Admit::Reject) {
+            Popped::Rejected(j) => assert_eq!(j, 11),
+            _ => panic!("expected rejection"),
+        }
+        assert_eq!(q.depths(), vec![0, 1]);
+        assert_eq!(q.total_depth(), 1);
+    }
+
+    #[test]
+    fn idle_worker_steals_only_after_spill_bound() {
+        let q: PoolQueues<u32> = PoolQueues::with_spill_after(2, 1.0);
+        q.push(0, 10.0, 7).unwrap();
+        // Worker 1 is idle but the head has not aged past the bound.
+        assert!(matches!(q.pop_for(1, 10.5, false, |_| Admit::Take), Popped::None));
+        // Past the bound: the idle sibling claims it.
+        match q.pop_for(1, 11.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 7),
+            _ => panic!("expected steal"),
+        }
+        assert_eq!(q.total_depth(), 0);
+    }
+
+    #[test]
+    fn own_queue_blocks_stealing() {
+        // A worker with its own (even un-admittable) head never steals:
+        // saturated workers must not pull more work.
+        let q: PoolQueues<u32> = PoolQueues::with_spill_after(2, 0.0);
+        q.push(0, 0.0, 1).unwrap();
+        q.push(1, 0.0, 2).unwrap();
+        match q.pop_for(1, 100.0, false, |&j| if j == 2 { Admit::Later } else { Admit::Take }) {
+            Popped::None => {}
+            _ => panic!("worker 1 must sit on its own Later head, not steal"),
+        }
+        assert_eq!(q.depths(), vec![1, 1]);
+    }
+
+    #[test]
+    fn steal_prefers_longest_waiting_head() {
+        let q: PoolQueues<u32> = PoolQueues::with_spill_after(3, 0.0);
+        q.push(1, 5.0, 15).unwrap();
+        q.push(2, 3.0, 23).unwrap(); // older head
+        match q.pop_for(0, 10.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 23),
+            _ => panic!("expected steal of the oldest head"),
+        }
+    }
+
+    #[test]
+    fn push_front_requeues_at_head_even_after_close() {
+        let q: PoolQueues<u32> = PoolQueues::new(1);
+        q.push(0, 0.0, 1).unwrap();
+        q.close();
+        assert!(q.push(0, 0.0, 2).is_err(), "push after close must fail");
+        q.push_front(0, 0.0, 3);
+        match q.pop_for(0, 0.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 3),
+            _ => panic!("expected the requeued job first"),
+        }
+        match q.pop_for(0, 0.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 1),
+            _ => panic!("expected the original job"),
+        }
+        assert!(matches!(q.pop_for(0, 0.0, true, |_| Admit::Take), Popped::Closed));
+    }
+
+    #[test]
+    fn closed_reported_only_when_all_queues_drain() {
+        let q: PoolQueues<u32> = PoolQueues::with_spill_after(2, 0.0);
+        q.push(1, 0.0, 9).unwrap();
+        q.close();
+        // Worker 0's own queue is empty but worker 1 still has work —
+        // not Closed yet (worker 0 may steal it).
+        match q.pop_for(0, 0.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 9),
+            _ => panic!("expected steal of the leftover job"),
+        }
+        assert!(matches!(q.pop_for(0, 0.0, false, |_| Admit::Take), Popped::Closed));
+        assert!(matches!(q.pop_for(1, 0.0, false, |_| Admit::Take), Popped::Closed));
+    }
+}

@@ -304,6 +304,18 @@ impl KvPolicy {
             }
         }
     }
+
+    /// Block size a pool's prefix registry must chunk prompts by to
+    /// match this policy's pagers (the paged block size; the default
+    /// when the reserve policy leaves the registry unused). Lives here
+    /// so the threaded pool and the virtual harness can never drift on
+    /// registry chunking.
+    pub fn registry_block_tokens(&self) -> usize {
+        match *self {
+            KvPolicy::Paged { block_tokens } => block_tokens,
+            KvPolicy::Reserve => DEFAULT_KV_BLOCK_TOKENS,
+        }
+    }
 }
 
 /// Identity of one physical KV block inside a worker's [`KvPager`].
@@ -429,10 +441,34 @@ struct PrefixIndex {
 /// paged budget; this guards the library API.)
 pub const DEFAULT_UNBOUNDED_PREFIX_CACHE_BLOCKS: usize = 4096;
 
-const CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+/// An observable change to a pager's prefix index. Drained by the
+/// serving drivers ([`KvPager::drain_prefix_events`]) and forwarded —
+/// tagged with the worker index — to the pool-level
+/// [`super::router::PrefixRegistry`], so the router knows which workers
+/// hold which cached prefix chains without ever walking a remote pager.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PrefixEvent {
+    /// A block-aligned token run was indexed under `key` (the chain
+    /// hash of the run and its ancestors). The run rides along so the
+    /// registry stays token-verified exactly like the per-worker index.
+    Insert {
+        /// Chain-hash key of the indexed run.
+        key: u64,
+        /// The indexed token run (one full block).
+        run: Vec<i64>,
+    },
+    /// The entry under `key` was evicted (LRU reclaim, capacity bound,
+    /// or the whole index being disabled).
+    Evict {
+        /// Chain-hash key of the evicted run.
+        key: u64,
+    },
+}
+
+pub(crate) const CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
 
 /// Chain-hash one block-aligned token run onto the parent key.
-fn chain_key(prev: u64, run: &[i64]) -> u64 {
+pub(crate) fn chain_key(prev: u64, run: &[i64]) -> u64 {
     let mut h = prev.rotate_left(17) ^ (run.len() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     for &t in run {
         h ^= (t as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -490,6 +526,11 @@ pub struct KvPager {
     prefix_hit_tokens: u64,
     shared_block_grants: u64,
     cow_splits: u64,
+    /// Undrained index insert/evict events (see
+    /// [`KvPager::drain_prefix_events`]). Only ever grows while the
+    /// prefix cache is enabled, and both serving drivers drain it every
+    /// admission/step, so it stays small.
+    prefix_events: Vec<PrefixEvent>,
 }
 
 impl KvPager {
@@ -520,6 +561,7 @@ impl KvPager {
             prefix_hit_tokens: 0,
             shared_block_grants: 0,
             cow_splits: 0,
+            prefix_events: Vec::new(),
         }
     }
 
@@ -549,7 +591,8 @@ impl KvPager {
     /// when the backend cannot restore sessions at a cached position).
     pub fn disable_prefix_cache(&mut self) {
         if let Some(cache) = self.cache.take() {
-            for e in cache.entries.into_values() {
+            for (key, e) in cache.entries {
+                self.prefix_events.push(PrefixEvent::Evict { key });
                 self.cached[e.block as usize] = false;
                 if self.refcounts[e.block as usize] == 1 {
                     self.cache_only -= 1;
@@ -558,6 +601,16 @@ impl KvPager {
             }
         }
         debug_assert_eq!(self.cache_only, 0, "cache-only count must drain with the index");
+    }
+
+    /// Drain the prefix-index insert/evict events accumulated since the
+    /// last drain. Each serving driver forwards them (tagged with its
+    /// worker index) to the pool's [`super::router::PrefixRegistry`];
+    /// event *sets* between drains are deterministic, and applying them
+    /// to the registry is order-independent, so virtual runs stay
+    /// bit-identical.
+    pub fn drain_prefix_events(&mut self) -> Vec<PrefixEvent> {
+        std::mem::take(&mut self.prefix_events)
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -940,6 +993,7 @@ impl KvPager {
             }
             self.retain_block(block);
             self.cached[block as usize] = true;
+            self.prefix_events.push(PrefixEvent::Insert { key, run: run.to_vec() });
             self.cache
                 .as_mut()
                 .expect("checked above")
@@ -973,6 +1027,7 @@ impl KvPager {
             .entries
             .remove(&key)
             .expect("victim exists");
+        self.prefix_events.push(PrefixEvent::Evict { key });
         self.cached[e.block as usize] = false;
         self.cache_only -= 1;
         self.release_block(e.block);
@@ -1473,6 +1528,61 @@ mod tests {
         assert_eq!(p.lookup_prefix_blocks(&pc), 1);
         p.release_map(&ma);
         p.release_map(&mb);
+    }
+
+    #[test]
+    fn prefix_events_mirror_index_inserts_and_evicts() {
+        let mut p = cached_pager();
+        let prompt: Vec<i64> = (0..8).collect();
+        let (map, _) = p.admit_map(&prompt, 8);
+        assert!(p.drain_prefix_events().is_empty(), "no index activity yet");
+        p.register_prefix(&prompt, &map);
+        let ev = p.drain_prefix_events();
+        assert_eq!(ev.len(), 2, "two full blocks indexed: {ev:?}");
+        let runs: Vec<&[i64]> = ev
+            .iter()
+            .map(|e| match e {
+                PrefixEvent::Insert { run, .. } => run.as_slice(),
+                other => panic!("expected inserts, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(runs, vec![&prompt[0..4], &prompt[4..8]]);
+        // Re-registering refreshes recency without re-inserting.
+        p.register_prefix(&prompt, &map);
+        assert!(p.drain_prefix_events().is_empty());
+        // Disabling the index evicts every entry, visibly.
+        p.release_map(&map);
+        p.disable_prefix_cache();
+        let ev = p.drain_prefix_events();
+        assert_eq!(ev.len(), 2);
+        assert!(ev.iter().all(|e| matches!(e, PrefixEvent::Evict { .. })), "{ev:?}");
+        // The evicted keys are exactly the inserted keys.
+        let mut key = CHAIN_SEED;
+        for run in prompt.chunks_exact(4) {
+            key = chain_key(key, run);
+            assert!(ev.contains(&PrefixEvent::Evict { key }), "missing evict for {key:#x}");
+        }
+    }
+
+    #[test]
+    fn prefix_events_report_lru_reclaim() {
+        // 3-block pager: cache a 1-block prefix, release the lane, then
+        // grow a new lane past the free blocks — the cache-only block is
+        // reclaimed and the eviction must surface as an event.
+        let mut p = KvPager::new(3 * 4 * 10, 10, 4).with_prefix_cache(PrefixCacheConfig::on());
+        let prompt: Vec<i64> = vec![7; 4];
+        let (map, _) = p.admit_map(&prompt, 4); // 2 blocks (4 tokens + 1)
+        p.register_prefix(&prompt, &map);
+        p.release_map(&map);
+        let ev = p.drain_prefix_events();
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(ev[0], PrefixEvent::Insert { .. }));
+        let mut big: Vec<KvBlockId> = Vec::new();
+        assert!(p.try_grow_map(&mut big, 12)); // 3 blocks: reclaims the cached one
+        let ev = p.drain_prefix_events();
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(ev[0], PrefixEvent::Evict { .. }), "{ev:?}");
+        p.release_map(&big);
     }
 
     #[test]

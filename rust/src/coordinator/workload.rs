@@ -35,7 +35,8 @@ use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 use super::backend::{Backend, SimBackend, StepModel};
-use super::lane::{plan_step, Absorbed, Admit, HoldsLane, KvState, Lane, PlannedLane, ResumeState};
+use super::lane::{plan_step, Absorbed, HoldsLane, KvState, Lane, PlannedLane, ResumeState};
+use super::router::{PoolQueues, Popped, Router, RouterPolicy, WorkerLoad};
 use super::scheduler::{KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler, SchedulerPolicy};
 use super::{Coordinator, Request, RequestHandle, TokenEvent};
 
@@ -249,6 +250,16 @@ pub struct VirtualConfig {
     /// [`super::CoordinatorConfig::prefix_cache`]; only meaningful with
     /// [`KvPolicy::Paged`].
     pub prefix_cache: PrefixCacheConfig,
+    /// How arrivals are steered onto the per-worker queues. Mirrors
+    /// [`super::CoordinatorConfig::router`] and runs the *same*
+    /// [`Router`]/[`PoolQueues`] code as the threaded pool, on virtual
+    /// time. Routing changes placement and latency only — token streams
+    /// are identical under every policy.
+    pub router: RouterPolicy,
+    /// Spill bound, virtual seconds: how long a steered job waits at
+    /// its queue head before an idle sibling may steal it. Mirrors
+    /// [`super::CoordinatorConfig::spill_after_s`].
+    pub spill_after_s: f64,
     /// Batched per-step latency model.
     pub step: StepModel,
 }
@@ -271,6 +282,8 @@ impl VirtualConfig {
             kv_policy: KvPolicy::Reserve,
             prefill_chunk: 0,
             prefix_cache: PrefixCacheConfig::off(),
+            router: RouterPolicy::RoundRobin,
+            spill_after_s: super::router::DEFAULT_SPILL_AFTER_S,
             step,
         }
     }
@@ -339,6 +352,16 @@ pub struct VirtualReport {
     pub shared_blocks: u64,
     /// Copy-on-write tail-block splits at admission (cumulative).
     pub cow_splits: u64,
+    /// The routing policy the run used.
+    pub router_policy: RouterPolicy,
+    /// Peak depth of any single worker's queue (routing-balance gauge:
+    /// a deep queue on one worker while siblings idle is the hot-prefix
+    /// pile-up the imbalance bound and spill/steal exist to cap).
+    pub peak_queue_depth: usize,
+    /// Peak active lanes per worker, indexed by worker (the virtual
+    /// mirror of the server's `pools.<model>.workers[i].active_lanes`
+    /// gauge; uneven peaks expose routing skew).
+    pub worker_peak_lanes: Vec<usize>,
 }
 
 /// A virtual slot: the shared [`Lane`] plus virtual-time bookkeeping.
@@ -437,8 +460,15 @@ pub fn run_virtual_plan(
         .map(|(i, (at, req))| (at, i, req))
         .collect();
     let n_requests = arrivals.len();
-    let mut queue: VecDeque<VPending> = VecDeque::new();
-    let mut workers: Vec<VWorker> = (0..vc.workers)
+    // The routing subsystem is the SAME code the threaded pool runs
+    // (`coordinator::router`), driven here on virtual seconds: the
+    // router steers each arrival onto one worker's queue, each worker
+    // admits from its own head, and idle workers steal steered jobs
+    // past the spill bound.
+    let block_tokens = vc.kv_policy.registry_block_tokens();
+    let queues: PoolQueues<VPending> =
+        PoolQueues::with_spill_after(vc.workers, vc.spill_after_s);
+    let workers: Vec<VWorker> = (0..vc.workers)
         .map(|_| VWorker {
             backend: SimBackend::new(model, vocab),
             scheduler: Scheduler::new(vc.policy),
@@ -455,104 +485,26 @@ pub fn run_virtual_plan(
         .collect();
     let kv_capacity_blocks = workers[0].kv.capacity_blocks().unwrap_or(0);
 
-    let mut records: Vec<Option<VirtualRecord>> = (0..n_requests).map(|_| None).collect();
-    let mut tpot_samples: Vec<f64> = Vec::new();
-    let mut rejected = 0usize;
-    let mut preemptions = 0usize;
-    let mut max_concurrent = 0usize;
-    let mut peak_kv_reserved = 0u64;
-    let mut peak_kv_blocks = 0usize;
-    let mut wall_s = 0.0f64;
-
-    // Admit as many queued requests as fit, FIFO with no overtaking
-    // (mirrors the threaded pool's head-peek admission queue). Each
-    // request goes to the least-loaded worker that can hold it, using
-    // the same KvState::admit gate the threaded worker loop runs.
-    let mut dispatch = |queue: &mut VecDeque<VPending>,
-                        workers: &mut Vec<VWorker>,
-                        records: &mut Vec<Option<VirtualRecord>>,
-                        rejected: &mut usize,
-                        max_concurrent: &mut usize,
-                        peak_kv: &mut u64,
-                        peak_blocks: &mut usize,
-                        now: f64| {
-        while let Some(head) = queue.front() {
-            let init_ctx = head.init_ctx();
-            let worst = head.request.worst_case_tokens();
-            let mut best: Option<usize> = None;
-            let mut impossible = false;
-            for (i, w) in workers.iter().enumerate() {
-                match w.kv.admit(
-                    &head.request.prompt,
-                    init_ctx,
-                    worst,
-                    w.slots.iter().map(|s| &s.lane),
-                ) {
-                    Admit::Reject => {
-                        // Capacity is uniform across workers: impossible
-                        // here is impossible everywhere.
-                        impossible = true;
-                        break;
-                    }
-                    Admit::Take if w.slots.len() < vc.max_active => {
-                        if best.map_or(true, |b| w.slots.len() < workers[b].slots.len()) {
-                            best = Some(i);
-                        }
-                    }
-                    _ => {}
-                }
-            }
-            if impossible {
-                // Refuse, and record an empty stream so the report
-                // stays one-row-per-request.
-                records[head.rid] = Some(VirtualRecord {
-                    request_id: head.rid,
-                    arrival_s: head.arrival_s,
-                    first_token_s: now,
-                    done_s: now,
-                    tokens: Vec::new(),
-                    token_times: Vec::new(),
-                });
-                *rejected += 1;
-                queue.pop_front();
-                continue;
-            }
-            let Some(wi) = best else { break };
-            let pending = queue.pop_front().unwrap();
-            let w = &mut workers[wi];
-            let holdings =
-                w.kv.reserve_admitted(&pending.request.prompt, init_ctx, worst);
-            *peak_blocks = (*peak_blocks).max(w.kv.blocks_in_use());
-            *peak_kv = (*peak_kv).max(w.kv.bytes_in_use());
-            // A prefix hit starts the session at the cached position —
-            // the lane feeds only the uncached suffix.
-            let session =
-                w.backend.new_session_at(holdings.prefix_hit).expect("sim session");
-            let seed = pending.request.seed ^ (pending.rid as u64 + 1);
-            let (resume, first_token_s, last_token_s, token_times) = match pending.resume {
-                Some(r) => (Some(r.state), r.first_token_s, r.last_token_s, r.token_times),
-                None => (None, None, 0.0, Vec::new()),
-            };
-            let lane = Lane::admitted(pending.request, seed, resume, holdings);
-            w.slots.push(VSlot {
-                rid: pending.rid,
-                arrival_s: pending.arrival_s,
-                session,
-                lane,
-                first_token_s,
-                last_token_s,
-                token_times,
-            });
-            let idx = w.slots.len() - 1;
-            w.scheduler.reset_slot(idx);
-            let active: usize = workers.iter().map(|w| w.slots.len()).sum();
-            *max_concurrent = (*max_concurrent).max(active);
-        }
+    let mut st = VState {
+        workers,
+        router: Router::new(vc.router, block_tokens),
+        records: (0..n_requests).map(|_| None).collect(),
+        tpot_samples: Vec::new(),
+        rejected: 0,
+        preemptions: 0,
+        max_concurrent: 0,
+        peak_kv_reserved: 0,
+        peak_kv_blocks: 0,
+        peak_queue_depth: 0,
+        worker_peak_lanes: vec![0; vc.workers],
+        max_active: vc.max_active,
     };
+    let mut wall_s = 0.0f64;
 
     loop {
         let next_arrival = arrivals.front().map(|a| a.0);
-        let next_step = workers
+        let next_step = st
+            .workers
             .iter()
             .enumerate()
             .filter(|(_, w)| !w.batch.is_empty())
@@ -568,7 +520,7 @@ pub fn run_virtual_plan(
         }
         let event = match (next_arrival, next_step) {
             (None, None) => {
-                if queue.is_empty() {
+                if queues.total_depth() == 0 {
                     break;
                 }
                 Event::Drain
@@ -586,61 +538,45 @@ pub fn run_virtual_plan(
 
         match event {
             Event::Arrival => {
-                let (ta, rid, req) = arrivals.pop_front().expect("arrival event");
-                wall_s = wall_s.max(ta);
-                let now = ta;
-                queue.push_back(VPending { arrival_s: ta, rid, request: req, resume: None });
-                // Pull in any simultaneous arrivals deterministically.
-                while arrivals.front().map(|a| a.0 == now).unwrap_or(false) {
-                    let (ta, rid, req) = arrivals.pop_front().unwrap();
-                    queue.push_back(VPending {
-                        arrival_s: ta,
-                        rid,
-                        request: req,
-                        resume: None,
-                    });
+                // Route, enqueue, and dispatch each arrival in order —
+                // including every simultaneous arrival, before any
+                // worker restarts a batch, so same-instant requests
+                // co-batch. Each routing decision sees the loads left
+                // by the previous arrival's dispatch, exactly like
+                // sequential `submit()` calls on the threaded pool.
+                loop {
+                    let (ta, rid, req) = arrivals.pop_front().expect("arrival event");
+                    wall_s = wall_s.max(ta);
+                    let wi = {
+                        let loads = st.loads(&queues);
+                        st.router.route(&req.prompt, &loads)
+                    };
+                    let _ = queues.push(
+                        wi,
+                        ta,
+                        VPending { arrival_s: ta, rid, request: req, resume: None },
+                    );
+                    st.peak_queue_depth = st
+                        .peak_queue_depth
+                        .max(queues.depths().into_iter().max().unwrap_or(0));
+                    st.dispatch(&queues, ta);
+                    if !arrivals.front().map(|a| a.0 == ta).unwrap_or(false) {
+                        break;
+                    }
                 }
-                dispatch(
-                    &mut queue,
-                    &mut workers,
-                    &mut records,
-                    &mut rejected,
-                    &mut max_concurrent,
-                    &mut peak_kv_reserved,
-                    &mut peak_kv_blocks,
-                    now,
-                );
             }
             Event::Step(ts, wi) => {
                 wall_s = wall_s.max(ts);
-                finish_step(&mut workers[wi], ts, &mut records, &mut tpot_samples);
-                dispatch(
-                    &mut queue,
-                    &mut workers,
-                    &mut records,
-                    &mut rejected,
-                    &mut max_concurrent,
-                    &mut peak_kv_reserved,
-                    &mut peak_kv_blocks,
-                    ts,
-                );
+                finish_step(&mut st.workers[wi], ts, &mut st.records, &mut st.tpot_samples);
+                st.dispatch(&queues, ts);
             }
             Event::Drain => {
-                // No arrivals left and nothing in flight, but the queue
-                // is non-empty: every worker is empty, so each head is
+                // No arrivals left and nothing in flight, but jobs are
+                // queued: every worker is idle, so each queue's head is
                 // either admitted or rejected-as-impossible here.
-                let before = queue.len();
-                dispatch(
-                    &mut queue,
-                    &mut workers,
-                    &mut records,
-                    &mut rejected,
-                    &mut max_concurrent,
-                    &mut peak_kv_reserved,
-                    &mut peak_kv_blocks,
-                    wall_s,
-                );
-                if queue.len() == before {
+                let before = queues.total_depth();
+                st.dispatch(&queues, wall_s);
+                if queues.total_depth() == before {
                     return Err(format!(
                         "virtual scheduler stuck with {before} queued requests"
                     ));
@@ -652,10 +588,10 @@ pub fn run_virtual_plan(
         // in-flight batch — including idle workers that just admitted.
         // Step composition (lane picks, prefill spans, paged growth,
         // preemption) is the shared `plan_step`; evicted slots carry
-        // their stream state to the *front* of the queue for
+        // their stream state to the *front* of their worker's queue for
         // recompute-on-readmit.
         let now = wall_s;
-        for w in workers.iter_mut() {
+        for (wi, w) in st.workers.iter_mut().enumerate() {
             if !w.batch.is_empty() || w.slots.is_empty() {
                 continue;
             }
@@ -667,32 +603,42 @@ pub fn run_virtual_plan(
                 vc.prefill_chunk,
             );
             for s in evicted {
-                preemptions += 1;
-                if preemptions > 1000 + 100 * n_requests {
+                st.preemptions += 1;
+                if st.preemptions > 1000 + 100 * n_requests {
                     // Preemption terminates (the max-progress slot is
                     // never evicted while others exist, and prefill
                     // never needs growth), but a bound turns any future
                     // regression into an error instead of a hang.
                     return Err(format!(
-                        "preemption livelock suspected: {preemptions} preemptions \
-                         for {n_requests} requests"
+                        "preemption livelock suspected: {} preemptions \
+                         for {n_requests} requests",
+                        st.preemptions
                     ));
                 }
                 let (request, state) = s.lane.into_resume();
-                queue.push_front(VPending {
-                    arrival_s: s.arrival_s,
-                    rid: s.rid,
-                    request,
-                    resume: Some(VResume {
-                        state,
-                        first_token_s: s.first_token_s,
-                        last_token_s: s.last_token_s,
-                        token_times: s.token_times,
-                    }),
-                });
+                queues.push_front(
+                    wi,
+                    now,
+                    VPending {
+                        arrival_s: s.arrival_s,
+                        rid: s.rid,
+                        request,
+                        resume: Some(VResume {
+                            state,
+                            first_token_s: s.first_token_s,
+                            last_token_s: s.last_token_s,
+                            token_times: s.token_times,
+                        }),
+                    },
+                );
+                // Preemption requeues deepen queues too; sample the
+                // peak here as well as at arrival pushes.
+                st.peak_queue_depth = st
+                    .peak_queue_depth
+                    .max(queues.depths().into_iter().max().unwrap_or(0));
             }
-            peak_kv_blocks = peak_kv_blocks.max(w.kv.blocks_in_use());
-            peak_kv_reserved = peak_kv_reserved.max(w.kv.bytes_in_use());
+            st.peak_kv_blocks = st.peak_kv_blocks.max(w.kv.blocks_in_use());
+            st.peak_kv_reserved = st.peak_kv_reserved.max(w.kv.bytes_in_use());
             if plan.is_empty() {
                 continue;
             }
@@ -700,37 +646,186 @@ pub fn run_virtual_plan(
             w.busy_until = now + vc.step.mixed_step_s(&works);
             w.batch = plan.lanes;
         }
+        // Publish this iteration's prefix-index changes (prefill
+        // completions in finish_step, cache evictions during plan_step
+        // growth) to the registry before the next routing decision.
+        st.sync_registry();
     }
 
     let records: Vec<VirtualRecord> =
-        records.into_iter().map(|r| r.expect("every request recorded")).collect();
+        st.records.into_iter().map(|r| r.expect("every request recorded")).collect();
     let completed: Vec<&VirtualRecord> =
         records.iter().filter(|r| !r.tokens.is_empty()).collect();
     let ttfts: Vec<f64> = completed.iter().map(|r| r.first_token_s - r.arrival_s).collect();
     let lats: Vec<f64> = completed.iter().map(|r| r.done_s - r.arrival_s).collect();
     let total_tokens: usize = completed.iter().map(|r| r.tokens.len()).sum();
-    let prefix = workers
+    let prefix = st
+        .workers
         .iter()
         .fold(PrefixStats::default(), |acc, w| acc.plus(&w.kv.prefix_stats()));
     Ok(VirtualReport {
         policy: vc.policy,
         offered_rate,
-        rejected,
+        rejected: st.rejected,
         ttft: summary_or_zero(&ttfts),
-        tpot: summary_or_zero(&tpot_samples),
+        tpot: summary_or_zero(&st.tpot_samples),
         request_latency: summary_or_zero(&lats),
         wall_s,
         tokens_per_s: if wall_s > 0.0 { total_tokens as f64 / wall_s } else { 0.0 },
-        max_concurrent,
-        peak_kv_reserved,
-        preemptions,
-        peak_kv_blocks,
+        max_concurrent: st.max_concurrent,
+        peak_kv_reserved: st.peak_kv_reserved,
+        preemptions: st.preemptions,
+        peak_kv_blocks: st.peak_kv_blocks,
         kv_capacity_blocks,
         prefix_hit_tokens: prefix.hit_tokens,
         shared_blocks: prefix.shared_blocks,
         cow_splits: prefix.cow_splits,
+        router_policy: vc.router,
+        peak_queue_depth: st.peak_queue_depth,
+        worker_peak_lanes: st.worker_peak_lanes,
         records,
     })
+}
+
+/// The virtual run's mutable simulation state, factored so admission
+/// ([`VState::dispatch`]) can live in one method instead of a closure
+/// with a dozen `&mut` parameters.
+struct VState {
+    workers: Vec<VWorker>,
+    /// The SAME routing decision core the threaded pool locks behind a
+    /// mutex — owned directly here (single-threaded).
+    router: Router,
+    records: Vec<Option<VirtualRecord>>,
+    tpot_samples: Vec<f64>,
+    rejected: usize,
+    preemptions: usize,
+    max_concurrent: usize,
+    peak_kv_reserved: u64,
+    peak_kv_blocks: usize,
+    peak_queue_depth: usize,
+    worker_peak_lanes: Vec<usize>,
+    max_active: usize,
+}
+
+impl VState {
+    /// Per-worker loads for a routing decision (queue depths + current
+    /// slot-table sizes), mirroring the threaded `submit()` path.
+    fn loads(&self, queues: &PoolQueues<VPending>) -> Vec<WorkerLoad> {
+        queues
+            .depths()
+            .into_iter()
+            .zip(&self.workers)
+            .map(|(queue_depth, w)| WorkerLoad { queue_depth, active_lanes: w.slots.len() })
+            .collect()
+    }
+
+    /// Forward every worker's drained pager events to the router's
+    /// prefix registry (no-op when nothing changed).
+    fn sync_registry(&mut self) {
+        for (wi, w) in self.workers.iter_mut().enumerate() {
+            let events = w.kv.drain_prefix_events();
+            if !events.is_empty() {
+                self.router.note_prefix_events(wi, &events);
+            }
+        }
+    }
+
+    /// Admit as much queued work as fits: every worker repeatedly
+    /// peeks its own queue head through the shared `KvState::admit`
+    /// gate (head-peek: a Later head stays queued) and, when its own
+    /// queue is empty, steals a sibling head past the spill bound —
+    /// identical semantics to the threaded worker loop's admission
+    /// phase, iterated to a fixed point because one worker's admission
+    /// can open a steal for another.
+    fn dispatch(&mut self, queues: &PoolQueues<VPending>, now: f64) {
+        loop {
+            let mut progress = false;
+            for wi in 0..self.workers.len() {
+                while self.workers[wi].slots.len() < self.max_active {
+                    let popped = queues.pop_for(wi, now, false, |p| {
+                        let w = &self.workers[wi];
+                        w.kv.admit(
+                            &p.request.prompt,
+                            p.init_ctx(),
+                            p.request.worst_case_tokens(),
+                            w.slots.iter().map(|s| &s.lane),
+                        )
+                    });
+                    match popped {
+                        Popped::Job(pending) => {
+                            self.admit(wi, pending);
+                            progress = true;
+                        }
+                        Popped::Rejected(pending) => {
+                            // Can never fit any worker (capacity is
+                            // uniform): refuse, and record an empty
+                            // stream so the report stays
+                            // one-row-per-request.
+                            self.records[pending.rid] = Some(VirtualRecord {
+                                request_id: pending.rid,
+                                arrival_s: pending.arrival_s,
+                                first_token_s: now,
+                                done_s: now,
+                                tokens: Vec::new(),
+                                token_times: Vec::new(),
+                            });
+                            self.rejected += 1;
+                            progress = true;
+                        }
+                        Popped::None | Popped::Closed => break,
+                    }
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+    }
+
+    /// Admit one popped job into worker `wi`'s slot table (reservation,
+    /// session at the cached position, resume carry, gauges) — the
+    /// virtual mirror of the threaded admission arm.
+    fn admit(&mut self, wi: usize, pending: VPending) {
+        let init_ctx = pending.init_ctx();
+        let VPending { arrival_s, rid, request, resume } = pending;
+        let worst = request.worst_case_tokens();
+        let w = &mut self.workers[wi];
+        let holdings = w.kv.reserve_admitted(&request.prompt, init_ctx, worst);
+        // A prefix hit starts the session at the cached position — the
+        // lane feeds only the uncached suffix.
+        let session = w.backend.new_session_at(holdings.prefix_hit).expect("sim session");
+        let seed = request.seed ^ (rid as u64 + 1);
+        let (resume_state, first_token_s, last_token_s, token_times) = match resume {
+            Some(r) => (Some(r.state), r.first_token_s, r.last_token_s, r.token_times),
+            None => (None, None, 0.0, Vec::new()),
+        };
+        let lane = Lane::admitted(request, seed, resume_state, holdings);
+        w.slots.push(VSlot {
+            rid,
+            arrival_s,
+            session,
+            lane,
+            first_token_s,
+            last_token_s,
+            token_times,
+        });
+        let idx = w.slots.len() - 1;
+        w.scheduler.reset_slot(idx);
+        let lanes = w.slots.len();
+        let blocks = w.kv.blocks_in_use();
+        let bytes = w.kv.bytes_in_use();
+        // Sharing can reclaim (evict) cache entries at admission; tell
+        // the registry before the next routing decision.
+        let events = w.kv.drain_prefix_events();
+        self.peak_kv_blocks = self.peak_kv_blocks.max(blocks);
+        self.peak_kv_reserved = self.peak_kv_reserved.max(bytes);
+        self.worker_peak_lanes[wi] = self.worker_peak_lanes[wi].max(lanes);
+        if !events.is_empty() {
+            self.router.note_prefix_events(wi, &events);
+        }
+        let active: usize = self.workers.iter().map(|w| w.slots.len()).sum();
+        self.max_concurrent = self.max_concurrent.max(active);
+    }
 }
 
 /// Complete one fused step on `w` at virtual time `now`: feed every
@@ -1090,6 +1185,102 @@ mod tests {
         let on2 = run(PrefixCacheConfig::on());
         assert_eq!(on.records, on2.records);
         assert_eq!(on.wall_s, on2.wall_s);
+    }
+
+    #[test]
+    fn virtual_router_policies_are_deterministic_and_stream_identical() {
+        // Routing changes placement and latency only: for every policy,
+        // reruns are bit-identical and token streams match the
+        // round-robin run stream-for-stream.
+        let w = wl(3000.0, 24);
+        let run = |router: RouterPolicy| {
+            let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 3, 4, step_model());
+            vc.router = router;
+            run_virtual(&w, &vc).unwrap()
+        };
+        let baseline = run(RouterPolicy::RoundRobin);
+        assert_eq!(baseline.router_policy, RouterPolicy::RoundRobin);
+        assert_eq!(baseline.worker_peak_lanes.len(), 3);
+        for router in RouterPolicy::all() {
+            let a = run(router);
+            let b = run(router);
+            assert_eq!(a.records, b.records, "{router:?} rerun diverged");
+            assert_eq!(a.wall_s, b.wall_s, "{router:?}");
+            assert_eq!(a.peak_queue_depth, b.peak_queue_depth, "{router:?}");
+            for (x, y) in baseline.records.iter().zip(&a.records) {
+                assert_eq!(x.tokens, y.tokens, "{router:?} changed a stream");
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_affinity_router_concentrates_hits_on_cached_worker() {
+        // One cold shared-prefix request, then 4 identical prompts after
+        // it completed, over 2 workers with the prefix cache on. The
+        // affinity router steers every repeat to the worker holding the
+        // registered prefix; round-robin forfeits the repeats it steers
+        // to the cold sibling.
+        let prompt: Vec<i64> = (0..64).map(|i| (i % 64) as i64).collect();
+        let mk_plan = || -> Vec<(f64, Request)> {
+            let mut plan = vec![(0.0, Request::greedy("opt-tiny", prompt.clone(), 8))];
+            for _ in 0..4 {
+                plan.push((1.0, Request::greedy("opt-tiny", prompt.clone(), 8)));
+            }
+            plan
+        };
+        let run = |router: RouterPolicy| -> VirtualReport {
+            let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 8, step_model());
+            vc.kv_bytes_per_token = 100;
+            vc.kv_budget_bytes = 128 * 16 * 100; // 128 blocks per worker
+            vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+            vc.prefix_cache = PrefixCacheConfig::on();
+            vc.router = router;
+            run_virtual_plan("opt-tiny", 512, 1.0, mk_plan(), &vc).unwrap()
+        };
+        let affinity = run(RouterPolicy::PrefixAffinity);
+        // 64-token prompt: a hit skips 63 tokens. All 4 repeats hit.
+        assert_eq!(affinity.prefix_hit_tokens, 4 * 63);
+        // Round-robin alternates workers: repeats 2 and 4 land on the
+        // cached worker (cursor 1,0,1,0 after the cold request), the
+        // other two prefill cold on the sibling.
+        let rr = run(RouterPolicy::RoundRobin);
+        assert_eq!(rr.prefix_hit_tokens, 2 * 63);
+        // Streams are identical despite the different placement.
+        for (a, b) in affinity.records.iter().zip(&rr.records) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+        // The affinity run concentrated the repeats on one worker.
+        assert_eq!(affinity.worker_peak_lanes.iter().max(), Some(&4));
+    }
+
+    #[test]
+    fn virtual_affinity_overload_spills_to_idle_worker() {
+        // max_active 1 turns the affinity target into a bottleneck: the
+        // queued repeats must spill to the idle sibling (steal past the
+        // bounded wait) instead of serializing behind the hot worker —
+        // and nobody may starve.
+        let prompt: Vec<i64> = (0..48).map(|i| i as i64).collect();
+        let mut plan = vec![(0.0, Request::greedy("opt-tiny", prompt.clone(), 8))];
+        for _ in 0..5 {
+            plan.push((1.0, Request::greedy("opt-tiny", prompt.clone(), 8)));
+        }
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 1, step_model());
+        vc.kv_bytes_per_token = 100;
+        vc.kv_budget_bytes = 64 * 16 * 100;
+        vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+        vc.prefix_cache = PrefixCacheConfig::on();
+        vc.router = RouterPolicy::PrefixAffinity;
+        let r = run_virtual_plan("opt-tiny", 512, 1.0, plan, &vc).unwrap();
+        assert_eq!(r.rejected, 0);
+        assert!(r.records.iter().all(|rec| rec.tokens.len() == 8));
+        // The pile-up was visible (requests queued behind the hot
+        // worker) AND the idle sibling ended up serving some of it.
+        assert!(r.peak_queue_depth >= 1, "expected queueing at the affinity target");
+        assert!(
+            r.worker_peak_lanes[1] >= 1,
+            "idle sibling never stole spilled work: {:?}",
+            r.worker_peak_lanes
+        );
     }
 
     #[test]

@@ -22,8 +22,11 @@
 //! * [`power`] — ASIC area/power model reproducing Figure 6(a).
 //! * [`runtime`] — artifact manifests for the AOT-lowered JAX/Pallas
 //!   decoder; PJRT execution is gated off in this offline build.
-//! * [`coordinator`] — the **continuous-batching serving layer**: request
-//!   router, per-worker slot tables with mid-decode admission bounded by
+//! * [`coordinator`] — the **continuous-batching serving layer**:
+//!   **affinity-aware request routing** (per-worker addressable queues
+//!   with spill/steal, a cross-worker prefix registry, and pluggable
+//!   round-robin / least-loaded / prefix-affinity steering), per-worker
+//!   slot tables with mid-decode admission bounded by
 //!   a KV-memory budget (worst-case reservation or a **paged
 //!   reserve-as-you-grow allocator** with lowest-progress preemption and
 //!   recompute-on-readmit), batched fused decode steps (weights stream
@@ -34,10 +37,13 @@
 //!   prompt prefixes hold one physical copy and skip their prefill),
 //!   pluggable scheduler policies (FCFS /
 //!   round-robin / shortest-first), p50/p95/p99 TTFT+TPOT metrics with
-//!   KV-utilization, preemption, and prefill gauges, a seeded Poisson
-//!   load generator, and a deterministic virtual-time load harness.
+//!   KV-utilization, preemption, prefill, and routing-balance gauges, a
+//!   seeded Poisson load generator, and a deterministic virtual-time
+//!   load harness.
 //!   Submodules: [`coordinator::lane`] (the shared lane-state core both
-//!   serving paths drive), [`coordinator::scheduler`],
+//!   serving paths drive), [`coordinator::router`] (steering, queues,
+//!   and the prefix registry — also shared by both paths),
+//!   [`coordinator::scheduler`],
 //!   [`coordinator::backend`], [`coordinator::metrics`],
 //!   [`coordinator::workload`]. See `ARCHITECTURE.md` at the repo root
 //!   for the request lifecycle and a where-to-add-a-feature map.

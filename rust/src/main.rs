@@ -11,7 +11,7 @@ use lpu::compiler::{compile, CompileOpts, ParallelMode};
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
     BackendFactory, Coordinator, CoordinatorConfig, KvPolicy, PrefixCacheConfig,
-    SchedulerPolicy,
+    RouterPolicy, SchedulerPolicy,
 };
 use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
 use lpu::isa::asm;
@@ -30,16 +30,23 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefix-cache on|off|on:<blocks>]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefix-cache on|off|on:<blocks>]" },
 ];
 
 fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
     let name = args.opt_or("policy", "rr");
     SchedulerPolicy::parse(name)
         .ok_or_else(|| format!("unknown policy '{name}' (fcfs|rr|sjf)"))
+}
+
+fn router_arg(args: &Args) -> Result<RouterPolicy, String> {
+    let name = args.opt_or("router", "round-robin");
+    RouterPolicy::parse(name).ok_or_else(|| {
+        format!("unknown router policy '{name}' (round-robin|least-loaded|prefix-affinity)")
+    })
 }
 
 /// Parse the KV-accounting flags shared by `serve` and `loadtest`:
@@ -270,6 +277,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown backend '{other}' (pjrt|sim)")),
     };
     let policy = policy_arg(args)?;
+    let router = router_arg(args)?;
     let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache) =
         kv_args(args, &model)?;
     // Chunked prefill: 0 (default) = single-pass prompts; N = at most N
@@ -285,6 +293,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         max_batch: args.opt_usize("max-batch", 0)?,
         prefill_chunk,
         prefix_cache,
+        router,
+        ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, workers, factory);
     let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
@@ -294,8 +304,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         format!("{prefill_chunk}-token chunked prefill")
     };
     println!(
-        "serving '{model}' ({backend}, {} scheduling, {} KV, prefix cache {}, {prefill_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
+        "serving '{model}' ({backend}, {} scheduling, {} routing, {} KV, prefix cache {}, {prefill_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
         policy.name(),
+        router.name(),
         kv_policy.name(),
         prefix_cache.name(),
         handle.addr
@@ -347,6 +358,7 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown backend '{other}'")),
     };
     let policy = policy_arg(args)?;
+    let router = router_arg(args)?;
     let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache) =
         kv_args(args, &model)?;
     let mut coord = Coordinator::new(CoordinatorConfig {
@@ -357,6 +369,7 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         kv_policy,
         prefill_chunk: args.opt_usize("prefill-chunk", 0)?,
         prefix_cache,
+        router,
         ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, args.opt_usize("workers", 2)?, factory);

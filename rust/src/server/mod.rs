@@ -368,6 +368,15 @@ mod tests {
         assert_eq!(pool.get("prefix_hit_tokens").as_u64(), Some(0));
         assert_eq!(pool.get("shared_blocks").as_u64(), Some(0));
         assert_eq!(pool.get("cow_splits").as_u64(), Some(0));
+        // Routing-balance gauges: everything has drained, so queues are
+        // empty and the per-worker frames are present for both workers.
+        assert_eq!(pool.get("queue_depth").as_u64(), Some(0));
+        let workers = pool.get("workers").as_arr().expect("workers array");
+        assert_eq!(workers.len(), 2);
+        for w in workers {
+            assert_eq!(w.get("queue_depth").as_u64(), Some(0));
+            assert!(w.get("active_lanes").as_u64().is_some());
+        }
         h.stop();
     }
 

@@ -57,6 +57,115 @@ fn sim_backend_parallel_clients_and_throughput_counter() {
     h.stop();
 }
 
+/// Schema pin for the `metrics` op (the README documents this table):
+/// run load through TWO pools and assert every documented gauge —
+/// aggregate and per-pool, including the per-worker routing-balance
+/// gauges — is present and non-null, so the documented schema cannot
+/// rot silently.
+#[test]
+fn metrics_op_schema_is_complete_across_pools() {
+    use lpu::util::json::Json;
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: 4,
+        policy: SchedulerPolicy::RoundRobin,
+        ..CoordinatorConfig::default()
+    });
+    coord.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+    coord.add_pool("opt-mini", 3, BackendFactory::sim("opt-mini", 256));
+    let h = serve(Arc::new(coord), "127.0.0.1:0").unwrap();
+    let addr = h.addr;
+
+    let mut c = Client::connect(&addr).unwrap();
+    for model in ["opt-tiny", "opt-mini"] {
+        for p in 0..3i64 {
+            let r = c.generate(model, &[p + 1, p + 2], 5, false).unwrap();
+            assert_eq!(r.tokens.len(), 5, "{model}");
+        }
+    }
+
+    let m = c.metrics().unwrap();
+    // Aggregate snapshot fields (every key Snapshot::to_json emits) plus
+    // the server-side tags.
+    let aggregate = [
+        "submitted",
+        "started",
+        "completed",
+        "errors",
+        "cancelled",
+        "rejected",
+        "preemptions",
+        "peak_kv_blocks",
+        "kv_capacity_blocks",
+        "kv_block_utilization",
+        "tokens_out",
+        "batch_steps",
+        "mean_batch_size",
+        "prefill_spans",
+        "prefill_tokens",
+        "prefix_hit_tokens",
+        "shared_blocks",
+        "cow_splits",
+        "mean_queue_delay_s",
+        "mean_ttft_s",
+        "ttft_p50_s",
+        "ttft_p95_s",
+        "ttft_p99_s",
+        "mean_token_latency_s",
+        "tpot_p50_s",
+        "tpot_p95_s",
+        "tpot_p99_s",
+        "max_token_latency_s",
+        "mean_request_latency_s",
+    ];
+    for field in aggregate {
+        assert!(
+            m.get(field).as_f64().is_some(),
+            "aggregate metrics field '{field}' missing or non-numeric"
+        );
+    }
+    assert_eq!(m.get("type").as_str(), Some("metrics"));
+    assert!(m.get("policy").as_str().is_some());
+    assert_eq!(m.get("completed").as_u64(), Some(6));
+
+    // Per-pool frames: both pools present with every documented gauge
+    // non-null, and one worker frame per configured worker.
+    let pool_fields = [
+        "prefill_spans",
+        "prefill_tokens",
+        "prefix_hit_tokens",
+        "shared_blocks",
+        "cow_splits",
+        "queue_depth",
+    ];
+    for (model, n_workers) in [("opt-tiny", 2usize), ("opt-mini", 3)] {
+        let pool = m.get("pools").get(model);
+        assert!(
+            !matches!(*pool, Json::Null),
+            "pools.{model} missing from the metrics frame"
+        );
+        for field in pool_fields {
+            assert!(
+                pool.get(field).as_u64().is_some(),
+                "pools.{model}.{field} missing or non-numeric"
+            );
+        }
+        // Three single-pass prompts ran in each pool.
+        assert_eq!(pool.get("prefill_spans").as_u64(), Some(3), "{model}");
+        let workers = pool.get("workers").as_arr().expect("workers array");
+        assert_eq!(workers.len(), n_workers, "pools.{model}.workers length");
+        for (i, w) in workers.iter().enumerate() {
+            for field in ["queue_depth", "active_lanes"] {
+                assert!(
+                    w.get(field).as_u64().is_some(),
+                    "pools.{model}.workers[{i}].{field} missing or non-numeric"
+                );
+            }
+        }
+    }
+    h.stop();
+}
+
 /// The real thing: serve the AOT-compiled opt-tiny over PJRT and check
 /// the served tokens equal the python golden continuation.
 #[test]

@@ -16,8 +16,8 @@
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
     run_open_loop, run_virtual, run_virtual_plan, BackendFactory, Coordinator,
-    CoordinatorConfig, KvPolicy, LenDist, PrefixCacheConfig, Request, SchedulerPolicy,
-    StepModel, VirtualConfig, Workload,
+    CoordinatorConfig, KvPolicy, LenDist, PrefixCacheConfig, Request, RouterPolicy,
+    SchedulerPolicy, StepModel, VirtualConfig, Workload,
 };
 use lpu::model::by_name;
 use lpu::util::proptest::quick;
@@ -530,6 +530,127 @@ fn prop_prefix_sharing_blocks_never_exceed_capacity() {
                 "lost requests: served {served} + rejected {} != {}",
                 r.rejected, wl.n_requests
             ));
+        }
+        Ok(())
+    });
+}
+
+// ---- affinity routing ----
+
+/// Property (ISSUE 5 acceptance): under `prefix-affinity` routing,
+/// every request completes even when ALL prefixes map to one worker —
+/// the adversarial case where affinity steers the whole workload at a
+/// single queue. The imbalance bound at routing plus idle siblings
+/// stealing past the spill bound must keep the pool work-conserving;
+/// random worker counts, slot limits, budgets, and arrival rates probe
+/// for a schedule where a steered request starves.
+#[test]
+fn prop_affinity_routing_never_starves_hot_prefix_workloads() {
+    quick("router-affinity-no-starvation", |rng| {
+        let workers = rng.range(2, 5);
+        let max_active = rng.range(1, 4); // tight slots: the hot worker saturates
+        let block_tokens = rng.range(2, 17);
+        let mut vc =
+            VirtualConfig::new(SchedulerPolicy::RoundRobin, workers, max_active, step_model());
+        vc.max_batch = rng.range(0, max_active + 1);
+        vc.kv_bytes_per_token = 100;
+        // Generous budget: nothing is rejected, so every request must
+        // actually be served somewhere.
+        vc.kv_budget_bytes = 4096 * 100;
+        vc.kv_policy = KvPolicy::Paged { block_tokens };
+        vc.prefix_cache = PrefixCacheConfig::on();
+        vc.router = RouterPolicy::PrefixAffinity;
+        // Every prompt is the SAME shared prefix plus a short tail, so
+        // once the first request registers, every later one steers to
+        // that worker.
+        let shared_prefix: Vec<i64> =
+            (0..rng.range(8, 49)).map(|_| rng.range(0, 128) as i64).collect();
+        let out = rng.range(2, 16);
+        let n = rng.range(4, 20);
+        let mut plan =
+            vec![(0.0, Request::greedy("opt-tiny", shared_prefix.clone(), out))];
+        // The cold request registers during the warmup gap; the flood
+        // then arrives in a burst (non-decreasing arrival times).
+        let mut at = 0.5;
+        for _ in 1..n {
+            at += rng.range_f64(0.0, 0.002);
+            let mut prompt = shared_prefix.clone();
+            prompt.push(rng.range(0, 128) as i64);
+            plan.push((at, Request::greedy("opt-tiny", prompt, out)));
+        }
+        let r = run_virtual_plan("opt-tiny", 128, 1.0, plan, &vc)?;
+        if r.rejected != 0 {
+            return Err(format!("generous budget rejected {} requests", r.rejected));
+        }
+        for rec in &r.records {
+            if rec.tokens.len() != out {
+                return Err(format!(
+                    "request {} starved under prefix-affinity: {} of {out} tokens \
+                     (workers {workers}, max_active {max_active})",
+                    rec.request_id,
+                    rec.tokens.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Routing is placement-only: for any policy and workload, per-seed
+/// token streams match the round-robin run's exactly (virtual path; the
+/// bench asserts the same on the threaded path).
+#[test]
+fn prop_router_policies_stream_identical() {
+    quick("router-streams-identical", |rng| {
+        let workers = rng.range(1, 4);
+        let max_active = rng.range(2, 8);
+        let mut base = VirtualConfig::new(
+            *rng.choose(&SchedulerPolicy::all()),
+            workers,
+            max_active,
+            step_model(),
+        );
+        base.max_batch = rng.range(0, max_active + 1);
+        if rng.bool(0.5) {
+            base.kv_bytes_per_token = 100;
+            base.kv_budget_bytes = rng.range_u64(10_000, 80_000);
+            base.kv_policy = KvPolicy::Paged { block_tokens: rng.range(2, 17) };
+            if rng.bool(0.5) {
+                base.prefix_cache = PrefixCacheConfig::on();
+            }
+        }
+        let wl = Workload {
+            model: "opt-tiny".into(),
+            rate: rng.range_f64(200.0, 20_000.0),
+            n_requests: rng.range(2, 16),
+            prompt_len: LenDist::Uniform(1, rng.range(2, 24)),
+            output_len: LenDist::Uniform(1, rng.range(2, 20)),
+            vocab: 128,
+            seed: rng.next_u64(),
+        };
+        let policies = RouterPolicy::all();
+        let mut runs = policies.iter().map(|&router| {
+            let mut vc = base.clone();
+            vc.router = router;
+            run_virtual(&wl, &vc)
+        });
+        let baseline = runs.next().expect("round-robin run")?;
+        for run in runs {
+            let r = run?;
+            if r.rejected != baseline.rejected {
+                return Err(format!(
+                    "rejections changed by routing: {} vs {}",
+                    r.rejected, baseline.rejected
+                ));
+            }
+            for (a, b) in baseline.records.iter().zip(&r.records) {
+                if a.tokens != b.tokens {
+                    return Err(format!(
+                        "request {} stream changed by {:?} routing",
+                        a.request_id, r.router_policy
+                    ));
+                }
+            }
         }
         Ok(())
     });

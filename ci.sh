@@ -45,8 +45,9 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 step "serving bench (smoke) -> BENCH_serving.json"
 # Writes machine-readable results (tok/s, peak active, TTFT/TPOT p99 per
 # cell, both KV policies, the chunked-prefill interference cell, the
-# shared-prefix cache cell, and the affinity-routing cell — all sections
-# run in smoke mode, router assertions included) to ../BENCH_serving.json
+# shared-prefix cache cell, the affinity-routing cell, and the
+# oversubscribed host-KV-tier swap cell — all sections run in smoke
+# mode, assertions included) to ../BENCH_serving.json
 # so the perf trajectory is tracked in-repo. This fast-mode output IS
 # the committed baseline (deterministic per seed; the "fast" field
 # labels the mode — compare like with like). A full sweep writes the
@@ -65,8 +66,11 @@ step "bench JSON sanity (no null fields survive the benches)"
 # summary fields (authoring containers lack a Rust toolchain). A bench
 # run must replace every one of them with measured values — a null
 # surviving here means the emitter and the placeholder schema drifted,
-# or a summary field was never computed. Check the files the benches
-# actually wrote (LPU_BENCH_JSON / LPU_BENCH_SCALING_JSON redirect them).
+# or a summary field was never computed. The whole-file grep covers
+# every section, including the kv_tier swap cell and its summary (the
+# nullable metrics-op gauges are a server-side contract; bench JSON
+# never emits null). Check the files the benches actually wrote
+# (LPU_BENCH_JSON / LPU_BENCH_SCALING_JSON redirect them).
 for bench_json in "${LPU_BENCH_JSON:-../BENCH_serving.json}" \
                   "${LPU_BENCH_SCALING_JSON:-../BENCH_scaling.json}"; do
   if grep -n 'null' "$bench_json"; then

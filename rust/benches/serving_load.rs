@@ -13,7 +13,14 @@
 //!   decodes for the whole prompt sweep, while a token-budgeted chunk
 //!   (`--prefill-chunk`-style `prefill_chunk = N`) cuts the neighbors'
 //!   TPOT p99 at the same KV budget with the long prompt's TTFT staying
-//!   within a small factor (both asserted).
+//!   within a small factor (both asserted);
+//! * **host KV tier**: long-context requests at an oversubscribed HBM
+//!   budget, where preempted lanes demote their KV blocks to a bounded
+//!   host pool and readmission restores them instead of recomputing —
+//!   resume-after-preemption gap and wall time strictly below the
+//!   recompute path at the same budget, bit-identical streams asserted
+//!   on both the virtual and threaded paths, and the tier self-disables
+//!   on a backend without session-restore support.
 //!
 //! Every number here is a pure function of (seed, config): rerunning the
 //! bench on an unchanged tree prints bit-identical tables, so diffs in
@@ -26,9 +33,9 @@
 
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    run_virtual, run_virtual_plan, BackendFactory, Coordinator, CoordinatorConfig, KvPolicy,
-    LenDist, PrefixCacheConfig, Request, RouterPolicy, SchedulerPolicy, StepModel,
-    VirtualConfig, VirtualReport, Workload,
+    run_virtual, run_virtual_plan, BackendFactory, Coordinator, CoordinatorConfig,
+    HostTierConfig, KvPolicy, LenDist, PrefixCacheConfig, Request, RouterPolicy,
+    SchedulerPolicy, StepModel, VirtualConfig, VirtualReport, Workload,
 };
 use lpu::model::by_name;
 use lpu::util::json::{obj, Json};
@@ -746,6 +753,174 @@ fn main() {
         );
     }
 
+    // ---- host KV tier (swap) cell: long-context requests at an
+    // oversubscribed HBM budget. Two 192-token prompts each decode 320
+    // tokens on a 48-block (768-token) pager, so concurrent growth must
+    // preempt one lane mid-decode. Without the host tier the victim's
+    // readmission recomputes its whole context as a fresh prefill
+    // span; with the `--kv-host-mb`-style swap the preemption demotes
+    // the lane's blocks to host memory and readmission restores them,
+    // refeeding a single token. The restore term is set well below the
+    // recompute terms (fast-link regime) so the cost model lands on
+    // restore — the cell isolates the swap mechanics, not the link
+    // model. Runs in smoke mode too (cheap; the assertions below are
+    // the tentpole acceptance).
+    let swap_prompt_tokens = 192usize;
+    let swap_out = 320usize;
+    let swap_budget_blocks = 48u64;
+    let swap_budget = swap_budget_blocks * 16 * model.kv_bytes_per_token();
+    let mut swap_step = step;
+    swap_step.host_restore_s_per_token = 1e-8;
+    let swap_tier = HostTierConfig::from_step(&swap_step, 64);
+    let mk_swap_plan = || -> Vec<(f64, Request)> {
+        (0..2usize)
+            .map(|i| {
+                let prompt: Vec<i64> = (0..swap_prompt_tokens)
+                    .map(|t| ((t * 7 + i * 131) % 512) as i64)
+                    .collect();
+                (0.0, Request::greedy("opt-1.3b", prompt, swap_out))
+            })
+            .collect()
+    };
+    let run_swap = |tier: HostTierConfig| -> VirtualReport {
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 2, swap_step);
+        vc.max_batch = 8;
+        vc.kv_bytes_per_token = model.kv_bytes_per_token();
+        vc.kv_budget_bytes = swap_budget;
+        vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+        vc.host_tier = tier;
+        run_virtual_plan("opt-1.3b", 512, 1.0, mk_swap_plan(), &vc).expect("virtual run")
+    };
+    let swap_off = run_swap(HostTierConfig::off());
+    let swap_on = run_swap(swap_tier);
+    let swap_on2 = run_swap(swap_tier);
+    assert_eq!(swap_on.records, swap_on2.records, "bit-identical rerun (host tier)");
+    assert_eq!(swap_on.wall_s, swap_on2.wall_s);
+    assert_eq!(swap_off.rejected + swap_on.rejected, 0, "the cell must fit the budget");
+    assert!(swap_off.preemptions > 0, "the cell must oversubscribe enough to preempt");
+    assert!(swap_on.preemptions > 0);
+    assert_eq!(swap_off.restored_blocks, 0);
+    assert_eq!(swap_off.demoted_blocks, 0);
+    assert!(swap_on.demoted_blocks > 0, "preemption must demote to the host pool");
+    assert!(swap_on.restored_blocks > 0, "readmission must restore from the host pool");
+    // Streams bit-identical with the tier on vs off (virtual path).
+    for (a, b) in swap_off.records.iter().zip(&swap_on.records) {
+        assert_eq!(a.tokens, b.tokens, "host tier changed stream {}", a.request_id);
+    }
+    // Resume-after-preemption TTFT: the victim's largest inter-token
+    // gap (queue wait + refeed step). The wait is identical on both
+    // sides, so the delta is exactly restore-vs-recompute.
+    let resume_gap = |r: &VirtualReport| -> f64 {
+        r.records
+            .iter()
+            .flat_map(|rec| rec.token_times.windows(2).map(|w| w[1] - w[0]))
+            .fold(0.0_f64, f64::max)
+    };
+    let gap_off = resume_gap(&swap_off);
+    let gap_on = resume_gap(&swap_on);
+    let mut ht = Table::new(
+        format!(
+            "host KV tier: opt-1.3b, 1 worker, 2x {swap_prompt_tokens}-token prompts \
+             decoding {swap_out} tokens on a {swap_budget_blocks}-block budget"
+        ),
+        &["host tier", "preempt", "demoted blk", "restored blk", "resume gap ms", "wall s"],
+    );
+    for (label, r) in [("off", &swap_off), ("on", &swap_on)] {
+        ht.row(&[
+            label.to_string(),
+            r.preemptions.to_string(),
+            r.demoted_blocks.to_string(),
+            r.restored_blocks.to_string(),
+            format!("{:.3}", resume_gap(r) * 1e3),
+            format!("{:.4}", r.wall_s),
+        ]);
+        cells.push(obj(vec![
+            ("section", "kv_tier".into()),
+            ("host_tier", label.into()),
+            ("prompt_tokens", swap_prompt_tokens.into()),
+            ("output_tokens", swap_out.into()),
+            ("budget_blocks", swap_budget_blocks.into()),
+            ("host_capacity_blocks", r.host_capacity_blocks.into()),
+            ("preemptions", r.preemptions.into()),
+            ("demoted_blocks", r.demoted_blocks.into()),
+            ("restored_blocks", r.restored_blocks.into()),
+            ("restored_tokens", r.restored_tokens.into()),
+            ("resume_gap_ms", (resume_gap(r) * 1e3).into()),
+            ("tok_s", r.tokens_per_s.into()),
+            ("wall_s", r.wall_s.into()),
+        ]));
+    }
+    let swap_gap_ratio = gap_off / gap_on.max(1e-12);
+    ht.note(format!(
+        "restore refeeds one token instead of the whole context: resume gap \
+         {swap_gap_ratio:.2}x lower, wall {:.4}s vs {:.4}s",
+        swap_on.wall_s, swap_off.wall_s
+    ));
+    ht.note("same budget, same arrivals, bit-identical streams — only the host tier differs");
+    ht.print();
+    // The tentpole acceptance (ISSUE 6): resume-after-preemption TTFT
+    // with host restore strictly below recompute, at less total wall.
+    assert!(
+        gap_on < gap_off,
+        "restore resume gap {:.4} ms !< recompute resume gap {:.4} ms",
+        gap_on * 1e3,
+        gap_off * 1e3
+    );
+    assert!(
+        swap_on.wall_s < swap_off.wall_s,
+        "host-tier wall {:.4}s !< recompute wall {:.4}s",
+        swap_on.wall_s,
+        swap_off.wall_s
+    );
+
+    // Threaded half of the swap acceptance: the live coordinator (real
+    // threads, sim backend) demotes and restores under the same
+    // oversubscribed budget and streams bit-identically tier on vs off.
+    let run_threaded_swap =
+        |tier: HostTierConfig, factory: BackendFactory| -> (Vec<Vec<i64>>, u64, u64, u64) {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 2,
+                policy: SchedulerPolicy::RoundRobin,
+                kv_bytes_per_token: model.kv_bytes_per_token(),
+                kv_budget_bytes: swap_budget,
+                kv_policy: KvPolicy::Paged { block_tokens: 16 },
+                host_tier: tier,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-1.3b", 1, factory);
+            let handles: Vec<_> = mk_swap_plan()
+                .into_iter()
+                .map(|(_, r)| c.submit(r).expect("submit"))
+                .collect();
+            let streams: Vec<Vec<i64>> =
+                handles.into_iter().map(|h| h.wait().expect("swap request")).collect();
+            let s = c.metrics.snapshot();
+            c.shutdown();
+            (streams, s.preemptions, s.kv_demoted_blocks, s.kv_restored_blocks)
+        };
+    let (t_off, t_off_preempt, t_off_demoted, _) =
+        run_threaded_swap(HostTierConfig::off(), BackendFactory::sim("opt-1.3b", 512));
+    let (t_on, t_on_preempt, t_on_demoted, t_on_restored) =
+        run_threaded_swap(swap_tier, BackendFactory::sim("opt-1.3b", 512));
+    assert_eq!(t_on, t_off, "threaded streams changed by the host tier");
+    assert!(t_off_preempt > 0 && t_on_preempt > 0, "threaded swap cell must preempt");
+    assert_eq!(t_off_demoted, 0);
+    assert!(t_on_demoted > 0 && t_on_restored > 0, "threaded readmission must restore");
+    // And the two paths agree with each other (lane-core invariant).
+    for (i, rec) in swap_on.records.iter().enumerate() {
+        assert_eq!(rec.tokens, t_on[i], "virtual/threaded divergence on swap stream {i}");
+    }
+    // Self-disable: a backend without session restore serves the same
+    // streams with the tier configured on, claiming zero demotions.
+    let (t_nores, _, nores_demoted, nores_restored) =
+        run_threaded_swap(swap_tier, BackendFactory::sim_no_restore("opt-1.3b", 512));
+    assert_eq!(t_nores, t_on, "self-disabled tier changed threaded streams");
+    assert_eq!(
+        (nores_demoted, nores_restored),
+        (0, 0),
+        "tier must self-disable without session-restore support"
+    );
+
     // ---- machine-readable results ----
     let out_path = std::env::var("LPU_BENCH_JSON")
         .unwrap_or_else(|_| "../BENCH_serving.json".to_string());
@@ -795,6 +970,24 @@ fn main() {
                 ("affinity_mean_ttft_ms", (mean_ttft_s(aff_route) * 1e3).into()),
                 ("rr_over_affinity_ttft_ratio", route_ttft_ratio.into()),
                 ("affinity_peak_queue_depth", aff_route.peak_queue_depth.into()),
+            ]),
+        ),
+        (
+            "kv_tier_summary",
+            obj(vec![
+                ("prompt_tokens", swap_prompt_tokens.into()),
+                ("output_tokens", swap_out.into()),
+                ("budget_blocks", swap_budget_blocks.into()),
+                ("host_capacity_blocks", swap_on.host_capacity_blocks.into()),
+                ("preemptions", swap_on.preemptions.into()),
+                ("demoted_blocks", swap_on.demoted_blocks.into()),
+                ("restored_blocks", swap_on.restored_blocks.into()),
+                ("restored_tokens", swap_on.restored_tokens.into()),
+                ("recompute_resume_gap_ms", (gap_off * 1e3).into()),
+                ("restore_resume_gap_ms", (gap_on * 1e3).into()),
+                ("resume_gap_ratio", swap_gap_ratio.into()),
+                ("recompute_wall_s", swap_off.wall_s.into()),
+                ("restore_wall_s", swap_on.wall_s.into()),
             ]),
         ),
         (

@@ -132,7 +132,19 @@ pub struct StepModel {
     pub lane_overhead_s: f64,
     /// Per-step multi-device synchronization tail (ESL hops), seconds.
     pub sync_s: f64,
+    /// Seconds to restore one context position's KV from host memory
+    /// over the PCIe-like host link (the KV-swap tier's
+    /// restore-bandwidth term: `kv_bytes_per_token / host_link_bw`,
+    /// sharded like the KV itself). Prices
+    /// [`StepModel::restore_s`] and the pager's restore-vs-recompute
+    /// decision (`coordinator::scheduler::HostTierConfig`).
+    pub host_restore_s_per_token: f64,
 }
+
+/// Host-link bandwidth assumed for the KV-swap restore path when the
+/// device config doesn't specify one: PCIe Gen4 x16, bytes/s (the same
+/// figure [`crate::gpu::GpuConfig::l4`] uses for its interconnect).
+pub const DEFAULT_HOST_LINK_BW: f64 = 32e9;
 
 impl StepModel {
     /// Build from a device + model configuration, sharded over
@@ -147,7 +159,18 @@ impl StepModel {
             // ESL overlaps transmission with compute; only the tail hop
             // latency around the ring is exposed per step.
             sync_s: if n_devices > 1 { (n - 1.0) * cfg.esl_hop_latency } else { 0.0 },
+            host_restore_s_per_token: model.kv_bytes_per_token() as f64
+                / n
+                / DEFAULT_HOST_LINK_BW,
         }
+    }
+
+    /// Seconds to restore `tokens` context positions' KV from the host
+    /// tier (the swap-in transfer a restored lane pays once, instead of
+    /// recomputing those positions). The virtual harness adds this to
+    /// the step that resumes a restored lane.
+    pub fn restore_s(&self, tokens: usize) -> f64 {
+        tokens as f64 * self.host_restore_s_per_token
     }
 
     /// Latency of one fused step advancing decode lanes at the given
@@ -240,6 +263,11 @@ impl StepModel {
             // The measured intercept already contains whatever sync the
             // compiled multi-device program exposes per step.
             sync_s: 0.0,
+            // The cycle simulator models the device, not the host
+            // link; the restore term stays first-order bytes/BW.
+            host_restore_s_per_token: model.kv_bytes_per_token() as f64
+                / n_devices.max(1) as f64
+                / DEFAULT_HOST_LINK_BW,
         })
     }
 }
@@ -257,6 +285,10 @@ pub enum BackendFactory {
     /// KV-accounting regression tests (a failing slot must never leak
     /// budget).
     SimFailing { model: String, vocab: usize, fail_at_pos: usize },
+    /// Sim backend that refuses session restores
+    /// (`supports_session_restore() == false`), for exercising the
+    /// prefix-cache / host-tier self-disable paths end to end.
+    SimNoRestore { model: String, vocab: usize },
     /// PJRT engine over `artifacts/<model>.*`.
     Pjrt { artifacts_dir: PathBuf, model: String },
 }
@@ -283,6 +315,11 @@ impl BackendFactory {
         BackendFactory::SimFailing { model: model.to_string(), vocab, fail_at_pos }
     }
 
+    /// Sim backend that reports `supports_session_restore() == false`.
+    pub fn sim_no_restore(model: &str, vocab: usize) -> BackendFactory {
+        BackendFactory::SimNoRestore { model: model.to_string(), vocab }
+    }
+
     pub fn pjrt(artifacts_dir: impl Into<PathBuf>, model: &str) -> BackendFactory {
         BackendFactory::Pjrt { artifacts_dir: artifacts_dir.into(), model: model.to_string() }
     }
@@ -298,6 +335,9 @@ impl BackendFactory {
             }
             BackendFactory::SimFailing { model, vocab, fail_at_pos } => {
                 Ok(Box::new(SimBackend::new(model, *vocab).with_fail_at(*fail_at_pos)))
+            }
+            BackendFactory::SimNoRestore { model, vocab } => {
+                Ok(Box::new(SimBackend::new(model, *vocab).without_restore()))
             }
             BackendFactory::Pjrt { artifacts_dir, model } => {
                 let engine = Engine::load(artifacts_dir, model)?;
@@ -318,6 +358,10 @@ pub struct SimBackend {
     time_scale: f64,
     /// Error any lane whose session position reaches this (tests).
     fail_at_pos: Option<usize>,
+    /// Whether `new_session_at` accepts nonzero positions. Disabled to
+    /// exercise the degrade-cleanly paths (prefix cache and host tier
+    /// must self-disable rather than claim restores).
+    restore: bool,
 }
 
 struct SimSession {
@@ -337,7 +381,17 @@ impl SimBackend {
             step: None,
             time_scale: 0.0,
             fail_at_pos: None,
+            restore: true,
         }
+    }
+
+    /// Refuse session restores (report `supports_session_restore() ==
+    /// false` and error on nonzero positions), like a backend whose
+    /// runtime cannot seed a session from existing KV. Exercises the
+    /// self-disable paths of the prefix cache and the host tier.
+    pub fn without_restore(mut self) -> SimBackend {
+        self.restore = false;
+        self
     }
 
     /// Attach a latency model: each fused step sleeps modeled × scale.
@@ -375,6 +429,9 @@ impl Backend for SimBackend {
     }
 
     fn new_session_at(&mut self, position: usize) -> Result<Box<dyn Any>> {
+        if !self.restore && position > 0 {
+            return Err(err!("session restore disabled"));
+        }
         // The sim's "KV" is just the position cursor (logits are a pure
         // function of (model, position, token)), so restoring onto
         // cached blocks is exact: the next feed at `position` produces
@@ -383,7 +440,7 @@ impl Backend for SimBackend {
     }
 
     fn supports_session_restore(&self) -> bool {
-        true
+        self.restore
     }
 
     fn decode_batch(&mut self, lanes: &mut [BatchLane]) -> Vec<Result<Vec<f32>>> {

@@ -46,7 +46,8 @@ use crate::numerics::Sampler;
 
 use super::backend::LaneWork;
 use super::scheduler::{
-    KvBlockId, KvBudget, KvPager, KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler,
+    HostTierConfig, HostTierStats, KvBlockId, KvBudget, KvPager, KvPolicy, PrefixCacheConfig,
+    PrefixStats, Scheduler,
 };
 use super::{FinishReason, Request};
 
@@ -93,6 +94,12 @@ pub struct Holdings {
     /// Context tokens whose KV is already resident via the prefix cache
     /// — the lane starts prefill at this position and never feeds them.
     pub prefix_hit: usize,
+    /// Context tokens whose KV was restored from the host tier as part
+    /// of this admission (a preempted lane resuming by restore, or a
+    /// host-warm prefix promoted back into HBM). A subset of
+    /// `prefix_hit`; the virtual clock prices these at the host-link
+    /// restore bandwidth on the lane's first planned step.
+    pub restored: usize,
 }
 
 /// What [`Lane::absorb`] did with a step's logits.
@@ -126,6 +133,9 @@ pub struct Lane {
     /// Context tokens skipped at admission via the prefix cache (the
     /// lane's prefill cursor started here instead of 0).
     prefix_hit: usize,
+    /// Context tokens restored from the host tier at admission, not yet
+    /// billed to the step clock (cleared by the first absorb).
+    pending_restore: usize,
     /// Reserve policy: KV bytes reserved at admission.
     kv_reserved: u64,
     /// Paged policy: the lane's logical→physical block map.
@@ -161,6 +171,7 @@ impl Lane {
             generated,
             prompt_fed: holdings.prefix_hit,
             prefix_hit: holdings.prefix_hit,
+            pending_restore: holdings.restored,
             kv_reserved: holdings.bytes,
             kv_blocks: holdings.blocks,
         }
@@ -188,6 +199,14 @@ impl Lane {
     /// cache (0 for a cold admission).
     pub fn prefix_hit(&self) -> usize {
         self.prefix_hit
+    }
+
+    /// Host-tier restore debt not yet billed to the step clock: context
+    /// tokens whose KV transfers over the host link during this lane's
+    /// first step (0 after that step absorbs, and always 0 for a cold
+    /// or recomputed admission).
+    pub fn pending_restore(&self) -> usize {
+        self.pending_restore
     }
 
     /// Whether the lane is still feeding its initial context.
@@ -282,6 +301,10 @@ impl Lane {
     /// a preemption, next) token from the final feed's logits, exactly
     /// like a decode step.
     pub fn absorb(&mut self, span: usize, logits: &[f32]) -> Absorbed {
+        // The step that just ran carried the restore transfer (the
+        // planner billed it via `StepPlan::restore_tokens`); the debt
+        // is paid exactly once.
+        self.pending_restore = 0;
         if self.in_prefill() {
             debug_assert!(span >= 1 && span <= self.remaining_prefill());
             self.prompt_fed += span;
@@ -399,6 +422,53 @@ impl KvState {
         match self {
             KvState::Reserve { .. } => PrefixStats::default(),
             KvState::Paged { pager, .. } => pager.prefix_stats(),
+        }
+    }
+
+    /// Attach a host memory tier to the pager (paged policy only; the
+    /// reserve policy has no block identities to demote, so this is a
+    /// no-op there). Preempted lanes and LRU-evicted prefixes then
+    /// demote their blocks to the bounded host pool instead of
+    /// discarding, and readmission restores over the host link when the
+    /// modeled restore cost beats recompute.
+    pub fn set_host_tier(&mut self, cfg: HostTierConfig) {
+        if let KvState::Paged { pager, .. } = self {
+            pager.enable_host_tier(cfg);
+        }
+    }
+
+    /// Whether the pager's host tier is active.
+    pub fn host_tier_enabled(&self) -> bool {
+        match self {
+            KvState::Reserve { .. } => false,
+            KvState::Paged { pager, .. } => pager.host_tier_enabled(),
+        }
+    }
+
+    /// Drop the host pool and stop demoting/restoring. Used by the
+    /// threaded worker when its backend cannot restore a session at an
+    /// advanced position ([`super::Backend::supports_session_restore`]
+    /// is false), so the tier never claims restores it cannot serve —
+    /// same self-disable contract as the prefix cache.
+    pub fn disable_host_tier(&mut self) {
+        if let KvState::Paged { pager, .. } = self {
+            pager.disable_host_tier();
+        }
+    }
+
+    /// Cumulative host-tier counters (zero under the reserve policy).
+    pub fn host_stats(&self) -> HostTierStats {
+        match self {
+            KvState::Reserve { .. } => HostTierStats::default(),
+            KvState::Paged { pager, .. } => pager.host_stats(),
+        }
+    }
+
+    /// Host-pool capacity in blocks (0 when the tier is off).
+    pub fn host_capacity_blocks(&self) -> usize {
+        match self {
+            KvState::Reserve { .. } => 0,
+            KvState::Paged { pager, .. } => pager.host_capacity_blocks(),
         }
     }
 
@@ -521,18 +591,58 @@ impl KvState {
                 let need = worst_tokens as u64 * *bytes_per_token;
                 let ok = budget.try_reserve(need);
                 debug_assert!(ok, "queue handed out a job beyond the KV budget");
-                Holdings { bytes: need, blocks: Vec::new(), prefix_hit: 0 }
+                Holdings { bytes: need, blocks: Vec::new(), prefix_hit: 0, restored: 0 }
             }
             KvState::Paged { pager, .. } => {
-                let (blocks, prefix_hit) = pager.admit_map(prompt, init_ctx);
+                let (blocks, prefix_hit, restored) = pager.admit_map(prompt, init_ctx);
                 debug_assert_eq!(
                     blocks.len(),
                     pager.admit_blocks(init_ctx),
                     "admission must map the full initial context"
                 );
-                Holdings { bytes: 0, blocks, prefix_hit }
+                Holdings { bytes: 0, blocks, prefix_hit, restored }
             }
         }
+    }
+
+    /// Reserve for a just-taken *readmission* (a request carrying
+    /// [`ResumeState`] from a preemption). When the host tier holds the
+    /// lane's demoted KV and the modeled restore cost beats recompute,
+    /// the holdings come back with the full prior context already
+    /// resident (`prefix_hit == init_ctx - 1` — the lane re-feeds only
+    /// its last generated token for logits, exactly like a decode) and
+    /// `restored` billing the host-link transfer. Otherwise this is
+    /// plain [`KvState::reserve_admitted`]: recompute from position 0.
+    /// Streams are bit-identical either way — restore changes what the
+    /// clock pays, never what the sampler sees.
+    pub fn reserve_resumed(
+        &mut self,
+        prompt: &[i64],
+        resume: &ResumeState,
+        init_ctx: usize,
+        worst_tokens: usize,
+    ) -> Holdings {
+        if let KvState::Paged { pager, .. } = self {
+            if pager.host_tier_enabled() {
+                let ctx: Vec<i64> =
+                    prompt.iter().chain(resume.generated.iter()).copied().collect();
+                debug_assert_eq!(ctx.len(), init_ctx, "resume context must match init_ctx");
+                if let Some(blocks) = pager.restore_lane_map(&ctx, init_ctx) {
+                    debug_assert_eq!(
+                        blocks.len(),
+                        pager.admit_blocks(init_ctx),
+                        "restore must map the full initial context"
+                    );
+                    return Holdings {
+                        bytes: 0,
+                        blocks,
+                        prefix_hit: init_ctx - 1,
+                        restored: init_ctx - 1,
+                    };
+                }
+            }
+        }
+        self.reserve_admitted(prompt, init_ctx, worst_tokens)
     }
 
     /// Release a lane's holdings (retired, errored, cancelled, or
@@ -544,6 +654,28 @@ impl KvState {
             KvState::Reserve { budget, .. } => budget.release(lane.kv_reserved),
             KvState::Paged { pager, .. } => pager.release_map(&lane.kv_blocks),
         }
+    }
+
+    /// Preemption exit: demote the lane's written KV to the host tier
+    /// (when enabled), then release through the same choke point as
+    /// every other exit. A lane still mid-prefill has not written its
+    /// full context, so only post-prefill lanes demote — their context
+    /// is exactly `prompt ++ generated`, the same tokens readmission
+    /// presents to [`KvState::reserve_resumed`].
+    pub fn preempt_lane(&mut self, lane: &Lane) {
+        if let KvState::Paged { pager, .. } = self {
+            if pager.host_tier_enabled() && !lane.in_prefill() {
+                let ctx: Vec<i64> = lane
+                    .request
+                    .prompt
+                    .iter()
+                    .chain(lane.generated.iter())
+                    .copied()
+                    .collect();
+                pager.demote_lane(&ctx, lane.kv_blocks.len());
+            }
+        }
+        self.release_lane(lane);
     }
 
     /// Release raw holdings (for exits before a lane exists, e.g. a
@@ -623,6 +755,16 @@ impl StepPlan {
     /// The step's lane work items, for [`super::StepModel::mixed_step_s`].
     pub fn works<T: HoldsLane>(&self, slots: &[T]) -> Vec<LaneWork> {
         self.lanes.iter().map(|p| slots[p.slot].lane().work(p.span)).collect()
+    }
+
+    /// Host-tier restore debt carried by this step's lanes: context
+    /// tokens whose KV transfers over the host link while the step
+    /// runs. The virtual clock adds
+    /// [`super::StepModel::restore_s`] of this to the step's latency;
+    /// the debt clears when the lanes absorb, so it is billed exactly
+    /// once.
+    pub fn restore_tokens<T: HoldsLane>(&self, slots: &[T]) -> usize {
+        self.lanes.iter().map(|p| slots[p.slot].lane().pending_restore()).sum()
     }
 }
 
@@ -735,7 +877,7 @@ pub fn plan_step<T: HoldsLane>(
         let victim = scheduler.pick_victim(slots.len());
         let s = slots.swap_remove(victim);
         scheduler.swap_remove(victim);
-        kv.release_lane(s.lane());
+        kv.preempt_lane(s.lane());
         evicted.push(s);
     };
     // A picked lane the chunk budget dropped must not keep pick_batch's
@@ -1181,6 +1323,146 @@ mod tests {
         assert!(evicted_total >= 1, "growth past 2 blocks must preempt");
         // Pager never exceeded capacity and everything was released.
         assert!(kv.blocks_in_use() <= 2);
+    }
+
+    // ---- host tier through the KvState choke points ----
+
+    /// Host link fast enough that restore always beats recompute.
+    fn fast_host(capacity_blocks: usize) -> HostTierConfig {
+        HostTierConfig {
+            capacity_blocks,
+            restore_s_per_token: 1e-9,
+            kv_read_s_per_pos: 1e-6,
+            weight_stream_s: 1e-3,
+        }
+    }
+
+    #[test]
+    fn preempt_then_reserve_resumed_restores_instead_of_recomputing() {
+        let mut kv = KvState::new(KvPolicy::Paged { block_tokens: 4 }, 12 * 4 * 100, 100);
+        kv.set_host_tier(fast_host(8));
+        assert!(kv.host_tier_enabled());
+
+        // Admit, prefill, and decode one extra token: generated = [1, 1].
+        let r = req(4, 8);
+        let h = kv.reserve_admitted(&r.prompt, 4, 12);
+        assert_eq!((h.prefix_hit, h.restored), (0, 0));
+        let mut l = Lane::admitted(r, 0, None, h);
+        assert!(matches!(l.absorb(4, &logits_pick(8, 1)), Absorbed::Token { .. }));
+        assert!(matches!(l.absorb(1, &logits_pick(8, 1)), Absorbed::Token { .. }));
+
+        // Preempt: blocks demote to host, HBM fully released.
+        kv.preempt_lane(&l);
+        assert_eq!(kv.blocks_in_use(), 0);
+        assert!(kv.host_stats().demoted_blocks > 0);
+        let (request, rs) = l.into_resume();
+        let init_ctx = init_context(&request, Some(&rs));
+        assert_eq!(init_ctx, 6);
+
+        // Readmission restores: full prior context resident, one token
+        // left to feed (the last generated token — logits for the next).
+        let h = kv.reserve_resumed(&request.prompt, &rs, init_ctx, 12);
+        assert_eq!((h.prefix_hit, h.restored), (5, 5));
+        assert_eq!(h.blocks.len(), 2); // admit_blocks(6) under 4-token blocks
+        let stats = kv.host_stats();
+        assert_eq!((stats.restored_blocks, stats.restored_tokens), (2, 5));
+
+        let mut resumed = Lane::admitted(request, 0, Some(rs), h);
+        assert_eq!(resumed.pending_restore(), 5);
+        assert!(resumed.in_prefill());
+        assert_eq!(resumed.remaining_prefill(), 1);
+        assert_eq!(resumed.feed_span(1), vec![1]); // last generated token
+        assert_eq!(resumed.position(), 5);
+        // The restore debt is billed exactly once.
+        assert!(matches!(resumed.absorb(1, &logits_pick(8, 2)), Absorbed::Token { .. }));
+        assert_eq!(resumed.pending_restore(), 0);
+        assert_eq!(resumed.tokens_emitted(), 3);
+        kv.release_lane(&resumed);
+    }
+
+    #[test]
+    fn reserve_resumed_recomputes_when_tier_off_or_copy_missing() {
+        let mut kv = KvState::new(KvPolicy::Paged { block_tokens: 4 }, 12 * 4 * 100, 100);
+        let r = req(4, 8);
+        let h = kv.reserve_admitted(&r.prompt, 4, 12);
+        let mut l = Lane::admitted(r, 0, None, h);
+        assert!(matches!(l.absorb(4, &logits_pick(8, 1)), Absorbed::Token { .. }));
+        // Tier off: preemption is a plain release, resume recomputes.
+        kv.preempt_lane(&l);
+        assert_eq!(kv.host_stats(), HostTierStats::default());
+        let (request, rs) = l.into_resume();
+        let h = kv.reserve_resumed(&request.prompt, &rs, 5, 12);
+        assert_eq!((h.prefix_hit, h.restored), (0, 0));
+        kv.release_holdings(h);
+        // Tier on but no demoted copy: still recompute, never a claim.
+        kv.set_host_tier(fast_host(8));
+        let h = kv.reserve_resumed(&request.prompt, &rs, 5, 12);
+        assert_eq!((h.prefix_hit, h.restored), (0, 0));
+        assert_eq!(kv.host_stats().restored_tokens, 0);
+        kv.release_holdings(h);
+    }
+
+    #[test]
+    fn host_tier_is_noop_under_reserve_policy() {
+        let mut kv = KvState::new(KvPolicy::Reserve, 1000, 10);
+        kv.set_host_tier(fast_host(8));
+        assert!(!kv.host_tier_enabled());
+        assert_eq!(kv.host_capacity_blocks(), 0);
+        assert_eq!(kv.host_stats(), HostTierStats::default());
+    }
+
+    #[test]
+    fn plan_preemption_demotes_decode_lanes_to_host() {
+        // Same oversubscription as plan_preempts_lowest_progress…, with
+        // the host tier attached: the evicted decode lane's blocks land
+        // in the host pool instead of vanishing.
+        let mut sched = Scheduler::new(SchedulerPolicy::RoundRobin);
+        let mut kv = KvState::new(KvPolicy::Paged { block_tokens: 8 }, 16 * 10, 10);
+        kv.set_host_tier(fast_host(8));
+        let mut slots = vec![admit_slot(&mut kv, 4, 8), admit_slot(&mut kv, 4, 8)];
+        let mut evicted_total = 0;
+        for _ in 0..16 {
+            let (plan, evicted) = plan_step(&mut sched, &mut kv, &mut slots, 8, 0);
+            evicted_total += evicted.len();
+            if slots.is_empty() {
+                break;
+            }
+            run_plan(&mut sched, &mut slots, &plan);
+            let mut i = 0;
+            while i < slots.len() {
+                if slots[i].lane.tokens_emitted() >= slots[i].lane.request().max_new_tokens {
+                    let s = slots.swap_remove(i);
+                    kv.release_lane(&s.lane);
+                } else {
+                    i += 1;
+                }
+            }
+            sched = Scheduler::new(SchedulerPolicy::RoundRobin);
+        }
+        assert!(evicted_total >= 1, "growth past 2 blocks must preempt");
+        assert!(kv.host_stats().demoted_blocks > 0, "preempted decode lane must demote");
+    }
+
+    #[test]
+    fn restore_tokens_sums_pending_debt_once() {
+        let cold = TSlot { lane: lane(3, 4, Holdings::default()) };
+        let warm = TSlot {
+            lane: Lane::admitted(
+                req(4, 4),
+                0,
+                Some(ResumeState { generated: vec![7, 8], sampler: Sampler::new(0) }),
+                Holdings { bytes: 0, blocks: Vec::new(), prefix_hit: 5, restored: 5 },
+            ),
+        };
+        let mut slots = vec![cold, warm];
+        let plan = StepPlan {
+            lanes: vec![PlannedLane { slot: 0, span: 3 }, PlannedLane { slot: 1, span: 1 }],
+        };
+        assert_eq!(plan.restore_tokens(&slots), 5);
+        for p in &plan.lanes {
+            let _ = slots[p.slot].lane_mut().absorb(p.span, &logits_pick(8, 1));
+        }
+        assert_eq!(plan.restore_tokens(&slots), 0, "debt clears after the first absorb");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use super::scheduler::PrefixStats;
+use super::scheduler::{HostTierStats, PrefixStats};
 use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Welford};
 
@@ -32,6 +32,13 @@ struct Series {
 
 impl Series {
     fn add(&mut self, x: f64) {
+        // Reject NaN/infinite samples at ingestion: one poisoned clock
+        // reading must not corrupt the Welford mean or wedge a
+        // percentile sort. (The sort below is total_cmp-safe anyway;
+        // this keeps the *statistics* honest, not just panic-free.)
+        if !x.is_finite() {
+            return;
+        }
         self.welford.add(x);
         if self.samples.len() < RESERVOIR_CAP {
             self.samples.push(x);
@@ -49,7 +56,7 @@ fn percentiles_of(mut samples: Vec<f64>) -> Percentiles {
     if samples.is_empty() {
         return Percentiles::default();
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     Percentiles {
         p50: percentile(&samples, 50.0),
         p95: percentile(&samples, 95.0),
@@ -108,6 +115,16 @@ pub struct Metrics {
     shared_blocks: AtomicU64,
     /// Copy-on-write splits of shared tail blocks at admission.
     cow_splits: AtomicU64,
+    /// KV blocks demoted to the host tier (preempted lanes + LRU-evicted
+    /// prefixes) instead of being discarded.
+    kv_demoted_blocks: AtomicU64,
+    /// KV blocks restored from the host tier back into HBM.
+    kv_restored_blocks: AtomicU64,
+    /// Context tokens whose KV came back over the host link instead of
+    /// being recomputed (the tier's saved-prefill gauge).
+    kv_restored_tokens: AtomicU64,
+    /// Per-worker host-pool capacity, blocks (0 = tier off).
+    kv_host_capacity_blocks: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -145,6 +162,14 @@ pub struct Snapshot {
     pub shared_blocks: u64,
     /// Copy-on-write tail-block splits at admission (cumulative).
     pub cow_splits: u64,
+    /// KV blocks demoted to the host tier (cumulative).
+    pub kv_demoted_blocks: u64,
+    /// KV blocks restored from the host tier (cumulative).
+    pub kv_restored_blocks: u64,
+    /// Context tokens restored instead of recomputed (cumulative).
+    pub kv_restored_tokens: u64,
+    /// Per-worker host-pool capacity in blocks (0 = tier off).
+    pub kv_host_capacity_blocks: u64,
     pub mean_queue_delay_s: f64,
     pub mean_ttft_s: f64,
     pub ttft: Percentiles,
@@ -180,6 +205,10 @@ impl Metrics {
             prefix_hit_tokens: AtomicU64::new(0),
             shared_blocks: AtomicU64::new(0),
             cow_splits: AtomicU64::new(0),
+            kv_demoted_blocks: AtomicU64::new(0),
+            kv_restored_blocks: AtomicU64::new(0),
+            kv_restored_tokens: AtomicU64::new(0),
+            kv_host_capacity_blocks: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -220,6 +249,20 @@ impl Metrics {
         self.prefix_hit_tokens.fetch_add(d.hit_tokens, Ordering::Relaxed);
         self.shared_blocks.fetch_add(d.shared_blocks, Ordering::Relaxed);
         self.cow_splits.fetch_add(d.cow_splits, Ordering::Relaxed);
+    }
+
+    /// A host-tier outcome (a delta of the worker pager's cumulative
+    /// [`HostTierStats`], same delta pattern as [`Metrics::on_prefix`]).
+    pub fn on_host_tier(&self, d: &HostTierStats) {
+        self.kv_demoted_blocks.fetch_add(d.demoted_blocks, Ordering::Relaxed);
+        self.kv_restored_blocks.fetch_add(d.restored_blocks, Ordering::Relaxed);
+        self.kv_restored_tokens.fetch_add(d.restored_tokens, Ordering::Relaxed);
+    }
+
+    /// Record the per-worker host-pool capacity (workers are symmetric,
+    /// so the max across workers is the per-worker figure).
+    pub fn set_kv_host_capacity_blocks(&self, blocks: u64) {
+        self.kv_host_capacity_blocks.fetch_max(blocks, Ordering::Relaxed);
     }
 
     pub fn on_done(&self, _tokens: usize, total: Duration) {
@@ -303,6 +346,10 @@ impl Metrics {
             prefix_hit_tokens: self.prefix_hit_tokens.load(Ordering::Relaxed),
             shared_blocks: self.shared_blocks.load(Ordering::Relaxed),
             cow_splits: self.cow_splits.load(Ordering::Relaxed),
+            kv_demoted_blocks: self.kv_demoted_blocks.load(Ordering::Relaxed),
+            kv_restored_blocks: self.kv_restored_blocks.load(Ordering::Relaxed),
+            kv_restored_tokens: self.kv_restored_tokens.load(Ordering::Relaxed),
+            kv_host_capacity_blocks: self.kv_host_capacity_blocks.load(Ordering::Relaxed),
             mean_queue_delay_s: queue_delay_mean,
             mean_ttft_s: ttft_mean,
             ttft: percentiles_of(ttft_samples),
@@ -336,6 +383,10 @@ pub struct PoolGauges {
     prefix_hit_tokens: AtomicU64,
     shared_blocks: AtomicU64,
     cow_splits: AtomicU64,
+    /// KV blocks this pool demoted to the host tier.
+    demoted_blocks: AtomicU64,
+    /// KV blocks this pool restored from the host tier.
+    restored_blocks: AtomicU64,
     /// Per-worker instantaneous slot-table size (indexed by worker).
     worker_lanes: Vec<AtomicU64>,
 }
@@ -360,6 +411,13 @@ impl PoolGauges {
         self.prefix_hit_tokens.fetch_add(d.hit_tokens, Ordering::Relaxed);
         self.shared_blocks.fetch_add(d.shared_blocks, Ordering::Relaxed);
         self.cow_splits.fetch_add(d.cow_splits, Ordering::Relaxed);
+    }
+
+    /// A host-tier outcome in this pool (same delta pattern as
+    /// [`PoolGauges::on_prefix`]).
+    pub fn on_host_tier(&self, d: &HostTierStats) {
+        self.demoted_blocks.fetch_add(d.demoted_blocks, Ordering::Relaxed);
+        self.restored_blocks.fetch_add(d.restored_blocks, Ordering::Relaxed);
     }
 
     /// Publish worker `worker`'s current slot-table size (called by the
@@ -397,6 +455,8 @@ impl PoolGauges {
             ("prefix_hit_tokens", self.prefix_hit_tokens.load(Ordering::Relaxed).into()),
             ("shared_blocks", self.shared_blocks.load(Ordering::Relaxed).into()),
             ("cow_splits", self.cow_splits.load(Ordering::Relaxed).into()),
+            ("demoted_blocks", self.demoted_blocks.load(Ordering::Relaxed).into()),
+            ("restored_blocks", self.restored_blocks.load(Ordering::Relaxed).into()),
             ("queue_depth", queue_depths.iter().sum::<usize>().into()),
             ("workers", Json::Arr(workers)),
         ])
@@ -414,8 +474,27 @@ impl Snapshot {
             ("rejected", self.rejected.into()),
             ("preemptions", self.preemptions.into()),
             ("peak_kv_blocks", self.peak_kv_blocks.into()),
-            ("kv_capacity_blocks", self.kv_capacity_blocks.into()),
-            ("kv_block_utilization", self.kv_block_utilization.into()),
+            // A capacity of 0 means "not paged, or unbounded" — there is
+            // no meaningful block count or fill ratio, and exporting the
+            // internal sentinel (or a ~0 ratio) would read as a real
+            // gauge. Schema-stable null instead; pinned by the server's
+            // `metrics_op_schema_is_complete_across_pools` test.
+            (
+                "kv_capacity_blocks",
+                if self.kv_capacity_blocks == 0 {
+                    Json::Null
+                } else {
+                    self.kv_capacity_blocks.into()
+                },
+            ),
+            (
+                "kv_block_utilization",
+                if self.kv_capacity_blocks == 0 {
+                    Json::Null
+                } else {
+                    self.kv_block_utilization.into()
+                },
+            ),
             ("tokens_out", self.tokens_out.into()),
             ("batch_steps", self.batch_steps.into()),
             ("mean_batch_size", self.mean_batch_size.into()),
@@ -424,6 +503,10 @@ impl Snapshot {
             ("prefix_hit_tokens", self.prefix_hit_tokens.into()),
             ("shared_blocks", self.shared_blocks.into()),
             ("cow_splits", self.cow_splits.into()),
+            ("kv_demoted_blocks", self.kv_demoted_blocks.into()),
+            ("kv_restored_blocks", self.kv_restored_blocks.into()),
+            ("kv_restored_tokens", self.kv_restored_tokens.into()),
+            ("kv_host_capacity_blocks", self.kv_host_capacity_blocks.into()),
             ("mean_queue_delay_s", self.mean_queue_delay_s.into()),
             ("mean_ttft_s", self.mean_ttft_s.into()),
             ("ttft_p50_s", self.ttft.p50.into()),
@@ -584,6 +667,87 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("preemptions").as_u64(), Some(2));
         assert_eq!(j.get("peak_kv_blocks").as_u64(), Some(30));
+    }
+
+    #[test]
+    fn nan_sample_rejected_and_snapshot_survives() {
+        // Regression: `percentiles_of` used `partial_cmp(..).unwrap()`,
+        // so one NaN in a reservoir panicked the whole snapshot. The
+        // sort is now total and ingestion drops non-finite samples.
+        let mut series = Series::default();
+        series.add(0.002);
+        series.add(f64::NAN);
+        series.add(f64::INFINITY);
+        series.add(f64::NEG_INFINITY);
+        series.add(0.004);
+        assert_eq!(series.samples.len(), 2, "non-finite samples never enter the reservoir");
+        assert_eq!(series.seen, 2);
+        assert!((series.welford.mean() - 0.003).abs() < 1e-12);
+        // Even a reservoir that somehow holds a NaN must sort, not panic.
+        let p = percentiles_of(vec![0.5, f64::NAN, 0.1]);
+        assert!(p.p50.is_finite() || p.p50.is_nan()); // no panic is the assertion
+        let m = Metrics::new();
+        m.on_token(Duration::from_millis(2));
+        let s = m.snapshot();
+        assert!((s.tpot.p50 - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unbounded_capacity_exports_null_not_sentinel() {
+        // Regression: an unpaged/unbounded pager (capacity gauge 0) used
+        // to export `kv_capacity_blocks: 0` and a 0.0 utilization —
+        // indistinguishable from a real empty pager. Both keys now stay
+        // present but null so schema consumers can tell "no cap" apart.
+        let m = Metrics::new();
+        m.note_kv_blocks_in_use(12);
+        let j = m.snapshot().to_json();
+        assert!(matches!(j.get("kv_capacity_blocks"), &Json::Null));
+        assert!(matches!(j.get("kv_block_utilization"), &Json::Null));
+        // A bounded pager still exports numbers.
+        m.set_kv_capacity_blocks(40);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("kv_capacity_blocks").as_u64(), Some(40));
+        assert!((j.get("kv_block_utilization").as_f64().unwrap() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn host_tier_accounting() {
+        let m = Metrics::new();
+        m.set_kv_host_capacity_blocks(64);
+        m.on_host_tier(&HostTierStats {
+            demoted_blocks: 5,
+            restored_blocks: 3,
+            restored_tokens: 11,
+            host_evictions: 1,
+        });
+        m.on_host_tier(&HostTierStats {
+            demoted_blocks: 2,
+            restored_blocks: 0,
+            restored_tokens: 0,
+            host_evictions: 0,
+        });
+        let s = m.snapshot();
+        assert_eq!(
+            (s.kv_demoted_blocks, s.kv_restored_blocks, s.kv_restored_tokens),
+            (7, 3, 11)
+        );
+        assert_eq!(s.kv_host_capacity_blocks, 64);
+        let j = s.to_json();
+        assert_eq!(j.get("kv_demoted_blocks").as_u64(), Some(7));
+        assert_eq!(j.get("kv_restored_blocks").as_u64(), Some(3));
+        assert_eq!(j.get("kv_restored_tokens").as_u64(), Some(11));
+        assert_eq!(j.get("kv_host_capacity_blocks").as_u64(), Some(64));
+        // Per-pool gauges carry the same deltas.
+        let g = PoolGauges::with_workers(1);
+        g.on_host_tier(&HostTierStats {
+            demoted_blocks: 5,
+            restored_blocks: 3,
+            restored_tokens: 11,
+            host_evictions: 0,
+        });
+        let j = g.to_json(&[0]);
+        assert_eq!(j.get("demoted_blocks").as_u64(), Some(5));
+        assert_eq!(j.get("restored_blocks").as_u64(), Some(3));
     }
 
     #[test]

@@ -105,8 +105,9 @@ pub use router::{
     AFFINITY_IMBALANCE_LIMIT, DEFAULT_SPILL_AFTER_S,
 };
 pub use scheduler::{
-    KvBlockId, KvBudget, KvPager, KvPolicy, PrefixCacheConfig, PrefixEvent, PrefixStats,
-    Scheduler, SchedulerPolicy, DEFAULT_KV_BLOCK_TOKENS,
+    HostTierConfig, HostTierStats, KvBlockId, KvBudget, KvPager, KvPolicy, KvTier,
+    PrefixCacheConfig, PrefixEvent, PrefixStats, Scheduler, SchedulerPolicy,
+    DEFAULT_KV_BLOCK_TOKENS,
 };
 pub use workload::{
     run_open_loop, run_virtual, run_virtual_plan, LenDist, LoadReport, VirtualConfig,
@@ -302,6 +303,14 @@ pub struct CoordinatorConfig {
     /// sibling may steal it, seconds ([`DEFAULT_SPILL_AFTER_S`] by
     /// default). Tests pin placement by setting it larger than the run.
     pub spill_after_s: f64,
+    /// Host (CPU-memory) KV tier under the pager (`--kv-host-mb`):
+    /// preempted lanes and LRU-evicted prefixes demote their blocks to a
+    /// bounded host pool instead of freeing them, and readmission
+    /// restores the KV over the host link when the modeled restore cost
+    /// beats recompute. Off by default; only meaningful under
+    /// [`KvPolicy::Paged`], and auto-disabled per worker when the
+    /// backend cannot restore sessions at a nonzero position (PJRT).
+    pub host_tier: HostTierConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -317,6 +326,7 @@ impl Default for CoordinatorConfig {
             prefix_cache: PrefixCacheConfig::off(),
             router: RouterPolicy::RoundRobin,
             spill_after_s: DEFAULT_SPILL_AFTER_S,
+            host_tier: HostTierConfig::off(),
         }
     }
 }
@@ -341,6 +351,7 @@ impl CoordinatorConfig {
             prefix_cache: PrefixCacheConfig::off(),
             router: RouterPolicy::RoundRobin,
             spill_after_s: DEFAULT_SPILL_AFTER_S,
+            host_tier: HostTierConfig::off(),
         }
     }
 }
@@ -575,11 +586,22 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
         // one, or the lane would decode against missing context.
         kv.disable_prefix_cache();
     }
+    kv.set_host_tier(ctx.cfg.host_tier);
+    if kv.host_tier_enabled() && !backend.supports_session_restore() {
+        // Same contract: a restore readmits the lane at a nonzero
+        // position, which this backend cannot attach — the tier
+        // self-disables and readmission falls back to recompute.
+        kv.disable_host_tier();
+    }
     // Cumulative pager counters; the delta after each admission feeds
     // the coordinator metrics and this pool's gauges.
     let mut prefix_seen = kv.prefix_stats();
+    let mut host_seen = kv.host_stats();
     if let Some(capacity) = kv.capacity_blocks() {
         ctx.metrics.set_kv_capacity_blocks(capacity as u64);
+    }
+    if kv.host_tier_enabled() {
+        ctx.metrics.set_kv_host_capacity_blocks(kv.host_capacity_blocks() as u64);
     }
     let mut slots: Vec<Slot> = Vec::new();
     let max_batch =
@@ -607,16 +629,33 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
             });
             match popped {
                 Popped::Job(job) => {
-                    let holdings = kv.reserve_admitted(
-                        &job.request.prompt,
-                        job.init_ctx(),
-                        job.request.worst_case_tokens(),
-                    );
+                    // A preempted job readmits through the host tier
+                    // when its demoted KV is intact and the modeled
+                    // restore beats recompute; fresh jobs (and tier-off
+                    // readmissions) take the plain reservation path.
+                    let holdings = match &job.resume {
+                        Some(resume) => kv.reserve_resumed(
+                            &job.request.prompt,
+                            resume,
+                            job.init_ctx(),
+                            job.request.worst_case_tokens(),
+                        ),
+                        None => kv.reserve_admitted(
+                            &job.request.prompt,
+                            job.init_ctx(),
+                            job.request.worst_case_tokens(),
+                        ),
+                    };
                     let stats = kv.prefix_stats();
                     let delta = stats.delta(&prefix_seen);
                     prefix_seen = stats;
                     ctx.metrics.on_prefix(&delta);
                     ctx.pool_gauges.on_prefix(&delta);
+                    let hstats = kv.host_stats();
+                    let hdelta = hstats.delta(&host_seen);
+                    host_seen = hstats;
+                    ctx.metrics.on_host_tier(&hdelta);
+                    ctx.pool_gauges.on_host_tier(&hdelta);
                     // Peak occupancy can be set by admission itself
                     // (the virtual harness records it there too).
                     ctx.metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
@@ -702,6 +741,13 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
             }
         }
         ctx.metrics.note_kv_blocks_in_use(kv.blocks_in_use() as u64);
+        // Preemptions (and growth reclaiming cached prefixes) demote
+        // blocks to the host tier; publish the delta.
+        let hstats = kv.host_stats();
+        let hdelta = hstats.delta(&host_seen);
+        host_seen = hstats;
+        ctx.metrics.on_host_tier(&hdelta);
+        ctx.pool_gauges.on_host_tier(&hdelta);
         // Growth may have reclaimed cache-only blocks (evicting their
         // index entries); keep the pool registry in step.
         ctx.sync_registry(&mut kv);
@@ -1125,6 +1171,93 @@ mod tests {
         });
         assert_eq!(paged, unbounded);
         assert!(paged.iter().all(|t| t.len() == 120));
+    }
+
+    /// A host tier priced so restore always beats recompute (cheap
+    /// link, expensive refeed) — the decision itself is under test
+    /// elsewhere; here we want the swap path exercised.
+    fn cheap_host_tier(capacity_blocks: usize) -> HostTierConfig {
+        HostTierConfig {
+            capacity_blocks,
+            restore_s_per_token: 1e-9,
+            kv_read_s_per_pos: 1e-6,
+            weight_stream_s: 1e-3,
+        }
+    }
+
+    #[test]
+    fn host_tier_restores_preempted_work_and_streams_match() {
+        // The tight pager from paged_streams_identical_to_unbounded_run
+        // forces preempt/readmit churn; with the host tier on, the
+        // evicted lanes' KV demotes and readmission restores it instead
+        // of recomputing — with byte-identical client streams.
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| Request::greedy("opt-tiny", vec![i as i64 + 1; 8], 120))
+            .collect();
+        let run = |host_tier: HostTierConfig| {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 16,
+                policy: SchedulerPolicy::RoundRobin,
+                kv_bytes_per_token: 100,
+                kv_budget_bytes: 288 * 100,
+                kv_policy: KvPolicy::Paged { block_tokens: 16 },
+                host_tier,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 64));
+            let handles: Vec<_> =
+                reqs.iter().map(|r| c.submit(r.clone()).unwrap()).collect();
+            let streams: Vec<Vec<i64>> = handles
+                .into_iter()
+                .map(|h| wait_with_timeout(h, 60).unwrap())
+                .collect();
+            let snap = c.metrics.snapshot();
+            c.shutdown();
+            (streams, snap)
+        };
+        let (off_streams, off_snap) = run(HostTierConfig::off());
+        let (on_streams, on_snap) = run(cheap_host_tier(64));
+        assert_eq!(on_streams, off_streams, "host tier must not change streams");
+        assert!(on_streams.iter().all(|t| t.len() == 120));
+        assert!(off_snap.preemptions > 0 && on_snap.preemptions > 0);
+        assert_eq!(off_snap.kv_demoted_blocks, 0);
+        assert_eq!(off_snap.kv_restored_blocks, 0);
+        assert_eq!(off_snap.kv_host_capacity_blocks, 0);
+        assert!(on_snap.kv_demoted_blocks > 0, "preempted lanes never demoted");
+        assert!(on_snap.kv_restored_blocks > 0, "readmission never restored");
+        assert!(on_snap.kv_restored_tokens > 0);
+        assert_eq!(on_snap.kv_host_capacity_blocks, 64);
+    }
+
+    #[test]
+    fn host_tier_self_disables_without_session_restore() {
+        // A backend that cannot reopen a session at a nonzero position
+        // cannot attach restored KV: the tier must turn itself off and
+        // every preemption must fall back to recompute — streams intact.
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 16,
+            policy: SchedulerPolicy::RoundRobin,
+            kv_bytes_per_token: 100,
+            kv_budget_bytes: 288 * 100,
+            kv_policy: KvPolicy::Paged { block_tokens: 16 },
+            host_tier: cheap_host_tier(64),
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-tiny", 1, BackendFactory::sim_no_restore("opt-tiny", 64));
+        let handles: Vec<_> = (0..12)
+            .map(|i| {
+                c.submit(Request::greedy("opt-tiny", vec![i as i64 + 1; 8], 120)).unwrap()
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(wait_with_timeout(h, 60).unwrap().len(), 120);
+        }
+        let snap = c.metrics.snapshot();
+        assert!(snap.preemptions > 0, "scenario must still churn the pager");
+        assert_eq!(snap.kv_demoted_blocks, 0, "disabled tier must not demote");
+        assert_eq!(snap.kv_restored_blocks, 0);
+        assert_eq!(snap.kv_host_capacity_blocks, 0, "disabled tier exports no capacity");
+        c.shutdown();
     }
 
     #[test]

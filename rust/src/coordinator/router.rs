@@ -52,7 +52,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use super::lane::Admit;
-use super::scheduler::{chain_key, PrefixEvent, CHAIN_SEED};
+use super::scheduler::{chain_key, KvTier, PrefixEvent, CHAIN_SEED};
 
 /// How a pool steers a submitted request to one of its workers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -131,13 +131,17 @@ pub const AFFINITY_IMBALANCE_LIMIT: usize = 4;
 pub const DEFAULT_SPILL_AFTER_S: f64 = 0.005;
 
 /// One registered prefix chain entry: the token run (verification) and
-/// the workers whose pagers currently index it.
+/// the workers whose pagers currently hold it, each with the tier the
+/// copy lives in ("hot in HBM" vs "warm on host" — a host copy still
+/// avoids recompute, but pays the restore link before it serves).
 #[derive(Clone, Debug)]
 struct RegEntry {
     /// The block-aligned token run under this chain key.
     run: Vec<i64>,
-    /// Workers holding this entry, sorted ascending (dedup'd).
-    holders: Vec<usize>,
+    /// Workers holding this entry with the copy's tier, sorted
+    /// ascending by worker (dedup'd; a pager keeps a key in at most
+    /// one tier, so one pair per worker).
+    holders: Vec<(usize, KvTier)>,
 }
 
 /// Pool-level, cross-worker prefix registry: for each chain key of a
@@ -174,25 +178,28 @@ impl PrefixRegistry {
     }
 
     /// Apply one worker's drained pager events. Inserts add the worker
-    /// to the key's holder set; evicts remove it (dropping the entry
-    /// with its last holder). Applying a drained batch is
-    /// order-independent across workers, so virtual runs stay
+    /// to the key's holder set, or — for a worker already holding the
+    /// key — update the copy's tier (an HBM entry demoting to host, or
+    /// a host copy promoting back); evicts remove it from both tiers
+    /// (dropping the entry with its last holder). Applying a drained
+    /// batch is order-independent across workers, so virtual runs stay
     /// deterministic.
     pub fn apply(&mut self, worker: usize, events: &[PrefixEvent]) {
         for ev in events {
             match ev {
-                PrefixEvent::Insert { key, run } => {
+                PrefixEvent::Insert { key, run, tier } => {
                     let e = self
                         .entries
                         .entry(*key)
                         .or_insert_with(|| RegEntry { run: run.clone(), holders: Vec::new() });
-                    if let Err(at) = e.holders.binary_search(&worker) {
-                        e.holders.insert(at, worker);
+                    match e.holders.binary_search_by_key(&worker, |h| h.0) {
+                        Ok(at) => e.holders[at].1 = *tier,
+                        Err(at) => e.holders.insert(at, (worker, *tier)),
                     }
                 }
                 PrefixEvent::Evict { key } => {
                     if let Some(e) = self.entries.get_mut(key) {
-                        if let Ok(at) = e.holders.binary_search(&worker) {
+                        if let Ok(at) = e.holders.binary_search_by_key(&worker, |h| h.0) {
                             e.holders.remove(at);
                         }
                         if e.holders.is_empty() {
@@ -207,13 +214,17 @@ impl PrefixRegistry {
     /// The worker holding the deepest registered chain for `prompt`,
     /// with its depth in blocks: walk the prompt's full blocks, chain-
     /// hash each run, and track per worker how many *leading consecutive*
-    /// blocks it holds (token-verified). Ties break toward the lower
-    /// worker index; `None` when no worker holds even the first block.
+    /// blocks it holds (token-verified) in *either* tier — a host-warm
+    /// chain still beats a cold prefill. Depth ties prefer the worker
+    /// with the deeper leading **HBM** run (hot serves without paying
+    /// the restore link), then the lower worker index; `None` when no
+    /// worker holds even the first block.
     pub fn deepest_hit(&self, prompt: &[i64], n_workers: usize) -> Option<(usize, usize)> {
         if self.entries.is_empty() || n_workers == 0 {
             return None;
         }
         let mut depth = vec![0usize; n_workers];
+        let mut hot = vec![0usize; n_workers];
         let mut alive = vec![true; n_workers];
         let mut key = CHAIN_SEED;
         for (i, run) in prompt.chunks_exact(self.block_tokens).enumerate() {
@@ -222,11 +233,17 @@ impl PrefixRegistry {
                 Some(e) if e.run == run => {
                     let mut any = false;
                     for w in 0..n_workers {
-                        if alive[w] && e.holders.binary_search(&w).is_ok() {
-                            depth[w] = i + 1;
-                            any = true;
-                        } else {
-                            alive[w] = false;
+                        match e.holders.binary_search_by_key(&w, |h| h.0) {
+                            Ok(at) if alive[w] => {
+                                depth[w] = i + 1;
+                                // The hot streak extends only while every
+                                // leading block so far is in HBM.
+                                if hot[w] == i && e.holders[at].1 == KvTier::Hbm {
+                                    hot[w] = i + 1;
+                                }
+                                any = true;
+                            }
+                            _ => alive[w] = false,
                         }
                     }
                     if !any {
@@ -236,11 +253,12 @@ impl PrefixRegistry {
                 _ => break,
             }
         }
-        let (best, best_depth) = depth
+        let (best, (best_depth, _)) = depth
             .iter()
-            .copied()
+            .zip(hot.iter())
+            .map(|(&d, &h)| (d, h))
             .enumerate()
-            .max_by_key(|&(w, d)| (d, std::cmp::Reverse(w)))?;
+            .max_by_key(|&(w, (d, h))| (d, h, std::cmp::Reverse(w)))?;
         if best_depth == 0 {
             None
         } else {
@@ -451,17 +469,41 @@ impl<J> PoolQueues<J> {
     pub fn pop_for(
         &self,
         worker: usize,
-        now_s: f64,
+        mut now_s: f64,
         wait: bool,
         mut decide: impl FnMut(&J) -> Admit,
     ) -> Popped<J> {
         let mut st = self.state.lock().unwrap();
-        if wait
-            && !st.closed
-            && st.queues[worker].is_empty()
-            && self.steal_source(&st, worker, now_s).is_none()
-        {
-            st = self.cv.wait_timeout(st, Duration::from_millis(10)).unwrap().0;
+        if wait {
+            // A sibling head that already exists becomes stealable by
+            // the clock alone — no push or notify will ever announce
+            // it. So the park must (a) time out no later than the
+            // earliest sibling head's remaining spill window and (b)
+            // advance `now_s` by the real time parked before
+            // re-checking, or a woken worker re-evaluates eligibility
+            // with its stale pre-park clock and re-blocks forever on a
+            // queue with no further traffic (the steal-window wakeup
+            // hole). Wall-clock deltas are sound here: only the
+            // threaded pool passes `wait = true`; the virtual harness
+            // always polls with `wait = false` and its own clock.
+            const PARK_BUDGET_S: f64 = 0.010;
+            let started = std::time::Instant::now();
+            while !st.closed
+                && st.queues[worker].is_empty()
+                && self.steal_source(&st, worker, now_s).is_none()
+            {
+                let waited = started.elapsed().as_secs_f64();
+                let budget = PARK_BUDGET_S - waited;
+                if budget <= 0.0 {
+                    break;
+                }
+                let park = match self.next_spill_in(&st, worker, now_s) {
+                    Some(remaining) => remaining.min(budget).max(1e-4),
+                    None => budget,
+                };
+                st = self.cv.wait_timeout(st, Duration::from_secs_f64(park)).unwrap().0;
+                now_s += started.elapsed().as_secs_f64() - waited;
+            }
         }
         let source = if !st.queues[worker].is_empty() {
             Some(worker)
@@ -505,6 +547,26 @@ impl<J> PoolQueues<J> {
         }
         best.map(|(_, i)| i)
     }
+
+    /// Seconds until the earliest sibling head ages into steal
+    /// eligibility for `thief` — the longest `pop_for` may park before
+    /// the clock alone changes its answer. `None` when no sibling head
+    /// is waiting at all.
+    fn next_spill_in(&self, st: &QueuesState<J>, thief: usize, now_s: f64) -> Option<f64> {
+        let mut soonest: Option<f64> = None;
+        for (i, q) in st.queues.iter().enumerate() {
+            if i == thief {
+                continue;
+            }
+            if let Some(head) = q.front() {
+                let remaining = self.spill_after_s - (now_s - head.enqueued_s);
+                if soonest.map_or(true, |s| remaining < s) {
+                    soonest = Some(remaining);
+                }
+            }
+        }
+        soonest.map(|s| s.max(0.0))
+    }
 }
 
 #[cfg(test)]
@@ -516,12 +578,16 @@ mod tests {
     }
 
     fn insert_events(prompt: &[i64], block_tokens: usize) -> Vec<PrefixEvent> {
+        tiered_inserts(prompt, block_tokens, KvTier::Hbm)
+    }
+
+    fn tiered_inserts(prompt: &[i64], block_tokens: usize, tier: KvTier) -> Vec<PrefixEvent> {
         let mut key = CHAIN_SEED;
         prompt
             .chunks_exact(block_tokens)
             .map(|run| {
                 key = chain_key(key, run);
-                PrefixEvent::Insert { key, run: run.to_vec() }
+                PrefixEvent::Insert { key, run: run.to_vec(), tier }
             })
             .collect()
     }
@@ -613,6 +679,55 @@ mod tests {
         // Worker 0 holds blocks 0 and 2 but NOT 1: its chain depth is 1.
         reg.apply(0, &[inserts[0].clone(), inserts[2].clone()]);
         assert_eq!(reg.deepest_hit(&prompt, 1), Some((0, 1)));
+    }
+
+    #[test]
+    fn registry_host_warm_chain_counts_but_hot_wins_depth_ties() {
+        let mut reg = PrefixRegistry::new(4);
+        let prompt: Vec<i64> = (0..8).collect();
+        // Worker 0 holds the chain warm on host only: it still hits
+        // (beats a cold prefill), at full depth.
+        reg.apply(0, &tiered_inserts(&prompt, 4, KvTier::Host));
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((0, 2)));
+        // Worker 1 holds the same chain hot in HBM: equal depth, but
+        // hot serves without the restore link — it wins the tie even
+        // from the higher index.
+        reg.apply(1, &tiered_inserts(&prompt, 4, KvTier::Hbm));
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((1, 2)));
+        // A strictly deeper warm chain still beats a shallower hot one.
+        let long: Vec<i64> = (0..12).collect();
+        let mut reg = PrefixRegistry::new(4);
+        reg.apply(0, &tiered_inserts(&long, 4, KvTier::Host));
+        reg.apply(1, &tiered_inserts(&long[..4], 4, KvTier::Hbm));
+        assert_eq!(reg.deepest_hit(&long, 2), Some((0, 3)));
+    }
+
+    #[test]
+    fn registry_insert_updates_tier_in_place() {
+        let mut reg = PrefixRegistry::new(4);
+        let prompt: Vec<i64> = (0..4).collect();
+        reg.apply(0, &tiered_inserts(&prompt, 4, KvTier::Hbm));
+        reg.apply(1, &tiered_inserts(&prompt, 4, KvTier::Host));
+        assert_eq!(reg.len(), 1, "one entry, two holders");
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((0, 1)));
+        // Worker 0's copy demotes to host: re-insert under the same key
+        // flips the tier, and the hot tie-break now has no winner hot —
+        // lower index decides again.
+        reg.apply(0, &tiered_inserts(&prompt, 4, KvTier::Host));
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((0, 1)));
+        // Worker 1 promotes back to HBM: hot beats warm on the tie.
+        reg.apply(1, &tiered_inserts(&prompt, 4, KvTier::Hbm));
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((1, 1)));
+        // Evict drops the holder regardless of which tier it was in.
+        let evict = vec![PrefixEvent::Evict {
+            key: match &tiered_inserts(&prompt, 4, KvTier::Hbm)[0] {
+                PrefixEvent::Insert { key, .. } => *key,
+                _ => unreachable!(),
+            },
+        }];
+        reg.apply(1, &evict);
+        reg.apply(0, &evict);
+        assert!(reg.is_empty());
     }
 
     // ---- affinity routing ----
@@ -709,6 +824,33 @@ mod tests {
             Popped::Job(j) => assert_eq!(j, 23),
             _ => panic!("expected steal of the oldest head"),
         }
+    }
+
+    #[test]
+    fn woken_idle_worker_steals_lone_stale_head_without_new_traffic() {
+        // Regression for the steal-window wakeup hole: one job steered
+        // to worker 0, worker 1 idle, and *no further submits ever*.
+        // The head becomes stealable 5 ms later purely by the clock; a
+        // single waiting pop_for must park for the remaining window,
+        // advance its clock by the real time parked, and claim the job
+        // — not re-check with the stale pre-park `now_s` and re-block.
+        use std::sync::Arc;
+        let q: Arc<PoolQueues<u32>> = Arc::new(PoolQueues::new(2));
+        let t0 = std::time::Instant::now();
+        q.push(0, t0.elapsed().as_secs_f64(), 77).unwrap();
+        let thief = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                // One call, made while the head is still inside the
+                // spill window (now ≈ enqueue time).
+                q.pop_for(1, t0.elapsed().as_secs_f64(), true, |_| Admit::Take)
+            })
+        };
+        match thief.join().unwrap() {
+            Popped::Job(j) => assert_eq!(j, 77),
+            _ => panic!("single waiting pop_for must steal once the window opens"),
+        }
+        assert_eq!(q.total_depth(), 0);
     }
 
     #[test]

@@ -412,6 +412,145 @@ impl PrefixStats {
     }
 }
 
+/// Which memory tier holds a copy of some KV blocks: resident in
+/// device HBM (usable this step) or demoted to the host pool (usable
+/// after paying the restore-bandwidth cost to swap it back in).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvTier {
+    Hbm,
+    Host,
+}
+
+impl KvTier {
+    /// Stable identifier used in report/bench output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvTier::Hbm => "hbm",
+            KvTier::Host => "host",
+        }
+    }
+}
+
+/// Host-tier (KV swap) configuration and restore-cost model
+/// (`--kv-host-mb`). Only meaningful under [`KvPolicy::Paged`]: when a
+/// lane is preempted or a cached prefix is LRU-evicted, its blocks'
+/// contents are demoted to a bounded host pool instead of being
+/// discarded, and readmission restores them over the host link instead
+/// of recomputing — whenever the modeled restore time beats the modeled
+/// recompute time.
+///
+/// The pricing terms mirror [`super::backend::StepModel`] (build via
+/// [`HostTierConfig::from_step`]) so the restore-vs-recompute decision
+/// and the step clock can never disagree about what restore costs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HostTierConfig {
+    /// Host pool bound, in pager blocks. 0 = tier disabled.
+    pub capacity_blocks: usize,
+    /// Seconds to move one context token's KV across the host link
+    /// (PCIe-like; `kv_bytes_per_token / host_link_bw`, sharded).
+    pub restore_s_per_token: f64,
+    /// Seconds of attention-read per cached position per step
+    /// ([`super::backend::StepModel::kv_read_s_per_pos`]) — what
+    /// recomputing a context costs in KV traffic.
+    pub kv_read_s_per_pos: f64,
+    /// Seconds to stream the weights once
+    /// ([`super::backend::StepModel::weight_stream_s`]) — the floor a
+    /// recompute prefill pass pays at least once.
+    pub weight_stream_s: f64,
+}
+
+impl HostTierConfig {
+    /// Host tier disabled (the default).
+    pub fn off() -> HostTierConfig {
+        HostTierConfig {
+            capacity_blocks: 0,
+            restore_s_per_token: 0.0,
+            kv_read_s_per_pos: 0.0,
+            weight_stream_s: 0.0,
+        }
+    }
+
+    /// Tier with `capacity_blocks` of host pool, priced by `step`'s
+    /// restore-bandwidth and recompute terms.
+    pub fn from_step(step: &super::backend::StepModel, capacity_blocks: usize) -> HostTierConfig {
+        HostTierConfig {
+            capacity_blocks,
+            restore_s_per_token: step.host_restore_s_per_token,
+            kv_read_s_per_pos: step.kv_read_s_per_pos,
+            weight_stream_s: step.weight_stream_s,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_blocks > 0
+    }
+
+    /// Modeled seconds to restore `tokens` positions of KV from host.
+    pub fn restore_s(&self, tokens: usize) -> f64 {
+        tokens as f64 * self.restore_s_per_token
+    }
+
+    /// Modeled seconds to recompute `tokens` context positions starting
+    /// at position `start` (first-order prefill cost: one weight-stream
+    /// pass plus the triangular KV re-reads).
+    pub fn recompute_s(&self, start: usize, tokens: usize) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let k = tokens as f64;
+        self.weight_stream_s + (k * start as f64 + k * (k - 1.0) / 2.0) * self.kv_read_s_per_pos
+    }
+
+    /// The restore-vs-recompute decision: restoring `tokens` positions
+    /// (starting at `start`) is claimed only when it is strictly
+    /// cheaper than recomputing them.
+    pub fn restore_beats_recompute(&self, start: usize, tokens: usize) -> bool {
+        tokens > 0 && self.restore_s(tokens) < self.recompute_s(start, tokens)
+    }
+}
+
+impl Default for HostTierConfig {
+    fn default() -> Self {
+        HostTierConfig::off()
+    }
+}
+
+/// Cumulative host-tier counters (monotone over a pager's lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HostTierStats {
+    /// Blocks demoted to the host pool (preempted lanes + evicted
+    /// prefixes).
+    pub demoted_blocks: u64,
+    /// Blocks restored from the host pool into HBM.
+    pub restored_blocks: u64,
+    /// Context positions whose recompute was skipped by a restore.
+    pub restored_tokens: u64,
+    /// Host-pool entries dropped to the capacity bound (LRU).
+    pub host_evictions: u64,
+}
+
+impl HostTierStats {
+    /// Component-wise `self - prev` (for per-step metric deltas).
+    pub fn delta(&self, prev: &HostTierStats) -> HostTierStats {
+        HostTierStats {
+            demoted_blocks: self.demoted_blocks.saturating_sub(prev.demoted_blocks),
+            restored_blocks: self.restored_blocks.saturating_sub(prev.restored_blocks),
+            restored_tokens: self.restored_tokens.saturating_sub(prev.restored_tokens),
+            host_evictions: self.host_evictions.saturating_sub(prev.host_evictions),
+        }
+    }
+
+    /// Component-wise sum (for aggregating per-worker pagers).
+    pub fn plus(&self, o: &HostTierStats) -> HostTierStats {
+        HostTierStats {
+            demoted_blocks: self.demoted_blocks + o.demoted_blocks,
+            restored_blocks: self.restored_blocks + o.restored_blocks,
+            restored_tokens: self.restored_tokens + o.restored_tokens,
+            host_evictions: self.host_evictions + o.host_evictions,
+        }
+    }
+}
+
 /// One indexed prompt-prefix block: the physical block holding the KV
 /// of a block-aligned token run, the run itself (collision check — the
 /// chain key is a hash), and an LRU stamp.
@@ -448,17 +587,21 @@ pub const DEFAULT_UNBOUNDED_PREFIX_CACHE_BLOCKS: usize = 4096;
 /// hold which cached prefix chains without ever walking a remote pager.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum PrefixEvent {
-    /// A block-aligned token run was indexed under `key` (the chain
-    /// hash of the run and its ancestors). The run rides along so the
-    /// registry stays token-verified exactly like the per-worker index.
+    /// A block-aligned token run is resident under `key` (the chain
+    /// hash of the run and its ancestors) at `tier`. The run rides
+    /// along so the registry stays token-verified exactly like the
+    /// per-worker index. A re-insert under the same key updates the
+    /// tier (HBM→host on demotion, host→HBM on promotion).
     Insert {
         /// Chain-hash key of the indexed run.
         key: u64,
         /// The indexed token run (one full block).
         run: Vec<i64>,
+        /// Where the run's KV now lives (hot in HBM / warm on host).
+        tier: KvTier,
     },
-    /// The entry under `key` was evicted (LRU reclaim, capacity bound,
-    /// or the whole index being disabled).
+    /// The entry under `key` left both tiers (LRU reclaim, capacity
+    /// bound, or the whole index being disabled).
     Evict {
         /// Chain-hash key of the evicted run.
         key: u64,
@@ -466,6 +609,42 @@ pub enum PrefixEvent {
 }
 
 pub(crate) const CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Seed for host-pool lane-context keys, distinct from the prefix
+/// chain seed so a lane context and a prefix run can never alias.
+const HOST_LANE_SEED: u64 = 0x8422_2325_cbf2_9ce4;
+
+/// A preempted lane's KV held on host: the full context identity
+/// (prompt + generated tokens — verified on restore, the key is a
+/// hash), the host blocks it occupies, and an LRU stamp.
+#[derive(Clone, Debug)]
+struct HostLaneEntry {
+    ctx: Vec<i64>,
+    blocks: usize,
+    last_used: u64,
+}
+
+/// An LRU-evicted prefix block's KV held on host (one block per
+/// entry): the token run (verified on promotion) and an LRU stamp.
+#[derive(Clone, Debug)]
+struct HostPrefixEntry {
+    run: Vec<i64>,
+    last_used: u64,
+}
+
+/// The bounded host memory pool backing the KV swap tier: demoted lane
+/// contexts and demoted prefix blocks, evicted LRU-first (lanes and
+/// prefixes age on the same logical clock) when the bound is hit.
+/// Purely bookkeeping — the simulation moves no real bytes, so a
+/// demotion records *what* could be restored and the cost model prices
+/// *when* restoring beats recomputing.
+#[derive(Clone, Debug)]
+struct HostPool {
+    cfg: HostTierConfig,
+    used_blocks: usize,
+    lanes: HashMap<u64, HostLaneEntry>,
+    prefix: HashMap<u64, HostPrefixEntry>,
+}
 
 /// Chain-hash one block-aligned token run onto the parent key.
 pub(crate) fn chain_key(prev: u64, run: &[i64]) -> u64 {
@@ -531,6 +710,13 @@ pub struct KvPager {
     /// prefix cache is enabled, and both serving drivers drain it every
     /// admission/step, so it stays small.
     prefix_events: Vec<PrefixEvent>,
+    /// Host memory tier (KV swap pool); `None` = disabled.
+    host: Option<HostPool>,
+    host_demoted_blocks: u64,
+    host_restored_blocks: u64,
+    host_restored_tokens: u64,
+    host_evictions: u64,
+    host_peak_blocks: usize,
 }
 
 impl KvPager {
@@ -562,6 +748,12 @@ impl KvPager {
             shared_block_grants: 0,
             cow_splits: 0,
             prefix_events: Vec::new(),
+            host: None,
+            host_demoted_blocks: 0,
+            host_restored_blocks: 0,
+            host_restored_tokens: 0,
+            host_evictions: 0,
+            host_peak_blocks: 0,
         }
     }
 
@@ -580,6 +772,72 @@ impl KvPager {
             self.cache = None;
         }
         self
+    }
+
+    /// Enable (or explicitly disable) the host memory tier. Builder
+    /// form of [`KvPager::enable_host_tier`].
+    pub fn with_host_tier(mut self, cfg: HostTierConfig) -> KvPager {
+        self.enable_host_tier(cfg);
+        self
+    }
+
+    /// Enable (or explicitly disable) the host memory tier: a bounded
+    /// pool demoted KV swaps into instead of being discarded, and a
+    /// restore-cost model for claiming it back (see
+    /// [`HostTierConfig`]).
+    pub fn enable_host_tier(&mut self, cfg: HostTierConfig) {
+        if cfg.enabled() {
+            self.host = Some(HostPool {
+                cfg,
+                used_blocks: 0,
+                lanes: HashMap::new(),
+                prefix: HashMap::new(),
+            });
+        } else {
+            self.disable_host_tier();
+        }
+    }
+
+    /// Whether the host tier is active.
+    pub fn host_tier_enabled(&self) -> bool {
+        self.host.is_some()
+    }
+
+    /// Drop the host pool (used when the backend cannot restore
+    /// sessions at a demoted position — the restore path must never be
+    /// claimed, exactly like the prefix cache). Demoted prefix entries
+    /// leave the registry via `Evict` events.
+    pub fn disable_host_tier(&mut self) {
+        if let Some(pool) = self.host.take() {
+            for (key, _) in pool.prefix {
+                self.prefix_events.push(PrefixEvent::Evict { key });
+            }
+        }
+    }
+
+    /// Host pool bound in blocks (0 = tier disabled).
+    pub fn host_capacity_blocks(&self) -> usize {
+        self.host.as_ref().map_or(0, |h| h.cfg.capacity_blocks)
+    }
+
+    /// Host pool occupancy in blocks.
+    pub fn host_blocks_in_use(&self) -> usize {
+        self.host.as_ref().map_or(0, |h| h.used_blocks)
+    }
+
+    /// High-water mark of host pool occupancy.
+    pub fn host_peak_blocks(&self) -> usize {
+        self.host_peak_blocks
+    }
+
+    /// Cumulative host-tier counters.
+    pub fn host_stats(&self) -> HostTierStats {
+        HostTierStats {
+            demoted_blocks: self.host_demoted_blocks,
+            restored_blocks: self.host_restored_blocks,
+            restored_tokens: self.host_restored_tokens,
+            host_evictions: self.host_evictions,
+        }
     }
 
     /// Whether the prefix index is active.
@@ -922,11 +1180,20 @@ impl KvPager {
     ///
     /// The lane starts prefill at `prefix_hit`: those tokens' KV
     /// already exists physically and is never recomputed or re-stored.
-    pub fn admit_map(&mut self, prompt: &[i64], init_ctx: usize) -> (Vec<KvBlockId>, usize) {
+    ///
+    /// With the host tier on, a host-warm continuation of the chain is
+    /// first promoted back into HBM when restoring it beats
+    /// recomputing it ([`KvPager::promote_host_prefix`]); the third
+    /// return is the promoted token count, which the admission's
+    /// holdings carry as a restore rider so the step clock prices the
+    /// transfer.
+    pub fn admit_map(&mut self, prompt: &[i64], init_ctx: usize) -> (Vec<KvBlockId>, usize, usize) {
         let total = self.admit_blocks(init_ctx);
         let mut map: Vec<KvBlockId> = Vec::with_capacity(total);
         let mut hit = 0usize;
+        let mut restored = 0usize;
         if self.cache.is_some() && init_ctx > 1 {
+            restored = self.promote_host_prefix(prompt, init_ctx);
             let chain = self.matched_chain(prompt);
             let (h, shared_n) = self.hit_and_shared(chain.len(), init_ctx);
             hit = h;
@@ -954,7 +1221,7 @@ impl KvPager {
                 }
             }
         }
-        (map, hit)
+        (map, hit, restored)
     }
 
     /// Index `prompt`'s full blocks out of a lane's block map (called
@@ -991,9 +1258,17 @@ impl KvPager {
             if at_capacity && !self.evict_one() {
                 break;
             }
+            // A host-warm copy of this run is superseded by the
+            // freshly prefilled HBM copy; the hot Insert below updates
+            // the registry's tier.
+            self.host_drop_prefix(key);
             self.retain_block(block);
             self.cached[block as usize] = true;
-            self.prefix_events.push(PrefixEvent::Insert { key, run: run.to_vec() });
+            self.prefix_events.push(PrefixEvent::Insert {
+                key,
+                run: run.to_vec(),
+                tier: KvTier::Hbm,
+            });
             self.cache
                 .as_mut()
                 .expect("checked above")
@@ -1027,11 +1302,275 @@ impl KvPager {
             .entries
             .remove(&key)
             .expect("victim exists");
-        self.prefix_events.push(PrefixEvent::Evict { key });
         self.cached[e.block as usize] = false;
         self.cache_only -= 1;
         self.release_block(e.block);
+        // With the host tier on, eviction is a demotion: the block's KV
+        // moves to the host pool (a tiered Insert tells the registry
+        // the chain is now warm, not gone). Only when the pool is off
+        // or can't fit one block is the entry truly discarded.
+        if !self.demote_prefix_entry(key, e.run) {
+            self.prefix_events.push(PrefixEvent::Evict { key });
+        }
         true
+    }
+
+    // ---- host memory tier (KV swap) ----
+
+    /// Make room for `need` more blocks in the host pool by evicting
+    /// LRU entries (lane contexts and prefix blocks age on the same
+    /// logical clock; ties break prefix-first, then by key, so virtual
+    /// runs stay deterministic). False when the tier is off or `need`
+    /// exceeds the pool bound outright.
+    fn host_make_room(&mut self, need: usize) -> bool {
+        let capacity = match &self.host {
+            Some(pool) => pool.cfg.capacity_blocks,
+            None => return false,
+        };
+        if need > capacity {
+            return false;
+        }
+        loop {
+            let evicted_prefix_key = {
+                let pool = self.host.as_mut().expect("checked above");
+                if pool.used_blocks + need <= capacity {
+                    return true;
+                }
+                // (last_used, kind, key): kind 0 = prefix, 1 = lane.
+                let mut victim: Option<(u64, u8, u64)> = None;
+                for (&key, e) in &pool.prefix {
+                    let cand = (e.last_used, 0u8, key);
+                    if victim.map_or(true, |v| cand < v) {
+                        victim = Some(cand);
+                    }
+                }
+                for (&key, e) in &pool.lanes {
+                    let cand = (e.last_used, 1u8, key);
+                    if victim.map_or(true, |v| cand < v) {
+                        victim = Some(cand);
+                    }
+                }
+                let Some((_, kind, key)) = victim else { return false };
+                if kind == 0 {
+                    pool.prefix.remove(&key);
+                    pool.used_blocks = pool.used_blocks.saturating_sub(1);
+                    Some(key)
+                } else {
+                    let e = pool.lanes.remove(&key).expect("victim exists");
+                    pool.used_blocks = pool.used_blocks.saturating_sub(e.blocks);
+                    None
+                }
+            };
+            if let Some(key) = evicted_prefix_key {
+                self.prefix_events.push(PrefixEvent::Evict { key });
+            }
+            self.host_evictions += 1;
+        }
+    }
+
+    /// Demote a preempted lane's KV to the host pool: `ctx` is the
+    /// lane's full context identity (prompt + generated tokens,
+    /// verified again on restore) occupying `blocks` pager blocks. A
+    /// no-op when the tier is off or the pool cannot make room — the
+    /// readmission then recomputes, exactly as without the tier.
+    /// Called by the lane core on preemption, never on retirement.
+    pub fn demote_lane(&mut self, ctx: &[i64], blocks: usize) {
+        if self.host.is_none() || ctx.is_empty() || blocks == 0 {
+            return;
+        }
+        if !self.host_make_room(blocks) {
+            return;
+        }
+        let key = chain_key(HOST_LANE_SEED, ctx);
+        self.tick += 1;
+        let tick = self.tick;
+        let used = {
+            let pool = self.host.as_mut().expect("checked above");
+            let entry = HostLaneEntry { ctx: ctx.to_vec(), blocks, last_used: tick };
+            if let Some(old) = pool.lanes.insert(key, entry) {
+                pool.used_blocks = pool.used_blocks.saturating_sub(old.blocks);
+            }
+            pool.used_blocks += blocks;
+            pool.used_blocks
+        };
+        self.host_demoted_blocks += blocks as u64;
+        self.host_peak_blocks = self.host_peak_blocks.max(used);
+    }
+
+    /// Whether `ctx`'s KV is resident on host AND the modeled restore
+    /// strictly beats recomputing the `init_ctx - 1` context positions
+    /// — the readmission restore-vs-recompute decision (non-mutating;
+    /// no LRU bump).
+    pub fn lane_restore_available(&self, ctx: &[i64], init_ctx: usize) -> bool {
+        let Some(pool) = &self.host else { return false };
+        if init_ctx < 2 {
+            return false;
+        }
+        let key = chain_key(HOST_LANE_SEED, ctx);
+        match pool.lanes.get(&key) {
+            Some(e) if e.ctx == ctx => pool.cfg.restore_beats_recompute(0, init_ctx - 1),
+            _ => false,
+        }
+    }
+
+    /// Claim `ctx`'s demoted KV back into HBM: consume the host entry
+    /// and build a fresh block map covering the full initial context,
+    /// so the lane resumes at position `init_ctx - 1` instead of
+    /// recomputing. The transfer itself is priced by the caller (the
+    /// holdings carry a restore rider for `StepModel::restore_s`).
+    /// `None` = no restorable copy or restore doesn't beat recompute
+    /// (caller falls back to the recompute path).
+    pub fn restore_lane_map(&mut self, ctx: &[i64], init_ctx: usize) -> Option<Vec<KvBlockId>> {
+        if !self.lane_restore_available(ctx, init_ctx) {
+            return None;
+        }
+        let key = chain_key(HOST_LANE_SEED, ctx);
+        {
+            let pool = self.host.as_mut().expect("available implies enabled");
+            let e = pool.lanes.remove(&key).expect("available implies resident");
+            pool.used_blocks = pool.used_blocks.saturating_sub(e.blocks);
+        }
+        let total = self.admit_blocks(init_ctx);
+        let mut map = Vec::with_capacity(total);
+        while map.len() < total {
+            match self.alloc_block() {
+                Some(id) => map.push(id),
+                None => {
+                    if cfg!(debug_assertions) {
+                        panic!("admission gate admitted beyond the pager capacity");
+                    }
+                    break;
+                }
+            }
+        }
+        self.host_restored_blocks += map.len() as u64;
+        self.host_restored_tokens += (init_ctx - 1) as u64;
+        Some(map)
+    }
+
+    /// Move an evicted prefix entry's KV into the host pool. On
+    /// success a tiered `Insert` event records the HBM→host
+    /// transition (the registry keeps the holder, now warm); false =
+    /// the pool is off or can't fit one block (caller emits `Evict`).
+    fn demote_prefix_entry(&mut self, key: u64, run: Vec<i64>) -> bool {
+        if self.host.is_none() || !self.host_make_room(1) {
+            return false;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let used = {
+            let pool = self.host.as_mut().expect("checked above");
+            let entry = HostPrefixEntry { run: run.clone(), last_used: tick };
+            if pool.prefix.insert(key, entry).is_none() {
+                pool.used_blocks += 1;
+            }
+            pool.used_blocks
+        };
+        self.host_demoted_blocks += 1;
+        self.host_peak_blocks = self.host_peak_blocks.max(used);
+        self.prefix_events.push(PrefixEvent::Insert { key, run, tier: KvTier::Host });
+        true
+    }
+
+    /// Drop any host-warm copy of `key` (a freshly prefilled HBM copy
+    /// supersedes it; the accompanying hot Insert updates the
+    /// registry).
+    fn host_drop_prefix(&mut self, key: u64) {
+        if let Some(pool) = &mut self.host {
+            if pool.prefix.remove(&key).is_some() {
+                pool.used_blocks = pool.used_blocks.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Walk `prompt`'s chain past the resident HBM depth into the host
+    /// pool and promote the contiguous host-warm continuation back
+    /// into the HBM index — but only when the modeled restore strictly
+    /// beats recomputing those positions, and only as far as this
+    /// admission could share (`init_ctx - 1` cap, like
+    /// [`KvPager::hit_and_shared`]). Returns the promoted token count;
+    /// the caller prices the transfer via the holdings' restore rider.
+    fn promote_host_prefix(&mut self, prompt: &[i64], init_ctx: usize) -> usize {
+        if self.host.is_none() || self.cache.is_none() || init_ctx <= 1 {
+            return 0;
+        }
+        let bt = self.block_tokens;
+        let max_shared = (init_ctx - 1) / bt;
+        let mut key = CHAIN_SEED;
+        let mut depth = 0usize;
+        let mut promote: Vec<(u64, Vec<i64>)> = Vec::new();
+        {
+            let cache = self.cache.as_ref().expect("checked above");
+            let pool = self.host.as_ref().expect("checked above");
+            let mut in_hbm = true;
+            for run in prompt.chunks_exact(bt).take(max_shared) {
+                key = chain_key(key, run);
+                if in_hbm {
+                    match cache.entries.get(&key) {
+                        Some(e) if e.run == run => {
+                            depth += 1;
+                            continue;
+                        }
+                        _ => in_hbm = false,
+                    }
+                }
+                match pool.prefix.get(&key) {
+                    Some(e) if e.run == run => promote.push((key, run.to_vec())),
+                    _ => break,
+                }
+            }
+            if promote.is_empty() {
+                return 0;
+            }
+            let cfg = pool.cfg;
+            if !cfg.restore_beats_recompute(depth * bt, promote.len() * bt) {
+                return 0;
+            }
+        }
+        let cache_capacity =
+            self.cache.as_ref().expect("checked above").capacity_blocks;
+        let mut promoted_tokens = 0usize;
+        for (key, run) in promote {
+            // Claim the host copy first: the allocation below may
+            // itself evict (and demote) other entries, and the claimed
+            // copy must not be an eviction candidate meanwhile.
+            let claimed = {
+                let pool = self.host.as_mut().expect("checked above");
+                if pool.prefix.remove(&key).is_some() {
+                    pool.used_blocks = pool.used_blocks.saturating_sub(1);
+                    true
+                } else {
+                    false
+                }
+            };
+            if !claimed {
+                break;
+            }
+            let at_capacity = self
+                .cache
+                .as_ref()
+                .expect("checked above")
+                .entries
+                .len()
+                >= cache_capacity;
+            if at_capacity && !self.evict_one() {
+                break;
+            }
+            let Some(block) = self.alloc_block() else { break };
+            // alloc_block hands back refcount 1: that single holder IS
+            // the index pin for the promoted entry.
+            self.cached[block as usize] = true;
+            self.cache_only += 1;
+            self.tick += 1;
+            let tick = self.tick;
+            let entry = CacheEntry { block, run: run.clone(), last_used: tick };
+            self.cache.as_mut().expect("checked above").entries.insert(key, entry);
+            self.prefix_events.push(PrefixEvent::Insert { key, run, tier: KvTier::Hbm });
+            promoted_tokens += bt;
+            self.host_restored_blocks += 1;
+        }
+        self.host_restored_tokens += promoted_tokens as u64;
+        promoted_tokens
     }
 }
 
@@ -1339,7 +1878,7 @@ mod tests {
     fn pager_grow_release_roundtrip() {
         let mut p = KvPager::new(100_000, 1000, 16); // 6 blocks
         // Admit at context 8 (+1 decode token) -> 1 exclusive block.
-        let (mut map, hit) = p.admit_map(&[1, 2, 3, 4, 5, 6, 7, 8], 8);
+        let (mut map, hit, _) = p.admit_map(&[1, 2, 3, 4, 5, 6, 7, 8], 8);
         assert_eq!((map.len(), hit, p.blocks_in_use()), (1, 0, 1));
         // Growing within the block allocates nothing.
         assert!(p.try_grow_map(&mut map, 16));
@@ -1358,7 +1897,7 @@ mod tests {
         assert_eq!(p.blocks_in_use(), 0);
         assert_eq!(p.peak_blocks(), 5);
         // Freed ids recycle: the next admission reuses physical blocks.
-        let (map2, _) = p.admit_map(&[9, 9], 2);
+        let (map2, _, _) = p.admit_map(&[9, 9], 2);
         assert_eq!(p.blocks_in_use(), 1);
         p.release_map(&map2);
     }
@@ -1394,7 +1933,7 @@ mod tests {
         let mut p = cached_pager();
         // Cold request: 10-token prompt -> 2 full blocks + partial tail.
         let prompt: Vec<i64> = (0..10).collect();
-        let (map_a, hit_a) = p.admit_map(&prompt, 10);
+        let (map_a, hit_a, _) = p.admit_map(&prompt, 10);
         assert_eq!((map_a.len(), hit_a), (3, 0)); // blocks_for(11)
         assert_eq!(p.lookup_prefix_blocks(&prompt), 0);
         p.register_prefix(&prompt, &map_a);
@@ -1407,7 +1946,7 @@ mod tests {
 
         // Second identical prompt: shares the 2 cached blocks (8 tokens
         // of prefill skipped), allocates only the uncached tail.
-        let (map_b, hit_b) = p.admit_map(&prompt, 10);
+        let (map_b, hit_b, _) = p.admit_map(&prompt, 10);
         assert_eq!(hit_b, 8);
         assert_eq!(&map_b[..2], &map_a[..2], "prefix blocks are physically shared");
         assert_ne!(map_b[2], map_a[2], "tails are exclusive");
@@ -1430,14 +1969,14 @@ mod tests {
         let mut p = cached_pager();
         // 8-token prompt = exactly 2 full blocks.
         let prompt: Vec<i64> = (100..108).collect();
-        let (map_a, _) = p.admit_map(&prompt, 8);
+        let (map_a, _, _) = p.admit_map(&prompt, 8);
         p.register_prefix(&prompt, &map_a);
         assert_eq!(p.cached_blocks(), 2);
         // A second identical prompt can share at most init_ctx - 1 = 7
         // tokens (it must feed one token for logits); its first write
         // (position 7) lands inside cached block 1 -> CoW split: block 0
         // shared, block 1 exclusive copy.
-        let (map_b, hit_b) = p.admit_map(&prompt, 8);
+        let (map_b, hit_b, _) = p.admit_map(&prompt, 8);
         assert_eq!(hit_b, 7);
         assert_eq!(map_b[0], map_a[0]);
         assert_ne!(map_b[1], map_a[1], "written tail must be split, not shared");
@@ -1456,9 +1995,9 @@ mod tests {
         let mut p = KvPager::new(6 * 4 * 10, 10, 4).with_prefix_cache(PrefixCacheConfig::on());
         let pa: Vec<i64> = vec![1; 8];
         let pb: Vec<i64> = vec![2; 4];
-        let (ma, _) = p.admit_map(&pa, 8); // 3 blocks
+        let (ma, _, _) = p.admit_map(&pa, 8); // 3 blocks
         p.register_prefix(&pa, &ma);
-        let (mb, _) = p.admit_map(&pb, 4); // 2 blocks
+        let (mb, _, _) = p.admit_map(&pb, 4); // 2 blocks
         p.register_prefix(&pb, &mb);
         p.release_map(&ma);
         p.release_map(&mb);
@@ -1467,7 +2006,7 @@ mod tests {
         assert_eq!(p.allocatable_blocks(), 6);
         // Readmit pa: bumps both pa entries' recency, shares block 0
         // (hit = min(8, 7) = 7 -> one full shared block + a CoW tail).
-        let (ma2, hit) = p.admit_map(&pa, 8);
+        let (ma2, hit, _) = p.admit_map(&pa, 8);
         assert_eq!(hit, 7);
         assert_eq!(ma2[0], ma[0]);
         assert_eq!(p.blocks_in_use(), 5); // 3 cached + 2 fresh
@@ -1495,7 +2034,7 @@ mod tests {
         let mut p = KvPager::new(u64::MAX, 0, 4)
             .with_prefix_cache(PrefixCacheConfig { enabled: true, capacity_blocks: 2 });
         let prompt: Vec<i64> = (0..16).collect(); // 4 full blocks
-        let (map, _) = p.admit_map(&prompt, 16);
+        let (map, _, _) = p.admit_map(&prompt, 16);
         p.register_prefix(&prompt, &map);
         // Only 2 of the 4 full blocks fit the index; while the lane
         // holds every block, nothing is evictable, so insertion stops.
@@ -1504,7 +2043,7 @@ mod tests {
         p.release_map(&map);
         // Re-registering now can rotate entries through eviction, but
         // the pin count stays bounded.
-        let (map2, hit) = p.admit_map(&prompt, 16);
+        let (map2, hit, _) = p.admit_map(&prompt, 16);
         assert_eq!(hit, 8);
         p.register_prefix(&prompt, &map2);
         assert!(p.cached_blocks() <= 2);
@@ -1515,12 +2054,12 @@ mod tests {
     fn prefix_chain_verifies_tokens_not_just_hashes() {
         let mut p = cached_pager();
         let pa: Vec<i64> = (0..8).collect();
-        let (ma, _) = p.admit_map(&pa, 8);
+        let (ma, _, _) = p.admit_map(&pa, 8);
         p.register_prefix(&pa, &ma);
         // Same length, different tokens: no hit.
         let pb: Vec<i64> = (50..58).collect();
         assert_eq!(p.lookup_prefix_blocks(&pb), 0);
-        let (mb, hit) = p.admit_map(&pb, 8);
+        let (mb, hit, _) = p.admit_map(&pb, 8);
         assert_eq!(hit, 0);
         // Shared first block, divergent second: chain stops at 1.
         let mut pc: Vec<i64> = (0..8).collect();
@@ -1534,7 +2073,7 @@ mod tests {
     fn prefix_events_mirror_index_inserts_and_evicts() {
         let mut p = cached_pager();
         let prompt: Vec<i64> = (0..8).collect();
-        let (map, _) = p.admit_map(&prompt, 8);
+        let (map, _, _) = p.admit_map(&prompt, 8);
         assert!(p.drain_prefix_events().is_empty(), "no index activity yet");
         p.register_prefix(&prompt, &map);
         let ev = p.drain_prefix_events();
@@ -1571,7 +2110,7 @@ mod tests {
         // reclaimed and the eviction must surface as an event.
         let mut p = KvPager::new(3 * 4 * 10, 10, 4).with_prefix_cache(PrefixCacheConfig::on());
         let prompt: Vec<i64> = vec![7; 4];
-        let (map, _) = p.admit_map(&prompt, 4); // 2 blocks (4 tokens + 1)
+        let (map, _, _) = p.admit_map(&prompt, 4); // 2 blocks (4 tokens + 1)
         p.register_prefix(&prompt, &map);
         p.release_map(&map);
         let ev = p.drain_prefix_events();
@@ -1589,7 +2128,7 @@ mod tests {
     fn disable_prefix_cache_releases_pinned_blocks() {
         let mut p = cached_pager();
         let prompt: Vec<i64> = (0..8).collect();
-        let (map, _) = p.admit_map(&prompt, 8);
+        let (map, _, _) = p.admit_map(&prompt, 8);
         p.register_prefix(&prompt, &map);
         p.release_map(&map);
         assert_eq!(p.blocks_in_use(), 2);
@@ -1603,14 +2142,239 @@ mod tests {
     fn prefix_cache_off_shares_nothing() {
         let mut p = KvPager::new(12 * 4 * 10, 10, 4);
         let prompt: Vec<i64> = (0..8).collect();
-        let (ma, _) = p.admit_map(&prompt, 8);
+        let (ma, _, _) = p.admit_map(&prompt, 8);
         p.register_prefix(&prompt, &ma); // no-op
-        let (mb, hit) = p.admit_map(&prompt, 8);
+        let (mb, hit, _) = p.admit_map(&prompt, 8);
         assert_eq!(hit, 0);
         assert_eq!(p.blocks_in_use(), ma.len() + mb.len());
         assert_eq!(p.prefix_stats(), PrefixStats::default());
         p.release_map(&ma);
         p.release_map(&mb);
+    }
+
+    // ---- host memory tier (KV swap) ----
+
+    /// A tier config where restoring is vastly cheaper than
+    /// recomputing (PCIe-fast restore vs. heavy prefill), bounded at
+    /// `capacity_blocks` of host pool.
+    fn tiered(capacity_blocks: usize) -> HostTierConfig {
+        HostTierConfig {
+            capacity_blocks,
+            restore_s_per_token: 1e-9,
+            kv_read_s_per_pos: 1e-6,
+            weight_stream_s: 1e-3,
+        }
+    }
+
+    #[test]
+    fn host_tier_decision_compares_modeled_costs() {
+        let cfg = tiered(8);
+        // Restoring 64 positions: 64 ns vs ~1 ms recompute.
+        assert!(cfg.restore_beats_recompute(0, 64));
+        assert!(cfg.restore_s(64) < cfg.recompute_s(0, 64));
+        // Nothing to restore is never claimed.
+        assert!(!cfg.restore_beats_recompute(0, 0));
+        // A host link slower than recompute declines.
+        let slow = HostTierConfig { restore_s_per_token: 1.0, ..cfg };
+        assert!(!slow.restore_beats_recompute(0, 64));
+        // Deeper start positions make recompute strictly costlier.
+        assert!(cfg.recompute_s(100, 16) > cfg.recompute_s(0, 16));
+        assert!(!HostTierConfig::off().enabled());
+        assert!(tiered(8).enabled());
+    }
+
+    #[test]
+    fn host_demote_restore_roundtrip() {
+        let mut p = KvPager::new(12 * 4 * 10, 10, 4).with_host_tier(tiered(8));
+        assert!(p.host_tier_enabled());
+        // A lane at context 10 (8 prompt + 2 generated) gets preempted.
+        let ctx: Vec<i64> = (0..10).collect();
+        let (map, _, _) = p.admit_map(&ctx[..8], 10);
+        assert_eq!(map.len(), 3); // blocks_for(11)
+        p.demote_lane(&ctx, map.len());
+        p.release_map(&map);
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.host_blocks_in_use(), 3);
+        // Readmission finds the warm copy and claims it back.
+        assert!(p.lane_restore_available(&ctx, 10));
+        let restored = p.restore_lane_map(&ctx, 10).expect("warm copy restorable");
+        assert_eq!(restored.len(), p.admit_blocks(10));
+        assert_eq!(p.host_blocks_in_use(), 0, "restore consumes the host copy");
+        assert!(restored.iter().all(|&b| p.refcount(b) == 1));
+        // The copy moved back: a second restore must recompute.
+        assert!(!p.lane_restore_available(&ctx, 10));
+        assert!(p.restore_lane_map(&ctx, 10).is_none());
+        let stats = p.host_stats();
+        assert_eq!(stats.demoted_blocks, 3);
+        assert_eq!(stats.restored_blocks, 3);
+        assert_eq!(stats.restored_tokens, 9); // init_ctx - 1
+        p.release_map(&restored);
+    }
+
+    #[test]
+    fn host_restore_verifies_context_tokens() {
+        let mut p = KvPager::new(12 * 4 * 10, 10, 4).with_host_tier(tiered(8));
+        let ctx: Vec<i64> = (0..10).collect();
+        p.demote_lane(&ctx, 3);
+        // Same length, different tokens: never restored.
+        let other: Vec<i64> = (50..60).collect();
+        assert!(!p.lane_restore_available(&other, 10));
+        assert!(p.restore_lane_map(&other, 10).is_none());
+        assert!(p.lane_restore_available(&ctx, 10));
+    }
+
+    #[test]
+    fn host_restore_declined_when_recompute_is_cheaper() {
+        let slow = HostTierConfig { restore_s_per_token: 1.0, ..tiered(8) };
+        let mut p = KvPager::new(12 * 4 * 10, 10, 4).with_host_tier(slow);
+        let ctx: Vec<i64> = (0..10).collect();
+        p.demote_lane(&ctx, 3);
+        assert_eq!(p.host_blocks_in_use(), 3, "demotion is unconditional");
+        // The copy is resident but restoring it would cost more than
+        // recomputing: the restore path is never claimed.
+        assert!(!p.lane_restore_available(&ctx, 10));
+        assert!(p.restore_lane_map(&ctx, 10).is_none());
+        assert_eq!(p.host_blocks_in_use(), 3, "declined restore keeps the copy");
+    }
+
+    #[test]
+    fn host_pool_bound_evicts_lru_and_refuses_oversize() {
+        let mut p = KvPager::new(12 * 4 * 10, 10, 4).with_host_tier(tiered(4));
+        let a: Vec<i64> = (0..10).collect();
+        let b: Vec<i64> = (20..30).collect();
+        p.demote_lane(&a, 3);
+        assert_eq!(p.host_blocks_in_use(), 3);
+        // B needs 3 of 4 blocks: A (the LRU entry) is evicted for it.
+        p.demote_lane(&b, 3);
+        assert_eq!(p.host_blocks_in_use(), 3);
+        assert!(!p.lane_restore_available(&a, 10), "LRU entry evicted");
+        assert!(p.lane_restore_available(&b, 10));
+        assert_eq!(p.host_stats().host_evictions, 1);
+        // A context bigger than the whole pool is never stored.
+        let huge: Vec<i64> = (0..100).collect();
+        p.demote_lane(&huge, 5);
+        assert!(!p.lane_restore_available(&huge, 100));
+        assert_eq!(p.host_blocks_in_use(), 3, "oversize demotion is a no-op");
+    }
+
+    #[test]
+    fn prefix_eviction_demotes_to_host_and_promotes_back() {
+        // 6-block pager, prefix cache + host tier on.
+        let mut p = KvPager::new(6 * 4 * 10, 10, 4)
+            .with_prefix_cache(PrefixCacheConfig::on())
+            .with_host_tier(tiered(8));
+        let prompt: Vec<i64> = (0..8).collect();
+        let (map, _, _) = p.admit_map(&prompt, 8);
+        p.register_prefix(&prompt, &map);
+        p.release_map(&map);
+        let ev = p.drain_prefix_events();
+        assert!(ev.iter().all(|e| matches!(
+            e,
+            PrefixEvent::Insert { tier: KvTier::Hbm, .. }
+        )));
+        // Growth pressure reclaims the LRU cached block — with the
+        // tier on, that is a demotion (tiered insert), not an evict.
+        let mut big: Vec<KvBlockId> = Vec::new();
+        assert!(p.try_grow_map(&mut big, 20)); // 5 blocks: one reclaimed
+        let ev = p.drain_prefix_events();
+        assert_eq!(ev.len(), 1, "{ev:?}");
+        assert!(
+            matches!(ev[0], PrefixEvent::Insert { tier: KvTier::Host, .. }),
+            "eviction must surface as a host-tier insert: {ev:?}"
+        );
+        assert_eq!(p.host_blocks_in_use(), 1);
+        p.release_map(&big);
+        // Readmitting the prompt heals the chain: the host-warm block
+        // is promoted back into HBM and shared, so the hit is full.
+        let (map2, hit, restored) = p.admit_map(&prompt, 8);
+        assert_eq!(hit, 7, "promotion restores the full shareable hit");
+        assert_eq!(restored, 4, "one promoted block = 4 restored tokens");
+        assert_eq!(p.host_blocks_in_use(), 0);
+        let ev = p.drain_prefix_events();
+        assert!(
+            ev.iter().any(|e| matches!(e, PrefixEvent::Insert { tier: KvTier::Hbm, .. })),
+            "promotion must re-announce the chain as hot: {ev:?}"
+        );
+        assert_eq!(p.host_stats().restored_blocks, 1);
+        assert_eq!(p.host_stats().restored_tokens, 4);
+        p.release_map(&map2);
+    }
+
+    #[test]
+    fn host_promotion_declined_keeps_warm_copy() {
+        let slow = HostTierConfig { restore_s_per_token: 1.0, ..tiered(8) };
+        let mut p = KvPager::new(6 * 4 * 10, 10, 4)
+            .with_prefix_cache(PrefixCacheConfig::on())
+            .with_host_tier(slow);
+        let prompt: Vec<i64> = (0..8).collect();
+        let (map, _, _) = p.admit_map(&prompt, 8);
+        p.register_prefix(&prompt, &map);
+        p.release_map(&map);
+        let mut big: Vec<KvBlockId> = Vec::new();
+        assert!(p.try_grow_map(&mut big, 24)); // reclaims both cached blocks
+        p.release_map(&big);
+        assert_eq!(p.host_blocks_in_use(), 2);
+        // Restore is modeled slower than recompute: no promotion, the
+        // warm copies stay put and the admission recomputes cold.
+        let (map2, hit, restored) = p.admit_map(&prompt, 8);
+        assert_eq!((hit, restored), (0, 0));
+        assert_eq!(p.host_blocks_in_use(), 2);
+        assert_eq!(p.host_stats().restored_blocks, 0);
+        p.release_map(&map2);
+    }
+
+    #[test]
+    fn host_demoted_shared_blocks_keep_refcounts_honest() {
+        let mut p = cached_pager().with_host_tier(tiered(16));
+        let prompt: Vec<i64> = (0..8).collect();
+        let (ma, _, _) = p.admit_map(&prompt, 8);
+        p.register_prefix(&prompt, &ma);
+        // Lane B shares the first cached block (CoW on the second).
+        let (mb, hit, _) = p.admit_map(&prompt, 8);
+        assert_eq!(hit, 7);
+        assert_eq!(p.refcount(ma[0]), 3); // cache + A + B
+        // B is preempted at context 10: demote, then release its map —
+        // the shared block must only lose B's holder.
+        let ctx_b: Vec<i64> = (0..10).collect();
+        p.demote_lane(&ctx_b, mb.len());
+        p.release_map(&mb);
+        assert_eq!(p.refcount(ma[0]), 2, "cache + A survive B's demotion");
+        // Restore builds a fresh exclusive map: it must never alias the
+        // still-cached shared block.
+        let restored = p.restore_lane_map(&ctx_b, 10).expect("restorable");
+        assert!(!restored.contains(&ma[0]), "restored blocks are exclusive");
+        assert!(restored.iter().all(|&b| p.refcount(b) == 1));
+        assert_eq!(p.refcount(ma[0]), 2);
+        p.release_map(&restored);
+        p.release_map(&ma);
+    }
+
+    #[test]
+    fn disable_host_tier_drops_pool_and_announces_evictions() {
+        let mut p = KvPager::new(6 * 4 * 10, 10, 4)
+            .with_prefix_cache(PrefixCacheConfig::on())
+            .with_host_tier(tiered(8));
+        let prompt: Vec<i64> = (0..8).collect();
+        let (map, _, _) = p.admit_map(&prompt, 8);
+        p.register_prefix(&prompt, &map);
+        p.release_map(&map);
+        let mut big: Vec<KvBlockId> = Vec::new();
+        assert!(p.try_grow_map(&mut big, 24)); // demotes both cached blocks
+        p.release_map(&big);
+        p.drain_prefix_events();
+        assert_eq!(p.host_blocks_in_use(), 2);
+        p.disable_host_tier();
+        assert!(!p.host_tier_enabled());
+        assert_eq!(p.host_blocks_in_use(), 0);
+        let ev = p.drain_prefix_events();
+        assert_eq!(ev.len(), 2);
+        assert!(ev.iter().all(|e| matches!(e, PrefixEvent::Evict { .. })), "{ev:?}");
+        // Demotions after disable are no-ops; restores are never
+        // claimed (the supports_session_restore() == false path).
+        let ctx: Vec<i64> = (0..10).collect();
+        p.demote_lane(&ctx, 3);
+        assert!(!p.lane_restore_available(&ctx, 10));
+        assert!(p.restore_lane_map(&ctx, 10).is_none());
     }
 
     // ---- release underflow guard ----
@@ -1620,7 +2384,7 @@ mod tests {
     #[should_panic(expected = "refcount underflow")]
     fn double_release_trips_debug_assertion() {
         let mut p = KvPager::new(100_000, 1000, 16);
-        let (map, _) = p.admit_map(&[1], 1);
+        let (map, _, _) = p.admit_map(&[1], 1);
         p.release_map(&map);
         p.release_map(&map); // double release: accounting bug upstream
     }
@@ -1629,7 +2393,7 @@ mod tests {
     #[test]
     fn double_release_saturates_in_release_builds() {
         let mut p = KvPager::new(100_000, 1000, 16);
-        let (map, _) = p.admit_map(&[1], 1);
+        let (map, _, _) = p.admit_map(&[1], 1);
         p.release_map(&map);
         p.release_map(&map);
         // The second release is shed: no underflow, no free-list

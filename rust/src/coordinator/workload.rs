@@ -37,7 +37,10 @@ use crate::util::stats::Summary;
 use super::backend::{Backend, SimBackend, StepModel};
 use super::lane::{plan_step, Absorbed, HoldsLane, KvState, Lane, PlannedLane, ResumeState};
 use super::router::{PoolQueues, Popped, Router, RouterPolicy, WorkerLoad};
-use super::scheduler::{KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler, SchedulerPolicy};
+use super::scheduler::{
+    HostTierConfig, HostTierStats, KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler,
+    SchedulerPolicy,
+};
 use super::{Coordinator, Request, RequestHandle, TokenEvent};
 
 /// Length distribution for prompts/outputs.
@@ -260,6 +263,12 @@ pub struct VirtualConfig {
     /// its queue head before an idle sibling may steal it. Mirrors
     /// [`super::CoordinatorConfig::spill_after_s`].
     pub spill_after_s: f64,
+    /// Host (CPU-memory) KV tier under the pager: preempted lanes and
+    /// LRU-evicted prefixes demote their blocks over the host link and
+    /// readmission restores instead of recomputing when the modeled
+    /// restore cost wins. Mirrors [`super::CoordinatorConfig::host_tier`];
+    /// only meaningful with [`KvPolicy::Paged`].
+    pub host_tier: HostTierConfig,
     /// Batched per-step latency model.
     pub step: StepModel,
 }
@@ -284,6 +293,7 @@ impl VirtualConfig {
             prefix_cache: PrefixCacheConfig::off(),
             router: RouterPolicy::RoundRobin,
             spill_after_s: super::router::DEFAULT_SPILL_AFTER_S,
+            host_tier: HostTierConfig::off(),
             step,
         }
     }
@@ -352,6 +362,17 @@ pub struct VirtualReport {
     pub shared_blocks: u64,
     /// Copy-on-write tail-block splits at admission (cumulative).
     pub cow_splits: u64,
+    /// Physical blocks demoted to the host KV tier on preemption or
+    /// prefix eviction (summed over workers; 0 with the tier off).
+    pub demoted_blocks: u64,
+    /// Host-tier blocks readmitted into device KV instead of being
+    /// recomputed (cumulative).
+    pub restored_blocks: u64,
+    /// Context tokens whose recompute was skipped via a host-tier
+    /// restore (cumulative).
+    pub restored_tokens: u64,
+    /// Per-worker host-tier capacity, blocks (0 = tier off).
+    pub host_capacity_blocks: usize,
     /// The routing policy the run used.
     pub router_policy: RouterPolicy,
     /// Peak depth of any single worker's queue (routing-balance gauge:
@@ -469,18 +490,29 @@ pub fn run_virtual_plan(
     let queues: PoolQueues<VPending> =
         PoolQueues::with_spill_after(vc.workers, vc.spill_after_s);
     let workers: Vec<VWorker> = (0..vc.workers)
-        .map(|_| VWorker {
-            backend: SimBackend::new(model, vocab),
-            scheduler: Scheduler::new(vc.policy),
-            kv: KvState::with_prefix(
+        .map(|_| {
+            let backend = SimBackend::new(model, vocab);
+            let mut kv = KvState::with_prefix(
                 vc.kv_policy,
                 vc.kv_budget_bytes,
                 vc.kv_bytes_per_token,
                 vc.prefix_cache,
-            ),
-            slots: Vec::new(),
-            batch: Vec::new(),
-            busy_until: 0.0,
+            );
+            kv.set_host_tier(vc.host_tier);
+            // Same degradation contract as the threaded worker loop: a
+            // backend that cannot reopen a session at a nonzero position
+            // cannot consume restored KV, so the tier self-disables.
+            if kv.host_tier_enabled() && !backend.supports_session_restore() {
+                kv.disable_host_tier();
+            }
+            VWorker {
+                backend,
+                scheduler: Scheduler::new(vc.policy),
+                kv,
+                slots: Vec::new(),
+                batch: Vec::new(),
+                busy_until: 0.0,
+            }
         })
         .collect();
     let kv_capacity_blocks = workers[0].kv.capacity_blocks().unwrap_or(0);
@@ -509,7 +541,11 @@ pub fn run_virtual_plan(
             .enumerate()
             .filter(|(_, w)| !w.batch.is_empty())
             .map(|(i, w)| (w.busy_until, i))
-            .min_by(|a, b| a.partial_cmp(b).expect("finite times"));
+            // total_cmp, not partial_cmp: a NaN busy_until (e.g. a
+            // poisoned StepModel term) must not panic the run or pick
+            // an arbitrary worker — NaN sorts last and the run keeps
+            // its deterministic event order.
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
 
         // Events in time order; arrivals win ties so admission sees the
         // request before the tying step's post-retirement dispatch.
@@ -643,7 +679,12 @@ pub fn run_virtual_plan(
                 continue;
             }
             let works = plan.works(&w.slots);
-            w.busy_until = now + vc.step.mixed_step_s(&works);
+            // A restored lane's first planned step also pays the host
+            // link transfer for its readmitted KV — the same term the
+            // restore-vs-recompute decision priced, so the decision and
+            // the clock agree.
+            let restore_s = vc.step.restore_s(plan.restore_tokens(&w.slots));
+            w.busy_until = now + vc.step.mixed_step_s(&works) + restore_s;
             w.batch = plan.lanes;
         }
         // Publish this iteration's prefix-index changes (prefill
@@ -663,6 +704,16 @@ pub fn run_virtual_plan(
         .workers
         .iter()
         .fold(PrefixStats::default(), |acc, w| acc.plus(&w.kv.prefix_stats()));
+    let host = st.workers.iter().fold(HostTierStats::default(), |acc, w| {
+        let s = w.kv.host_stats();
+        HostTierStats {
+            demoted_blocks: acc.demoted_blocks + s.demoted_blocks,
+            restored_blocks: acc.restored_blocks + s.restored_blocks,
+            restored_tokens: acc.restored_tokens + s.restored_tokens,
+            host_evictions: acc.host_evictions + s.host_evictions,
+        }
+    });
+    let host_capacity_blocks = st.workers[0].kv.host_capacity_blocks();
     Ok(VirtualReport {
         policy: vc.policy,
         offered_rate,
@@ -680,6 +731,10 @@ pub fn run_virtual_plan(
         prefix_hit_tokens: prefix.hit_tokens,
         shared_blocks: prefix.shared_blocks,
         cow_splits: prefix.cow_splits,
+        demoted_blocks: host.demoted_blocks,
+        restored_blocks: host.restored_blocks,
+        restored_tokens: host.restored_tokens,
+        host_capacity_blocks,
         router_policy: vc.router,
         peak_queue_depth: st.peak_queue_depth,
         worker_peak_lanes: st.worker_peak_lanes,
@@ -790,7 +845,14 @@ impl VState {
         let VPending { arrival_s, rid, request, resume } = pending;
         let worst = request.worst_case_tokens();
         let w = &mut self.workers[wi];
-        let holdings = w.kv.reserve_admitted(&request.prompt, init_ctx, worst);
+        // A readmission consults the host tier first: when the demoted
+        // copy is intact and the modeled restore beats recompute, the
+        // holdings come back with `restored` set and the lane refeeds
+        // one token instead of its whole context.
+        let holdings = match &resume {
+            Some(r) => w.kv.reserve_resumed(&request.prompt, &r.state, init_ctx, worst),
+            None => w.kv.reserve_admitted(&request.prompt, init_ctx, worst),
+        };
         // A prefix hit starts the session at the cached position — the
         // lane feeds only the uncached suffix.
         let session = w.backend.new_session_at(holdings.prefix_hit).expect("sim session");
@@ -1185,6 +1247,61 @@ mod tests {
         let on2 = run(PrefixCacheConfig::on());
         assert_eq!(on.records, on2.records);
         assert_eq!(on.wall_s, on2.wall_s);
+    }
+
+    #[test]
+    fn virtual_host_tier_restores_preempted_lanes_and_keeps_streams() {
+        // Two long-decode lanes on a pager too small for both: paged
+        // growth preempts one mid-decode. With the host tier on, the
+        // victim's blocks demote to host and its readmission restores
+        // (refeeds one token) instead of recomputing its whole context
+        // — and the streams must not change by a single token.
+        let mut sm = step_model();
+        // Make the modeled host link clearly cheaper than recompute so
+        // the restore decision (and the priced step time) both win.
+        sm.host_restore_s_per_token = 1e-8;
+        let mk_plan = || {
+            vec![
+                (0.0, Request::greedy("opt-tiny", (0..24).collect(), 40)),
+                (0.0, Request::greedy("opt-tiny", (7..31).collect(), 40)),
+            ]
+        };
+        let run = |host: HostTierConfig| -> VirtualReport {
+            let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 2, sm);
+            vc.kv_bytes_per_token = 100;
+            vc.kv_budget_bytes = 6 * 16 * 100; // 6 blocks of 16 tokens
+            vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+            vc.host_tier = host;
+            run_virtual_plan("opt-tiny", 512, 1.0, mk_plan(), &vc).unwrap()
+        };
+        let off = run(HostTierConfig::off());
+        let on = run(HostTierConfig::from_step(&sm, 16));
+        assert!(off.preemptions > 0, "scenario must force preemption");
+        assert!(on.preemptions > 0);
+        assert_eq!((off.demoted_blocks, off.restored_blocks, off.restored_tokens), (0, 0, 0));
+        assert_eq!(off.host_capacity_blocks, 0);
+        assert_eq!(on.host_capacity_blocks, 16);
+        assert!(on.demoted_blocks > 0, "preempted lane never demoted");
+        assert!(on.restored_blocks > 0, "readmission never restored");
+        assert!(on.restored_tokens > 0);
+        // Streams are bit-identical with the tier on vs off.
+        for (a, b) in off.records.iter().zip(&on.records) {
+            assert_eq!(a.tokens, b.tokens, "request {}", a.request_id);
+            assert_eq!(a.tokens.len(), 40);
+        }
+        // Skipping the recompute refeed shortens the makespan under a
+        // cheap host link.
+        assert!(
+            on.wall_s < off.wall_s,
+            "restore makespan {} !< recompute {}",
+            on.wall_s,
+            off.wall_s
+        );
+        // Reruns stay bit-identical with the tier on.
+        let on2 = run(HostTierConfig::from_step(&sm, 16));
+        assert_eq!(on.records, on2.records);
+        assert_eq!(on.wall_s, on2.wall_s);
+        assert_eq!(on.restored_tokens, on2.restored_tokens);
     }
 
     #[test]

@@ -37,6 +37,9 @@ pub struct GpuConfig {
     /// Per-sync software+launch latency, seconds (kernel launch, NCCL
     /// ring setup — the dominant term for small transfers).
     pub sync_latency: f64,
+    /// Host link bandwidth (PCIe), bytes/s — the rate at which KV pages
+    /// swapped to host DRAM stream back into device memory.
+    pub host_bw: f64,
     /// Bandwidth-utilization curve parameters (see [`GpuConfig::utilization`]).
     util_floor: f64,
     util_ceil: f64,
@@ -55,6 +58,8 @@ impl GpuConfig {
             idle_frac: 0.35,
             link_bw: 450e9, // NVLink4, per direction
             sync_latency: 12e-6,
+            host_bw: 64e9, // PCIe Gen5 x16
+
             util_floor: 0.262,
             util_ceil: 0.72,
             util_knee: 11.3e9,
@@ -71,6 +76,8 @@ impl GpuConfig {
             idle_frac: 0.30,
             link_bw: 32e9, // PCIe Gen4 x16
             sync_latency: 25e-6,
+            host_bw: 32e9, // PCIe Gen4 x16 (shares the one link)
+
             // A narrow 300 GB/s part saturates far more easily than an
             // H100: small models already keep its few SMs busy.
             util_floor: 0.45,
@@ -90,6 +97,8 @@ impl GpuConfig {
             idle_frac: 0.35,
             link_bw: 300e9,
             sync_latency: 14e-6,
+            host_bw: 32e9, // PCIe Gen4 x16
+
             util_floor: 0.262,
             util_ceil: 0.72,
             util_knee: 11.3e9,
@@ -196,6 +205,16 @@ impl GpuConfig {
             0.0
         };
         stream + kv + sync
+    }
+
+    /// Time to restore `tokens` context positions of KV from host DRAM
+    /// over the PCIe link, seconds — the GPU-side counterpart of
+    /// [`crate::coordinator::StepModel::restore_s`]. Restoring a
+    /// swapped context pays bytes/`host_bw`; recomputing it pays a
+    /// prefill pass at HBM bandwidth — the trade the KV-swap tier
+    /// prices per decision.
+    pub fn host_restore_latency(&self, model: &ModelConfig, tokens: usize) -> f64 {
+        tokens as f64 * model.kv_bytes_per_token() as f64 / self.host_bw
     }
 
     /// Blocking ring all-reduce over the GPU interconnect.
@@ -386,6 +405,26 @@ mod tests {
     fn l4_slower_than_h100() {
         let m = by_name("opt-1.3b").unwrap();
         assert!(GpuConfig::l4().decode_latency(&m, 1, 100) > GpuConfig::h100().decode_latency(&m, 1, 100));
+    }
+
+    #[test]
+    fn host_restore_beats_recompute_for_long_contexts() {
+        // Restoring a 2000-token context over PCIe must be cheaper than
+        // re-running its prefill at HBM bandwidth: the whole point of
+        // swapping KV to host instead of discarding it.
+        let g = GpuConfig::h100();
+        let m = by_name("opt-6.7b").unwrap();
+        let restore = g.host_restore_latency(&m, 2000);
+        let recompute =
+            g.mixed_step_latency(&m, 1, &[crate::coordinator::LaneWork::Prefill {
+                start: 0,
+                tokens: 2000,
+            }]);
+        assert!(restore > 0.0);
+        assert!(restore < recompute, "restore {restore} vs recompute {recompute}");
+        // And it scales linearly in tokens.
+        let r1 = g.host_restore_latency(&m, 1);
+        assert!((g.host_restore_latency(&m, 10) - 10.0 * r1).abs() < 1e-12);
     }
 
     #[test]

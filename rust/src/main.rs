@@ -10,8 +10,8 @@ use std::sync::Arc;
 use lpu::compiler::{compile, CompileOpts, ParallelMode};
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    BackendFactory, Coordinator, CoordinatorConfig, KvPolicy, PrefixCacheConfig,
-    RouterPolicy, SchedulerPolicy,
+    BackendFactory, Coordinator, CoordinatorConfig, HostTierConfig, KvPolicy,
+    PrefixCacheConfig, RouterPolicy, SchedulerPolicy, StepModel,
 };
 use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
 use lpu::isa::asm;
@@ -30,10 +30,10 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--prefix-cache on|off|on:<blocks>]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>]" },
 ];
 
 fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
@@ -50,12 +50,13 @@ fn router_arg(args: &Args) -> Result<RouterPolicy, String> {
 }
 
 /// Parse the KV-accounting flags shared by `serve` and `loadtest`:
-/// `--kv-budget-mb`, `--kv-policy`, `--prefix-cache`. Returns
-/// `(kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache)`.
+/// `--kv-budget-mb`, `--kv-policy`, `--prefix-cache`, `--kv-host-mb`.
+/// Returns `(kv_bytes_per_token, kv_budget_bytes, kv_policy,
+/// prefix_cache, host_tier)`.
 fn kv_args(
     args: &Args,
     model: &str,
-) -> Result<(u64, u64, KvPolicy, PrefixCacheConfig), String> {
+) -> Result<(u64, u64, KvPolicy, PrefixCacheConfig, HostTierConfig), String> {
     let kv_budget_mb = args.opt_u64("kv-budget-mb", 0)?;
     let kv_bytes_per_token = if kv_budget_mb == 0 {
         0
@@ -90,8 +91,37 @@ fn kv_args(
                 .into(),
         );
     }
+    let kv_host_mb = args.opt_u64("kv-host-mb", 0)?;
+    let host_tier = if kv_host_mb == 0 {
+        HostTierConfig::off()
+    } else {
+        // The host tier swaps pager blocks; under the reserve policy
+        // there are no block identities to demote. Refuse rather than
+        // silently no-op the flag.
+        let KvPolicy::Paged { block_tokens } = kv_policy else {
+            return Err(
+                "--kv-host-mb needs --kv-policy paged (the host tier swaps pager blocks)".into()
+            );
+        };
+        let m = by_name(model).ok_or_else(|| {
+            format!("--kv-host-mb needs a registry model for KV accounting; '{model}' is unknown")
+        })?;
+        let block_bytes = m.kv_bytes_per_token() * block_tokens as u64;
+        let blocks = ((kv_host_mb << 20) / block_bytes.max(1)) as usize;
+        if blocks == 0 {
+            return Err(format!(
+                "--kv-host-mb {kv_host_mb} holds less than one {block_tokens}-token KV block \
+                 for '{model}'"
+            ));
+        }
+        // Price restore vs recompute from the same step model the
+        // virtual harness clocks with, so the decision and the reported
+        // latencies agree.
+        let device = LpuConfig::by_name("asic").expect("registry device config");
+        HostTierConfig::from_step(&StepModel::from_config(&m, &device, 1), blocks)
+    };
     let kv_budget_bytes = if kv_budget_mb == 0 { u64::MAX } else { kv_budget_mb << 20 };
-    Ok((kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache))
+    Ok((kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier))
 }
 
 fn main() {
@@ -278,7 +308,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     };
     let policy = policy_arg(args)?;
     let router = router_arg(args)?;
-    let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache) =
+    let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier) =
         kv_args(args, &model)?;
     // Chunked prefill: 0 (default) = single-pass prompts; N = at most N
     // prompt tokens per fused step, interleaved with decode steps so a
@@ -294,6 +324,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         prefill_chunk,
         prefix_cache,
         router,
+        host_tier,
         ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, workers, factory);
@@ -303,8 +334,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     } else {
         format!("{prefill_chunk}-token chunked prefill")
     };
+    let host_desc = if host_tier.enabled() {
+        format!("{}-block host tier", host_tier.capacity_blocks)
+    } else {
+        "host tier off".to_string()
+    };
     println!(
-        "serving '{model}' ({backend}, {} scheduling, {} routing, {} KV, prefix cache {}, {prefill_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
+        "serving '{model}' ({backend}, {} scheduling, {} routing, {} KV, prefix cache {}, {host_desc}, {prefill_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
         policy.name(),
         router.name(),
         kv_policy.name(),
@@ -359,7 +395,7 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
     };
     let policy = policy_arg(args)?;
     let router = router_arg(args)?;
-    let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache) =
+    let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier) =
         kv_args(args, &model)?;
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 4)?,
@@ -370,6 +406,7 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         prefill_chunk: args.opt_usize("prefill-chunk", 0)?,
         prefix_cache,
         router,
+        host_tier,
         ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, args.opt_usize("workers", 2)?, factory);

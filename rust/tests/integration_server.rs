@@ -60,8 +60,10 @@ fn sim_backend_parallel_clients_and_throughput_counter() {
 /// Schema pin for the `metrics` op (the README documents this table):
 /// run load through TWO pools and assert every documented gauge —
 /// aggregate and per-pool, including the per-worker routing-balance
-/// gauges — is present and non-null, so the documented schema cannot
-/// rot silently.
+/// gauges — is present and numeric, so the documented schema cannot
+/// rot silently. Keys that are nullable by contract (pager capacity
+/// and utilization under the unbounded reserve policy) are pinned to
+/// export JSON null rather than a sentinel value.
 #[test]
 fn metrics_op_schema_is_complete_across_pools() {
     use lpu::util::json::Json;
@@ -96,8 +98,6 @@ fn metrics_op_schema_is_complete_across_pools() {
         "rejected",
         "preemptions",
         "peak_kv_blocks",
-        "kv_capacity_blocks",
-        "kv_block_utilization",
         "tokens_out",
         "batch_steps",
         "mean_batch_size",
@@ -106,6 +106,10 @@ fn metrics_op_schema_is_complete_across_pools() {
         "prefix_hit_tokens",
         "shared_blocks",
         "cow_splits",
+        "kv_demoted_blocks",
+        "kv_restored_blocks",
+        "kv_restored_tokens",
+        "kv_host_capacity_blocks",
         "mean_queue_delay_s",
         "mean_ttft_s",
         "ttft_p50_s",
@@ -124,6 +128,15 @@ fn metrics_op_schema_is_complete_across_pools() {
             "aggregate metrics field '{field}' missing or non-numeric"
         );
     }
+    // Nullable-by-contract: this coordinator runs the unbounded reserve
+    // policy, so pager capacity and utilization export JSON null — not
+    // the usize::MAX sentinel a scraper would graph as a real value.
+    for field in ["kv_capacity_blocks", "kv_block_utilization"] {
+        assert!(
+            matches!(*m.get(field), Json::Null),
+            "'{field}' must export null (not a sentinel) when the pager is unbounded"
+        );
+    }
     assert_eq!(m.get("type").as_str(), Some("metrics"));
     assert!(m.get("policy").as_str().is_some());
     assert_eq!(m.get("completed").as_u64(), Some(6));
@@ -136,6 +149,8 @@ fn metrics_op_schema_is_complete_across_pools() {
         "prefix_hit_tokens",
         "shared_blocks",
         "cow_splits",
+        "demoted_blocks",
+        "restored_blocks",
         "queue_depth",
     ];
     for (model, n_workers) in [("opt-tiny", 2usize), ("opt-mini", 3)] {

@@ -16,8 +16,8 @@
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
     run_open_loop, run_virtual, run_virtual_plan, BackendFactory, Coordinator,
-    CoordinatorConfig, KvPolicy, LenDist, PrefixCacheConfig, Request, RouterPolicy,
-    SchedulerPolicy, StepModel, VirtualConfig, Workload,
+    CoordinatorConfig, HostTierConfig, KvPolicy, LenDist, PrefixCacheConfig, Request,
+    RouterPolicy, SchedulerPolicy, StepModel, VirtualConfig, Workload,
 };
 use lpu::model::by_name;
 use lpu::util::proptest::quick;
@@ -462,6 +462,75 @@ fn prop_prefix_cache_streams_bit_identical() {
                 return Err(format!(
                     "request {} stream changed by the prefix cache (block {block_tokens})",
                     a.request_id
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property (host KV tier): token streams are bit-identical with the
+/// host tier on vs off — across random paged configs with tight
+/// budgets (so preemption genuinely demotes blocks), random host pool
+/// capacities, and optionally chunked prefill or the prefix cache in
+/// play — and rejection decisions do not change. Restore replays the
+/// exact positions recompute would refeed, so greedy streams cannot
+/// diverge no matter which side of the restore-vs-recompute decision
+/// each readmission lands on.
+#[test]
+fn prop_kv_tier_streams_bit_identical() {
+    quick("kv-tier-streams", |rng| {
+        let policy = *rng.choose(&SchedulerPolicy::all());
+        let workers = rng.range(1, 3);
+        let max_active = rng.range(2, 10);
+        let block_tokens = rng.range(2, 17);
+        let mut base = VirtualConfig::new(policy, workers, max_active, step_model());
+        base.max_batch = rng.range(0, max_active + 1);
+        base.kv_bytes_per_token = 100;
+        base.kv_policy = KvPolicy::Paged { block_tokens };
+        // Tight-but-feasible budget (every request fits alone; see
+        // prop_prefix_cache_streams_bit_identical) so preemption fires
+        // and readmissions actually consult the host tier.
+        base.kv_budget_bytes = rng.range_u64(10_000, 60_000);
+        if rng.bool(0.3) {
+            base.prefill_chunk = rng.range(1, 33);
+        }
+        if rng.bool(0.3) {
+            base.prefix_cache = PrefixCacheConfig::on();
+        }
+        let wl = Workload {
+            model: "opt-tiny".into(),
+            rate: rng.range_f64(200.0, 20_000.0),
+            n_requests: rng.range(2, 14),
+            prompt_len: LenDist::Uniform(1, rng.range(2, 16)),
+            output_len: LenDist::Uniform(1, rng.range(2, 24)),
+            vocab: 128,
+            seed: rng.next_u64(),
+        };
+        let plan: Vec<(f64, Request)> = wl
+            .generate()
+            .into_iter()
+            .map(|(at, req)| (at.as_secs_f64(), req))
+            .collect();
+        let off = run_virtual_plan(&wl.model, wl.vocab, wl.rate, plan.clone(), &base)?;
+        let mut on_vc = base.clone();
+        // Cheap restore term so the cost model prefers restore when a
+        // demoted lane comes back; streams must not care either way.
+        let mut sm = step_model();
+        sm.host_restore_s_per_token = 1e-8;
+        on_vc.host_tier = HostTierConfig::from_step(&sm, rng.range(1, 48));
+        let on = run_virtual_plan(&wl.model, wl.vocab, wl.rate, plan, &on_vc)?;
+        if off.rejected != on.rejected {
+            return Err(format!(
+                "rejection count changed by the host tier: {} vs {}",
+                off.rejected, on.rejected
+            ));
+        }
+        for (a, b) in off.records.iter().zip(&on.records) {
+            if a.tokens != b.tokens {
+                return Err(format!(
+                    "request {} stream changed by the host tier (block {block_tokens}, cap {})",
+                    a.request_id, on_vc.host_tier.capacity_blocks
                 ));
             }
         }

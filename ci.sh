@@ -45,9 +45,11 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 step "serving bench (smoke) -> BENCH_serving.json"
 # Writes machine-readable results (tok/s, peak active, TTFT/TPOT p99 per
 # cell, both KV policies, the chunked-prefill interference cell, the
-# shared-prefix cache cell, the affinity-routing cell, and the
-# oversubscribed host-KV-tier swap cell — all sections run in smoke
-# mode, assertions included) to ../BENCH_serving.json
+# shared-prefix cache cell, the affinity-routing cell, the
+# oversubscribed host-KV-tier swap cell, and the fault-recovery cell —
+# worker killed mid-run, 100% completion, zero leaked KV blocks,
+# bit-identical streams asserted on both paths — all sections run in
+# smoke mode, assertions included) to ../BENCH_serving.json
 # so the perf trajectory is tracked in-repo. This fast-mode output IS
 # the committed baseline (deterministic per seed; the "fast" field
 # labels the mode — compare like with like). A full sweep writes the
@@ -67,9 +69,10 @@ step "bench JSON sanity (no null fields survive the benches)"
 # run must replace every one of them with measured values — a null
 # surviving here means the emitter and the placeholder schema drifted,
 # or a summary field was never computed. The whole-file grep covers
-# every section, including the kv_tier swap cell and its summary (the
-# nullable metrics-op gauges are a server-side contract; bench JSON
-# never emits null). Check the files the benches actually wrote
+# every section, including the kv_tier swap cell and the fault_recovery
+# cell and their summaries (the nullable metrics-op gauges are a
+# server-side contract; bench JSON never emits null). Check the files
+# the benches actually wrote
 # (LPU_BENCH_JSON / LPU_BENCH_SCALING_JSON redirect them).
 for bench_json in "${LPU_BENCH_JSON:-../BENCH_serving.json}" \
                   "${LPU_BENCH_SCALING_JSON:-../BENCH_scaling.json}"; do

@@ -20,7 +20,13 @@
 //!   resume-after-preemption gap and wall time strictly below the
 //!   recompute path at the same budget, bit-identical streams asserted
 //!   on both the virtual and threaded paths, and the tier self-disables
-//!   on a backend without session-restore support.
+//!   on a backend without session-restore support;
+//! * **fault recovery**: worker 0 killed mid-run under a deterministic
+//!   `--fault-plan`-style spec (crash + 1% transient faults): every
+//!   request still completes via failover + bounded retry, streams stay
+//!   bit-identical to the fault-free run on both paths, the pager ends
+//!   the run fully free, and the same seed reproduces the identical
+//!   recovery decisions across reruns.
 //!
 //! Every number here is a pure function of (seed, config): rerunning the
 //! bench on an unchanged tree prints bit-identical tables, so diffs in
@@ -33,7 +39,7 @@
 
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    run_virtual, run_virtual_plan, BackendFactory, Coordinator, CoordinatorConfig,
+    run_virtual, run_virtual_plan, BackendFactory, Coordinator, CoordinatorConfig, FaultPlan,
     HostTierConfig, KvPolicy, LenDist, PrefixCacheConfig, Request, RouterPolicy,
     SchedulerPolicy, StepModel, VirtualConfig, VirtualReport, Workload,
 };
@@ -921,6 +927,148 @@ fn main() {
         "tier must self-disable without session-restore support"
     );
 
+    // ---- fault-recovery cell: kill worker 0 mid-run under a combined
+    // transient + crash plan (`--fault-plan`-style spec) on a paged
+    // 2-worker pool. Acceptance: 100% of requests still complete, the
+    // end-of-run pager is fully free (no leaked KV blocks), every
+    // stream is bit-identical to the fault-free run on BOTH the virtual
+    // and threaded paths, and the same seed reproduces the identical
+    // recovery decisions (failover targets, restore/recompute split,
+    // retry counts) across reruns. Runs in smoke mode too (cheap; the
+    // assertions below are the tentpole acceptance).
+    let n_fault = if fast { 10 } else { 24 };
+    let fault_out = 48usize;
+    let fault_budget_blocks = 48u64;
+    let fault_budget = fault_budget_blocks * 16 * model.kv_bytes_per_token();
+    let fault_spec = "seed=7,transient=0.01,retries=1000000,backoff=0.000001,crash=0@8";
+    let mk_fault_plan = || -> Vec<(f64, Request)> {
+        (0..n_fault)
+            .map(|i| {
+                let plen = 8 + (i * 5) % 24;
+                let prompt: Vec<i64> =
+                    (0..plen).map(|t| ((t * 17 + i * 37) % 512) as i64).collect();
+                (0.002 * i as f64, Request::greedy("opt-1.3b", prompt, fault_out))
+            })
+            .collect()
+    };
+    let run_fault = |fp: FaultPlan| -> VirtualReport {
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 16, step);
+        vc.max_batch = 8;
+        vc.kv_bytes_per_token = model.kv_bytes_per_token();
+        vc.kv_budget_bytes = fault_budget;
+        vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+        vc.faults = fp;
+        run_virtual_plan("opt-1.3b", 512, 1.0, mk_fault_plan(), &vc).expect("virtual run")
+    };
+    let fault_clean = run_fault(FaultPlan::default());
+    let fault_on = run_fault(FaultPlan::parse(fault_spec).expect("fault spec"));
+    let fault_on2 = run_fault(FaultPlan::parse(fault_spec).expect("fault spec"));
+    assert_eq!((fault_clean.worker_crashes, fault_clean.failed), (0, 0));
+    assert_eq!(fault_on.worker_crashes, 1, "the crash must fire");
+    assert!(fault_on.failovers >= 1, "the crash must salvage at least one lane");
+    assert_eq!(
+        fault_on.failovers,
+        fault_on.lanes_restored_on_failover + fault_on.lanes_recomputed_on_failover,
+        "every salvaged lane is either restored or recomputed"
+    );
+    // 100% completion despite the dead worker: nothing fails, nothing
+    // is rejected, and the pager ends the run fully free on both sides.
+    assert_eq!((fault_on.failed, fault_on.rejected), (0, 0));
+    assert_eq!(fault_clean.end_kv_blocks_in_use, 0);
+    assert_eq!(fault_on.end_kv_blocks_in_use, 0, "the crash leaked KV blocks");
+    // Faults move *when*, never *which*: streams bit-identical to the
+    // fault-free run.
+    for (a, b) in fault_clean.records.iter().zip(&fault_on.records) {
+        assert_eq!(a.tokens, b.tokens, "faults changed stream {}", a.request_id);
+        assert_eq!(a.tokens.len(), fault_out);
+    }
+    // Same seed → identical recovery decisions across reruns.
+    assert_eq!(fault_on.records, fault_on2.records, "bit-identical rerun (faults)");
+    assert_eq!(fault_on.wall_s, fault_on2.wall_s);
+    assert_eq!(
+        (fault_on.failovers, fault_on.lanes_restored_on_failover, fault_on.retries),
+        (fault_on2.failovers, fault_on2.lanes_restored_on_failover, fault_on2.retries),
+        "recovery decisions not reproducible"
+    );
+    let mut ft = Table::new(
+        format!(
+            "fault recovery: opt-1.3b, 2 workers, {n_fault} requests, worker 0 killed at \
+             step 8 + 1% transient faults ({fault_budget_blocks}-block budget each)"
+        ),
+        &["fault plan", "crashes", "failovers", "restored/recomputed", "retries", "wall s"],
+    );
+    for (label, r) in [("off", &fault_clean), ("on", &fault_on)] {
+        ft.row(&[
+            label.to_string(),
+            r.worker_crashes.to_string(),
+            r.failovers.to_string(),
+            format!("{}/{}", r.lanes_restored_on_failover, r.lanes_recomputed_on_failover),
+            r.retries.to_string(),
+            format!("{:.4}", r.wall_s),
+        ]);
+        cells.push(obj(vec![
+            ("section", "fault_recovery".into()),
+            ("fault_plan", if label == "on" { fault_spec.into() } else { "off".into() }),
+            ("workers", 2.into()),
+            ("n_requests", n_fault.into()),
+            ("completed", (n_fault - r.failed).into()),
+            ("worker_crashes", r.worker_crashes.into()),
+            ("failovers", r.failovers.into()),
+            ("lanes_restored_on_failover", r.lanes_restored_on_failover.into()),
+            ("lanes_recomputed_on_failover", r.lanes_recomputed_on_failover.into()),
+            ("faults_injected", r.faults_injected.into()),
+            ("retries", r.retries.into()),
+            ("end_kv_blocks_in_use", r.end_kv_blocks_in_use.into()),
+            ("tok_s", r.tokens_per_s.into()),
+            ("wall_s", r.wall_s.into()),
+        ]));
+    }
+    ft.note("all requests complete, streams bit-identical fault-on vs off, pager ends free");
+    ft.note("same seed reproduces the identical failover and restore/recompute decisions");
+    ft.print();
+
+    // Threaded half of the fault acceptance: the live coordinator under
+    // the same plan completes every request with the same streams as
+    // its own fault-free run, counts exactly one crash, and leaks
+    // nothing (errors stay zero).
+    let run_threaded_fault = |fp: FaultPlan| {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 16,
+            policy: SchedulerPolicy::RoundRobin,
+            kv_bytes_per_token: model.kv_bytes_per_token(),
+            kv_budget_bytes: fault_budget,
+            kv_policy: KvPolicy::Paged { block_tokens: 16 },
+            faults: fp,
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-1.3b", 2, BackendFactory::sim("opt-1.3b", 512));
+        let handles: Vec<_> = mk_fault_plan()
+            .into_iter()
+            .map(|(_, r)| c.submit(r).expect("submit"))
+            .collect();
+        let streams: Vec<Vec<i64>> =
+            handles.into_iter().map(|h| h.wait().expect("fault request")).collect();
+        let s = c.metrics.snapshot();
+        c.shutdown();
+        (streams, s)
+    };
+    let (tf_clean, tf_clean_snap) = run_threaded_fault(FaultPlan::default());
+    let (tf_on, tf_snap) = run_threaded_fault(FaultPlan::parse(fault_spec).expect("fault spec"));
+    assert_eq!(tf_clean_snap.worker_crashes, 0);
+    assert_eq!(tf_on, tf_clean, "threaded streams changed by the fault plan");
+    assert_eq!(tf_snap.worker_crashes, 1);
+    assert_eq!(tf_snap.errors, 0, "no request may fail under failover + retry");
+    assert_eq!(tf_snap.completed, n_fault as u64);
+    assert!(tf_snap.failovers >= 1);
+    assert_eq!(
+        tf_snap.failovers,
+        tf_snap.lanes_restored_on_failover + tf_snap.lanes_recomputed_on_failover
+    );
+    // And the two paths agree with each other (lane-core invariant).
+    for (i, rec) in fault_on.records.iter().enumerate() {
+        assert_eq!(rec.tokens, tf_on[i], "virtual/threaded divergence on fault stream {i}");
+    }
+
     // ---- machine-readable results ----
     let out_path = std::env::var("LPU_BENCH_JSON")
         .unwrap_or_else(|_| "../BENCH_serving.json".to_string());
@@ -988,6 +1136,27 @@ fn main() {
                 ("resume_gap_ratio", swap_gap_ratio.into()),
                 ("recompute_wall_s", swap_off.wall_s.into()),
                 ("restore_wall_s", swap_on.wall_s.into()),
+            ]),
+        ),
+        (
+            "fault_recovery_summary",
+            obj(vec![
+                ("fault_plan", fault_spec.into()),
+                ("workers", 2.into()),
+                ("n_requests", n_fault.into()),
+                ("completed", (n_fault - fault_on.failed).into()),
+                ("worker_crashes", fault_on.worker_crashes.into()),
+                ("failovers", fault_on.failovers.into()),
+                ("lanes_restored_on_failover", fault_on.lanes_restored_on_failover.into()),
+                (
+                    "lanes_recomputed_on_failover",
+                    fault_on.lanes_recomputed_on_failover.into(),
+                ),
+                ("faults_injected", fault_on.faults_injected.into()),
+                ("retries", fault_on.retries.into()),
+                ("end_kv_blocks_in_use", fault_on.end_kv_blocks_in_use.into()),
+                ("clean_wall_s", fault_clean.wall_s.into()),
+                ("faulted_wall_s", fault_on.wall_s.into()),
             ]),
         ),
         (

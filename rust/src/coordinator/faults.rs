@@ -1,0 +1,374 @@
+//! Deterministic fault injection for the serving stack: the seeded
+//! [`FaultPlan`] and the error taxonomy ([`FaultKind`]) the recovery
+//! machinery classifies against.
+//!
+//! A fleet's defining property is that workers fail mid-stream, and a
+//! recovery path that can only be exercised by real hardware falling
+//! over can never be tested. This module makes failure a *pure function
+//! of the plan*: every injection decision is keyed on deterministic
+//! progress indices — a worker's fused-step count and a lane's request
+//! id — never on wall time, so the threaded worker loop and the
+//! virtual-time harness consult the same plan and reach the same
+//! decisions, and the same seed replays the same crash, the same
+//! transient faults, and the same recovery placements run after run.
+//!
+//! The plan injects three failure shapes:
+//!
+//! * **Transient step errors** (`transient=RATE`): a planned lane's
+//!   share of a fused step errors before it is fed (the feed never
+//!   happens, so the backend session does not advance and an in-place
+//!   retry re-feeds the identical span). Recovery: bounded per-request
+//!   retries with exponential backoff; exhaustion is a visible failure,
+//!   never a hang.
+//! * **Whole-worker crashes** (`crash=WORKER@STEP`): the worker dies
+//!   when its fused-step count reaches `STEP`. Recovery: its in-flight
+//!   lanes release all KV through the usual choke point and fail over
+//!   to healthy siblings as resumable jobs; its queue is marked dead
+//!   (stealable immediately) and the [`super::router::Router`] health
+//!   mask excludes it from steering.
+//! * **Slow-worker degradation** (`slow=WORKERxFACTOR`): the worker's
+//!   fused steps take `FACTOR`× their modeled/measured time — the
+//!   degraded-but-alive node whose traffic the load-aware policies
+//!   route around.
+//!
+//! Because token streams are a pure function of (model, prompt, sampler
+//! seed) — scheduling only moves *when* tokens happen, never *which* —
+//! every request that survives recovery emits a stream bit-identical to
+//! the fault-free run. The fault-streams proptests and the
+//! `fault_recovery` bench cell pin exactly that.
+
+use crate::err;
+use crate::util::error::Result;
+
+/// Default per-request in-place retry budget for transient step faults.
+pub const DEFAULT_RETRY_BUDGET: u32 = 3;
+
+/// Default base of the exponential retry backoff, seconds (doubles per
+/// attempt: 1 ms, 2 ms, 4 ms, ...). Virtual seconds in the harness,
+/// wall seconds on the threaded path.
+pub const DEFAULT_BACKOFF_BASE_S: f64 = 0.001;
+
+/// The two-point error taxonomy recovery classifies every lane error
+/// into — injected or organic (a real [`super::backend::Backend`]
+/// refusing a step).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worth retrying in place: the step itself failed, not the lane's
+    /// state. Retried under the bounded budget with backoff.
+    Transient,
+    /// The lane cannot make progress (poisoned session, refused
+    /// restore): released through the KV choke point and failed
+    /// visibly.
+    Fatal,
+}
+
+impl FaultKind {
+    /// Classify a backend error message. Errors carrying the
+    /// "transient" marker — the plan's injected step faults — retry;
+    /// everything else (e.g. the sim's position faults, a foreign
+    /// session, a refused restore) is state corruption and fatal.
+    pub fn classify(message: &str) -> FaultKind {
+        if message.contains("transient") {
+            FaultKind::Transient
+        } else {
+            FaultKind::Fatal
+        }
+    }
+}
+
+/// A whole-worker crash point: the worker dies when its fused-step
+/// count reaches `at_step`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrashSpec {
+    /// Worker index that crashes.
+    pub worker: usize,
+    /// Fused-step count (per that worker) at which it dies.
+    pub at_step: u64,
+}
+
+/// A slow-worker degradation: every fused step on `worker` takes
+/// `factor`× its normal time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlowSpec {
+    /// Worker index that degrades.
+    pub worker: usize,
+    /// Latency multiplier (>= 1 is a slowdown; values below 1 are
+    /// clamped to 1 at query time).
+    pub factor: f64,
+}
+
+/// A seeded, deterministic fault-injection plan, shared verbatim by the
+/// threaded worker loop and the virtual harness. Parsed from the
+/// `--fault-plan` CLI spec; see [`FaultPlan::parse`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the transient-fault hash (and nothing else: crash and
+    /// slow points are explicit, not sampled).
+    pub seed: u64,
+    /// Per (worker, step, lane) probability that the lane's share of
+    /// that fused step errors transiently. 0 disables.
+    pub transient_rate: f64,
+    /// Max in-place retries per request before the failure is surfaced.
+    pub retry_budget: u32,
+    /// Base of the exponential backoff, seconds (doubles per attempt).
+    pub backoff_base_s: f64,
+    /// At most one whole-worker crash per plan.
+    pub crash: Option<CrashSpec>,
+    /// At most one degraded worker per plan.
+    pub slow: Option<SlowSpec>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            transient_rate: 0.0,
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            backoff_base_s: DEFAULT_BACKOFF_BASE_S,
+            crash: None,
+            slow: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `--fault-plan` spec: comma-separated `key=value` fields,
+    /// any subset of
+    ///
+    /// ```text
+    /// seed=U64            transient-fault hash seed        (default 0)
+    /// transient=RATE      per-lane-step fault probability  (default 0)
+    /// retries=N           per-request retry budget         (default 3)
+    /// backoff=SECONDS     backoff base, doubles per try    (default 0.001)
+    /// crash=WORKER@STEP   kill worker at its fused step count
+    /// slow=WORKERxFACTOR  multiply a worker's step latency
+    /// ```
+    ///
+    /// e.g. `seed=7,transient=0.01,crash=1@40,slow=2x3.0`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for field in spec.split(',').map(str::trim).filter(|f| !f.is_empty()) {
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| err!("fault-plan field `{field}` is not key=value"))?;
+            match key {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| err!("fault-plan seed `{value}` is not a u64"))?;
+                }
+                "transient" => {
+                    let rate: f64 = value
+                        .parse()
+                        .map_err(|_| err!("fault-plan transient rate `{value}`"))?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(err!("fault-plan transient rate {rate} not in [0, 1]"));
+                    }
+                    plan.transient_rate = rate;
+                }
+                "retries" => {
+                    plan.retry_budget = value
+                        .parse()
+                        .map_err(|_| err!("fault-plan retries `{value}` is not a u32"))?;
+                }
+                "backoff" => {
+                    let base: f64 = value
+                        .parse()
+                        .map_err(|_| err!("fault-plan backoff `{value}`"))?;
+                    if !base.is_finite() || base < 0.0 {
+                        return Err(err!("fault-plan backoff {base} must be finite and >= 0"));
+                    }
+                    plan.backoff_base_s = base;
+                }
+                "crash" => {
+                    let (w, s) = value
+                        .split_once('@')
+                        .ok_or_else(|| err!("fault-plan crash `{value}` is not WORKER@STEP"))?;
+                    plan.crash = Some(CrashSpec {
+                        worker: w
+                            .parse()
+                            .map_err(|_| err!("fault-plan crash worker `{w}`"))?,
+                        at_step: s
+                            .parse()
+                            .map_err(|_| err!("fault-plan crash step `{s}`"))?,
+                    });
+                }
+                "slow" => {
+                    let (w, f) = value
+                        .split_once('x')
+                        .ok_or_else(|| err!("fault-plan slow `{value}` is not WORKERxFACTOR"))?;
+                    let factor: f64 =
+                        f.parse().map_err(|_| err!("fault-plan slow factor `{f}`"))?;
+                    if !factor.is_finite() || factor <= 0.0 {
+                        return Err(err!("fault-plan slow factor {factor} must be positive"));
+                    }
+                    plan.slow = Some(SlowSpec {
+                        worker: w.parse().map_err(|_| err!("fault-plan slow worker `{w}`"))?,
+                        factor,
+                    });
+                }
+                other => return Err(err!("unknown fault-plan field `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Whether the plan can inject anything at all (a no-op plan lets
+    /// callers skip the fault bookkeeping entirely).
+    pub fn is_active(&self) -> bool {
+        self.transient_rate > 0.0 || self.crash.is_some() || self.slow.is_some()
+    }
+
+    /// Whether the lane serving `request_id` errors transiently on
+    /// `worker`'s fused step number `step`. Pure in its arguments: both
+    /// drivers ask with their own progress counters and a rerun with
+    /// the same seed asks the same questions and gets the same answers.
+    pub fn transient_at(&self, worker: usize, step: u64, request_id: u64) -> bool {
+        if self.transient_rate <= 0.0 {
+            return false;
+        }
+        if self.transient_rate >= 1.0 {
+            return true;
+        }
+        let h = mix(self.seed ^ mix((worker as u64) << 32 ^ step) ^ mix(request_id));
+        ((h >> 11) as f64 / (1u64 << 53) as f64) < self.transient_rate
+    }
+
+    /// Whether `worker` is (past) its crash point at fused step `step`.
+    /// `>=`, not `==`: a worker that idles across its exact crash step
+    /// still dies the next time it would do work.
+    pub fn crashes_at(&self, worker: usize, step: u64) -> bool {
+        self.crash.map_or(false, |c| c.worker == worker && step >= c.at_step)
+    }
+
+    /// Latency multiplier for `worker`'s fused steps (1.0 = healthy).
+    pub fn slow_factor(&self, worker: usize) -> f64 {
+        match self.slow {
+            Some(s) if s.worker == worker => s.factor.max(1.0),
+            _ => 1.0,
+        }
+    }
+
+    /// Backoff before retry number `attempt` (1-based), seconds:
+    /// `base × 2^(attempt-1)`, exponent capped so a misconfigured
+    /// budget cannot overflow into a multi-hour sleep.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        self.backoff_base_s * f64::from(1u32 << attempt.saturating_sub(1).min(16))
+    }
+
+    /// The injected transient error for `worker`'s step `step` — the
+    /// message carries the marker [`FaultKind::classify`] keys on.
+    pub fn transient_error(&self, worker: usize, step: u64) -> crate::util::error::Error {
+        err!("transient fault injected on worker {worker} at step {step}")
+    }
+}
+
+/// splitmix64 finalizer: the stateless hash behind
+/// [`FaultPlan::transient_at`]. Self-contained so the decision function
+/// can never drift with an RNG implementation.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec_roundtrips_fields() {
+        let p = FaultPlan::parse("seed=7,transient=0.25,retries=5,backoff=0.002,crash=1@40,slow=2x3.0")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.transient_rate, 0.25);
+        assert_eq!(p.retry_budget, 5);
+        assert_eq!(p.backoff_base_s, 0.002);
+        assert_eq!(p.crash, Some(CrashSpec { worker: 1, at_step: 40 }));
+        assert_eq!(p.slow, Some(SlowSpec { worker: 2, factor: 3.0 }));
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn parse_empty_spec_is_the_inactive_default() {
+        let p = FaultPlan::parse("").unwrap();
+        assert_eq!(p, FaultPlan::default());
+        assert!(!p.is_active());
+        assert!(!p.transient_at(0, 0, 0));
+        assert!(!p.crashes_at(0, 1_000_000));
+        assert_eq!(p.slow_factor(3), 1.0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_fields() {
+        for bad in [
+            "bogus=1",
+            "transient=1.5",
+            "transient=-0.1",
+            "crash=1",
+            "crash=x@2",
+            "slow=1",
+            "slow=1x0",
+            "backoff=-1",
+            "seed",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec `{bad}` must be refused");
+        }
+    }
+
+    #[test]
+    fn transient_decisions_are_deterministic_and_rate_bounded() {
+        let p = FaultPlan { transient_rate: 0.2, seed: 42, ..FaultPlan::default() };
+        let q = FaultPlan { transient_rate: 0.2, seed: 42, ..FaultPlan::default() };
+        let mut hits = 0usize;
+        let trials = 4000usize;
+        for i in 0..trials {
+            let (w, s, r) = (i % 4, (i / 4) as u64, (i * 31) as u64);
+            assert_eq!(p.transient_at(w, s, r), q.transient_at(w, s, r), "same seed, same answer");
+            if p.transient_at(w, s, r) {
+                hits += 1;
+            }
+        }
+        let observed = hits as f64 / trials as f64;
+        assert!((0.1..0.3).contains(&observed), "rate 0.2 observed {observed}");
+        // A different seed answers differently somewhere.
+        let r = FaultPlan { seed: 43, ..p.clone() };
+        assert!((0..trials).any(|i| {
+            let (w, s, rid) = (i % 4, (i / 4) as u64, (i * 31) as u64);
+            p.transient_at(w, s, rid) != r.transient_at(w, s, rid)
+        }));
+        // Rate extremes.
+        let none = FaultPlan::default();
+        let all = FaultPlan { transient_rate: 1.0, ..FaultPlan::default() };
+        assert!(!none.transient_at(0, 0, 0));
+        assert!(all.transient_at(0, 0, 0));
+    }
+
+    #[test]
+    fn crash_point_is_sticky_past_its_step() {
+        let p = FaultPlan::parse("crash=2@10").unwrap();
+        assert!(!p.crashes_at(2, 9));
+        assert!(p.crashes_at(2, 10));
+        assert!(p.crashes_at(2, 11), "an idle worker still dies at its next step");
+        assert!(!p.crashes_at(1, 10), "only the named worker crashes");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = FaultPlan { backoff_base_s: 0.001, ..FaultPlan::default() };
+        assert_eq!(p.backoff_s(1), 0.001);
+        assert_eq!(p.backoff_s(2), 0.002);
+        assert_eq!(p.backoff_s(3), 0.004);
+        assert!(p.backoff_s(10_000) <= 0.001 * 65_536.0 + 1e-12, "exponent capped");
+    }
+
+    #[test]
+    fn taxonomy_classifies_injected_vs_organic_errors() {
+        let p = FaultPlan::default();
+        let injected = format!("{}", p.transient_error(1, 7));
+        assert_eq!(FaultKind::classify(&injected), FaultKind::Transient);
+        assert_eq!(FaultKind::classify("injected fault at position 3"), FaultKind::Fatal);
+        assert_eq!(FaultKind::classify("foreign session type"), FaultKind::Fatal);
+    }
+}

@@ -140,6 +140,12 @@ pub struct Lane {
     kv_reserved: u64,
     /// Paged policy: the lane's logical→physical block map.
     kv_blocks: Vec<KvBlockId>,
+    /// Transient-fault retries consumed so far this admission (the
+    /// bounded in-place retry budget both drivers enforce; reset by a
+    /// failover readmission — a fresh worker gets a fresh budget, and
+    /// termination still holds because a plan crashes each worker at
+    /// most once).
+    retries: u32,
 }
 
 impl Lane {
@@ -174,6 +180,7 @@ impl Lane {
             pending_restore: holdings.restored,
             kv_reserved: holdings.bytes,
             kv_blocks: holdings.blocks,
+            retries: 0,
         }
     }
 
@@ -324,6 +331,20 @@ impl Lane {
             None
         };
         Absorbed::Token { token, finished }
+    }
+
+    /// Consume one unit of the transient-retry budget and return the
+    /// attempt number just spent (1-based). The caller compares against
+    /// the plan's budget and prices the backoff; the counter lives here
+    /// so both drivers share one bookkeeping.
+    pub fn note_retry(&mut self) -> u32 {
+        self.retries += 1;
+        self.retries
+    }
+
+    /// Transient retries consumed so far this admission.
+    pub fn retries(&self) -> u32 {
+        self.retries
     }
 
     /// Retire the lane: yields the complete token stream.

@@ -125,6 +125,25 @@ pub struct Metrics {
     kv_restored_tokens: AtomicU64,
     /// Per-worker host-pool capacity, blocks (0 = tier off).
     kv_host_capacity_blocks: AtomicU64,
+    /// Faults injected by the active [`super::faults::FaultPlan`]
+    /// (transient step errors + worker crashes).
+    faults_injected: AtomicU64,
+    /// In-place retries of transiently-failed lane steps.
+    retries: AtomicU64,
+    /// In-flight lanes salvaged off a crashed worker onto siblings.
+    failovers: AtomicU64,
+    /// Failed-over lanes readmitted from prefix-cache / host-tier state
+    /// (restore beat recompute).
+    lanes_restored_on_failover: AtomicU64,
+    /// Failed-over lanes readmitted via full recompute.
+    lanes_recomputed_on_failover: AtomicU64,
+    /// Whole-worker crashes executed by the fault plan.
+    worker_crashes: AtomicU64,
+    /// Requests shed at admission because their deadline had already
+    /// passed while queued.
+    shed_expired: AtomicU64,
+    /// Requests shed by the preemption-livelock guard.
+    shed_livelock: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -170,6 +189,22 @@ pub struct Snapshot {
     pub kv_restored_tokens: u64,
     /// Per-worker host-pool capacity in blocks (0 = tier off).
     pub kv_host_capacity_blocks: u64,
+    /// Faults injected by the active fault plan (cumulative).
+    pub faults_injected: u64,
+    /// In-place retries of transiently-failed lane steps (cumulative).
+    pub retries: u64,
+    /// Lanes salvaged off crashed workers onto siblings (cumulative).
+    pub failovers: u64,
+    /// Failed-over lanes readmitted from cached/host state.
+    pub lanes_restored_on_failover: u64,
+    /// Failed-over lanes readmitted via full recompute.
+    pub lanes_recomputed_on_failover: u64,
+    /// Whole-worker crashes executed by the fault plan.
+    pub worker_crashes: u64,
+    /// Requests shed at admission with an expired deadline.
+    pub shed_expired: u64,
+    /// Requests shed by the preemption-livelock guard.
+    pub shed_livelock: u64,
     pub mean_queue_delay_s: f64,
     pub mean_ttft_s: f64,
     pub ttft: Percentiles,
@@ -209,6 +244,14 @@ impl Metrics {
             kv_restored_blocks: AtomicU64::new(0),
             kv_restored_tokens: AtomicU64::new(0),
             kv_host_capacity_blocks: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            lanes_restored_on_failover: AtomicU64::new(0),
+            lanes_recomputed_on_failover: AtomicU64::new(0),
+            worker_crashes: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            shed_livelock: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -301,6 +344,46 @@ impl Metrics {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The fault plan injected one fault (transient step error or
+    /// worker crash).
+    pub fn on_fault_injected(&self) {
+        self.faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A transiently-failed lane step is being retried in place.
+    pub fn on_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A whole worker crashed; `salvaged` of its in-flight lanes were
+    /// handed to siblings as resumable jobs.
+    pub fn on_worker_crash(&self, salvaged: usize) {
+        self.worker_crashes.fetch_add(1, Ordering::Relaxed);
+        self.failovers.fetch_add(salvaged as u64, Ordering::Relaxed);
+    }
+
+    /// A failed-over lane readmitted on a sibling; `restored` says
+    /// whether cached prefix / host-tier state carried any of its
+    /// context (restore beat recompute) or it recomputed from scratch.
+    pub fn on_failover_readmit(&self, restored: bool) {
+        if restored {
+            self.lanes_restored_on_failover.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.lanes_recomputed_on_failover.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A request was shed at admission because its deadline expired
+    /// while it queued.
+    pub fn on_shed_expired(&self) {
+        self.shed_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was shed by the preemption-livelock guard.
+    pub fn on_shed_livelock(&self) {
+        self.shed_livelock.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         // Copy everything out under the lock, then do the O(n log n)
         // percentile work after dropping it so workers never wait on a
@@ -350,6 +433,18 @@ impl Metrics {
             kv_restored_blocks: self.kv_restored_blocks.load(Ordering::Relaxed),
             kv_restored_tokens: self.kv_restored_tokens.load(Ordering::Relaxed),
             kv_host_capacity_blocks: self.kv_host_capacity_blocks.load(Ordering::Relaxed),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            lanes_restored_on_failover: self
+                .lanes_restored_on_failover
+                .load(Ordering::Relaxed),
+            lanes_recomputed_on_failover: self
+                .lanes_recomputed_on_failover
+                .load(Ordering::Relaxed),
+            worker_crashes: self.worker_crashes.load(Ordering::Relaxed),
+            shed_expired: self.shed_expired.load(Ordering::Relaxed),
+            shed_livelock: self.shed_livelock.load(Ordering::Relaxed),
             mean_queue_delay_s: queue_delay_mean,
             mean_ttft_s: ttft_mean,
             ttft: percentiles_of(ttft_samples),
@@ -389,6 +484,10 @@ pub struct PoolGauges {
     restored_blocks: AtomicU64,
     /// Per-worker instantaneous slot-table size (indexed by worker).
     worker_lanes: Vec<AtomicU64>,
+    /// Per-worker liveness (1 = serving, 0 = crashed). Workers start
+    /// healthy; a fault-plan crash clears the bit and nothing sets it
+    /// back (recovery means failover, not resurrection).
+    worker_healthy: Vec<AtomicU64>,
 }
 
 impl PoolGauges {
@@ -396,6 +495,7 @@ impl PoolGauges {
     pub fn with_workers(n_workers: usize) -> PoolGauges {
         PoolGauges {
             worker_lanes: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_healthy: (0..n_workers).map(|_| AtomicU64::new(1)).collect(),
             ..PoolGauges::default()
         }
     }
@@ -434,6 +534,20 @@ impl PoolGauges {
         self.worker_lanes.get(worker).map_or(0, |g| g.load(Ordering::Relaxed) as usize)
     }
 
+    /// Mark worker `worker` crashed: its `healthy` gauge reads false
+    /// from now on.
+    pub fn set_unhealthy(&self, worker: usize) {
+        if let Some(g) = self.worker_healthy.get(worker) {
+            g.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether worker `worker` is still serving (out-of-range workers —
+    /// a pool built without per-worker gauges — read as healthy).
+    pub fn healthy(&self, worker: usize) -> bool {
+        self.worker_healthy.get(worker).map_or(true, |g| g.load(Ordering::Relaxed) == 1)
+    }
+
     /// JSON frame for the server's `metrics` op. `queue_depths` are the
     /// pool's live per-worker queue depths (from
     /// [`super::router::PoolQueues::depths`]); the frame reports the
@@ -446,6 +560,7 @@ impl PoolGauges {
                 obj(vec![
                     ("queue_depth", queue_depths.get(i).copied().unwrap_or(0).into()),
                     ("active_lanes", self.active_lanes(i).into()),
+                    ("healthy", self.healthy(i).into()),
                 ])
             })
             .collect();
@@ -507,6 +622,14 @@ impl Snapshot {
             ("kv_restored_blocks", self.kv_restored_blocks.into()),
             ("kv_restored_tokens", self.kv_restored_tokens.into()),
             ("kv_host_capacity_blocks", self.kv_host_capacity_blocks.into()),
+            ("faults_injected", self.faults_injected.into()),
+            ("retries", self.retries.into()),
+            ("failovers", self.failovers.into()),
+            ("lanes_restored_on_failover", self.lanes_restored_on_failover.into()),
+            ("lanes_recomputed_on_failover", self.lanes_recomputed_on_failover.into()),
+            ("worker_crashes", self.worker_crashes.into()),
+            ("shed_expired", self.shed_expired.into()),
+            ("shed_livelock", self.shed_livelock.into()),
             ("mean_queue_delay_s", self.mean_queue_delay_s.into()),
             ("mean_ttft_s", self.mean_ttft_s.into()),
             ("ttft_p50_s", self.ttft.p50.into()),
@@ -748,6 +871,52 @@ mod tests {
         let j = g.to_json(&[0]);
         assert_eq!(j.get("demoted_blocks").as_u64(), Some(5));
         assert_eq!(j.get("restored_blocks").as_u64(), Some(3));
+    }
+
+    #[test]
+    fn fault_and_shed_accounting() {
+        let m = Metrics::new();
+        m.on_fault_injected();
+        m.on_fault_injected();
+        m.on_retry();
+        m.on_worker_crash(3);
+        m.on_failover_readmit(true);
+        m.on_failover_readmit(false);
+        m.on_failover_readmit(false);
+        m.on_shed_expired();
+        m.on_shed_livelock();
+        let s = m.snapshot();
+        assert_eq!(s.faults_injected, 2);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.worker_crashes, 1);
+        assert_eq!(s.failovers, 3);
+        assert_eq!(s.lanes_restored_on_failover, 1);
+        assert_eq!(s.lanes_recomputed_on_failover, 2);
+        assert_eq!(s.shed_expired, 1);
+        assert_eq!(s.shed_livelock, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("faults_injected").as_u64(), Some(2));
+        assert_eq!(j.get("retries").as_u64(), Some(1));
+        assert_eq!(j.get("failovers").as_u64(), Some(3));
+        assert_eq!(j.get("lanes_restored_on_failover").as_u64(), Some(1));
+        assert_eq!(j.get("lanes_recomputed_on_failover").as_u64(), Some(2));
+        assert_eq!(j.get("worker_crashes").as_u64(), Some(1));
+        assert_eq!(j.get("shed_expired").as_u64(), Some(1));
+        assert_eq!(j.get("shed_livelock").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn worker_healthy_gauge_defaults_on_and_latches_off() {
+        let g = PoolGauges::with_workers(2);
+        assert!(g.healthy(0) && g.healthy(1));
+        assert!(g.healthy(9), "out-of-range worker reads healthy");
+        g.set_unhealthy(1);
+        assert!(g.healthy(0));
+        assert!(!g.healthy(1));
+        let j = g.to_json(&[0, 0]);
+        let workers = j.get("workers").as_arr().expect("workers array").to_vec();
+        assert_eq!(workers[0].get("healthy").as_bool(), Some(true));
+        assert_eq!(workers[1].get("healthy").as_bool(), Some(false));
     }
 
     #[test]

@@ -82,6 +82,7 @@
 //! for the full lifecycle.
 
 pub mod backend;
+pub mod faults;
 pub mod lane;
 pub mod metrics;
 pub mod router;
@@ -98,6 +99,9 @@ use std::time::Instant;
 use crate::numerics::SampleParams;
 
 pub use backend::{Backend, BackendFactory, BatchLane, LaneWork, SimBackend, StepModel};
+pub use faults::{
+    CrashSpec, FaultKind, FaultPlan, SlowSpec, DEFAULT_BACKOFF_BASE_S, DEFAULT_RETRY_BUDGET,
+};
 pub use lane::{Absorbed, Admit, HoldsLane, KvState, Lane, ResumeState};
 pub use metrics::{Metrics, Percentiles, PoolGauges};
 pub use router::{
@@ -129,6 +133,12 @@ pub struct Request {
     pub eos_token: Option<i64>,
     /// Sampling seed (reproducible streams).
     pub seed: u64,
+    /// Queueing deadline, seconds from submission (`None` = no
+    /// deadline). A request still queued when its deadline lapses is
+    /// shed at admission with a visible `timeout` error (counted in
+    /// `shed_expired`) instead of being started late — the minimal
+    /// load-shedding hook for SLO-aware admission.
+    pub deadline_s: Option<f64>,
 }
 
 impl Request {
@@ -141,6 +151,7 @@ impl Request {
             params: SampleParams::greedy(),
             eos_token: None,
             seed: 0,
+            deadline_s: None,
         }
     }
 
@@ -151,6 +162,11 @@ impl Request {
         }
         if self.max_new_tokens == 0 {
             return Err("max_new_tokens must be > 0".into());
+        }
+        if let Some(d) = self.deadline_s {
+            if !d.is_finite() || d < 0.0 {
+                return Err(format!("deadline_s must be finite and >= 0, got {d}"));
+            }
         }
         self.params.validate()
     }
@@ -234,6 +250,10 @@ struct Job {
     submitted: Instant,
     /// Present when this job was preempted mid-decode.
     resume: Option<ResumeState>,
+    /// True when this job was salvaged from a crashed worker's slot
+    /// table — readmission counts toward the failover restore/recompute
+    /// split instead of the preemption one.
+    failover: bool,
 }
 
 impl Job {
@@ -311,6 +331,13 @@ pub struct CoordinatorConfig {
     /// [`KvPolicy::Paged`], and auto-disabled per worker when the
     /// backend cannot restore sessions at a nonzero position (PJRT).
     pub host_tier: HostTierConfig,
+    /// Deterministic fault-injection plan (`--fault-plan <spec>`).
+    /// [`FaultPlan::default`] is inert; an active plan injects transient
+    /// step errors, whole-worker crashes, and slow-worker degradation,
+    /// and configures the bounded transient-retry budget/backoff. The
+    /// virtual harness accepts the same plan ([`VirtualConfig`]) so
+    /// recovery paths are testable off-thread.
+    pub faults: FaultPlan,
 }
 
 impl Default for CoordinatorConfig {
@@ -327,6 +354,7 @@ impl Default for CoordinatorConfig {
             router: RouterPolicy::RoundRobin,
             spill_after_s: DEFAULT_SPILL_AFTER_S,
             host_tier: HostTierConfig::off(),
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -352,6 +380,7 @@ impl CoordinatorConfig {
             router: RouterPolicy::RoundRobin,
             spill_after_s: DEFAULT_SPILL_AFTER_S,
             host_tier: HostTierConfig::off(),
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -474,7 +503,14 @@ impl Coordinator {
             .push(
                 worker,
                 now_s,
-                Job { request_id, request, events: tx, submitted: Instant::now(), resume: None },
+                Job {
+                    request_id,
+                    request,
+                    events: tx,
+                    submitted: Instant::now(),
+                    resume: None,
+                    failover: false,
+                },
             )
             .map_err(|_| "pool shut down".to_string())?;
         Ok(RequestHandle { request_id, events: rx })
@@ -552,6 +588,11 @@ impl WorkerCtx {
     }
 }
 
+/// Whether a queued job's deadline lapsed before admission.
+fn job_expired(job: &Job) -> bool {
+    job.request.deadline_s.map_or(false, |d| job.submitted.elapsed().as_secs_f64() >= d)
+}
+
 fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
     let mut backend = match factory.build() {
         Ok(b) => b,
@@ -611,8 +652,69 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
     // regression should shed a request visibly instead of silently
     // spinning every client stream on this worker forever.
     let mut preempts_since_done: usize = 0;
+    // Deterministic fault injection: decisions key on (worker, fused
+    // step count, request id) — never wall time — so the same plan
+    // reproduces the same recovery sequence across runs and drivers.
+    let faults = ctx.cfg.faults.clone();
+    let slow = faults.slow_factor(ctx.worker);
+    let mut step_count: u64 = 0;
 
     loop {
+        // ---- injected whole-worker crash: salvage the slot table to
+        // healthy siblings and die. Every lane exits through
+        // `release_lane` first, so a crash cannot leak KV budget;
+        // queued jobs become stealable immediately (`mark_dead`), and
+        // the router stops steering here (health mask) and forgets this
+        // worker's cached prefixes (registry eviction).
+        if faults.crashes_at(ctx.worker, step_count) {
+            ctx.metrics.on_fault_injected();
+            ctx.queues.mark_dead(ctx.worker);
+            ctx.pool_gauges.set_unhealthy(ctx.worker);
+            let n_workers = ctx.queues.depths().len();
+            let targets: Vec<Option<usize>> = {
+                let mut router = ctx.router.lock().unwrap();
+                router.set_unhealthy(ctx.worker);
+                (0..slots.len()).map(|k| router.failover_target(k, n_workers)).collect()
+            };
+            ctx.metrics.on_worker_crash(targets.iter().filter(|t| t.is_some()).count());
+            let now_s = ctx.now_s();
+            for (s, target) in slots.drain(..).zip(targets) {
+                kv.release_lane(&s.lane);
+                let Slot { request_id, events, submitted, lane, .. } = s;
+                match target {
+                    Some(t) => {
+                        let (request, resume) = lane.into_resume();
+                        ctx.queues.push_front(
+                            t,
+                            now_s,
+                            Job {
+                                request_id,
+                                request,
+                                events,
+                                submitted,
+                                resume: Some(resume),
+                                failover: true,
+                            },
+                        );
+                    }
+                    None => {
+                        // Sole (or last healthy) worker: fail visibly,
+                        // never strand the client stream.
+                        ctx.metrics.on_error();
+                        let _ = events.send(TokenEvent::Error {
+                            request_id,
+                            message: "worker crashed with no healthy sibling to fail over to"
+                                .into(),
+                        });
+                    }
+                }
+            }
+            // The registry already dropped this worker wholesale; the
+            // release events above must not resurrect entries for it.
+            kv.drain_prefix_events();
+            ctx.pool_gauges.set_active_lanes(ctx.worker, 0);
+            return;
+        }
         // ---- admission: runs between every fused step, so requests
         // join mid-decode (continuous batching). This worker peeks its
         // own queue head (popping only on Take/Reject; a Later head
@@ -620,6 +722,12 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
         // longest-waiting sibling head past the spill bound.
         while slots.len() < ctx.cfg.max_active_per_worker {
             let popped = ctx.queues.pop_for(ctx.worker, ctx.now_s(), slots.is_empty(), |job| {
+                if job_expired(job) {
+                    // Dequeue unconditionally so the shed below is
+                    // visible; starting it late would be worse than
+                    // any admission verdict.
+                    return Admit::Take;
+                }
                 kv.admit(
                     &job.request.prompt,
                     job.init_ctx(),
@@ -629,6 +737,22 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
             });
             match popped {
                 Popped::Job(job) => {
+                    if job_expired(&job) {
+                        // Deadline lapsed while queued: shed instead of
+                        // admitting late (no reservation was taken).
+                        ctx.metrics.on_shed_expired();
+                        ctx.metrics.on_error();
+                        let _ = job.events.send(TokenEvent::Error {
+                            request_id: job.request_id,
+                            message: format!(
+                                "timeout: deadline {:.3}s lapsed after {:.3}s in queue; \
+                                 request shed before admission",
+                                job.request.deadline_s.unwrap_or(0.0),
+                                job.submitted.elapsed().as_secs_f64(),
+                            ),
+                        });
+                        continue;
+                    }
                     // A preempted job readmits through the host tier
                     // when its demoted KV is intact and the modeled
                     // restore beats recompute; fresh jobs (and tier-off
@@ -662,7 +786,14 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                     // Sharing can reclaim (evict) cache entries; tell
                     // the pool registry.
                     ctx.sync_registry(&mut kv);
-                    let Job { request_id, request, events, submitted, resume } = job;
+                    if job.failover {
+                        // Restore-vs-recompute split for salvaged
+                        // lanes: "restored" when any of its KV came
+                        // back from the host tier or prefix cache.
+                        ctx.metrics
+                            .on_failover_readmit(holdings.restored > 0 || holdings.prefix_hit > 0);
+                    }
+                    let Job { request_id, request, events, submitted, resume, .. } = job;
                     match backend.new_session_at(holdings.prefix_hit) {
                         Ok(session) => {
                             if resume.is_none() {
@@ -718,6 +849,7 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
             ctx.metrics.on_preempt(s.lane.tokens_emitted());
             preempts_since_done += 1;
             if preempts_since_done > 1000 + 100 * ctx.cfg.max_active_per_worker {
+                ctx.metrics.on_shed_livelock();
                 ctx.metrics.on_error();
                 let _ = s.events.send(TokenEvent::Error {
                     request_id: s.request_id,
@@ -736,6 +868,7 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                         events: s.events,
                         submitted: s.submitted,
                         resume: Some(resume),
+                        failover: false,
                     },
                 );
             }
@@ -757,9 +890,23 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
         }
 
         // ---- one fused batched step over the planned lanes ----
+        step_count += 1;
+        // Transient injection is decided BEFORE any lane is fed: a
+        // faulted lane skips the backend entirely this step (its state
+        // machine does not advance), so the retry next step replans it
+        // with identical state and the token stream cannot skew.
+        let injected: Vec<bool> = plan
+            .lanes
+            .iter()
+            .map(|p| faults.transient_at(ctx.worker, step_count, slots[p.slot].request_id))
+            .collect();
         let step_started = Instant::now();
         let mut lanes: Vec<BatchLane> = Vec::with_capacity(plan.lanes.len());
-        for p in &plan.lanes {
+        let mut fed: Vec<usize> = Vec::with_capacity(plan.lanes.len());
+        for (j, p) in plan.lanes.iter().enumerate() {
+            if injected[j] {
+                continue;
+            }
             let s = &mut slots[p.slot];
             if s.lane.in_prefill() {
                 ctx.metrics.on_prefill(p.span);
@@ -768,14 +915,28 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
             let tokens = s.lane.feed_span(p.span);
             let session = std::mem::replace(&mut s.session, Box::new(()));
             lanes.push(BatchLane { session, tokens });
+            fed.push(j);
         }
-        let results = backend.decode_batch(&mut lanes);
-        ctx.metrics.on_batch_step(plan.lanes.len());
+        let results =
+            if lanes.is_empty() { Vec::new() } else { backend.decode_batch(&mut lanes) };
+        if !lanes.is_empty() {
+            ctx.metrics.on_batch_step(lanes.len());
+        }
         let step_elapsed = step_started.elapsed();
+        if slow > 1.0 {
+            // Injected degradation: stretch the wall-clock step by the
+            // plan's factor (the virtual harness scales pricing the
+            // same way).
+            std::thread::sleep(step_elapsed.mul_f64(slow - 1.0));
+        }
 
-        debug_assert_eq!(results.len(), plan.lanes.len(), "backend lane-count contract");
+        debug_assert_eq!(results.len(), fed.len(), "backend lane-count contract");
         let mut retire: Vec<(usize, Retire)> = Vec::new();
-        for ((lane_io, p), result) in lanes.iter_mut().zip(&plan.lanes).zip(results) {
+        // Step failures — injected or real backend errors — funnel
+        // through one taxonomy + bounded-retry path below.
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        for ((lane_io, &j), result) in lanes.iter_mut().zip(&fed).zip(results) {
+            let p = &plan.lanes[j];
             let i = p.slot;
             slots[i].session = std::mem::replace(&mut lane_io.session, Box::new(()));
             match result {
@@ -821,8 +982,45 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                         }
                     }
                 }
-                Err(e) => retire.push((i, Retire::Errored(e.to_string()))),
+                Err(e) => failed.push((i, e.to_string())),
             }
+        }
+        for (j, p) in plan.lanes.iter().enumerate() {
+            if injected[j] {
+                ctx.metrics.on_fault_injected();
+                failed.push((p.slot, faults.transient_error(ctx.worker, step_count).to_string()));
+            }
+        }
+        // Taxonomy: transient failures retry in place under the bounded
+        // per-request budget (with exponential backoff); fatal ones —
+        // and budget exhaustion — retire visibly through the normal
+        // errored path, never a hang. An injected-transient lane was
+        // never fed this step, so retrying is exact; a backend error
+        // classified transient relies on the backend's contract that a
+        // failed step consumed nothing.
+        let mut backoff = 0.0f64;
+        for (i, msg) in failed {
+            match FaultKind::classify(&msg) {
+                FaultKind::Fatal => retire.push((i, Retire::Errored(msg))),
+                FaultKind::Transient => {
+                    let attempt = slots[i].lane.note_retry();
+                    if attempt <= faults.retry_budget {
+                        ctx.metrics.on_retry();
+                        backoff = backoff.max(faults.backoff_s(attempt));
+                    } else {
+                        retire.push((
+                            i,
+                            Retire::Errored(format!(
+                                "{msg} (transient retry budget {} exhausted)",
+                                faults.retry_budget
+                            )),
+                        ));
+                    }
+                }
+            }
+        }
+        if backoff > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(backoff));
         }
 
         // Publish prefill-completion index inserts BEFORE any Done is
@@ -1424,5 +1622,157 @@ mod tests {
         // Sanity: the budget admits many full-length contexts.
         let per_ctx = model.kv_capacity_bytes(model.max_seq);
         assert!(cfg.kv_budget_bytes / per_ctx >= 8);
+    }
+
+    #[test]
+    fn invalid_deadline_rejected() {
+        let c = sim_coord(1);
+        for bad in [-1.0, f64::NAN, f64::INFINITY] {
+            let mut r = Request::greedy("opt-tiny", vec![1], 4);
+            r.deadline_s = Some(bad);
+            assert!(c.submit(r).is_err(), "deadline {bad} must be rejected");
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn deadline_expired_request_is_shed_with_timeout() {
+        let c = sim_coord(2);
+        // Already expired at submission: the worker must shed it at
+        // admission, visibly, without reserving anything.
+        let mut r = Request::greedy("opt-tiny", vec![1, 2], 8);
+        r.deadline_s = Some(0.0);
+        let err = c.submit(r).unwrap().wait().unwrap_err();
+        assert!(err.contains("timeout"), "{err}");
+        // A generous deadline changes nothing.
+        let mut ok = Request::greedy("opt-tiny", vec![3], 4);
+        ok.deadline_s = Some(3600.0);
+        assert_eq!(c.submit(ok).unwrap().wait().unwrap().len(), 4);
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.shed_expired, 1);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.completed, 1);
+        c.shutdown();
+    }
+
+    /// Run `reqs` to completion under `cfg` on a 2-worker sim pool.
+    fn run_streams(cfg: CoordinatorConfig, reqs: &[Request]) -> (Vec<Vec<i64>>, metrics::Snapshot) {
+        let mut c = Coordinator::new(cfg);
+        c.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+        let handles: Vec<_> = reqs.iter().map(|r| c.submit(r.clone()).unwrap()).collect();
+        let streams =
+            handles.into_iter().map(|h| wait_with_timeout(h, 60).unwrap()).collect();
+        let snap = c.metrics.snapshot();
+        c.shutdown();
+        (streams, snap)
+    }
+
+    #[test]
+    fn worker_crash_fails_over_lanes_and_streams_match() {
+        // Kill worker 0 after 3 fused steps, mid-stream: its in-flight
+        // lanes fail over to worker 1 and every request still completes
+        // with a stream bit-identical to the fault-free run.
+        let reqs: Vec<Request> =
+            (0..8).map(|i| Request::greedy("opt-tiny", vec![i as i64 + 1], 12)).collect();
+        let (baseline, base_snap) = run_streams(CoordinatorConfig::default(), &reqs);
+        assert_eq!(base_snap.worker_crashes, 0);
+        let (faulted, snap) = run_streams(
+            CoordinatorConfig {
+                faults: FaultPlan::parse("crash=0@3").unwrap(),
+                ..CoordinatorConfig::default()
+            },
+            &reqs,
+        );
+        assert_eq!(faulted, baseline, "failover must not change any stream");
+        assert!(faulted.iter().all(|t| t.len() == 12));
+        assert_eq!(snap.worker_crashes, 1);
+        assert!(snap.failovers >= 1, "crash must have salvaged at least one lane");
+        assert_eq!(
+            snap.failovers,
+            snap.lanes_restored_on_failover + snap.lanes_recomputed_on_failover
+        );
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.completed, 8);
+    }
+
+    #[test]
+    fn transient_faults_retry_in_place_and_streams_match() {
+        // A generous retry budget turns every injected transient into a
+        // retried (delayed) step: all streams must match the fault-free
+        // run exactly, with zero client-visible errors.
+        let reqs: Vec<Request> =
+            (0..6).map(|i| Request::greedy("opt-tiny", vec![i as i64 + 1; 4], 16)).collect();
+        let (baseline, _) = run_streams(CoordinatorConfig::default(), &reqs);
+        let (faulted, snap) = run_streams(
+            CoordinatorConfig {
+                faults: FaultPlan::parse(
+                    "seed=11,transient=0.2,retries=1000000,backoff=0.00001",
+                )
+                .unwrap(),
+                ..CoordinatorConfig::default()
+            },
+            &reqs,
+        );
+        assert_eq!(faulted, baseline, "retried transients must not change streams");
+        assert!(snap.faults_injected > 0, "rate 0.2 over ~100 lane-steps must fire");
+        assert_eq!(snap.retries, snap.faults_injected);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.completed, 6);
+    }
+
+    #[test]
+    fn transient_retry_budget_exhaustion_fails_visibly() {
+        // transient=1.0 faults every step: attempts 1 and 2 retry, the
+        // third exceeds the budget and must surface as an error — never
+        // a hang.
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 2,
+            policy: SchedulerPolicy::RoundRobin,
+            faults: FaultPlan::parse("transient=1.0,retries=2,backoff=0.00001").unwrap(),
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 64));
+        let h = c.submit(Request::greedy("opt-tiny", vec![1], 4)).unwrap();
+        let err = wait_with_timeout(h, 30).unwrap_err();
+        assert!(err.contains("retry budget"), "{err}");
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.retries, 2);
+        assert_eq!(snap.faults_injected, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn crash_failover_with_fatal_errors_releases_kv_budget() {
+        // Extends the sim_failing leak audit across a worker crash: the
+        // backend fatally errors every lane at position 4, worker 0
+        // crashes after 2 fused steps (salvaging its lane + stranding
+        // its queue for steal), and the budget fits exactly one
+        // worst-case request — one leaked reservation anywhere and a
+        // later admission hangs (the timeout turns that into a fail).
+        for kv_policy in [KvPolicy::Reserve, KvPolicy::Paged { block_tokens: 4 }] {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                kv_bytes_per_token: 100,
+                kv_budget_bytes: 16 * 100,
+                kv_policy,
+                faults: FaultPlan::parse("crash=0@2").unwrap(),
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 2, BackendFactory::sim_failing("opt-tiny", 64, 4));
+            let handles: Vec<_> = (0..8)
+                .map(|i| c.submit(Request::greedy("opt-tiny", vec![1, i + 1], 14)).unwrap())
+                .collect();
+            for h in handles {
+                let err = wait_with_timeout(h, 30).unwrap_err();
+                assert!(err.contains("injected fault"), "{kv_policy:?}: {err}");
+            }
+            let snap = c.metrics.snapshot();
+            assert_eq!(snap.errors, 8, "{kv_policy:?}");
+            assert_eq!(snap.rejected, 0, "{kv_policy:?}");
+            assert_eq!(snap.worker_crashes, 1, "{kv_policy:?}");
+            c.shutdown();
+        }
     }
 }

@@ -47,7 +47,7 @@
 //! bit-identical under every policy (asserted in the serving bench and
 //! the stream proptests).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -265,6 +265,20 @@ impl PrefixRegistry {
             Some((best, best_depth))
         }
     }
+
+    /// Remove every holding of `worker`, dropping entries whose last
+    /// holder it was — the crashed-worker sweep. A dead worker's pager
+    /// is gone, so each hit it advertised is stale by definition and
+    /// must stop attracting traffic; this is the bulk form of applying
+    /// [`PrefixEvent::Evict`] for every key the worker held.
+    pub fn drop_worker(&mut self, worker: usize) {
+        self.entries.retain(|_, e| {
+            if let Ok(at) = e.holders.binary_search_by_key(&worker, |h| h.0) {
+                e.holders.remove(at);
+            }
+            !e.holders.is_empty()
+        });
+    }
 }
 
 /// The routing decision core a pool shares across its workers: policy
@@ -276,12 +290,16 @@ pub struct Router {
     policy: RouterPolicy,
     cursor: usize,
     registry: PrefixRegistry,
+    /// Workers excluded from steering (crashed). The health mask every
+    /// policy consults: a dead worker receives no new requests and its
+    /// registry holdings are dropped the moment it is marked down.
+    down: HashSet<usize>,
 }
 
 impl Router {
     /// A router for a pool whose pagers use `block_tokens`-token blocks.
     pub fn new(policy: RouterPolicy, block_tokens: usize) -> Router {
-        Router { policy, cursor: 0, registry: PrefixRegistry::new(block_tokens) }
+        Router { policy, cursor: 0, registry: PrefixRegistry::new(block_tokens), down: HashSet::new() }
     }
 
     /// The steering policy this router runs.
@@ -299,6 +317,35 @@ impl Router {
         self.registry.apply(worker, events);
     }
 
+    /// Take `worker` out of the steering set (it crashed): every policy
+    /// skips it from now on, and its [`PrefixRegistry`] holdings are
+    /// evicted so affinity can never steer toward a pager that no
+    /// longer exists.
+    pub fn set_unhealthy(&mut self, worker: usize) {
+        self.down.insert(worker);
+        self.registry.drop_worker(worker);
+    }
+
+    /// Whether `worker` is still in the steering set.
+    pub fn is_healthy(&self, worker: usize) -> bool {
+        !self.down.contains(&worker)
+    }
+
+    /// Deterministic target for the `k`-th lane salvaged off a crashed
+    /// worker: the k-th healthy worker in index order, wrapping — both
+    /// drivers spread failover round-robin without consulting (racy)
+    /// load snapshots, so the same crash produces the same placement.
+    /// `None` when no healthy worker remains.
+    pub fn failover_target(&self, k: usize, n_workers: usize) -> Option<usize> {
+        let healthy: Vec<usize> =
+            (0..n_workers).filter(|w| !self.down.contains(w)).collect();
+        if healthy.is_empty() {
+            None
+        } else {
+            Some(healthy[k % healthy.len()])
+        }
+    }
+
     /// Steer a request: choose the worker whose queue receives it, given
     /// the per-worker loads at this instant. `loads` must be non-empty
     /// (one entry per worker).
@@ -313,34 +360,53 @@ impl Router {
         assert!(!loads.is_empty(), "route() needs at least one worker");
         match self.policy {
             RouterPolicy::RoundRobin => {
+                // Advance the cursor past dead workers; if every worker
+                // is down (nothing correct to do), degrade to the plain
+                // rotation rather than spin.
+                for _ in 0..loads.len() {
+                    let w = self.cursor % loads.len();
+                    self.cursor = self.cursor.wrapping_add(1);
+                    if !self.down.contains(&w) {
+                        return w;
+                    }
+                }
                 let w = self.cursor % loads.len();
                 self.cursor = self.cursor.wrapping_add(1);
                 w
             }
-            RouterPolicy::LeastLoaded => least_loaded(loads),
+            RouterPolicy::LeastLoaded => least_loaded(loads, &self.down),
             RouterPolicy::PrefixAffinity => {
                 if let Some((w, _depth)) = self.registry.deepest_hit(prompt, loads.len()) {
+                    // drop_worker already purged dead holders, but the
+                    // health check stays: registry state must never
+                    // override the mask.
                     let min_queue =
                         loads.iter().map(|l| l.queue_depth).min().expect("non-empty");
-                    if loads[w].queue_depth <= min_queue + AFFINITY_IMBALANCE_LIMIT {
+                    if !self.down.contains(&w)
+                        && loads[w].queue_depth <= min_queue + AFFINITY_IMBALANCE_LIMIT
+                    {
                         return w;
                     }
                 }
-                least_loaded(loads)
+                least_loaded(loads, &self.down)
             }
         }
     }
 }
 
-/// Lowest combined load, ties toward the lower worker index.
-fn least_loaded(loads: &[WorkerLoad]) -> usize {
-    let mut best = 0usize;
-    for (i, l) in loads.iter().enumerate().skip(1) {
-        if l.total() < loads[best].total() {
-            best = i;
+/// Lowest combined load among healthy workers, ties toward the lower
+/// worker index; degrades to worker 0 if every worker is down.
+fn least_loaded(loads: &[WorkerLoad], down: &HashSet<usize>) -> usize {
+    let mut best: Option<usize> = None;
+    for (i, l) in loads.iter().enumerate() {
+        if down.contains(&i) {
+            continue;
+        }
+        if best.map_or(true, |b: usize| l.total() < loads[b].total()) {
+            best = Some(i);
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 /// Result of a peek-then-pop attempt on a pool's queues (the per-worker
@@ -365,6 +431,10 @@ struct Entry<J> {
 struct QueuesState<J> {
     queues: Vec<VecDeque<Entry<J>>>,
     closed: bool,
+    /// Queues whose owner crashed and will never pop again. Their jobs
+    /// are stealable immediately: the spill window protects placement
+    /// affinity, and a queue with no owner has none.
+    dead: Vec<bool>,
 }
 
 /// Per-worker addressable job queues with head-peek admission and a
@@ -409,6 +479,7 @@ impl<J> PoolQueues<J> {
             state: Mutex::new(QueuesState {
                 queues: (0..n_workers.max(1)).map(|_| VecDeque::new()).collect(),
                 closed: false,
+                dead: vec![false; n_workers.max(1)],
             }),
             cv: Condvar::new(),
             spill_after_s: spill_after_s.max(0.0),
@@ -458,6 +529,21 @@ impl<J> PoolQueues<J> {
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
+    }
+
+    /// Mark `worker`'s queue dead: its owner crashed and will never pop
+    /// again, so every job parked there (and any racing late push)
+    /// becomes stealable by idle siblings immediately — the spill
+    /// window must not apply to a queue whose owner never returns.
+    pub fn mark_dead(&self, worker: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.dead[worker] = true;
+        self.cv.notify_all();
+    }
+
+    /// Whether `worker`'s queue has been marked dead.
+    pub fn is_dead(&self, worker: usize) -> bool {
+        self.state.lock().unwrap().dead[worker]
     }
 
     /// Worker `worker` attempts to obtain a job at time `now_s`: peek
@@ -530,6 +616,8 @@ impl<J> PoolQueues<J> {
     /// The sibling queue `thief` may steal from right now: the one whose
     /// head has waited longest, among heads waiting at least the spill
     /// bound (ties break toward the lower queue index; deterministic).
+    /// A head behind a dead owner — or any head once the pool is closed
+    /// — is eligible regardless of age: nobody else will ever serve it.
     fn steal_source(&self, st: &QueuesState<J>, thief: usize, now_s: f64) -> Option<usize> {
         let mut best: Option<(f64, usize)> = None;
         for (i, q) in st.queues.iter().enumerate() {
@@ -537,7 +625,8 @@ impl<J> PoolQueues<J> {
                 continue;
             }
             if let Some(head) = q.front() {
-                if now_s - head.enqueued_s >= self.spill_after_s {
+                let stranded = st.closed || st.dead[i];
+                if stranded || now_s - head.enqueued_s >= self.spill_after_s {
                     let cand = (head.enqueued_s, i);
                     if best.map_or(true, |b| cand < b) {
                         best = Some(cand);
@@ -559,7 +648,11 @@ impl<J> PoolQueues<J> {
                 continue;
             }
             if let Some(head) = q.front() {
-                let remaining = self.spill_after_s - (now_s - head.enqueued_s);
+                let remaining = if st.closed || st.dead[i] {
+                    0.0
+                } else {
+                    self.spill_after_s - (now_s - head.enqueued_s)
+                };
                 if soonest.map_or(true, |s| remaining < s) {
                     soonest = Some(remaining);
                 }
@@ -869,6 +962,98 @@ mod tests {
             _ => panic!("expected the original job"),
         }
         assert!(matches!(q.pop_for(0, 0.0, true, |_| Admit::Take), Popped::Closed));
+    }
+
+    #[test]
+    fn dead_queue_heads_are_stealable_immediately() {
+        // The stranded-queue hole: a job steered to a worker that then
+        // crashes must not sit out the spill window — its owner will
+        // never return, so the window protects nothing.
+        let q: PoolQueues<u32> = PoolQueues::with_spill_after(2, 1.0);
+        q.push(0, 10.0, 7).unwrap();
+        // Owner alive: the idle sibling must respect the window.
+        assert!(matches!(q.pop_for(1, 10.0, false, |_| Admit::Take), Popped::None));
+        q.mark_dead(0);
+        assert!(q.is_dead(0));
+        // Owner dead: stealable at the same instant, age zero.
+        match q.pop_for(1, 10.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 7),
+            _ => panic!("dead-owner head must be stealable immediately"),
+        }
+        // A late push to the dead queue (submit racing the crash) is
+        // accepted and equally stealable right away.
+        q.push(0, 20.0, 8).unwrap();
+        match q.pop_for(1, 20.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 8),
+            _ => panic!("late push behind a dead owner must be stealable"),
+        }
+    }
+
+    #[test]
+    fn closed_pool_bypasses_spill_window() {
+        // After close nobody new arrives and latency is all that is
+        // left: an idle worker may drain a sibling's head without
+        // waiting out the window.
+        let q: PoolQueues<u32> = PoolQueues::with_spill_after(2, 5.0);
+        q.push(0, 0.0, 3).unwrap();
+        q.close();
+        match q.pop_for(1, 0.0, false, |_| Admit::Take) {
+            Popped::Job(j) => assert_eq!(j, 3),
+            _ => panic!("closed-pool head must be stealable immediately"),
+        }
+    }
+
+    #[test]
+    fn router_health_mask_excludes_dead_workers() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 4);
+        let loads = vec![load(0, 0); 3];
+        r.set_unhealthy(1);
+        assert!(!r.is_healthy(1));
+        let picks: Vec<usize> = (0..4).map(|_| r.route(&[1], &loads)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "round-robin must skip the dead worker");
+
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 4);
+        r.set_unhealthy(2);
+        // Worker 2 is emptiest but dead: least-loaded must skip it.
+        assert_eq!(r.route(&[1], &[load(1, 1), load(0, 1), load(0, 0)]), 1);
+    }
+
+    #[test]
+    fn set_unhealthy_evicts_registry_and_affinity_falls_back() {
+        let mut r = Router::new(RouterPolicy::PrefixAffinity, 4);
+        let prompt: Vec<i64> = (0..8).collect();
+        r.note_prefix_events(0, &insert_events(&prompt, 4));
+        assert_eq!(r.route(&prompt, &[load(0, 3), load(0, 1)]), 0);
+        r.set_unhealthy(0);
+        // The dead worker's holdings are gone and the mask holds even
+        // if stale state were to reappear: traffic falls back.
+        assert!(r.registry().is_empty());
+        assert_eq!(r.route(&prompt, &[load(0, 3), load(0, 1)]), 1);
+    }
+
+    #[test]
+    fn registry_drop_worker_keeps_other_holders() {
+        let mut reg = PrefixRegistry::new(4);
+        let prompt: Vec<i64> = (0..8).collect();
+        reg.apply(0, &insert_events(&prompt, 4));
+        reg.apply(1, &insert_events(&prompt, 4));
+        reg.drop_worker(0);
+        assert_eq!(reg.deepest_hit(&prompt, 2), Some((1, 2)));
+        reg.drop_worker(1);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn failover_target_round_robins_healthy_workers() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 4);
+        r.set_unhealthy(1);
+        let targets: Vec<usize> =
+            (0..5).map(|k| r.failover_target(k, 4).unwrap()).collect();
+        assert_eq!(targets, vec![0, 2, 3, 0, 2]);
+        r.set_unhealthy(0);
+        r.set_unhealthy(2);
+        r.set_unhealthy(3);
+        assert_eq!(r.failover_target(0, 4), None, "no healthy worker left");
     }
 
     #[test]

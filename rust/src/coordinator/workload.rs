@@ -35,7 +35,10 @@ use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 use super::backend::{Backend, SimBackend, StepModel};
-use super::lane::{plan_step, Absorbed, HoldsLane, KvState, Lane, PlannedLane, ResumeState};
+use super::faults::FaultPlan;
+use super::lane::{
+    plan_step, Absorbed, Admit, HoldsLane, KvState, Lane, PlannedLane, ResumeState,
+};
 use super::router::{PoolQueues, Popped, Router, RouterPolicy, WorkerLoad};
 use super::scheduler::{
     HostTierConfig, HostTierStats, KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler,
@@ -269,6 +272,12 @@ pub struct VirtualConfig {
     /// restore cost wins. Mirrors [`super::CoordinatorConfig::host_tier`];
     /// only meaningful with [`KvPolicy::Paged`].
     pub host_tier: HostTierConfig,
+    /// Deterministic fault-injection plan. Mirrors
+    /// [`super::CoordinatorConfig::faults`] and drives the SAME recovery
+    /// machinery (bounded transient retry, crash salvage through the
+    /// router health mask, slow-worker degradation) on virtual time.
+    /// [`FaultPlan::default`] is inert.
+    pub faults: FaultPlan,
     /// Batched per-step latency model.
     pub step: StepModel,
 }
@@ -294,6 +303,7 @@ impl VirtualConfig {
             router: RouterPolicy::RoundRobin,
             spill_after_s: super::router::DEFAULT_SPILL_AFTER_S,
             host_tier: HostTierConfig::off(),
+            faults: FaultPlan::default(),
             step,
         }
     }
@@ -383,6 +393,33 @@ pub struct VirtualReport {
     /// mirror of the server's `pools.<model>.workers[i].active_lanes`
     /// gauge; uneven peaks expose routing skew).
     pub worker_peak_lanes: Vec<usize>,
+    /// Fault events injected by the plan (transient step errors plus
+    /// worker crashes; 0 with an inert plan).
+    pub faults_injected: u64,
+    /// Transient step errors retried in place under the bounded budget.
+    pub retries: u64,
+    /// Whole-worker crashes the plan triggered.
+    pub worker_crashes: u64,
+    /// In-flight lanes salvaged off a crashed worker onto a healthy
+    /// sibling's queue.
+    pub failovers: u64,
+    /// Failover readmissions whose KV came back from the host tier or
+    /// prefix cache instead of a full recompute.
+    pub lanes_restored_on_failover: u64,
+    /// Failover readmissions that recomputed their context from scratch.
+    pub lanes_recomputed_on_failover: u64,
+    /// Requests shed at admission because their deadline lapsed while
+    /// queued.
+    pub shed_expired: u64,
+    /// Requests shed by the preemption-livelock guard.
+    pub shed_livelock: u64,
+    /// Requests that ended in a visible failure (retry-budget
+    /// exhaustion, deadline/livelock shed, or a crash with no healthy
+    /// sibling). Their records carry empty streams, like rejections.
+    pub failed: usize,
+    /// KV blocks still held across all workers when the run drained —
+    /// must be 0, or some exit path leaked pager budget.
+    pub end_kv_blocks_in_use: usize,
 }
 
 /// A virtual slot: the shared [`Lane`] plus virtual-time bookkeeping.
@@ -412,6 +449,10 @@ struct VPending {
     rid: usize,
     request: Request,
     resume: Option<VResume>,
+    /// True when this job was salvaged from a crashed worker's slot
+    /// table (readmission counts toward the failover restore/recompute
+    /// split instead of the preemption one).
+    failover: bool,
 }
 
 /// The shared resume carry plus the virtual-only timing that must
@@ -431,6 +472,11 @@ impl VPending {
     }
 }
 
+/// Whether a queued request's deadline lapsed before admission.
+fn pending_expired(p: &VPending, now: f64) -> bool {
+    p.request.deadline_s.map_or(false, |d| now - p.arrival_s >= d)
+}
+
 struct VWorker {
     backend: SimBackend,
     scheduler: Scheduler,
@@ -438,7 +484,16 @@ struct VWorker {
     slots: Vec<VSlot>,
     /// The in-flight fused step's plan (empty = idle).
     batch: Vec<PlannedLane>,
+    /// Parallel to `batch`: lanes the fault plan marked transient-
+    /// faulted for this step. Decided at schedule time — BEFORE the
+    /// lane is fed — so a retried lane replans with identical state.
+    injected: Vec<bool>,
     busy_until: f64,
+    /// Fused steps this worker has started (the fault plan's clock).
+    steps: u64,
+    /// Crashed by the fault plan: admits nothing, plans nothing; its
+    /// queue is marked dead so siblings steal the backlog.
+    dead: bool,
 }
 
 /// Replay `wl` through the continuous-batching serving model in virtual
@@ -511,7 +566,10 @@ pub fn run_virtual_plan(
                 kv,
                 slots: Vec::new(),
                 batch: Vec::new(),
+                injected: Vec::new(),
                 busy_until: 0.0,
+                steps: 0,
+                dead: false,
             }
         })
         .collect();
@@ -530,7 +588,9 @@ pub fn run_virtual_plan(
         peak_queue_depth: 0,
         worker_peak_lanes: vec![0; vc.workers],
         max_active: vc.max_active,
+        faults: FaultCounters::default(),
     };
+    let fp = &vc.faults;
     let mut wall_s = 0.0f64;
 
     loop {
@@ -590,7 +650,13 @@ pub fn run_virtual_plan(
                     let _ = queues.push(
                         wi,
                         ta,
-                        VPending { arrival_s: ta, rid, request: req, resume: None },
+                        VPending {
+                            arrival_s: ta,
+                            rid,
+                            request: req,
+                            resume: None,
+                            failover: false,
+                        },
                     );
                     st.peak_queue_depth = st
                         .peak_queue_depth
@@ -603,10 +669,37 @@ pub fn run_virtual_plan(
             }
             Event::Step(ts, wi) => {
                 wall_s = wall_s.max(ts);
-                finish_step(&mut st.workers[wi], ts, &mut st.records, &mut st.tpot_samples);
+                finish_step(
+                    &mut st.workers[wi],
+                    ts,
+                    &mut st.records,
+                    &mut st.tpot_samples,
+                    fp,
+                    &mut st.faults,
+                );
                 st.dispatch(&queues, ts);
             }
             Event::Drain => {
+                // Every worker crashed with work still queued: there is
+                // no sibling left to steal it, so fail each queued
+                // request visibly instead of reporting a stuck
+                // scheduler (the injected fault, not the scheduler, is
+                // at fault).
+                if st.workers.iter().all(|w| w.dead) {
+                    for wi in 0..vc.workers {
+                        loop {
+                            match queues.pop_for(wi, wall_s, false, |_| Admit::Take) {
+                                Popped::Job(p) | Popped::Rejected(p) => {
+                                    st.faults.failed += 1;
+                                    st.records[p.rid] =
+                                        Some(failed_record(p.rid, p.arrival_s, wall_s));
+                                }
+                                Popped::None | Popped::Closed => break,
+                            }
+                        }
+                    }
+                    continue;
+                }
                 // No arrivals left and nothing in flight, but jobs are
                 // queued: every worker is idle, so each queue's head is
                 // either admitted or rejected-as-impossible here.
@@ -628,7 +721,64 @@ pub fn run_virtual_plan(
         // recompute-on-readmit.
         let now = wall_s;
         for (wi, w) in st.workers.iter_mut().enumerate() {
-            if !w.batch.is_empty() || w.slots.is_empty() {
+            if !w.batch.is_empty() {
+                continue;
+            }
+            // ---- injected whole-worker crash (mirror of the threaded
+            // salvage): every in-flight lane exits through
+            // `release_lane` first — a crash cannot leak KV budget —
+            // then fails over to a healthy sibling's queue head. The
+            // dead queue's backlog becomes stealable immediately and
+            // the router stops steering here.
+            if !w.dead && fp.crashes_at(wi, w.steps) {
+                w.dead = true;
+                st.faults.faults_injected += 1;
+                st.faults.worker_crashes += 1;
+                queues.mark_dead(wi);
+                st.router.set_unhealthy(wi);
+                let salvage: Vec<VSlot> = w.slots.drain(..).collect();
+                // Keep the scheduler's slot mirror in sync with the
+                // emptied table (the dead worker never plans again, but
+                // a stale mirror is a trap for any future reader).
+                for i in (0..salvage.len()).rev() {
+                    w.scheduler.swap_remove(i);
+                }
+                for (k, s) in salvage.into_iter().enumerate() {
+                    w.kv.release_lane(&s.lane);
+                    match st.router.failover_target(k, vc.workers) {
+                        Some(t) => {
+                            st.faults.failovers += 1;
+                            let (request, state) = s.lane.into_resume();
+                            queues.push_front(
+                                t,
+                                now,
+                                VPending {
+                                    arrival_s: s.arrival_s,
+                                    rid: s.rid,
+                                    request,
+                                    resume: Some(VResume {
+                                        state,
+                                        first_token_s: s.first_token_s,
+                                        last_token_s: s.last_token_s,
+                                        token_times: s.token_times,
+                                    }),
+                                    failover: true,
+                                },
+                            );
+                        }
+                        None => {
+                            // Sole worker: fail visibly, never strand.
+                            st.faults.failed += 1;
+                            st.records[s.rid] = Some(failed_record(s.rid, s.arrival_s, now));
+                        }
+                    }
+                }
+                // The registry already dropped this worker wholesale;
+                // the release events must not resurrect entries for it.
+                w.kv.drain_prefix_events();
+                continue;
+            }
+            if w.dead || w.slots.is_empty() {
                 continue;
             }
             let (plan, evicted) = plan_step(
@@ -644,12 +794,12 @@ pub fn run_virtual_plan(
                     // Preemption terminates (the max-progress slot is
                     // never evicted while others exist, and prefill
                     // never needs growth), but a bound turns any future
-                    // regression into an error instead of a hang.
-                    return Err(format!(
-                        "preemption livelock suspected: {} preemptions \
-                         for {n_requests} requests",
-                        st.preemptions
-                    ));
+                    // regression into a visible shed instead of a hang
+                    // (blocks were already released by the eviction).
+                    st.faults.shed_livelock += 1;
+                    st.faults.failed += 1;
+                    st.records[s.rid] = Some(failed_record(s.rid, s.arrival_s, now));
+                    continue;
                 }
                 let (request, state) = s.lane.into_resume();
                 queues.push_front(
@@ -665,6 +815,7 @@ pub fn run_virtual_plan(
                             last_token_s: s.last_token_s,
                             token_times: s.token_times,
                         }),
+                        failover: false,
                     },
                 );
                 // Preemption requeues deepen queues too; sample the
@@ -678,14 +829,43 @@ pub fn run_virtual_plan(
             if plan.is_empty() {
                 continue;
             }
-            let works = plan.works(&w.slots);
+            // ---- transient injection, decided BEFORE any lane feeds
+            // (a faulted lane skips the backend this step, so its retry
+            // replans with identical state and streams cannot skew).
+            // Keyed on (worker, step, rid): deterministic per run.
+            w.steps += 1;
+            let injected: Vec<bool> = plan
+                .lanes
+                .iter()
+                .map(|p| fp.transient_at(wi, w.steps, w.slots[p.slot].rid as u64))
+                .collect();
+            // Faulted lanes do no work this step; their retry pays the
+            // exponential backoff on the worker clock instead.
+            let mut backoff = 0.0f64;
+            for (j, p) in plan.lanes.iter().enumerate() {
+                if injected[j] {
+                    backoff = backoff.max(fp.backoff_s(w.slots[p.slot].lane.retries() + 1));
+                }
+            }
+            let works: Vec<_> = plan
+                .works(&w.slots)
+                .into_iter()
+                .enumerate()
+                .filter(|(j, _)| !injected[*j])
+                .map(|(_, work)| work)
+                .collect();
             // A restored lane's first planned step also pays the host
             // link transfer for its readmitted KV — the same term the
             // restore-vs-recompute decision priced, so the decision and
             // the clock agree.
             let restore_s = vc.step.restore_s(plan.restore_tokens(&w.slots));
-            w.busy_until = now + vc.step.mixed_step_s(&works) + restore_s;
+            let step_s =
+                if works.is_empty() { 0.0 } else { vc.step.mixed_step_s(&works) };
+            // Slow-worker degradation stretches the modeled step by the
+            // plan's factor (the threaded loop stretches wall time).
+            w.busy_until = now + (step_s + restore_s) * fp.slow_factor(wi) + backoff;
             w.batch = plan.lanes;
+            w.injected = injected;
         }
         // Publish this iteration's prefix-index changes (prefill
         // completions in finish_step, cache evictions during plan_step
@@ -714,6 +894,11 @@ pub fn run_virtual_plan(
         }
     });
     let host_capacity_blocks = st.workers[0].kv.host_capacity_blocks();
+    // Leak check surface: every exit path (finish, retry exhaustion,
+    // crash salvage, shed) releases its lane, so this must be 0 at the
+    // end of any drained run — asserted by the fault tests and bench.
+    let end_kv_blocks_in_use = st.workers.iter().map(|w| w.kv.blocks_in_use()).sum();
+    let f = st.faults;
     Ok(VirtualReport {
         policy: vc.policy,
         offered_rate,
@@ -738,6 +923,16 @@ pub fn run_virtual_plan(
         router_policy: vc.router,
         peak_queue_depth: st.peak_queue_depth,
         worker_peak_lanes: st.worker_peak_lanes,
+        faults_injected: f.faults_injected,
+        retries: f.retries,
+        worker_crashes: f.worker_crashes,
+        failovers: f.failovers,
+        lanes_restored_on_failover: f.lanes_restored_on_failover,
+        lanes_recomputed_on_failover: f.lanes_recomputed_on_failover,
+        shed_expired: f.shed_expired,
+        shed_livelock: f.shed_livelock,
+        failed: f.failed,
+        end_kv_blocks_in_use,
         records,
     })
 }
@@ -760,6 +955,35 @@ struct VState {
     peak_queue_depth: usize,
     worker_peak_lanes: Vec<usize>,
     max_active: usize,
+    faults: FaultCounters,
+}
+
+/// Recovery accounting for the virtual run — one struct so
+/// `finish_step` can take a single `&mut` alongside the worker.
+#[derive(Default)]
+struct FaultCounters {
+    faults_injected: u64,
+    retries: u64,
+    worker_crashes: u64,
+    failovers: u64,
+    lanes_restored_on_failover: u64,
+    lanes_recomputed_on_failover: u64,
+    shed_expired: u64,
+    shed_livelock: u64,
+    failed: usize,
+}
+
+/// An empty-stream record for a request that ended without completing
+/// (rejection records are built inline; failure paths share this).
+fn failed_record(rid: usize, arrival_s: f64, now: f64) -> VirtualRecord {
+    VirtualRecord {
+        request_id: rid,
+        arrival_s,
+        first_token_s: now,
+        done_s: now,
+        tokens: Vec::new(),
+        token_times: Vec::new(),
+    }
 }
 
 impl VState {
@@ -796,8 +1020,19 @@ impl VState {
         loop {
             let mut progress = false;
             for wi in 0..self.workers.len() {
+                if self.workers[wi].dead {
+                    // A crashed worker admits nothing; its queue is
+                    // marked dead so siblings steal the backlog.
+                    continue;
+                }
                 while self.workers[wi].slots.len() < self.max_active {
                     let popped = queues.pop_for(wi, now, false, |p| {
+                        if pending_expired(p, now) {
+                            // Dequeue unconditionally so the shed below
+                            // is visible (threaded admission does the
+                            // same).
+                            return Admit::Take;
+                        }
                         let w = &self.workers[wi];
                         w.kv.admit(
                             &p.request.prompt,
@@ -808,7 +1043,16 @@ impl VState {
                     });
                     match popped {
                         Popped::Job(pending) => {
-                            self.admit(wi, pending);
+                            if pending_expired(&pending, now) {
+                                // Deadline lapsed while queued: shed
+                                // instead of admitting late.
+                                self.faults.shed_expired += 1;
+                                self.faults.failed += 1;
+                                self.records[pending.rid] =
+                                    Some(failed_record(pending.rid, pending.arrival_s, now));
+                            } else {
+                                self.admit(wi, pending);
+                            }
                             progress = true;
                         }
                         Popped::Rejected(pending) => {
@@ -842,7 +1086,7 @@ impl VState {
     /// virtual mirror of the threaded admission arm.
     fn admit(&mut self, wi: usize, pending: VPending) {
         let init_ctx = pending.init_ctx();
-        let VPending { arrival_s, rid, request, resume } = pending;
+        let VPending { arrival_s, rid, request, resume, failover } = pending;
         let worst = request.worst_case_tokens();
         let w = &mut self.workers[wi];
         // A readmission consults the host tier first: when the demoted
@@ -853,6 +1097,15 @@ impl VState {
             Some(r) => w.kv.reserve_resumed(&request.prompt, &r.state, init_ctx, worst),
             None => w.kv.reserve_admitted(&request.prompt, init_ctx, worst),
         };
+        if failover {
+            // Restore-vs-recompute split for salvaged lanes, same
+            // bookkeeping as the threaded metrics.
+            if holdings.restored > 0 || holdings.prefix_hit > 0 {
+                self.faults.lanes_restored_on_failover += 1;
+            } else {
+                self.faults.lanes_recomputed_on_failover += 1;
+            }
+        }
         // A prefix hit starts the session at the cached position — the
         // lane feeds only the uncached suffix.
         let session = w.backend.new_session_at(holdings.prefix_hit).expect("sim session");
@@ -894,15 +1147,35 @@ impl VState {
 /// planned lane its span, absorb through the shared lane state machine,
 /// record emissions, and retire finished slots (mirrored into the
 /// scheduler and KV accounting, exactly like the threaded worker loop).
+///
+/// Lanes flagged in `w.injected` took a transient fault this step: they
+/// never fed the backend, so their state machines are untouched and the
+/// next plan retries the identical span. A lane whose retry budget is
+/// exhausted retires as failed — visibly, through the same KV-releasing
+/// exit as success.
 fn finish_step(
     w: &mut VWorker,
     now: f64,
     records: &mut [Option<VirtualRecord>],
     tpot_samples: &mut Vec<f64>,
+    fp: &FaultPlan,
+    counters: &mut FaultCounters,
 ) {
     let batch = std::mem::take(&mut w.batch);
-    let mut retire: Vec<usize> = Vec::new();
-    for p in &batch {
+    let injected = std::mem::take(&mut w.injected);
+    // (slot index, failed) pairs; sorted descending before swap_remove.
+    let mut retire: Vec<(usize, bool)> = Vec::new();
+    for (j, p) in batch.iter().enumerate() {
+        if injected.get(j).copied().unwrap_or(false) {
+            counters.faults_injected += 1;
+            let attempt = w.slots[p.slot].lane.note_retry();
+            if attempt <= fp.retry_budget {
+                counters.retries += 1;
+            } else {
+                retire.push((p.slot, true));
+            }
+            continue;
+        }
         let s = &mut w.slots[p.slot];
         let feed = s.lane.feed_span(p.span);
         let mut logits = None;
@@ -931,24 +1204,29 @@ fn finish_step(
                 s.token_times.push(now);
                 w.scheduler.note_progress(p.slot, s.lane.tokens_emitted());
                 if finished.is_some() {
-                    retire.push(p.slot);
+                    retire.push((p.slot, false));
                 }
             }
         }
     }
-    retire.sort_by(|a, b| b.cmp(a));
-    for i in retire {
+    retire.sort_by(|a, b| b.0.cmp(&a.0));
+    for (i, failed) in retire {
         let s = w.slots.swap_remove(i);
         w.scheduler.swap_remove(i);
         w.kv.release_lane(&s.lane);
-        records[s.rid] = Some(VirtualRecord {
-            request_id: s.rid,
-            arrival_s: s.arrival_s,
-            first_token_s: s.first_token_s.unwrap_or(now),
-            done_s: now,
-            tokens: s.lane.into_finished(),
-            token_times: s.token_times,
-        });
+        if failed {
+            counters.failed += 1;
+            records[s.rid] = Some(failed_record(s.rid, s.arrival_s, now));
+        } else {
+            records[s.rid] = Some(VirtualRecord {
+                request_id: s.rid,
+                arrival_s: s.arrival_s,
+                first_token_s: s.first_token_s.unwrap_or(now),
+                done_s: now,
+                tokens: s.lane.into_finished(),
+                token_times: s.token_times,
+            });
+        }
     }
 }
 
@@ -1430,5 +1708,234 @@ mod tests {
             max_gap(&chunked.records[0]),
             max_gap(&single.records[0])
         );
+    }
+
+    fn fault_plan_run(fp: FaultPlan) -> VirtualReport {
+        let mk_plan = || -> Vec<(f64, Request)> {
+            (0..8)
+                .map(|i| {
+                    let prompt: Vec<i64> = (0..4 + i as i64).map(|t| t + 1).collect();
+                    (0.001 * i as f64, Request::greedy("opt-tiny", prompt, 12))
+                })
+                .collect()
+        };
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 8, step_model());
+        vc.kv_bytes_per_token = 100;
+        vc.kv_budget_bytes = 64 * 16 * 100; // 64 blocks of 16 tokens
+        vc.kv_policy = KvPolicy::Paged { block_tokens: 16 };
+        vc.faults = fp;
+        run_virtual_plan("opt-tiny", 512, 1.0, mk_plan(), &vc).unwrap()
+    }
+
+    #[test]
+    fn virtual_crash_failover_keeps_streams_and_frees_kv() {
+        // Kill worker 0 after 3 fused steps: its in-flight lanes fail
+        // over to worker 1, every request completes with its fault-free
+        // stream, no KV block leaks, and reruns make identical recovery
+        // decisions.
+        let clean = fault_plan_run(FaultPlan::default());
+        assert_eq!((clean.worker_crashes, clean.failovers, clean.failed), (0, 0, 0));
+        let crashed = fault_plan_run(FaultPlan::parse("crash=0@3").unwrap());
+        assert_eq!(crashed.worker_crashes, 1);
+        assert!(crashed.failovers >= 1, "crash must have salvaged at least one lane");
+        assert_eq!(
+            crashed.failovers,
+            crashed.lanes_restored_on_failover + crashed.lanes_recomputed_on_failover
+        );
+        assert_eq!((crashed.failed, crashed.rejected), (0, 0));
+        assert_eq!(crashed.end_kv_blocks_in_use, 0, "crash leaked KV blocks");
+        for (a, b) in clean.records.iter().zip(&crashed.records) {
+            assert_eq!(a.tokens, b.tokens, "request {} stream changed", a.request_id);
+            assert_eq!(a.tokens.len(), 12);
+        }
+        let again = fault_plan_run(FaultPlan::parse("crash=0@3").unwrap());
+        assert_eq!(crashed.records, again.records, "recovery not deterministic");
+        assert_eq!(crashed.wall_s, again.wall_s);
+        assert_eq!(
+            (crashed.failovers, crashed.lanes_restored_on_failover, crashed.retries),
+            (again.failovers, again.lanes_restored_on_failover, again.retries)
+        );
+    }
+
+    #[test]
+    fn virtual_transient_retries_keep_streams() {
+        // A generous budget turns every injected transient into an
+        // in-place retry: streams match the fault-free run exactly and
+        // nothing fails. The retry only delays the virtual clock.
+        let clean = fault_plan_run(FaultPlan::default());
+        let faulted = fault_plan_run(
+            FaultPlan::parse("seed=11,transient=0.2,retries=1000000,backoff=0.000001").unwrap(),
+        );
+        assert!(faulted.faults_injected > 0, "0.2 over dozens of steps never fired");
+        assert_eq!(faulted.retries, faulted.faults_injected);
+        assert_eq!((faulted.failed, faulted.rejected), (0, 0));
+        assert_eq!(faulted.end_kv_blocks_in_use, 0);
+        for (a, b) in clean.records.iter().zip(&faulted.records) {
+            assert_eq!(a.tokens, b.tokens, "request {} stream changed", a.request_id);
+        }
+        assert!(faulted.wall_s >= clean.wall_s, "retries cannot shorten the run");
+    }
+
+    #[test]
+    fn virtual_transient_exhaustion_fails_visibly_and_releases_kv() {
+        // Certain faults with budget 2: each lane takes 3 injections
+        // (attempts 1 and 2 retried, attempt 3 exhausts) and retires as
+        // a visible failure — never a hang — releasing its blocks.
+        let r = fault_plan_run(FaultPlan::parse("transient=1.0,retries=2,backoff=0.000001").unwrap());
+        assert_eq!(r.failed, 8);
+        assert_eq!(r.faults_injected, 8 * 3);
+        assert_eq!(r.retries, 8 * 2);
+        assert!(r.records.iter().all(|rec| rec.tokens.is_empty()));
+        assert_eq!(r.end_kv_blocks_in_use, 0, "exhausted lanes leaked KV blocks");
+    }
+
+    #[test]
+    fn virtual_deadline_shed_counts_expired() {
+        // A zero deadline lapses before the dispatch that would admit
+        // it: the request is shed (empty record, `shed_expired`), while
+        // a generous deadline changes nothing.
+        let mk_plan = |deadline: Option<f64>| -> Vec<(f64, Request)> {
+            let keep = Request::greedy("opt-tiny", vec![1, 2, 3], 8);
+            let mut doomed = Request::greedy("opt-tiny", vec![4, 5, 6], 8);
+            doomed.deadline_s = deadline;
+            vec![(0.0, keep), (0.0, doomed)]
+        };
+        let run = |deadline: Option<f64>| -> VirtualReport {
+            let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model());
+            run_virtual_plan("opt-tiny", 512, 1.0, mk_plan(deadline), &vc).unwrap()
+        };
+        let shed = run(Some(0.0));
+        assert_eq!((shed.shed_expired, shed.failed), (1, 1));
+        assert_eq!(shed.records[0].tokens.len(), 8);
+        assert!(shed.records[1].tokens.is_empty(), "expired request still ran");
+        assert_eq!(shed.end_kv_blocks_in_use, 0);
+        let kept = run(Some(3600.0));
+        assert_eq!((kept.shed_expired, kept.failed), (0, 0));
+        assert_eq!(kept.records[1].tokens.len(), 8);
+    }
+
+    fn threaded_streams(cfg: CoordinatorConfig, reqs: &[Request]) -> Vec<Vec<i64>> {
+        let mut c = Coordinator::new(cfg);
+        c.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+        let handles: Vec<_> = reqs.iter().map(|r| c.submit(r.clone()).unwrap()).collect();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let streams = handles
+            .into_iter()
+            .map(|h| loop {
+                let remaining = deadline
+                    .checked_duration_since(Instant::now())
+                    .expect("timed out waiting for completion");
+                match h.events.recv_timeout(remaining) {
+                    Ok(TokenEvent::Done { tokens, .. }) => break tokens,
+                    Ok(TokenEvent::Error { message, .. }) => {
+                        panic!("request failed under faults: {message}")
+                    }
+                    Ok(_) => {}
+                    Err(e) => panic!("stream ended early: {e}"),
+                }
+            })
+            .collect();
+        c.shutdown();
+        streams
+    }
+
+    #[test]
+    fn fault_streams_property() {
+        // Random paged configs — tight pagers that preempt, chunked
+        // prefill, prefix cache, host tier — under a combined
+        // transient + crash plan with a generous retry budget: every
+        // request still completes and every stream is bit-identical to
+        // the fault-free run. Virtual harness on every case; threaded
+        // pool on a sampled subset (threads are orders of magnitude
+        // slower than virtual time).
+        use crate::util::proptest::{check, Config};
+        let sm = step_model();
+        let mut case = 0usize;
+        check("fault-streams", Config { cases: 12, ..Config::default() }, |rng| {
+            case += 1;
+            let block_tokens = *rng.choose(&[8usize, 16]);
+            let blocks = rng.range(10, 40); // per-worker pager capacity
+            let prefill_chunk = *rng.choose(&[0usize, 8, 16]);
+            let prefix_on = rng.bool(0.5);
+            let host_on = rng.bool(0.5);
+            let crash_step = rng.range(1, 6);
+            let n = rng.range(4, 9);
+            let reqs: Vec<(f64, Request)> = (0..n)
+                .map(|i| {
+                    let plen = rng.range(1, 25);
+                    let out = rng.range(6, 14);
+                    let prompt: Vec<i64> =
+                        (0..plen).map(|t| ((t + i) % 96) as i64 + 1).collect();
+                    (0.0005 * i as f64, Request::greedy("opt-tiny", prompt, out))
+                })
+                .collect();
+            let spec = format!(
+                "seed={case},transient=0.15,retries=100000,backoff=0.000001,crash=0@{crash_step}"
+            );
+            let run_v = |fp: FaultPlan| -> Result<VirtualReport, String> {
+                let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 8, sm);
+                vc.kv_bytes_per_token = 100;
+                vc.kv_budget_bytes = (blocks * block_tokens) as u64 * 100;
+                vc.kv_policy = KvPolicy::Paged { block_tokens };
+                vc.prefill_chunk = prefill_chunk;
+                if prefix_on {
+                    vc.prefix_cache = PrefixCacheConfig::on();
+                }
+                if host_on {
+                    vc.host_tier = HostTierConfig::from_step(&sm, blocks);
+                }
+                vc.faults = fp;
+                run_virtual_plan("opt-tiny", 512, 1.0, reqs.clone(), &vc)
+            };
+            let clean = run_v(FaultPlan::default())?;
+            let faulted = run_v(FaultPlan::parse(&spec).expect("fault spec"))?;
+            if faulted.failed != 0 || faulted.rejected != 0 {
+                return Err(format!(
+                    "faulted run lost requests: failed {} rejected {}",
+                    faulted.failed, faulted.rejected
+                ));
+            }
+            if faulted.end_kv_blocks_in_use != 0 {
+                return Err(format!("{} KV blocks leaked", faulted.end_kv_blocks_in_use));
+            }
+            for (a, b) in clean.records.iter().zip(&faulted.records) {
+                if a.tokens != b.tokens {
+                    return Err(format!(
+                        "request {} stream changed under faults ({spec})",
+                        a.request_id
+                    ));
+                }
+            }
+            if case % 6 == 1 {
+                let mk_cfg = |fp: FaultPlan| CoordinatorConfig {
+                    max_active_per_worker: 8,
+                    policy: SchedulerPolicy::RoundRobin,
+                    kv_bytes_per_token: 100,
+                    kv_budget_bytes: (blocks * block_tokens) as u64 * 100,
+                    kv_policy: KvPolicy::Paged { block_tokens },
+                    prefill_chunk,
+                    prefix_cache: if prefix_on {
+                        PrefixCacheConfig::on()
+                    } else {
+                        PrefixCacheConfig::off()
+                    },
+                    host_tier: if host_on {
+                        HostTierConfig::from_step(&sm, blocks)
+                    } else {
+                        HostTierConfig::off()
+                    },
+                    faults: fp,
+                    ..CoordinatorConfig::default()
+                };
+                let plain: Vec<Request> = reqs.iter().map(|(_, r)| r.clone()).collect();
+                let clean_t = threaded_streams(mk_cfg(FaultPlan::default()), &plain);
+                let faulted_t =
+                    threaded_streams(mk_cfg(FaultPlan::parse(&spec).expect("fault spec")), &plain);
+                if clean_t != faulted_t {
+                    return Err(format!("threaded streams changed under faults ({spec})"));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -36,13 +36,20 @@
 //!   (refcounted blocks + a block-granular prefix index, so shared
 //!   prompt prefixes hold one physical copy and skip their prefill),
 //!   pluggable scheduler policies (FCFS /
-//!   round-robin / shortest-first), p50/p95/p99 TTFT+TPOT metrics with
-//!   KV-utilization, preemption, prefill, and routing-balance gauges, a
+//!   round-robin / shortest-first), **deterministic fault injection
+//!   with bounded retry and worker failover** (seeded transient step
+//!   errors, whole-worker crashes with lane salvage onto healthy
+//!   siblings, slow workers — same plan, same recovery, both serving
+//!   paths), p50/p95/p99 TTFT+TPOT metrics with
+//!   KV-utilization, preemption, prefill, routing-balance, and fault
+//!   gauges, a
 //!   seeded Poisson load generator, and a deterministic virtual-time
 //!   load harness.
 //!   Submodules: [`coordinator::lane`] (the shared lane-state core both
 //!   serving paths drive), [`coordinator::router`] (steering, queues,
 //!   and the prefix registry — also shared by both paths),
+//!   [`coordinator::faults`] (the fault plan + taxonomy driving both
+//!   paths' recovery),
 //!   [`coordinator::scheduler`],
 //!   [`coordinator::backend`], [`coordinator::metrics`],
 //!   [`coordinator::workload`]. See `ARCHITECTURE.md` at the repo root

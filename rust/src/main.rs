@@ -10,7 +10,7 @@ use std::sync::Arc;
 use lpu::compiler::{compile, CompileOpts, ParallelMode};
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    BackendFactory, Coordinator, CoordinatorConfig, HostTierConfig, KvPolicy,
+    BackendFactory, Coordinator, CoordinatorConfig, FaultPlan, HostTierConfig, KvPolicy,
     PrefixCacheConfig, RouterPolicy, SchedulerPolicy, StepModel,
 };
 use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
@@ -30,10 +30,10 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF]" },
 ];
 
 fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
@@ -47,6 +47,17 @@ fn router_arg(args: &Args) -> Result<RouterPolicy, String> {
     RouterPolicy::parse(name).ok_or_else(|| {
         format!("unknown router policy '{name}' (round-robin|least-loaded|prefix-affinity)")
     })
+}
+
+/// Parse `--fault-plan` (shared by `serve` and `loadtest`): a
+/// deterministic fault-injection spec, e.g.
+/// `seed=7,transient=0.01,retries=3,backoff=0.001,crash=0@200,slow=1x2.5`.
+/// Absent flag = inert plan. A malformed spec is refused, not ignored.
+fn fault_arg(args: &Args) -> Result<FaultPlan, String> {
+    match args.opt("fault-plan") {
+        Some(spec) => FaultPlan::parse(spec).map_err(|e| e.to_string()),
+        None => Ok(FaultPlan::default()),
+    }
 }
 
 /// Parse the KV-accounting flags shared by `serve` and `loadtest`:
@@ -308,12 +319,18 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     };
     let policy = policy_arg(args)?;
     let router = router_arg(args)?;
+    let faults = fault_arg(args)?;
     let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier) =
         kv_args(args, &model)?;
     // Chunked prefill: 0 (default) = single-pass prompts; N = at most N
     // prompt tokens per fused step, interleaved with decode steps so a
     // long prompt stops inflating co-batched streams' TPOT.
     let prefill_chunk = args.opt_usize("prefill-chunk", 0)?;
+    let fault_desc = if faults.is_active() {
+        ", fault injection ON".to_string()
+    } else {
+        String::new()
+    };
     let mut coord = Coordinator::new(CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 8)?,
         policy,
@@ -325,6 +342,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         prefix_cache,
         router,
         host_tier,
+        faults,
         ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, workers, factory);
@@ -340,7 +358,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "host tier off".to_string()
     };
     println!(
-        "serving '{model}' ({backend}, {} scheduling, {} routing, {} KV, prefix cache {}, {host_desc}, {prefill_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
+        "serving '{model}' ({backend}, {} scheduling, {} routing, {} KV, prefix cache {}, {host_desc}, {prefill_desc}{fault_desc}) on {} with {workers} worker(s); Ctrl-C to stop",
         policy.name(),
         router.name(),
         kv_policy.name(),
@@ -395,6 +413,7 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
     };
     let policy = policy_arg(args)?;
     let router = router_arg(args)?;
+    let faults = fault_arg(args)?;
     let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier) =
         kv_args(args, &model)?;
     let mut coord = Coordinator::new(CoordinatorConfig {
@@ -407,6 +426,7 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         prefix_cache,
         router,
         host_tier,
+        faults,
         ..CoordinatorConfig::default()
     });
     coord.add_pool(&model, args.opt_usize("workers", 2)?, factory);

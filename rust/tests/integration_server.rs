@@ -121,6 +121,14 @@ fn metrics_op_schema_is_complete_across_pools() {
         "tpot_p99_s",
         "max_token_latency_s",
         "mean_request_latency_s",
+        "faults_injected",
+        "retries",
+        "failovers",
+        "lanes_restored_on_failover",
+        "lanes_recomputed_on_failover",
+        "worker_crashes",
+        "shed_expired",
+        "shed_livelock",
     ];
     for field in aggregate {
         assert!(
@@ -176,6 +184,13 @@ fn metrics_op_schema_is_complete_across_pools() {
                     "pools.{model}.workers[{i}].{field} missing or non-numeric"
                 );
             }
+            // The health gauge is boolean by contract (a scraper alerts
+            // on false), and no fault plan ran here.
+            assert_eq!(
+                w.get("healthy").as_bool(),
+                Some(true),
+                "pools.{model}.workers[{i}].healthy missing or not a bool"
+            );
         }
     }
     h.stop();

@@ -8,9 +8,10 @@
 #   1. cargo fmt --check
 #   2. cargo clippy -- -D warnings
 #   3. cargo build --release
-#   4. cargo test -q
+#   4. cargo test -q (plus a dedicated invariant-harness smoke line)
 #   5. cargo doc --no-deps with warnings denied (doc rot fails the gate)
-#   6. serving bench, smoke mode (LPU_BENCH_FAST=1)
+#   6. serving + scalability + cluster benches, smoke mode
+#      (LPU_BENCH_FAST=1), then the bench-JSON null gate
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -35,6 +36,13 @@ cargo build --release
 
 step "cargo test -q"
 cargo test -q
+
+step "invariant harness smoke (cargo test -q --test invariants)"
+# The shared serving-invariant harness (tests/common/invariants.rs) and
+# the cluster-tier acceptance tests run under plain `cargo test` too;
+# this dedicated line keeps the contract surface visible in CI output
+# and fails fast if only the harness regressed.
+cargo test -q --test invariants
 
 step "cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
 # Rustdoc is part of the contract (see ARCHITECTURE.md): a broken
@@ -63,6 +71,14 @@ step "scalability bench -> BENCH_scaling.json"
 # serving baseline. Config-deterministic: no smoke mode needed.
 cargo bench --bench fig7c_scalability
 
+step "cluster SLO bench (smoke) -> BENCH_cluster.json"
+# The replica-fleet sweep: SLO-attainment vs offered load under diurnal
+# and flash-crowd traces, the shed-vs-admit-all overload ablation
+# (shedding must strictly win at 8x overload), and the flash-crowd
+# autoscale timeline — self-calibrated, seed-deterministic, assertions
+# included in smoke mode. LPU_BENCH_CLUSTER_JSON=<path> redirects.
+LPU_BENCH_FAST=1 cargo bench --bench cluster_slo
+
 step "bench JSON sanity (no null fields survive the benches)"
 # The committed files start life as hand-written placeholders with null
 # summary fields (authoring containers lack a Rust toolchain). A bench
@@ -75,7 +91,8 @@ step "bench JSON sanity (no null fields survive the benches)"
 # the benches actually wrote
 # (LPU_BENCH_JSON / LPU_BENCH_SCALING_JSON redirect them).
 for bench_json in "${LPU_BENCH_JSON:-../BENCH_serving.json}" \
-                  "${LPU_BENCH_SCALING_JSON:-../BENCH_scaling.json}"; do
+                  "${LPU_BENCH_SCALING_JSON:-../BENCH_scaling.json}" \
+                  "${LPU_BENCH_CLUSTER_JSON:-../BENCH_cluster.json}"; do
   if grep -n 'null' "$bench_json"; then
     echo "error: $bench_json still contains null fields after the bench run" >&2
     exit 1

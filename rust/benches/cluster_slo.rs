@@ -1,0 +1,323 @@
+//! Cluster-scale SLO study over the virtual fleet: {arrival trace ×
+//! offered load} sweeps of a 2-replica cluster with a 50/50
+//! interactive/batch tier mix, reporting per-tier SLO attainment and
+//! shed fraction per cell, plus two ablations:
+//!
+//! * **load shedding**: at 8x the fleet's sustainable rate, deadline-
+//!   aware admission (projected queue delay vs the tier's TTFT budget)
+//!   vs admit-everything — interactive attainment with shedding must
+//!   land strictly above the no-shedding baseline (asserted; the
+//!   no-shed fleet queues every arrival until nearly nothing meets its
+//!   budget, while admission keeps the admitted set inside it);
+//! * **autoscaling**: a flash-crowd trace over a min=1/max=4 fleet
+//!   with a warm-up charge per activation — the controller must ride
+//!   the burst up to >= 2 active replicas (asserted) and the full
+//!   `(t, active)` timeline is emitted.
+//!
+//! The TTFT budget and rate grid are **self-calibrated**: a light-load
+//! probe measures base TTFT (budget = 8x its p50) and a backlogged
+//! probe measures one replica's sustainable request rate, so the sweep
+//! lands in the same regimes on any step model. Every number is a pure
+//! function of (seed, config); reruns are asserted bit-identical.
+//! Results go to `../BENCH_cluster.json` (override with
+//! `LPU_BENCH_CLUSTER_JSON=<path>`; schema pinned by
+//! `tests/bench_schema.rs` and documented in README).
+//!
+//! `LPU_BENCH_FAST=1` shrinks the sweep for CI smoke runs.
+
+use lpu::config::LpuConfig;
+use lpu::coordinator::{
+    run_virtual, run_virtual_cluster, ArrivalTrace, AutoscaleConfig, ClusterConfig,
+    ClusterReport, ClusterWorkload, LenDist, SchedulerPolicy, SloTier, StepModel,
+    VirtualConfig, Workload,
+};
+use lpu::model::by_name;
+use lpu::util::json::{obj, Json};
+use lpu::util::table::Table;
+
+fn base_workload(rate: f64, n: usize, seed: u64) -> Workload {
+    Workload {
+        model: "opt-1.3b".into(),
+        rate,
+        n_requests: n,
+        prompt_len: LenDist::Uniform(4, 32),
+        output_len: LenDist::LongTail { min: 8, mean_extra: 48.0, cap: 256 },
+        vocab: 512,
+        seed,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("LPU_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n_requests = if fast { 120 } else { 400 };
+    let rate_mults: &[f64] = if fast { &[0.5, 8.0] } else { &[0.5, 1.0, 2.0, 8.0] };
+    let replicas = 2usize;
+    let interactive_fraction = 0.5f64;
+
+    let model = by_name("opt-1.3b").unwrap();
+    let device = LpuConfig::asic_3_28tbs();
+    let step = StepModel::from_config(&model, &device, 1);
+    let mk_pool = || {
+        let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 16, step);
+        vc.max_batch = 8;
+        vc
+    };
+
+    // ---- self-calibration: base TTFT at whisper-light load, and one
+    // replica's sustainable request rate from a backlogged run. Both
+    // deterministic, so the derived budget and rate grid are too.
+    let light = run_virtual(&base_workload(20.0, 40, 0xC11B), &mk_pool()).expect("probe");
+    let base_ttft_s = light.ttft.p50;
+    let backlog =
+        run_virtual(&base_workload(100_000.0, n_requests.min(160), 0xFEED), &mk_pool())
+            .expect("backlog probe");
+    let total_tokens: usize = backlog.records.iter().map(|r| r.tokens.len()).sum();
+    let mean_out = total_tokens as f64 / backlog.records.len().max(1) as f64;
+    let sustainable = backlog.tokens_per_s / mean_out.max(1.0);
+    let fleet_sustainable = sustainable * replicas as f64;
+    let budget_s = base_ttft_s * 8.0;
+
+    // ---- {trace x offered load} attainment sweep ----
+    let mut cells: Vec<Json> = Vec::new();
+    let mut t = Table::new(
+        format!(
+            "cluster SLO sweep: opt-1.3b on {}, {replicas} replicas, 50/50 tier mix, \
+             TTFT budget {:.2} ms",
+            device.name,
+            budget_s * 1e3
+        ),
+        &[
+            "trace",
+            "x sustain",
+            "req/s",
+            "int attain %",
+            "batch attain %",
+            "int shed %",
+            "tok/s",
+            "wall s",
+        ],
+    );
+    let mut sweep: Vec<(String, f64, ClusterReport)> = Vec::new();
+    for &mult in rate_mults {
+        let rate = mult * fleet_sustainable;
+        let span = n_requests as f64 / rate;
+        for trace in [
+            ArrivalTrace::Diurnal { period_s: span * 0.5, depth: 0.8 },
+            ArrivalTrace::FlashCrowd {
+                at_s: span * 0.2,
+                dur_s: span * 0.3,
+                magnification: 8.0,
+            },
+        ] {
+            let wl = ClusterWorkload {
+                base: base_workload(rate, n_requests, 0xA11CE),
+                trace,
+                interactive_fraction,
+                interactive_deadline_s: budget_s,
+            };
+            let cc = ClusterConfig::new(replicas, mk_pool());
+            let r = run_virtual_cluster(&wl, &cc).expect("cluster run");
+            let r2 = run_virtual_cluster(&wl, &cc).expect("cluster rerun");
+            assert_eq!(r.records, r2.records, "bit-identical rerun ({})", trace.name());
+            assert_eq!(r.wall_s, r2.wall_s);
+            assert_eq!(r.shed_batch, 0, "the batch tier must never shed");
+            assert_eq!(r.end_kv_blocks_in_use, 0, "the fleet leaked KV blocks");
+            let ia = r.attainment(SloTier::Interactive);
+            let ba = r.attainment(SloTier::Batch);
+            let isf = r.shed_fraction(SloTier::Interactive);
+            t.row(&[
+                trace.name().to_string(),
+                format!("{mult:.1}"),
+                format!("{rate:.0}"),
+                format!("{:.1}", ia * 100.0),
+                format!("{:.1}", ba * 100.0),
+                format!("{:.1}", isf * 100.0),
+                format!("{:.0}", r.tokens_per_s),
+                format!("{:.3}", r.wall_s),
+            ]);
+            cells.push(obj(vec![
+                ("trace", trace.name().into()),
+                ("rate_multiple", mult.into()),
+                ("offered_rate_req_s", rate.into()),
+                ("n_requests", n_requests.into()),
+                ("replicas", replicas.into()),
+                ("interactive_attainment", ia.into()),
+                ("batch_attainment", ba.into()),
+                ("interactive_shed_fraction", isf.into()),
+                ("submitted_interactive", r.submitted_interactive.into()),
+                ("submitted_batch", r.submitted_batch.into()),
+                ("shed_interactive", r.shed_interactive.into()),
+                ("completed_interactive", r.completed_interactive.into()),
+                ("completed_batch", r.completed_batch.into()),
+                ("peak_replicas", r.peak_replicas.into()),
+                ("tok_s", r.tokens_per_s.into()),
+                ("wall_s", r.wall_s.into()),
+            ]));
+            sweep.push((trace.name().to_string(), mult, r));
+        }
+    }
+    t.note("attainment: interactive = TTFT within budget over ALL offered (shed counts against); batch = completed");
+    t.note("virtual time; bit-identical across reruns for a fixed seed");
+    t.print();
+    // The curves must slope the right way: for each trace, interactive
+    // attainment at the lightest load is no worse than at 8x overload.
+    for trace_name in ["diurnal", "flash_crowd"] {
+        let of = |mult: f64| {
+            sweep
+                .iter()
+                .find(|(n, m, _)| n == trace_name && *m == mult)
+                .map(|(_, _, r)| r.attainment(SloTier::Interactive))
+                .expect("sweep cell")
+        };
+        let (lo, hi) = (of(rate_mults[0]), of(*rate_mults.last().unwrap()));
+        assert!(
+            lo >= hi,
+            "{trace_name}: attainment {lo:.3} at {}x must be >= {hi:.3} at {}x",
+            rate_mults[0],
+            rate_mults.last().unwrap()
+        );
+    }
+
+    // ---- load-shedding ablation at 8x overload ----
+    let over_rate = 8.0 * fleet_sustainable;
+    let wl_over = ClusterWorkload {
+        base: base_workload(over_rate, n_requests, 0xA11CE),
+        trace: ArrivalTrace::Uniform,
+        interactive_fraction,
+        interactive_deadline_s: budget_s,
+    };
+    let run_over = |shed: bool| -> ClusterReport {
+        let mut cc = ClusterConfig::new(replicas, mk_pool());
+        cc.shed = shed;
+        run_virtual_cluster(&wl_over, &cc).expect("overload run")
+    };
+    let shed_on = run_over(true);
+    let shed_off = run_over(false);
+    let a_on = shed_on.attainment(SloTier::Interactive);
+    let a_off = shed_off.attainment(SloTier::Interactive);
+    let mut at = Table::new(
+        format!("shedding ablation: {replicas} replicas at 8x sustainable ({over_rate:.0} req/s)"),
+        &["admission", "int attain %", "int shed %", "completed int", "wall s"],
+    );
+    for (label, r) in [("admit-all", &shed_off), ("deadline-aware", &shed_on)] {
+        at.row(&[
+            label.to_string(),
+            format!("{:.1}", r.attainment(SloTier::Interactive) * 100.0),
+            format!("{:.1}", r.shed_fraction(SloTier::Interactive) * 100.0),
+            r.completed_interactive.to_string(),
+            format!("{:.3}", r.wall_s),
+        ]);
+    }
+    at.note("same plan, same replicas — only the front-end admission rule differs");
+    at.print();
+    // The tentpole acceptance: shedding strictly beats admit-everything
+    // on interactive attainment at overload, even though every shed
+    // request counts against it.
+    assert!(
+        a_on > a_off,
+        "shed attainment {a_on:.4} must be strictly above no-shed {a_off:.4} at overload"
+    );
+
+    // ---- autoscaling under a flash crowd ----
+    let auto_rate = 2.0 * sustainable; // 2x ONE replica's capacity
+    let n_auto = n_requests.max(240); // virtual time: cheap even in smoke mode
+    let auto_span = n_auto as f64 / auto_rate;
+    let flash = ArrivalTrace::FlashCrowd {
+        at_s: auto_span * 0.2,
+        dur_s: auto_span * 0.3,
+        magnification: 8.0,
+    };
+    // Explicit thresholds so the cell self-scales on any step model:
+    // a 2x-overloaded replica accumulates ~t seconds of backlog by
+    // virtual time t, crossing `up_backlog_s` within a few intervals.
+    let ac = AutoscaleConfig {
+        min_replicas: 1,
+        max_replicas: 4,
+        interval_s: 0.05,
+        warmup_s: 0.1,
+        up_backlog_s: 0.25,
+        down_backlog_s: 0.05,
+    };
+    let wl_auto = ClusterWorkload {
+        base: base_workload(auto_rate, n_auto, 0xA11CE),
+        trace: flash,
+        interactive_fraction,
+        interactive_deadline_s: budget_s,
+    };
+    let mut cc_auto = ClusterConfig::new(1, mk_pool());
+    cc_auto.autoscale = Some(ac);
+    let auto_r = run_virtual_cluster(&wl_auto, &cc_auto).expect("autoscale run");
+    let auto_r2 = run_virtual_cluster(&wl_auto, &cc_auto).expect("autoscale rerun");
+    assert_eq!(auto_r.records, auto_r2.records, "bit-identical rerun (autoscale)");
+    assert_eq!(auto_r.replica_timeline, auto_r2.replica_timeline);
+    assert!(
+        auto_r.peak_replicas >= 2,
+        "a 2x-overloaded flash crowd must scale past 1 replica (peak {})",
+        auto_r.peak_replicas
+    );
+    let mut st = Table::new(
+        format!(
+            "autoscale: flash crowd at {auto_rate:.0} req/s, min {} / max {} replicas, \
+             {:.2}s warm-up",
+            ac.min_replicas, ac.max_replicas, ac.warmup_s
+        ),
+        &["t s", "active replicas"],
+    );
+    for &(at_s, n) in &auto_r.replica_timeline {
+        st.row(&[format!("{at_s:.3}"), n.to_string()]);
+    }
+    st.note(format!(
+        "peak {} replicas; scaling is never free — activations land warm-up late",
+        auto_r.peak_replicas
+    ));
+    st.print();
+
+    // ---- machine-readable results ----
+    let out_path = std::env::var("LPU_BENCH_CLUSTER_JSON")
+        .unwrap_or_else(|_| "../BENCH_cluster.json".to_string());
+    let doc = obj(vec![
+        ("bench", "cluster_slo".into()),
+        ("fast", fast.into()),
+        ("model", "opt-1.3b".into()),
+        ("device", device.name.clone().into()),
+        ("replicas", replicas.into()),
+        ("interactive_fraction", interactive_fraction.into()),
+        ("ttft_budget_ms", (budget_s * 1e3).into()),
+        (
+            "calibration",
+            obj(vec![
+                ("base_ttft_ms", (base_ttft_s * 1e3).into()),
+                ("sustainable_rate_req_s", sustainable.into()),
+            ]),
+        ),
+        (
+            "overload_ablation",
+            obj(vec![
+                ("offered_rate_req_s", over_rate.into()),
+                ("noshed_interactive_attainment", a_off.into()),
+                ("shed_interactive_attainment", a_on.into()),
+                ("attainment_gain", (a_on - a_off).into()),
+                (
+                    "shed_fraction_interactive",
+                    shed_on.shed_fraction(SloTier::Interactive).into(),
+                ),
+            ]),
+        ),
+        (
+            "autoscale_summary",
+            obj(vec![
+                ("trace", flash.name().into()),
+                ("min_replicas", ac.min_replicas.into()),
+                ("max_replicas", ac.max_replicas.into()),
+                ("peak_replicas", auto_r.peak_replicas.into()),
+                ("scale_events", auto_r.replica_timeline.len().into()),
+                ("wall_s", auto_r.wall_s.into()),
+            ]),
+        ),
+        ("cells", Json::Arr(cells)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nwarning: could not write {out_path}: {e}"),
+    }
+}

@@ -1,0 +1,1386 @@
+//! Cluster tier: an SLO-aware replica fleet above the worker pool.
+//!
+//! The paper's pitch is not one LPU but a *scalable* fleet; the roadmap
+//! north star is "millions of users". This module adds the layer that
+//! turns N independent pools into one deployment:
+//!
+//! * **SLO tiers** ([`SloTier`]): a request with a deadline
+//!   ([`Request::deadline_s`]) is *interactive* — its deadline doubles
+//!   as the TTFT budget the front-end admits against; a request without
+//!   one is *batch* — throughput-only, never shed.
+//! * **Deadline-aware admission with load shedding**: the front-end
+//!   keeps a fluid work horizon per replica (estimated seconds of
+//!   accepted-but-unserved work, priced by the same [`StepModel`] terms
+//!   the pools charge) and sheds an interactive arrival when every
+//!   routable replica's projected queue delay exceeds its TTFT budget.
+//!   Shedding happens strictly *before* the first token — an admitted
+//!   stream is never dropped mid-flight.
+//! * **Step-driven autoscaling** ([`AutoscaleConfig`]): on a fixed
+//!   evaluation grid the controller compares per-replica backlog
+//!   seconds against up/down thresholds and activates or drains
+//!   replicas; a freshly activated replica is only routable after a
+//!   configurable warm-up, so scaling is never free.
+//! * **Arrival traces** ([`ArrivalTrace`]): diurnal and flash-crowd
+//!   intensity modulation over the Poisson base rate, so SLO-attainment
+//!   curves can be swept against realistic load shapes
+//!   (`benches/cluster_slo.rs` → `BENCH_cluster.json`).
+//!
+//! Per the standing constraint, the fleet logic runs on BOTH serving
+//! paths without forking: the per-arrival decision core ([`FrontEnd`])
+//! is one struct, driven on virtual seconds by [`run_virtual_cluster`]
+//! (each replica is a full, unmodified
+//! [`run_virtual_plan`][super::workload::run_virtual_plan] pool) and on
+//! wall seconds by the threaded [`Cluster`] dispatcher (each replica a
+//! live [`Coordinator`]). Greedy token streams are a pure function of
+//! (model, prompt) in the sim backend, so completed streams are
+//! bit-identical per seed regardless of tier, replica count, or
+//! placement — asserted by `tests/invariants.rs` through the shared
+//! invariant harness.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+use super::backend::StepModel;
+use super::metrics::Metrics;
+use super::workload::{
+    run_virtual_plan, LenDist, VirtualConfig, VirtualReport, Workload,
+};
+use super::{Coordinator, Request, RequestHandle, TokenEvent};
+
+/// SLO class of a request. Classification is structural: carrying a
+/// deadline makes a request interactive (the deadline is its TTFT
+/// budget); no deadline means batch (throughput-only, never shed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SloTier {
+    /// TTFT-bounded: admitted only when the projected queue delay fits
+    /// the request's deadline budget; shed otherwise.
+    Interactive,
+    /// Throughput-only: always admitted (modulo pool-level KV
+    /// rejection), never shed by the front-end.
+    Batch,
+}
+
+impl SloTier {
+    /// Classify a request by the presence of a deadline.
+    pub fn classify(req: &Request) -> SloTier {
+        if req.deadline_s.is_some() {
+            SloTier::Interactive
+        } else {
+            SloTier::Batch
+        }
+    }
+
+    /// Stable lowercase name for JSON/CLI surfaces.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloTier::Interactive => "interactive",
+            SloTier::Batch => "batch",
+        }
+    }
+}
+
+/// CLI tier mix (`--slo-tier batch|interactive:<ttft_s>|mixed:<ttft_s>:<fraction>`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SloTierSpec {
+    /// Every request is batch tier (no deadlines).
+    Batch,
+    /// Every request is interactive with this TTFT budget, seconds.
+    Interactive {
+        /// TTFT budget applied as each request's deadline.
+        ttft_s: f64,
+    },
+    /// A seeded mix: `fraction` of requests are interactive with
+    /// `ttft_s` budgets, the rest batch.
+    Mixed {
+        /// TTFT budget for the interactive share.
+        ttft_s: f64,
+        /// Interactive fraction in [0, 1].
+        fraction: f64,
+    },
+}
+
+impl SloTierSpec {
+    /// Parse the CLI grammar. Misconfiguration is refused, not ignored.
+    pub fn parse(s: &str) -> Result<SloTierSpec, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let ttft = |v: &str| -> Result<f64, String> {
+            let t: f64 =
+                v.parse().map_err(|_| format!("--slo-tier: bad ttft '{v}'"))?;
+            if !t.is_finite() || t <= 0.0 {
+                return Err(format!("--slo-tier: ttft must be > 0, got '{v}'"));
+            }
+            Ok(t)
+        };
+        match parts.as_slice() {
+            ["batch"] => Ok(SloTierSpec::Batch),
+            ["interactive", t] => Ok(SloTierSpec::Interactive { ttft_s: ttft(t)? }),
+            ["mixed", t, f] => {
+                let fraction: f64 =
+                    f.parse().map_err(|_| format!("--slo-tier: bad fraction '{f}'"))?;
+                if !(0.0..=1.0).contains(&fraction) {
+                    return Err(format!(
+                        "--slo-tier: fraction must be in [0,1], got '{f}'"
+                    ));
+                }
+                Ok(SloTierSpec::Mixed { ttft_s: ttft(t)?, fraction })
+            }
+            _ => Err(format!(
+                "--slo-tier: want batch | interactive:<ttft_s> | \
+                 mixed:<ttft_s>:<fraction>, got '{s}'"
+            )),
+        }
+    }
+
+    /// The (interactive fraction, TTFT budget) pair the workload
+    /// generator consumes.
+    pub fn mix(self) -> (f64, f64) {
+        match self {
+            SloTierSpec::Batch => (0.0, 0.0),
+            SloTierSpec::Interactive { ttft_s } => (1.0, ttft_s),
+            SloTierSpec::Mixed { ttft_s, fraction } => (fraction, ttft_s),
+        }
+    }
+}
+
+/// Autoscaling policy (`--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..`).
+///
+/// Evaluated on a fixed grid of `interval_s` ticks: the controller's
+/// gauge is mean backlog seconds per active replica (how far each fluid
+/// work horizon runs ahead of now). Above `up_backlog_s` it activates
+/// one more replica — routable only after `warmup_s` — and below
+/// `down_backlog_s` it drains the highest-indexed active replica
+/// (in-flight work finishes; it just stops receiving).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Floor on active replicas (>= 1).
+    pub min_replicas: usize,
+    /// Ceiling on active replicas.
+    pub max_replicas: usize,
+    /// Controller evaluation period, seconds.
+    pub interval_s: f64,
+    /// Delay before a newly activated replica accepts traffic, seconds
+    /// (weight streaming / model load — scaling is never free).
+    pub warmup_s: f64,
+    /// Scale up when mean backlog-seconds per active replica exceeds
+    /// this.
+    pub up_backlog_s: f64,
+    /// Scale down when mean backlog-seconds per active replica falls
+    /// below this.
+    pub down_backlog_s: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            interval_s: 0.25,
+            warmup_s: 0.5,
+            up_backlog_s: 0.5,
+            down_backlog_s: 0.05,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Parse `key=value` pairs over the default config. Unknown keys
+    /// and inconsistent bounds are refused, not ignored.
+    pub fn parse(spec: &str) -> Result<AutoscaleConfig, String> {
+        let mut cfg = AutoscaleConfig::default();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--autoscale: want key=value, got '{part}'"))?;
+            let f = || -> Result<f64, String> {
+                val.parse().map_err(|_| format!("--autoscale: bad value '{val}' for '{key}'"))
+            };
+            match key.trim() {
+                "min" => {
+                    cfg.min_replicas = val
+                        .parse()
+                        .map_err(|_| format!("--autoscale: bad value '{val}' for 'min'"))?
+                }
+                "max" => {
+                    cfg.max_replicas = val
+                        .parse()
+                        .map_err(|_| format!("--autoscale: bad value '{val}' for 'max'"))?
+                }
+                "interval" => cfg.interval_s = f()?,
+                "warmup" => cfg.warmup_s = f()?,
+                "up" => cfg.up_backlog_s = f()?,
+                "down" => cfg.down_backlog_s = f()?,
+                other => return Err(format!("--autoscale: unknown key '{other}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min_replicas == 0 {
+            return Err("--autoscale: min must be >= 1".into());
+        }
+        if self.max_replicas < self.min_replicas {
+            return Err("--autoscale: max must be >= min".into());
+        }
+        if !(self.interval_s.is_finite() && self.interval_s > 0.0) {
+            return Err("--autoscale: interval must be > 0".into());
+        }
+        if !(self.warmup_s.is_finite() && self.warmup_s >= 0.0) {
+            return Err("--autoscale: warmup must be >= 0".into());
+        }
+        if !(self.up_backlog_s.is_finite() && self.up_backlog_s >= 0.0)
+            || !(self.down_backlog_s.is_finite() && self.down_backlog_s >= 0.0)
+        {
+            return Err("--autoscale: up/down must be >= 0".into());
+        }
+        if self.down_backlog_s > self.up_backlog_s {
+            return Err("--autoscale: down threshold must not exceed up".into());
+        }
+        Ok(())
+    }
+}
+
+/// Cluster deployment configuration: N replicas of one pool config.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Initial replica count (>= 1). With autoscaling this is clamped
+    /// into `[min_replicas, max_replicas]`.
+    pub replicas: usize,
+    /// The per-replica pool: worker count, slots, KV policy, step model
+    /// — each replica is one full pool run by the unmodified machinery.
+    pub pool: VirtualConfig,
+    /// SLO admission: shed interactive arrivals whose projected queue
+    /// delay exceeds their TTFT budget. Batch is never shed.
+    pub shed: bool,
+    /// Optional autoscaling policy (None = fixed fleet).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Default deadline applied to requests arriving without one
+    /// (`--slo-tier interactive:<ttft_s>` on the server path). None
+    /// leaves untagged requests batch tier.
+    pub default_deadline_s: Option<f64>,
+}
+
+impl ClusterConfig {
+    /// A fixed fleet of `replicas` pools with SLO shedding enabled.
+    pub fn new(replicas: usize, pool: VirtualConfig) -> ClusterConfig {
+        ClusterConfig { replicas, pool, shed: true, autoscale: None, default_deadline_s: None }
+    }
+}
+
+/// Arrival-intensity shape over the Poisson base rate: the generator
+/// divides each exponential gap by `intensity(t)`, so an intensity of 2
+/// doubles the instantaneous arrival rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalTrace {
+    /// Constant intensity 1 (plain Poisson).
+    Uniform,
+    /// Sinusoidal day/night swing: `1 + depth * sin(2πt/period)`,
+    /// floored at 0.05 so the rate never hits zero.
+    Diurnal {
+        /// Full day length, seconds (virtual).
+        period_s: f64,
+        /// Swing amplitude; 1.0 swings between ~0 and 2x.
+        depth: f64,
+    },
+    /// A flash crowd: `magnification`x intensity inside
+    /// `[at_s, at_s + dur_s)`, 1 outside.
+    FlashCrowd {
+        /// Burst start, seconds.
+        at_s: f64,
+        /// Burst duration, seconds.
+        dur_s: f64,
+        /// Intensity multiplier during the burst.
+        magnification: f64,
+    },
+}
+
+impl ArrivalTrace {
+    /// Instantaneous intensity multiplier at time `t`.
+    pub fn intensity(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalTrace::Uniform => 1.0,
+            ArrivalTrace::Diurnal { period_s, depth } => {
+                let phase = 2.0 * std::f64::consts::PI * t / period_s.max(1e-9);
+                (1.0 + depth * phase.sin()).max(0.05)
+            }
+            ArrivalTrace::FlashCrowd { at_s, dur_s, magnification } => {
+                if t >= at_s && t < at_s + dur_s {
+                    magnification.max(0.05)
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Stable name for JSON/CLI surfaces.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalTrace::Uniform => "uniform",
+            ArrivalTrace::Diurnal { .. } => "diurnal",
+            ArrivalTrace::FlashCrowd { .. } => "flash_crowd",
+        }
+    }
+
+    /// Parse `uniform | diurnal:<period_s>:<depth> | flash:<at_s>:<dur_s>:<mag>`.
+    pub fn parse(s: &str) -> Result<ArrivalTrace, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let f = |v: &str| -> Result<f64, String> {
+            let x: f64 = v.parse().map_err(|_| format!("--trace: bad number '{v}'"))?;
+            if !x.is_finite() {
+                return Err(format!("--trace: non-finite '{v}'"));
+            }
+            Ok(x)
+        };
+        match parts.as_slice() {
+            ["uniform"] => Ok(ArrivalTrace::Uniform),
+            ["diurnal", p, d] => Ok(ArrivalTrace::Diurnal { period_s: f(p)?, depth: f(d)? }),
+            ["flash", at, dur, mag] => Ok(ArrivalTrace::FlashCrowd {
+                at_s: f(at)?,
+                dur_s: f(dur)?,
+                magnification: f(mag)?,
+            }),
+            _ => Err(format!(
+                "--trace: want uniform | diurnal:<period_s>:<depth> | \
+                 flash:<at_s>:<dur_s>:<mag>, got '{s}'"
+            )),
+        }
+    }
+}
+
+/// A tiered, trace-shaped workload: the base [`Workload`] generator
+/// with arrival-intensity modulation and a seeded interactive/batch
+/// split. Same seed, same plan, bit for bit.
+#[derive(Clone, Debug)]
+pub struct ClusterWorkload {
+    /// Base rate, lengths, vocab, seed, request count.
+    pub base: Workload,
+    /// Arrival-intensity shape over the base Poisson rate.
+    pub trace: ArrivalTrace,
+    /// Fraction of requests tagged interactive (deadline-carrying).
+    pub interactive_fraction: f64,
+    /// TTFT budget (deadline) each interactive request carries, s.
+    pub interactive_deadline_s: f64,
+}
+
+impl ClusterWorkload {
+    /// Generate the request plan: `(arrival_s, request)` with
+    /// non-decreasing arrivals, trace-modulated gaps, and per-request
+    /// tier tags.
+    pub fn generate(&self) -> Vec<(f64, Request)> {
+        let mut rng = Rng::new(self.base.seed);
+        let mut at = 0.0f64;
+        (0..self.base.n_requests)
+            .map(|i| {
+                at += rng.exp(self.base.rate) / self.trace.intensity(at).max(1e-9);
+                let p_len = self.base.prompt_len.sample(&mut rng);
+                let o_len = self.base.output_len.sample(&mut rng).max(1);
+                let prompt = (0..p_len.max(1))
+                    .map(|_| rng.range(0, self.base.vocab) as i64)
+                    .collect();
+                let interactive = rng.bool(self.interactive_fraction);
+                let req = Request {
+                    model: self.base.model.clone(),
+                    prompt,
+                    max_new_tokens: o_len,
+                    params: crate::numerics::SampleParams::greedy(),
+                    eos_token: None,
+                    seed: self.base.seed ^ i as u64,
+                    deadline_s: if interactive {
+                        Some(self.interactive_deadline_s)
+                    } else {
+                        None
+                    },
+                };
+                (at, req)
+            })
+            .collect()
+    }
+
+    /// Check internal consistency (refused, not ignored).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.interactive_fraction) {
+            return Err("cluster workload: interactive fraction must be in [0,1]".into());
+        }
+        if self.interactive_fraction > 0.0
+            && !(self.interactive_deadline_s.is_finite() && self.interactive_deadline_s > 0.0)
+        {
+            return Err("cluster workload: interactive deadline must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// The front-end's verdict on one arrival.
+enum Admission {
+    Route { replica: usize, tier: SloTier },
+    Shed { tier: SloTier },
+}
+
+/// The per-arrival decision core shared VERBATIM by both serving paths
+/// (the virtual sweep drives it on virtual seconds, the threaded
+/// [`Cluster`] on wall seconds): tier classification, fluid work
+/// horizons per replica, deadline-aware shedding, and the autoscale
+/// controller. Pure arithmetic over arrival times — deterministic.
+struct FrontEnd {
+    /// Routable flag per replica slot (autoscale flips these).
+    active: Vec<bool>,
+    /// Earliest time each replica may receive traffic (warm-up).
+    available_from: Vec<f64>,
+    /// Fluid work horizon per replica: the virtual timestamp at which
+    /// its accepted work is projected to drain.
+    horizon: Vec<f64>,
+    /// `(t, active_count)` at init and at every autoscale action.
+    timeline: Vec<(f64, usize)>,
+    /// Next controller evaluation is at `last_eval + interval`.
+    last_eval: f64,
+    shed: bool,
+    autoscale: Option<AutoscaleConfig>,
+    default_deadline_s: Option<f64>,
+    /// Per-replica worker count (horizon advance divides by this).
+    workers: f64,
+    /// Resolved fused-batch cap for the amortized weight-stream term.
+    max_batch: f64,
+    step: StepModel,
+}
+
+impl FrontEnd {
+    fn new(cc: &ClusterConfig) -> Result<FrontEnd, String> {
+        if cc.replicas == 0 {
+            return Err("cluster config needs >= 1 replica".into());
+        }
+        if let Some(a) = &cc.autoscale {
+            a.validate()?;
+        }
+        let slots = cc
+            .autoscale
+            .as_ref()
+            .map_or(cc.replicas, |a| a.max_replicas.max(cc.replicas));
+        let initial = cc
+            .autoscale
+            .as_ref()
+            .map_or(cc.replicas, |a| cc.replicas.clamp(a.min_replicas, a.max_replicas));
+        let max_batch =
+            if cc.pool.max_batch == 0 { cc.pool.max_active } else { cc.pool.max_batch };
+        Ok(FrontEnd {
+            active: (0..slots).map(|i| i < initial).collect(),
+            available_from: vec![0.0; slots],
+            horizon: vec![0.0; slots],
+            timeline: vec![(0.0, initial)],
+            last_eval: 0.0,
+            shed: cc.shed,
+            autoscale: cc.autoscale,
+            default_deadline_s: cc.default_deadline_s,
+            workers: cc.pool.workers.max(1) as f64,
+            max_batch: max_batch.max(1) as f64,
+            step: cc.pool.step,
+        })
+    }
+
+    fn slots(&self) -> usize {
+        self.active.len()
+    }
+
+    fn active_count(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    /// Estimated service seconds one request adds to a replica (whole-
+    /// pool view, so the caller divides by the worker count): a
+    /// single-pass prefill plus per-token decode steps with the weight
+    /// stream amortized across the fused batch — the same first-order
+    /// terms [`StepModel`] charges the pools.
+    fn request_cost_s(&self, req: &Request) -> f64 {
+        let prompt = req.prompt.len().max(1) as f64;
+        let out = req.max_new_tokens.max(1) as f64;
+        let prefill = self.step.weight_stream_s
+            + prompt * self.step.kv_read_s_per_pos
+            + self.step.lane_overhead_s
+            + self.step.sync_s;
+        let avg_pos = prompt + out * 0.5;
+        let per_token = (self.step.weight_stream_s + self.step.sync_s) / self.max_batch
+            + avg_pos * self.step.kv_read_s_per_pos
+            + self.step.lane_overhead_s;
+        prefill + out * per_token
+    }
+
+    /// Run the autoscale controller over every whole evaluation tick up
+    /// to `t`.
+    fn advance(&mut self, t: f64) {
+        let Some(a) = self.autoscale else { return };
+        while self.last_eval + a.interval_s <= t {
+            let te = self.last_eval + a.interval_s;
+            self.last_eval = te;
+            let n_active = self.active_count();
+            let backlog: f64 = (0..self.slots())
+                .filter(|&r| self.active[r])
+                .map(|r| (self.horizon[r].max(self.available_from[r]) - te).max(0.0))
+                .sum::<f64>()
+                / n_active.max(1) as f64;
+            if backlog > a.up_backlog_s && n_active < a.max_replicas {
+                // Lowest inactive slot; a previously drained replica
+                // re-activates (its horizon carried over).
+                if let Some(r) = (0..self.slots()).find(|&r| !self.active[r]) {
+                    self.active[r] = true;
+                    self.available_from[r] = te + a.warmup_s;
+                    self.horizon[r] = self.horizon[r].max(te);
+                    self.timeline.push((te, n_active + 1));
+                }
+            } else if backlog < a.down_backlog_s && n_active > a.min_replicas {
+                // Drain the highest active slot: stops receiving, but
+                // already-assigned work finishes.
+                if let Some(r) = (0..self.slots()).rev().find(|&r| self.active[r]) {
+                    self.active[r] = false;
+                    self.timeline.push((te, n_active - 1));
+                }
+            }
+        }
+    }
+
+    /// Decide one arrival at time `t`. Applies the default deadline (if
+    /// configured and the request carries none), classifies the tier,
+    /// picks the least-delayed routable replica, sheds interactive
+    /// arrivals whose projected delay blows the budget, and advances
+    /// the chosen replica's horizon by the request's estimated cost.
+    fn admit(&mut self, t: f64, req: &mut Request) -> Admission {
+        self.advance(t);
+        if req.deadline_s.is_none() {
+            req.deadline_s = self.default_deadline_s;
+        }
+        let tier = SloTier::classify(req);
+        // Least projected delay wins; ties go to the lowest index.
+        let mut best: Option<(f64, usize)> = None;
+        for r in 0..self.slots() {
+            if !self.active[r] {
+                continue;
+            }
+            let ready = self.horizon[r].max(self.available_from[r]).max(t);
+            let delay = ready - t;
+            if best.map_or(true, |(bd, _)| delay < bd) {
+                best = Some((delay, r));
+            }
+        }
+        let (delay, r) = best.expect("front-end keeps >= 1 replica active");
+        if self.shed && tier == SloTier::Interactive {
+            if let Some(budget) = req.deadline_s {
+                if delay > budget {
+                    return Admission::Shed { tier };
+                }
+            }
+        }
+        let start = self.horizon[r].max(self.available_from[r]).max(t);
+        self.horizon[r] = start + self.request_cost_s(req) / self.workers;
+        Admission::Route { replica: r, tier }
+    }
+}
+
+/// One request's cluster-level lifetime (virtual path).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterRecord {
+    /// Index in the cluster plan.
+    pub request_id: usize,
+    /// SLO tier the front-end classified it into.
+    pub tier: SloTier,
+    /// Replica that served it (None = shed at the front-end).
+    pub replica: Option<usize>,
+    /// Shed by SLO admission (always before any token).
+    pub shed: bool,
+    /// Arrival time, seconds.
+    pub arrival_s: f64,
+    /// First-token emission time (= arrival for shed/rejected).
+    pub first_token_s: f64,
+    /// Completion time.
+    pub done_s: f64,
+    /// The generated stream (empty for shed/rejected/failed).
+    pub tokens: Vec<i64>,
+    /// Emission time per token (same length as `tokens`).
+    pub token_times: Vec<f64>,
+    /// The TTFT budget it carried (None = batch).
+    pub deadline_s: Option<f64>,
+}
+
+impl ClusterRecord {
+    /// Completed means a non-empty stream reached the client.
+    pub fn completed(&self) -> bool {
+        !self.tokens.is_empty()
+    }
+
+    /// Whether a completed interactive stream met its TTFT budget
+    /// (batch and budget-less records count attained when completed).
+    pub fn attained(&self) -> bool {
+        self.completed()
+            && self
+                .deadline_s
+                .map_or(true, |d| self.first_token_s - self.arrival_s <= d)
+    }
+}
+
+/// Results of one virtual cluster run. Pure function of
+/// (plan, config) — two runs are bit-identical.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Offered request rate, requests/second (base rate).
+    pub offered_rate: f64,
+    /// Per-request lifetimes, indexed by plan order.
+    pub records: Vec<ClusterRecord>,
+    /// Per-replica pool reports (None = replica never received work).
+    pub replicas: Vec<Option<VirtualReport>>,
+    /// `(t, active_replicas)` at init and every autoscale action.
+    pub replica_timeline: Vec<(f64, usize)>,
+    /// Peak simultaneously active replicas.
+    pub peak_replicas: usize,
+    /// Interactive arrivals offered.
+    pub submitted_interactive: usize,
+    /// Batch arrivals offered.
+    pub submitted_batch: usize,
+    /// Interactive arrivals shed by SLO admission.
+    pub shed_interactive: usize,
+    /// Batch arrivals shed (the policy never sheds batch; nonzero
+    /// flags a front-end bug).
+    pub shed_batch: usize,
+    /// Interactive requests that completed their stream.
+    pub completed_interactive: usize,
+    /// Batch requests that completed their stream.
+    pub completed_batch: usize,
+    /// Interactive completions whose TTFT met the budget.
+    pub attained_interactive: usize,
+    /// Cluster makespan, seconds (max over replicas and arrivals).
+    pub wall_s: f64,
+    /// Achieved output tokens/second over the makespan.
+    pub tokens_per_s: f64,
+    /// KV blocks still held across every replica at drain — must be 0.
+    pub end_kv_blocks_in_use: usize,
+}
+
+impl ClusterReport {
+    /// SLO attainment for a tier, over everything *offered* to that
+    /// tier (shed requests count against attainment — that is the
+    /// honest fleet-level number). 1.0 when the tier saw no traffic.
+    pub fn attainment(&self, tier: SloTier) -> f64 {
+        let (num, den) = match tier {
+            SloTier::Interactive => {
+                (self.attained_interactive, self.submitted_interactive)
+            }
+            SloTier::Batch => (self.completed_batch, self.submitted_batch),
+        };
+        if den == 0 {
+            1.0
+        } else {
+            num as f64 / den as f64
+        }
+    }
+
+    /// Fraction of a tier's arrivals shed at admission.
+    pub fn shed_fraction(&self, tier: SloTier) -> f64 {
+        let (num, den) = match tier {
+            SloTier::Interactive => (self.shed_interactive, self.submitted_interactive),
+            SloTier::Batch => (self.shed_batch, self.submitted_batch),
+        };
+        if den == 0 {
+            0.0
+        } else {
+            num as f64 / den as f64
+        }
+    }
+}
+
+/// Replay a tiered workload through the virtual cluster.
+pub fn run_virtual_cluster(
+    wl: &ClusterWorkload,
+    cc: &ClusterConfig,
+) -> Result<ClusterReport, String> {
+    wl.validate()?;
+    run_virtual_cluster_plan(&wl.base.model, wl.base.vocab, wl.base.rate, wl.generate(), cc)
+}
+
+/// [`run_virtual_cluster`] over an explicit `(arrival_s, request)`
+/// plan. The front-end makes every admission/shed/autoscale decision
+/// in arrival order, then each replica's assigned sub-plan runs
+/// through the UNMODIFIED single-pool
+/// [`run_virtual_plan`][super::workload::run_virtual_plan] (global
+/// arrival timestamps preserved, so all replica clocks share one
+/// timeline) and the per-pool records are merged back by plan index.
+pub fn run_virtual_cluster_plan(
+    model: &str,
+    vocab: usize,
+    offered_rate: f64,
+    plan: Vec<(f64, Request)>,
+    cc: &ClusterConfig,
+) -> Result<ClusterReport, String> {
+    if plan.windows(2).any(|w| w[0].0 > w[1].0) {
+        return Err("cluster plan arrivals must be non-decreasing".into());
+    }
+    let mut fe = FrontEnd::new(cc)?;
+    let n = plan.len();
+    let mut plan_end = 0.0f64;
+    let mut tiers: Vec<(SloTier, Option<f64>)> = Vec::with_capacity(n);
+    let mut records: Vec<Option<ClusterRecord>> = (0..n).map(|_| None).collect();
+    let mut sub: Vec<Vec<(f64, Request)>> = (0..fe.slots()).map(|_| Vec::new()).collect();
+    let mut assigned: Vec<Vec<usize>> = (0..fe.slots()).map(|_| Vec::new()).collect();
+    for (rid, (t, mut req)) in plan.into_iter().enumerate() {
+        plan_end = plan_end.max(t);
+        match fe.admit(t, &mut req) {
+            Admission::Shed { tier } => {
+                records[rid] = Some(ClusterRecord {
+                    request_id: rid,
+                    tier,
+                    replica: None,
+                    shed: true,
+                    arrival_s: t,
+                    first_token_s: t,
+                    done_s: t,
+                    tokens: Vec::new(),
+                    token_times: Vec::new(),
+                    deadline_s: req.deadline_s,
+                });
+                tiers.push((tier, req.deadline_s));
+            }
+            Admission::Route { replica, tier } => {
+                tiers.push((tier, req.deadline_s));
+                assigned[replica].push(rid);
+                sub[replica].push((t, req));
+            }
+        }
+    }
+
+    let mut replicas: Vec<Option<VirtualReport>> = Vec::with_capacity(fe.slots());
+    for (r, subplan) in sub.into_iter().enumerate() {
+        if subplan.is_empty() {
+            replicas.push(None);
+            continue;
+        }
+        let vr = run_virtual_plan(model, vocab, offered_rate, subplan, &cc.pool)?;
+        for (local, rec) in vr.records.iter().enumerate() {
+            let rid = assigned[r][local];
+            let (tier, deadline_s) = tiers[rid];
+            records[rid] = Some(ClusterRecord {
+                request_id: rid,
+                tier,
+                replica: Some(r),
+                shed: false,
+                arrival_s: rec.arrival_s,
+                first_token_s: rec.first_token_s,
+                done_s: rec.done_s,
+                tokens: rec.tokens.clone(),
+                token_times: rec.token_times.clone(),
+                deadline_s,
+            });
+        }
+        replicas.push(Some(vr));
+    }
+
+    let records: Vec<ClusterRecord> =
+        records.into_iter().map(|r| r.expect("every arrival recorded")).collect();
+    let wall_s = replicas
+        .iter()
+        .flatten()
+        .map(|vr| vr.wall_s)
+        .fold(plan_end, f64::max);
+    let total_tokens: usize = records.iter().map(|r| r.tokens.len()).sum();
+    let count =
+        |f: &dyn Fn(&ClusterRecord) -> bool| records.iter().filter(|r| f(r)).count();
+    let peak_replicas = fe.timeline.iter().map(|&(_, n)| n).max().unwrap_or(0);
+    Ok(ClusterReport {
+        offered_rate,
+        submitted_interactive: count(&|r| r.tier == SloTier::Interactive),
+        submitted_batch: count(&|r| r.tier == SloTier::Batch),
+        shed_interactive: count(&|r| r.tier == SloTier::Interactive && r.shed),
+        shed_batch: count(&|r| r.tier == SloTier::Batch && r.shed),
+        completed_interactive: count(&|r| r.tier == SloTier::Interactive && r.completed()),
+        completed_batch: count(&|r| r.tier == SloTier::Batch && r.completed()),
+        attained_interactive: count(&|r| r.tier == SloTier::Interactive && r.attained()),
+        wall_s,
+        tokens_per_s: if wall_s > 0.0 { total_tokens as f64 / wall_s } else { 0.0 },
+        end_kv_blocks_in_use: replicas
+            .iter()
+            .flatten()
+            .map(|vr| vr.end_kv_blocks_in_use)
+            .sum(),
+        replica_timeline: fe.timeline.clone(),
+        peak_replicas,
+        replicas,
+        records,
+    })
+}
+
+/// Outcome of a threaded cluster submission.
+pub enum Submitted {
+    /// Routed to a replica; stream via the handle.
+    Handle {
+        /// Replica index that received the request.
+        replica: usize,
+        /// The tier the front-end classified it into.
+        tier: SloTier,
+        /// Streaming handle from the replica's coordinator.
+        handle: RequestHandle,
+    },
+    /// Shed at admission — no tokens were (or will be) generated.
+    Shed {
+        /// The tier of the shed arrival (always interactive under the
+        /// shipped policy).
+        tier: SloTier,
+    },
+}
+
+/// The threaded cluster dispatcher: live [`Coordinator`] replicas
+/// behind the SAME [`FrontEnd`] decision core the virtual sweep runs,
+/// driven on wall seconds (or on caller-supplied timestamps via
+/// [`Cluster::submit_at`], which makes front-end decisions
+/// reproducible across paths).
+pub struct Cluster {
+    model: String,
+    replicas: Vec<Coordinator>,
+    fe: Mutex<FrontEnd>,
+    epoch: Instant,
+    /// Fleet-level metrics: per-tier submitted/shed/done/attained
+    /// counters (pool-level serving metrics live on each replica).
+    pub metrics: Arc<Metrics>,
+}
+
+impl Cluster {
+    /// Build a fleet: one [`Coordinator`] per replica slot from the
+    /// caller's factory (which must register `model`'s pool). With
+    /// autoscaling, all `max_replicas` coordinators exist up front —
+    /// activation is a routing decision; warm-up is charged by the
+    /// front-end.
+    pub fn threaded(
+        cc: &ClusterConfig,
+        model: &str,
+        mut build: impl FnMut() -> Coordinator,
+    ) -> Result<Cluster, String> {
+        let fe = FrontEnd::new(cc)?;
+        let replicas: Vec<Coordinator> = (0..fe.slots()).map(|_| build()).collect();
+        for c in &replicas {
+            if !c.models().contains(&model.to_string()) {
+                return Err(format!("replica factory did not register model '{model}'"));
+            }
+        }
+        Ok(Cluster {
+            model: model.to_string(),
+            replicas,
+            fe: Mutex::new(fe),
+            epoch: Instant::now(),
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    /// The model this fleet serves.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Total replica slots (active or not).
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Currently routable replicas.
+    pub fn active_replicas(&self) -> usize {
+        self.fe.lock().unwrap().active_count()
+    }
+
+    /// `(t, active_count)` autoscale history (seconds since the fleet
+    /// epoch).
+    pub fn replica_timeline(&self) -> Vec<(f64, usize)> {
+        self.fe.lock().unwrap().timeline.clone()
+    }
+
+    /// The live replica coordinators (for per-replica gauges).
+    pub fn replicas(&self) -> &[Coordinator] {
+        &self.replicas
+    }
+
+    /// Submit with an explicit front-end timestamp (seconds on the
+    /// caller's clock; must be non-decreasing across calls for the
+    /// fluid horizons to mean anything). [`run_cluster_open_loop`]
+    /// passes the *planned* arrival time, which makes shed/route/
+    /// autoscale decisions bit-identical to the virtual path's.
+    pub fn submit_at(&self, at_s: f64, request: Request) -> Result<Submitted, String> {
+        let mut request = request;
+        let decision = self.fe.lock().unwrap().admit(at_s, &mut request);
+        match decision {
+            Admission::Shed { tier } => {
+                self.metrics.on_tier_submit(tier);
+                self.metrics.on_tier_shed(tier);
+                Ok(Submitted::Shed { tier })
+            }
+            Admission::Route { replica, tier } => {
+                self.metrics.on_tier_submit(tier);
+                let handle = self.replicas[replica].submit(request)?;
+                Ok(Submitted::Handle { replica, tier, handle })
+            }
+        }
+    }
+
+    /// Submit on the fleet's wall clock (the server path).
+    pub fn submit(&self, request: Request) -> Result<Submitted, String> {
+        self.submit_at(self.epoch.elapsed().as_secs_f64(), request)
+    }
+
+    /// Record a completed stream's tier outcome (`attained` = its TTFT
+    /// met the deadline budget; pass true for batch).
+    pub fn note_done(&self, tier: SloTier, attained: bool) {
+        self.metrics.on_tier_done(tier, attained);
+    }
+
+    /// Shut every replica down (in-flight requests finish).
+    pub fn shutdown(self) {
+        for c in self.replicas {
+            c.shutdown();
+        }
+    }
+}
+
+/// Results of one threaded cluster load run.
+#[derive(Clone, Debug)]
+pub struct ClusterLoadReport {
+    /// Offered base rate, requests/second.
+    pub offered_rate: f64,
+    /// Requests whose stream completed.
+    pub completed: usize,
+    /// Requests shed by SLO admission.
+    pub shed: usize,
+    /// Requests that ended in a visible error (pool-level shed or
+    /// failure).
+    pub failed: usize,
+    /// Wall time of the run, seconds.
+    pub wall_s: f64,
+    /// Generated tokens per request in plan order (empty = shed or
+    /// failed) — the cross-path stream-identity surface.
+    pub token_streams: Vec<Vec<i64>>,
+    /// Wall-clock TTFT over completed requests, seconds.
+    pub ttft: Summary,
+}
+
+/// Run a tiered workload against a live threaded [`Cluster`],
+/// honoring planned arrival times on the wall clock while feeding the
+/// front-end the *planned* timestamps (so admission decisions match
+/// the virtual path bit for bit). Mirrors
+/// [`run_open_loop`][super::workload::run_open_loop].
+pub fn run_cluster_open_loop(
+    cluster: &Cluster,
+    wl: &ClusterWorkload,
+) -> Result<ClusterLoadReport, String> {
+    wl.validate()?;
+    type PerReq = Result<(f64, Vec<i64>), String>;
+    fn collect(submitted: Instant, handle: RequestHandle) -> PerReq {
+        let mut first: Option<f64> = None;
+        for ev in handle.events.iter() {
+            match ev {
+                TokenEvent::Token { index, .. } => {
+                    if index == 0 {
+                        first = Some(submitted.elapsed().as_secs_f64());
+                    }
+                }
+                TokenEvent::Done { tokens, .. } => {
+                    let ttft =
+                        first.unwrap_or_else(|| submitted.elapsed().as_secs_f64());
+                    return Ok((ttft, tokens));
+                }
+                TokenEvent::Error { message, .. } => return Err(message),
+            }
+        }
+        Err("stream closed without completion".into())
+    }
+
+    let plan = wl.generate();
+    let n = plan.len();
+    let t0 = Instant::now();
+    let mut shed = 0usize;
+    let mut collectors: Vec<(usize, SloTier, Option<f64>, std::thread::JoinHandle<PerReq>)> =
+        Vec::new();
+    for (rid, (at_s, req)) in plan.into_iter().enumerate() {
+        if let Some(sleep) =
+            std::time::Duration::from_secs_f64(at_s).checked_sub(t0.elapsed())
+        {
+            std::thread::sleep(sleep);
+        }
+        let deadline = req.deadline_s;
+        let submitted = Instant::now();
+        match cluster.submit_at(at_s, req)? {
+            Submitted::Shed { .. } => shed += 1,
+            Submitted::Handle { tier, handle, .. } => {
+                collectors.push((
+                    rid,
+                    tier,
+                    deadline,
+                    std::thread::Builder::new()
+                        .name("lpu-cluster-collect".into())
+                        .spawn(move || collect(submitted, handle))
+                        .map_err(|e| e.to_string())?,
+                ));
+            }
+        }
+    }
+    let mut streams: Vec<Vec<i64>> = vec![Vec::new(); n];
+    let mut ttfts = Vec::new();
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for (rid, tier, deadline, c) in collectors {
+        match c.join().map_err(|_| "collector panicked")? {
+            Ok((ttft, tokens)) => {
+                cluster.note_done(tier, deadline.map_or(true, |d| ttft <= d));
+                streams[rid] = tokens;
+                ttfts.push(ttft);
+                completed += 1;
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(ClusterLoadReport {
+        offered_rate: wl.base.rate,
+        completed,
+        shed,
+        failed,
+        wall_s,
+        token_streams: streams,
+        ttft: if ttfts.is_empty() { Summary::of(&[0.0]) } else { Summary::of(&ttfts) },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LpuConfig;
+    use crate::coordinator::{BackendFactory, CoordinatorConfig, SchedulerPolicy};
+    use crate::model::by_name;
+
+    fn step_model() -> StepModel {
+        StepModel::from_config(&by_name("opt-1.3b").unwrap(), &LpuConfig::asic_819gbs(), 1)
+    }
+
+    fn cwl(rate: f64, n: usize, frac: f64, deadline: f64, trace: ArrivalTrace) -> ClusterWorkload {
+        ClusterWorkload {
+            base: Workload {
+                model: "opt-tiny".into(),
+                rate,
+                n_requests: n,
+                prompt_len: LenDist::Uniform(1, 6),
+                output_len: LenDist::Fixed(5),
+                vocab: 512,
+                seed: 77,
+            },
+            trace,
+            interactive_fraction: frac,
+            interactive_deadline_s: deadline,
+        }
+    }
+
+    fn pool(workers: usize, max_active: usize) -> VirtualConfig {
+        VirtualConfig::new(SchedulerPolicy::RoundRobin, workers, max_active, step_model())
+    }
+
+    #[test]
+    fn tier_classification_follows_deadline() {
+        let mut r = Request::greedy("m", vec![1], 4);
+        assert_eq!(SloTier::classify(&r), SloTier::Batch);
+        r.deadline_s = Some(0.5);
+        assert_eq!(SloTier::classify(&r), SloTier::Interactive);
+        assert_eq!(SloTier::Interactive.name(), "interactive");
+        assert_eq!(SloTier::Batch.name(), "batch");
+    }
+
+    #[test]
+    fn slo_tier_spec_grammar() {
+        assert_eq!(SloTierSpec::parse("batch").unwrap(), SloTierSpec::Batch);
+        assert_eq!(
+            SloTierSpec::parse("interactive:0.5").unwrap(),
+            SloTierSpec::Interactive { ttft_s: 0.5 }
+        );
+        assert_eq!(
+            SloTierSpec::parse("mixed:0.5:0.25").unwrap(),
+            SloTierSpec::Mixed { ttft_s: 0.5, fraction: 0.25 }
+        );
+        assert!(SloTierSpec::parse("interactive").is_err());
+        assert!(SloTierSpec::parse("interactive:-1").is_err());
+        assert!(SloTierSpec::parse("mixed:0.5:1.5").is_err());
+        assert!(SloTierSpec::parse("gold").is_err());
+        assert_eq!(SloTierSpec::Mixed { ttft_s: 0.5, fraction: 0.25 }.mix(), (0.25, 0.5));
+    }
+
+    #[test]
+    fn autoscale_spec_grammar() {
+        let a = AutoscaleConfig::parse("min=2,max=6,interval=0.1,warmup=1.5,up=0.8,down=0.1")
+            .unwrap();
+        assert_eq!((a.min_replicas, a.max_replicas), (2, 6));
+        assert_eq!((a.interval_s, a.warmup_s), (0.1, 1.5));
+        assert_eq!((a.up_backlog_s, a.down_backlog_s), (0.8, 0.1));
+        // Partial specs inherit defaults.
+        let d = AutoscaleConfig::parse("max=8").unwrap();
+        assert_eq!(d.max_replicas, 8);
+        assert_eq!(d.min_replicas, AutoscaleConfig::default().min_replicas);
+        // Misconfiguration is refused, not ignored.
+        assert!(AutoscaleConfig::parse("min=0").is_err());
+        assert!(AutoscaleConfig::parse("min=4,max=2").is_err());
+        assert!(AutoscaleConfig::parse("interval=0").is_err());
+        assert!(AutoscaleConfig::parse("up=0.1,down=0.5").is_err());
+        assert!(AutoscaleConfig::parse("turbo=9").is_err());
+        assert!(AutoscaleConfig::parse("warmup=abc").is_err());
+    }
+
+    #[test]
+    fn arrival_traces_shape_intensity() {
+        assert_eq!(ArrivalTrace::Uniform.intensity(123.0), 1.0);
+        let d = ArrivalTrace::Diurnal { period_s: 4.0, depth: 1.0 };
+        assert!((d.intensity(1.0) - 2.0).abs() < 1e-9, "peak at quarter period");
+        assert!(d.intensity(3.0) <= 0.06, "trough floored above zero");
+        let f = ArrivalTrace::FlashCrowd { at_s: 1.0, dur_s: 2.0, magnification: 8.0 };
+        assert_eq!(f.intensity(0.5), 1.0);
+        assert_eq!(f.intensity(1.5), 8.0);
+        assert_eq!(f.intensity(3.5), 1.0);
+        assert_eq!(ArrivalTrace::parse("uniform").unwrap(), ArrivalTrace::Uniform);
+        assert_eq!(
+            ArrivalTrace::parse("diurnal:60:0.9").unwrap(),
+            ArrivalTrace::Diurnal { period_s: 60.0, depth: 0.9 }
+        );
+        assert_eq!(
+            ArrivalTrace::parse("flash:5:2:10").unwrap(),
+            ArrivalTrace::FlashCrowd { at_s: 5.0, dur_s: 2.0, magnification: 10.0 }
+        );
+        assert!(ArrivalTrace::parse("bursty").is_err());
+        assert!(ArrivalTrace::parse("diurnal:60").is_err());
+    }
+
+    #[test]
+    fn cluster_workload_generator_is_deterministic_and_tiered() {
+        let wl = cwl(200.0, 400, 0.5, 0.5, ArrivalTrace::Uniform);
+        let a = wl.generate();
+        let b = wl.generate();
+        assert_eq!(a.len(), 400);
+        for ((ta, ra), (tb, rb)) in a.iter().zip(&b) {
+            assert_eq!(ta, tb);
+            assert_eq!(ra.prompt, rb.prompt);
+            assert_eq!(ra.deadline_s, rb.deadline_s);
+        }
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0));
+        let interactive = a.iter().filter(|(_, r)| r.deadline_s.is_some()).count();
+        assert!(
+            (120..=280).contains(&interactive),
+            "tier split ~50%, got {interactive}/400"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_compresses_gaps_inside_burst() {
+        let base = cwl(100.0, 600, 0.0, 0.0, ArrivalTrace::Uniform).generate();
+        let flash = cwl(
+            100.0,
+            600,
+            0.0,
+            0.0,
+            ArrivalTrace::FlashCrowd { at_s: 1.0, dur_s: 2.0, magnification: 10.0 },
+        )
+        .generate();
+        // Identical seed: the burst squeezes more arrivals into [1, 3).
+        let in_window = |plan: &[(f64, Request)]| {
+            plan.iter().filter(|(t, _)| (1.0..3.0).contains(t)).count()
+        };
+        assert!(
+            in_window(&flash) > in_window(&base) * 3,
+            "flash {} !>> base {}",
+            in_window(&flash),
+            in_window(&base)
+        );
+    }
+
+    #[test]
+    fn single_replica_no_shed_cluster_matches_plain_pool_run() {
+        // The degenerate cluster IS the pool: same records, wrapped.
+        let wl = cwl(2000.0, 60, 0.5, 30.0, ArrivalTrace::Uniform);
+        let vc = pool(2, 4);
+        let mut cc = ClusterConfig::new(1, vc.clone());
+        cc.shed = false;
+        let cr = run_virtual_cluster(&wl, &cc).unwrap();
+        let plan = wl.generate();
+        let vr = run_virtual_plan("opt-tiny", 512, 2000.0, plan, &vc).unwrap();
+        assert_eq!(cr.records.len(), vr.records.len());
+        for (c, v) in cr.records.iter().zip(&vr.records) {
+            assert_eq!(c.tokens, v.tokens);
+            assert_eq!(c.first_token_s, v.first_token_s);
+            assert_eq!(c.done_s, v.done_s);
+            assert_eq!(c.replica, Some(0));
+            assert!(!c.shed);
+        }
+        assert_eq!(cr.shed_interactive + cr.shed_batch, 0);
+        assert_eq!(cr.peak_replicas, 1);
+        assert_eq!(cr.end_kv_blocks_in_use, 0);
+    }
+
+    #[test]
+    fn cluster_runs_are_bit_identical() {
+        let wl = cwl(3000.0, 120, 0.6, 0.05, ArrivalTrace::Diurnal { period_s: 0.2, depth: 0.8 });
+        let mut cc = ClusterConfig::new(2, pool(1, 4));
+        cc.autoscale = Some(AutoscaleConfig {
+            max_replicas: 3,
+            interval_s: 0.01,
+            ..AutoscaleConfig::default()
+        });
+        let a = run_virtual_cluster(&wl, &cc).unwrap();
+        let b = run_virtual_cluster(&wl, &cc).unwrap();
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.replica_timeline, b.replica_timeline);
+        assert_eq!(a.wall_s, b.wall_s);
+    }
+
+    #[test]
+    fn shed_happens_only_before_first_token() {
+        // Overload a tiny fleet with tight budgets: sheds must occur,
+        // and every shed record is empty — no mid-stream drops.
+        let wl = cwl(20_000.0, 200, 1.0, 0.01, ArrivalTrace::Uniform);
+        let cc = ClusterConfig::new(1, pool(1, 2));
+        let r = run_virtual_cluster(&wl, &cc).unwrap();
+        assert!(r.shed_interactive > 0, "overload must shed");
+        for rec in &r.records {
+            if rec.shed {
+                assert!(rec.tokens.is_empty() && rec.token_times.is_empty());
+                assert_eq!(rec.replica, None);
+                assert_eq!(rec.first_token_s, rec.arrival_s);
+            }
+        }
+        assert_eq!(r.shed_batch, 0, "batch is never shed");
+    }
+
+    #[test]
+    fn shedding_protects_admitted_interactive_ttft() {
+        // At heavy overload, SLO admission keeps the *admitted*
+        // interactive requests inside their budget; without shedding
+        // the queue grows without bound and attainment collapses.
+        let wl = cwl(5_000.0, 300, 1.0, 0.05, ArrivalTrace::Uniform);
+        let mut shed_on = ClusterConfig::new(1, pool(1, 4));
+        shed_on.shed = true;
+        let mut shed_off = shed_on.clone();
+        shed_off.shed = false;
+        let on = run_virtual_cluster(&wl, &shed_on).unwrap();
+        let off = run_virtual_cluster(&wl, &shed_off).unwrap();
+        assert!(on.shed_interactive > 0);
+        assert!(
+            on.attainment(SloTier::Interactive) > off.attainment(SloTier::Interactive),
+            "shed attainment {} !> no-shed {}",
+            on.attainment(SloTier::Interactive),
+            off.attainment(SloTier::Interactive)
+        );
+        // Completed streams agree request-for-request with the no-shed
+        // run (greedy purity: placement never changes tokens).
+        for (a, b) in on.records.iter().zip(&off.records) {
+            if a.completed() && b.completed() {
+                assert_eq!(a.tokens, b.tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn autoscaler_rides_a_flash_crowd_and_drains_after() {
+        let wl = cwl(
+            800.0,
+            400,
+            0.0,
+            0.0,
+            ArrivalTrace::FlashCrowd { at_s: 0.5, dur_s: 1.0, magnification: 12.0 },
+        );
+        let mut cc = ClusterConfig::new(1, pool(1, 4));
+        cc.autoscale = Some(AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            interval_s: 0.05,
+            warmup_s: 0.1,
+            up_backlog_s: 0.2,
+            down_backlog_s: 0.02,
+        });
+        let r = run_virtual_cluster(&wl, &cc).unwrap();
+        assert!(r.peak_replicas > 1, "burst must trigger scale-up");
+        assert!(
+            r.replica_timeline.last().unwrap().1 < r.peak_replicas,
+            "post-burst drain must scale back down: {:?}",
+            r.replica_timeline
+        );
+        // Scale-up is never free: a warmed replica's first request
+        // cannot arrive before its activation + warmup.
+        for (rid, rec) in r.records.iter().enumerate() {
+            if let Some(rep) = rec.replica {
+                if rep > 0 {
+                    let activated = r
+                        .replica_timeline
+                        .iter()
+                        .find(|&&(_, n)| n > rep)
+                        .map(|&(t, _)| t)
+                        .unwrap_or(0.0);
+                    assert!(
+                        rec.arrival_s >= activated,
+                        "request {rid} routed to replica {rep} before activation"
+                    );
+                }
+            }
+        }
+        assert_eq!(r.end_kv_blocks_in_use, 0);
+    }
+
+    #[test]
+    fn more_replicas_cut_makespan_under_backlog() {
+        let wl = cwl(50_000.0, 160, 0.0, 0.0, ArrivalTrace::Uniform);
+        let one = ClusterConfig::new(1, pool(1, 4));
+        let four = ClusterConfig::new(4, pool(1, 4));
+        let r1 = run_virtual_cluster(&wl, &one).unwrap();
+        let r4 = run_virtual_cluster(&wl, &four).unwrap();
+        assert!(
+            r4.wall_s < r1.wall_s * 0.5,
+            "4 replicas {} !< 0.5 * 1 replica {}",
+            r4.wall_s,
+            r1.wall_s
+        );
+        // Streams identical regardless of replica count.
+        for (a, b) in r1.records.iter().zip(&r4.records) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn threaded_cluster_front_end_matches_virtual_decisions() {
+        // Feed the threaded dispatcher the planned timestamps: the
+        // shared FrontEnd must shed/route exactly like the virtual run.
+        let wl = cwl(20_000.0, 40, 1.0, 0.01, ArrivalTrace::Uniform);
+        let cc = ClusterConfig::new(1, pool(1, 2));
+        let virt = run_virtual_cluster(&wl, &cc).unwrap();
+        let cluster = Cluster::threaded(&cc, "opt-tiny", || {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 2,
+                policy: SchedulerPolicy::RoundRobin,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+            c
+        })
+        .unwrap();
+        for (rid, (at_s, req)) in wl.generate().into_iter().enumerate() {
+            match cluster.submit_at(at_s, req).unwrap() {
+                Submitted::Shed { .. } => {
+                    assert!(virt.records[rid].shed, "request {rid} shed only on threaded")
+                }
+                Submitted::Handle { replica, .. } => {
+                    assert!(!virt.records[rid].shed, "request {rid} shed only on virtual");
+                    assert_eq!(Some(replica), virt.records[rid].replica);
+                }
+            }
+        }
+        let s = cluster.metrics.snapshot();
+        assert_eq!(s.tier_interactive_submitted, 40);
+        assert_eq!(s.tier_interactive_shed as usize, virt.shed_interactive);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn threaded_factory_must_register_model() {
+        let cc = ClusterConfig::new(1, pool(1, 2));
+        let err = Cluster::threaded(&cc, "opt-tiny", || {
+            Coordinator::new(CoordinatorConfig::default())
+        })
+        .map(|c| c.shutdown())
+        .unwrap_err();
+        assert!(err.contains("did not register"), "{err}");
+    }
+}

@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::cluster::SloTier;
 use super::scheduler::{HostTierStats, PrefixStats};
 use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Welford};
@@ -144,6 +145,23 @@ pub struct Metrics {
     shed_expired: AtomicU64,
     /// Requests shed by the preemption-livelock guard.
     shed_livelock: AtomicU64,
+    /// Interactive-tier requests offered to the cluster front-end
+    /// (0 outside a cluster deployment).
+    tier_interactive_submitted: AtomicU64,
+    /// Interactive-tier requests shed by SLO admission (projected queue
+    /// delay exceeded the TTFT budget).
+    tier_interactive_shed: AtomicU64,
+    /// Interactive-tier requests that completed their stream.
+    tier_interactive_done: AtomicU64,
+    /// Interactive-tier completions whose TTFT met the deadline budget.
+    tier_interactive_attained: AtomicU64,
+    /// Batch-tier requests offered to the cluster front-end.
+    tier_batch_submitted: AtomicU64,
+    /// Batch-tier requests shed (the policy never sheds batch; a
+    /// nonzero value flags a front-end bug).
+    tier_batch_shed: AtomicU64,
+    /// Batch-tier requests that completed their stream.
+    tier_batch_done: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -205,6 +223,20 @@ pub struct Snapshot {
     pub shed_expired: u64,
     /// Requests shed by the preemption-livelock guard.
     pub shed_livelock: u64,
+    /// Interactive-tier requests offered to the cluster front-end.
+    pub tier_interactive_submitted: u64,
+    /// Interactive-tier requests shed by SLO admission.
+    pub tier_interactive_shed: u64,
+    /// Interactive-tier requests that completed.
+    pub tier_interactive_done: u64,
+    /// Interactive completions whose TTFT met the deadline budget.
+    pub tier_interactive_attained: u64,
+    /// Batch-tier requests offered to the cluster front-end.
+    pub tier_batch_submitted: u64,
+    /// Batch-tier requests shed (should stay 0).
+    pub tier_batch_shed: u64,
+    /// Batch-tier requests that completed.
+    pub tier_batch_done: u64,
     pub mean_queue_delay_s: f64,
     pub mean_ttft_s: f64,
     pub ttft: Percentiles,
@@ -252,6 +284,13 @@ impl Metrics {
             worker_crashes: AtomicU64::new(0),
             shed_expired: AtomicU64::new(0),
             shed_livelock: AtomicU64::new(0),
+            tier_interactive_submitted: AtomicU64::new(0),
+            tier_interactive_shed: AtomicU64::new(0),
+            tier_interactive_done: AtomicU64::new(0),
+            tier_interactive_attained: AtomicU64::new(0),
+            tier_batch_submitted: AtomicU64::new(0),
+            tier_batch_shed: AtomicU64::new(0),
+            tier_batch_done: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -384,6 +423,41 @@ impl Metrics {
         self.shed_livelock.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The cluster front-end classified one arrival into `tier`.
+    pub fn on_tier_submit(&self, tier: SloTier) {
+        match tier {
+            SloTier::Interactive => &self.tier_interactive_submitted,
+            SloTier::Batch => &self.tier_batch_submitted,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The cluster front-end shed one `tier` arrival at admission
+    /// (projected queue delay exceeded its TTFT budget).
+    pub fn on_tier_shed(&self, tier: SloTier) {
+        match tier {
+            SloTier::Interactive => &self.tier_interactive_shed,
+            SloTier::Batch => &self.tier_batch_shed,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A cluster-admitted `tier` request finished its stream; for the
+    /// interactive tier, `attained` says its TTFT met the deadline.
+    pub fn on_tier_done(&self, tier: SloTier, attained: bool) {
+        match tier {
+            SloTier::Interactive => {
+                self.tier_interactive_done.fetch_add(1, Ordering::Relaxed);
+                if attained {
+                    self.tier_interactive_attained.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            SloTier::Batch => {
+                self.tier_batch_done.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         // Copy everything out under the lock, then do the O(n log n)
         // percentile work after dropping it so workers never wait on a
@@ -445,6 +519,17 @@ impl Metrics {
             worker_crashes: self.worker_crashes.load(Ordering::Relaxed),
             shed_expired: self.shed_expired.load(Ordering::Relaxed),
             shed_livelock: self.shed_livelock.load(Ordering::Relaxed),
+            tier_interactive_submitted: self
+                .tier_interactive_submitted
+                .load(Ordering::Relaxed),
+            tier_interactive_shed: self.tier_interactive_shed.load(Ordering::Relaxed),
+            tier_interactive_done: self.tier_interactive_done.load(Ordering::Relaxed),
+            tier_interactive_attained: self
+                .tier_interactive_attained
+                .load(Ordering::Relaxed),
+            tier_batch_submitted: self.tier_batch_submitted.load(Ordering::Relaxed),
+            tier_batch_shed: self.tier_batch_shed.load(Ordering::Relaxed),
+            tier_batch_done: self.tier_batch_done.load(Ordering::Relaxed),
             mean_queue_delay_s: queue_delay_mean,
             mean_ttft_s: ttft_mean,
             ttft: percentiles_of(ttft_samples),
@@ -484,6 +569,12 @@ pub struct PoolGauges {
     restored_blocks: AtomicU64,
     /// Per-worker instantaneous slot-table size (indexed by worker).
     worker_lanes: Vec<AtomicU64>,
+    /// Per-worker peak queue depth (indexed by worker; fetch_max at
+    /// every submit-time push). The autoscaler's per-replica signal:
+    /// the pool-wide `peak_queue_depth` in [`super::workload::
+    /// VirtualReport`] is the max of this vector, and cluster tests pin
+    /// the per-worker resolution here.
+    worker_peak_queue_depth: Vec<AtomicU64>,
     /// Per-worker liveness (1 = serving, 0 = crashed). Workers start
     /// healthy; a fault-plan crash clears the bit and nothing sets it
     /// back (recovery means failover, not resurrection).
@@ -495,6 +586,7 @@ impl PoolGauges {
     pub fn with_workers(n_workers: usize) -> PoolGauges {
         PoolGauges {
             worker_lanes: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_peak_queue_depth: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
             worker_healthy: (0..n_workers).map(|_| AtomicU64::new(1)).collect(),
             ..PoolGauges::default()
         }
@@ -534,6 +626,22 @@ impl PoolGauges {
         self.worker_lanes.get(worker).map_or(0, |g| g.load(Ordering::Relaxed) as usize)
     }
 
+    /// Fold worker `worker`'s current queue depth into its retained
+    /// peak (called on every submit-time push and requeue).
+    pub fn note_queue_depth(&self, worker: usize, depth: usize) {
+        if let Some(g) = self.worker_peak_queue_depth.get(worker) {
+            g.fetch_max(depth as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Worker `worker`'s peak observed queue depth (out-of-range
+    /// workers read 0).
+    pub fn peak_queue_depth(&self, worker: usize) -> usize {
+        self.worker_peak_queue_depth
+            .get(worker)
+            .map_or(0, |g| g.load(Ordering::Relaxed) as usize)
+    }
+
     /// Mark worker `worker` crashed: its `healthy` gauge reads false
     /// from now on.
     pub fn set_unhealthy(&self, worker: usize) {
@@ -559,6 +667,7 @@ impl PoolGauges {
             .map(|i| {
                 obj(vec![
                     ("queue_depth", queue_depths.get(i).copied().unwrap_or(0).into()),
+                    ("peak_queue_depth", self.peak_queue_depth(i).into()),
                     ("active_lanes", self.active_lanes(i).into()),
                     ("healthy", self.healthy(i).into()),
                 ])
@@ -630,6 +739,13 @@ impl Snapshot {
             ("worker_crashes", self.worker_crashes.into()),
             ("shed_expired", self.shed_expired.into()),
             ("shed_livelock", self.shed_livelock.into()),
+            ("tier_interactive_submitted", self.tier_interactive_submitted.into()),
+            ("tier_interactive_shed", self.tier_interactive_shed.into()),
+            ("tier_interactive_done", self.tier_interactive_done.into()),
+            ("tier_interactive_attained", self.tier_interactive_attained.into()),
+            ("tier_batch_submitted", self.tier_batch_submitted.into()),
+            ("tier_batch_shed", self.tier_batch_shed.into()),
+            ("tier_batch_done", self.tier_batch_done.into()),
             ("mean_queue_delay_s", self.mean_queue_delay_s.into()),
             ("mean_ttft_s", self.mean_ttft_s.into()),
             ("ttft_p50_s", self.ttft.p50.into()),
@@ -743,6 +859,13 @@ mod tests {
         g.set_active_lanes(1, 1);
         assert_eq!(g.active_lanes(0), 3);
         assert_eq!(g.active_lanes(7), 0, "out-of-range worker reads as idle");
+        g.note_queue_depth(0, 2);
+        g.note_queue_depth(0, 5);
+        g.note_queue_depth(0, 1); // peak is retained, not overwritten
+        g.note_queue_depth(9, 99); // out-of-range: ignored, no panic
+        assert_eq!(g.peak_queue_depth(0), 5);
+        assert_eq!(g.peak_queue_depth(1), 0);
+        assert_eq!(g.peak_queue_depth(9), 0);
         let j = g.to_json(&[2, 0]);
         assert_eq!(j.get("prefill_spans").as_u64(), Some(2));
         assert_eq!(j.get("prefill_tokens").as_u64(), Some(48));
@@ -753,9 +876,36 @@ mod tests {
         let workers = j.get("workers").as_arr().expect("workers array").to_vec();
         assert_eq!(workers.len(), 2);
         assert_eq!(workers[0].get("queue_depth").as_u64(), Some(2));
+        assert_eq!(workers[0].get("peak_queue_depth").as_u64(), Some(5));
         assert_eq!(workers[0].get("active_lanes").as_u64(), Some(3));
         assert_eq!(workers[1].get("queue_depth").as_u64(), Some(0));
+        assert_eq!(workers[1].get("peak_queue_depth").as_u64(), Some(0));
         assert_eq!(workers[1].get("active_lanes").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn tier_counters_accumulate_and_export() {
+        let m = Metrics::new();
+        m.on_tier_submit(SloTier::Interactive);
+        m.on_tier_submit(SloTier::Interactive);
+        m.on_tier_submit(SloTier::Batch);
+        m.on_tier_shed(SloTier::Interactive);
+        m.on_tier_done(SloTier::Interactive, true);
+        m.on_tier_done(SloTier::Batch, false);
+        let s = m.snapshot();
+        assert_eq!(s.tier_interactive_submitted, 2);
+        assert_eq!(s.tier_interactive_shed, 1);
+        assert_eq!(s.tier_interactive_done, 1);
+        assert_eq!(s.tier_interactive_attained, 1);
+        assert_eq!(s.tier_batch_submitted, 1);
+        assert_eq!(s.tier_batch_shed, 0);
+        assert_eq!(s.tier_batch_done, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("tier_interactive_submitted").as_u64(), Some(2));
+        assert_eq!(j.get("tier_interactive_shed").as_u64(), Some(1));
+        assert_eq!(j.get("tier_interactive_attained").as_u64(), Some(1));
+        assert_eq!(j.get("tier_batch_submitted").as_u64(), Some(1));
+        assert_eq!(j.get("tier_batch_done").as_u64(), Some(1));
     }
 
     #[test]

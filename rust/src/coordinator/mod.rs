@@ -82,6 +82,7 @@
 //! for the full lifecycle.
 
 pub mod backend;
+pub mod cluster;
 pub mod faults;
 pub mod lane;
 pub mod metrics;
@@ -99,6 +100,11 @@ use std::time::Instant;
 use crate::numerics::SampleParams;
 
 pub use backend::{Backend, BackendFactory, BatchLane, LaneWork, SimBackend, StepModel};
+pub use cluster::{
+    run_cluster_open_loop, run_virtual_cluster, run_virtual_cluster_plan, ArrivalTrace,
+    AutoscaleConfig, Cluster, ClusterConfig, ClusterLoadReport, ClusterRecord,
+    ClusterReport, ClusterWorkload, SloTier, SloTierSpec, Submitted,
+};
 pub use faults::{
     CrashSpec, FaultKind, FaultPlan, SlowSpec, DEFAULT_BACKOFF_BASE_S, DEFAULT_RETRY_BUDGET,
 };
@@ -513,6 +519,11 @@ impl Coordinator {
                 },
             )
             .map_err(|_| "pool shut down".to_string())?;
+        // Fold the post-push depth into the per-worker peak gauge (the
+        // threaded mirror of the virtual harness's
+        // `worker_peak_queue_depth` sampling).
+        pool.gauges
+            .note_queue_depth(worker, pool.queues.depths().get(worker).copied().unwrap_or(0));
         Ok(RequestHandle { request_id, events: rx })
     }
 

@@ -115,6 +115,7 @@ impl Workload {
                     params: crate::numerics::SampleParams::greedy(),
                     eos_token: None,
                     seed: self.seed ^ i as u64,
+                    deadline_s: None,
                 };
                 (Duration::from_secs_f64(at), req)
             })
@@ -389,6 +390,12 @@ pub struct VirtualReport {
     /// a deep queue on one worker while siblings idle is the hot-prefix
     /// pile-up the imbalance bound and spill/steal exist to cap).
     pub peak_queue_depth: usize,
+    /// Peak queue depth per worker, indexed by worker (the virtual
+    /// mirror of the server's `pools.<model>.workers[i].peak_queue_depth`
+    /// gauge). `peak_queue_depth` is the max of this vector; cluster
+    /// runs read the per-replica/per-worker resolution the autoscaler
+    /// acts on.
+    pub worker_peak_queue_depth: Vec<usize>,
     /// Peak active lanes per worker, indexed by worker (the virtual
     /// mirror of the server's `pools.<model>.workers[i].active_lanes`
     /// gauge; uneven peaks expose routing skew).
@@ -586,6 +593,7 @@ pub fn run_virtual_plan(
         peak_kv_reserved: 0,
         peak_kv_blocks: 0,
         peak_queue_depth: 0,
+        worker_peak_queue_depth: vec![0; vc.workers],
         worker_peak_lanes: vec![0; vc.workers],
         max_active: vc.max_active,
         faults: FaultCounters::default(),
@@ -658,9 +666,11 @@ pub fn run_virtual_plan(
                             failover: false,
                         },
                     );
-                    st.peak_queue_depth = st
-                        .peak_queue_depth
-                        .max(queues.depths().into_iter().max().unwrap_or(0));
+                    note_queue_depths(
+                        &mut st.peak_queue_depth,
+                        &mut st.worker_peak_queue_depth,
+                        &queues,
+                    );
                     st.dispatch(&queues, ta);
                     if !arrivals.front().map(|a| a.0 == ta).unwrap_or(false) {
                         break;
@@ -819,10 +829,13 @@ pub fn run_virtual_plan(
                     },
                 );
                 // Preemption requeues deepen queues too; sample the
-                // peak here as well as at arrival pushes.
-                st.peak_queue_depth = st
-                    .peak_queue_depth
-                    .max(queues.depths().into_iter().max().unwrap_or(0));
+                // peak here as well as at arrival pushes. (Free helper
+                // over disjoint fields: `w` still borrows `st.workers`.)
+                note_queue_depths(
+                    &mut st.peak_queue_depth,
+                    &mut st.worker_peak_queue_depth,
+                    &queues,
+                );
             }
             st.peak_kv_blocks = st.peak_kv_blocks.max(w.kv.blocks_in_use());
             st.peak_kv_reserved = st.peak_kv_reserved.max(w.kv.bytes_in_use());
@@ -922,6 +935,7 @@ pub fn run_virtual_plan(
         host_capacity_blocks,
         router_policy: vc.router,
         peak_queue_depth: st.peak_queue_depth,
+        worker_peak_queue_depth: st.worker_peak_queue_depth,
         worker_peak_lanes: st.worker_peak_lanes,
         faults_injected: f.faults_injected,
         retries: f.retries,
@@ -953,6 +967,7 @@ struct VState {
     peak_kv_reserved: u64,
     peak_kv_blocks: usize,
     peak_queue_depth: usize,
+    worker_peak_queue_depth: Vec<usize>,
     worker_peak_lanes: Vec<usize>,
     max_active: usize,
     faults: FaultCounters,
@@ -971,6 +986,17 @@ struct FaultCounters {
     shed_expired: u64,
     shed_livelock: u64,
     failed: usize,
+}
+
+/// Fold the current per-worker queue depths into the running peaks
+/// (the pool-wide max and the per-worker vector). A free function over
+/// the two gauge fields so it stays callable while `VState::workers`
+/// is mutably borrowed by the step loop.
+fn note_queue_depths<T>(peak: &mut usize, per_worker: &mut [usize], queues: &PoolQueues<T>) {
+    for (wi, d) in queues.depths().into_iter().enumerate() {
+        per_worker[wi] = per_worker[wi].max(d);
+        *peak = (*peak).max(d);
+    }
 }
 
 /// An empty-stream record for a request that ended without completing

@@ -50,6 +50,10 @@
 //!   and the prefix registry — also shared by both paths),
 //!   [`coordinator::faults`] (the fault plan + taxonomy driving both
 //!   paths' recovery),
+//!   [`coordinator::cluster`] (the SLO-aware replica fleet: tier
+//!   classification, deadline-aware admission with load shedding, and
+//!   step-driven autoscaling over N pools — one front-end decision core
+//!   shared by both paths),
 //!   [`coordinator::scheduler`],
 //!   [`coordinator::backend`], [`coordinator::metrics`],
 //!   [`coordinator::workload`]. See `ARCHITECTURE.md` at the repo root

@@ -10,8 +10,9 @@ use std::sync::Arc;
 use lpu::compiler::{compile, CompileOpts, ParallelMode};
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    BackendFactory, Coordinator, CoordinatorConfig, FaultPlan, HostTierConfig, KvPolicy,
-    PrefixCacheConfig, RouterPolicy, SchedulerPolicy, StepModel,
+    ArrivalTrace, AutoscaleConfig, BackendFactory, Cluster, ClusterConfig, Coordinator,
+    CoordinatorConfig, FaultPlan, HostTierConfig, KvPolicy, PrefixCacheConfig,
+    RouterPolicy, SchedulerPolicy, SloTierSpec, StepModel, VirtualConfig,
 };
 use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
 use lpu::isa::asm;
@@ -30,10 +31,10 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>|mixed:<ttft_s>:<fraction>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..] [--trace uniform|diurnal:<period_s>:<depth>|flash:<at_s>:<dur_s>:<mag>]" },
 ];
 
 fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
@@ -133,6 +134,41 @@ fn kv_args(
     };
     let kv_budget_bytes = if kv_budget_mb == 0 { u64::MAX } else { kv_budget_mb << 20 };
     Ok((kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier))
+}
+
+/// The cluster-fleet flags shared by `serve` and `loadtest`:
+/// `--replicas`, `--slo-tier`, `--autoscale`, `--trace`. Returns None
+/// when `--replicas` is absent (single-pool mode); the other cluster
+/// flags without `--replicas` are refused, not ignored.
+fn cluster_args(
+    args: &Args,
+) -> Result<Option<(usize, SloTierSpec, Option<AutoscaleConfig>, ArrivalTrace)>, String> {
+    if args.opt("replicas").is_none() {
+        for flag in ["slo-tier", "autoscale", "trace"] {
+            if args.opt(flag).is_some() {
+                return Err(format!("--{flag} needs --replicas (cluster mode)"));
+            }
+        }
+        return Ok(None);
+    }
+    let replicas = args.opt_usize("replicas", 1)?;
+    if replicas == 0 {
+        return Err("--replicas must be >= 1".into());
+    }
+    let tier = SloTierSpec::parse(args.opt_or("slo-tier", "batch"))?;
+    let autoscale = args.opt("autoscale").map(AutoscaleConfig::parse).transpose()?;
+    let trace = ArrivalTrace::parse(args.opt_or("trace", "uniform"))?;
+    Ok(Some((replicas, tier, autoscale, trace)))
+}
+
+/// Price the cluster front-end's admission estimates from the same
+/// registry model + device config the virtual harness clocks with.
+fn cluster_step_model(model: &str) -> Result<StepModel, String> {
+    let m = by_name(model).ok_or_else(|| {
+        format!("--replicas needs a registry model to price admission; '{model}' is unknown")
+    })?;
+    let device = LpuConfig::by_name("asic").expect("registry device config");
+    Ok(StepModel::from_config(&m, &device, 1))
 }
 
 fn main() {
@@ -304,18 +340,23 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let workers = args.opt_usize("workers", 2)?;
     let addr = args.opt_or("addr", "127.0.0.1:7071");
     let vocab = by_name(&model).map(|m| m.vocab).unwrap_or(512);
-    let factory = match backend {
-        "sim" => BackendFactory::sim(&model, vocab),
+    // Validate the backend choice once up front; a fleet then builds
+    // one factory per replica from the same spec.
+    let dir = default_artifacts_dir();
+    match backend {
+        "sim" => {}
         "pjrt" => {
-            let dir = default_artifacts_dir();
             if !Engine::artifacts_present(&dir, &model) {
                 return Err(format!(
                     "artifacts for '{model}' not found in {dir:?}; run `make artifacts` or use --backend sim"
                 ));
             }
-            BackendFactory::pjrt(dir, &model)
         }
         other => return Err(format!("unknown backend '{other}' (pjrt|sim)")),
+    }
+    let make_factory = || match backend {
+        "sim" => BackendFactory::sim(&model, vocab),
+        _ => BackendFactory::pjrt(dir.clone(), &model),
     };
     let policy = policy_arg(args)?;
     let router = router_arg(args)?;
@@ -331,7 +372,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     } else {
         String::new()
     };
-    let mut coord = Coordinator::new(CoordinatorConfig {
+    let cfg = CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 8)?,
         policy,
         kv_bytes_per_token,
@@ -344,8 +385,64 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         host_tier,
         faults,
         ..CoordinatorConfig::default()
-    });
-    coord.add_pool(&model, workers, factory);
+    };
+
+    if let Some((replicas, tier, autoscale, _)) = cluster_args(args)? {
+        // Fleet mode: N replicas behind the SLO-aware front-end.
+        if args.opt("trace").is_some() {
+            return Err(
+                "--trace shapes generated workloads; it applies to loadtest, not serve".into(),
+            );
+        }
+        let default_deadline_s = match tier {
+            SloTierSpec::Batch => None,
+            SloTierSpec::Interactive { ttft_s } => Some(ttft_s),
+            SloTierSpec::Mixed { .. } => {
+                return Err(
+                    "serve: --slo-tier mixed is a workload-generator mix; use batch or \
+                     interactive:<ttft_s> (clients opt in per request via deadline_s)"
+                        .into(),
+                )
+            }
+        };
+        let mut pool = VirtualConfig::new(
+            cfg.policy,
+            workers,
+            cfg.max_active_per_worker,
+            cluster_step_model(&model)?,
+        );
+        pool.max_batch = cfg.max_batch;
+        let mut cc = ClusterConfig::new(replicas, pool);
+        cc.autoscale = autoscale;
+        cc.default_deadline_s = default_deadline_s;
+        let autoscale_desc = cc.autoscale.map_or("autoscale off".to_string(), |a| {
+            format!("autoscale {}..{}", a.min_replicas, a.max_replicas)
+        });
+        let tier_desc = match default_deadline_s {
+            None => "batch tier".to_string(),
+            Some(d) => format!("interactive tier, TTFT budget {d}s"),
+        };
+        let cluster = Cluster::threaded(&cc, &model, || {
+            let mut c = Coordinator::new(cfg.clone());
+            c.add_pool(&model, workers, make_factory());
+            c
+        })?;
+        let (slots, active) = (cluster.replica_count(), cluster.active_replicas());
+        let handle =
+            server::serve_cluster(Arc::new(cluster), addr).map_err(|e| e.to_string())?;
+        println!(
+            "serving '{model}' fleet ({backend}, {active}/{slots} replicas active, \
+             {tier_desc}, {autoscale_desc}{fault_desc}) on {} with {workers} worker(s) \
+             per replica; Ctrl-C to stop",
+            handle.addr
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    let mut coord = Coordinator::new(cfg);
+    coord.add_pool(&model, workers, make_factory());
     let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
     let prefill_desc = if prefill_chunk == 0 {
         "single-pass prefill".to_string()
@@ -401,22 +498,25 @@ fn cmd_validate(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_loadtest(args: &Args) -> Result<(), String> {
-    use lpu::coordinator::{run_open_loop, LenDist, Workload};
+    use lpu::coordinator::{run_cluster_open_loop, run_open_loop, ClusterWorkload, LenDist, Workload};
     let model = args.opt_or("model", "opt-tiny").to_string();
     let backend = args.opt_or("backend", "sim");
     let n_requests = args.opt_usize("requests", 100)?;
     let vocab = by_name(&model).map(|m| m.vocab).unwrap_or(512);
-    let factory = match backend {
+    let make_factory = || match backend {
         "sim" => BackendFactory::sim(&model, vocab),
-        "pjrt" => BackendFactory::pjrt(default_artifacts_dir(), &model),
-        other => return Err(format!("unknown backend '{other}'")),
+        _ => BackendFactory::pjrt(default_artifacts_dir(), &model),
     };
+    if !matches!(backend, "sim" | "pjrt") {
+        return Err(format!("unknown backend '{backend}'"));
+    }
     let policy = policy_arg(args)?;
     let router = router_arg(args)?;
     let faults = fault_arg(args)?;
     let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier) =
         kv_args(args, &model)?;
-    let mut coord = Coordinator::new(CoordinatorConfig {
+    let workers = args.opt_usize("workers", 2)?;
+    let cfg = CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 4)?,
         policy,
         kv_bytes_per_token,
@@ -428,14 +528,97 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         host_tier,
         faults,
         ..CoordinatorConfig::default()
-    });
-    coord.add_pool(&model, args.opt_usize("workers", 2)?, factory);
+    };
 
     let rates: Vec<f64> = args
         .opt_or("rates", "50,200,1000")
         .split(',')
         .map(|r| r.trim().parse().map_err(|_| format!("bad rate '{r}'")))
         .collect::<Result<_, _>>()?;
+
+    if let Some((replicas, tier, autoscale, trace)) = cluster_args(args)? {
+        // Fleet mode: a fresh threaded cluster per offered rate, fed a
+        // tiered, trace-shaped workload through the SLO front-end.
+        let (fraction, ttft_s) = tier.mix();
+        let mut pool = VirtualConfig::new(
+            cfg.policy,
+            workers,
+            cfg.max_active_per_worker,
+            cluster_step_model(&model)?,
+        );
+        pool.max_batch = cfg.max_batch;
+        let mut cc = ClusterConfig::new(replicas, pool);
+        cc.autoscale = autoscale;
+        let mut t = Table::new(
+            format!(
+                "cluster load study: {model} ({backend} backend, {replicas} replicas, \
+                 {} trace)",
+                trace.name()
+            ),
+            &[
+                "req/s",
+                "completed",
+                "shed",
+                "failed",
+                "TTFT p50 ms",
+                "TTFT p99 ms",
+                "int attain %",
+                "peak reps",
+            ],
+        );
+        for &rate in &rates {
+            let cluster = Cluster::threaded(&cc, &model, || {
+                let mut c = Coordinator::new(cfg.clone());
+                c.add_pool(&model, workers, make_factory());
+                c
+            })?;
+            let wl = ClusterWorkload {
+                base: Workload {
+                    model: model.clone(),
+                    rate,
+                    n_requests,
+                    prompt_len: LenDist::Uniform(2, 10),
+                    output_len: LenDist::LongTail { min: 4, mean_extra: 12.0, cap: 64 },
+                    vocab,
+                    seed: 7,
+                },
+                trace,
+                interactive_fraction: fraction,
+                interactive_deadline_s: ttft_s,
+            };
+            let r = run_cluster_open_loop(&cluster, &wl)?;
+            let s = cluster.metrics.snapshot();
+            let attain = if s.tier_interactive_submitted == 0 {
+                100.0
+            } else {
+                100.0 * s.tier_interactive_attained as f64
+                    / s.tier_interactive_submitted as f64
+            };
+            let peak =
+                cluster.replica_timeline().iter().map(|&(_, n)| n).max().unwrap_or(0);
+            t.row(&[
+                format!("{rate:.0}"),
+                r.completed.to_string(),
+                r.shed.to_string(),
+                r.failed.to_string(),
+                format!("{:.2}", r.ttft.p50 * 1e3),
+                format!("{:.2}", r.ttft.p99 * 1e3),
+                format!("{attain:.1}"),
+                peak.to_string(),
+            ]);
+            cluster.shutdown();
+        }
+        t.note(format!(
+            "tier mix: {:.0}% interactive (TTFT budget {ttft_s}s); shed counts \
+             front-end admission drops",
+            fraction * 100.0
+        ));
+        t.print();
+        return Ok(());
+    }
+
+    let mut coord = Coordinator::new(cfg);
+    coord.add_pool(&model, workers, make_factory());
     let mut t = Table::new(
         format!("load study: {model} ({backend} backend, {} scheduling)", policy.name()),
         &["req/s", "tokens/s", "TTFT p50 ms", "TTFT p99 ms", "TPOT p95 ms", "latency p99 ms"],

@@ -6,7 +6,7 @@
 //! ```text
 //! → {"op":"generate","model":"opt-tiny","prompt":[1,2,3],
 //!    "max_new_tokens":8,"temperature":0.7,"top_k":50,"top_p":0.9,
-//!    "stream":true}
+//!    "stream":true,"deadline_s":0.5}
 //! ← {"type":"token","request_id":1,"index":0,"token":42}   (if stream)
 //! ← {"type":"done","request_id":1,"tokens":[42,...],"reason":"length"}
 //! → {"op":"metrics"}
@@ -18,14 +18,27 @@
 //! No tokio in this offline environment: `std::net::TcpListener` with a
 //! thread per connection (the LPU serves token streams, not thousands of
 //! idle sockets — thread-per-conn is the right tool at this scale).
+//!
+//! The same protocol fronts either a single [`Coordinator`] pool
+//! ([`serve`]) or an SLO-aware replica fleet ([`serve_cluster`]):
+//! `deadline_s` marks a request interactive (the value is its TTFT
+//! budget), and on the fleet path the cluster front-end may shed it at
+//! admission with an error frame mentioning `shed`. The fleet's
+//! `metrics` frame carries the per-tier counters plus `replicas`,
+//! `active_replicas`, and a `replica_pools` array of per-replica pool
+//! gauges.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-use crate::coordinator::{Coordinator, FinishReason, Request, TokenEvent};
+use crate::coordinator::{
+    Cluster, Coordinator, FinishReason, Request, RequestHandle, SloTier, Submitted,
+    TokenEvent,
+};
 use crate::numerics::SampleParams;
 use crate::util::json::{obj, Json};
 
@@ -50,8 +63,30 @@ impl ServerHandle {
     }
 }
 
+/// What the front end serves: a single coordinator pool, or an
+/// SLO-aware [`Cluster`] fleet. One protocol, one connection handler —
+/// only submission and the metrics frame differ.
+#[derive(Clone)]
+enum Served {
+    Pool(Arc<Coordinator>),
+    Fleet(Arc<Cluster>),
+}
+
 /// Serve `coordinator` on `addr` (use port 0 for an ephemeral port).
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> std::io::Result<ServerHandle> {
+    serve_inner(Served::Pool(coordinator), addr)
+}
+
+/// Serve a replica fleet on `addr`: same JSON-lines protocol as
+/// [`serve`], but requests pass through the cluster front-end (tier
+/// classification, deadline-aware admission, autoscaling) before
+/// reaching a replica. Shed requests get an error frame mentioning
+/// `shed` — no tokens are ever generated for them.
+pub fn serve_cluster(cluster: Arc<Cluster>, addr: &str) -> std::io::Result<ServerHandle> {
+    serve_inner(Served::Fleet(cluster), addr)
+}
+
+fn serve_inner(served: Served, addr: &str) -> std::io::Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -64,16 +99,16 @@ pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> std::io::Result<Serve
                     break;
                 }
                 let Ok(stream) = conn else { continue };
-                let coord = Arc::clone(&coordinator);
+                let served = served.clone();
                 let _ = std::thread::Builder::new()
                     .name("lpu-conn".into())
-                    .spawn(move || handle_conn(stream, coord));
+                    .spawn(move || handle_conn(stream, served));
             }
         })?;
     Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread) })
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
+fn handle_conn(stream: TcpStream, served: Served) {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
@@ -98,26 +133,61 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
         };
         match req.get("op").as_str() {
             Some("generate") => {
-                if let Err(e) = handle_generate(&req, &coord, &mut writer) {
+                let r = match &served {
+                    Served::Pool(coord) => handle_generate(&req, coord, &mut writer),
+                    Served::Fleet(cluster) => {
+                        handle_generate_cluster(&req, cluster, &mut writer)
+                    }
+                };
+                if let Err(e) = r {
                     reply_err(&mut writer, e);
                 }
             }
             Some("metrics") => {
-                let mut j = coord.metrics.snapshot().to_json();
+                let mut j = match &served {
+                    Served::Pool(coord) => coord.metrics.snapshot().to_json(),
+                    Served::Fleet(cluster) => cluster.metrics.snapshot().to_json(),
+                };
                 if let Json::Obj(o) = &mut j {
                     o.insert("type", "metrics".into());
-                    // Latency tails are policy-dependent; tag the frame
-                    // so sweeps can label per-policy results.
-                    o.insert("policy", coord.policy().name().into());
-                    // Per-pool prefill/prefix gauges: which model's
-                    // prompts are long, chunked, or cache-friendly.
-                    o.insert("pools", coord.pools_json());
+                    match &served {
+                        Served::Pool(coord) => {
+                            // Latency tails are policy-dependent; tag the
+                            // frame so sweeps can label per-policy results.
+                            o.insert("policy", coord.policy().name().into());
+                            // Per-pool prefill/prefix gauges: which model's
+                            // prompts are long, chunked, or cache-friendly.
+                            o.insert("pools", coord.pools_json());
+                        }
+                        Served::Fleet(cluster) => {
+                            // Fleet shape + per-replica pool gauges: the
+                            // tier counters live on the cluster snapshot,
+                            // the serving gauges on each replica.
+                            o.insert("replicas", cluster.replica_count().into());
+                            o.insert("active_replicas", cluster.active_replicas().into());
+                            o.insert(
+                                "replica_pools",
+                                Json::Arr(
+                                    cluster
+                                        .replicas()
+                                        .iter()
+                                        .map(|c| c.pools_json())
+                                        .collect(),
+                                ),
+                            );
+                        }
+                    }
                 }
                 let _ = writeln!(writer, "{j}");
             }
             Some("models") => {
-                let models: Vec<Json> =
-                    coord.models().into_iter().map(Json::from).collect();
+                let models: Vec<Json> = match &served {
+                    Served::Pool(coord) => coord.models(),
+                    Served::Fleet(cluster) => cluster.replicas()[0].models(),
+                }
+                .into_iter()
+                .map(Json::from)
+                .collect();
                 let j = obj(vec![("type", "models".into()), ("models", models.into())]);
                 let _ = writeln!(writer, "{j}");
             }
@@ -131,11 +201,9 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
     }
 }
 
-fn handle_generate(
-    req: &Json,
-    coord: &Coordinator,
-    writer: &mut TcpStream,
-) -> Result<(), String> {
+/// Parse a `generate` op into a [`Request`] plus its `stream` flag.
+/// Shared verbatim by the pool and fleet paths — one wire grammar.
+fn parse_generate(req: &Json) -> Result<(Request, bool), String> {
     let model = req.get("model").as_str().ok_or("missing 'model'")?.to_string();
     let prompt: Vec<i64> = req
         .get("prompt")
@@ -162,11 +230,27 @@ fn handle_generate(
         params,
         eos_token: req.get("eos_token").as_f64().map(|f| f as i64),
         seed: req.get("seed").as_u64().unwrap_or(0),
+        deadline_s: req.get("deadline_s").as_f64(),
     };
-    let handle = coord.submit(request)?;
+    Ok((request, stream_tokens))
+}
+
+/// Drain one request's event stream onto the wire (token frames if
+/// streaming, then the done frame). Returns the wall-clock TTFT
+/// (None if the stream finished without a token event).
+fn pump_stream(
+    handle: RequestHandle,
+    stream_tokens: bool,
+    writer: &mut TcpStream,
+) -> Result<Option<f64>, String> {
+    let submitted = Instant::now();
+    let mut ttft = None;
     for ev in handle.events.iter() {
         match ev {
             TokenEvent::Token { request_id, index, token } => {
+                if index == 0 {
+                    ttft = Some(submitted.elapsed().as_secs_f64());
+                }
                 if stream_tokens {
                     let j = obj(vec![
                         ("type", "token".into()),
@@ -195,12 +279,48 @@ fn handle_generate(
                     ),
                 ]);
                 writeln!(writer, "{j}").map_err(|e| e.to_string())?;
-                return Ok(());
+                return Ok(ttft);
             }
             TokenEvent::Error { message, .. } => return Err(message),
         }
     }
     Err("stream ended unexpectedly".into())
+}
+
+fn handle_generate(
+    req: &Json,
+    coord: &Coordinator,
+    writer: &mut TcpStream,
+) -> Result<(), String> {
+    let (request, stream_tokens) = parse_generate(req)?;
+    let handle = coord.submit(request)?;
+    pump_stream(handle, stream_tokens, writer).map(|_| ())
+}
+
+fn handle_generate_cluster(
+    req: &Json,
+    cluster: &Cluster,
+    writer: &mut TcpStream,
+) -> Result<(), String> {
+    let (request, stream_tokens) = parse_generate(req)?;
+    let deadline = request.deadline_s;
+    match cluster.submit(request)? {
+        Submitted::Shed { tier } => Err(format!(
+            "shed: {} admission over TTFT budget",
+            tier.name()
+        )),
+        Submitted::Handle { tier, handle, .. } => {
+            let ttft = pump_stream(handle, stream_tokens, writer)?;
+            // An interactive stream attains its SLO when the first
+            // token beat the deadline budget; batch always attains.
+            let attained = match (tier, deadline, ttft) {
+                (SloTier::Interactive, Some(d), Some(t)) => t <= d,
+                _ => true,
+            };
+            cluster.note_done(tier, attained);
+            Ok(())
+        }
+    }
 }
 
 /// Minimal blocking client for the JSON-lines protocol.
@@ -400,6 +520,99 @@ mod tests {
         let mut c = Client::connect(&addr).unwrap();
         let r = c.roundtrip(&obj(vec![("op", "frobnicate".into())])).unwrap();
         assert_eq!(r.get("type").as_str(), Some("error"));
+        h.stop();
+    }
+
+    use crate::coordinator::{ClusterConfig, StepModel, VirtualConfig};
+
+    /// A 2-replica fleet whose front-end cost model prices every
+    /// request at ~1000 virtual seconds: after `capacity` admissions
+    /// the projected delay dwarfs any realistic TTFT budget, so shed
+    /// decisions are deterministic on the wall clock (the live sim
+    /// pools still answer instantly).
+    fn test_cluster_server(capacity: usize) -> (ServerHandle, SocketAddr) {
+        let step = StepModel {
+            weight_stream_s: 1000.0,
+            kv_read_s_per_pos: 0.0,
+            lane_overhead_s: 0.0,
+            sync_s: 0.0,
+            host_restore_s_per_token: 0.0,
+        };
+        let pool = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step);
+        let cc = ClusterConfig::new(capacity.max(1), pool);
+        let cluster = Cluster::threaded(&cc, "opt-tiny", || {
+            let mut coord = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                ..CoordinatorConfig::default()
+            });
+            coord.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 128));
+            coord
+        })
+        .unwrap();
+        let h = serve_cluster(Arc::new(cluster), "127.0.0.1:0").unwrap();
+        let addr = h.addr;
+        (h, addr)
+    }
+
+    #[test]
+    fn cluster_server_generates_and_reports_fleet_metrics() {
+        let (h, addr) = test_cluster_server(2);
+        let mut c = Client::connect(&addr).unwrap();
+        c.ping().unwrap();
+        assert_eq!(c.models().unwrap(), vec!["opt-tiny".to_string()]);
+        // Batch request (no deadline): admitted despite the huge
+        // priced backlog — batch is never shed.
+        let r = c.generate("opt-tiny", &[3, 4], 5, true).unwrap();
+        assert_eq!(r.tokens.len(), 5);
+        assert_eq!(r.streamed, r.tokens);
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("replicas").as_u64(), Some(2));
+        assert_eq!(m.get("active_replicas").as_u64(), Some(2));
+        assert_eq!(m.get("tier_batch_submitted").as_u64(), Some(1));
+        assert_eq!(m.get("tier_batch_done").as_u64(), Some(1));
+        assert_eq!(m.get("tier_interactive_submitted").as_u64(), Some(0));
+        let pools = m.get("replica_pools").as_arr().expect("replica_pools");
+        assert_eq!(pools.len(), 2);
+        assert!(pools[0].get("opt-tiny").get("queue_depth").as_u64().is_some());
+        h.stop();
+    }
+
+    #[test]
+    fn cluster_server_sheds_interactive_over_budget() {
+        let (h, addr) = test_cluster_server(1);
+        let mut c = Client::connect(&addr).unwrap();
+        let send = |c: &mut Client, deadline: f64| {
+            let req = obj(vec![
+                ("op", "generate".into()),
+                ("model", "opt-tiny".into()),
+                ("prompt", Json::Arr(vec![Json::Num(1.0)])),
+                ("max_new_tokens", 3usize.into()),
+                ("deadline_s", deadline.into()),
+            ]);
+            writeln!(c.writer, "{req}").unwrap();
+        };
+        // First interactive request: empty horizon, delay 0 <= budget,
+        // admitted and served.
+        send(&mut c, 5.0);
+        let mut line = String::new();
+        c.reader.read_line(&mut line).unwrap();
+        let done = Json::parse(&line).unwrap();
+        assert_eq!(done.get("type").as_str(), Some("done"));
+        // Second: the single replica's horizon now sits ~1000 priced
+        // seconds out; a 5 s budget cannot fit — shed, before any token.
+        send(&mut c, 5.0);
+        line.clear();
+        c.reader.read_line(&mut line).unwrap();
+        let err = Json::parse(&line).unwrap();
+        assert_eq!(err.get("type").as_str(), Some("error"));
+        let msg = err.get("message").as_str().unwrap_or("");
+        assert!(msg.contains("shed") && msg.contains("interactive"), "{msg}");
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("tier_interactive_submitted").as_u64(), Some(2));
+        assert_eq!(m.get("tier_interactive_shed").as_u64(), Some(1));
+        assert_eq!(m.get("tier_interactive_done").as_u64(), Some(1));
+        assert_eq!(m.get("tier_interactive_attained").as_u64(), Some(1));
         h.stop();
     }
 }

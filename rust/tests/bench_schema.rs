@@ -1,0 +1,197 @@
+//! Schema regression over the committed `BENCH_*.json` baselines. Each
+//! file starts life as a hand-written null placeholder that the bench
+//! emitters overwrite with measured values; ci.sh's null gate catches a
+//! value the emitter forgot, but nothing caught the *keys* drifting —
+//! a renamed summary field would silently orphan the README table and
+//! any downstream consumer. This test pins every key path (recursing
+//! through objects; array elements are cell-shaped and deliberately
+//! unpinned) for the placeholder AND the regenerated file alike:
+//! `note` is the one placeholder-only key (the emitters drop it), so it
+//! is allowed-optional rather than required.
+
+use lpu::util::json::Json;
+
+/// Collect every object key path in `json` (dot-joined; arrays are not
+/// descended into).
+fn key_paths(json: &Json, prefix: &str, out: &mut Vec<String>) {
+    if let Some(o) = json.as_obj() {
+        for (k, v) in o.iter() {
+            let path = if prefix.is_empty() {
+                k.to_string()
+            } else {
+                format!("{prefix}.{k}")
+            };
+            key_paths(v, &path, out);
+            out.push(path);
+        }
+    }
+}
+
+fn check_schema(file: &str, required: &[&str], optional: &[&str]) {
+    let path = format!("{}/../{file}", env!("CARGO_MANIFEST_DIR"));
+    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {file}: {e}"));
+    let doc = Json::parse(&src).unwrap_or_else(|e| panic!("parse {file}: {e}"));
+    let mut present = Vec::new();
+    key_paths(&doc, "", &mut present);
+    for req in required {
+        assert!(
+            present.iter().any(|p| p == req),
+            "{file}: required key `{req}` is missing — emitter and placeholder must \
+             carry the same schema"
+        );
+    }
+    for p in &present {
+        assert!(
+            required.contains(&p.as_str()) || optional.contains(&p.as_str()),
+            "{file}: unexpected key `{p}` — update this pinned schema AND the README \
+             bench-schema table in the same change"
+        );
+    }
+}
+
+#[test]
+fn bench_serving_schema_is_pinned() {
+    check_schema(
+        "BENCH_serving.json",
+        &[
+            "bench",
+            "fast",
+            "model",
+            "device",
+            "kv_ablation_budget_tokens",
+            "kv_ablation_summary",
+            "kv_ablation_summary.reserve_tok_s",
+            "kv_ablation_summary.paged_tok_s",
+            "kv_ablation_summary.tok_s_ratio",
+            "kv_ablation_summary.reserve_peak_active",
+            "kv_ablation_summary.paged_peak_active",
+            "kv_ablation_summary.peak_active_ratio",
+            "kv_ablation_summary.paged_preemptions",
+            "prefill_interference_summary",
+            "prefill_interference_summary.long_prompt_tokens",
+            "prefill_interference_summary.chunk_tokens",
+            "prefill_interference_summary.single_pass_neighbor_tpot_p99_ms",
+            "prefill_interference_summary.chunked_neighbor_tpot_p99_ms",
+            "prefill_interference_summary.neighbor_tpot_p99_ratio",
+            "prefill_interference_summary.single_pass_long_ttft_mean_ms",
+            "prefill_interference_summary.chunked_long_ttft_mean_ms",
+            "prefill_interference_summary.long_ttft_ratio",
+            "router_summary",
+            "router_summary.workers",
+            "router_summary.n_requests",
+            "router_summary.prefix_tokens",
+            "router_summary.budget_blocks",
+            "router_summary.round_robin_prefix_hit_tokens",
+            "router_summary.least_loaded_prefix_hit_tokens",
+            "router_summary.affinity_prefix_hit_tokens",
+            "router_summary.round_robin_mean_ttft_ms",
+            "router_summary.least_loaded_mean_ttft_ms",
+            "router_summary.affinity_mean_ttft_ms",
+            "router_summary.rr_over_affinity_ttft_ratio",
+            "router_summary.affinity_peak_queue_depth",
+            "kv_tier_summary",
+            "kv_tier_summary.prompt_tokens",
+            "kv_tier_summary.output_tokens",
+            "kv_tier_summary.budget_blocks",
+            "kv_tier_summary.host_capacity_blocks",
+            "kv_tier_summary.preemptions",
+            "kv_tier_summary.demoted_blocks",
+            "kv_tier_summary.restored_blocks",
+            "kv_tier_summary.restored_tokens",
+            "kv_tier_summary.recompute_resume_gap_ms",
+            "kv_tier_summary.restore_resume_gap_ms",
+            "kv_tier_summary.resume_gap_ratio",
+            "kv_tier_summary.recompute_wall_s",
+            "kv_tier_summary.restore_wall_s",
+            "fault_recovery_summary",
+            "fault_recovery_summary.fault_plan",
+            "fault_recovery_summary.workers",
+            "fault_recovery_summary.n_requests",
+            "fault_recovery_summary.completed",
+            "fault_recovery_summary.worker_crashes",
+            "fault_recovery_summary.failovers",
+            "fault_recovery_summary.lanes_restored_on_failover",
+            "fault_recovery_summary.lanes_recomputed_on_failover",
+            "fault_recovery_summary.faults_injected",
+            "fault_recovery_summary.retries",
+            "fault_recovery_summary.end_kv_blocks_in_use",
+            "fault_recovery_summary.clean_wall_s",
+            "fault_recovery_summary.faulted_wall_s",
+            "prefix_cache_summary",
+            "prefix_cache_summary.prefix_tokens",
+            "prefix_cache_summary.n_requests",
+            "prefix_cache_summary.budget_blocks",
+            "prefix_cache_summary.peak_kv_blocks_off",
+            "prefix_cache_summary.peak_kv_blocks_on",
+            "prefix_cache_summary.peak_block_ratio",
+            "prefix_cache_summary.cold_ttft_ms",
+            "prefix_cache_summary.hit_ttft_mean_ms",
+            "prefix_cache_summary.cold_over_hit_ttft_ratio",
+            "prefix_cache_summary.prefix_hit_tokens",
+            "prefix_cache_summary.shared_blocks",
+            "prefix_cache_summary.cow_splits",
+            "cells",
+        ],
+        &["note"],
+    );
+}
+
+#[test]
+fn bench_scaling_schema_is_pinned() {
+    check_schema(
+        "BENCH_scaling.json",
+        &[
+            "bench",
+            "model",
+            "device",
+            "per_doubling",
+            "per_doubling.lpu_esl_overlap",
+            "per_doubling.lpu_no_overlap",
+            "per_doubling.dgx_a100",
+            "per_doubling.paper_lpu",
+            "per_doubling.paper_dgx",
+            "lpu_points",
+            "lpu_no_overlap_points",
+            "dgx_points",
+            "small_model_corollary",
+            "small_model_corollary.model",
+            "small_model_corollary.per_doubling",
+            "small_model_corollary.points",
+        ],
+        &["note"],
+    );
+}
+
+#[test]
+fn bench_cluster_schema_is_pinned() {
+    check_schema(
+        "BENCH_cluster.json",
+        &[
+            "bench",
+            "fast",
+            "model",
+            "device",
+            "replicas",
+            "interactive_fraction",
+            "ttft_budget_ms",
+            "calibration",
+            "calibration.base_ttft_ms",
+            "calibration.sustainable_rate_req_s",
+            "overload_ablation",
+            "overload_ablation.offered_rate_req_s",
+            "overload_ablation.noshed_interactive_attainment",
+            "overload_ablation.shed_interactive_attainment",
+            "overload_ablation.attainment_gain",
+            "overload_ablation.shed_fraction_interactive",
+            "autoscale_summary",
+            "autoscale_summary.trace",
+            "autoscale_summary.min_replicas",
+            "autoscale_summary.max_replicas",
+            "autoscale_summary.peak_replicas",
+            "autoscale_summary.scale_events",
+            "autoscale_summary.wall_s",
+            "cells",
+        ],
+        &["note"],
+    );
+}

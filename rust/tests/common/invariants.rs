@@ -1,0 +1,294 @@
+//! The reusable serving-invariant harness: ONE place that states the
+//! standing contract every serving PR re-asserts — instead of each test
+//! hand-rolling its own copy.
+//!
+//! The contract, for any virtual/threaded run pair:
+//!
+//! 1. **Rerun determinism** — the virtual harness is a pure function of
+//!    (workload seed, config): rerunning yields bit-identical records
+//!    AND bit-identical latency percentiles.
+//! 2. **Stream identity across paths** — the live threaded coordinator
+//!    produces the same greedy token streams as the virtual harness,
+//!    request for request.
+//! 3. **No duplicate / diverging tokens** — records are plan-indexed
+//!    with no duplicates, `token_times` matches `tokens` one-to-one,
+//!    and timelines are ordered (`arrival <= first_token <= done <=
+//!    wall`).
+//! 4. **Zero end-of-run KV blocks in use** — every pager block is
+//!    returned once the run drains; a leak means a lifetime bug.
+//!
+//! Checks come in two flavors: `Result<(), String>`-returning functions
+//! for property-test closures (compose with `?`), and the panicking
+//! [`assert_standing_contract`] entry point for `#[test]` bodies.
+
+use lpu::coordinator::{ClusterReport, SloTier, VirtualReport};
+
+/// Per-record well-formedness + the KV-leak gate on one virtual run
+/// (contract points 3 and 4).
+pub fn well_formed(r: &VirtualReport) -> Result<(), String> {
+    if r.end_kv_blocks_in_use != 0 {
+        return Err(format!(
+            "KV leak: {} blocks still in use after the run drained",
+            r.end_kv_blocks_in_use
+        ));
+    }
+    let served = r.records.iter().filter(|rec| !rec.tokens.is_empty()).count();
+    if served + r.rejected + r.shed_expired + r.shed_livelock + r.failed < r.records.len()
+    {
+        return Err(format!(
+            "lost requests: served {served} + rejected {} + shed {}+{} + failed {} < {}",
+            r.rejected,
+            r.shed_expired,
+            r.shed_livelock,
+            r.failed,
+            r.records.len()
+        ));
+    }
+    for (i, rec) in r.records.iter().enumerate() {
+        if rec.request_id != i {
+            return Err(format!(
+                "duplicate or misordered record: id {} at index {i}",
+                rec.request_id
+            ));
+        }
+        if rec.token_times.len() != rec.tokens.len() {
+            return Err(format!(
+                "request {i}: {} token times for {} tokens",
+                rec.token_times.len(),
+                rec.tokens.len()
+            ));
+        }
+        if rec.token_times.windows(2).any(|w| w[0] > w[1]) {
+            return Err(format!("request {i}: token times go backwards"));
+        }
+        if !rec.tokens.is_empty() {
+            if rec.first_token_s < rec.arrival_s
+                || rec.done_s < rec.first_token_s
+                || rec.done_s > r.wall_s
+            {
+                return Err(format!(
+                    "request {i}: inconsistent timeline {} .. {} .. {} vs wall {}",
+                    rec.arrival_s, rec.first_token_s, rec.done_s, r.wall_s
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Contract point 1: two runs of the same (seed, config) are
+/// bit-identical — records, percentiles, and makespan (f64 equality,
+/// not approximate).
+pub fn rerun_deterministic(a: &VirtualReport, b: &VirtualReport) -> Result<(), String> {
+    if a.records.len() != b.records.len() {
+        return Err(format!(
+            "rerun changed record count: {} vs {}",
+            a.records.len(),
+            b.records.len()
+        ));
+    }
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        if ra != rb {
+            return Err(format!("rerun diverged at request {}", ra.request_id));
+        }
+    }
+    for (name, x, y) in [
+        ("ttft.p50", a.ttft.p50, b.ttft.p50),
+        ("ttft.p95", a.ttft.p95, b.ttft.p95),
+        ("ttft.p99", a.ttft.p99, b.ttft.p99),
+        ("tpot.p50", a.tpot.p50, b.tpot.p50),
+        ("tpot.p95", a.tpot.p95, b.tpot.p95),
+        ("tpot.p99", a.tpot.p99, b.tpot.p99),
+        ("latency.p99", a.request_latency.p99, b.request_latency.p99),
+        ("wall_s", a.wall_s, b.wall_s),
+    ] {
+        if x != y {
+            return Err(format!("rerun changed {name}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// Stream identity between two virtual runs that may differ in timing
+/// or placement but must not differ in tokens (routing, chunking,
+/// caching, tiering, host-KV are all placement/timing features).
+/// Rejection decisions must agree too — a config knob that silently
+/// changes admission is a bug the old ad-hoc tests each re-checked.
+pub fn streams_identical(
+    a: &VirtualReport,
+    b: &VirtualReport,
+    what: &str,
+) -> Result<(), String> {
+    if a.rejected != b.rejected {
+        return Err(format!(
+            "rejection count changed by {what}: {} vs {}",
+            a.rejected, b.rejected
+        ));
+    }
+    if a.records.len() != b.records.len() {
+        return Err(format!(
+            "record count changed by {what}: {} vs {}",
+            a.records.len(),
+            b.records.len()
+        ));
+    }
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        if ra.tokens != rb.tokens {
+            return Err(format!(
+                "request {} stream changed by {what}",
+                ra.request_id
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Contract point 2: the threaded path's token streams (plan-ordered,
+/// as [`run_open_loop`](lpu::coordinator::run_open_loop) and
+/// [`run_cluster_open_loop`](lpu::coordinator::run_cluster_open_loop)
+/// report them) match the virtual run request-for-request.
+pub fn threaded_matches_virtual(
+    virt: &VirtualReport,
+    threaded_streams: &[Vec<i64>],
+) -> Result<(), String> {
+    if virt.records.len() != threaded_streams.len() {
+        return Err(format!(
+            "path record counts differ: virtual {} vs threaded {}",
+            virt.records.len(),
+            threaded_streams.len()
+        ));
+    }
+    for (v, l) in virt.records.iter().zip(threaded_streams) {
+        if &v.tokens != l {
+            return Err(format!(
+                "request {} diverges between virtual and threaded paths",
+                v.request_id
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The single panicking entry point for `#[test]` bodies: given a
+/// virtual run, its rerun, and (optionally) the threaded path's streams
+/// for the same plan, assert the full standing contract.
+pub fn assert_standing_contract(
+    virt: &VirtualReport,
+    rerun: &VirtualReport,
+    threaded_streams: Option<&[Vec<i64>]>,
+) {
+    require(well_formed(virt));
+    require(well_formed(rerun));
+    require(rerun_deterministic(virt, rerun));
+    if let Some(streams) = threaded_streams {
+        require(threaded_matches_virtual(virt, streams));
+    }
+}
+
+/// Unwrap a harness check inside a `#[test]` with its message intact.
+pub fn require(res: Result<(), String>) {
+    if let Err(e) = res {
+        panic!("serving invariant violated: {e}");
+    }
+}
+
+// ---- cluster-tier extensions of the same contract ----
+
+/// Cluster-run well-formedness: the pool contract on every replica,
+/// plus the fleet rules — shed strictly before the first token (never
+/// mid-stream), batch never shed, tier counters consistent with the
+/// records, zero KV blocks leaked across the whole fleet.
+pub fn cluster_well_formed(r: &ClusterReport) -> Result<(), String> {
+    for vr in r.replicas.iter().flatten() {
+        well_formed(vr)?;
+    }
+    if r.end_kv_blocks_in_use != 0 {
+        return Err(format!(
+            "fleet KV leak: {} blocks in use after drain",
+            r.end_kv_blocks_in_use
+        ));
+    }
+    if r.shed_batch != 0 {
+        return Err(format!("batch tier shed {} requests", r.shed_batch));
+    }
+    let mut shed_interactive = 0;
+    for (i, rec) in r.records.iter().enumerate() {
+        if rec.request_id != i {
+            return Err(format!(
+                "duplicate or misordered cluster record: id {} at index {i}",
+                rec.request_id
+            ));
+        }
+        if rec.shed {
+            // Shed happens at admission or never: no tokens, no
+            // replica, first-token time pinned to arrival.
+            if !rec.tokens.is_empty()
+                || !rec.token_times.is_empty()
+                || rec.replica.is_some()
+                || rec.first_token_s != rec.arrival_s
+            {
+                return Err(format!("request {i} shed after streaming began"));
+            }
+            if rec.tier == SloTier::Interactive {
+                shed_interactive += 1;
+            }
+        } else if rec.replica.is_none() && !rec.tokens.is_empty() {
+            return Err(format!("request {i} has tokens but no replica"));
+        }
+        if rec.token_times.len() != rec.tokens.len() {
+            return Err(format!(
+                "request {i}: {} token times for {} tokens",
+                rec.token_times.len(),
+                rec.tokens.len()
+            ));
+        }
+    }
+    if shed_interactive != r.shed_interactive {
+        return Err(format!(
+            "shed counter disagrees with records: {} vs {}",
+            r.shed_interactive, shed_interactive
+        ));
+    }
+    let submitted = r.submitted_interactive + r.submitted_batch;
+    if submitted != r.records.len() {
+        return Err(format!(
+            "tier submitted counters {} != {} records",
+            submitted,
+            r.records.len()
+        ));
+    }
+    if r.attained_interactive > r.completed_interactive {
+        return Err(format!(
+            "attained {} > completed {}",
+            r.attained_interactive, r.completed_interactive
+        ));
+    }
+    Ok(())
+}
+
+/// Cluster stream identity: every request the fleet completed carries
+/// tokens bit-identical to the rid-matched record of a baseline run
+/// (e.g. single-replica, no-shed, no-autoscale over the same plan) —
+/// replica count, tier mix, shedding, and autoscaling are
+/// placement/admission features, never token features.
+pub fn cluster_streams_match_baseline(
+    fleet: &ClusterReport,
+    baseline: &VirtualReport,
+) -> Result<(), String> {
+    if fleet.records.len() != baseline.records.len() {
+        return Err(format!(
+            "record counts differ: fleet {} vs baseline {}",
+            fleet.records.len(),
+            baseline.records.len()
+        ));
+    }
+    for (f, b) in fleet.records.iter().zip(&baseline.records) {
+        if f.completed() && !b.tokens.is_empty() && f.tokens != b.tokens {
+            return Err(format!(
+                "request {} stream changed by cluster placement (tier {:?}, replica {:?})",
+                f.request_id, f.tier, f.replica
+            ));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Shared helpers for the integration-test crates. Each test file pulls
+//! this in with `mod common;`, so not every helper is referenced from
+//! every crate.
+#![allow(dead_code)]
+
+pub mod invariants;

@@ -129,6 +129,13 @@ fn metrics_op_schema_is_complete_across_pools() {
         "worker_crashes",
         "shed_expired",
         "shed_livelock",
+        "tier_interactive_submitted",
+        "tier_interactive_shed",
+        "tier_interactive_done",
+        "tier_interactive_attained",
+        "tier_batch_submitted",
+        "tier_batch_shed",
+        "tier_batch_done",
     ];
     for field in aggregate {
         assert!(
@@ -178,7 +185,7 @@ fn metrics_op_schema_is_complete_across_pools() {
         let workers = pool.get("workers").as_arr().expect("workers array");
         assert_eq!(workers.len(), n_workers, "pools.{model}.workers length");
         for (i, w) in workers.iter().enumerate() {
-            for field in ["queue_depth", "active_lanes"] {
+            for field in ["queue_depth", "peak_queue_depth", "active_lanes"] {
                 assert!(
                     w.get(field).as_u64().is_some(),
                     "pools.{model}.workers[{i}].{field} missing or non-numeric"

@@ -22,6 +22,9 @@ use lpu::coordinator::{
 use lpu::model::by_name;
 use lpu::util::proptest::quick;
 
+mod common;
+use common::invariants;
+
 fn step_model() -> StepModel {
     StepModel::from_config(&by_name("opt-1.3b").unwrap(), &LpuConfig::asic_3_28tbs(), 1)
 }
@@ -52,21 +55,11 @@ fn serving_pipeline_is_deterministic_and_batches_deep() {
     let a = run_virtual(&wl, &vc).unwrap();
     let b = run_virtual(&wl, &vc).unwrap();
 
-    // Bit-identical token streams...
+    // Bit-identical records AND latency percentiles, via the shared
+    // invariant harness (f64 equality, not approximate: the harness is
+    // a pure function of the seed).
     assert_eq!(a.records.len(), 64);
-    for (ra, rb) in a.records.iter().zip(&b.records) {
-        assert_eq!(ra, rb);
-    }
-    // ...and bit-identical latency percentiles (f64 equality, not
-    // approximate: the harness is a pure function of the seed).
-    assert_eq!(a.ttft.p50, b.ttft.p50);
-    assert_eq!(a.ttft.p95, b.ttft.p95);
-    assert_eq!(a.ttft.p99, b.ttft.p99);
-    assert_eq!(a.tpot.p50, b.tpot.p50);
-    assert_eq!(a.tpot.p95, b.tpot.p95);
-    assert_eq!(a.tpot.p99, b.tpot.p99);
-    assert_eq!(a.request_latency.p99, b.request_latency.p99);
-    assert_eq!(a.wall_s, b.wall_s);
+    invariants::assert_standing_contract(&a, &b, None);
 
     // The 1.3B step model is slow relative to a 4000 req/s offered
     // rate: the slot table must fill well past 8 concurrent requests.
@@ -101,9 +94,10 @@ fn threaded_and_virtual_streams_agree() {
 
     let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 8, step_model());
     let virt = run_virtual(&wl, &vc).unwrap();
-    for (i, (v, l)) in virt.records.iter().zip(&live1.token_streams).enumerate() {
-        assert_eq!(&v.tokens, l, "stream {i} diverges between virtual and live");
-    }
+    let rerun = run_virtual(&wl, &vc).unwrap();
+    // Full standing contract: virtual rerun determinism + the threaded
+    // path's streams matching the virtual run request-for-request.
+    invariants::assert_standing_contract(&virt, &rerun, Some(&live1.token_streams));
 }
 
 /// Live batched coordinator under the seeded generator: every policy
@@ -249,10 +243,7 @@ fn paged_virtual_deterministic_across_preemption() {
         preemption_cell(6, step_model(), KvPolicy::Paged { block_tokens: 16 });
     let a = run_virtual(&wl, &vc).unwrap();
     let b = run_virtual(&wl, &vc).unwrap();
-    assert_eq!(a.records, b.records);
-    assert_eq!(a.ttft.p99, b.ttft.p99);
-    assert_eq!(a.tpot.p95, b.tpot.p95);
-    assert_eq!(a.wall_s, b.wall_s);
+    invariants::assert_standing_contract(&a, &b, None);
     assert_eq!(a.preemptions, b.preemptions);
     // The cell is engineered to overshoot the pager: growth must have
     // preempted at least once, and nobody may starve because of it.
@@ -451,21 +442,12 @@ fn prop_prefix_cache_streams_bit_identical() {
         let mut on_vc = base.clone();
         on_vc.prefix_cache = PrefixCacheConfig::on();
         let on = run_virtual_plan(&wl.model, wl.vocab, wl.rate, plan, &on_vc)?;
-        if off.rejected != on.rejected {
-            return Err(format!(
-                "rejection count changed by the prefix cache: {} vs {}",
-                off.rejected, on.rejected
-            ));
-        }
-        for (a, b) in off.records.iter().zip(&on.records) {
-            if a.tokens != b.tokens {
-                return Err(format!(
-                    "request {} stream changed by the prefix cache (block {block_tokens})",
-                    a.request_id
-                ));
-            }
-        }
-        Ok(())
+        invariants::well_formed(&on)?;
+        invariants::streams_identical(
+            &off,
+            &on,
+            &format!("the prefix cache (block {block_tokens})"),
+        )
     });
 }
 
@@ -520,21 +502,15 @@ fn prop_kv_tier_streams_bit_identical() {
         sm.host_restore_s_per_token = 1e-8;
         on_vc.host_tier = HostTierConfig::from_step(&sm, rng.range(1, 48));
         let on = run_virtual_plan(&wl.model, wl.vocab, wl.rate, plan, &on_vc)?;
-        if off.rejected != on.rejected {
-            return Err(format!(
-                "rejection count changed by the host tier: {} vs {}",
-                off.rejected, on.rejected
-            ));
-        }
-        for (a, b) in off.records.iter().zip(&on.records) {
-            if a.tokens != b.tokens {
-                return Err(format!(
-                    "request {} stream changed by the host tier (block {block_tokens}, cap {})",
-                    a.request_id, on_vc.host_tier.capacity_blocks
-                ));
-            }
-        }
-        Ok(())
+        invariants::well_formed(&on)?;
+        invariants::streams_identical(
+            &off,
+            &on,
+            &format!(
+                "the host tier (block {block_tokens}, cap {})",
+                on_vc.host_tier.capacity_blocks
+            ),
+        )
     });
 }
 
@@ -706,20 +682,11 @@ fn prop_router_policies_stream_identical() {
         let baseline = runs.next().expect("round-robin run")?;
         for run in runs {
             let r = run?;
-            if r.rejected != baseline.rejected {
-                return Err(format!(
-                    "rejections changed by routing: {} vs {}",
-                    r.rejected, baseline.rejected
-                ));
-            }
-            for (a, b) in baseline.records.iter().zip(&r.records) {
-                if a.tokens != b.tokens {
-                    return Err(format!(
-                        "request {} stream changed by {:?} routing",
-                        a.request_id, r.router_policy
-                    ));
-                }
-            }
+            invariants::streams_identical(
+                &baseline,
+                &r,
+                &format!("{:?} routing", r.router_policy),
+            )?;
         }
         Ok(())
     });
@@ -761,21 +728,12 @@ fn prop_chunked_prefill_streams_bit_identical() {
         let mut chunked_vc = base.clone();
         chunked_vc.prefill_chunk = rng.range(1, 33);
         let chunked = run_virtual(&wl, &chunked_vc)?;
-        if single.rejected != chunked.rejected {
-            return Err(format!(
-                "rejection count changed by chunking: {} vs {}",
-                single.rejected, chunked.rejected
-            ));
-        }
-        for (a, b) in single.records.iter().zip(&chunked.records) {
-            if a.tokens != b.tokens {
-                return Err(format!(
-                    "request {} stream changed by chunking (chunk {})",
-                    a.request_id, chunked_vc.prefill_chunk
-                ));
-            }
-        }
-        Ok(())
+        invariants::well_formed(&chunked)?;
+        invariants::streams_identical(
+            &single,
+            &chunked,
+            &format!("chunking (chunk {})", chunked_vc.prefill_chunk),
+        )
     });
 }
 

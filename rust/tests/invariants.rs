@@ -1,0 +1,326 @@
+//! The invariant harness, exercised directly: first against reports we
+//! deliberately corrupt (the harness must actually catch contract
+//! violations, not just bless clean runs), then as the acceptance
+//! surface for the cluster tier — virtual fleet runs, threaded fleet
+//! runs, and the `cluster-slo-streams` property:
+//!
+//! * every stream a fleet completes is bit-identical to a
+//!   single-replica, no-shed, no-autoscale run of the same seed —
+//!   replica count, tier mix, shedding, and autoscaling are
+//!   placement/admission features, never token features;
+//! * shed happens at admission or never: a shed request has zero
+//!   tokens (no mid-stream drops);
+//! * the threaded dispatcher's streams match the virtual fleet's,
+//!   request for request, because both share one front-end core.
+
+use lpu::config::LpuConfig;
+use lpu::coordinator::{
+    run_cluster_open_loop, run_virtual, run_virtual_cluster, run_virtual_cluster_plan,
+    run_virtual_plan, ArrivalTrace, AutoscaleConfig, BackendFactory, Cluster,
+    ClusterConfig, ClusterWorkload, Coordinator, CoordinatorConfig, LenDist, Request,
+    SchedulerPolicy, StepModel, VirtualConfig, Workload,
+};
+use lpu::model::by_name;
+use lpu::util::proptest::quick;
+
+mod common;
+use common::invariants;
+
+fn step_model() -> StepModel {
+    StepModel::from_config(&by_name("opt-1.3b").unwrap(), &LpuConfig::asic_819gbs(), 1)
+}
+
+fn cwl(
+    rate: f64,
+    n: usize,
+    frac: f64,
+    deadline: f64,
+    trace: ArrivalTrace,
+    seed: u64,
+) -> ClusterWorkload {
+    ClusterWorkload {
+        base: Workload {
+            model: "opt-tiny".into(),
+            rate,
+            n_requests: n,
+            prompt_len: LenDist::Uniform(1, 8),
+            output_len: LenDist::Fixed(5),
+            vocab: 512,
+            seed,
+        },
+        trace,
+        interactive_fraction: frac,
+        interactive_deadline_s: deadline,
+    }
+}
+
+/// Strip deadlines from a plan so the baseline pool neither sheds nor
+/// expires anything — pure token-stream ground truth.
+fn strip_deadlines(plan: &[(f64, Request)]) -> Vec<(f64, Request)> {
+    plan.iter()
+        .map(|(t, r)| (*t, Request { deadline_s: None, ..r.clone() }))
+        .collect()
+}
+
+/// The harness must flag corrupted reports, not just pass clean ones:
+/// KV leaks, lost requests, backwards token times, and broken
+/// timelines all produce errors.
+#[test]
+fn harness_rejects_corrupted_pool_reports() {
+    let wl = Workload {
+        model: "opt-tiny".into(),
+        rate: 500.0,
+        n_requests: 16,
+        prompt_len: LenDist::Uniform(1, 8),
+        output_len: LenDist::Fixed(4),
+        vocab: 512,
+        seed: 9,
+    };
+    let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model());
+    let clean = run_virtual(&wl, &vc).unwrap();
+    invariants::require(invariants::well_formed(&clean));
+
+    let mut leak = clean.clone();
+    leak.end_kv_blocks_in_use = 3;
+    assert!(invariants::well_formed(&leak).unwrap_err().contains("KV leak"));
+
+    let mut dup = clean.clone();
+    dup.records[1].request_id = 0;
+    assert!(invariants::well_formed(&dup).unwrap_err().contains("duplicate"));
+
+    let mut backwards = clean.clone();
+    let last = *backwards.records[0].token_times.last().unwrap();
+    backwards.records[0].token_times[0] = last + 1.0;
+    assert!(invariants::well_formed(&backwards).is_err());
+
+    let mut late = clean.clone();
+    late.records[0].done_s = clean.wall_s + 1.0;
+    assert!(invariants::well_formed(&late).unwrap_err().contains("timeline"));
+}
+
+/// Rerun- and cross-path checks must flag a single diverging token or
+/// percentile, and shifted stream assignments between paths.
+#[test]
+fn harness_rejects_diverging_streams() {
+    let wl = Workload {
+        model: "opt-tiny".into(),
+        rate: 500.0,
+        n_requests: 12,
+        prompt_len: LenDist::Uniform(1, 8),
+        output_len: LenDist::Fixed(4),
+        vocab: 512,
+        seed: 10,
+    };
+    let vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model());
+    let a = run_virtual(&wl, &vc).unwrap();
+
+    let mut flipped = a.clone();
+    flipped.records[2].tokens[0] ^= 1;
+    assert!(invariants::rerun_deterministic(&a, &flipped)
+        .unwrap_err()
+        .contains("request 2"));
+    assert!(invariants::streams_identical(&a, &flipped, "the bit flip")
+        .unwrap_err()
+        .contains("the bit flip"));
+
+    let mut skewed = a.clone();
+    skewed.ttft.p99 += 1e-9;
+    assert!(invariants::rerun_deterministic(&a, &skewed)
+        .unwrap_err()
+        .contains("ttft.p99"));
+
+    let mut streams: Vec<Vec<i64>> =
+        a.records.iter().map(|r| r.tokens.clone()).collect();
+    invariants::require(invariants::threaded_matches_virtual(&a, &streams));
+    streams[3].push(0);
+    assert!(invariants::threaded_matches_virtual(&a, &streams)
+        .unwrap_err()
+        .contains("request 3"));
+}
+
+/// The cluster checks must flag fleet-rule violations the pool checks
+/// can't see: mid-stream sheds, batch sheds, lying tier counters.
+#[test]
+fn harness_rejects_mid_stream_sheds_and_counter_drift() {
+    let wl = cwl(2000.0, 60, 0.5, 0.05, ArrivalTrace::Uniform, 21);
+    let cc = ClusterConfig::new(2, VirtualConfig::new(
+        SchedulerPolicy::RoundRobin,
+        1,
+        4,
+        step_model(),
+    ));
+    let clean = run_virtual_cluster(&wl, &cc).unwrap();
+    invariants::require(invariants::cluster_well_formed(&clean));
+
+    // Corrupt a completed record into a "shed after streaming" state.
+    let mut mid = clean.clone();
+    let victim = mid.records.iter().position(|r| r.completed()).unwrap();
+    mid.records[victim].shed = true;
+    assert!(invariants::cluster_well_formed(&mid)
+        .unwrap_err()
+        .contains("shed after streaming"));
+
+    let mut batch_shed = clean.clone();
+    batch_shed.shed_batch = 1;
+    assert!(invariants::cluster_well_formed(&batch_shed)
+        .unwrap_err()
+        .contains("batch"));
+
+    let mut drift = clean.clone();
+    drift.shed_interactive += 1;
+    assert!(invariants::cluster_well_formed(&drift)
+        .unwrap_err()
+        .contains("disagrees"));
+}
+
+/// Virtual fleet acceptance: a 2-replica autoscaling cluster under a
+/// diurnal trace passes the full fleet contract, reruns bit-identically
+/// (records AND autoscale timeline), and every completed stream matches
+/// the single-replica no-shed baseline of the same seed.
+#[test]
+fn cluster_fleet_reruns_bit_identical_and_matches_baseline() {
+    let wl = cwl(
+        3000.0,
+        80,
+        0.5,
+        0.05,
+        ArrivalTrace::Diurnal { period_s: 2.0, depth: 0.9 },
+        11,
+    );
+    let mut cc = ClusterConfig::new(
+        2,
+        VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model()),
+    );
+    cc.autoscale = Some(AutoscaleConfig::default());
+
+    let a = run_virtual_cluster(&wl, &cc).unwrap();
+    let b = run_virtual_cluster(&wl, &cc).unwrap();
+    invariants::require(invariants::cluster_well_formed(&a));
+    invariants::require(invariants::cluster_well_formed(&b));
+    assert_eq!(a.records, b.records);
+    assert_eq!(a.replica_timeline, b.replica_timeline);
+    assert_eq!(a.peak_replicas, b.peak_replicas);
+
+    let baseline = run_virtual_plan(
+        &wl.base.model,
+        wl.base.vocab,
+        wl.base.rate,
+        strip_deadlines(&wl.generate()),
+        &cc.pool,
+    )
+    .unwrap();
+    invariants::require(invariants::cluster_streams_match_baseline(&a, &baseline));
+}
+
+/// Cross-path acceptance: the threaded dispatcher (live coordinators,
+/// real threads) and the virtual fleet share one front-end, so with the
+/// same planned timestamps their admission decisions AND token streams
+/// agree request for request — and the threaded run is itself
+/// deterministic across reruns.
+#[test]
+fn threaded_cluster_streams_match_virtual_fleet() {
+    // Generous TTFT budget: admission never sheds, so every request
+    // streams on both paths.
+    let wl = cwl(2000.0, 24, 0.5, 1000.0, ArrivalTrace::Uniform, 42);
+    let cc = ClusterConfig::new(
+        2,
+        VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model()),
+    );
+
+    let virt = run_virtual_cluster(&wl, &cc).unwrap();
+    invariants::require(invariants::cluster_well_formed(&virt));
+    assert_eq!(virt.shed_interactive, 0);
+
+    let run_live = || {
+        let cluster = Cluster::threaded(&cc, "opt-tiny", || {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+            c
+        })
+        .unwrap();
+        let r = run_cluster_open_loop(&cluster, &wl).unwrap();
+        cluster.shutdown();
+        r
+    };
+    let live1 = run_live();
+    let live2 = run_live();
+    assert_eq!(live1.token_streams, live2.token_streams);
+    assert_eq!(live1.shed, 0);
+    assert_eq!(live1.failed, 0);
+    assert_eq!(live1.completed, 24);
+
+    assert_eq!(virt.records.len(), live1.token_streams.len());
+    for (rec, stream) in virt.records.iter().zip(&live1.token_streams) {
+        assert_eq!(
+            &rec.tokens, stream,
+            "request {} diverges between virtual and threaded fleets",
+            rec.request_id
+        );
+    }
+}
+
+/// Property `cluster-slo-streams`: over random replica counts, tier
+/// mixes, arrival traces, and autoscale settings, every completed
+/// stream is bit-identical to a single-replica no-shed run of the same
+/// seed, and shed requests only ever shed before their first token.
+#[test]
+fn prop_cluster_slo_streams() {
+    quick("cluster-slo-streams", |rng| {
+        let seed = rng.next_u64();
+        let n = rng.range(20, 61);
+        let rate = rng.range_f64(200.0, 5000.0);
+        let frac = rng.range_f64(0.0, 1.0);
+        let deadline = rng.range_f64(0.005, 0.5);
+        let trace = *rng.choose(&[
+            ArrivalTrace::Uniform,
+            ArrivalTrace::Diurnal { period_s: 3.0, depth: 0.8 },
+            ArrivalTrace::FlashCrowd { at_s: 0.05, dur_s: 0.4, magnification: 25.0 },
+        ]);
+        let wl = cwl(rate, n, frac, deadline, trace, seed);
+
+        let replicas = rng.range(1, 5);
+        let pool = VirtualConfig::new(
+            SchedulerPolicy::RoundRobin,
+            rng.range(1, 3),
+            rng.range(2, 9),
+            step_model(),
+        );
+        let mut cc = ClusterConfig::new(replicas, pool);
+        cc.shed = rng.bool(0.8);
+        if rng.bool(0.5) {
+            cc.autoscale = Some(AutoscaleConfig {
+                max_replicas: rng.range(replicas, replicas + 3),
+                ..AutoscaleConfig::default()
+            });
+        }
+
+        let plan = wl.generate();
+        let fleet = run_virtual_cluster_plan(
+            &wl.base.model,
+            wl.base.vocab,
+            rate,
+            plan.clone(),
+            &cc,
+        )?;
+        // Fleet contract: per-replica pool invariants, shed strictly
+        // before the first token, batch never shed, counters honest.
+        invariants::cluster_well_formed(&fleet)?;
+
+        // Ground truth: one replica, no shedding, no autoscale, no
+        // deadlines — the same plan must yield the same tokens for
+        // every request the fleet completed.
+        let baseline = run_virtual_plan(
+            &wl.base.model,
+            wl.base.vocab,
+            rate,
+            strip_deadlines(&plan),
+            &cc.pool,
+        )?;
+        invariants::well_formed(&baseline)?;
+        invariants::cluster_streams_match_baseline(&fleet, &baseline)
+    });
+}

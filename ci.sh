@@ -39,9 +39,12 @@ cargo test -q
 
 step "invariant harness smoke (cargo test -q --test invariants)"
 # The shared serving-invariant harness (tests/common/invariants.rs) and
-# the cluster-tier acceptance tests run under plain `cargo test` too;
-# this dedicated line keeps the contract surface visible in CI output
-# and fails fast if only the harness regressed.
+# the cluster-tier acceptance tests — including the chaos suite
+# (crash/partition failover, exactly-once delivery, hedging, the
+# per-replica pool fault plan, and the cluster-chaos-streams property)
+# — run under plain `cargo test` too; this dedicated line keeps the
+# contract surface visible in CI output and fails fast if only the
+# harness regressed.
 cargo test -q --test invariants
 
 step "cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
@@ -74,9 +77,13 @@ cargo bench --bench fig7c_scalability
 step "cluster SLO bench (smoke) -> BENCH_cluster.json"
 # The replica-fleet sweep: SLO-attainment vs offered load under diurnal
 # and flash-crowd traces, the shed-vs-admit-all overload ablation
-# (shedding must strictly win at 8x overload), and the flash-crowd
-# autoscale timeline — self-calibrated, seed-deterministic, assertions
-# included in smoke mode. LPU_BENCH_CLUSTER_JSON=<path> redirects.
+# (shedding must strictly win at 8x overload), the flash-crowd
+# autoscale timeline, and the chaos cell — replica crash + partition
+# mid-flash-crowd with 100% completion, zero leaked KV, streams
+# bit-identical fault-on vs fault-off, rerun-identical recovery on the
+# virtual AND threaded paths, plus the slow-replica hedging sub-cell —
+# self-calibrated, seed-deterministic, assertions included in smoke
+# mode. LPU_BENCH_CLUSTER_JSON=<path> redirects.
 LPU_BENCH_FAST=1 cargo bench --bench cluster_slo
 
 step "bench JSON sanity (no null fields survive the benches)"

@@ -12,7 +12,14 @@
 //! * **autoscaling**: a flash-crowd trace over a min=1/max=4 fleet
 //!   with a warm-up charge per activation — the controller must ride
 //!   the burst up to >= 2 active replicas (asserted) and the full
-//!   `(t, active)` timeline is emitted.
+//!   `(t, active)` timeline is emitted;
+//! * **chaos**: a replica crash plus a network partition in the middle
+//!   of a flash crowd on a 3-replica fleet — 100% completion, zero
+//!   leaked KV blocks, every stream bit-identical fault-on vs
+//!   fault-off, rerun-identical recovery (all asserted) on the virtual
+//!   path AND a small threaded failover run; plus a hedging sub-cell
+//!   (one 6x-slow replica, deadline-fraction hedges on) whose streams
+//!   must match the unhedged run.
 //!
 //! The TTFT budget and rate grid are **self-calibrated**: a light-load
 //! probe measures base TTFT (budget = 8x its p50) and a backlogged
@@ -27,9 +34,11 @@
 
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    run_virtual, run_virtual_cluster, ArrivalTrace, AutoscaleConfig, ClusterConfig,
-    ClusterReport, ClusterWorkload, LenDist, SchedulerPolicy, SloTier, StepModel,
-    VirtualConfig, Workload,
+    run_cluster_open_loop, run_virtual, run_virtual_cluster, ArrivalTrace,
+    AutoscaleConfig, BackendFactory, Cluster, ClusterConfig, ClusterFaultPlan,
+    ClusterReport, ClusterWorkload, Coordinator, CoordinatorConfig, LenDist,
+    PartitionSpec, ReplicaCrashSpec, ReplicaSlowSpec, SchedulerPolicy, SloTier,
+    StepModel, VirtualConfig, Workload,
 };
 use lpu::model::by_name;
 use lpu::util::json::{obj, Json};
@@ -272,6 +281,163 @@ fn main() {
     ));
     st.print();
 
+    // ---- chaos: crash + partition mid-flash-crowd ----
+    // Shedding off and a generous deadline: chaos must not hide lost
+    // requests behind admission control. Replica 2 is never faulted,
+    // so the fleet always has a routable survivor.
+    let chaos_replicas = 3usize;
+    let chaos_rate = sustainable * chaos_replicas as f64;
+    let n_chaos = if fast { 80 } else { 200 };
+    let chaos_span = n_chaos as f64 / chaos_rate;
+    let chaos_flash = ArrivalTrace::FlashCrowd {
+        at_s: chaos_span * 0.15,
+        dur_s: chaos_span * 0.4,
+        magnification: 6.0,
+    };
+    let chaos_faults = ClusterFaultPlan {
+        probe_interval_s: (chaos_span * 0.05).max(1e-3),
+        crashes: vec![ReplicaCrashSpec { replica: 0, at_s: chaos_span * 0.25 }],
+        partitions: vec![PartitionSpec {
+            replica: 1,
+            from_s: chaos_span * 0.3,
+            until_s: chaos_span * 0.7,
+        }],
+        ..ClusterFaultPlan::default()
+    };
+    let wl_chaos = ClusterWorkload {
+        base: base_workload(chaos_rate, n_chaos, 0xC4A05),
+        trace: chaos_flash,
+        interactive_fraction,
+        interactive_deadline_s: 1e6,
+    };
+    let mk_chaos_cc = |faulted: bool| -> ClusterConfig {
+        let mut cc = ClusterConfig::new(chaos_replicas, mk_pool());
+        cc.shed = false;
+        if faulted {
+            cc.faults = chaos_faults.clone();
+        }
+        cc
+    };
+    let clean_r = run_virtual_cluster(&wl_chaos, &mk_chaos_cc(false)).expect("clean run");
+    let chaos_r = run_virtual_cluster(&wl_chaos, &mk_chaos_cc(true)).expect("chaos run");
+    let chaos_r2 =
+        run_virtual_cluster(&wl_chaos, &mk_chaos_cc(true)).expect("chaos rerun");
+    assert_eq!(chaos_r.records, chaos_r2.records, "chaos recovery must rerun bit-identically");
+    let chaos_completed = chaos_r.records.iter().filter(|r| r.completed()).count();
+    assert_eq!(chaos_completed, n_chaos, "chaos must not lose requests");
+    assert_eq!(chaos_r.end_kv_blocks_in_use, 0, "chaos leaked fleet KV blocks");
+    for (i, vr) in chaos_r.replicas.iter().enumerate() {
+        if let Some(vr) = vr {
+            assert_eq!(vr.end_kv_blocks_in_use, 0, "replica {i} leaked KV blocks");
+        }
+    }
+    for (f, c) in chaos_r.records.iter().zip(&clean_r.records) {
+        assert_eq!(
+            f.tokens, c.tokens,
+            "request {} stream changed by the fault plan",
+            f.request_id
+        );
+    }
+    assert!(chaos_r.streams_failed_over > 0, "crash mid-crowd must orphan live streams");
+
+    // Small threaded failover run: the dispatch-layer chaos path must
+    // also complete everything, value-deterministically across reruns.
+    let wl_live = ClusterWorkload {
+        base: Workload {
+            model: "opt-tiny".into(),
+            rate: 800.0,
+            n_requests: 24,
+            prompt_len: LenDist::Uniform(1, 8),
+            output_len: LenDist::Fixed(5),
+            vocab: 512,
+            seed: 0xC4A05,
+        },
+        trace: ArrivalTrace::Uniform,
+        interactive_fraction: 0.0,
+        interactive_deadline_s: 0.0,
+    };
+    let mut cc_live = ClusterConfig::new(2, mk_pool());
+    cc_live.faults = ClusterFaultPlan {
+        crashes: vec![ReplicaCrashSpec { replica: 0, at_s: 0.01 }],
+        ..ClusterFaultPlan::default()
+    };
+    let run_live = || {
+        let cluster = Cluster::threaded(&cc_live, "opt-tiny", || {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+            c
+        })
+        .expect("threaded cluster");
+        let r = run_cluster_open_loop(&cluster, &wl_live).expect("threaded chaos run");
+        cluster.shutdown();
+        r
+    };
+    let live = run_live();
+    let live2 = run_live();
+    assert_eq!(live.failed, 0, "threaded failover must leave no failed streams");
+    assert_eq!(live.completed, wl_live.base.n_requests);
+    assert_eq!(
+        live.token_streams, live2.token_streams,
+        "threaded chaos recovery must be value-deterministic"
+    );
+
+    // Hedging sub-cell: one 6x-slow replica, interactive tier hedged at
+    // a quarter of the TTFT budget. Hedges fire; streams do not change.
+    let wl_hedge = ClusterWorkload {
+        base: base_workload(2.0 * sustainable * 2.0, if fast { 80 } else { 160 }, 0xC4A05),
+        trace: ArrivalTrace::Uniform,
+        interactive_fraction: 1.0,
+        interactive_deadline_s: budget_s,
+    };
+    let mk_hedge_cc = |hedge: f64| -> ClusterConfig {
+        let mut cc = ClusterConfig::new(2, mk_pool());
+        cc.shed = false;
+        cc.faults = ClusterFaultPlan {
+            slow: vec![ReplicaSlowSpec { replica: 0, factor: 6.0 }],
+            ..ClusterFaultPlan::default()
+        };
+        cc.hedge_fraction = hedge;
+        cc
+    };
+    let unhedged = run_virtual_cluster(&wl_hedge, &mk_hedge_cc(0.0)).expect("unhedged run");
+    let hedged = run_virtual_cluster(&wl_hedge, &mk_hedge_cc(0.25)).expect("hedged run");
+    assert!(hedged.hedges_issued > 0, "a 6x-slow replica must trigger hedges");
+    assert_eq!(hedged.end_kv_blocks_in_use, 0, "hedging leaked KV blocks");
+    for (h, u) in hedged.records.iter().zip(&unhedged.records) {
+        assert_eq!(
+            h.tokens, u.tokens,
+            "request {} stream changed by hedging",
+            h.request_id
+        );
+    }
+
+    let mut ct = Table::new(
+        format!(
+            "chaos: crash + partition mid-flash-crowd, {chaos_replicas} replicas at \
+             {chaos_rate:.0} req/s"
+        ),
+        &["metric", "value"],
+    );
+    ct.row(&["completion".into(), format!("{chaos_completed}/{n_chaos}")]);
+    ct.row(&["replica crashes".into(), chaos_r.replica_crashes.to_string()]);
+    ct.row(&["partitions".into(), chaos_r.partitions.to_string()]);
+    ct.row(&["streams failed over".into(), chaos_r.streams_failed_over.to_string()]);
+    ct.row(&["end KV blocks in use".into(), chaos_r.end_kv_blocks_in_use.to_string()]);
+    ct.row(&[
+        "hedges won/issued".into(),
+        format!("{}/{}", hedged.hedges_won, hedged.hedges_issued),
+    ]);
+    ct.row(&[
+        "threaded failover completed".into(),
+        format!("{}/{}", live.completed, wl_live.base.n_requests),
+    ]);
+    ct.note("every stream bit-identical fault-on vs fault-off; recovery rerun-identical on both paths");
+    ct.print();
+
     // ---- machine-readable results ----
     let out_path = std::env::var("LPU_BENCH_CLUSTER_JSON")
         .unwrap_or_else(|_| "../BENCH_cluster.json".to_string());
@@ -312,6 +478,24 @@ fn main() {
                 ("peak_replicas", auto_r.peak_replicas.into()),
                 ("scale_events", auto_r.replica_timeline.len().into()),
                 ("wall_s", auto_r.wall_s.into()),
+            ]),
+        ),
+        (
+            "chaos_summary",
+            obj(vec![
+                ("trace", chaos_flash.name().into()),
+                ("replicas", chaos_replicas.into()),
+                ("n_requests", n_chaos.into()),
+                ("completion", (chaos_completed as f64 / n_chaos as f64).into()),
+                ("end_kv_blocks_in_use", chaos_r.end_kv_blocks_in_use.into()),
+                ("streams_identical_fault_on_off", true.into()),
+                ("replica_crashes", chaos_r.replica_crashes.into()),
+                ("partitions", chaos_r.partitions.into()),
+                ("streams_failed_over", chaos_r.streams_failed_over.into()),
+                ("hedges_issued", hedged.hedges_issued.into()),
+                ("hedges_won", hedged.hedges_won.into()),
+                ("threaded_completed", live.completed.into()),
+                ("threaded_failed", live.failed.into()),
             ]),
         ),
         ("cells", Json::Arr(cells)),

@@ -25,28 +25,53 @@
 //!   curves can be swept against realistic load shapes
 //!   (`benches/cluster_slo.rs` → `BENCH_cluster.json`).
 //!
+//! * **Replica fault domains** ([`ClusterFaultPlan`]): deterministic
+//!   crash / partition / slow injection one tier above the pool-level
+//!   [`FaultPlan`][super::faults::FaultPlan]. The front-end is an
+//!   active health manager (healthy → probation → ejected, with
+//!   probe-based reinstatement after a partition heals), reprices
+//!   degraded replicas once a probe interval has passed, and the
+//!   dispatcher fails orphaned in-flight streams over to a healthy
+//!   replica: the delivered token prefix plus a reconstructed sampler
+//!   become a resume state, re-admitted via the pool's restore path.
+//!   Delivery is exactly-once — a resumed or hedged duplicate can
+//!   never duplicate or reorder tokens — and, by greedy purity,
+//!   completed streams are bit-identical to the fault-free run.
+//! * **Hedged interactive requests**: when `hedge_fraction > 0`, an
+//!   interactive arrival whose projected queue delay exceeds that
+//!   fraction of its deadline is duplicated on the runner-up replica;
+//!   the first usable stream wins and the loser is cancelled (its KV
+//!   released by the normal client-disconnect path).
+//!
 //! Per the standing constraint, the fleet logic runs on BOTH serving
 //! paths without forking: the per-arrival decision core ([`FrontEnd`])
 //! is one struct, driven on virtual seconds by [`run_virtual_cluster`]
 //! (each replica is a full, unmodified
-//! [`run_virtual_plan`][super::workload::run_virtual_plan] pool) and on
-//! wall seconds by the threaded [`Cluster`] dispatcher (each replica a
-//! live [`Coordinator`]). Greedy token streams are a pure function of
-//! (model, prompt) in the sim backend, so completed streams are
-//! bit-identical per seed regardless of tier, replica count, or
-//! placement — asserted by `tests/invariants.rs` through the shared
-//! invariant harness.
+//! [`run_virtual_plan_jobs`][super::workload::run_virtual_plan_jobs]
+//! pool) and on wall seconds by the threaded [`Cluster`] dispatcher
+//! (each replica a live [`Coordinator`]). Greedy token streams are a
+//! pure function of (model, prompt) in the sim backend, so completed
+//! streams are bit-identical per seed regardless of tier, replica
+//! count, placement, failover, or hedging — asserted by
+//! `tests/invariants.rs` through the shared invariant harness.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::numerics::Sampler;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 use super::backend::StepModel;
+use super::faults::{ClusterFaultPlan, FleetFault, ReplicaHealth};
+use super::lane::ResumeState;
 use super::metrics::Metrics;
 use super::workload::{
-    run_virtual_plan, LenDist, VirtualConfig, VirtualReport, Workload,
+    run_virtual_plan, run_virtual_plan_jobs, LenDist, OrphanJob, PlanJob, PlanResume,
+    PoolInterrupt, VirtualConfig, VirtualReport, Workload,
 };
 use super::{Coordinator, Request, RequestHandle, TokenEvent};
 
@@ -263,12 +288,30 @@ pub struct ClusterConfig {
     /// (`--slo-tier interactive:<ttft_s>` on the server path). None
     /// leaves untagged requests batch tier.
     pub default_deadline_s: Option<f64>,
+    /// Replica-level fault plan (inert by default): deterministic
+    /// crash / partition / slow injection driven identically on both
+    /// serving paths. See [`ClusterFaultPlan`].
+    pub faults: ClusterFaultPlan,
+    /// Deadline-fraction hedging for the interactive tier: when > 0,
+    /// an admitted interactive arrival whose projected queue delay
+    /// exceeds `hedge_fraction * deadline` is duplicated on the
+    /// runner-up routable replica; the first usable stream wins and
+    /// the loser is cancelled. 0 disables hedging.
+    pub hedge_fraction: f64,
 }
 
 impl ClusterConfig {
     /// A fixed fleet of `replicas` pools with SLO shedding enabled.
     pub fn new(replicas: usize, pool: VirtualConfig) -> ClusterConfig {
-        ClusterConfig { replicas, pool, shed: true, autoscale: None, default_deadline_s: None }
+        ClusterConfig {
+            replicas,
+            pool,
+            shed: true,
+            autoscale: None,
+            default_deadline_s: None,
+            faults: ClusterFaultPlan::default(),
+            hedge_fraction: 0.0,
+        }
     }
 }
 
@@ -418,7 +461,7 @@ impl ClusterWorkload {
 
 /// The front-end's verdict on one arrival.
 enum Admission {
-    Route { replica: usize, tier: SloTier },
+    Route { replica: usize, tier: SloTier, hedge: Option<usize> },
     Shed { tier: SloTier },
 }
 
@@ -447,6 +490,15 @@ struct FrontEnd {
     /// Resolved fused-batch cap for the amortized weight-stream term.
     max_batch: f64,
     step: StepModel,
+    /// Replica-level fault plan (inert by default); the health state
+    /// machine and advertised slow factors all derive from it.
+    faults: ClusterFaultPlan,
+    /// Interactive hedge trigger as a fraction of the deadline (0 off).
+    hedge_fraction: f64,
+    /// Ejection latch per replica: on the ejected → non-ejected edge
+    /// (reinstatement after a partition heal) the stale horizon is
+    /// restarted so the comeback replica is not instantly swamped.
+    was_ejected: Vec<bool>,
 }
 
 impl FrontEnd {
@@ -467,6 +519,13 @@ impl FrontEnd {
             .map_or(cc.replicas, |a| cc.replicas.clamp(a.min_replicas, a.max_replicas));
         let max_batch =
             if cc.pool.max_batch == 0 { cc.pool.max_active } else { cc.pool.max_batch };
+        cc.faults.validate(slots).map_err(|e| e.to_string())?;
+        if !(0.0..=1.0).contains(&cc.hedge_fraction) {
+            return Err(format!(
+                "cluster config: hedge fraction must be in [0, 1], got {}",
+                cc.hedge_fraction
+            ));
+        }
         Ok(FrontEnd {
             active: (0..slots).map(|i| i < initial).collect(),
             available_from: vec![0.0; slots],
@@ -479,6 +538,9 @@ impl FrontEnd {
             workers: cc.pool.workers.max(1) as f64,
             max_batch: max_batch.max(1) as f64,
             step: cc.pool.step,
+            faults: cc.faults.clone(),
+            hedge_fraction: cc.hedge_fraction,
+            was_ejected: vec![false; slots],
         })
     }
 
@@ -510,31 +572,41 @@ impl FrontEnd {
     }
 
     /// Run the autoscale controller over every whole evaluation tick up
-    /// to `t`.
+    /// to `t`. Ejected replicas do not count as active capacity: their
+    /// backlog is invisible to the controller and a substitute slot is
+    /// activated through the normal warm-up path.
     fn advance(&mut self, t: f64) {
         let Some(a) = self.autoscale else { return };
         while self.last_eval + a.interval_s <= t {
             let te = self.last_eval + a.interval_s;
             self.last_eval = te;
-            let n_active = self.active_count();
+            let counted = |fe: &FrontEnd, r: usize| {
+                fe.active[r] && fe.faults.health_at(r, te) != ReplicaHealth::Ejected
+            };
+            let n_active = (0..self.slots()).filter(|&r| counted(self, r)).count();
             let backlog: f64 = (0..self.slots())
-                .filter(|&r| self.active[r])
+                .filter(|&r| counted(self, r))
                 .map(|r| (self.horizon[r].max(self.available_from[r]) - te).max(0.0))
                 .sum::<f64>()
                 / n_active.max(1) as f64;
             if backlog > a.up_backlog_s && n_active < a.max_replicas {
-                // Lowest inactive slot; a previously drained replica
-                // re-activates (its horizon carried over).
-                if let Some(r) = (0..self.slots()).find(|&r| !self.active[r]) {
+                // Lowest inactive non-ejected slot; a previously
+                // drained replica re-activates (horizon carried over).
+                if let Some(r) = (0..self.slots()).find(|&r| {
+                    !self.active[r]
+                        && self.faults.health_at(r, te) != ReplicaHealth::Ejected
+                }) {
                     self.active[r] = true;
                     self.available_from[r] = te + a.warmup_s;
                     self.horizon[r] = self.horizon[r].max(te);
                     self.timeline.push((te, n_active + 1));
                 }
             } else if backlog < a.down_backlog_s && n_active > a.min_replicas {
-                // Drain the highest active slot: stops receiving, but
-                // already-assigned work finishes.
-                if let Some(r) = (0..self.slots()).rev().find(|&r| self.active[r]) {
+                // Drain the highest counted slot: stops receiving, but
+                // already-assigned work finishes. Ejected slots are
+                // skipped — their flag stays up so reinstatement after
+                // a heal restores them without a scale-up action.
+                if let Some(r) = (0..self.slots()).rev().find(|&r| counted(self, r)) {
                     self.active[r] = false;
                     self.timeline.push((te, n_active - 1));
                 }
@@ -542,21 +614,31 @@ impl FrontEnd {
         }
     }
 
-    /// Decide one arrival at time `t`. Applies the default deadline (if
-    /// configured and the request carries none), classifies the tier,
-    /// picks the least-delayed routable replica, sheds interactive
-    /// arrivals whose projected delay blows the budget, and advances
-    /// the chosen replica's horizon by the request's estimated cost.
-    fn admit(&mut self, t: f64, req: &mut Request) -> Admission {
-        self.advance(t);
-        if req.deadline_s.is_none() {
-            req.deadline_s = self.default_deadline_s;
+    /// Refresh the per-replica ejection latch at time `t`: on the
+    /// ejected → non-ejected edge (probation after a partition heal)
+    /// the replica's stale horizon is restarted at `t`, so the work it
+    /// could not serve while cut off is not counted against it and it
+    /// is not instantly swamped on reinstatement.
+    fn note_health(&mut self, t: f64) {
+        if !self.faults.is_active() {
+            return;
         }
-        let tier = SloTier::classify(req);
-        // Least projected delay wins; ties go to the lowest index.
+        for r in 0..self.slots() {
+            let ejected = self.faults.health_at(r, t) == ReplicaHealth::Ejected;
+            if self.was_ejected[r] && !ejected {
+                self.horizon[r] = self.horizon[r].max(t);
+            }
+            self.was_ejected[r] = ejected;
+        }
+    }
+
+    /// The least-delayed replica the plan lets us route to at `t`
+    /// (active, routable, not `skip` — the hedge scan excludes the
+    /// primary). Ties go to the lowest index.
+    fn best_replica(&self, t: f64, skip: Option<usize>) -> Option<(f64, usize)> {
         let mut best: Option<(f64, usize)> = None;
         for r in 0..self.slots() {
-            if !self.active[r] {
+            if !self.active[r] || Some(r) == skip || !self.faults.routable(r, t) {
                 continue;
             }
             let ready = self.horizon[r].max(self.available_from[r]).max(t);
@@ -565,7 +647,50 @@ impl FrontEnd {
                 best = Some((delay, r));
             }
         }
-        let (delay, r) = best.expect("front-end keeps >= 1 replica active");
+        best
+    }
+
+    /// Decide one arrival at time `t`. Applies the default deadline (if
+    /// configured and the request carries none), classifies the tier,
+    /// picks the least-delayed *routable* replica (health-aware under a
+    /// fault plan), sheds interactive arrivals whose projected delay
+    /// blows the budget, selects a hedge replica when the projected
+    /// delay crosses the hedge fraction of the deadline, and advances
+    /// the chosen horizons by the request's estimated cost (inflated by
+    /// the advertised slow factor of a detected-degraded replica).
+    fn admit(&mut self, t: f64, req: &mut Request) -> Admission {
+        self.advance(t);
+        self.note_health(t);
+        if req.deadline_s.is_none() {
+            req.deadline_s = self.default_deadline_s;
+        }
+        let tier = SloTier::classify(req);
+        let choice = self.best_replica(t, None).or_else(|| {
+            // Every routable replica is gone (mass partition): rather
+            // than drop the arrival, park it on the least-delayed
+            // active replica that is at least not known dead — it
+            // stalls until a heal instead of being lost outright.
+            let mut best: Option<(f64, usize)> = None;
+            for r in 0..self.slots() {
+                if !self.active[r]
+                    || self.faults.crash_at(r).map_or(false, |tc| t >= tc)
+                {
+                    continue;
+                }
+                let ready = self.horizon[r].max(self.available_from[r]).max(t);
+                let delay = ready - t;
+                if best.map_or(true, |(bd, _)| delay < bd) {
+                    best = Some((delay, r));
+                }
+            }
+            best
+        });
+        let Some((delay, r)) = choice else {
+            // The whole active fleet is dead. Shedding is the only
+            // honest verdict left (a batch shed here flags the
+            // operator's plan, not a front-end bug).
+            return Admission::Shed { tier };
+        };
         if self.shed && tier == SloTier::Interactive {
             if let Some(budget) = req.deadline_s {
                 if delay > budget {
@@ -573,9 +698,28 @@ impl FrontEnd {
                 }
             }
         }
+        // Hedge before charging the primary so the runner-up scan sees
+        // pre-admission horizons on both.
+        let mut hedge = None;
+        if tier == SloTier::Interactive && self.hedge_fraction > 0.0 {
+            if let Some(budget) = req.deadline_s {
+                if delay > self.hedge_fraction * budget {
+                    if let Some((_, h)) = self.best_replica(t, Some(r)) {
+                        hedge = Some(h);
+                    }
+                }
+            }
+        }
+        let cost = self.request_cost_s(req) / self.workers;
         let start = self.horizon[r].max(self.available_from[r]).max(t);
-        self.horizon[r] = start + self.request_cost_s(req) / self.workers;
-        Admission::Route { replica: r, tier }
+        self.horizon[r] = start + cost * self.faults.advertised_slow_factor(r, t);
+        if let Some(h) = hedge {
+            // The duplicate is real work: the runner-up's horizon is
+            // charged too, so hedges price themselves out under load.
+            let hs = self.horizon[h].max(self.available_from[h]).max(t);
+            self.horizon[h] = hs + cost * self.faults.advertised_slow_factor(h, t);
+        }
+        Admission::Route { replica: r, tier, hedge }
     }
 }
 
@@ -602,6 +746,12 @@ pub struct ClusterRecord {
     pub token_times: Vec<f64>,
     /// The TTFT budget it carried (None = batch).
     pub deadline_s: Option<f64>,
+    /// Finished on a different replica than first assigned: its stream
+    /// was salvaged and resumed after a crash or partition ejection.
+    pub failed_over: bool,
+    /// Was duplicated by deadline-fraction hedging (set whichever copy
+    /// won the race).
+    pub hedged: bool,
 }
 
 impl ClusterRecord {
@@ -655,6 +805,16 @@ pub struct ClusterReport {
     pub tokens_per_s: f64,
     /// KV blocks still held across every replica at drain — must be 0.
     pub end_kv_blocks_in_use: usize,
+    /// Replica crash points the fault plan injected.
+    pub replica_crashes: usize,
+    /// Partition windows the fault plan injected.
+    pub partitions: usize,
+    /// In-flight streams re-dispatched onto another replica.
+    pub streams_failed_over: usize,
+    /// Interactive arrivals duplicated by deadline-fraction hedging.
+    pub hedges_issued: usize,
+    /// Hedge duplicates that beat their primary to the first token.
+    pub hedges_won: usize,
 }
 
 impl ClusterReport {
@@ -698,13 +858,50 @@ pub fn run_virtual_cluster(
     run_virtual_cluster_plan(&wl.base.model, wl.base.vocab, wl.base.rate, wl.generate(), cc)
 }
 
+/// One hop of one request's lifetime on one replica: the bookkeeping
+/// entry parallel to a [`PlanJob`] in a replica's job list. The serial
+/// identifies the hop globally; a request's *canonical* hop (the one
+/// whose record represents it) moves on every failover re-dispatch,
+/// while superseded hops stay in place so earlier fault analyses remain
+/// valid (the job lists are append-only per replica).
+struct Hop {
+    /// Cluster plan index of the request this hop serves.
+    rid: usize,
+    /// Globally unique, monotonically increasing hop id.
+    serial: u64,
+    /// True for a hedge duplicate (never re-dispatched: the primary
+    /// chain owns delivery).
+    hedge: bool,
+}
+
+/// Insert a job into a replica's time-sorted job list, keeping the hop
+/// ledger parallel.
+fn insert_job(jobs: &mut Vec<PlanJob>, hops: &mut Vec<Hop>, job: PlanJob, hop: Hop) {
+    let pos = jobs.partition_point(|j| j.at_s <= job.at_s);
+    jobs.insert(pos, job);
+    hops.insert(pos, hop);
+}
+
 /// [`run_virtual_cluster`] over an explicit `(arrival_s, request)`
-/// plan. The front-end makes every admission/shed/autoscale decision
-/// in arrival order, then each replica's assigned sub-plan runs
-/// through the UNMODIFIED single-pool
-/// [`run_virtual_plan`][super::workload::run_virtual_plan] (global
-/// arrival timestamps preserved, so all replica clocks share one
-/// timeline) and the per-pool records are merged back by plan index.
+/// plan. The front-end makes every admission/shed/hedge/autoscale
+/// decision in arrival order, then each replica's assigned jobs run
+/// through the single-pool
+/// [`run_virtual_plan_jobs`][super::workload::run_virtual_plan_jobs]
+/// (global arrival timestamps preserved, so all replica clocks share
+/// one timeline) and the per-pool records are merged back by hop.
+///
+/// Under a [`ClusterFaultPlan`] the run becomes a deterministic
+/// multi-round salvage loop: fleet fault edges (crash instants and
+/// partition-detection ejections) are processed strictly in time
+/// order; at each edge the source replica's pool is (re)simulated, the
+/// streams it can no longer finish are identified, and each is
+/// re-dispatched to a healthy replica as a resume job carrying the
+/// token prefix a client had already seen plus a reconstructed sampler
+/// (exact for greedy streams — decode ignores the RNG). Because a
+/// re-dispatch only ever inserts work at or after the edge time and the
+/// pool simulation is causal, earlier analyses are never invalidated;
+/// the whole run is a pure function of (plan, config) and two runs are
+/// bit-identical.
 pub fn run_virtual_cluster_plan(
     model: &str,
     vocab: usize,
@@ -716,12 +913,23 @@ pub fn run_virtual_cluster_plan(
         return Err("cluster plan arrivals must be non-decreasing".into());
     }
     let mut fe = FrontEnd::new(cc)?;
+    let slots = fe.slots();
     let n = plan.len();
     let mut plan_end = 0.0f64;
     let mut tiers: Vec<(SloTier, Option<f64>)> = Vec::with_capacity(n);
     let mut records: Vec<Option<ClusterRecord>> = (0..n).map(|_| None).collect();
-    let mut sub: Vec<Vec<(f64, Request)>> = (0..fe.slots()).map(|_| Vec::new()).collect();
-    let mut assigned: Vec<Vec<usize>> = (0..fe.slots()).map(|_| Vec::new()).collect();
+
+    // Append-only per-replica job lists with a parallel hop ledger.
+    let mut jobs: Vec<Vec<PlanJob>> = (0..slots).map(|_| Vec::new()).collect();
+    let mut hops: Vec<Vec<Hop>> = (0..slots).map(|_| Vec::new()).collect();
+    let mut next_serial = 0u64;
+    // Canonical (final) hop serial per request; u64::MAX = shed.
+    let mut canonical: Vec<u64> = vec![u64::MAX; n];
+    let mut hedge_serial: Vec<Option<u64>> = vec![None; n];
+    let mut failed_over: Vec<bool> = vec![false; n];
+    let mut hedges_issued = 0usize;
+    let mut streams_failed_over = 0usize;
+
     for (rid, (t, mut req)) in plan.into_iter().enumerate() {
         plan_end = plan_end.max(t);
         match fe.admit(t, &mut req) {
@@ -737,42 +945,270 @@ pub fn run_virtual_cluster_plan(
                     tokens: Vec::new(),
                     token_times: Vec::new(),
                     deadline_s: req.deadline_s,
+                    failed_over: false,
+                    hedged: false,
                 });
                 tiers.push((tier, req.deadline_s));
             }
-            Admission::Route { replica, tier } => {
+            Admission::Route { replica, tier, hedge } => {
                 tiers.push((tier, req.deadline_s));
-                assigned[replica].push(rid);
-                sub[replica].push((t, req));
+                if let Some(h) = hedge {
+                    hedges_issued += 1;
+                    let s = next_serial;
+                    next_serial += 1;
+                    hedge_serial[rid] = Some(s);
+                    insert_job(
+                        &mut jobs[h],
+                        &mut hops[h],
+                        PlanJob::fresh(t, req.clone()),
+                        Hop { rid, serial: s, hedge: true },
+                    );
+                }
+                let s = next_serial;
+                next_serial += 1;
+                canonical[rid] = s;
+                insert_job(
+                    &mut jobs[replica],
+                    &mut hops[replica],
+                    PlanJob::fresh(t, req),
+                    Hop { rid, serial: s, hedge: false },
+                );
             }
         }
     }
 
-    let mut replicas: Vec<Option<VirtualReport>> = Vec::with_capacity(fe.slots());
-    for (r, subplan) in sub.into_iter().enumerate() {
-        if subplan.is_empty() {
-            replicas.push(None);
+    // Per-replica pool physics: a slow replica's step model is scaled
+    // by its factor; crash and partition windows become the pool's
+    // interrupt schedule (overlapping windows merged — a freeze shifts
+    // busy work by the window length, so overlap would double-charge).
+    let mut pools: Vec<VirtualConfig> = Vec::with_capacity(slots);
+    let mut interrupts: Vec<PoolInterrupt> = Vec::with_capacity(slots);
+    for r in 0..slots {
+        let mut p = cc.pool.clone();
+        let f = cc.faults.slow_factor(r);
+        if f > 1.0 {
+            p.step.weight_stream_s *= f;
+            p.step.kv_read_s_per_pos *= f;
+            p.step.lane_overhead_s *= f;
+            p.step.sync_s *= f;
+            p.step.host_restore_s_per_token *= f;
+        }
+        let mut it = PoolInterrupt::default();
+        it.halt_at = cc.faults.crash_at(r);
+        for (from, until) in cc.faults.partitions_of(r) {
+            match it.freezes.last_mut() {
+                Some(last) if from <= last.1 => last.1 = last.1.max(until),
+                _ => it.freezes.push((from, until)),
+            }
+        }
+        pools.push(p);
+        interrupts.push(it);
+    }
+
+    fn refresh(
+        r: usize,
+        model: &str,
+        vocab: usize,
+        offered_rate: f64,
+        jobs: &[Vec<PlanJob>],
+        pools: &[VirtualConfig],
+        interrupts: &[PoolInterrupt],
+        dirty: &mut [bool],
+        runs: &mut [Option<(VirtualReport, Vec<OrphanJob>)>],
+    ) -> Result<(), String> {
+        if !dirty[r] {
+            return Ok(());
+        }
+        dirty[r] = false;
+        runs[r] = if jobs[r].is_empty() {
+            None
+        } else {
+            Some(run_virtual_plan_jobs(
+                model,
+                vocab,
+                offered_rate,
+                jobs[r].clone(),
+                &pools[r],
+                &interrupts[r],
+            )?)
+        };
+        Ok(())
+    }
+
+    let mut dirty = vec![true; slots];
+    let mut runs: Vec<Option<(VirtualReport, Vec<OrphanJob>)>> =
+        (0..slots).map(|_| None).collect();
+    for (te, fault) in cc.faults.fault_events() {
+        let src = match fault {
+            FleetFault::Crash { replica } | FleetFault::Eject { replica } => replica,
+        };
+        refresh(
+            src, model, vocab, offered_rate, &jobs, &pools, &interrupts, &mut dirty,
+            &mut runs,
+        )?;
+        // Collect the streams that must leave the source at this edge.
+        // A hop that was already superseded by an earlier edge is
+        // stale — a stream is only ever re-dispatched from its
+        // canonical home. Hedge duplicates are never re-homed: the
+        // primary chain owns delivery, the duplicate just loses.
+        let mut moves: Vec<(usize, PlanJob)> = Vec::new();
+        match fault {
+            FleetFault::Crash { .. } => {
+                if let Some((_, orphans)) = &runs[src] {
+                    for o in orphans {
+                        let hop = &hops[src][o.rid];
+                        if hop.hedge || canonical[hop.rid] != hop.serial {
+                            continue;
+                        }
+                        moves.push((
+                            hop.rid,
+                            PlanJob {
+                                at_s: te.max(o.arrival_s),
+                                arrival_s: o.arrival_s,
+                                request: o.request.clone(),
+                                resume: o.resume.clone(),
+                            },
+                        ));
+                    }
+                }
+            }
+            FleetFault::Eject { .. } => {
+                // Ejection happens one probe interval after partition
+                // onset; tokens emitted before the cut are what the
+                // client actually received.
+                let cut = te - cc.faults.probe_interval_s;
+                if let Some((rep, _)) = &runs[src] {
+                    for (local, rec) in rep.records.iter().enumerate() {
+                        let hop = &hops[src][local];
+                        let job = &jobs[src][local];
+                        if hop.hedge
+                            || canonical[hop.rid] != hop.serial
+                            || job.at_s >= te
+                            || rec.done_s <= cut
+                        {
+                            continue;
+                        }
+                        let delivered =
+                            rec.token_times.iter().take_while(|&&tt| tt < cut).count();
+                        let resume = if delivered == 0 {
+                            None
+                        } else {
+                            Some(PlanResume {
+                                state: ResumeState {
+                                    generated: rec.tokens[..delivered].to_vec(),
+                                    // Greedy decode ignores the RNG, so
+                                    // a fresh sampler continues the
+                                    // stream bit-identically (the real
+                                    // sampler is stranded behind the
+                                    // partition).
+                                    sampler: Sampler::new(job.request.seed),
+                                },
+                                first_token_s: Some(rec.first_token_s),
+                                token_times: rec.token_times[..delivered].to_vec(),
+                            })
+                        };
+                        moves.push((
+                            hop.rid,
+                            PlanJob {
+                                at_s: te,
+                                arrival_s: job.arrival_s,
+                                request: job.request.clone(),
+                                resume,
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+        if moves.is_empty() {
             continue;
         }
-        let vr = run_virtual_plan(model, vocab, offered_rate, subplan, &cc.pool)?;
-        for (local, rec) in vr.records.iter().enumerate() {
-            let rid = assigned[r][local];
-            let (tier, deadline_s) = tiers[rid];
-            records[rid] = Some(ClusterRecord {
-                request_id: rid,
-                tier,
-                replica: Some(r),
-                shed: false,
-                arrival_s: rec.arrival_s,
-                first_token_s: rec.first_token_s,
-                done_s: rec.done_s,
-                tokens: rec.tokens.clone(),
-                token_times: rec.token_times.clone(),
-                deadline_s,
-            });
+        // Spread the orphans round-robin over the routable survivors;
+        // if every survivor is ejected too, fall back to any replica
+        // not known dead (work parks there until its heal).
+        let healthy: Vec<usize> =
+            (0..slots).filter(|&r| r != src && cc.faults.routable(r, te)).collect();
+        let fallback: Vec<usize> = (0..slots)
+            .filter(|&r| {
+                r != src && cc.faults.crash_at(r).map_or(true, |tc| te < tc)
+            })
+            .collect();
+        let targets = if healthy.is_empty() { fallback } else { healthy };
+        if targets.is_empty() {
+            // Nowhere to go: the streams are lost; their canonical
+            // records stay as the halted pool's failed placeholders.
+            continue;
         }
-        replicas.push(Some(vr));
+        for (k, (rid, job)) in moves.into_iter().enumerate() {
+            let tr = targets[k % targets.len()];
+            let s = next_serial;
+            next_serial += 1;
+            canonical[rid] = s;
+            failed_over[rid] = true;
+            streams_failed_over += 1;
+            insert_job(&mut jobs[tr], &mut hops[tr], job, Hop { rid, serial: s, hedge: false });
+            dirty[tr] = true;
+        }
     }
+    for r in 0..slots {
+        refresh(
+            r, model, vocab, offered_rate, &jobs, &pools, &interrupts, &mut dirty,
+            &mut runs,
+        )?;
+    }
+
+    // Merge: each routed request's record comes from its canonical hop;
+    // a hedge duplicate wins only when it completed and either beat the
+    // primary to the first token or the primary failed outright.
+    let mut primary: Vec<Option<(usize, usize)>> = vec![None; n];
+    let mut hedge_rec: Vec<Option<(usize, usize)>> = vec![None; n];
+    for r in 0..slots {
+        for (local, hop) in hops[r].iter().enumerate() {
+            if hop.hedge {
+                if hedge_serial[hop.rid] == Some(hop.serial) {
+                    hedge_rec[hop.rid] = Some((r, local));
+                }
+            } else if canonical[hop.rid] == hop.serial {
+                primary[hop.rid] = Some((r, local));
+            }
+        }
+    }
+    let mut hedges_won = 0usize;
+    for rid in 0..n {
+        if records[rid].is_some() {
+            continue; // shed at admission
+        }
+        let (pr, plocal) = primary[rid].expect("every routed arrival keeps a canonical hop");
+        let prec = &runs[pr].as_ref().expect("canonical hop was simulated").0.records[plocal];
+        let mut winner = (pr, prec);
+        if let Some((hr, hlocal)) = hedge_rec[rid] {
+            let hrec = &runs[hr].as_ref().expect("hedge hop was simulated").0.records[hlocal];
+            let h_done = !hrec.tokens.is_empty();
+            let p_done = !prec.tokens.is_empty();
+            if h_done && (!p_done || hrec.first_token_s < prec.first_token_s) {
+                winner = (hr, hrec);
+                hedges_won += 1;
+            }
+        }
+        let (wr, rec) = winner;
+        let (tier, deadline_s) = tiers[rid];
+        records[rid] = Some(ClusterRecord {
+            request_id: rid,
+            tier,
+            replica: Some(wr),
+            shed: false,
+            arrival_s: rec.arrival_s,
+            first_token_s: rec.first_token_s,
+            done_s: rec.done_s,
+            tokens: rec.tokens.clone(),
+            token_times: rec.token_times.clone(),
+            deadline_s,
+            failed_over: failed_over[rid],
+            hedged: hedge_serial[rid].is_some(),
+        });
+    }
+    let replicas: Vec<Option<VirtualReport>> =
+        runs.into_iter().map(|r| r.map(|(rep, _)| rep)).collect();
 
     let records: Vec<ClusterRecord> =
         records.into_iter().map(|r| r.expect("every arrival recorded")).collect();
@@ -801,6 +1237,11 @@ pub fn run_virtual_cluster_plan(
             .flatten()
             .map(|vr| vr.end_kv_blocks_in_use)
             .sum(),
+        replica_crashes: cc.faults.crashes.len(),
+        partitions: cc.faults.partitions.len(),
+        streams_failed_over,
+        hedges_issued,
+        hedges_won,
         replica_timeline: fe.timeline.clone(),
         peak_replicas,
         replicas,
@@ -837,9 +1278,50 @@ pub struct Cluster {
     replicas: Vec<Coordinator>,
     fe: Mutex<FrontEnd>,
     epoch: Instant,
+    /// The replica-level fault plan (inert by default). Fault edges
+    /// fire on *planned* timestamps fed through [`Cluster::submit_at`],
+    /// never wall time, so a rerun replays the same recovery.
+    faults: ClusterFaultPlan,
+    hedge_fraction: f64,
+    chaos: Mutex<ChaosState>,
+    /// Live wrapped streams by pump id, for fault-time failover.
+    streams: Arc<Mutex<HashMap<u64, Arc<StreamShared>>>>,
+    next_stream: AtomicU64,
     /// Fleet-level metrics: per-tier submitted/shed/done/attained
-    /// counters (pool-level serving metrics live on each replica).
+    /// counters plus fault rollups (pool-level serving metrics live on
+    /// each replica).
     pub metrics: Arc<Metrics>,
+}
+
+/// Dispatcher-side fault bookkeeping (the threaded analog of the
+/// virtual salvage loop's event cursor).
+struct ChaosState {
+    /// Fleet fault edges, sorted by time (from
+    /// [`ClusterFaultPlan::fault_events`]).
+    events: Vec<(f64, FleetFault)>,
+    /// Next unprocessed edge.
+    next: usize,
+    /// Round-robin cursor for failover target choice.
+    rr: usize,
+    /// Latest planned timestamp seen (drives health gauges).
+    now_s: f64,
+}
+
+/// State shared between the dispatcher and one stream's pump thread:
+/// enough to fail the stream over (what was delivered, how to
+/// resubmit) and to hand the pump its replacement upstream.
+struct StreamShared {
+    request: Request,
+    /// Replica currently serving the stream.
+    replica: Mutex<usize>,
+    /// Tokens already forwarded to the client — the dedupe horizon for
+    /// exactly-once delivery and the resume prefix for failover.
+    delivered: Mutex<Vec<i64>>,
+    /// Replacement upstream installed by failover; the pump swaps to
+    /// it and drops the old handle (the abandoned replica sees the
+    /// client disconnect and releases the lane's KV).
+    switch: Mutex<Option<RequestHandle>>,
+    done: AtomicBool,
 }
 
 impl Cluster {
@@ -865,6 +1347,16 @@ impl Cluster {
             replicas,
             fe: Mutex::new(fe),
             epoch: Instant::now(),
+            faults: cc.faults.clone(),
+            hedge_fraction: cc.hedge_fraction,
+            chaos: Mutex::new(ChaosState {
+                events: cc.faults.fault_events(),
+                next: 0,
+                rr: 0,
+                now_s: 0.0,
+            }),
+            streams: Arc::new(Mutex::new(HashMap::new())),
+            next_stream: AtomicU64::new(0),
             metrics: Arc::new(Metrics::new()),
         })
     }
@@ -901,6 +1393,7 @@ impl Cluster {
     /// passes the *planned* arrival time, which makes shed/route/
     /// autoscale decisions bit-identical to the virtual path's.
     pub fn submit_at(&self, at_s: f64, request: Request) -> Result<Submitted, String> {
+        self.process_fault_events(at_s);
         let mut request = request;
         let decision = self.fe.lock().unwrap().admit(at_s, &mut request);
         match decision {
@@ -909,12 +1402,152 @@ impl Cluster {
                 self.metrics.on_tier_shed(tier);
                 Ok(Submitted::Shed { tier })
             }
-            Admission::Route { replica, tier } => {
+            Admission::Route { replica, tier, hedge } => {
                 self.metrics.on_tier_submit(tier);
-                let handle = self.replicas[replica].submit(request)?;
+                if !self.wraps_streams() {
+                    // No fault plan, no hedging: the raw replica handle
+                    // is the stream — zero added machinery.
+                    let handle = self.replicas[replica].submit(request)?;
+                    return Ok(Submitted::Handle { replica, tier, handle });
+                }
+                let primary = self.replicas[replica].submit(request.clone())?;
+                let hedged = match hedge {
+                    Some(h) => {
+                        self.metrics.on_hedge_issued();
+                        Some((h, self.replicas[h].submit(request.clone())?))
+                    }
+                    None => None,
+                };
+                let handle = self.pump(replica, request, primary, hedged)?;
                 Ok(Submitted::Handle { replica, tier, handle })
             }
         }
+    }
+
+    /// Whether streams need the pump/failover wrapper (any active fault
+    /// plan or hedging). Without either, submission hands out the raw
+    /// replica handle — bit-for-bit the pre-chaos behavior.
+    fn wraps_streams(&self) -> bool {
+        self.faults.is_active() || self.hedge_fraction > 0.0
+    }
+
+    /// Per-replica health verdict at the latest planned timestamp the
+    /// dispatcher has seen (true = not ejected). Wall-independent: the
+    /// clock only advances through [`Cluster::submit_at`].
+    pub fn replica_health(&self) -> Vec<bool> {
+        let now = self.chaos.lock().unwrap().now_s;
+        (0..self.replicas.len())
+            .map(|r| self.faults.health_at(r, now) != ReplicaHealth::Ejected)
+            .collect()
+    }
+
+    /// Fire every fleet fault edge whose planned time has passed: bump
+    /// the rollup counters and fail over each live stream attached to
+    /// the faulted replica. Failover snapshots the delivered prefix,
+    /// resubmits on a routable survivor via the pool's resume path
+    /// (greedy purity makes a fresh sampler exact), and installs the
+    /// replacement upstream for the stream's pump to swap in.
+    fn process_fault_events(&self, at_s: f64) {
+        if !self.faults.is_active() {
+            return;
+        }
+        loop {
+            let (te, fault) = {
+                let mut chaos = self.chaos.lock().unwrap();
+                chaos.now_s = chaos.now_s.max(at_s);
+                if chaos.next >= chaos.events.len() || chaos.events[chaos.next].0 > at_s {
+                    return;
+                }
+                let e = chaos.events[chaos.next];
+                chaos.next += 1;
+                e
+            };
+            let src = match fault {
+                FleetFault::Crash { replica } => {
+                    self.metrics.on_replica_crash();
+                    replica
+                }
+                FleetFault::Eject { replica } => {
+                    self.metrics.on_partition();
+                    replica
+                }
+            };
+            let victims: Vec<Arc<StreamShared>> = {
+                let streams = self.streams.lock().unwrap();
+                streams
+                    .values()
+                    .filter(|s| {
+                        *s.replica.lock().unwrap() == src && !s.done.load(Ordering::Relaxed)
+                    })
+                    .cloned()
+                    .collect()
+            };
+            let targets: Vec<usize> = (0..self.replicas.len())
+                .filter(|&r| r != src && self.faults.routable(r, te))
+                .collect();
+            if targets.is_empty() {
+                continue;
+            }
+            for sh in victims {
+                let tr = {
+                    let mut chaos = self.chaos.lock().unwrap();
+                    let k = chaos.rr;
+                    chaos.rr += 1;
+                    targets[k % targets.len()]
+                };
+                let delivered = sh.delivered.lock().unwrap().clone();
+                let resumed = if delivered.is_empty() {
+                    self.replicas[tr].submit(sh.request.clone())
+                } else {
+                    self.replicas[tr].submit_resumed(
+                        sh.request.clone(),
+                        ResumeState {
+                            generated: delivered,
+                            sampler: Sampler::new(sh.request.seed),
+                        },
+                    )
+                };
+                if let Ok(h) = resumed {
+                    *sh.replica.lock().unwrap() = tr;
+                    *sh.switch.lock().unwrap() = Some(h);
+                    self.metrics.on_stream_failed_over();
+                }
+            }
+        }
+    }
+
+    /// Wrap a routed stream in a pump thread that owns the upstream
+    /// handle(s) and forwards events to the client with exactly-once
+    /// delivery across failover swaps and hedge races.
+    fn pump(
+        &self,
+        replica: usize,
+        request: Request,
+        primary: RequestHandle,
+        hedge: Option<(usize, RequestHandle)>,
+    ) -> Result<RequestHandle, String> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let request_id = primary.request_id;
+        let shared = Arc::new(StreamShared {
+            request,
+            replica: Mutex::new(replica),
+            delivered: Mutex::new(Vec::new()),
+            switch: Mutex::new(None),
+            done: AtomicBool::new(false),
+        });
+        let sid = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        self.streams.lock().unwrap().insert(sid, Arc::clone(&shared));
+        let registry = Arc::clone(&self.streams);
+        let metrics = Arc::clone(&self.metrics);
+        std::thread::Builder::new()
+            .name("lpu-cluster-pump".into())
+            .spawn(move || {
+                pump_stream(&shared, primary, hedge, tx, &metrics);
+                shared.done.store(true, Ordering::Relaxed);
+                registry.lock().unwrap().remove(&sid);
+            })
+            .map_err(|e| e.to_string())?;
+        Ok(RequestHandle { request_id, events: rx })
     }
 
     /// Submit on the fleet's wall clock (the server path).
@@ -932,6 +1565,116 @@ impl Cluster {
     pub fn shutdown(self) {
         for c in self.replicas {
             c.shutdown();
+        }
+    }
+}
+
+/// Forward one wrapped stream to the client. Exactly-once delivery:
+/// only the token whose index equals the delivered count is forwarded,
+/// so a failover resume (which replays the prefix) or a hedge duplicate
+/// can never duplicate or reorder tokens — and by greedy purity a
+/// skipped duplicate is value-identical to the token already sent.
+fn pump_stream(
+    shared: &Arc<StreamShared>,
+    mut upstream: RequestHandle,
+    mut hedge: Option<(usize, RequestHandle)>,
+    client: Sender<TokenEvent>,
+    metrics: &Metrics,
+) {
+    use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
+    let poll = std::time::Duration::from_millis(2);
+    loop {
+        // A failover installed a replacement upstream: swap to it. The
+        // old handle drops here — the abandoned replica sees the client
+        // disconnect and releases the lane's KV.
+        if let Some(next) = shared.switch.lock().unwrap().take() {
+            upstream = next;
+        }
+        // Race the hedge until either side produces a usable event.
+        if hedge.is_some() {
+            let polled = hedge.as_ref().map(|(_, h)| h.events.try_recv());
+            match polled {
+                Some(Ok(ev @ (TokenEvent::Token { .. } | TokenEvent::Done { .. }))) => {
+                    // The duplicate won: it becomes the stream and the
+                    // primary is cancelled by dropping its handle.
+                    metrics.on_hedge_won();
+                    let (hr, h) = hedge.take().expect("hedge present");
+                    *shared.replica.lock().unwrap() = hr;
+                    upstream = h;
+                    if !deliver(shared, &client, ev) {
+                        return;
+                    }
+                    continue;
+                }
+                Some(Ok(TokenEvent::Error { .. }) | Err(TryRecvError::Disconnected)) => {
+                    hedge = None;
+                }
+                Some(Err(TryRecvError::Empty)) | None => {}
+            }
+        }
+        match upstream.events.recv_timeout(poll) {
+            Ok(TokenEvent::Error { request_id, message }) => {
+                if shared.switch.lock().unwrap().is_some() {
+                    continue; // failover in flight: swap next iteration
+                }
+                if let Some((hr, h)) = hedge.take() {
+                    // The primary collapsed before the race settled —
+                    // promote the hedge.
+                    *shared.replica.lock().unwrap() = hr;
+                    upstream = h;
+                    continue;
+                }
+                let _ = client.send(TokenEvent::Error { request_id, message });
+                return;
+            }
+            Ok(ev) => {
+                // First usable event on the primary: the hedge lost;
+                // dropping its handle cancels it and releases its KV.
+                hedge = None;
+                if !deliver(shared, &client, ev) {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                if shared.switch.lock().unwrap().is_some() {
+                    continue;
+                }
+                if let Some((hr, h)) = hedge.take() {
+                    *shared.replica.lock().unwrap() = hr;
+                    upstream = h;
+                    continue;
+                }
+                let _ = client.send(TokenEvent::Error {
+                    request_id: upstream.request_id,
+                    message: "replica stream closed mid-flight".into(),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// The pump's forwarding core: dedupe tokens by delivered count,
+/// re-emit `Done`/`Error` verbatim. Returns false once the stream is
+/// finished.
+fn deliver(shared: &StreamShared, client: &Sender<TokenEvent>, ev: TokenEvent) -> bool {
+    match ev {
+        TokenEvent::Token { request_id, index, token } => {
+            let mut d = shared.delivered.lock().unwrap();
+            if index == d.len() {
+                d.push(token);
+                let _ = client.send(TokenEvent::Token { request_id, index, token });
+            }
+            true
+        }
+        done @ TokenEvent::Done { .. } => {
+            let _ = client.send(done);
+            false
+        }
+        err @ TokenEvent::Error { .. } => {
+            let _ = client.send(err);
+            false
         }
     }
 }
@@ -1382,5 +2125,122 @@ mod tests {
         .map(|c| c.shutdown())
         .unwrap_err();
         assert!(err.contains("did not register"), "{err}");
+    }
+
+    fn replica_factory() -> Coordinator {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            max_active_per_worker: 2,
+            policy: SchedulerPolicy::RoundRobin,
+            ..CoordinatorConfig::default()
+        });
+        c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+        c
+    }
+
+    #[test]
+    fn virtual_failover_preserves_streams_and_leaks_no_kv() {
+        // A crash plus a detected partition mid-run: every stream must
+        // still complete, bit-identical to the fault-free fleet, with
+        // zero KV held at drain — and the whole recovery must replay
+        // identically on a rerun.
+        let wl = cwl(3000.0, 60, 0.5, 30.0, ArrivalTrace::Uniform);
+        let mut cc = ClusterConfig::new(3, pool(1, 4));
+        cc.faults =
+            ClusterFaultPlan::parse("probe=0.05,crash=0@0.005,partition=1@0.02..0.3")
+                .unwrap();
+        let faulty = run_virtual_cluster(&wl, &cc).unwrap();
+        let mut clean_cc = cc.clone();
+        clean_cc.faults = ClusterFaultPlan::default();
+        let clean = run_virtual_cluster(&wl, &clean_cc).unwrap();
+        assert_eq!(faulty.replica_crashes, 1);
+        assert_eq!(faulty.partitions, 1);
+        assert!(faulty.streams_failed_over > 0, "crash at 5ms must orphan work");
+        assert_eq!(faulty.end_kv_blocks_in_use, 0);
+        assert_eq!(faulty.records.len(), clean.records.len());
+        for (f, c) in faulty.records.iter().zip(&clean.records) {
+            assert!(f.completed(), "request {} lost under faults", f.request_id);
+            assert_eq!(
+                f.tokens, c.tokens,
+                "request {} stream changed under faults",
+                f.request_id
+            );
+        }
+        let rerun = run_virtual_cluster(&wl, &cc).unwrap();
+        assert_eq!(faulty.records, rerun.records, "recovery must be rerun-identical");
+        assert_eq!(faulty.streams_failed_over, rerun.streams_failed_over);
+    }
+
+    #[test]
+    fn virtual_hedging_duplicates_interactive_without_changing_streams() {
+        let wl = cwl(5000.0, 40, 1.0, 5.0, ArrivalTrace::Uniform);
+        let mut cc = ClusterConfig::new(2, pool(1, 4));
+        cc.faults = ClusterFaultPlan::parse("slow=0x8").unwrap();
+        cc.hedge_fraction = 0.01;
+        let r = run_virtual_cluster(&wl, &cc).unwrap();
+        assert!(r.hedges_issued > 0, "backlogged interactive arrivals must hedge");
+        assert!(r.hedges_won <= r.hedges_issued);
+        assert_eq!(
+            r.records.iter().filter(|rec| rec.hedged).count(),
+            r.hedges_issued,
+            "hedged flags must match the issue counter"
+        );
+        assert_eq!(r.end_kv_blocks_in_use, 0, "losing duplicates must release KV");
+        let mut nh = cc.clone();
+        nh.hedge_fraction = 0.0;
+        let base = run_virtual_cluster(&wl, &nh).unwrap();
+        for (a, b) in r.records.iter().zip(&base.records) {
+            if a.completed() && b.completed() {
+                assert_eq!(a.tokens, b.tokens, "hedging changed stream {}", a.request_id);
+            }
+        }
+        let rerun = run_virtual_cluster(&wl, &cc).unwrap();
+        assert_eq!(r.records, rerun.records);
+        assert_eq!(r.hedges_won, rerun.hedges_won);
+    }
+
+    #[test]
+    fn stream_pump_is_transparent_when_no_fault_fires() {
+        // An armed-but-never-firing plan routes every stream through
+        // the pump wrapper; token delivery must be indistinguishable
+        // from the unwrapped path.
+        let wl = cwl(20_000.0, 30, 0.0, 0.0, ArrivalTrace::Uniform);
+        let mut cc = ClusterConfig::new(2, pool(1, 2));
+        cc.faults = ClusterFaultPlan::parse("crash=0@1000000").unwrap();
+        let mut clean_cc = cc.clone();
+        clean_cc.faults = ClusterFaultPlan::default();
+        let base = run_virtual_cluster(&wl, &clean_cc).unwrap();
+        let cluster = Cluster::threaded(&cc, "opt-tiny", replica_factory).unwrap();
+        let lr = run_cluster_open_loop(&cluster, &wl).unwrap();
+        assert_eq!(lr.failed, 0);
+        assert_eq!(lr.completed, 30);
+        for (rid, rec) in base.records.iter().enumerate() {
+            assert_eq!(lr.token_streams[rid], rec.tokens, "stream {rid} diverged");
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn threaded_crash_failover_completes_streams_exactly_once() {
+        // Kill replica 0 a third of the way through (on the planned
+        // clock): every stream still completes, token values match the
+        // fault-free virtual baseline (exactly-once: no duplicates, no
+        // reorders), and the crash is visible in the fleet counters.
+        let wl = cwl(800.0, 24, 0.0, 0.0, ArrivalTrace::Uniform);
+        let mut cc = ClusterConfig::new(2, pool(1, 2));
+        cc.faults = ClusterFaultPlan::parse("crash=0@0.01").unwrap();
+        let mut clean_cc = cc.clone();
+        clean_cc.faults = ClusterFaultPlan::default();
+        let base = run_virtual_cluster(&wl, &clean_cc).unwrap();
+        let cluster = Cluster::threaded(&cc, "opt-tiny", replica_factory).unwrap();
+        let lr = run_cluster_open_loop(&cluster, &wl).unwrap();
+        assert_eq!(lr.failed, 0, "failover must not surface stream errors");
+        assert_eq!(lr.completed, 24);
+        for (rid, rec) in base.records.iter().enumerate() {
+            assert_eq!(lr.token_streams[rid], rec.tokens, "stream {rid} diverged");
+        }
+        let snap = cluster.metrics.snapshot();
+        assert_eq!(snap.replica_crashes, 1);
+        assert_eq!(cluster.replica_health(), vec![false, true]);
+        cluster.shutdown();
     }
 }

@@ -263,6 +263,387 @@ impl FaultPlan {
     }
 }
 
+// ---------------------------------------------------------------------
+// Fleet-tier fault domains
+// ---------------------------------------------------------------------
+
+/// Default health-probe interval, seconds (virtual seconds in the
+/// harness, planned-arrival seconds on the threaded path). Detection
+/// latency for a partition is one probe interval: the first missed
+/// probe moves the replica to probation, the second ejects it.
+pub const DEFAULT_PROBE_INTERVAL_S: f64 = 0.25;
+
+/// Consecutive successful probes a healed replica must answer before
+/// the front-end trusts it with admissions again.
+pub const REINSTATE_PROBES: u32 = 2;
+
+/// Front-end health verdict for one replica at one instant — a pure
+/// function of the [`ClusterFaultPlan`] and the decision time, so both
+/// drivers (virtual clock, planned arrival timestamps) agree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Answering probes; receives admissions.
+    Healthy,
+    /// Suspect (first missed probe) or freshly healed (reinstatement
+    /// probes still running): receives no new admissions, but its
+    /// in-flight work is left alone and it still counts as capacity.
+    Probation,
+    /// Declared down: in-flight streams are failed over, the autoscaler
+    /// stops counting it, and only a full probe sequence readmits it.
+    Ejected,
+}
+
+/// A whole-replica crash point: the replica dies at fleet time `at_s`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaCrashSpec {
+    /// Replica (front-end slot) index that crashes.
+    pub replica: usize,
+    /// Fleet time of death, seconds.
+    pub at_s: f64,
+}
+
+/// A network partition: the replica stays alive but is unreachable on
+/// `[from_s, until_s)` — accepted work stalls until the heal, and the
+/// front-end ejects it one probe interval after onset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PartitionSpec {
+    /// Replica (front-end slot) index that is cut off.
+    pub replica: usize,
+    /// Partition onset, fleet seconds.
+    pub from_s: f64,
+    /// Heal time, fleet seconds (exclusive; must be > `from_s`).
+    pub until_s: f64,
+}
+
+/// A degraded replica: every request it serves costs `factor`× the
+/// modeled time. The front-end reprices its advertised capacity once
+/// the first probe measures the degradation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaSlowSpec {
+    /// Replica (front-end slot) index that degrades.
+    pub replica: usize,
+    /// Latency multiplier (>= 1 is a slowdown; clamped at query time).
+    pub factor: f64,
+}
+
+/// One fleet fault edge the dispatcher must act on (in-flight streams
+/// re-homed, counters bumped). Produced sorted by time from
+/// [`ClusterFaultPlan::fault_events`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FleetFault {
+    /// The replica died: fail over everything it held, forever.
+    Crash {
+        /// Crashed replica index.
+        replica: usize,
+    },
+    /// The replica was declared unreachable (partition detection edge):
+    /// fail over everything it held; it may be reinstated after heal.
+    Eject {
+        /// Ejected replica index.
+        replica: usize,
+    },
+}
+
+/// Deterministic replica-level fault plan — the fleet analog of
+/// [`FaultPlan`], parsed from the `--cluster-fault-plan` CLI spec.
+///
+/// The same contract holds one tier up: every injection is a pure
+/// function of (plan, replica index, fleet time), where fleet time is
+/// the virtual clock in the harness and the *planned* arrival
+/// timestamps on the threaded dispatcher — never wall time. Both
+/// drivers consult the same plan and reach the same routing, ejection,
+/// and failover decisions, so a rerun replays the same recovery.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterFaultPlan {
+    /// Reserved for sampled fleet faults; accepted by the parser for
+    /// forward compatibility (crash, partition, and slow points are
+    /// explicit schedules, so nothing consumes it today).
+    pub seed: u64,
+    /// Health-probe interval, seconds (detection + reinstatement
+    /// granularity).
+    pub probe_interval_s: f64,
+    /// Replica crash points (at most one effective per replica: the
+    /// earliest wins).
+    pub crashes: Vec<ReplicaCrashSpec>,
+    /// Network partitions (repeatable, may name several replicas).
+    pub partitions: Vec<PartitionSpec>,
+    /// Degraded replicas (at most one factor per replica: the largest
+    /// wins).
+    pub slow: Vec<ReplicaSlowSpec>,
+}
+
+impl Default for ClusterFaultPlan {
+    fn default() -> ClusterFaultPlan {
+        ClusterFaultPlan {
+            seed: 0,
+            probe_interval_s: DEFAULT_PROBE_INTERVAL_S,
+            crashes: Vec::new(),
+            partitions: Vec::new(),
+            slow: Vec::new(),
+        }
+    }
+}
+
+impl ClusterFaultPlan {
+    /// Parse a `--cluster-fault-plan` spec: comma-separated `key=value`
+    /// fields, any subset of
+    ///
+    /// ```text
+    /// seed=U64              reserved (accepted, unused)       (default 0)
+    /// probe=SECONDS         health-probe interval             (default 0.25)
+    /// crash=R@T             kill replica R at fleet time T    (repeatable)
+    /// partition=R@T1..T2    cut replica R off on [T1, T2)     (repeatable)
+    /// slow=RxF              multiply replica R's service time (repeatable)
+    /// ```
+    ///
+    /// e.g. `crash=1@4.0,partition=2@2.0..6.0,slow=0x3`.
+    pub fn parse(spec: &str) -> Result<ClusterFaultPlan> {
+        let mut plan = ClusterFaultPlan::default();
+        for field in spec.split(',').map(str::trim).filter(|f| !f.is_empty()) {
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| err!("cluster-fault-plan field `{field}` is not key=value"))?;
+            match key {
+                "seed" => {
+                    plan.seed = value.parse().map_err(|_| {
+                        err!("cluster-fault-plan seed `{value}` is not a u64")
+                    })?;
+                }
+                "probe" => {
+                    let p: f64 = value.parse().map_err(|_| {
+                        err!("cluster-fault-plan probe interval `{value}`")
+                    })?;
+                    if !p.is_finite() || p <= 0.0 {
+                        return Err(err!(
+                            "cluster-fault-plan probe interval {p} must be finite and > 0"
+                        ));
+                    }
+                    plan.probe_interval_s = p;
+                }
+                "crash" => {
+                    let (r, t) = value.split_once('@').ok_or_else(|| {
+                        err!("cluster-fault-plan crash `{value}` is not REPLICA@TIME")
+                    })?;
+                    let at_s: f64 = t
+                        .parse()
+                        .map_err(|_| err!("cluster-fault-plan crash time `{t}`"))?;
+                    if !at_s.is_finite() || at_s < 0.0 {
+                        return Err(err!(
+                            "cluster-fault-plan crash time {at_s} must be finite and >= 0"
+                        ));
+                    }
+                    plan.crashes.push(ReplicaCrashSpec {
+                        replica: r.parse().map_err(|_| {
+                            err!("cluster-fault-plan crash replica `{r}`")
+                        })?,
+                        at_s,
+                    });
+                }
+                "partition" => {
+                    let (r, window) = value.split_once('@').ok_or_else(|| {
+                        err!("cluster-fault-plan partition `{value}` is not REPLICA@FROM..UNTIL")
+                    })?;
+                    let (from, until) = window.split_once("..").ok_or_else(|| {
+                        err!("cluster-fault-plan partition window `{window}` is not FROM..UNTIL")
+                    })?;
+                    let from_s: f64 = from.parse().map_err(|_| {
+                        err!("cluster-fault-plan partition start `{from}`")
+                    })?;
+                    let until_s: f64 = until.parse().map_err(|_| {
+                        err!("cluster-fault-plan partition end `{until}`")
+                    })?;
+                    if !from_s.is_finite() || from_s < 0.0 || !until_s.is_finite() {
+                        return Err(err!(
+                            "cluster-fault-plan partition window {from_s}..{until_s} must be finite and >= 0"
+                        ));
+                    }
+                    if until_s <= from_s {
+                        return Err(err!(
+                            "cluster-fault-plan partition end {until_s} must be > start {from_s}"
+                        ));
+                    }
+                    plan.partitions.push(PartitionSpec {
+                        replica: r.parse().map_err(|_| {
+                            err!("cluster-fault-plan partition replica `{r}`")
+                        })?,
+                        from_s,
+                        until_s,
+                    });
+                }
+                "slow" => {
+                    let (r, f) = value.split_once('x').ok_or_else(|| {
+                        err!("cluster-fault-plan slow `{value}` is not REPLICAxFACTOR")
+                    })?;
+                    let factor: f64 = f
+                        .parse()
+                        .map_err(|_| err!("cluster-fault-plan slow factor `{f}`"))?;
+                    if !factor.is_finite() || factor <= 0.0 {
+                        return Err(err!(
+                            "cluster-fault-plan slow factor {factor} must be positive"
+                        ));
+                    }
+                    plan.slow.push(ReplicaSlowSpec {
+                        replica: r.parse().map_err(|_| {
+                            err!("cluster-fault-plan slow replica `{r}`")
+                        })?,
+                        factor,
+                    });
+                }
+                other => return Err(err!("unknown cluster-fault-plan field `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Whether the plan injects anything (an inert plan lets the
+    /// dispatcher skip all fleet fault bookkeeping, including stream
+    /// wrapping on the threaded path).
+    pub fn is_active(&self) -> bool {
+        !self.crashes.is_empty() || !self.partitions.is_empty() || !self.slow.is_empty()
+    }
+
+    /// Refuse replica indices outside the fleet. `slots` is the
+    /// front-end slot count (max_replicas under autoscale).
+    pub fn validate(&self, slots: usize) -> Result<()> {
+        let over = self
+            .crashes
+            .iter()
+            .map(|c| c.replica)
+            .chain(self.partitions.iter().map(|p| p.replica))
+            .chain(self.slow.iter().map(|s| s.replica))
+            .find(|&r| r >= slots);
+        if let Some(r) = over {
+            return Err(err!(
+                "cluster-fault-plan names replica {r} but the fleet has {slots} slots"
+            ));
+        }
+        Ok(())
+    }
+
+    /// The replica's (earliest) crash time, if any.
+    pub fn crash_at(&self, replica: usize) -> Option<f64> {
+        self.crashes
+            .iter()
+            .filter(|c| c.replica == replica)
+            .map(|c| c.at_s)
+            .min_by(f64::total_cmp)
+    }
+
+    /// Partition windows cutting `replica` off, `(from_s, until_s)`.
+    pub fn partitions_of(&self, replica: usize) -> Vec<(f64, f64)> {
+        let mut w: Vec<(f64, f64)> = self
+            .partitions
+            .iter()
+            .filter(|p| p.replica == replica)
+            .map(|p| (p.from_s, p.until_s))
+            .collect();
+        w.sort_by(|a, b| a.0.total_cmp(&b.0));
+        w
+    }
+
+    /// Latency multiplier for `replica` (1.0 = healthy). Like the
+    /// pool-tier [`FaultPlan::slow_factor`], the degradation covers the
+    /// whole run.
+    pub fn slow_factor(&self, replica: usize) -> f64 {
+        self.slow
+            .iter()
+            .filter(|s| s.replica == replica)
+            .map(|s| s.factor.max(1.0))
+            .fold(1.0, f64::max)
+    }
+
+    /// The slow factor the front-end *knows about* at time `t`: probes
+    /// need one interval to measure the degradation, so repricing
+    /// starts at `probe_interval_s` and admissions before that still
+    /// see the healthy price (the window deadline-fraction hedging
+    /// exists to cover).
+    pub fn advertised_slow_factor(&self, replica: usize, t: f64) -> f64 {
+        if t >= self.probe_interval_s {
+            self.slow_factor(replica)
+        } else {
+            1.0
+        }
+    }
+
+    /// Health verdict for `replica` at fleet time `t` — the front-end
+    /// state machine (healthy → probation → ejected → probation →
+    /// healthy) evaluated as a pure timeline function:
+    ///
+    /// * a crash ejects at its instant and forever (a reset connection
+    ///   is a hard signal; no probe latency);
+    /// * a partition puts the replica on probation at onset (first
+    ///   missed probe), ejects one probe interval later, and after the
+    ///   heal holds it on probation for [`REINSTATE_PROBES`] successful
+    ///   probes before readmitting it.
+    pub fn health_at(&self, replica: usize, t: f64) -> ReplicaHealth {
+        if let Some(tc) = self.crash_at(replica) {
+            if t >= tc {
+                return ReplicaHealth::Ejected;
+            }
+        }
+        let reinstate_s = self.probe_interval_s * f64::from(REINSTATE_PROBES);
+        let mut verdict = ReplicaHealth::Healthy;
+        for (from_s, until_s) in self.partitions_of(replica) {
+            let eject_s = from_s + self.probe_interval_s;
+            let v = if t < from_s {
+                ReplicaHealth::Healthy
+            } else if t < eject_s.min(until_s) {
+                ReplicaHealth::Probation
+            } else if t < until_s {
+                ReplicaHealth::Ejected
+            } else if t < until_s + reinstate_s {
+                ReplicaHealth::Probation
+            } else {
+                ReplicaHealth::Healthy
+            };
+            verdict = match (verdict, v) {
+                (ReplicaHealth::Ejected, _) | (_, ReplicaHealth::Ejected) => {
+                    ReplicaHealth::Ejected
+                }
+                (ReplicaHealth::Probation, _) | (_, ReplicaHealth::Probation) => {
+                    ReplicaHealth::Probation
+                }
+                _ => ReplicaHealth::Healthy,
+            };
+        }
+        verdict
+    }
+
+    /// Whether the front-end may route new work to `replica` at `t`.
+    pub fn routable(&self, replica: usize, t: f64) -> bool {
+        self.health_at(replica, t) == ReplicaHealth::Healthy
+    }
+
+    /// Every fault edge the dispatcher must act on, sorted by time
+    /// (ties broken by replica index): replica crashes at their
+    /// instant, partition ejections one probe interval past onset. A
+    /// partition shorter than the probe interval heals before
+    /// detection and produces no edge — its accepted work just stalls.
+    pub fn fault_events(&self) -> Vec<(f64, FleetFault)> {
+        let mut ev: Vec<(f64, FleetFault)> = Vec::new();
+        for c in &self.crashes {
+            ev.push((c.at_s, FleetFault::Crash { replica: c.replica }));
+        }
+        for p in &self.partitions {
+            let eject_s = p.from_s + self.probe_interval_s;
+            if eject_s < p.until_s {
+                ev.push((eject_s, FleetFault::Eject { replica: p.replica }));
+            }
+        }
+        ev.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then_with(|| fault_replica(&a.1).cmp(&fault_replica(&b.1)))
+        });
+        ev
+    }
+}
+
+/// The replica a fleet fault edge names (sort key).
+fn fault_replica(f: &FleetFault) -> usize {
+    match f {
+        FleetFault::Crash { replica } | FleetFault::Eject { replica } => *replica,
+    }
+}
+
 /// splitmix64 finalizer: the stateless hash behind
 /// [`FaultPlan::transient_at`]. Self-contained so the decision function
 /// can never drift with an RNG implementation.
@@ -361,6 +742,115 @@ mod tests {
         assert_eq!(p.backoff_s(2), 0.002);
         assert_eq!(p.backoff_s(3), 0.004);
         assert!(p.backoff_s(10_000) <= 0.001 * 65_536.0 + 1e-12, "exponent capped");
+    }
+
+    #[test]
+    fn cluster_parse_full_spec_roundtrips_fields() {
+        let p = ClusterFaultPlan::parse(
+            "seed=9,probe=0.5,crash=1@4.0,partition=2@2.0..6.0,slow=0x3,crash=3@8",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.probe_interval_s, 0.5);
+        assert_eq!(p.crashes.len(), 2);
+        assert_eq!(p.crash_at(1), Some(4.0));
+        assert_eq!(p.crash_at(3), Some(8.0));
+        assert_eq!(p.partitions_of(2), vec![(2.0, 6.0)]);
+        assert_eq!(p.slow_factor(0), 3.0);
+        assert_eq!(p.slow_factor(1), 1.0);
+        assert!(p.is_active());
+        assert!(p.validate(4).is_ok());
+        assert!(p.validate(3).is_err(), "replica 3 outside a 3-slot fleet");
+    }
+
+    #[test]
+    fn cluster_parse_empty_spec_is_the_inactive_default() {
+        let p = ClusterFaultPlan::parse("").unwrap();
+        assert_eq!(p, ClusterFaultPlan::default());
+        assert!(!p.is_active());
+        assert!(p.fault_events().is_empty());
+        assert_eq!(p.health_at(0, 1e9), ReplicaHealth::Healthy);
+        assert_eq!(p.slow_factor(5), 1.0);
+    }
+
+    #[test]
+    fn cluster_parse_rejects_malformed_fields_by_name() {
+        for (bad, field) in [
+            ("bogus=1", "bogus"),
+            ("crash=1", "crash"),
+            ("crash=x@2", "crash"),
+            ("crash=1@-3", "crash"),
+            ("partition=1@5", "partition"),
+            ("partition=1@6..5", "partition"),
+            ("partition=z@1..2", "partition"),
+            ("slow=1", "slow"),
+            ("slow=1x0", "slow"),
+            ("probe=0", "probe"),
+            ("probe=nan", "probe"),
+            ("seed", "key=value"),
+        ] {
+            let e = ClusterFaultPlan::parse(bad).unwrap_err().to_string();
+            assert!(
+                e.contains(field),
+                "spec `{bad}` must be refused with an error naming `{field}`, got: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_health_walks_the_state_machine_deterministically() {
+        let p = ClusterFaultPlan::parse("probe=0.25,partition=1@2.0..4.0,crash=2@3.0").unwrap();
+        // Partitioned replica: healthy -> probation (first missed
+        // probe) -> ejected -> probation (reinstatement probes) ->
+        // healthy. Pure timeline: two evaluations at the same t agree.
+        use ReplicaHealth::*;
+        for (t, want) in [
+            (0.0, Healthy),
+            (1.99, Healthy),
+            (2.0, Probation),
+            (2.24, Probation),
+            (2.25, Ejected),
+            (3.99, Ejected),
+            (4.0, Probation),
+            (4.49, Probation),
+            (4.5, Healthy),
+            (100.0, Healthy),
+        ] {
+            assert_eq!(p.health_at(1, t), want, "replica 1 at t={t}");
+            assert_eq!(p.health_at(1, t), p.health_at(1, t), "pure function");
+        }
+        // Crashed replica: ejected at its instant, forever.
+        assert_eq!(p.health_at(2, 2.99), Healthy);
+        assert_eq!(p.health_at(2, 3.0), Ejected);
+        assert_eq!(p.health_at(2, 1e6), Ejected);
+        // Untouched replica: always healthy and routable.
+        assert!(p.routable(0, 3.0));
+        // Fault edges in time order: crash at 3.0 after the partition
+        // ejection at 2.25.
+        let ev = p.fault_events();
+        assert_eq!(
+            ev,
+            vec![
+                (2.25, FleetFault::Eject { replica: 1 }),
+                (3.0, FleetFault::Crash { replica: 2 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn cluster_short_partition_heals_before_detection() {
+        let p = ClusterFaultPlan::parse("probe=0.5,partition=0@1.0..1.2").unwrap();
+        assert!(p.fault_events().is_empty(), "no ejection edge for a sub-probe partition");
+        assert_eq!(p.health_at(0, 1.1), ReplicaHealth::Probation);
+        assert_eq!(p.health_at(0, 2.3), ReplicaHealth::Healthy);
+    }
+
+    #[test]
+    fn cluster_slow_repricing_waits_for_the_first_probe() {
+        let p = ClusterFaultPlan::parse("slow=1x4").unwrap();
+        assert_eq!(p.advertised_slow_factor(1, 0.0), 1.0, "undetected before the first probe");
+        assert_eq!(p.advertised_slow_factor(1, DEFAULT_PROBE_INTERVAL_S), 4.0);
+        assert_eq!(p.advertised_slow_factor(0, 10.0), 1.0);
     }
 
     #[test]

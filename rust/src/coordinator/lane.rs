@@ -67,6 +67,7 @@ pub enum Admit {
 /// generated) and then continue the stream: the tokens already emitted
 /// (never re-sent to the client) and the sampler RNG (stochastic
 /// sampling resumes exactly where it stopped).
+#[derive(Clone, Debug)]
 pub struct ResumeState {
     /// Tokens generated before the preemption, in stream order.
     pub generated: Vec<i64>,

@@ -162,6 +162,21 @@ pub struct Metrics {
     tier_batch_shed: AtomicU64,
     /// Batch-tier requests that completed their stream.
     tier_batch_done: AtomicU64,
+    /// Replica crashes executed by the cluster fault plan (fleet tier;
+    /// the pool-level analog is `worker_crashes`).
+    replica_crashes: AtomicU64,
+    /// Replica partition windows detected by the front-end's probe
+    /// (the replica was ejected until the heal was confirmed).
+    partitions: AtomicU64,
+    /// In-flight streams re-dispatched onto a healthy replica after
+    /// their replica crashed or partitioned (exactly-once resumption).
+    streams_failed_over: AtomicU64,
+    /// Interactive requests duplicated onto a second replica because
+    /// the projected delay crossed the hedge fraction of the deadline.
+    hedges_issued: AtomicU64,
+    /// Hedged requests whose duplicate produced the first usable token
+    /// (the primary lost the race).
+    hedges_won: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -237,6 +252,16 @@ pub struct Snapshot {
     pub tier_batch_shed: u64,
     /// Batch-tier requests that completed.
     pub tier_batch_done: u64,
+    /// Replica crashes executed by the cluster fault plan.
+    pub replica_crashes: u64,
+    /// Replica partition windows detected by the front-end probe.
+    pub partitions: u64,
+    /// Streams failed over to a healthy replica (fleet tier).
+    pub streams_failed_over: u64,
+    /// Interactive requests hedged onto a second replica.
+    pub hedges_issued: u64,
+    /// Hedges whose duplicate won the first-token race.
+    pub hedges_won: u64,
     pub mean_queue_delay_s: f64,
     pub mean_ttft_s: f64,
     pub ttft: Percentiles,
@@ -291,6 +316,11 @@ impl Metrics {
             tier_batch_submitted: AtomicU64::new(0),
             tier_batch_shed: AtomicU64::new(0),
             tier_batch_done: AtomicU64::new(0),
+            replica_crashes: AtomicU64::new(0),
+            partitions: AtomicU64::new(0),
+            streams_failed_over: AtomicU64::new(0),
+            hedges_issued: AtomicU64::new(0),
+            hedges_won: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -458,6 +488,33 @@ impl Metrics {
         }
     }
 
+    /// The cluster fault plan crashed one replica.
+    pub fn on_replica_crash(&self) {
+        self.replica_crashes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The front-end's probe detected one replica partition window
+    /// (the replica is ejected until the heal is confirmed).
+    pub fn on_partition(&self) {
+        self.partitions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One in-flight stream was re-dispatched onto a healthy replica
+    /// with its resume state (delivered tokens are never re-sent).
+    pub fn on_stream_failed_over(&self) {
+        self.streams_failed_over.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One interactive request was duplicated onto a second replica.
+    pub fn on_hedge_issued(&self) {
+        self.hedges_issued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One hedge duplicate beat its primary to the first token.
+    pub fn on_hedge_won(&self) {
+        self.hedges_won.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         // Copy everything out under the lock, then do the O(n log n)
         // percentile work after dropping it so workers never wait on a
@@ -530,6 +587,11 @@ impl Metrics {
             tier_batch_submitted: self.tier_batch_submitted.load(Ordering::Relaxed),
             tier_batch_shed: self.tier_batch_shed.load(Ordering::Relaxed),
             tier_batch_done: self.tier_batch_done.load(Ordering::Relaxed),
+            replica_crashes: self.replica_crashes.load(Ordering::Relaxed),
+            partitions: self.partitions.load(Ordering::Relaxed),
+            streams_failed_over: self.streams_failed_over.load(Ordering::Relaxed),
+            hedges_issued: self.hedges_issued.load(Ordering::Relaxed),
+            hedges_won: self.hedges_won.load(Ordering::Relaxed),
             mean_queue_delay_s: queue_delay_mean,
             mean_ttft_s: ttft_mean,
             ttft: percentiles_of(ttft_samples),
@@ -746,6 +808,11 @@ impl Snapshot {
             ("tier_batch_submitted", self.tier_batch_submitted.into()),
             ("tier_batch_shed", self.tier_batch_shed.into()),
             ("tier_batch_done", self.tier_batch_done.into()),
+            ("replica_crashes", self.replica_crashes.into()),
+            ("partitions", self.partitions.into()),
+            ("streams_failed_over", self.streams_failed_over.into()),
+            ("hedges_issued", self.hedges_issued.into()),
+            ("hedges_won", self.hedges_won.into()),
             ("mean_queue_delay_s", self.mean_queue_delay_s.into()),
             ("mean_ttft_s", self.mean_ttft_s.into()),
             ("ttft_p50_s", self.ttft.p50.into()),
@@ -906,6 +973,32 @@ mod tests {
         assert_eq!(j.get("tier_interactive_attained").as_u64(), Some(1));
         assert_eq!(j.get("tier_batch_submitted").as_u64(), Some(1));
         assert_eq!(j.get("tier_batch_done").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn fleet_fault_counters_accumulate_and_export() {
+        let m = Metrics::new();
+        m.on_replica_crash();
+        m.on_partition();
+        m.on_partition();
+        m.on_stream_failed_over();
+        m.on_stream_failed_over();
+        m.on_stream_failed_over();
+        m.on_hedge_issued();
+        m.on_hedge_issued();
+        m.on_hedge_won();
+        let s = m.snapshot();
+        assert_eq!(s.replica_crashes, 1);
+        assert_eq!(s.partitions, 2);
+        assert_eq!(s.streams_failed_over, 3);
+        assert_eq!(s.hedges_issued, 2);
+        assert_eq!(s.hedges_won, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("replica_crashes").as_u64(), Some(1));
+        assert_eq!(j.get("partitions").as_u64(), Some(2));
+        assert_eq!(j.get("streams_failed_over").as_u64(), Some(3));
+        assert_eq!(j.get("hedges_issued").as_u64(), Some(2));
+        assert_eq!(j.get("hedges_won").as_u64(), Some(1));
     }
 
     #[test]

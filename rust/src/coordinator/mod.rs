@@ -106,7 +106,9 @@ pub use cluster::{
     ClusterReport, ClusterWorkload, SloTier, SloTierSpec, Submitted,
 };
 pub use faults::{
-    CrashSpec, FaultKind, FaultPlan, SlowSpec, DEFAULT_BACKOFF_BASE_S, DEFAULT_RETRY_BUDGET,
+    ClusterFaultPlan, CrashSpec, FaultKind, FaultPlan, FleetFault, PartitionSpec,
+    ReplicaCrashSpec, ReplicaHealth, ReplicaSlowSpec, SlowSpec, DEFAULT_BACKOFF_BASE_S,
+    DEFAULT_PROBE_INTERVAL_S, DEFAULT_RETRY_BUDGET, REINSTATE_PROBES,
 };
 pub use lane::{Absorbed, Admit, HoldsLane, KvState, Lane, ResumeState};
 pub use metrics::{Metrics, Percentiles, PoolGauges};
@@ -120,8 +122,8 @@ pub use scheduler::{
     DEFAULT_KV_BLOCK_TOKENS,
 };
 pub use workload::{
-    run_open_loop, run_virtual, run_virtual_plan, LenDist, LoadReport, VirtualConfig,
-    VirtualReport, Workload,
+    run_open_loop, run_virtual, run_virtual_plan, run_virtual_plan_jobs, LenDist, LoadReport,
+    OrphanJob, PlanJob, PlanResume, PoolInterrupt, VirtualConfig, VirtualReport, Workload,
 };
 
 /// A generation request.
@@ -477,6 +479,28 @@ impl Coordinator {
     /// steers the job onto one worker's queue using the loads (queue
     /// depths + active lanes) at this instant.
     pub fn submit(&self, request: Request) -> Result<RequestHandle, String> {
+        self.submit_inner(request, None)
+    }
+
+    /// Submit a request that continues a stream salvaged from another
+    /// replica (the fleet failover path): the carried [`ResumeState`]
+    /// routes the job through the same restore-vs-recompute readmission
+    /// machinery a within-pool preemption uses, so already-delivered
+    /// tokens are recomputed into KV but never re-emitted — token
+    /// events continue from `resume.generated.len()`.
+    pub(crate) fn submit_resumed(
+        &self,
+        request: Request,
+        resume: ResumeState,
+    ) -> Result<RequestHandle, String> {
+        self.submit_inner(request, Some(resume))
+    }
+
+    fn submit_inner(
+        &self,
+        request: Request,
+        resume: Option<ResumeState>,
+    ) -> Result<RequestHandle, String> {
         request.validate()?;
         let pool = self
             .pools
@@ -514,8 +538,8 @@ impl Coordinator {
                     request,
                     events: tx,
                     submitted: Instant::now(),
-                    resume: None,
-                    failover: false,
+                    failover: resume.is_some(),
+                    resume,
                 },
             )
             .map_err(|_| "pool shut down".to_string())?;

@@ -424,6 +424,11 @@ pub struct VirtualReport {
     /// exhaustion, deadline/livelock shed, or a crash with no healthy
     /// sibling). Their records carry empty streams, like rejections.
     pub failed: usize,
+    /// Jobs a fleet-injected halt returned as salvageable orphans
+    /// ([`run_virtual_plan_jobs`]); their records here are empty
+    /// placeholders — the fleet dispatcher re-homes the work. Always 0
+    /// for an uninterrupted run.
+    pub orphaned: usize,
     /// KV blocks still held across all workers when the run drained —
     /// must be 0, or some exit path leaked pager budget.
     pub end_kv_blocks_in_use: usize,
@@ -447,6 +452,78 @@ impl HoldsLane for VSlot {
     fn lane_mut(&mut self) -> &mut Lane {
         &mut self.lane
     }
+}
+
+/// One plan entry for [`run_virtual_plan_jobs`]: a request plus, for
+/// fleet-level failover re-dispatch, the stream state salvaged from the
+/// replica that previously served it.
+#[derive(Clone, Debug)]
+pub struct PlanJob {
+    /// When the job enters this pool (routing + queue clock), seconds.
+    pub at_s: f64,
+    /// The client-visible arrival (deadline base and record arrival) —
+    /// equals `at_s` for fresh arrivals, stays the *original* arrival
+    /// across failover hops.
+    pub arrival_s: f64,
+    /// The request (original prompt; generated tokens ride in `resume`).
+    pub request: Request,
+    /// Stream state carried across a replica boundary: the job resumes
+    /// through the restore-vs-recompute machinery instead of starting
+    /// over, and its already-delivered tokens are never re-emitted.
+    pub resume: Option<PlanResume>,
+}
+
+impl PlanJob {
+    /// A fresh arrival: enters at its own arrival time, no carry.
+    pub fn fresh(at_s: f64, request: Request) -> PlanJob {
+        PlanJob { at_s, arrival_s: at_s, request, resume: None }
+    }
+}
+
+/// The cross-replica resume carry: the shared [`ResumeState`] (tokens
+/// generated so far + the sampler) plus the delivery history the merged
+/// record must keep (emission timestamps are history, not state).
+#[derive(Clone, Debug)]
+pub struct PlanResume {
+    /// Generated tokens + sampler, exactly as the pool-level salvage
+    /// path carries them.
+    pub state: ResumeState,
+    /// First-token time on the original replica (None if none emitted).
+    pub first_token_s: Option<f64>,
+    /// Emission time of each already-delivered token.
+    pub token_times: Vec<f64>,
+}
+
+/// Fleet-injected interruption of one pool run: a replica crash
+/// (`halt_at`) kills the whole pool at an instant and returns its work
+/// as [`OrphanJob`]s; a partition (`freezes` window) stalls all compute
+/// for the window — accepted work waits and completes after the heal.
+/// The inert default reproduces [`run_virtual_plan`] exactly.
+#[derive(Clone, Debug, Default)]
+pub struct PoolInterrupt {
+    /// Kill the pool at this virtual time: in-flight lanes release all
+    /// KV and exit as resumable orphans; queued and future jobs orphan
+    /// untouched.
+    pub halt_at: Option<f64>,
+    /// Compute-stall windows `(from_s, until_s)`: in-flight steps
+    /// finish late by the window length and no new step starts inside
+    /// one.
+    pub freezes: Vec<(f64, f64)>,
+}
+
+/// A job the halted pool could not finish, returned to the caller (the
+/// fleet dispatcher) for re-homing on a healthy replica.
+#[derive(Clone, Debug)]
+pub struct OrphanJob {
+    /// Index of the job in this pool's plan.
+    pub rid: usize,
+    /// Original client-visible arrival.
+    pub arrival_s: f64,
+    /// The request.
+    pub request: Request,
+    /// Present when the job was in flight: resume carry for
+    /// exactly-once continuation (delivered tokens are never re-sent).
+    pub resume: Option<PlanResume>,
 }
 
 /// A queued request: a fresh arrival, or a preempted slot awaiting
@@ -529,20 +606,42 @@ pub fn run_virtual_plan(
     plan: Vec<(f64, Request)>,
     vc: &VirtualConfig,
 ) -> Result<VirtualReport, String> {
+    let jobs = plan.into_iter().map(|(at, req)| PlanJob::fresh(at, req)).collect();
+    let (report, orphans) =
+        run_virtual_plan_jobs(model, vocab, offered_rate, jobs, vc, &PoolInterrupt::default())?;
+    debug_assert!(orphans.is_empty(), "an uninterrupted run cannot orphan work");
+    Ok(report)
+}
+
+/// [`run_virtual_plan`] over resumable [`PlanJob`]s with fleet-injected
+/// interruption — the entry the cluster tier drives. Returns the report
+/// plus the orphans a `halt_at` left behind (always empty with the
+/// inert [`PoolInterrupt`]).
+pub fn run_virtual_plan_jobs(
+    model: &str,
+    vocab: usize,
+    offered_rate: f64,
+    jobs: Vec<PlanJob>,
+    vc: &VirtualConfig,
+    interrupt: &PoolInterrupt,
+) -> Result<(VirtualReport, Vec<OrphanJob>), String> {
     if vc.workers == 0 || vc.max_active == 0 {
         return Err("virtual config needs >= 1 worker and >= 1 slot".into());
     }
-    if plan.windows(2).any(|w| w[0].0 > w[1].0) {
+    if jobs.windows(2).any(|w| w[0].at_s > w[1].at_s) {
         return Err("virtual plan arrivals must be non-decreasing".into());
     }
     let max_batch = if vc.max_batch == 0 { vc.max_active } else { vc.max_batch };
 
-    let mut arrivals: VecDeque<(f64, usize, Request)> = plan
-        .into_iter()
-        .enumerate()
-        .map(|(i, (at, req))| (at, i, req))
-        .collect();
+    let mut arrivals: VecDeque<(usize, PlanJob)> =
+        jobs.into_iter().enumerate().collect();
     let n_requests = arrivals.len();
+    let halt_at = interrupt.halt_at;
+    let mut freezes: Vec<(f64, f64)> = interrupt.freezes.clone();
+    freezes.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut freeze_idx = 0usize;
+    let mut frozen_until = f64::NEG_INFINITY;
+    let mut orphans: Vec<OrphanJob> = Vec::new();
     // The routing subsystem is the SAME code the threaded pool runs
     // (`coordinator::router`), driven here on virtual seconds: the
     // router steers each arrival onto one worker's queue, each worker
@@ -602,7 +701,7 @@ pub fn run_virtual_plan(
     let mut wall_s = 0.0f64;
 
     loop {
-        let next_arrival = arrivals.front().map(|a| a.0);
+        let next_arrival = arrivals.front().map(|(_, j)| j.at_s);
         let next_step = st
             .workers
             .iter()
@@ -620,14 +719,29 @@ pub fn run_virtual_plan(
         enum Event {
             Arrival,
             Step(f64, usize),
+            /// Fleet partition onset: stall all compute until the heal.
+            FreezeStart(f64, f64),
+            /// Frozen solid with admitted work: jump to the heal.
+            Thaw(f64),
+            /// Fleet crash: salvage everything and stop.
+            Halt(f64),
             Drain,
         }
-        let event = match (next_arrival, next_step) {
+        let ordinary = match (next_arrival, next_step) {
             (None, None) => {
                 if queues.total_depth() == 0 {
-                    break;
+                    // Admitted-but-unstarted slots can only exist while
+                    // frozen: thaw instead of exiting with work held.
+                    if wall_s < frozen_until
+                        && st.workers.iter().any(|w| !w.slots.is_empty())
+                    {
+                        Event::Thaw(frozen_until)
+                    } else {
+                        break;
+                    }
+                } else {
+                    Event::Drain
                 }
-                Event::Drain
             }
             (Some(_), None) => Event::Arrival,
             (None, Some((ts, wi))) => Event::Step(ts, wi),
@@ -639,6 +753,25 @@ pub fn run_virtual_plan(
                 }
             }
         };
+        // Fleet interrupts preempt any ordinary event at or past their
+        // instant (ties: the interrupt fires first, so a pool dead at T
+        // never serves the arrival at T).
+        let ordinary_time = match &ordinary {
+            Event::Arrival => next_arrival,
+            Event::Step(ts, _) => Some(*ts),
+            Event::Thaw(t) => Some(*t),
+            Event::Drain => Some(wall_s),
+            Event::FreezeStart(..) | Event::Halt(_) => None,
+        };
+        let due = |t: f64| ordinary_time.map_or(true, |o| t <= o);
+        let event = if halt_at.map_or(false, |th| due(th)) {
+            Event::Halt(halt_at.expect("halt checked above"))
+        } else if freeze_idx < freezes.len() && due(freezes[freeze_idx].0) {
+            let (f, u) = freezes[freeze_idx];
+            Event::FreezeStart(f, u)
+        } else {
+            ordinary
+        };
 
         match event {
             Event::Arrival => {
@@ -649,21 +782,32 @@ pub fn run_virtual_plan(
                 // by the previous arrival's dispatch, exactly like
                 // sequential `submit()` calls on the threaded pool.
                 loop {
-                    let (ta, rid, req) = arrivals.pop_front().expect("arrival event");
+                    let (rid, job) = arrivals.pop_front().expect("arrival event");
+                    let ta = job.at_s;
                     wall_s = wall_s.max(ta);
                     let wi = {
                         let loads = st.loads(&queues);
-                        st.router.route(&req.prompt, &loads)
+                        st.router.route(&job.request.prompt, &loads)
                     };
+                    // A resume-carrying job is a fleet failover hop:
+                    // it re-enters through the restore-vs-recompute
+                    // machinery and keeps its delivery history.
+                    let failover = job.resume.is_some();
+                    let resume = job.resume.map(|r| VResume {
+                        last_token_s: r.token_times.last().copied().unwrap_or(0.0),
+                        first_token_s: r.first_token_s,
+                        token_times: r.token_times,
+                        state: r.state,
+                    });
                     let _ = queues.push(
                         wi,
                         ta,
                         VPending {
-                            arrival_s: ta,
+                            arrival_s: job.arrival_s,
                             rid,
-                            request: req,
-                            resume: None,
-                            failover: false,
+                            request: job.request,
+                            resume,
+                            failover,
                         },
                     );
                     note_queue_depths(
@@ -672,10 +816,94 @@ pub fn run_virtual_plan(
                         &queues,
                     );
                     st.dispatch(&queues, ta);
-                    if !arrivals.front().map(|a| a.0 == ta).unwrap_or(false) {
+                    if !arrivals.front().map(|(_, j)| j.at_s == ta).unwrap_or(false) {
                         break;
                     }
                 }
+            }
+            Event::FreezeStart(f_from, f_until) => {
+                // Partition onset: the replica is alive but cut off, so
+                // accepted work stalls until the heal — every in-flight
+                // step finishes late by the window and no new step
+                // starts inside it (the batch-restart guard below).
+                wall_s = wall_s.max(f_from);
+                for w in st.workers.iter_mut() {
+                    if !w.batch.is_empty() {
+                        w.busy_until += f_until - f_from;
+                    }
+                }
+                frozen_until = f_until;
+                freeze_idx += 1;
+            }
+            Event::Thaw(t) => {
+                wall_s = wall_s.max(t);
+            }
+            Event::Halt(th) => {
+                // Fleet-injected replica crash: the whole pool dies at
+                // `th`. Every in-flight lane exits through
+                // `release_lane` — a crash can never leak KV — and
+                // carries its stream state out as an orphan for the
+                // fleet dispatcher to re-home with exactly-once
+                // delivery; queued and future jobs orphan untouched.
+                wall_s = wall_s.max(th);
+                for w in st.workers.iter_mut() {
+                    w.dead = true;
+                    w.batch.clear();
+                    w.injected.clear();
+                    let salvage: Vec<VSlot> = w.slots.drain(..).collect();
+                    for i in (0..salvage.len()).rev() {
+                        w.scheduler.swap_remove(i);
+                    }
+                    for s in salvage {
+                        w.kv.release_lane(&s.lane);
+                        let (request, state) = s.lane.into_resume();
+                        st.records[s.rid] = Some(failed_record(s.rid, s.arrival_s, wall_s));
+                        orphans.push(OrphanJob {
+                            rid: s.rid,
+                            arrival_s: s.arrival_s,
+                            request,
+                            resume: Some(PlanResume {
+                                state,
+                                first_token_s: s.first_token_s,
+                                token_times: s.token_times,
+                            }),
+                        });
+                    }
+                    w.kv.drain_prefix_events();
+                }
+                for wi in 0..vc.workers {
+                    loop {
+                        match queues.pop_for(wi, wall_s, false, |_| Admit::Take) {
+                            Popped::Job(p) | Popped::Rejected(p) => {
+                                st.records[p.rid] =
+                                    Some(failed_record(p.rid, p.arrival_s, wall_s));
+                                orphans.push(OrphanJob {
+                                    rid: p.rid,
+                                    arrival_s: p.arrival_s,
+                                    request: p.request,
+                                    resume: p.resume.map(|r| PlanResume {
+                                        state: r.state,
+                                        first_token_s: r.first_token_s,
+                                        token_times: r.token_times,
+                                    }),
+                                });
+                            }
+                            Popped::None | Popped::Closed => break,
+                        }
+                    }
+                }
+                for (rid, job) in arrivals.drain(..) {
+                    st.records[rid] =
+                        Some(failed_record(rid, job.arrival_s, wall_s));
+                    orphans.push(OrphanJob {
+                        rid,
+                        arrival_s: job.arrival_s,
+                        request: job.request,
+                        resume: job.resume,
+                    });
+                }
+                orphans.sort_by_key(|o| o.rid);
+                break;
             }
             Event::Step(ts, wi) => {
                 wall_s = wall_s.max(ts);
@@ -716,9 +944,16 @@ pub fn run_virtual_plan(
                 let before = queues.total_depth();
                 st.dispatch(&queues, wall_s);
                 if queues.total_depth() == before {
-                    return Err(format!(
-                        "virtual scheduler stuck with {before} queued requests"
-                    ));
+                    if wall_s < frozen_until {
+                        // Frozen solid (slots full, nothing admissible
+                        // until steps retire): jump to the heal so the
+                        // stalled steps can restart.
+                        wall_s = frozen_until;
+                    } else {
+                        return Err(format!(
+                            "virtual scheduler stuck with {before} queued requests"
+                        ));
+                    }
                 }
             }
         }
@@ -728,8 +963,13 @@ pub fn run_virtual_plan(
         // Step composition (lane picks, prefill spans, paged growth,
         // preemption) is the shared `plan_step`; evicted slots carry
         // their stream state to the *front* of their worker's queue for
-        // recompute-on-readmit.
+        // recompute-on-readmit. A frozen (partitioned) pool starts
+        // nothing until the heal.
         let now = wall_s;
+        if now < frozen_until {
+            st.sync_registry();
+            continue;
+        }
         for (wi, w) in st.workers.iter_mut().enumerate() {
             if !w.batch.is_empty() {
                 continue;
@@ -912,7 +1152,7 @@ pub fn run_virtual_plan(
     // end of any drained run — asserted by the fault tests and bench.
     let end_kv_blocks_in_use = st.workers.iter().map(|w| w.kv.blocks_in_use()).sum();
     let f = st.faults;
-    Ok(VirtualReport {
+    let report = VirtualReport {
         policy: vc.policy,
         offered_rate,
         rejected: st.rejected,
@@ -946,9 +1186,11 @@ pub fn run_virtual_plan(
         shed_expired: f.shed_expired,
         shed_livelock: f.shed_livelock,
         failed: f.failed,
+        orphaned: orphans.len(),
         end_kv_blocks_in_use,
         records,
-    })
+    };
+    Ok((report, orphans))
 }
 
 /// The virtual run's mutable simulation state, factored so admission

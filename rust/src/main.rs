@@ -10,9 +10,10 @@ use std::sync::Arc;
 use lpu::compiler::{compile, CompileOpts, ParallelMode};
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    ArrivalTrace, AutoscaleConfig, BackendFactory, Cluster, ClusterConfig, Coordinator,
-    CoordinatorConfig, FaultPlan, HostTierConfig, KvPolicy, PrefixCacheConfig,
-    RouterPolicy, SchedulerPolicy, SloTierSpec, StepModel, VirtualConfig,
+    ArrivalTrace, AutoscaleConfig, BackendFactory, Cluster, ClusterConfig,
+    ClusterFaultPlan, Coordinator, CoordinatorConfig, FaultPlan, HostTierConfig,
+    KvPolicy, PrefixCacheConfig, RouterPolicy, SchedulerPolicy, SloTierSpec, StepModel,
+    VirtualConfig,
 };
 use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
 use lpu::isa::asm;
@@ -31,10 +32,10 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..] [--cluster-fault-plan probe=S,crash=R@T,partition=R@T1..T2,slow=RxF] [--hedge <deadline_fraction>]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>|mixed:<ttft_s>:<fraction>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..] [--trace uniform|diurnal:<period_s>:<depth>|flash:<at_s>:<dur_s>:<mag>]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>|mixed:<ttft_s>:<fraction>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..] [--trace uniform|diurnal:<period_s>:<depth>|flash:<at_s>:<dur_s>:<mag>] [--cluster-fault-plan probe=S,crash=R@T,partition=R@T1..T2,slow=RxF] [--hedge <deadline_fraction>]" },
 ];
 
 fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
@@ -54,6 +55,9 @@ fn router_arg(args: &Args) -> Result<RouterPolicy, String> {
 /// deterministic fault-injection spec, e.g.
 /// `seed=7,transient=0.01,retries=3,backoff=0.001,crash=0@200,slow=1x2.5`.
 /// Absent flag = inert plan. A malformed spec is refused, not ignored.
+/// Composes with `--replicas`: the pool-level plan applies to EACH
+/// replica identically (worker indices are per-replica), while
+/// `--cluster-fault-plan` injects replica-level faults.
 fn fault_arg(args: &Args) -> Result<FaultPlan, String> {
     match args.opt("fault-plan") {
         Some(spec) => FaultPlan::parse(spec).map_err(|e| e.to_string()),
@@ -136,15 +140,24 @@ fn kv_args(
     Ok((kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier))
 }
 
+/// The resolved cluster-fleet flags (None = single-pool mode).
+struct FleetArgs {
+    replicas: usize,
+    tier: SloTierSpec,
+    autoscale: Option<AutoscaleConfig>,
+    trace: ArrivalTrace,
+    faults: ClusterFaultPlan,
+    hedge_fraction: f64,
+}
+
 /// The cluster-fleet flags shared by `serve` and `loadtest`:
-/// `--replicas`, `--slo-tier`, `--autoscale`, `--trace`. Returns None
-/// when `--replicas` is absent (single-pool mode); the other cluster
-/// flags without `--replicas` are refused, not ignored.
-fn cluster_args(
-    args: &Args,
-) -> Result<Option<(usize, SloTierSpec, Option<AutoscaleConfig>, ArrivalTrace)>, String> {
+/// `--replicas`, `--slo-tier`, `--autoscale`, `--trace`,
+/// `--cluster-fault-plan`, `--hedge`. Returns None when `--replicas`
+/// is absent (single-pool mode); the other cluster flags without
+/// `--replicas` are refused, not ignored.
+fn cluster_args(args: &Args) -> Result<Option<FleetArgs>, String> {
     if args.opt("replicas").is_none() {
-        for flag in ["slo-tier", "autoscale", "trace"] {
+        for flag in ["slo-tier", "autoscale", "trace", "cluster-fault-plan", "hedge"] {
             if args.opt(flag).is_some() {
                 return Err(format!("--{flag} needs --replicas (cluster mode)"));
             }
@@ -158,7 +171,17 @@ fn cluster_args(
     let tier = SloTierSpec::parse(args.opt_or("slo-tier", "batch"))?;
     let autoscale = args.opt("autoscale").map(AutoscaleConfig::parse).transpose()?;
     let trace = ArrivalTrace::parse(args.opt_or("trace", "uniform"))?;
-    Ok(Some((replicas, tier, autoscale, trace)))
+    let faults = match args.opt("cluster-fault-plan") {
+        Some(spec) => ClusterFaultPlan::parse(spec).map_err(|e| e.to_string())?,
+        None => ClusterFaultPlan::default(),
+    };
+    let hedge_fraction = args.opt_f64("hedge", 0.0)?;
+    if !(0.0..=1.0).contains(&hedge_fraction) {
+        return Err(format!(
+            "--hedge must be a deadline fraction in [0, 1], got {hedge_fraction}"
+        ));
+    }
+    Ok(Some(FleetArgs { replicas, tier, autoscale, trace, faults, hedge_fraction }))
 }
 
 /// Price the cluster front-end's admission estimates from the same
@@ -387,13 +410,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         ..CoordinatorConfig::default()
     };
 
-    if let Some((replicas, tier, autoscale, _)) = cluster_args(args)? {
+    if let Some(fleet) = cluster_args(args)? {
         // Fleet mode: N replicas behind the SLO-aware front-end.
         if args.opt("trace").is_some() {
             return Err(
                 "--trace shapes generated workloads; it applies to loadtest, not serve".into(),
             );
         }
+        let FleetArgs { replicas, tier, autoscale, faults: cfaults, hedge_fraction, .. } =
+            fleet;
         let default_deadline_s = match tier {
             SloTierSpec::Batch => None,
             SloTierSpec::Interactive { ttft_s } => Some(ttft_s),
@@ -412,12 +437,33 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             cluster_step_model(&model)?,
         );
         pool.max_batch = cfg.max_batch;
+        // --fault-plan composes with --replicas: the pool-level plan
+        // applies to each replica identically (each coordinator below
+        // is built from the same cfg, faults included).
+        pool.faults = cfg.faults.clone();
         let mut cc = ClusterConfig::new(replicas, pool);
         cc.autoscale = autoscale;
         cc.default_deadline_s = default_deadline_s;
+        cc.faults = cfaults;
+        cc.hedge_fraction = hedge_fraction;
         let autoscale_desc = cc.autoscale.map_or("autoscale off".to_string(), |a| {
             format!("autoscale {}..{}", a.min_replicas, a.max_replicas)
         });
+        let chaos_desc = if cc.faults.is_active() {
+            format!(
+                ", chaos: {} crash(es) {} partition(s) {} slow",
+                cc.faults.crashes.len(),
+                cc.faults.partitions.len(),
+                cc.faults.slow.len()
+            )
+        } else {
+            String::new()
+        };
+        let hedge_desc = if cc.hedge_fraction > 0.0 {
+            format!(", hedging at {:.0}% of deadline", cc.hedge_fraction * 100.0)
+        } else {
+            String::new()
+        };
         let tier_desc = match default_deadline_s {
             None => "batch tier".to_string(),
             Some(d) => format!("interactive tier, TTFT budget {d}s"),
@@ -432,8 +478,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             server::serve_cluster(Arc::new(cluster), addr).map_err(|e| e.to_string())?;
         println!(
             "serving '{model}' fleet ({backend}, {active}/{slots} replicas active, \
-             {tier_desc}, {autoscale_desc}{fault_desc}) on {} with {workers} worker(s) \
-             per replica; Ctrl-C to stop",
+             {tier_desc}, {autoscale_desc}{fault_desc}{chaos_desc}{hedge_desc}) on {} \
+             with {workers} worker(s) per replica; Ctrl-C to stop",
             handle.addr
         );
         loop {
@@ -536,9 +582,11 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         .map(|r| r.trim().parse().map_err(|_| format!("bad rate '{r}'")))
         .collect::<Result<_, _>>()?;
 
-    if let Some((replicas, tier, autoscale, trace)) = cluster_args(args)? {
+    if let Some(fleet) = cluster_args(args)? {
         // Fleet mode: a fresh threaded cluster per offered rate, fed a
         // tiered, trace-shaped workload through the SLO front-end.
+        let FleetArgs { replicas, tier, autoscale, trace, faults: cfaults, hedge_fraction } =
+            fleet;
         let (fraction, ttft_s) = tier.mix();
         let mut pool = VirtualConfig::new(
             cfg.policy,
@@ -547,8 +595,13 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
             cluster_step_model(&model)?,
         );
         pool.max_batch = cfg.max_batch;
+        // --fault-plan composes with --replicas: each replica's
+        // coordinator is built from the same cfg, faults included.
+        pool.faults = cfg.faults.clone();
         let mut cc = ClusterConfig::new(replicas, pool);
         cc.autoscale = autoscale;
+        cc.faults = cfaults;
+        cc.hedge_fraction = hedge_fraction;
         let mut t = Table::new(
             format!(
                 "cluster load study: {model} ({backend} backend, {replicas} replicas, \
@@ -564,6 +617,8 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
                 "TTFT p99 ms",
                 "int attain %",
                 "peak reps",
+                "failover",
+                "hedge w/i",
             ],
         );
         for &rate in &rates {
@@ -605,6 +660,8 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
                 format!("{:.2}", r.ttft.p99 * 1e3),
                 format!("{attain:.1}"),
                 peak.to_string(),
+                s.streams_failed_over.to_string(),
+                format!("{}/{}", s.hedges_won, s.hedges_issued),
             ]);
             cluster.shutdown();
         }
@@ -646,4 +703,114 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
     t.print();
     coord.shutdown();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(raw: &[&str]) -> Args {
+        let v: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
+        Args::parse(&v).expect("flag syntax")
+    }
+
+    #[test]
+    fn cluster_flags_without_replicas_are_refused_not_ignored() {
+        for (flag, value) in [
+            ("--slo-tier", "mixed:0.05:0.3"),
+            ("--autoscale", "min=1,max=4"),
+            ("--trace", "uniform"),
+            ("--cluster-fault-plan", "crash=0@1"),
+            ("--hedge", "0.5"),
+        ] {
+            let err = cluster_args(&argv(&[flag, value])).unwrap_err();
+            assert!(
+                err.contains(flag.trim_start_matches('-')) && err.contains("--replicas"),
+                "{flag}: {err}"
+            );
+        }
+        assert!(cluster_args(&argv(&[])).expect("no fleet flags").is_none());
+    }
+
+    #[test]
+    fn malformed_cluster_fault_plan_names_the_bad_field() {
+        let cases = [
+            ("crash=zz@1", "crash"),
+            ("crash=0", "crash"),
+            ("partition=0@5..2", "partition"),
+            ("partition=0@oops", "partition"),
+            ("slow=0x0", "slow"),
+            ("probe=nope", "probe"),
+            ("explode=1", "explode"),
+        ];
+        for (spec, field) in cases {
+            let err = cluster_args(&argv(&["--replicas", "2", "--cluster-fault-plan", spec]))
+                .unwrap_err();
+            assert!(err.contains(field), "spec `{spec}`: {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_pool_fault_plan_names_the_bad_field() {
+        let cases = [
+            ("transient=2", "transient"),
+            ("crash=0", "crash"),
+            ("slow=1xbad", "slow"),
+            ("retries=-1", "retries"),
+            ("bogus=1", "bogus"),
+        ];
+        for (spec, field) in cases {
+            let err = fault_arg(&argv(&["--fault-plan", spec])).unwrap_err();
+            assert!(err.contains(field), "spec `{spec}`: {err}");
+        }
+        assert!(!fault_arg(&argv(&[])).expect("inert default").is_active());
+    }
+
+    #[test]
+    fn malformed_autoscale_and_trace_name_the_bad_field() {
+        let err =
+            cluster_args(&argv(&["--replicas", "2", "--autoscale", "min=3,max=2"])).unwrap_err();
+        assert!(err.contains("max"), "{err}");
+        let err =
+            cluster_args(&argv(&["--replicas", "2", "--autoscale", "ceiling=9"])).unwrap_err();
+        assert!(err.contains("ceiling"), "{err}");
+        let err = cluster_args(&argv(&["--replicas", "2", "--trace", "flash:bad"])).unwrap_err();
+        assert!(err.contains("flash:bad"), "{err}");
+        let err = cluster_args(&argv(&["--replicas", "2", "--trace", "diurnal:60:x"])).unwrap_err();
+        assert!(err.contains('x'), "{err}");
+    }
+
+    #[test]
+    fn hedge_fraction_outside_unit_interval_is_refused() {
+        for bad in ["1.5", "-0.1"] {
+            let err = cluster_args(&argv(&["--replicas", "2", "--hedge", bad])).unwrap_err();
+            assert!(err.contains("--hedge") && err.contains(bad), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn well_formed_fleet_flags_parse_and_compose() {
+        let fleet = cluster_args(&argv(&[
+            "--replicas",
+            "3",
+            "--cluster-fault-plan",
+            "probe=0.05,crash=0@0.5,partition=1@1..2,slow=2x3",
+            "--hedge",
+            "0.3",
+            "--fault-plan",
+            "seed=9,transient=0.01,retries=2,backoff=0.0001",
+        ]))
+        .expect("valid spec")
+        .expect("fleet mode");
+        assert_eq!(fleet.replicas, 3);
+        assert!(fleet.faults.is_active());
+        assert_eq!(fleet.faults.crashes.len(), 1);
+        assert_eq!(fleet.faults.partitions.len(), 1);
+        assert!((fleet.hedge_fraction - 0.3).abs() < 1e-12);
+        // The pool-level plan composes: it is parsed independently and
+        // applied to each replica identically.
+        let pool = fault_arg(&argv(&["--fault-plan", "seed=9,transient=0.01"]))
+            .expect("valid pool plan");
+        assert!(pool.is_active());
+    }
 }

@@ -24,9 +24,12 @@
 //! `deadline_s` marks a request interactive (the value is its TTFT
 //! budget), and on the fleet path the cluster front-end may shed it at
 //! admission with an error frame mentioning `shed`. The fleet's
-//! `metrics` frame carries the per-tier counters plus `replicas`,
-//! `active_replicas`, and a `replica_pools` array of per-replica pool
-//! gauges.
+//! `metrics` frame carries the per-tier counters and fault rollups
+//! (`replica_crashes`, `partitions`, `streams_failed_over`,
+//! `hedges_issued`, `hedges_won`) plus `replicas`, `active_replicas`,
+//! a `replica_health` boolean array (false = ejected by the fault
+//! plan's health state machine), and a `replica_pools` array of
+//! per-replica pool gauges.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -165,6 +168,16 @@ fn handle_conn(stream: TcpStream, served: Served) {
                             // the serving gauges on each replica.
                             o.insert("replicas", cluster.replica_count().into());
                             o.insert("active_replicas", cluster.active_replicas().into());
+                            o.insert(
+                                "replica_health",
+                                Json::Arr(
+                                    cluster
+                                        .replica_health()
+                                        .into_iter()
+                                        .map(Json::from)
+                                        .collect(),
+                                ),
+                            );
                             o.insert(
                                 "replica_pools",
                                 Json::Arr(
@@ -569,6 +582,11 @@ mod tests {
         let m = c.metrics().unwrap();
         assert_eq!(m.get("replicas").as_u64(), Some(2));
         assert_eq!(m.get("active_replicas").as_u64(), Some(2));
+        let health = m.get("replica_health").as_arr().expect("replica_health");
+        assert_eq!(health.len(), 2);
+        assert!(health.iter().all(|h| h.as_bool() == Some(true)));
+        assert_eq!(m.get("replica_crashes").as_u64(), Some(0));
+        assert_eq!(m.get("hedges_issued").as_u64(), Some(0));
         assert_eq!(m.get("tier_batch_submitted").as_u64(), Some(1));
         assert_eq!(m.get("tier_batch_done").as_u64(), Some(1));
         assert_eq!(m.get("tier_interactive_submitted").as_u64(), Some(0));

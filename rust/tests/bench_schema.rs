@@ -190,6 +190,20 @@ fn bench_cluster_schema_is_pinned() {
             "autoscale_summary.peak_replicas",
             "autoscale_summary.scale_events",
             "autoscale_summary.wall_s",
+            "chaos_summary",
+            "chaos_summary.trace",
+            "chaos_summary.replicas",
+            "chaos_summary.n_requests",
+            "chaos_summary.completion",
+            "chaos_summary.end_kv_blocks_in_use",
+            "chaos_summary.streams_identical_fault_on_off",
+            "chaos_summary.replica_crashes",
+            "chaos_summary.partitions",
+            "chaos_summary.streams_failed_over",
+            "chaos_summary.hedges_issued",
+            "chaos_summary.hedges_won",
+            "chaos_summary.threaded_completed",
+            "chaos_summary.threaded_failed",
             "cells",
         ],
         &["note"],

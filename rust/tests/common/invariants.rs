@@ -33,14 +33,17 @@ pub fn well_formed(r: &VirtualReport) -> Result<(), String> {
         ));
     }
     let served = r.records.iter().filter(|rec| !rec.tokens.is_empty()).count();
-    if served + r.rejected + r.shed_expired + r.shed_livelock + r.failed < r.records.len()
+    if served + r.rejected + r.shed_expired + r.shed_livelock + r.failed + r.orphaned
+        < r.records.len()
     {
         return Err(format!(
-            "lost requests: served {served} + rejected {} + shed {}+{} + failed {} < {}",
+            "lost requests: served {served} + rejected {} + shed {}+{} + failed {} \
+             + orphaned {} < {}",
             r.rejected,
             r.shed_expired,
             r.shed_livelock,
             r.failed,
+            r.orphaned,
             r.records.len()
         ));
     }
@@ -262,6 +265,77 @@ pub fn cluster_well_formed(r: &ClusterReport) -> Result<(), String> {
             "attained {} > completed {}",
             r.attained_interactive, r.completed_interactive
         ));
+    }
+    Ok(())
+}
+
+/// Exactly-once delivery under failover (contract point 3 at the fleet
+/// tier): every record's delivery times are monotonic (a reordered pump
+/// would interleave the old and new lanes), and every completed stream
+/// EQUALS its rid-matched baseline record — a resumption that restarts
+/// one token early re-delivers the boundary token, which shows up here
+/// as a replayed prefix and is named as a duplicate rather than folded
+/// into a generic stream mismatch.
+pub fn no_duplicate_or_reordered_tokens(
+    fleet: &ClusterReport,
+    baseline: &VirtualReport,
+) -> Result<(), String> {
+    if fleet.records.len() != baseline.records.len() {
+        return Err(format!(
+            "record counts differ: fleet {} vs baseline {}",
+            fleet.records.len(),
+            baseline.records.len()
+        ));
+    }
+    for (f, b) in fleet.records.iter().zip(&baseline.records) {
+        if f.token_times.windows(2).any(|w| w[0] > w[1]) {
+            return Err(format!(
+                "request {}: token delivery times go backwards (reordered streams)",
+                f.request_id
+            ));
+        }
+        if !f.completed() || b.tokens.is_empty() {
+            continue;
+        }
+        if f.tokens.len() > b.tokens.len() && f.tokens[..b.tokens.len()] == b.tokens[..] {
+            return Err(format!(
+                "request {}: {} duplicate token(s) delivered past the {}-token stream",
+                f.request_id,
+                f.tokens.len() - b.tokens.len(),
+                b.tokens.len()
+            ));
+        }
+        if f.tokens != b.tokens {
+            return Err(format!(
+                "request {}: stream diverges from the fault-free baseline",
+                f.request_id
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Named fleet KV-leak gate for chaos tests: zero blocks in use on the
+/// fleet aggregate AND on every replica individually after drain — a
+/// crashed replica's pager must be released by the halt teardown, a
+/// partitioned one by the post-thaw drain. Naming the leaking replica
+/// turns "some block leaked somewhere" into a one-line diagnosis.
+pub fn fleet_kv_clean(r: &ClusterReport) -> Result<(), String> {
+    if r.end_kv_blocks_in_use != 0 {
+        return Err(format!(
+            "fleet KV leak: {} blocks in use after drain",
+            r.end_kv_blocks_in_use
+        ));
+    }
+    for (i, vr) in r.replicas.iter().enumerate() {
+        if let Some(vr) = vr {
+            if vr.end_kv_blocks_in_use != 0 {
+                return Err(format!(
+                    "replica {i} leaked {} KV blocks after drain",
+                    vr.end_kv_blocks_in_use
+                ));
+            }
+        }
     }
     Ok(())
 }

@@ -136,6 +136,11 @@ fn metrics_op_schema_is_complete_across_pools() {
         "tier_batch_submitted",
         "tier_batch_shed",
         "tier_batch_done",
+        "replica_crashes",
+        "partitions",
+        "streams_failed_over",
+        "hedges_issued",
+        "hedges_won",
     ];
     for field in aggregate {
         assert!(

@@ -11,17 +11,23 @@
 //! * shed happens at admission or never: a shed request has zero
 //!   tokens (no mid-stream drops);
 //! * the threaded dispatcher's streams match the virtual fleet's,
-//!   request for request, because both share one front-end core.
+//!   request for request, because both share one front-end core;
+//! * chaos: replica crashes, partitions, hedged duplicates, and the
+//!   pool-level fault plan applied per replica leave every completed
+//!   stream bit-identical to the fault-free run, deliver each token
+//!   exactly once, leak zero KV blocks fleet-wide, and recover
+//!   rerun-identically — on the virtual AND threaded paths.
 
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
     run_cluster_open_loop, run_virtual, run_virtual_cluster, run_virtual_cluster_plan,
     run_virtual_plan, ArrivalTrace, AutoscaleConfig, BackendFactory, Cluster,
-    ClusterConfig, ClusterWorkload, Coordinator, CoordinatorConfig, LenDist, Request,
+    ClusterConfig, ClusterFaultPlan, ClusterWorkload, Coordinator, CoordinatorConfig,
+    FaultPlan, LenDist, PartitionSpec, ReplicaCrashSpec, ReplicaSlowSpec, Request,
     SchedulerPolicy, StepModel, VirtualConfig, Workload,
 };
 use lpu::model::by_name;
-use lpu::util::proptest::quick;
+use lpu::util::proptest::{check, quick, Config};
 
 mod common;
 use common::invariants;
@@ -321,6 +327,289 @@ fn prop_cluster_slo_streams() {
             &cc.pool,
         )?;
         invariants::well_formed(&baseline)?;
+        invariants::cluster_streams_match_baseline(&fleet, &baseline)
+    });
+}
+
+/// Chaos acceptance, virtual path: a replica crash plus a partition in
+/// the middle of a flash crowd. Every request still completes, every
+/// completed stream is bit-identical to the fault-free single-replica
+/// baseline (exactly-once across the failover boundary), zero KV
+/// blocks leak on any replica, and the recovery replays bit-identically
+/// on a rerun.
+#[test]
+fn virtual_chaos_crash_and_partition_preserve_streams() {
+    let wl = cwl(
+        3000.0,
+        60,
+        0.5,
+        1000.0, // generous: chaos must not hide behind shedding
+        ArrivalTrace::FlashCrowd { at_s: 0.01, dur_s: 0.1, magnification: 10.0 },
+        33,
+    );
+    let mut cc = ClusterConfig::new(
+        3,
+        VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model()),
+    );
+    cc.faults =
+        ClusterFaultPlan::parse("probe=0.05,crash=0@0.02,partition=1@0.05..0.4").unwrap();
+
+    let a = run_virtual_cluster(&wl, &cc).unwrap();
+    let b = run_virtual_cluster(&wl, &cc).unwrap();
+    invariants::require(invariants::cluster_well_formed(&a));
+    invariants::require(invariants::fleet_kv_clean(&a));
+    invariants::require(invariants::rerun_deterministic(
+        a.replicas[2].as_ref().unwrap(),
+        b.replicas[2].as_ref().unwrap(),
+    ));
+    assert_eq!(a.records, b.records, "chaos recovery must replay bit-identically");
+
+    assert_eq!(a.replica_crashes, 1);
+    assert_eq!(a.partitions, 1);
+    assert!(a.streams_failed_over > 0, "crash mid-crowd must orphan live streams");
+    assert_eq!(
+        a.records.iter().filter(|r| r.failed_over).count(),
+        a.streams_failed_over,
+        "failover counter must agree with the per-record flags"
+    );
+    assert!(a.records.iter().all(|r| r.completed()), "chaos must not lose requests");
+
+    let baseline = run_virtual_plan(
+        &wl.base.model,
+        wl.base.vocab,
+        wl.base.rate,
+        strip_deadlines(&wl.generate()),
+        &cc.pool,
+    )
+    .unwrap();
+    invariants::require(invariants::no_duplicate_or_reordered_tokens(&a, &baseline));
+    invariants::require(invariants::cluster_streams_match_baseline(&a, &baseline));
+}
+
+/// Chaos acceptance, threaded path: a replica crash while live streams
+/// are in flight. The dispatcher re-homes the orphans with exactly-once
+/// token delivery — streams match the fault-free VIRTUAL baseline value
+/// for value — nothing fails, and reruns agree stream for stream
+/// (threaded timing counters are wall-clock-dependent; token values are
+/// not).
+#[test]
+fn threaded_chaos_failover_matches_fault_free_virtual() {
+    let wl = cwl(800.0, 24, 0.0, 0.0, ArrivalTrace::Uniform, 52);
+    let clean = ClusterConfig::new(
+        2,
+        VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model()),
+    );
+    let virt = run_virtual_cluster(&wl, &clean).unwrap();
+    invariants::require(invariants::cluster_well_formed(&virt));
+
+    let mut cc = clean;
+    cc.faults = ClusterFaultPlan::parse("crash=0@0.01").unwrap();
+    let run_live = || {
+        let cluster = Cluster::threaded(&cc, "opt-tiny", || {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                max_active_per_worker: 4,
+                policy: SchedulerPolicy::RoundRobin,
+                ..CoordinatorConfig::default()
+            });
+            c.add_pool("opt-tiny", 1, BackendFactory::sim("opt-tiny", 512));
+            c
+        })
+        .unwrap();
+        let r = run_cluster_open_loop(&cluster, &wl).unwrap();
+        cluster.shutdown();
+        r
+    };
+    let live1 = run_live();
+    let live2 = run_live();
+    assert_eq!(live1.failed, 0, "failover must leave no failed streams");
+    assert_eq!(live1.completed, 24);
+    assert_eq!(
+        live1.token_streams, live2.token_streams,
+        "threaded chaos recovery must be value-deterministic"
+    );
+    assert_eq!(virt.records.len(), live1.token_streams.len());
+    for (rec, stream) in virt.records.iter().zip(&live1.token_streams) {
+        assert_eq!(
+            &rec.tokens, stream,
+            "request {} diverges from the fault-free virtual run",
+            rec.request_id
+        );
+    }
+}
+
+/// Hedged interactive requests: a replica slowdown pushes interactive
+/// admissions past the hedge threshold, duplicates are issued — and
+/// change nothing about the token streams, KV accounting, or rerun
+/// determinism. Hedging is a latency feature, never a token feature.
+#[test]
+fn hedged_interactive_requests_leave_streams_identical() {
+    let wl = cwl(5000.0, 40, 1.0, 5.0, ArrivalTrace::Uniform, 61);
+    let mut base = ClusterConfig::new(
+        2,
+        VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model()),
+    );
+    base.faults = ClusterFaultPlan::parse("slow=0x8").unwrap();
+    let unhedged = run_virtual_cluster(&wl, &base).unwrap();
+
+    let mut cc = base;
+    cc.hedge_fraction = 0.01;
+    let a = run_virtual_cluster(&wl, &cc).unwrap();
+    let b = run_virtual_cluster(&wl, &cc).unwrap();
+    invariants::require(invariants::cluster_well_formed(&a));
+    invariants::require(invariants::fleet_kv_clean(&a));
+    assert_eq!(a.records, b.records, "hedged runs must rerun bit-identically");
+    assert!(a.hedges_issued > 0, "an 8x-slow replica must trigger hedges");
+    assert!(a.hedges_won <= a.hedges_issued);
+    assert_eq!(
+        a.records.iter().filter(|r| r.hedged).count(),
+        a.hedges_issued,
+        "hedge counter must agree with the per-record flags"
+    );
+    assert_eq!(a.records.len(), unhedged.records.len());
+    for (h, u) in a.records.iter().zip(&unhedged.records) {
+        assert_eq!(
+            h.tokens, u.tokens,
+            "request {}: hedging changed the stream",
+            h.request_id
+        );
+    }
+}
+
+/// `--fault-plan` composes with `--replicas`: the pool-level plan is
+/// applied to EACH replica identically (worker indices are per-replica,
+/// so `slow=0x…` slows worker 0 of every replica). Transient faults
+/// under the retry budget are fully masked — streams stay bit-identical
+/// to the fault-free baseline while the per-replica reports show the
+/// injections actually happened.
+#[test]
+fn pool_fault_plan_applies_per_replica_under_cluster() {
+    let wl = cwl(2000.0, 48, 0.5, 1000.0, ArrivalTrace::Uniform, 71);
+    let mut cc = ClusterConfig::new(
+        2,
+        VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model()),
+    );
+    cc.pool.faults =
+        FaultPlan::parse("seed=5,transient=0.05,retries=4,backoff=0.0001").unwrap();
+
+    let fleet = run_virtual_cluster(&wl, &cc).unwrap();
+    invariants::require(invariants::cluster_well_formed(&fleet));
+    invariants::require(invariants::fleet_kv_clean(&fleet));
+
+    let injected: u64 =
+        fleet.replicas.iter().flatten().map(|r| r.faults_injected).sum();
+    let retried: u64 = fleet.replicas.iter().flatten().map(|r| r.retries).sum();
+    assert!(injected > 0, "the pool plan must fire on the replicas");
+    assert!(retried > 0, "transient faults must be retried in place");
+
+    let baseline = run_virtual_plan(
+        &wl.base.model,
+        wl.base.vocab,
+        wl.base.rate,
+        strip_deadlines(&wl.generate()),
+        &ClusterConfig::new(2, VirtualConfig::new(
+            SchedulerPolicy::RoundRobin,
+            1,
+            4,
+            step_model(),
+        ))
+        .pool,
+    )
+    .unwrap();
+    invariants::require(invariants::cluster_streams_match_baseline(&fleet, &baseline));
+}
+
+/// Property `cluster-chaos-streams`: over random replica counts and
+/// random fault plans (crash, partition, slowdown — always leaving the
+/// last replica fault-free so the fleet survives), every request
+/// completes, streams are bit-identical to the fault-free baseline with
+/// exactly-once delivery, no replica leaks KV, and the recovery replays
+/// bit-identically.
+#[test]
+fn prop_cluster_chaos_streams() {
+    check("cluster-chaos-streams", Config { cases: 64, ..Config::default() }, |rng| {
+        let seed = rng.next_u64();
+        let n = rng.range(12, 33);
+        let rate = rng.range_f64(500.0, 4000.0);
+        let frac = rng.range_f64(0.0, 1.0);
+        let wl = cwl(rate, n, frac, 1000.0, ArrivalTrace::Uniform, seed);
+
+        let replicas = rng.range(2, 5);
+        let mut cc = ClusterConfig::new(
+            replicas,
+            VirtualConfig::new(
+                SchedulerPolicy::RoundRobin,
+                rng.range(1, 3),
+                rng.range(2, 7),
+                step_model(),
+            ),
+        );
+        // Random plan; replica indices stay in [0, replicas-1) so the
+        // LAST replica is never faulted — the fleet always has a
+        // routable survivor.
+        let mut faults = ClusterFaultPlan { probe_interval_s: 0.05, ..Default::default() };
+        if rng.bool(0.7) {
+            faults.crashes.push(ReplicaCrashSpec {
+                replica: rng.range(0, replicas - 1),
+                at_s: rng.range_f64(0.005, 0.06),
+            });
+        }
+        if rng.bool(0.7) {
+            let from_s = rng.range_f64(0.01, 0.08);
+            faults.partitions.push(PartitionSpec {
+                replica: rng.range(0, replicas - 1),
+                from_s,
+                until_s: from_s + rng.range_f64(0.1, 0.4),
+            });
+        }
+        if rng.bool(0.5) {
+            faults.slow.push(ReplicaSlowSpec {
+                replica: rng.range(0, replicas - 1),
+                factor: rng.range_f64(1.5, 6.0),
+            });
+        }
+        cc.faults = faults;
+        if rng.bool(0.3) {
+            cc.hedge_fraction = rng.range_f64(0.0, 0.5);
+        }
+
+        let plan = wl.generate();
+        let fleet = run_virtual_cluster_plan(
+            &wl.base.model,
+            wl.base.vocab,
+            rate,
+            plan.clone(),
+            &cc,
+        )?;
+        let rerun = run_virtual_cluster_plan(
+            &wl.base.model,
+            wl.base.vocab,
+            rate,
+            plan.clone(),
+            &cc,
+        )?;
+        invariants::cluster_well_formed(&fleet)?;
+        invariants::fleet_kv_clean(&fleet)?;
+        if fleet.records != rerun.records {
+            return Err("chaos recovery diverged between reruns".into());
+        }
+        if let Some(lost) = fleet.records.iter().find(|r| !r.completed()) {
+            return Err(format!(
+                "request {} lost under chaos (shed {}, tokens {})",
+                lost.request_id,
+                lost.shed,
+                lost.tokens.len()
+            ));
+        }
+
+        let baseline = run_virtual_plan(
+            &wl.base.model,
+            wl.base.vocab,
+            rate,
+            strip_deadlines(&plan),
+            &cc.pool,
+        )?;
+        invariants::well_formed(&baseline)?;
+        invariants::no_duplicate_or_reordered_tokens(&fleet, &baseline)?;
         invariants::cluster_streams_match_baseline(&fleet, &baseline)
     });
 }

@@ -57,9 +57,11 @@ step "serving bench (smoke) -> BENCH_serving.json"
 # Writes machine-readable results (tok/s, peak active, TTFT/TPOT p99 per
 # cell, both KV policies, the chunked-prefill interference cell, the
 # shared-prefix cache cell, the affinity-routing cell, the
-# oversubscribed host-KV-tier swap cell, and the fault-recovery cell —
+# oversubscribed host-KV-tier swap cell, the fault-recovery cell —
 # worker killed mid-run, 100% completion, zero leaked KV blocks,
-# bit-identical streams asserted on both paths — all sections run in
+# bit-identical streams asserted on both paths — and the
+# tracing-overhead cell (span recorder on vs off: identical streams,
+# wall gated at 1.05x) — all sections run in
 # smoke mode, assertions included) to ../BENCH_serving.json
 # so the perf trajectory is tracked in-repo. This fast-mode output IS
 # the committed baseline (deterministic per seed; the "fast" field
@@ -86,15 +88,33 @@ step "cluster SLO bench (smoke) -> BENCH_cluster.json"
 # mode. LPU_BENCH_CLUSTER_JSON=<path> redirects.
 LPU_BENCH_FAST=1 cargo bench --bench cluster_slo
 
+step "request-lifecycle trace smoke (loadtest --trace-out)"
+# End-to-end check of the span recorder + Perfetto exporter: a small
+# sim loadtest with --trace-out must (a) print the "trace-ok" marker —
+# the exporter self-validates before writing (well-formed document,
+# nonempty traceEvents, every flow id resolving to both endpoints, and
+# the attribution identity TTFT + decode == sum(components) on the
+# recorded timelines) — and (b) leave a loadable trace_events JSON on
+# disk. LPU_TRACE_SMOKE_JSON=<path> redirects the artifact.
+trace_json="${LPU_TRACE_SMOKE_JSON:-/tmp/lpu_trace_smoke.json}"
+rm -f "$trace_json"
+cargo run --release --quiet --bin lpu -- loadtest --model opt-tiny --backend sim \
+  --requests 40 --rates 200 --trace-out "$trace_json" | tee /tmp/lpu_trace_smoke.log
+grep -q 'trace-ok:' /tmp/lpu_trace_smoke.log || {
+  echo "error: loadtest did not report a validated trace export" >&2; exit 1; }
+grep -q '"traceEvents"' "$trace_json" || {
+  echo "error: $trace_json is not a Chrome/Perfetto trace_events document" >&2; exit 1; }
+
 step "bench JSON sanity (no null fields survive the benches)"
 # The committed files start life as hand-written placeholders with null
 # summary fields (authoring containers lack a Rust toolchain). A bench
 # run must replace every one of them with measured values — a null
 # surviving here means the emitter and the placeholder schema drifted,
 # or a summary field was never computed. The whole-file grep covers
-# every section, including the kv_tier swap cell and the fault_recovery
-# cell and their summaries (the nullable metrics-op gauges are a
-# server-side contract; bench JSON never emits null). Check the files
+# every section, including the kv_tier swap cell, the fault_recovery
+# cell, and the trace_overhead cell and their summaries (the nullable
+# metrics-op gauges are a server-side contract; bench JSON never emits
+# null — trace_overhead's streams_identical lands as a literal bool). Check the files
 # the benches actually wrote
 # (LPU_BENCH_JSON / LPU_BENCH_SCALING_JSON redirect them).
 for bench_json in "${LPU_BENCH_JSON:-../BENCH_serving.json}" \

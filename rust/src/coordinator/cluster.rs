@@ -69,6 +69,9 @@ use super::backend::StepModel;
 use super::faults::{ClusterFaultPlan, FleetFault, ReplicaHealth};
 use super::lane::ResumeState;
 use super::metrics::Metrics;
+use super::trace::{
+    AttributionSummary, RequestTimeline, SpanEvent, TraceEvent, Tracer, DEFAULT_TRACE_RING,
+};
 use super::workload::{
     run_virtual_plan, run_virtual_plan_jobs, LenDist, OrphanJob, PlanJob, PlanResume,
     PoolInterrupt, VirtualConfig, VirtualReport, Workload,
@@ -298,6 +301,12 @@ pub struct ClusterConfig {
     /// runner-up routable replica; the first usable stream wins and
     /// the loser is cancelled. 0 disables hedging.
     pub hedge_fraction: f64,
+    /// Request-lifecycle tracing (off by default, strictly
+    /// observational): every replica pool records [`RequestTimeline`]s
+    /// and the fleet stitches them — with SLO-shed, failover, and hedge
+    /// events — into [`ClusterReport::timelines`] plus per-tier
+    /// attribution summaries.
+    pub trace: bool,
 }
 
 impl ClusterConfig {
@@ -311,6 +320,7 @@ impl ClusterConfig {
             default_deadline_s: None,
             faults: ClusterFaultPlan::default(),
             hedge_fraction: 0.0,
+            trace: false,
         }
     }
 }
@@ -371,10 +381,20 @@ impl ArrivalTrace {
     }
 
     /// Parse `uniform | diurnal:<period_s>:<depth> | flash:<at_s>:<dur_s>:<mag>`.
+    ///
+    /// Naming hazard: `--trace` is the *arrival-trace shape* flag; the
+    /// Perfetto lifecycle exporter is `--trace-out FILE`. Every error
+    /// here points at the other flag so a mixed-up invocation
+    /// self-diagnoses.
     pub fn parse(s: &str) -> Result<ArrivalTrace, String> {
         let parts: Vec<&str> = s.split(':').collect();
         let f = |v: &str| -> Result<f64, String> {
-            let x: f64 = v.parse().map_err(|_| format!("--trace: bad number '{v}'"))?;
+            let x: f64 = v.parse().map_err(|_| {
+                format!(
+                    "--trace: bad number '{v}' (--trace is the arrival-trace \
+                     shape; for Perfetto span export use --trace-out FILE)"
+                )
+            })?;
             if !x.is_finite() {
                 return Err(format!("--trace: non-finite '{v}'"));
             }
@@ -390,7 +410,8 @@ impl ArrivalTrace {
             }),
             _ => Err(format!(
                 "--trace: want uniform | diurnal:<period_s>:<depth> | \
-                 flash:<at_s>:<dur_s>:<mag>, got '{s}'"
+                 flash:<at_s>:<dur_s>:<mag>, got '{s}' (--trace shapes arrival \
+                 intensity; for Perfetto span export use --trace-out FILE)"
             )),
         }
     }
@@ -784,6 +805,18 @@ pub struct ClusterReport {
     pub replica_timeline: Vec<(f64, usize)>,
     /// Peak simultaneously active replicas.
     pub peak_replicas: usize,
+    /// Request-lifecycle timelines, one per arrival in plan order
+    /// (empty unless [`ClusterConfig::trace`]): the winner replica's
+    /// pool timeline rebased to the cluster request id, stitched with
+    /// fleet-level routing/failover/hedge events; admission sheds get
+    /// a minimal `Submitted → Shed{slo_admission}` pair.
+    pub timelines: Vec<RequestTimeline>,
+    /// Interactive-tier latency attribution rollup (None unless
+    /// tracing is on).
+    pub attribution_interactive: Option<AttributionSummary>,
+    /// Batch-tier latency attribution rollup (None unless tracing is
+    /// on).
+    pub attribution_batch: Option<AttributionSummary>,
     /// Interactive arrivals offered.
     pub submitted_interactive: usize,
     /// Batch arrivals offered.
@@ -985,6 +1018,7 @@ pub fn run_virtual_cluster_plan(
     let mut interrupts: Vec<PoolInterrupt> = Vec::with_capacity(slots);
     for r in 0..slots {
         let mut p = cc.pool.clone();
+        p.trace |= cc.trace;
         let f = cc.faults.slow_factor(r);
         if f > 1.0 {
             p.step.weight_stream_s *= f;
@@ -1038,6 +1072,9 @@ pub fn run_virtual_cluster_plan(
     let mut dirty = vec![true; slots];
     let mut runs: Vec<Option<(VirtualReport, Vec<OrphanJob>)>> =
         (0..slots).map(|_| None).collect();
+    // Fleet-level failover edges, recorded for timeline stitching:
+    // (rid, event time, crashed source, salvage target).
+    let mut fleet_failovers: Vec<(usize, f64, usize, usize)> = Vec::new();
     for (te, fault) in cc.faults.fault_events() {
         let src = match fault {
             FleetFault::Crash { replica } | FleetFault::Eject { replica } => replica,
@@ -1146,6 +1183,9 @@ pub fn run_virtual_cluster_plan(
             canonical[rid] = s;
             failed_over[rid] = true;
             streams_failed_over += 1;
+            if cc.trace {
+                fleet_failovers.push((rid, job.at_s, src, tr));
+            }
             insert_job(&mut jobs[tr], &mut hops[tr], job, Hop { rid, serial: s, hedge: false });
             dirty[tr] = true;
         }
@@ -1174,23 +1214,27 @@ pub fn run_virtual_cluster_plan(
         }
     }
     let mut hedges_won = 0usize;
+    // Winner hop per routed rid (replica, local index), kept for trace
+    // timeline stitching after the merge.
+    let mut winner_hop: Vec<Option<(usize, usize)>> = vec![None; n];
     for rid in 0..n {
         if records[rid].is_some() {
             continue; // shed at admission
         }
         let (pr, plocal) = primary[rid].expect("every routed arrival keeps a canonical hop");
         let prec = &runs[pr].as_ref().expect("canonical hop was simulated").0.records[plocal];
-        let mut winner = (pr, prec);
+        let mut winner = (pr, plocal, prec);
         if let Some((hr, hlocal)) = hedge_rec[rid] {
             let hrec = &runs[hr].as_ref().expect("hedge hop was simulated").0.records[hlocal];
             let h_done = !hrec.tokens.is_empty();
             let p_done = !prec.tokens.is_empty();
             if h_done && (!p_done || hrec.first_token_s < prec.first_token_s) {
-                winner = (hr, hrec);
+                winner = (hr, hlocal, hrec);
                 hedges_won += 1;
             }
         }
-        let (wr, rec) = winner;
+        let (wr, wlocal, rec) = winner;
+        winner_hop[rid] = Some((wr, wlocal));
         let (tier, deadline_s) = tiers[rid];
         records[rid] = Some(ClusterRecord {
             request_id: rid,
@@ -1207,6 +1251,77 @@ pub fn run_virtual_cluster_plan(
             hedged: hedge_serial[rid].is_some(),
         });
     }
+    // Trace stitching: every arrival gets a cluster-level timeline.
+    // Routed requests clone their winner hop's pool timeline (rebased
+    // to the cluster rid) and splice in the fleet's own decisions —
+    // replica routing, crash/eject failovers, hedge wins — by
+    // timestamp; admission sheds get a minimal Submitted→Shed pair.
+    let mut timelines: Vec<RequestTimeline> = Vec::new();
+    let mut att_interactive = AttributionSummary::new();
+    let mut att_batch = AttributionSummary::new();
+    if cc.trace {
+        for rid in 0..n {
+            let rec = records[rid].as_ref().expect("every arrival recorded");
+            let deadline_s = rec.deadline_s.unwrap_or(f64::INFINITY);
+            let mut tl = RequestTimeline::new(rid as u64);
+            match winner_hop[rid] {
+                None => {
+                    tl.push(rec.arrival_s, SpanEvent::Submitted { deadline_s });
+                    tl.push(rec.arrival_s, SpanEvent::Shed { reason: "slo_admission".into() });
+                }
+                Some((wr, wlocal)) => {
+                    let pool_tls =
+                        &runs[wr].as_ref().expect("winner hop was simulated").0.timelines;
+                    match pool_tls.iter().find(|t| t.request_id == wlocal as u64) {
+                        Some(pt) => {
+                            tl.events = pt.events.clone();
+                            // The fleet routed before the pool saw the
+                            // job: a replica-level Routed right after
+                            // the pool's Submitted.
+                            let t0 = tl.events[0].t_s;
+                            let ev = SpanEvent::Routed { worker: wr };
+                            tl.events.insert(1, TraceEvent { t_s: t0, ev });
+                        }
+                        None => {
+                            // The stream was lost on a halted pool (no
+                            // terminal pool timeline survives).
+                            tl.push(rec.arrival_s, SpanEvent::Submitted { deadline_s });
+                            tl.push(rec.arrival_s, SpanEvent::Routed { worker: wr });
+                            tl.push(
+                                rec.done_s.max(rec.arrival_s),
+                                SpanEvent::Failed { cause: "lost_in_failover".into() },
+                            );
+                        }
+                    }
+                    for &(frid, t_ev, from, to) in &fleet_failovers {
+                        if frid == rid {
+                            insert_fleet_event(
+                                &mut tl,
+                                t_ev,
+                                SpanEvent::Failover { from, to },
+                            );
+                        }
+                    }
+                    if rec.hedged && rec.completed() {
+                        insert_fleet_event(
+                            &mut tl,
+                            rec.first_token_s,
+                            SpanEvent::Hedged { winner: wr },
+                        );
+                    }
+                }
+            }
+            tl.seal();
+            if let Some(a) = &tl.attribution {
+                match rec.tier {
+                    SloTier::Interactive => att_interactive.add(a),
+                    SloTier::Batch => att_batch.add(a),
+                }
+            }
+            timelines.push(tl);
+        }
+    }
+
     let replicas: Vec<Option<VirtualReport>> =
         runs.into_iter().map(|r| r.map(|(rep, _)| rep)).collect();
 
@@ -1244,9 +1359,23 @@ pub fn run_virtual_cluster_plan(
         hedges_won,
         replica_timeline: fe.timeline.clone(),
         peak_replicas,
+        timelines,
+        attribution_interactive: cc.trace.then_some(att_interactive),
+        attribution_batch: cc.trace.then_some(att_batch),
         replicas,
         records,
     })
+}
+
+/// Splice a fleet-level event into a pool timeline by timestamp: after
+/// every existing event at the same or earlier time (so the leading
+/// `Submitted` stays first), and always before the terminal event.
+fn insert_fleet_event(tl: &mut RequestTimeline, t_s: f64, ev: SpanEvent) {
+    let cut = tl.events.len().saturating_sub(1);
+    let pos = tl.events[..cut]
+        .partition_point(|e| e.t_s <= t_s)
+        .clamp(1.min(cut), cut);
+    tl.events.insert(pos, TraceEvent { t_s, ev });
 }
 
 /// Outcome of a threaded cluster submission.
@@ -1291,6 +1420,15 @@ pub struct Cluster {
     /// counters plus fault rollups (pool-level serving metrics live on
     /// each replica).
     pub metrics: Arc<Metrics>,
+    /// Fleet-level flight recorder (enabled by [`ClusterConfig::trace`]):
+    /// SLO sheds always get a timeline; full stream lifecycles are
+    /// recorded when the pump wrapper is active (fault plan or hedging).
+    /// The unwrapped fast path hands out raw replica handles, so its
+    /// per-request detail lives on each replica coordinator's tracer.
+    pub tracer: Arc<Tracer>,
+    /// Fleet-assigned trace ids (replica-local request ids can collide
+    /// across replicas).
+    trace_ids: AtomicU64,
 }
 
 /// Dispatcher-side fault bookkeeping (the threaded analog of the
@@ -1322,6 +1460,19 @@ struct StreamShared {
     /// client disconnect and releases the lane's KV).
     switch: Mutex<Option<RequestHandle>>,
     done: AtomicBool,
+    /// Fleet tracer hookup: `(tracer, fleet trace id, fleet epoch)`.
+    /// None when tracing is off.
+    trace: Option<(Arc<Tracer>, u64, Instant)>,
+}
+
+impl StreamShared {
+    /// Record a fleet-level trace event for this stream, stamped on
+    /// the fleet's wall clock (no-op without a tracer hookup).
+    fn trace_ev(&self, ev: SpanEvent) {
+        if let Some((tracer, fid, epoch)) = &self.trace {
+            tracer.record(*fid, epoch.elapsed().as_secs_f64(), ev);
+        }
+    }
 }
 
 impl Cluster {
@@ -1358,6 +1509,8 @@ impl Cluster {
             streams: Arc::new(Mutex::new(HashMap::new())),
             next_stream: AtomicU64::new(0),
             metrics: Arc::new(Metrics::new()),
+            tracer: Arc::new(Tracer::new(cc.trace, DEFAULT_TRACE_RING)),
+            trace_ids: AtomicU64::new(0),
         })
     }
 
@@ -1400,16 +1553,39 @@ impl Cluster {
             Admission::Shed { tier } => {
                 self.metrics.on_tier_submit(tier);
                 self.metrics.on_tier_shed(tier);
+                if self.tracer.enabled() {
+                    let fid = self.trace_ids.fetch_add(1, Ordering::Relaxed);
+                    let now = self.epoch.elapsed().as_secs_f64();
+                    let deadline_s = request.deadline_s.unwrap_or(f64::INFINITY);
+                    self.tracer.record(fid, now, SpanEvent::Submitted { deadline_s });
+                    self.tracer.record(
+                        fid,
+                        now,
+                        SpanEvent::Shed { reason: "slo_admission".into() },
+                    );
+                }
                 Ok(Submitted::Shed { tier })
             }
             Admission::Route { replica, tier, hedge } => {
                 self.metrics.on_tier_submit(tier);
                 if !self.wraps_streams() {
                     // No fault plan, no hedging: the raw replica handle
-                    // is the stream — zero added machinery.
+                    // is the stream — zero added machinery (fleet-level
+                    // tracing rides on the pump wrapper; per-request
+                    // detail lives on the replica's own tracer).
                     let handle = self.replicas[replica].submit(request)?;
                     return Ok(Submitted::Handle { replica, tier, handle });
                 }
+                let trace_hook = if self.tracer.enabled() {
+                    let fid = self.trace_ids.fetch_add(1, Ordering::Relaxed);
+                    let now = self.epoch.elapsed().as_secs_f64();
+                    let deadline_s = request.deadline_s.unwrap_or(f64::INFINITY);
+                    self.tracer.record(fid, now, SpanEvent::Submitted { deadline_s });
+                    self.tracer.record(fid, now, SpanEvent::Routed { worker: replica });
+                    Some((Arc::clone(&self.tracer), fid, self.epoch))
+                } else {
+                    None
+                };
                 let primary = self.replicas[replica].submit(request.clone())?;
                 let hedged = match hedge {
                     Some(h) => {
@@ -1418,7 +1594,7 @@ impl Cluster {
                     }
                     None => None,
                 };
-                let handle = self.pump(replica, request, primary, hedged)?;
+                let handle = self.pump(replica, request, primary, hedged, trace_hook)?;
                 Ok(Submitted::Handle { replica, tier, handle })
             }
         }
@@ -1511,6 +1687,7 @@ impl Cluster {
                     *sh.replica.lock().unwrap() = tr;
                     *sh.switch.lock().unwrap() = Some(h);
                     self.metrics.on_stream_failed_over();
+                    sh.trace_ev(SpanEvent::Failover { from: src, to: tr });
                 }
             }
         }
@@ -1525,6 +1702,7 @@ impl Cluster {
         request: Request,
         primary: RequestHandle,
         hedge: Option<(usize, RequestHandle)>,
+        trace: Option<(Arc<Tracer>, u64, Instant)>,
     ) -> Result<RequestHandle, String> {
         let (tx, rx) = std::sync::mpsc::channel();
         let request_id = primary.request_id;
@@ -1534,6 +1712,7 @@ impl Cluster {
             delivered: Mutex::new(Vec::new()),
             switch: Mutex::new(None),
             done: AtomicBool::new(false),
+            trace,
         });
         let sid = self.next_stream.fetch_add(1, Ordering::Relaxed);
         self.streams.lock().unwrap().insert(sid, Arc::clone(&shared));
@@ -1600,6 +1779,7 @@ fn pump_stream(
                     metrics.on_hedge_won();
                     let (hr, h) = hedge.take().expect("hedge present");
                     *shared.replica.lock().unwrap() = hr;
+                    shared.trace_ev(SpanEvent::Hedged { winner: hr });
                     upstream = h;
                     if !deliver(shared, &client, ev) {
                         return;
@@ -1621,9 +1801,11 @@ fn pump_stream(
                     // The primary collapsed before the race settled —
                     // promote the hedge.
                     *shared.replica.lock().unwrap() = hr;
+                    shared.trace_ev(SpanEvent::Hedged { winner: hr });
                     upstream = h;
                     continue;
                 }
+                shared.trace_ev(SpanEvent::Failed { cause: message.clone() });
                 let _ = client.send(TokenEvent::Error { request_id, message });
                 return;
             }
@@ -1642,9 +1824,13 @@ fn pump_stream(
                 }
                 if let Some((hr, h)) = hedge.take() {
                     *shared.replica.lock().unwrap() = hr;
+                    shared.trace_ev(SpanEvent::Hedged { winner: hr });
                     upstream = h;
                     continue;
                 }
+                shared.trace_ev(SpanEvent::Failed {
+                    cause: "replica stream closed mid-flight".into(),
+                });
                 let _ = client.send(TokenEvent::Error {
                     request_id: upstream.request_id,
                     message: "replica stream closed mid-flight".into(),
@@ -1664,16 +1850,19 @@ fn deliver(shared: &StreamShared, client: &Sender<TokenEvent>, ev: TokenEvent) -
             let mut d = shared.delivered.lock().unwrap();
             if index == d.len() {
                 d.push(token);
+                shared.trace_ev(SpanEvent::DecodeStep);
                 let _ = client.send(TokenEvent::Token { request_id, index, token });
             }
             true
         }
         done @ TokenEvent::Done { .. } => {
+            shared.trace_ev(SpanEvent::Finished);
             let _ = client.send(done);
             false
         }
-        err @ TokenEvent::Error { .. } => {
-            let _ = client.send(err);
+        TokenEvent::Error { request_id, message } => {
+            shared.trace_ev(SpanEvent::Failed { cause: message.clone() });
+            let _ = client.send(TokenEvent::Error { request_id, message });
             false
         }
     }

@@ -41,6 +41,19 @@
 //! Spans change only *timing*: token streams are a pure function of
 //! (model, prompt, sampler), so chunked and unchunked runs emit
 //! bit-identical streams per seed (property-tested).
+//!
+//! Trace observation points ([`super::trace`]): because both drivers
+//! run this one state machine, every lifecycle event hangs off a lane
+//! transition both paths share — `Admitted` when [`Lane::admitted`]
+//! holdings are taken, `PrefillSpan{len, cached_skip:`
+//! [`Lane::prefix_hit`]`}` per span feed while [`Lane::in_prefill`],
+//! `DecodeStep` per absorbed decode token, `Preempted` on
+//! [`Lane::into_resume`], `Restored`/`Recomputed` from the
+//! readmission holdings' `restored` count, and `Finished` on
+//! [`Lane::into_finished`]. That is what makes the per-seed event
+//! *sequence* bit-identical threaded vs. virtual (pinned by
+//! `trace_event_sequences_match_across_paths`): the recorders only
+//! observe transitions; they never add lane state of their own.
 
 use crate::numerics::Sampler;
 

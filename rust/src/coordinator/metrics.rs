@@ -17,7 +17,7 @@ use std::time::Duration;
 use super::cluster::SloTier;
 use super::scheduler::{HostTierStats, PrefixStats};
 use crate::util::json::{obj, Json};
-use crate::util::stats::{percentile, Welford};
+use crate::util::stats::{percentile, LogHistogram, Welford};
 
 /// Max retained samples per latency series; once full the reservoir
 /// overwrites in arrival order (sliding window over recent traffic).
@@ -79,6 +79,12 @@ struct Inner {
     ttft: Series,
     token_latency: Series,
     request_latency: Welford,
+    /// Full TTFT distribution (log-spaced bounds + counts). Unlike the
+    /// bounded reservoir above, the histogram never forgets: counts are
+    /// exact over the pool's lifetime, so a scraper can diff snapshots.
+    ttft_hist: LogHistogram,
+    /// Full per-token-latency distribution, same contract.
+    tpot_hist: LogHistogram,
 }
 
 /// Thread-safe metrics hub shared by all workers.
@@ -269,6 +275,10 @@ pub struct Snapshot {
     pub tpot: Percentiles,
     pub p_token_latency_max_s: f64,
     pub mean_request_latency_s: f64,
+    /// Full TTFT distribution (exact lifetime counts, not a reservoir).
+    pub ttft_hist: LogHistogram,
+    /// Full per-token-latency distribution, same contract.
+    pub tpot_hist: LogHistogram,
 }
 
 impl Default for Metrics {
@@ -335,12 +345,16 @@ impl Metrics {
     }
 
     pub fn on_first_token(&self, since_submit: Duration) {
-        self.inner.lock().unwrap().ttft.add(since_submit.as_secs_f64());
+        let mut inner = self.inner.lock().unwrap();
+        inner.ttft.add(since_submit.as_secs_f64());
+        inner.ttft_hist.add(since_submit.as_secs_f64());
     }
 
     pub fn on_token(&self, step: Duration) {
         self.tokens_out.fetch_add(1, Ordering::Relaxed);
-        self.inner.lock().unwrap().token_latency.add(step.as_secs_f64());
+        let mut inner = self.inner.lock().unwrap();
+        inner.token_latency.add(step.as_secs_f64());
+        inner.tpot_hist.add(step.as_secs_f64());
     }
 
     /// One fused batched decode step advanced `lanes` slots.
@@ -519,7 +533,18 @@ impl Metrics {
         // Copy everything out under the lock, then do the O(n log n)
         // percentile work after dropping it so workers never wait on a
         // metrics reader mid-step.
-        let (queue_delay_mean, ttft_mean, ttft_samples, tok_mean, tok_count, tok_max, tok_samples, req_mean) = {
+        let (
+            queue_delay_mean,
+            ttft_mean,
+            ttft_samples,
+            tok_mean,
+            tok_count,
+            tok_max,
+            tok_samples,
+            req_mean,
+            ttft_hist,
+            tpot_hist,
+        ) = {
             let inner = self.inner.lock().unwrap();
             (
                 zero_nan(inner.queue_delay.mean()),
@@ -530,6 +555,8 @@ impl Metrics {
                 inner.token_latency.welford.max(),
                 inner.token_latency.samples.clone(),
                 zero_nan(inner.request_latency.mean()),
+                inner.ttft_hist.clone(),
+                inner.tpot_hist.clone(),
             )
         };
         let steps = self.batch_steps.load(Ordering::Relaxed);
@@ -599,6 +626,8 @@ impl Metrics {
             tpot: percentiles_of(tok_samples),
             p_token_latency_max_s: if tok_count == 0 { 0.0 } else { tok_max },
             mean_request_latency_s: req_mean,
+            ttft_hist,
+            tpot_hist,
         }
     }
 }
@@ -818,10 +847,12 @@ impl Snapshot {
             ("ttft_p50_s", self.ttft.p50.into()),
             ("ttft_p95_s", self.ttft.p95.into()),
             ("ttft_p99_s", self.ttft.p99.into()),
+            ("ttft_hist", self.ttft_hist.to_json()),
             ("mean_token_latency_s", self.mean_token_latency_s.into()),
             ("tpot_p50_s", self.tpot.p50.into()),
             ("tpot_p95_s", self.tpot.p95.into()),
             ("tpot_p99_s", self.tpot.p99.into()),
+            ("tpot_hist", self.tpot_hist.to_json()),
             ("max_token_latency_s", self.p_token_latency_max_s.into()),
             ("mean_request_latency_s", self.mean_request_latency_s.into()),
         ])
@@ -861,6 +892,28 @@ mod tests {
         assert_eq!(s.ttft, Percentiles::default());
         assert_eq!(s.tpot, Percentiles::default());
         assert_eq!(s.mean_batch_size, 0.0);
+    }
+
+    #[test]
+    fn latency_histograms_accumulate_and_export() {
+        let m = Metrics::new();
+        m.on_first_token(Duration::from_millis(8));
+        m.on_token(Duration::from_millis(2));
+        m.on_token(Duration::from_millis(4));
+        let s = m.snapshot();
+        assert_eq!(s.ttft_hist.total(), 1);
+        assert_eq!(s.tpot_hist.total(), 2);
+        let j = s.to_json();
+        let ttft_counts: u64 = j
+            .get("ttft_hist")
+            .get("counts")
+            .as_arr()
+            .expect("counts array")
+            .iter()
+            .map(|c| c.as_u64().unwrap())
+            .sum();
+        assert_eq!(ttft_counts, 1);
+        assert_eq!(j.get("tpot_hist").get("bounds_s").as_arr().expect("bounds").len(), 37);
     }
 
     #[test]

@@ -88,6 +88,7 @@ pub mod lane;
 pub mod metrics;
 pub mod router;
 pub mod scheduler;
+pub mod trace;
 pub mod workload;
 
 use std::collections::HashMap;
@@ -120,6 +121,10 @@ pub use scheduler::{
     HostTierConfig, HostTierStats, KvBlockId, KvBudget, KvPager, KvPolicy, KvTier,
     PrefixCacheConfig, PrefixEvent, PrefixStats, Scheduler, SchedulerPolicy,
     DEFAULT_KV_BLOCK_TOKENS,
+};
+pub use trace::{
+    perfetto_json, validate_perfetto, Attribution, AttributionSummary, RequestTimeline,
+    SpanEvent, TraceDigest, TraceEvent, Tracer, DEFAULT_TRACE_RING,
 };
 pub use workload::{
     run_open_loop, run_virtual, run_virtual_plan, run_virtual_plan_jobs, LenDist, LoadReport,
@@ -346,6 +351,14 @@ pub struct CoordinatorConfig {
     /// virtual harness accepts the same plan ([`VirtualConfig`]) so
     /// recovery paths are testable off-thread.
     pub faults: FaultPlan,
+    /// Record per-request lifecycle timelines into the coordinator's
+    /// flight recorder ([`trace::Tracer`]). Off by default; strictly
+    /// observational — streams, counters, and metrics are identical
+    /// either way (the trace-noninterference property).
+    pub trace: bool,
+    /// Flight-recorder capacity: sealed timelines kept before the
+    /// oldest rotates out ([`DEFAULT_TRACE_RING`] by default).
+    pub trace_ring: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -363,6 +376,8 @@ impl Default for CoordinatorConfig {
             spill_after_s: DEFAULT_SPILL_AFTER_S,
             host_tier: HostTierConfig::off(),
             faults: FaultPlan::default(),
+            trace: false,
+            trace_ring: DEFAULT_TRACE_RING,
         }
     }
 }
@@ -389,6 +404,8 @@ impl CoordinatorConfig {
             spill_after_s: DEFAULT_SPILL_AFTER_S,
             host_tier: HostTierConfig::off(),
             faults: FaultPlan::default(),
+            trace: false,
+            trace_ring: DEFAULT_TRACE_RING,
         }
     }
 }
@@ -400,16 +417,22 @@ pub struct Coordinator {
     next_id: AtomicU64,
     /// Shared serving metrics (snapshot for the `/metrics`-style op).
     pub metrics: Arc<Metrics>,
+    /// Request-lifecycle flight recorder (no-op unless
+    /// [`CoordinatorConfig::trace`]); drained by the server's `trace`
+    /// op.
+    pub tracer: Arc<trace::Tracer>,
 }
 
 impl Coordinator {
     /// Build a coordinator with no pools registered yet.
     pub fn new(cfg: CoordinatorConfig) -> Coordinator {
+        let tracer = Arc::new(trace::Tracer::new(cfg.trace, cfg.trace_ring));
         Coordinator {
             cfg,
             pools: HashMap::new(),
             next_id: AtomicU64::new(1),
             metrics: Arc::new(Metrics::new()),
+            tracer,
         }
     }
 
@@ -443,6 +466,7 @@ impl Coordinator {
                 epoch,
                 metrics: Arc::clone(&self.metrics),
                 pool_gauges: Arc::clone(&gauges),
+                tracer: Arc::clone(&self.tracer),
                 cfg: self.cfg.clone(),
             };
             workers.push(
@@ -529,6 +553,16 @@ impl Coordinator {
             router.route(&request.prompt, &loads)
         };
         let now_s = pool.epoch.elapsed().as_secs_f64();
+        // Record BEFORE the push: once the job is queued a worker may
+        // admit it concurrently, and its events must sort after these.
+        self.tracer.record(
+            request_id,
+            now_s,
+            trace::SpanEvent::Submitted {
+                deadline_s: request.deadline_s.unwrap_or(f64::INFINITY),
+            },
+        );
+        self.tracer.record(request_id, now_s, trace::SpanEvent::Routed { worker });
         pool.queues
             .push(
                 worker,
@@ -600,6 +634,7 @@ struct WorkerCtx {
     epoch: Instant,
     metrics: Arc<Metrics>,
     pool_gauges: Arc<PoolGauges>,
+    tracer: Arc<trace::Tracer>,
     cfg: CoordinatorConfig,
 }
 
@@ -718,6 +753,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                 let Slot { request_id, events, submitted, lane, .. } = s;
                 match target {
                     Some(t) => {
+                        ctx.tracer.record(
+                            request_id,
+                            now_s,
+                            trace::SpanEvent::Failover { from: ctx.worker, to: t },
+                        );
                         let (request, resume) = lane.into_resume();
                         ctx.queues.push_front(
                             t,
@@ -736,6 +776,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                         // Sole (or last healthy) worker: fail visibly,
                         // never strand the client stream.
                         ctx.metrics.on_error();
+                        ctx.tracer.record(
+                            request_id,
+                            now_s,
+                            trace::SpanEvent::Failed { cause: "crash_no_sibling".into() },
+                        );
                         let _ = events.send(TokenEvent::Error {
                             request_id,
                             message: "worker crashed with no healthy sibling to fail over to"
@@ -777,6 +822,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                         // admitting late (no reservation was taken).
                         ctx.metrics.on_shed_expired();
                         ctx.metrics.on_error();
+                        ctx.tracer.record(
+                            job.request_id,
+                            ctx.now_s(),
+                            trace::SpanEvent::Shed { reason: "deadline".into() },
+                        );
                         let _ = job.events.send(TokenEvent::Error {
                             request_id: job.request_id,
                             message: format!(
@@ -828,6 +878,28 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                         ctx.metrics
                             .on_failover_readmit(holdings.restored > 0 || holdings.prefix_hit > 0);
                     }
+                    match &job.resume {
+                        // Readmission: name the path, with the shared
+                        // host-tier pricing so the payload matches the
+                        // virtual driver's bitwise.
+                        Some(_) if holdings.restored > 0 => ctx.tracer.record(
+                            job.request_id,
+                            ctx.now_s(),
+                            trace::SpanEvent::Restored {
+                                restore_s: ctx.cfg.host_tier.restore_s(holdings.restored),
+                            },
+                        ),
+                        Some(_) => ctx.tracer.record(
+                            job.request_id,
+                            ctx.now_s(),
+                            trace::SpanEvent::Recomputed,
+                        ),
+                        None => ctx.tracer.record(
+                            job.request_id,
+                            ctx.now_s(),
+                            trace::SpanEvent::Admitted,
+                        ),
+                    }
                     let Job { request_id, request, events, submitted, resume, .. } = job;
                     match backend.new_session_at(holdings.prefix_hit) {
                         Ok(session) => {
@@ -842,6 +914,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                         Err(e) => {
                             kv.release_holdings(holdings);
                             ctx.metrics.on_error();
+                            ctx.tracer.record(
+                                request_id,
+                                ctx.now_s(),
+                                trace::SpanEvent::Failed { cause: format!("session: {e}") },
+                            );
                             let _ = events.send(TokenEvent::Error {
                                 request_id,
                                 message: format!("session: {e}"),
@@ -854,6 +931,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                     // rather than deadlock the admission queue.
                     let message = kv.reject_reason(job.request.worst_case_tokens());
                     ctx.metrics.on_reject();
+                    ctx.tracer.record(
+                        job.request_id,
+                        ctx.now_s(),
+                        trace::SpanEvent::Shed { reason: "kv_reject".into() },
+                    );
                     let _ = job
                         .events
                         .send(TokenEvent::Error { request_id: job.request_id, message });
@@ -886,6 +968,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
             if preempts_since_done > 1000 + 100 * ctx.cfg.max_active_per_worker {
                 ctx.metrics.on_shed_livelock();
                 ctx.metrics.on_error();
+                ctx.tracer.record(
+                    s.request_id,
+                    ctx.now_s(),
+                    trace::SpanEvent::Shed { reason: "preempt_livelock".into() },
+                );
                 let _ = s.events.send(TokenEvent::Error {
                     request_id: s.request_id,
                     message: "preemption livelock suspected: request shed after repeated \
@@ -893,6 +980,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                         .into(),
                 });
             } else {
+                ctx.tracer.record(
+                    s.request_id,
+                    ctx.now_s(),
+                    trace::SpanEvent::Preempted { demoted_blocks: s.lane.kv_blocks() },
+                );
                 let (request, resume) = s.lane.into_resume();
                 ctx.queues.push_front(
                     ctx.worker,
@@ -978,6 +1070,16 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                 Ok(logits) => {
                     let s = &mut slots[i];
                     let was_prefill = s.lane.in_prefill();
+                    if was_prefill {
+                        ctx.tracer.record(
+                            s.request_id,
+                            ctx.now_s(),
+                            trace::SpanEvent::PrefillSpan {
+                                len: p.span,
+                                cached_skip: s.lane.prefix_hit(),
+                            },
+                        );
+                    }
                     match s.lane.absorb(p.span, &logits) {
                         Absorbed::Prefilling => {
                             // Still prefilling: a pick without a token.
@@ -998,6 +1100,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                                 ctx.metrics.on_first_token(s.submitted.elapsed());
                             }
                             ctx.metrics.on_token(step_elapsed);
+                            ctx.tracer.record(
+                                s.request_id,
+                                ctx.now_s(),
+                                trace::SpanEvent::DecodeStep,
+                            );
                             scheduler.note_progress(i, s.lane.tokens_emitted());
                             let receiver_alive = s
                                 .events
@@ -1041,6 +1148,11 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                     let attempt = slots[i].lane.note_retry();
                     if attempt <= faults.retry_budget {
                         ctx.metrics.on_retry();
+                        ctx.tracer.record(
+                            slots[i].request_id,
+                            ctx.now_s(),
+                            trace::SpanEvent::Retry { backoff_s: faults.backoff_s(attempt) },
+                        );
                         backoff = backoff.max(faults.backoff_s(attempt));
                     } else {
                         retire.push((
@@ -1076,15 +1188,28 @@ fn worker_loop(ctx: WorkerCtx, factory: BackendFactory) {
                 Retire::Done(reason) => {
                     preempts_since_done = 0;
                     ctx.metrics.on_done(lane.tokens_emitted(), submitted.elapsed());
+                    ctx.tracer.record(request_id, ctx.now_s(), trace::SpanEvent::Finished);
                     let _ = events.send(TokenEvent::Done {
                         request_id,
                         tokens: lane.into_finished(),
                         reason,
                     });
                 }
-                Retire::Cancelled => ctx.metrics.on_cancel(lane.tokens_emitted()),
+                Retire::Cancelled => {
+                    ctx.metrics.on_cancel(lane.tokens_emitted());
+                    ctx.tracer.record(
+                        request_id,
+                        ctx.now_s(),
+                        trace::SpanEvent::Failed { cause: "cancelled".into() },
+                    );
+                }
                 Retire::Errored(message) => {
                     ctx.metrics.on_error();
+                    ctx.tracer.record(
+                        request_id,
+                        ctx.now_s(),
+                        trace::SpanEvent::Failed { cause: message.clone() },
+                    );
                     let _ = events.send(TokenEvent::Error { request_id, message });
                 }
             }

@@ -1,0 +1,1094 @@
+//! Deterministic request-lifecycle tracing shared by both serving paths.
+//!
+//! Every request carries a timeline of [`SpanEvent`]s — `Submitted →
+//! Routed → Admitted | Shed{reason} → PrefillSpan* → DecodeStep* →
+//! Preempted → Restored | Recomputed → Retry* → Failover → Hedged →
+//! Finished | Failed{cause}` — recorded by the virtual event loop (on
+//! the virtual clock) and the threaded worker loop (wall offsets from
+//! the pool epoch). Timestamps differ across the two drivers, but the
+//! per-seed event *sequence* (kinds + integer/float payloads) is
+//! bit-identical: both paths emit from the same shared lane-core
+//! decision points, extending the standing stream-identity invariant
+//! (see `tests/invariants.rs::prop_trace_noninterference`).
+//!
+//! On top of the raw timelines sit three consumers:
+//!
+//! * [`Attribution`] — per-request latency decomposition whose seven
+//!   components sum *bitwise* to the measured `ttft_s + decode_s`
+//!   (residual construction: `decode_gap_s` absorbs float slack last in
+//!   the canonical [`Attribution::component_sum`] order).
+//! * [`perfetto_json`] — a Chrome/Perfetto `trace_events` exporter
+//!   (`--trace-out FILE`): one track per worker/replica, one flow per
+//!   request, instants for sheds/faults/hedges.
+//! * [`Tracer`] — a bounded flight recorder for the server: a ring of
+//!   the last-N completed timelines plus a shed-and-deadline-miss "why"
+//!   digest, drained by the `trace` server op alongside `metrics`.
+//!
+//! Tracing is strictly observational: with the recorder off every hook
+//! is an early-return no-op, and the noninterference property pins that
+//! streams, counters, and report fields are bit-identical either way.
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::LogHistogram;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Default flight-recorder capacity: sealed timelines kept by the
+/// server's [`Tracer`] ring before the oldest rotates out.
+pub const DEFAULT_TRACE_RING: usize = 256;
+
+/// One lifecycle event kind with its payload. Payloads carry only
+/// values that are deterministic per seed on *both* drivers (token
+/// counts, block counts, shared-pricing seconds) so that cross-path
+/// sequence comparison can use plain `==`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpanEvent {
+    /// Request entered the coordinator; `deadline_s` is the admission
+    /// deadline in request-relative seconds (`f64::INFINITY` if none).
+    Submitted {
+        /// Relative admission deadline (infinite when absent).
+        deadline_s: f64,
+    },
+    /// Router picked a worker (pool tier) or replica (cluster tier).
+    Routed {
+        /// Destination worker/replica index.
+        worker: usize,
+    },
+    /// Scheduler admitted the request into a lane (fresh admission).
+    Admitted,
+    /// Request was dropped; terminal. Reasons: `deadline`, `kv_reject`,
+    /// `preempt_livelock`, `slo_admission`.
+    Shed {
+        /// Why the request was dropped.
+        reason: String,
+    },
+    /// One prefill chunk was absorbed.
+    PrefillSpan {
+        /// Prompt tokens fed in this chunk.
+        len: usize,
+        /// Prompt tokens skipped via the shared-prefix cache at
+        /// admission (repeated on every chunk of the same request).
+        cached_skip: usize,
+    },
+    /// One decode token was emitted (the first marks the TTFT edge).
+    DecodeStep,
+    /// Lane was evicted under KV pressure; blocks still held at the
+    /// moment of preemption (about to demote/drop).
+    Preempted {
+        /// KV blocks held when preempted.
+        demoted_blocks: usize,
+    },
+    /// Lane resumed from host-tier KV; `restore_s` is the shared
+    /// `HostTierConfig::restore_s` pricing for the restored tokens.
+    Restored {
+        /// Modeled restore cost in seconds.
+        restore_s: f64,
+    },
+    /// Lane resumed by recomputing its prefill (no host copy).
+    Recomputed,
+    /// A step failed with a transient fault and will be retried.
+    Retry {
+        /// Backoff before the retry attempt, in seconds.
+        backoff_s: f64,
+    },
+    /// Worker/replica crash moved the lane to a sibling.
+    Failover {
+        /// Crashed source index.
+        from: usize,
+        /// Salvage destination index.
+        to: usize,
+    },
+    /// A hedged duplicate resolved; `winner` is the replica whose
+    /// stream was kept.
+    Hedged {
+        /// Winning replica index.
+        winner: usize,
+    },
+    /// Request completed normally; terminal.
+    Finished,
+    /// Request ended without completing; terminal.
+    Failed {
+        /// Failure cause (`cancelled`, `retry_exhausted`,
+        /// `crash_no_sibling`, or an error message).
+        cause: String,
+    },
+}
+
+impl SpanEvent {
+    /// Short kind tag (used for JSON, Perfetto names, and digests).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SpanEvent::Submitted { .. } => "submitted",
+            SpanEvent::Routed { .. } => "routed",
+            SpanEvent::Admitted => "admitted",
+            SpanEvent::Shed { .. } => "shed",
+            SpanEvent::PrefillSpan { .. } => "prefill_span",
+            SpanEvent::DecodeStep => "decode_step",
+            SpanEvent::Preempted { .. } => "preempted",
+            SpanEvent::Restored { .. } => "restored",
+            SpanEvent::Recomputed => "recomputed",
+            SpanEvent::Retry { .. } => "retry",
+            SpanEvent::Failover { .. } => "failover",
+            SpanEvent::Hedged { .. } => "hedged",
+            SpanEvent::Finished => "finished",
+            SpanEvent::Failed { .. } => "failed",
+        }
+    }
+
+    /// Terminal events close a timeline.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            SpanEvent::Shed { .. } | SpanEvent::Finished | SpanEvent::Failed { .. }
+        )
+    }
+
+    fn payload_json(&self, o: &mut Vec<(&'static str, Json)>) {
+        match self {
+            SpanEvent::Submitted { deadline_s } => {
+                if deadline_s.is_finite() {
+                    o.push(("deadline_s", (*deadline_s).into()));
+                }
+            }
+            SpanEvent::Routed { worker } => o.push(("worker", (*worker).into())),
+            SpanEvent::Shed { reason } => o.push(("reason", reason.as_str().into())),
+            SpanEvent::PrefillSpan { len, cached_skip } => {
+                o.push(("len", (*len).into()));
+                o.push(("cached_skip", (*cached_skip).into()));
+            }
+            SpanEvent::Preempted { demoted_blocks } => {
+                o.push(("demoted_blocks", (*demoted_blocks).into()));
+            }
+            SpanEvent::Restored { restore_s } => o.push(("restore_s", (*restore_s).into())),
+            SpanEvent::Retry { backoff_s } => o.push(("backoff_s", (*backoff_s).into())),
+            SpanEvent::Failover { from, to } => {
+                o.push(("from", (*from).into()));
+                o.push(("to", (*to).into()));
+            }
+            SpanEvent::Hedged { winner } => o.push(("winner", (*winner).into())),
+            SpanEvent::Admitted
+            | SpanEvent::DecodeStep
+            | SpanEvent::Recomputed
+            | SpanEvent::Finished
+            | SpanEvent::Failed { .. } => {}
+        }
+        if let SpanEvent::Failed { cause } = self {
+            o.push(("cause", cause.as_str().into()));
+        }
+    }
+}
+
+/// A timestamped [`SpanEvent`]. `t_s` is seconds on the driver's clock:
+/// the virtual clock in the simulator, wall offset from the pool epoch
+/// in the threaded server.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Event timestamp in seconds.
+    pub t_s: f64,
+    /// The event itself.
+    pub ev: SpanEvent,
+}
+
+/// The full recorded lifecycle of one request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestTimeline {
+    /// Request id (pool tier) or synthetic id (cluster tier).
+    pub request_id: u64,
+    /// Events in recording order; timestamps are non-decreasing.
+    pub events: Vec<TraceEvent>,
+    /// Latency decomposition — present for finished requests that
+    /// emitted at least one token (computed when the timeline closes).
+    pub attribution: Option<Attribution>,
+}
+
+impl RequestTimeline {
+    /// A fresh, open timeline.
+    pub fn new(request_id: u64) -> RequestTimeline {
+        RequestTimeline { request_id, events: Vec::new(), attribution: None }
+    }
+
+    /// Append one event.
+    pub fn push(&mut self, t_s: f64, ev: SpanEvent) {
+        self.events.push(TraceEvent { t_s, ev });
+    }
+
+    /// The terminal event, if the timeline is closed.
+    pub fn terminal(&self) -> Option<&SpanEvent> {
+        self.events.last().map(|e| &e.ev).filter(|e| e.is_terminal())
+    }
+
+    /// The payload-bearing event sequence with timestamps stripped —
+    /// the unit of cross-path and rerun identity comparison.
+    pub fn sequence(&self) -> Vec<SpanEvent> {
+        self.events.iter().map(|e| e.ev.clone()).collect()
+    }
+
+    /// Worker/replica the request last ran on (after routing and any
+    /// failovers); `None` before routing.
+    pub fn final_worker(&self) -> Option<usize> {
+        let mut w = None;
+        for e in &self.events {
+            match e.ev {
+                SpanEvent::Routed { worker } => w = Some(worker),
+                SpanEvent::Failover { to, .. } => w = Some(to),
+                SpanEvent::Hedged { winner } => w = Some(winner),
+                _ => {}
+            }
+        }
+        w
+    }
+
+    /// Seal the timeline: compute attribution if eligible.
+    pub fn seal(&mut self) {
+        self.attribution = Attribution::from_timeline(self);
+    }
+
+    /// JSON form for the `trace` server op and report embedding.
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields: Vec<(&'static str, Json)> =
+                    vec![("t_s", e.t_s.into()), ("ev", e.ev.kind().into())];
+                e.ev.payload_json(&mut fields);
+                obj(fields)
+            })
+            .collect::<Vec<_>>();
+        let mut fields = vec![
+            ("request_id", self.request_id.into()),
+            ("events", Json::Arr(events)),
+        ];
+        if let Some(a) = &self.attribution {
+            fields.push(("attribution", a.to_json()));
+        }
+        obj(fields)
+    }
+}
+
+/// Canonical component names, in [`Attribution::component_sum`] order.
+/// `decode_gap_s` is deliberately last: it is the residual that makes
+/// the sum bitwise-equal to `ttft_s + decode_s`.
+pub const COMPONENTS: [&str; 7] = [
+    "queue_wait_s",
+    "admission_delay_s",
+    "prefill_s",
+    "preempt_stall_s",
+    "restore_s",
+    "failover_s",
+    "decode_gap_s",
+];
+
+/// Per-request latency decomposition. The identity
+/// `component_sum() == ttft_s + decode_s` holds *bitwise* for every
+/// attribution this module constructs (asserted by the invariant
+/// harness on both serving paths).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Attribution {
+    /// Submit → first decoded token.
+    pub ttft_s: f64,
+    /// First decoded token → last decoded token.
+    pub decode_s: f64,
+    /// Submit → routing decision.
+    pub queue_wait_s: f64,
+    /// Routing decision → first admission into a lane.
+    pub admission_delay_s: f64,
+    /// Time absorbed by prefill chunks.
+    pub prefill_s: f64,
+    /// Time parked after preemption before resuming (recompute path)
+    /// plus re-admission waits.
+    pub preempt_stall_s: f64,
+    /// Time spent restoring demoted KV from the host tier.
+    pub restore_s: f64,
+    /// Time between a crash and resuming on the failover sibling.
+    pub failover_s: f64,
+    /// Decode-step gaps and everything else (residual component).
+    pub decode_gap_s: f64,
+}
+
+impl Attribution {
+    /// The measured total this decomposition must reproduce.
+    pub fn total_s(&self) -> f64 {
+        self.ttft_s + self.decode_s
+    }
+
+    /// Sum of the seven components in canonical order (`decode_gap_s`
+    /// last). Bitwise-equal to [`Attribution::total_s`] by
+    /// construction.
+    pub fn component_sum(&self) -> f64 {
+        self.queue_wait_s
+            + self.admission_delay_s
+            + self.prefill_s
+            + self.preempt_stall_s
+            + self.restore_s
+            + self.failover_s
+            + self.decode_gap_s
+    }
+
+    /// Component values in [`COMPONENTS`] order.
+    pub fn components(&self) -> [f64; 7] {
+        [
+            self.queue_wait_s,
+            self.admission_delay_s,
+            self.prefill_s,
+            self.preempt_stall_s,
+            self.restore_s,
+            self.failover_s,
+            self.decode_gap_s,
+        ]
+    }
+
+    /// Decompose a timeline. Returns `None` unless the request emitted
+    /// at least one decode step (shed / pre-token failures have no
+    /// TTFT to attribute).
+    ///
+    /// Construction: every inter-event gap up to the last decode step
+    /// is attributed to a component keyed on the *later* event; the
+    /// residual vs. `ttft_s + decode_s` is then folded into
+    /// `decode_gap_s` with a bounded fix-up loop so the identity holds
+    /// bitwise despite float non-associativity. The recomputation is a
+    /// pure function of the event list, so identical timelines yield
+    /// identical attributions.
+    pub fn from_timeline(tl: &RequestTimeline) -> Option<Attribution> {
+        let evs = &tl.events;
+        let t_submit = evs.first()?.t_s;
+        let first_decode = evs.iter().position(|e| matches!(e.ev, SpanEvent::DecodeStep))?;
+        let last_decode = evs.iter().rposition(|e| matches!(e.ev, SpanEvent::DecodeStep))?;
+        let ttft_s = evs[first_decode].t_s - t_submit;
+        let decode_s = evs[last_decode].t_s - evs[first_decode].t_s;
+        let target = ttft_s + decode_s;
+
+        let mut queue_wait = 0.0f64;
+        let mut admission_delay = 0.0f64;
+        let mut prefill = 0.0f64;
+        let mut preempt_stall = 0.0f64;
+        let mut restore = 0.0f64;
+        let mut failover = 0.0f64;
+        let mut decode_gap = 0.0f64;
+        let mut admitted_once = false;
+        let mut parked = false; // between Preempted/Failover and resume
+        for w in evs[..=last_decode].windows(2) {
+            let gap = w[1].t_s - w[0].t_s;
+            match &w[1].ev {
+                SpanEvent::Routed { .. } => queue_wait += gap,
+                SpanEvent::Admitted => {
+                    if parked {
+                        preempt_stall += gap;
+                        parked = false;
+                    } else if admitted_once {
+                        decode_gap += gap;
+                    } else {
+                        admission_delay += gap;
+                    }
+                    admitted_once = true;
+                }
+                SpanEvent::Restored { .. } => {
+                    restore += gap;
+                    parked = false;
+                    admitted_once = true;
+                }
+                SpanEvent::Recomputed => {
+                    preempt_stall += gap;
+                    parked = false;
+                    admitted_once = true;
+                }
+                SpanEvent::PrefillSpan { .. } => prefill += gap,
+                SpanEvent::DecodeStep => decode_gap += gap,
+                SpanEvent::Failover { .. } => {
+                    failover += gap;
+                    parked = true;
+                }
+                SpanEvent::Preempted { .. } => {
+                    decode_gap += gap;
+                    parked = true;
+                }
+                SpanEvent::Retry { .. } | SpanEvent::Hedged { .. } => decode_gap += gap,
+                SpanEvent::Submitted { .. }
+                | SpanEvent::Shed { .. }
+                | SpanEvent::Finished
+                | SpanEvent::Failed { .. } => decode_gap += gap,
+            }
+        }
+
+        let mut a = Attribution {
+            ttft_s,
+            decode_s,
+            queue_wait_s: queue_wait,
+            admission_delay_s: admission_delay,
+            prefill_s: prefill,
+            preempt_stall_s: preempt_stall,
+            restore_s: restore,
+            failover_s: failover,
+            decode_gap_s: decode_gap,
+        };
+        // Fold the float residual into decode_gap_s until the identity
+        // holds bitwise. Converges in one or two steps in practice; the
+        // degenerate fallback (everything in decode_gap_s) is exact by
+        // construction because the other six components are 0.0.
+        let others = a.component_sum() - a.decode_gap_s;
+        a.decode_gap_s = target - others;
+        for _ in 0..64 {
+            let miss = target - a.component_sum();
+            if miss == 0.0 {
+                break;
+            }
+            a.decode_gap_s += miss;
+        }
+        if a.component_sum() != target {
+            a.queue_wait_s = 0.0;
+            a.admission_delay_s = 0.0;
+            a.prefill_s = 0.0;
+            a.preempt_stall_s = 0.0;
+            a.restore_s = 0.0;
+            a.failover_s = 0.0;
+            a.decode_gap_s = target;
+        }
+        Some(a)
+    }
+
+    /// JSON form: `ttft_s`, `decode_s`, then the seven components.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> =
+            vec![("ttft_s", self.ttft_s.into()), ("decode_s", self.decode_s.into())];
+        for (name, v) in COMPONENTS.iter().zip(self.components()) {
+            fields.push((name, v.into()));
+        }
+        obj(fields)
+    }
+}
+
+/// Aggregate of [`Attribution`]s for one tier: per-component counts,
+/// means, and full log-spaced histograms (bounds + counts), so reports
+/// expose the distribution of *where time went*, not just endpoint
+/// percentiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttributionSummary {
+    /// Requests aggregated.
+    pub count: u64,
+    sums: [f64; 7],
+    hists: Vec<LogHistogram>,
+}
+
+impl Default for AttributionSummary {
+    fn default() -> Self {
+        AttributionSummary::new()
+    }
+}
+
+impl AttributionSummary {
+    /// An empty summary with the standard latency histogram bounds.
+    pub fn new() -> AttributionSummary {
+        AttributionSummary {
+            count: 0,
+            sums: [0.0; 7],
+            hists: (0..COMPONENTS.len()).map(|_| LogHistogram::latency()).collect(),
+        }
+    }
+
+    /// Fold one request's attribution in. Sub-resolution negative
+    /// residuals (decode_gap_s can carry `-ε` float slack) clamp to 0
+    /// for the histogram.
+    pub fn add(&mut self, a: &Attribution) {
+        self.count += 1;
+        for (i, v) in a.components().into_iter().enumerate() {
+            self.sums[i] += v;
+            self.hists[i].add(v.max(0.0));
+        }
+    }
+
+    /// Merge another summary (same bounds by construction).
+    pub fn merge(&mut self, other: &AttributionSummary) {
+        self.count += other.count;
+        for i in 0..COMPONENTS.len() {
+            self.sums[i] += other.sums[i];
+            self.hists[i].merge(&other.hists[i]);
+        }
+    }
+
+    /// `{"count": n, "<component>": {"mean_s": ..., "hist": {...}}}`.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("count", self.count.into())];
+        for (i, name) in COMPONENTS.iter().enumerate() {
+            let mean = if self.count == 0 { 0.0 } else { self.sums[i] / self.count as f64 };
+            fields.push((
+                name,
+                obj(vec![("mean_s", mean.into()), ("hist", self.hists[i].to_json())]),
+            ));
+        }
+        obj(fields)
+    }
+}
+
+/// Single-threaded recorder for the virtual driver. With `on == false`
+/// every method is a no-op, so an untraced run does zero extra work
+/// (noninterference is pinned by proptest).
+#[derive(Debug, Default)]
+pub struct VTrace {
+    on: bool,
+    open: BTreeMap<u64, RequestTimeline>,
+    done: Vec<RequestTimeline>,
+}
+
+impl VTrace {
+    /// A recorder; `on == false` yields the no-op recorder.
+    pub fn new(on: bool) -> VTrace {
+        VTrace { on, open: BTreeMap::new(), done: Vec::new() }
+    }
+
+    /// Whether the recorder is active.
+    pub fn enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Record one event for `rid` at virtual time `t_s`. Terminal
+    /// events seal the timeline and move it to the completed list.
+    pub fn record(&mut self, rid: u64, t_s: f64, ev: SpanEvent) {
+        if !self.on {
+            return;
+        }
+        let terminal = ev.is_terminal();
+        let tl = self.open.entry(rid).or_insert_with(|| RequestTimeline::new(rid));
+        tl.push(t_s, ev);
+        if terminal {
+            let mut tl = self.open.remove(&rid).unwrap();
+            tl.seal();
+            self.done.push(tl);
+        }
+    }
+
+    /// Close out: completed timelines sorted by request id (open
+    /// timelines — e.g. requests orphaned by Halt — are dropped, as
+    /// they have no terminal state to attribute).
+    pub fn finish(mut self) -> Vec<RequestTimeline> {
+        self.done.sort_by_key(|t| t.request_id);
+        self.done
+    }
+}
+
+/// Aggregate all finished-request attributions from a timeline set.
+pub fn summarize(timelines: &[RequestTimeline]) -> AttributionSummary {
+    let mut s = AttributionSummary::new();
+    for tl in timelines {
+        if let Some(a) = &tl.attribution {
+            s.add(a);
+        }
+    }
+    s
+}
+
+/// Shed-and-deadline-miss "why" digest kept by the flight recorder:
+/// how many requests were dropped, for which reasons, and how many
+/// finished requests blew their admission deadline anyway.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceDigest {
+    /// Terminal-shed counts keyed by reason.
+    pub sheds_by_reason: BTreeMap<String, u64>,
+    /// Failure counts keyed by cause.
+    pub failed_by_cause: BTreeMap<String, u64>,
+    /// Finished requests whose first token landed past the deadline.
+    pub deadline_misses: u64,
+    /// Completed (terminal) timelines observed in total, including
+    /// those that have since rotated out of the ring.
+    pub completed: u64,
+}
+
+impl TraceDigest {
+    /// Fold one sealed timeline into the digest.
+    pub fn absorb(&mut self, tl: &RequestTimeline) {
+        self.completed += 1;
+        match tl.terminal() {
+            Some(SpanEvent::Shed { reason }) => {
+                *self.sheds_by_reason.entry(reason.clone()).or_insert(0) += 1;
+            }
+            Some(SpanEvent::Failed { cause }) => {
+                *self.failed_by_cause.entry(cause.clone()).or_insert(0) += 1;
+            }
+            _ => {}
+        }
+        if let (Some(SpanEvent::Finished), Some(a)) = (tl.terminal(), &tl.attribution) {
+            if let Some(TraceEvent { ev: SpanEvent::Submitted { deadline_s }, .. }) =
+                tl.events.first()
+            {
+                if a.ttft_s > *deadline_s {
+                    self.deadline_misses += 1;
+                }
+            }
+        }
+    }
+
+    /// JSON form for the `trace` op.
+    pub fn to_json(&self) -> Json {
+        let m = |m: &BTreeMap<String, u64>| {
+            Json::Obj({
+                let mut o = crate::util::json::JsonObj::new();
+                for (k, v) in m {
+                    o.insert(k.clone(), (*v).into());
+                }
+                o
+            })
+        };
+        obj(vec![
+            ("completed", self.completed.into()),
+            ("deadline_misses", self.deadline_misses.into()),
+            ("sheds_by_reason", m(&self.sheds_by_reason)),
+            ("failed_by_cause", m(&self.failed_by_cause)),
+        ])
+    }
+}
+
+/// Thread-safe flight recorder for the threaded coordinator: open
+/// timelines keyed by request id, a bounded ring of the last-N sealed
+/// timelines, and a cumulative [`TraceDigest`]. Off ⇒ all no-ops.
+#[derive(Debug)]
+pub struct Tracer {
+    on: bool,
+    inner: Mutex<TracerInner>,
+}
+
+#[derive(Debug)]
+struct TracerInner {
+    open: BTreeMap<u64, RequestTimeline>,
+    ring: VecDeque<RequestTimeline>,
+    cap: usize,
+    digest: TraceDigest,
+    summary: AttributionSummary,
+}
+
+impl Tracer {
+    /// A recorder holding at most `ring_cap` sealed timelines.
+    pub fn new(on: bool, ring_cap: usize) -> Tracer {
+        Tracer {
+            on,
+            inner: Mutex::new(TracerInner {
+                open: BTreeMap::new(),
+                ring: VecDeque::new(),
+                cap: ring_cap.max(1),
+                digest: TraceDigest::default(),
+                summary: AttributionSummary::new(),
+            }),
+        }
+    }
+
+    /// Whether the recorder is active.
+    pub fn enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Record one event for `request_id` at wall offset `t_s` seconds
+    /// from the pool epoch. Terminal events seal the timeline into the
+    /// ring (evicting the oldest past capacity) and update the digest.
+    pub fn record(&self, request_id: u64, t_s: f64, ev: SpanEvent) {
+        if !self.on {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let terminal = ev.is_terminal();
+        let tl = inner
+            .open
+            .entry(request_id)
+            .or_insert_with(|| RequestTimeline::new(request_id));
+        tl.push(t_s, ev);
+        if terminal {
+            let mut tl = inner.open.remove(&request_id).unwrap();
+            tl.seal();
+            inner.digest.absorb(&tl);
+            if let Some(a) = &tl.attribution {
+                inner.summary.add(a);
+            }
+            if inner.ring.len() == inner.cap {
+                inner.ring.pop_front();
+            }
+            inner.ring.push_back(tl);
+        }
+    }
+
+    /// Snapshot the sealed timelines currently in the ring (oldest
+    /// first) without draining them.
+    pub fn completed(&self) -> Vec<RequestTimeline> {
+        let inner = self.inner.lock().unwrap();
+        inner.ring.iter().cloned().collect()
+    }
+
+    /// Cumulative attribution summary over all sealed timelines.
+    pub fn attribution_summary(&self) -> AttributionSummary {
+        self.inner.lock().unwrap().summary.clone()
+    }
+
+    /// Drain the ring (oldest first) and return it with a snapshot of
+    /// the cumulative digest. The digest is *not* reset — it counts
+    /// since process start, so repeated drains stay monotonic.
+    pub fn drain(&self) -> (Vec<RequestTimeline>, TraceDigest) {
+        let mut inner = self.inner.lock().unwrap();
+        let drained = std::mem::take(&mut inner.ring).into_iter().collect();
+        (drained, inner.digest.clone())
+    }
+
+    /// JSON body for the `trace` server op: drains the ring.
+    pub fn drain_json(&self) -> Json {
+        let (timelines, digest) = self.drain();
+        obj(vec![
+            ("enabled", self.on.into()),
+            (
+                "timelines",
+                Json::Arr(timelines.iter().map(|t| t.to_json()).collect()),
+            ),
+            ("digest", digest.to_json()),
+        ])
+    }
+}
+
+/// Export timelines as a Chrome/Perfetto `trace_events` document:
+/// `{"traceEvents": [...]}` with one track (`tid`) per worker/replica
+/// plus a front-end track, one `X` span per request residency segment,
+/// a `queue` span on the front-end track, `s`/`f` flow pairs tying
+/// submit to completion, and `i` instants for sheds/faults/hedges.
+/// Timestamps are microseconds (`ts = t_s * 1e6`).
+pub fn perfetto_json(timelines: &[RequestTimeline]) -> Json {
+    const PID: u64 = 1;
+    let mut events: Vec<Json> = Vec::new();
+    let mut tids: Vec<usize> = Vec::new();
+    for tl in timelines {
+        for e in &tl.events {
+            match e.ev {
+                SpanEvent::Routed { worker } => tids.push(worker + 1),
+                SpanEvent::Failover { from, to } => {
+                    tids.push(from + 1);
+                    tids.push(to + 1);
+                }
+                SpanEvent::Hedged { winner } => tids.push(winner + 1),
+                _ => {}
+            }
+        }
+    }
+    tids.push(0);
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in &tids {
+        let name = if *tid == 0 {
+            "frontend".to_string()
+        } else {
+            format!("worker {}", tid - 1)
+        };
+        events.push(obj(vec![
+            ("ph", "M".into()),
+            ("pid", PID.into()),
+            ("tid", (*tid).into()),
+            ("name", "thread_name".into()),
+            ("args", obj(vec![("name", name.into())])),
+        ]));
+    }
+
+    for tl in timelines {
+        let Some(first) = tl.events.first() else { continue };
+        let t0 = first.t_s;
+        let ts = |t: f64| -> Json { (t * 1e6).into() };
+        let rid = tl.request_id;
+        let last = tl.events.last().unwrap();
+
+        // Flow: opens at submission on the front-end track, binds
+        // (enclosing) at the terminal event on the final worker track.
+        let final_tid = tl.final_worker().map(|w| w + 1).unwrap_or(0);
+        events.push(obj(vec![
+            ("ph", "s".into()),
+            ("cat", "req".into()),
+            ("name", "req".into()),
+            ("id", rid.into()),
+            ("pid", PID.into()),
+            ("tid", 0usize.into()),
+            ("ts", ts(t0)),
+        ]));
+        events.push(obj(vec![
+            ("ph", "f".into()),
+            ("bp", "e".into()),
+            ("cat", "req".into()),
+            ("name", "req".into()),
+            ("id", rid.into()),
+            ("pid", PID.into()),
+            ("tid", final_tid.into()),
+            ("ts", ts(last.t_s)),
+        ]));
+
+        // Queue span on the front-end track: submit → first admission
+        // (or terminal, for requests that never got in).
+        let t_admit = tl
+            .events
+            .iter()
+            .find(|e| {
+                matches!(
+                    e.ev,
+                    SpanEvent::Admitted | SpanEvent::Restored { .. } | SpanEvent::Recomputed
+                )
+            })
+            .map(|e| e.t_s)
+            .unwrap_or(last.t_s);
+        events.push(obj(vec![
+            ("ph", "X".into()),
+            ("cat", "queue".into()),
+            ("name", format!("queue {rid}").into()),
+            ("pid", PID.into()),
+            ("tid", 0usize.into()),
+            ("ts", ts(t0)),
+            ("dur", ((t_admit - t0).max(0.0) * 1e6).into()),
+        ]));
+
+        // Residency spans: one X per contiguous stay on a worker
+        // (split at Failover), carrying the attribution as args.
+        let mut seg_start: Option<(usize, f64)> = None;
+        let mut cur_worker = 0usize;
+        for e in &tl.events {
+            match e.ev {
+                SpanEvent::Routed { worker } => cur_worker = worker,
+                SpanEvent::Admitted | SpanEvent::Restored { .. } | SpanEvent::Recomputed => {
+                    if seg_start.is_none() {
+                        seg_start = Some((cur_worker, e.t_s));
+                    }
+                }
+                SpanEvent::Failover { to, .. } => {
+                    if let Some((w, t)) = seg_start.take() {
+                        push_span(&mut events, PID, w + 1, rid, t, e.t_s, tl);
+                    }
+                    cur_worker = to;
+                    seg_start = Some((to, e.t_s));
+                }
+                _ => {}
+            }
+        }
+        if let Some((w, t)) = seg_start {
+            push_span(&mut events, PID, w + 1, rid, t, last.t_s, tl);
+        }
+
+        // Instants for everything noteworthy.
+        for e in &tl.events {
+            let noteworthy = matches!(
+                e.ev,
+                SpanEvent::Shed { .. }
+                    | SpanEvent::Preempted { .. }
+                    | SpanEvent::Restored { .. }
+                    | SpanEvent::Recomputed
+                    | SpanEvent::Retry { .. }
+                    | SpanEvent::Failover { .. }
+                    | SpanEvent::Hedged { .. }
+                    | SpanEvent::Failed { .. }
+            );
+            if !noteworthy {
+                continue;
+            }
+            let mut fields: Vec<(&'static str, Json)> = Vec::new();
+            e.ev.payload_json(&mut fields);
+            events.push(obj(vec![
+                ("ph", "i".into()),
+                ("s", "t".into()),
+                ("cat", "fault".into()),
+                ("name", e.ev.kind().into()),
+                ("pid", PID.into()),
+                ("tid", final_tid.into()),
+                ("ts", ts(e.t_s)),
+                ("args", obj(fields)),
+            ]));
+        }
+    }
+
+    obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+fn push_span(
+    events: &mut Vec<Json>,
+    pid: u64,
+    tid: usize,
+    rid: u64,
+    t_start: f64,
+    t_end: f64,
+    tl: &RequestTimeline,
+) {
+    let mut fields = vec![
+        ("ph", "X".into()),
+        ("cat", "req".into()),
+        ("name", format!("req {rid}").into()),
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("ts", (t_start * 1e6).into()),
+        ("dur", ((t_end - t_start).max(0.0) * 1e6).into()),
+    ];
+    if let Some(a) = &tl.attribution {
+        fields.push(("args", a.to_json()));
+    }
+    events.push(obj(fields));
+}
+
+/// Validate an exported Perfetto document: parses, `traceEvents` is a
+/// nonempty array, every flow-open (`s`) id has a matching flow-end
+/// (`f`) and vice versa, and every `X` span has finite `ts` and
+/// nonnegative `dur`. Returns the event count.
+pub fn validate_perfetto(src: &str) -> Result<usize, String> {
+    let doc = Json::parse(src).map_err(|e| format!("trace file is not valid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .as_arr()
+        .ok_or("trace file has no traceEvents array")?;
+    if events.is_empty() {
+        return Err("traceEvents is empty".into());
+    }
+    let mut opens: Vec<u64> = Vec::new();
+    let mut ends: Vec<u64> = Vec::new();
+    for e in events {
+        let ph = e.get("ph").as_str().ok_or("event missing ph")?;
+        match ph {
+            "s" | "f" => {
+                let id = e.get("id").as_u64().ok_or("flow event missing id")?;
+                if ph == "s" {
+                    opens.push(id);
+                } else {
+                    ends.push(id);
+                }
+            }
+            "X" => {
+                let ts = e.get("ts").as_f64().ok_or("span missing ts")?;
+                let dur = e.get("dur").as_f64().ok_or("span missing dur")?;
+                if !ts.is_finite() || !dur.is_finite() || dur < 0.0 {
+                    return Err(format!("span with bad ts/dur: ts={ts} dur={dur}"));
+                }
+            }
+            _ => {}
+        }
+    }
+    opens.sort_unstable();
+    ends.sort_unstable();
+    if opens != ends {
+        return Err(format!(
+            "unresolved flows: {} opens vs {} ends",
+            opens.len(),
+            ends.len()
+        ));
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_timeline() -> RequestTimeline {
+        let mut tl = RequestTimeline::new(7);
+        tl.push(0.0, SpanEvent::Submitted { deadline_s: f64::INFINITY });
+        tl.push(0.001, SpanEvent::Routed { worker: 2 });
+        tl.push(0.013, SpanEvent::Admitted);
+        tl.push(0.05, SpanEvent::PrefillSpan { len: 512, cached_skip: 0 });
+        tl.push(0.09, SpanEvent::PrefillSpan { len: 512, cached_skip: 0 });
+        tl.push(0.1, SpanEvent::DecodeStep);
+        tl.push(0.11, SpanEvent::DecodeStep);
+        tl.push(0.127, SpanEvent::DecodeStep);
+        tl.push(0.127, SpanEvent::Finished);
+        tl.seal();
+        tl
+    }
+
+    #[test]
+    fn attribution_identity_holds_bitwise() {
+        let tl = sample_timeline();
+        let a = tl.attribution.expect("finished timeline has attribution");
+        assert_eq!(a.component_sum(), a.total_s());
+        assert_eq!(a.ttft_s, 0.1);
+        assert!(a.queue_wait_s > 0.0 && a.admission_delay_s > 0.0 && a.prefill_s > 0.0);
+        // Pure function of the events: recomputation is equal.
+        assert_eq!(Attribution::from_timeline(&tl), Some(a));
+    }
+
+    #[test]
+    fn attribution_absent_without_decode() {
+        let mut tl = RequestTimeline::new(1);
+        tl.push(0.0, SpanEvent::Submitted { deadline_s: 0.5 });
+        tl.push(0.6, SpanEvent::Shed { reason: "deadline".into() });
+        tl.seal();
+        assert!(tl.attribution.is_none());
+        assert!(matches!(tl.terminal(), Some(SpanEvent::Shed { .. })));
+    }
+
+    #[test]
+    fn tracer_ring_bounds_and_digest() {
+        let tr = Tracer::new(true, 2);
+        for rid in 0..5u64 {
+            tr.record(rid, 0.0, SpanEvent::Submitted { deadline_s: 0.01 });
+            tr.record(rid, 0.1, SpanEvent::DecodeStep);
+            if rid == 4 {
+                tr.record(rid, 0.2, SpanEvent::Shed { reason: "kv_reject".into() });
+            } else {
+                tr.record(rid, 0.2, SpanEvent::Finished);
+            }
+        }
+        let (drained, digest) = tr.drain();
+        assert_eq!(drained.len(), 2, "ring keeps only the last N");
+        assert_eq!(drained[1].request_id, 4);
+        assert_eq!(digest.completed, 5);
+        assert_eq!(digest.sheds_by_reason.get("kv_reject"), Some(&1));
+        assert_eq!(digest.deadline_misses, 4, "ttft 0.1 > deadline 0.01");
+        let (again, _) = tr.drain();
+        assert!(again.is_empty(), "drain empties the ring");
+    }
+
+    #[test]
+    fn tracer_off_is_noop() {
+        let tr = Tracer::new(false, 8);
+        tr.record(1, 0.0, SpanEvent::Submitted { deadline_s: 1.0 });
+        tr.record(1, 0.1, SpanEvent::Finished);
+        let (drained, digest) = tr.drain();
+        assert!(drained.is_empty());
+        assert_eq!(digest, TraceDigest::default());
+    }
+
+    #[test]
+    fn perfetto_roundtrip_validates() {
+        let mut with_failover = RequestTimeline::new(9);
+        with_failover.push(0.0, SpanEvent::Submitted { deadline_s: f64::INFINITY });
+        with_failover.push(0.0, SpanEvent::Routed { worker: 0 });
+        with_failover.push(0.01, SpanEvent::Admitted);
+        with_failover.push(0.02, SpanEvent::DecodeStep);
+        with_failover.push(0.03, SpanEvent::Failover { from: 0, to: 1 });
+        with_failover.push(0.04, SpanEvent::Restored { restore_s: 0.004 });
+        with_failover.push(0.05, SpanEvent::DecodeStep);
+        with_failover.push(0.05, SpanEvent::Finished);
+        with_failover.seal();
+        let tls = vec![sample_timeline(), with_failover];
+        let doc = perfetto_json(&tls);
+        let src = doc.to_string_pretty();
+        let n = validate_perfetto(&src).expect("exported trace validates");
+        assert!(n > 8);
+        // Timestamps are absolute microseconds; flows resolve per id.
+        let parsed = Json::parse(&src).unwrap();
+        let evs = parsed.get("traceEvents").as_arr().unwrap();
+        assert!(evs.iter().any(|e| e.get("ph").as_str() == Some("i")));
+        assert!(
+            evs.iter()
+                .filter(|e| e.get("ph").as_str() == Some("X"))
+                .count()
+                >= 4,
+            "queue span + residency segments (split at failover)"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_documents() {
+        assert!(validate_perfetto("not json").is_err());
+        assert!(validate_perfetto("{\"traceEvents\": []}").is_err());
+        assert!(
+            validate_perfetto(
+                "{\"traceEvents\": [{\"ph\": \"s\", \"id\": 3, \"ts\": 0}]}"
+            )
+            .is_err(),
+            "unmatched flow open"
+        );
+    }
+
+    #[test]
+    fn summary_counts_components() {
+        let tl = sample_timeline();
+        let mut s = AttributionSummary::new();
+        s.add(tl.attribution.as_ref().unwrap());
+        s.add(tl.attribution.as_ref().unwrap());
+        assert_eq!(s.count, 2);
+        let j = s.to_json();
+        assert_eq!(j.get("count").as_u64(), Some(2));
+        assert!(j.get("prefill_s").get("mean_s").as_f64().unwrap() > 0.0);
+        assert!(j.get("decode_gap_s").get("hist").get("counts").as_arr().is_some());
+    }
+}

@@ -44,6 +44,7 @@ use super::scheduler::{
     HostTierConfig, HostTierStats, KvPolicy, PrefixCacheConfig, PrefixStats, Scheduler,
     SchedulerPolicy,
 };
+use super::trace::SpanEvent;
 use super::{Coordinator, Request, RequestHandle, TokenEvent};
 
 /// Length distribution for prompts/outputs.
@@ -279,6 +280,11 @@ pub struct VirtualConfig {
     /// router health mask, slow-worker degradation) on virtual time.
     /// [`FaultPlan::default`] is inert.
     pub faults: FaultPlan,
+    /// Record per-request lifecycle timelines ([`super::trace`]). Off by
+    /// default; strictly observational — streams, counters, and every
+    /// pre-existing report field are bit-identical either way (pinned by
+    /// the trace-noninterference property).
+    pub trace: bool,
     /// Batched per-step latency model.
     pub step: StepModel,
 }
@@ -305,6 +311,7 @@ impl VirtualConfig {
             spill_after_s: super::router::DEFAULT_SPILL_AFTER_S,
             host_tier: HostTierConfig::off(),
             faults: FaultPlan::default(),
+            trace: false,
             step,
         }
     }
@@ -432,6 +439,13 @@ pub struct VirtualReport {
     /// KV blocks still held across all workers when the run drained —
     /// must be 0, or some exit path leaked pager budget.
     pub end_kv_blocks_in_use: usize,
+    /// Per-request lifecycle timelines, sorted by request id — present
+    /// only with [`VirtualConfig::trace`] on (empty otherwise). Requests
+    /// orphaned by a fleet halt have no terminal event and are omitted.
+    pub timelines: Vec<super::trace::RequestTimeline>,
+    /// Aggregate latency attribution over finished traced requests
+    /// (`None` with tracing off).
+    pub attribution: Option<super::trace::AttributionSummary>,
 }
 
 /// A virtual slot: the shared [`Lane`] plus virtual-time bookkeeping.
@@ -696,6 +710,8 @@ pub fn run_virtual_plan_jobs(
         worker_peak_lanes: vec![0; vc.workers],
         max_active: vc.max_active,
         faults: FaultCounters::default(),
+        trace: super::trace::VTrace::new(vc.trace),
+        host_tier: vc.host_tier,
     };
     let fp = &vc.faults;
     let mut wall_s = 0.0f64;
@@ -789,6 +805,14 @@ pub fn run_virtual_plan_jobs(
                         let loads = st.loads(&queues);
                         st.router.route(&job.request.prompt, &loads)
                     };
+                    st.trace.record(
+                        rid as u64,
+                        ta,
+                        SpanEvent::Submitted {
+                            deadline_s: job.request.deadline_s.unwrap_or(f64::INFINITY),
+                        },
+                    );
+                    st.trace.record(rid as u64, ta, SpanEvent::Routed { worker: wi });
                     // A resume-carrying job is a fleet failover hop:
                     // it re-enters through the restore-vs-recompute
                     // machinery and keeps its delivery history.
@@ -914,6 +938,7 @@ pub fn run_virtual_plan_jobs(
                     &mut st.tpot_samples,
                     fp,
                     &mut st.faults,
+                    &mut st.trace,
                 );
                 st.dispatch(&queues, ts);
             }
@@ -998,6 +1023,11 @@ pub fn run_virtual_plan_jobs(
                     match st.router.failover_target(k, vc.workers) {
                         Some(t) => {
                             st.faults.failovers += 1;
+                            st.trace.record(
+                                s.rid as u64,
+                                now,
+                                SpanEvent::Failover { from: wi, to: t },
+                            );
                             let (request, state) = s.lane.into_resume();
                             queues.push_front(
                                 t,
@@ -1019,6 +1049,11 @@ pub fn run_virtual_plan_jobs(
                         None => {
                             // Sole worker: fail visibly, never strand.
                             st.faults.failed += 1;
+                            st.trace.record(
+                                s.rid as u64,
+                                now,
+                                SpanEvent::Failed { cause: "crash_no_sibling".into() },
+                            );
                             st.records[s.rid] = Some(failed_record(s.rid, s.arrival_s, now));
                         }
                     }
@@ -1048,9 +1083,19 @@ pub fn run_virtual_plan_jobs(
                     // (blocks were already released by the eviction).
                     st.faults.shed_livelock += 1;
                     st.faults.failed += 1;
+                    st.trace.record(
+                        s.rid as u64,
+                        now,
+                        SpanEvent::Shed { reason: "preempt_livelock".into() },
+                    );
                     st.records[s.rid] = Some(failed_record(s.rid, s.arrival_s, now));
                     continue;
                 }
+                st.trace.record(
+                    s.rid as u64,
+                    now,
+                    SpanEvent::Preempted { demoted_blocks: s.lane.kv_blocks() },
+                );
                 let (request, state) = s.lane.into_resume();
                 queues.push_front(
                     wi,
@@ -1151,6 +1196,8 @@ pub fn run_virtual_plan_jobs(
     // crash salvage, shed) releases its lane, so this must be 0 at the
     // end of any drained run — asserted by the fault tests and bench.
     let end_kv_blocks_in_use = st.workers.iter().map(|w| w.kv.blocks_in_use()).sum();
+    let timelines = std::mem::take(&mut st.trace).finish();
+    let attribution = vc.trace.then(|| super::trace::summarize(&timelines));
     let f = st.faults;
     let report = VirtualReport {
         policy: vc.policy,
@@ -1188,6 +1235,8 @@ pub fn run_virtual_plan_jobs(
         failed: f.failed,
         orphaned: orphans.len(),
         end_kv_blocks_in_use,
+        timelines,
+        attribution,
         records,
     };
     Ok((report, orphans))
@@ -1213,6 +1262,11 @@ struct VState {
     worker_peak_lanes: Vec<usize>,
     max_active: usize,
     faults: FaultCounters,
+    /// Lifecycle recorder (no-op unless `VirtualConfig::trace`).
+    trace: super::trace::VTrace,
+    /// Shared restore pricing so `Restored{restore_s}` payloads are
+    /// bit-identical with the threaded driver's.
+    host_tier: HostTierConfig,
 }
 
 /// Recovery accounting for the virtual run — one struct so
@@ -1316,10 +1370,15 @@ impl VState {
                                 // instead of admitting late.
                                 self.faults.shed_expired += 1;
                                 self.faults.failed += 1;
+                                self.trace.record(
+                                    pending.rid as u64,
+                                    now,
+                                    SpanEvent::Shed { reason: "deadline".into() },
+                                );
                                 self.records[pending.rid] =
                                     Some(failed_record(pending.rid, pending.arrival_s, now));
                             } else {
-                                self.admit(wi, pending);
+                                self.admit(wi, pending, now);
                             }
                             progress = true;
                         }
@@ -1328,6 +1387,11 @@ impl VState {
                             // uniform): refuse, and record an empty
                             // stream so the report stays
                             // one-row-per-request.
+                            self.trace.record(
+                                pending.rid as u64,
+                                now,
+                                SpanEvent::Shed { reason: "kv_reject".into() },
+                            );
                             self.records[pending.rid] = Some(VirtualRecord {
                                 request_id: pending.rid,
                                 arrival_s: pending.arrival_s,
@@ -1352,7 +1416,7 @@ impl VState {
     /// Admit one popped job into worker `wi`'s slot table (reservation,
     /// session at the cached position, resume carry, gauges) — the
     /// virtual mirror of the threaded admission arm.
-    fn admit(&mut self, wi: usize, pending: VPending) {
+    fn admit(&mut self, wi: usize, pending: VPending, now: f64) {
         let init_ctx = pending.init_ctx();
         let VPending { arrival_s, rid, request, resume, failover } = pending;
         let worst = request.worst_case_tokens();
@@ -1365,6 +1429,19 @@ impl VState {
             Some(r) => w.kv.reserve_resumed(&request.prompt, &r.state, init_ctx, worst),
             None => w.kv.reserve_admitted(&request.prompt, init_ctx, worst),
         };
+        match &resume {
+            // Readmission (preempt resume or failover hop): the event
+            // names the path — restored KV (with the shared host-tier
+            // pricing, so the payload matches the threaded driver
+            // bitwise) or recompute from scratch.
+            Some(_) if holdings.restored > 0 => self.trace.record(
+                rid as u64,
+                now,
+                SpanEvent::Restored { restore_s: self.host_tier.restore_s(holdings.restored) },
+            ),
+            Some(_) => self.trace.record(rid as u64, now, SpanEvent::Recomputed),
+            None => self.trace.record(rid as u64, now, SpanEvent::Admitted),
+        }
         if failover {
             // Restore-vs-recompute split for salvaged lanes, same
             // bookkeeping as the threaded metrics.
@@ -1428,6 +1505,7 @@ fn finish_step(
     tpot_samples: &mut Vec<f64>,
     fp: &FaultPlan,
     counters: &mut FaultCounters,
+    vt: &mut super::trace::VTrace,
 ) {
     let batch = std::mem::take(&mut w.batch);
     let injected = std::mem::take(&mut w.injected);
@@ -1439,6 +1517,11 @@ fn finish_step(
             let attempt = w.slots[p.slot].lane.note_retry();
             if attempt <= fp.retry_budget {
                 counters.retries += 1;
+                vt.record(
+                    w.slots[p.slot].rid as u64,
+                    now,
+                    SpanEvent::Retry { backoff_s: fp.backoff_s(attempt) },
+                );
             } else {
                 retire.push((p.slot, true));
             }
@@ -1452,6 +1535,13 @@ fn finish_step(
         }
         let logits = logits.expect("span is non-empty");
         let was_prefill = s.lane.in_prefill();
+        if was_prefill {
+            vt.record(
+                s.rid as u64,
+                now,
+                SpanEvent::PrefillSpan { len: p.span, cached_skip: s.lane.prefix_hit() },
+            );
+        }
         match s.lane.absorb(p.span, &logits) {
             Absorbed::Prefilling => {
                 w.scheduler.note_progress(p.slot, s.lane.tokens_emitted());
@@ -1463,6 +1553,7 @@ fn finish_step(
                     // prefix becomes shareable.
                     w.kv.on_prefill_complete(&s.lane);
                 }
+                vt.record(s.rid as u64, now, SpanEvent::DecodeStep);
                 if s.first_token_s.is_none() {
                     s.first_token_s = Some(now);
                 } else {
@@ -1484,8 +1575,14 @@ fn finish_step(
         w.kv.release_lane(&s.lane);
         if failed {
             counters.failed += 1;
+            vt.record(
+                s.rid as u64,
+                now,
+                SpanEvent::Failed { cause: "retry_exhausted".into() },
+            );
             records[s.rid] = Some(failed_record(s.rid, s.arrival_s, now));
         } else {
+            vt.record(s.rid as u64, now, SpanEvent::Finished);
             records[s.rid] = Some(VirtualRecord {
                 request_id: s.rid,
                 arrival_s: s.arrival_s,

@@ -10,10 +10,10 @@ use std::sync::Arc;
 use lpu::compiler::{compile, CompileOpts, ParallelMode};
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    ArrivalTrace, AutoscaleConfig, BackendFactory, Cluster, ClusterConfig,
-    ClusterFaultPlan, Coordinator, CoordinatorConfig, FaultPlan, HostTierConfig,
-    KvPolicy, PrefixCacheConfig, RouterPolicy, SchedulerPolicy, SloTierSpec, StepModel,
-    VirtualConfig,
+    perfetto_json, validate_perfetto, ArrivalTrace, AutoscaleConfig, BackendFactory,
+    Cluster, ClusterConfig, ClusterFaultPlan, Coordinator, CoordinatorConfig, FaultPlan,
+    HostTierConfig, KvPolicy, PrefixCacheConfig, RequestTimeline, RouterPolicy,
+    SchedulerPolicy, SloTierSpec, StepModel, VirtualConfig, DEFAULT_TRACE_RING,
 };
 use lpu::esl::cluster::{scaling_sweep, speedup_per_doubling};
 use lpu::isa::asm;
@@ -32,10 +32,10 @@ const COMMANDS: &[Command] = &[
     Command { name: "asm", about: "assemble LPU assembly to a binary", usage: "<in.s> <out.lpubin>" },
     Command { name: "disasm", about: "disassemble an LPU binary", usage: "<in.lpubin>" },
     Command { name: "chip", about: "ASIC area/power estimate (Fig 6a)", usage: "[--config asic]" },
-    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..] [--cluster-fault-plan probe=S,crash=R@T,partition=R@T1..T2,slow=RxF] [--hedge <deadline_fraction>]" },
+    Command { name: "serve", about: "serve models over TCP JSON-lines", usage: "--model opt-tiny [--backend pjrt|sim] [--addr 127.0.0.1:7071] [--workers 2] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--max-active 8] [--max-batch 0] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefill-chunk N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..] [--cluster-fault-plan probe=S,crash=R@T,partition=R@T1..T2,slow=RxF] [--hedge <deadline_fraction>] [--trace-out FILE]" },
     Command { name: "client", about: "send a generate request to a server", usage: "--addr 127.0.0.1:7071 --model opt-tiny --prompt 1,2,3 [--tokens 16]" },
     Command { name: "validate", about: "validate the PJRT bridge against the python golden vector", usage: "--model opt-tiny" },
-    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>|mixed:<ttft_s>:<fraction>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..] [--trace uniform|diurnal:<period_s>:<depth>|flash:<at_s>:<dur_s>:<mag>] [--cluster-fault-plan probe=S,crash=R@T,partition=R@T1..T2,slow=RxF] [--hedge <deadline_fraction>]" },
+    Command { name: "loadtest", about: "open-loop Poisson load study against an in-process pool", usage: "--model opt-tiny [--backend sim|pjrt] [--rates 50,200,1000] [--requests 100] [--policy rr|fcfs|sjf] [--router round-robin|least-loaded|prefix-affinity] [--prefill-chunk N] [--kv-budget-mb N] [--kv-policy reserve|paged|paged:<tokens>] [--kv-host-mb N] [--prefix-cache on|off|on:<blocks>] [--fault-plan seed=S,transient=R,retries=N,backoff=S,crash=W@K,slow=WxF] [--replicas N] [--slo-tier batch|interactive:<ttft_s>|mixed:<ttft_s>:<fraction>] [--autoscale min=..,max=..,interval=..,warmup=..,up=..,down=..] [--trace uniform|diurnal:<period_s>:<depth>|flash:<at_s>:<dur_s>:<mag>] [--cluster-fault-plan probe=S,crash=R@T,partition=R@T1..T2,slow=RxF] [--hedge <deadline_fraction>] [--trace-out FILE]" },
 ];
 
 fn policy_arg(args: &Args) -> Result<SchedulerPolicy, String> {
@@ -192,6 +192,67 @@ fn cluster_step_model(model: &str) -> Result<StepModel, String> {
     })?;
     let device = LpuConfig::by_name("asic").expect("registry device config");
     Ok(StepModel::from_config(&m, &device, 1))
+}
+
+/// Export request timelines as Chrome/Perfetto trace_events JSON,
+/// self-validate the document (well-formed, nonempty, every flow id
+/// resolves), and spot-check the attribution identity on one request.
+/// Prints a `trace-ok:` marker on success (ci greps for it).
+fn write_trace_out(path: &str, timelines: &[RequestTimeline]) -> Result<(), String> {
+    let src = perfetto_json(timelines).to_string();
+    let events = validate_perfetto(&src)
+        .map_err(|e| format!("exported trace failed self-validation: {e}"))?;
+    if let Some(a) = timelines.iter().find_map(|t| t.attribution) {
+        if a.component_sum().to_bits() != a.total_s().to_bits() {
+            return Err(format!(
+                "attribution identity broken in exported trace: components sum to {} \
+                 but ttft+decode is {}",
+                a.component_sum(),
+                a.total_s()
+            ));
+        }
+    }
+    std::fs::write(path, &src).map_err(|e| format!("writing {path}: {e}"))?;
+    println!(
+        "trace-ok: {events} trace events ({} timelines) -> {path}; open at \
+         https://ui.perfetto.dev",
+        timelines.len()
+    );
+    Ok(())
+}
+
+/// Background flusher for `serve --trace-out`: every couple of seconds
+/// rewrite FILE with a Perfetto export of whatever the flight recorder
+/// currently holds (the ring is bounded, so the file is a rolling
+/// last-N window, not an append log).
+fn spawn_trace_flusher(
+    path: String,
+    collect: impl Fn() -> Vec<RequestTimeline> + Send + 'static,
+) -> Result<(), String> {
+    std::thread::Builder::new()
+        .name("lpu-trace-flush".into())
+        .spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(2));
+            let src = perfetto_json(&collect()).to_string();
+            let _ = std::fs::write(&path, src);
+        })
+        .map(|_| ())
+        .map_err(|e| e.to_string())
+}
+
+/// Gather completed timelines across a fleet: the cluster's own tracer
+/// plus each replica coordinator's. Replica-local request ids collide
+/// across replicas, so each replica's ids are rebased onto a disjoint
+/// range to keep Perfetto flow ids distinct.
+fn collect_cluster_timelines(cluster: &Cluster) -> Vec<RequestTimeline> {
+    let mut tls = cluster.tracer.completed();
+    for (i, c) in cluster.replicas().iter().enumerate() {
+        for mut tl in c.tracer.completed() {
+            tl.request_id |= (i as u64 + 1) << 32;
+            tls.push(tl);
+        }
+    }
+    tls
 }
 
 fn main() {
@@ -390,6 +451,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // prompt tokens per fused step, interleaved with decode steps so a
     // long prompt stops inflating co-batched streams' TPOT.
     let prefill_chunk = args.opt_usize("prefill-chunk", 0)?;
+    // --trace-out FILE: turn the request-lifecycle tracer on and keep
+    // FILE refreshed with a Perfetto export of the flight-recorder ring
+    // (distinct from loadtest's --trace, which shapes arrival traces).
+    let trace_out = args.opt("trace-out").map(String::from);
     let fault_desc = if faults.is_active() {
         ", fault injection ON".to_string()
     } else {
@@ -407,6 +472,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         router,
         host_tier,
         faults,
+        trace: trace_out.is_some(),
         ..CoordinatorConfig::default()
     };
 
@@ -414,7 +480,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         // Fleet mode: N replicas behind the SLO-aware front-end.
         if args.opt("trace").is_some() {
             return Err(
-                "--trace shapes generated workloads; it applies to loadtest, not serve".into(),
+                "--trace shapes generated workloads; it applies to loadtest, not serve \
+                 (for Perfetto span export use --trace-out FILE)"
+                    .into(),
             );
         }
         let FleetArgs { replicas, tier, autoscale, faults: cfaults, hedge_fraction, .. } =
@@ -446,6 +514,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         cc.default_deadline_s = default_deadline_s;
         cc.faults = cfaults;
         cc.hedge_fraction = hedge_fraction;
+        cc.trace = trace_out.is_some();
         let autoscale_desc = cc.autoscale.map_or("autoscale off".to_string(), |a| {
             format!("autoscale {}..{}", a.min_replicas, a.max_replicas)
         });
@@ -468,14 +537,20 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             None => "batch tier".to_string(),
             Some(d) => format!("interactive tier, TTFT budget {d}s"),
         };
-        let cluster = Cluster::threaded(&cc, &model, || {
+        let cluster = Arc::new(Cluster::threaded(&cc, &model, || {
             let mut c = Coordinator::new(cfg.clone());
             c.add_pool(&model, workers, make_factory());
             c
-        })?;
+        })?);
+        if let Some(path) = trace_out.clone() {
+            spawn_trace_flusher(path, {
+                let cl = Arc::clone(&cluster);
+                move || collect_cluster_timelines(&cl)
+            })?;
+        }
         let (slots, active) = (cluster.replica_count(), cluster.active_replicas());
-        let handle =
-            server::serve_cluster(Arc::new(cluster), addr).map_err(|e| e.to_string())?;
+        let handle = server::serve_cluster(Arc::clone(&cluster), addr)
+            .map_err(|e| e.to_string())?;
         println!(
             "serving '{model}' fleet ({backend}, {active}/{slots} replicas active, \
              {tier_desc}, {autoscale_desc}{fault_desc}{chaos_desc}{hedge_desc}) on {} \
@@ -489,7 +564,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
     let mut coord = Coordinator::new(cfg);
     coord.add_pool(&model, workers, make_factory());
-    let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
+    let coord = Arc::new(coord);
+    if let Some(path) = trace_out.clone() {
+        spawn_trace_flusher(path, {
+            let tracer = Arc::clone(&coord.tracer);
+            move || tracer.completed()
+        })?;
+    }
+    let handle = server::serve(Arc::clone(&coord), addr).map_err(|e| e.to_string())?;
     let prefill_desc = if prefill_chunk == 0 {
         "single-pass prefill".to_string()
     } else {
@@ -562,6 +644,16 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
     let (kv_bytes_per_token, kv_budget_bytes, kv_policy, prefix_cache, host_tier) =
         kv_args(args, &model)?;
     let workers = args.opt_usize("workers", 2)?;
+    let rates: Vec<f64> = args
+        .opt_or("rates", "50,200,1000")
+        .split(',')
+        .map(|r| r.trim().parse().map_err(|_| format!("bad rate '{r}'")))
+        .collect::<Result<_, _>>()?;
+    // --trace-out FILE: record request lifecycles and export a
+    // Perfetto trace of the whole study after the last rate (distinct
+    // from --trace, which shapes cluster arrival intensity). The ring
+    // is sized to hold every request so nothing is evicted mid-study.
+    let trace_out = args.opt("trace-out").map(String::from);
     let cfg = CoordinatorConfig {
         max_active_per_worker: args.opt_usize("max-active", 4)?,
         policy,
@@ -573,14 +665,10 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         router,
         host_tier,
         faults,
+        trace: trace_out.is_some(),
+        trace_ring: n_requests.saturating_mul(rates.len().max(1)).max(DEFAULT_TRACE_RING),
         ..CoordinatorConfig::default()
     };
-
-    let rates: Vec<f64> = args
-        .opt_or("rates", "50,200,1000")
-        .split(',')
-        .map(|r| r.trim().parse().map_err(|_| format!("bad rate '{r}'")))
-        .collect::<Result<_, _>>()?;
 
     if let Some(fleet) = cluster_args(args)? {
         // Fleet mode: a fresh threaded cluster per offered rate, fed a
@@ -602,6 +690,8 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         cc.autoscale = autoscale;
         cc.faults = cfaults;
         cc.hedge_fraction = hedge_fraction;
+        cc.trace = trace_out.is_some();
+        let mut trace_tls: Vec<RequestTimeline> = Vec::new();
         let mut t = Table::new(
             format!(
                 "cluster load study: {model} ({backend} backend, {replicas} replicas, \
@@ -663,6 +753,10 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
                 s.streams_failed_over.to_string(),
                 format!("{}/{}", s.hedges_won, s.hedges_issued),
             ]);
+            if trace_out.is_some() {
+                // Keep the last rate's fleet-wide timelines for export.
+                trace_tls = collect_cluster_timelines(&cluster);
+            }
             cluster.shutdown();
         }
         t.note(format!(
@@ -671,6 +765,9 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
             fraction * 100.0
         ));
         t.print();
+        if let Some(path) = &trace_out {
+            write_trace_out(path, &trace_tls)?;
+        }
         return Ok(());
     }
 
@@ -701,6 +798,10 @@ fn cmd_loadtest(args: &Args) -> Result<(), String> {
         ]);
     }
     t.print();
+    if let Some(path) = &trace_out {
+        let (tls, _) = coord.tracer.drain();
+        write_trace_out(path, &tls)?;
+    }
     coord.shutdown();
     Ok(())
 }
@@ -778,6 +879,16 @@ mod tests {
         assert!(err.contains("flash:bad"), "{err}");
         let err = cluster_args(&argv(&["--replicas", "2", "--trace", "diurnal:60:x"])).unwrap_err();
         assert!(err.contains('x'), "{err}");
+    }
+
+    #[test]
+    fn trace_flag_confusion_points_at_trace_out() {
+        // --trace (arrival-trace shape) is one typo away from
+        // --trace-out (Perfetto export); a bad value must name the
+        // other flag so the user lands on the right one.
+        let err =
+            cluster_args(&argv(&["--replicas", "2", "--trace", "spans.json"])).unwrap_err();
+        assert!(err.contains("--trace-out"), "{err}");
     }
 
     #[test]

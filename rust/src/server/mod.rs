@@ -11,6 +11,8 @@
 //! ← {"type":"done","request_id":1,"tokens":[42,...],"reason":"length"}
 //! → {"op":"metrics"}
 //! ← {"type":"metrics", ...snapshot fields...}
+//! → {"op":"trace"}
+//! ← {"type":"trace","enabled":true,"timelines":[...],"digest":{...}}
 //! → {"op":"models"}
 //! ← {"type":"models","models":["opt-tiny"]}
 //! ```
@@ -30,6 +32,15 @@
 //! a `replica_health` boolean array (false = ejected by the fault
 //! plan's health state machine), and a `replica_pools` array of
 //! per-replica pool gauges.
+//!
+//! The `trace` op drains the served tracer's flight recorder (the ring
+//! of last-N completed request timelines plus a monotonic shed/failure
+//! "why" digest — see [`crate::coordinator::Tracer`]). Draining
+//! empties the ring; the digest keeps accumulating across drains. On
+//! the fleet path the frame adds a `replica_traces` array with each
+//! replica coordinator's drain (fleet-level timelines only exist when
+//! the pump wrapper is active — fault plan or hedging — so per-request
+//! detail usually lives in `replica_traces`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -161,6 +172,14 @@ fn handle_conn(stream: TcpStream, served: Served) {
                             // Per-pool prefill/prefix gauges: which model's
                             // prompts are long, chunked, or cache-friendly.
                             o.insert("pools", coord.pools_json());
+                            if coord.tracer.enabled() {
+                                // Latency attribution rollup over traced
+                                // completions (tracing on only).
+                                o.insert(
+                                    "attribution",
+                                    coord.tracer.attribution_summary().to_json(),
+                                );
+                            }
                         }
                         Served::Fleet(cluster) => {
                             // Fleet shape + per-replica pool gauges: the
@@ -188,7 +207,35 @@ fn handle_conn(stream: TcpStream, served: Served) {
                                         .collect(),
                                 ),
                             );
+                            if cluster.tracer.enabled() {
+                                o.insert(
+                                    "attribution",
+                                    cluster.tracer.attribution_summary().to_json(),
+                                );
+                            }
                         }
+                    }
+                }
+                let _ = writeln!(writer, "{j}");
+            }
+            Some("trace") => {
+                let mut j = match &served {
+                    Served::Pool(coord) => coord.tracer.drain_json(),
+                    Served::Fleet(cluster) => cluster.tracer.drain_json(),
+                };
+                if let Json::Obj(o) = &mut j {
+                    o.insert("type", "trace".into());
+                    if let Served::Fleet(cluster) = &served {
+                        o.insert(
+                            "replica_traces",
+                            Json::Arr(
+                                cluster
+                                    .replicas()
+                                    .iter()
+                                    .map(|c| c.tracer.drain_json())
+                                    .collect(),
+                            ),
+                        );
                     }
                 }
                 let _ = writeln!(writer, "{j}");
@@ -381,6 +428,12 @@ impl Client {
 
     pub fn metrics(&mut self) -> Result<Json, String> {
         self.roundtrip(&obj(vec![("op", "metrics".into())]))
+    }
+
+    /// Drain the server's flight recorder: the last-N completed request
+    /// timelines plus the monotonic shed/failure digest.
+    pub fn trace(&mut self) -> Result<Json, String> {
+        self.roundtrip(&obj(vec![("op", "trace".into())]))
     }
 
     pub fn generate(

@@ -171,6 +171,120 @@ impl Histogram {
     }
 }
 
+/// Log-spaced histogram for latency-style samples: fixed bucket bounds
+/// at `buckets_per_decade` per decade over `[lo, hi)` seconds, plus an
+/// underflow bucket below `lo` and an overflow bucket at `hi` and
+/// above. The full `bounds + counts` arrays export through the server's
+/// `metrics` op and the bench JSONs (not just p50/p95/p99), so a
+/// scraper can rebuild the whole distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    /// Upper bucket edges, ascending. Bucket `i` counts samples in
+    /// `[bounds[i-1], bounds[i])` (bucket 0: `(-inf, bounds[0])`); the
+    /// final count is the overflow bucket `[bounds.last(), inf)`.
+    bounds: Vec<f64>,
+    /// Bucket counts; always `bounds.len() + 1` entries.
+    counts: Vec<u64>,
+}
+
+impl Default for LogHistogram {
+    /// The standard latency histogram ([`LogHistogram::latency`]), so
+    /// metric structs holding one can keep deriving `Default`.
+    fn default() -> Self {
+        LogHistogram::latency()
+    }
+}
+
+impl LogHistogram {
+    /// A histogram with log-spaced bounds from `lo` to `hi` seconds at
+    /// `per_decade` edges per decade.
+    pub fn log_spaced(lo: f64, hi: f64, per_decade: usize) -> LogHistogram {
+        assert!(lo > 0.0 && hi > lo && per_decade > 0);
+        let mut bounds = Vec::new();
+        let exp = lo.log10();
+        let step = 1.0 / per_decade as f64;
+        // Recompute each edge from lo's exponent so the bounds are a
+        // pure function of (lo, hi, per_decade) — no accumulation
+        // drift between two histograms built the same way.
+        let mut i = 0usize;
+        loop {
+            let edge = 10f64.powf(exp + step * i as f64);
+            if edge > hi * (1.0 + 1e-12) {
+                break;
+            }
+            bounds.push(edge);
+            i += 1;
+        }
+        let counts = vec![0; bounds.len() + 1];
+        LogHistogram { bounds, counts }
+    }
+
+    /// The standard latency histogram: 1 µs to 1000 s, 4 buckets per
+    /// decade (37 edges, 38 counts) — wide enough for queueing tails
+    /// under overload and fine enough to see a p99 shift of ~2x.
+    pub fn latency() -> LogHistogram {
+        LogHistogram::log_spaced(1e-6, 1e3, 4)
+    }
+
+    /// Build the standard latency histogram over a sample set.
+    pub fn of(samples: &[f64]) -> LogHistogram {
+        let mut h = LogHistogram::latency();
+        for &s in samples {
+            h.add(s);
+        }
+        h
+    }
+
+    /// Count one sample (non-finite samples are dropped, matching the
+    /// metrics hub's reservoir hygiene).
+    pub fn add(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let i = self.bounds.partition_point(|&b| b <= x);
+        self.counts[i] += 1;
+    }
+
+    /// Total samples counted.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Upper bucket edges, ascending.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Bucket counts (`bounds().len() + 1` entries; last = overflow).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Merge another histogram built with identical bounds.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram bounds mismatch");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+    }
+
+    /// `{"bounds_s": [...], "counts": [...]}` for the metrics op and
+    /// bench JSON exports.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj(vec![
+            (
+                "bounds_s",
+                Json::Arr(self.bounds.iter().map(|&b| b.into()).collect()),
+            ),
+            (
+                "counts",
+                Json::Arr(self.counts.iter().map(|&c| c.into()).collect()),
+            ),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +337,30 @@ mod tests {
         assert!(s.p95 > 94.0 && s.p95 <= 96.5);
         assert!(s.p99 > 98.0 && s.p99 <= 100.0);
         assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn log_histogram_buckets_and_determinism() {
+        let mut h = LogHistogram::latency();
+        assert_eq!(h.bounds().len(), 37);
+        assert_eq!(h.counts().len(), 38);
+        h.add(0.0); // below lo -> underflow bucket 0
+        h.add(0.01);
+        h.add(1e9); // above hi -> overflow (last bucket)
+        h.add(f64::NAN); // dropped
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(*h.counts().last().unwrap(), 1);
+        // Bounds are a pure function of (lo, hi, per_decade): two
+        // independently built histograms are bitwise-mergeable.
+        let mut other = LogHistogram::latency();
+        other.add(0.01);
+        h.merge(&other);
+        assert_eq!(h.total(), 4);
+        let j = h.to_json();
+        assert_eq!(j.get("bounds_s").as_arr().unwrap().len(), 37);
+        assert_eq!(j.get("counts").as_arr().unwrap().len(), 38);
+        assert_eq!(LogHistogram::default().bounds(), LogHistogram::latency().bounds());
     }
 
     #[test]

@@ -130,6 +130,15 @@ fn bench_serving_schema_is_pinned() {
             "prefix_cache_summary.prefix_hit_tokens",
             "prefix_cache_summary.shared_blocks",
             "prefix_cache_summary.cow_splits",
+            "trace_overhead_summary",
+            "trace_overhead_summary.n_requests",
+            "trace_overhead_summary.workers",
+            "trace_overhead_summary.streams_identical",
+            "trace_overhead_summary.virtual_wall_s",
+            "trace_overhead_summary.timelines_recorded",
+            "trace_overhead_summary.wall_off_best_s",
+            "trace_overhead_summary.wall_on_best_s",
+            "trace_overhead_summary.overhead_ratio",
             "cells",
         ],
         &["note"],

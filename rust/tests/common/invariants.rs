@@ -21,7 +21,10 @@
 //! for property-test closures (compose with `?`), and the panicking
 //! [`assert_standing_contract`] entry point for `#[test]` bodies.
 
-use lpu::coordinator::{ClusterReport, SloTier, VirtualReport};
+use lpu::coordinator::trace::COMPONENTS;
+use lpu::coordinator::{
+    Attribution, ClusterReport, RequestTimeline, SloTier, SpanEvent, VirtualReport,
+};
 
 /// Per-record well-formedness + the KV-leak gate on one virtual run
 /// (contract points 3 and 4).
@@ -335,6 +338,158 @@ pub fn fleet_kv_clean(r: &ClusterReport) -> Result<(), String> {
                     vr.end_kv_blocks_in_use
                 ));
             }
+        }
+    }
+    Ok(())
+}
+
+// ---- request-lifecycle trace extensions of the same contract ----
+
+/// Structural well-formedness of one recorded timeline: opens with
+/// `Submitted`, timestamps never go backwards, exactly one terminal
+/// event and it comes last, and — when the timeline is sealed — the
+/// attribution both recomputes to itself and satisfies the identity
+/// `Σ components == ttft + decode` bitwise with no meaningfully
+/// negative component.
+pub fn timeline_well_formed(tl: &RequestTimeline) -> Result<(), String> {
+    let rid = tl.request_id;
+    if tl.events.is_empty() {
+        return Err(format!("request {rid}: empty timeline"));
+    }
+    if !matches!(tl.events[0].ev, SpanEvent::Submitted { .. }) {
+        return Err(format!(
+            "request {rid}: timeline opens with {} instead of Submitted",
+            tl.events[0].ev.kind()
+        ));
+    }
+    if tl.events.windows(2).any(|w| w[0].t_s > w[1].t_s) {
+        return Err(format!("request {rid}: timeline timestamps go backwards"));
+    }
+    for (i, e) in tl.events.iter().enumerate() {
+        let last = i + 1 == tl.events.len();
+        if e.ev.is_terminal() != last {
+            return Err(format!(
+                "request {rid}: {} event {} of {} (terminal events must come last, \
+                 exactly once)",
+                e.ev.kind(),
+                i + 1,
+                tl.events.len()
+            ));
+        }
+    }
+    if tl.events[1..].iter().any(|e| matches!(e.ev, SpanEvent::Submitted { .. })) {
+        return Err(format!("request {rid}: Submitted recorded twice"));
+    }
+    if let Some(a) = &tl.attribution {
+        if Attribution::from_timeline(tl) != Some(*a) {
+            return Err(format!(
+                "request {rid}: sealed attribution does not recompute from the events \
+                 (corrupted timeline or stale seal)"
+            ));
+        }
+        if a.component_sum().to_bits() != a.total_s().to_bits() {
+            return Err(format!(
+                "request {rid}: attribution identity broken: components sum to {} but \
+                 ttft+decode is {}",
+                a.component_sum(),
+                a.total_s()
+            ));
+        }
+        for (name, v) in COMPONENTS.iter().zip(a.components()) {
+            if v < -1e-9 {
+                return Err(format!("request {rid}: negative {name} component {v}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Pool-level trace/record agreement on a traced virtual run: one
+/// timeline per record, each well-formed, with the decode walk exactly
+/// matching the record — one `DecodeStep` per token, first step at
+/// `first_token_s`, last at `done_s` (bitwise; both drivers stamp the
+/// same virtual clock).
+pub fn timelines_match_records(r: &VirtualReport) -> Result<(), String> {
+    if r.timelines.len() != r.records.len() {
+        return Err(format!(
+            "{} timelines for {} records",
+            r.timelines.len(),
+            r.records.len()
+        ));
+    }
+    for (tl, rec) in r.timelines.iter().zip(&r.records) {
+        timeline_well_formed(tl)?;
+        if tl.request_id != rec.request_id as u64 {
+            return Err(format!(
+                "timeline {} paired with record {}",
+                tl.request_id, rec.request_id
+            ));
+        }
+        // The exact decode-walk contract holds for streams that ran to
+        // completion; failed/shed streams legitimately stop partway.
+        if !matches!(tl.events.last().map(|e| &e.ev), Some(SpanEvent::Finished)) {
+            continue;
+        }
+        let steps: Vec<f64> = tl
+            .events
+            .iter()
+            .filter(|e| matches!(e.ev, SpanEvent::DecodeStep))
+            .map(|e| e.t_s)
+            .collect();
+        if steps.len() != rec.tokens.len() {
+            return Err(format!(
+                "request {}: {} DecodeStep events for {} tokens",
+                rec.request_id,
+                steps.len(),
+                rec.tokens.len()
+            ));
+        }
+        if let (Some(&first), Some(&last)) = (steps.first(), steps.last()) {
+            if first != rec.first_token_s || last != rec.done_s {
+                return Err(format!(
+                    "request {}: decode walk [{first}, {last}] disagrees with record \
+                     [{}, {}]",
+                    rec.request_id, rec.first_token_s, rec.done_s
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fleet-level trace/record agreement on a traced cluster run: one
+/// stitched timeline per arrival, each well-formed, terminal agreeing
+/// with the record outcome. Decode counts are NOT matched here — a
+/// failover-resumed stream's winner hop replays fewer steps than the
+/// client saw tokens, by design.
+pub fn cluster_timelines_match_records(r: &ClusterReport) -> Result<(), String> {
+    if r.timelines.len() != r.records.len() {
+        return Err(format!(
+            "{} timelines for {} cluster records",
+            r.timelines.len(),
+            r.records.len()
+        ));
+    }
+    for (tl, rec) in r.timelines.iter().zip(&r.records) {
+        timeline_well_formed(tl)?;
+        if tl.request_id != rec.request_id as u64 {
+            return Err(format!(
+                "timeline {} paired with cluster record {}",
+                tl.request_id, rec.request_id
+            ));
+        }
+        let terminal = tl.events.last().map(|e| e.ev.kind()).unwrap_or("none");
+        if rec.shed && terminal != "shed" {
+            return Err(format!(
+                "request {}: shed at admission but timeline ends with {terminal}",
+                rec.request_id
+            ));
+        }
+        if rec.completed() && terminal != "finished" {
+            return Err(format!(
+                "request {}: completed but timeline ends with {terminal}",
+                rec.request_id
+            ));
         }
     }
     Ok(())

@@ -148,6 +148,29 @@ fn metrics_op_schema_is_complete_across_pools() {
             "aggregate metrics field '{field}' missing or non-numeric"
         );
     }
+    // Full latency distributions, not just percentiles: both histograms
+    // carry the pinned log-spaced grid (37 bounds, 38 counts — the last
+    // is the overflow bucket) and every completion is accounted for.
+    for (field, expect_total) in [("ttft_hist", Some(6u64)), ("tpot_hist", None)] {
+        let hist = m.get(field);
+        let bounds = hist.get("bounds_s").as_arr().unwrap_or_else(|| {
+            panic!("{field}.bounds_s missing from the metrics frame")
+        });
+        let counts = hist
+            .get("counts")
+            .as_arr()
+            .unwrap_or_else(|| panic!("{field}.counts missing from the metrics frame"));
+        assert_eq!(bounds.len(), 37, "{field}.bounds_s log-spaced grid changed");
+        assert_eq!(counts.len(), 38, "{field}.counts must be bounds + overflow");
+        let total: u64 =
+            counts.iter().map(|c| c.as_u64().expect("integer bucket count")).sum();
+        match expect_total {
+            // One first token per completed request.
+            Some(n) => assert_eq!(total, n, "{field} lost samples"),
+            // One step latency per emitted token: 5 × 6 requests.
+            None => assert_eq!(total, 6 * 5, "{field} lost samples"),
+        }
+    }
     // Nullable-by-contract: this coordinator runs the unbounded reserve
     // policy, so pager capacity and utilization export JSON null — not
     // the usize::MAX sentinel a scraper would graph as a real value.
@@ -205,6 +228,80 @@ fn metrics_op_schema_is_complete_across_pools() {
             );
         }
     }
+    h.stop();
+}
+
+/// The `trace` op drains the flight recorder: every completed request's
+/// lifecycle timeline (opening with `submitted`, closing with a
+/// terminal event), per-request attribution that sums bitwise to
+/// TTFT + decode time, and the shed/deadline "why" digest — and a
+/// second drain proves the ring actually empties.
+#[test]
+fn trace_op_drains_flight_recorder() {
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: 4,
+        policy: SchedulerPolicy::RoundRobin,
+        trace: true,
+        ..CoordinatorConfig::default()
+    });
+    coord.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+    let h = serve(Arc::new(coord), "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&h.addr).unwrap();
+    for p in 0..4i64 {
+        c.generate("opt-tiny", &[p + 1, p + 2], 5, false).unwrap();
+    }
+
+    let t = c.trace().unwrap();
+    assert_eq!(t.get("type").as_str(), Some("trace"));
+    assert_eq!(t.get("enabled").as_bool(), Some(true));
+    let tls = t.get("timelines").as_arr().expect("timelines array");
+    assert_eq!(tls.len(), 4, "one sealed timeline per completed request");
+    for tl in tls {
+        let events = tl.get("events").as_arr().expect("events array");
+        assert_eq!(events.first().unwrap().get("ev").as_str(), Some("submitted"));
+        assert_eq!(events.last().unwrap().get("ev").as_str(), Some("finished"));
+        assert_eq!(
+            events.iter().filter(|e| e.get("ev").as_str() == Some("decode_step")).count(),
+            5,
+            "one decode_step per generated token"
+        );
+        // Attribution identity: the exported components sum to the
+        // exported endpoints (same f64s on both sides of the wire).
+        let a = tl.get("attribution");
+        let total = a.get("ttft_s").as_f64().unwrap() + a.get("decode_s").as_f64().unwrap();
+        let sum: f64 = [
+            "queue_wait_s",
+            "admission_delay_s",
+            "prefill_s",
+            "preempt_stall_s",
+            "restore_s",
+            "failover_s",
+            "decode_gap_s",
+        ]
+        .iter()
+        .map(|k| a.get(k).as_f64().unwrap())
+        .sum();
+        assert!(
+            (sum - total).abs() < 1e-12,
+            "attribution components ({sum}) do not sum to TTFT + decode ({total})"
+        );
+    }
+    assert_eq!(t.get("digest").get("completed").as_u64(), Some(4));
+
+    // The op is a drain, not a peek: the ring is now empty.
+    let again = c.trace().unwrap();
+    assert_eq!(
+        again.get("timelines").as_arr().map(|a| a.len()),
+        Some(0),
+        "second drain must see an empty flight recorder"
+    );
+
+    // With tracing live, the metrics frame carries the attribution
+    // component summary alongside the endpoint histograms.
+    let m = c.metrics().unwrap();
+    let att = m.get("attribution");
+    assert_eq!(att.get("count").as_u64(), Some(4));
+    assert!(att.get("prefill_s").get("mean_s").as_f64().is_some());
     h.stop();
 }
 

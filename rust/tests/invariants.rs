@@ -20,11 +20,12 @@
 
 use lpu::config::LpuConfig;
 use lpu::coordinator::{
-    run_cluster_open_loop, run_virtual, run_virtual_cluster, run_virtual_cluster_plan,
-    run_virtual_plan, ArrivalTrace, AutoscaleConfig, BackendFactory, Cluster,
-    ClusterConfig, ClusterFaultPlan, ClusterWorkload, Coordinator, CoordinatorConfig,
-    FaultPlan, LenDist, PartitionSpec, ReplicaCrashSpec, ReplicaSlowSpec, Request,
-    SchedulerPolicy, StepModel, VirtualConfig, Workload,
+    run_cluster_open_loop, run_open_loop, run_virtual, run_virtual_cluster,
+    run_virtual_cluster_plan, run_virtual_plan, ArrivalTrace, AutoscaleConfig,
+    BackendFactory, Cluster, ClusterConfig, ClusterFaultPlan, ClusterWorkload,
+    Coordinator, CoordinatorConfig, FaultPlan, LenDist, PartitionSpec, ReplicaCrashSpec,
+    ReplicaSlowSpec, Request, SchedulerPolicy, SpanEvent, StepModel, TraceEvent,
+    VirtualConfig, Workload,
 };
 use lpu::model::by_name;
 use lpu::util::proptest::{check, quick, Config};
@@ -329,6 +330,207 @@ fn prop_cluster_slo_streams() {
         invariants::well_formed(&baseline)?;
         invariants::cluster_streams_match_baseline(&fleet, &baseline)
     });
+}
+
+/// Property `trace-noninterference`: the lifecycle tracer is a pure
+/// observer. Per seed, tracing on vs. off leaves records, counters,
+/// percentiles, and token streams bit-identical (virtual always,
+/// threaded sampled); a traced run reruns with bit-identical event
+/// timelines; traced timelines agree with the records they narrate.
+#[test]
+fn prop_trace_noninterference() {
+    quick("trace-noninterference", |rng| {
+        let seed = rng.next_u64();
+        let wl = Workload {
+            model: "opt-tiny".into(),
+            rate: rng.range_f64(200.0, 3000.0),
+            n_requests: rng.range(10, 31),
+            prompt_len: LenDist::Uniform(1, 8),
+            output_len: LenDist::Fixed(rng.range(3, 7)),
+            vocab: 512,
+            seed,
+        };
+        let workers = rng.range(1, 3);
+        let max_active = rng.range(2, 7);
+        let vc =
+            VirtualConfig::new(SchedulerPolicy::RoundRobin, workers, max_active, step_model());
+        let mut traced = vc.clone();
+        traced.trace = true;
+
+        let off = run_virtual(&wl, &vc)?;
+        let on = run_virtual(&wl, &traced)?;
+        let on2 = run_virtual(&wl, &traced)?;
+
+        // Tracing must not move a single bit of the run itself.
+        invariants::rerun_deterministic(&off, &on)?;
+        invariants::streams_identical(&off, &on, "tracing")?;
+        if !off.timelines.is_empty() || off.attribution.is_some() {
+            return Err("tracing off must record nothing".into());
+        }
+        if on.attribution.is_none() {
+            return Err("traced run lost its attribution summary".into());
+        }
+        invariants::timelines_match_records(&on)?;
+
+        // Event sequences (and virtual timestamps) replay bit-identically.
+        if on.timelines.len() != on2.timelines.len() {
+            return Err("rerun changed timeline count".into());
+        }
+        for (x, y) in on.timelines.iter().zip(&on2.timelines) {
+            if x != y {
+                return Err(format!("request {}: timeline diverged on rerun", x.request_id));
+            }
+        }
+
+        // Sampled threaded leg: same noninterference on the live pool.
+        if rng.bool(0.15) {
+            let run_live = |trace: bool| -> Result<(Vec<Vec<i64>>, usize), String> {
+                let mut c = Coordinator::new(CoordinatorConfig {
+                    max_active_per_worker: max_active,
+                    policy: SchedulerPolicy::RoundRobin,
+                    trace,
+                    ..CoordinatorConfig::default()
+                });
+                c.add_pool("opt-tiny", workers, BackendFactory::sim("opt-tiny", 512));
+                let r = run_open_loop(&c, &wl)?;
+                let timelines = c.tracer.drain().0;
+                for tl in &timelines {
+                    invariants::timeline_well_formed(tl)?;
+                }
+                let n_timelines = timelines.len();
+                c.shutdown();
+                Ok((r.token_streams, n_timelines))
+            };
+            let (streams_off, n_off) = run_live(false)?;
+            let (streams_on, n_on) = run_live(true)?;
+            if streams_off != streams_on {
+                return Err("threaded streams changed by tracing".into());
+            }
+            if n_off != 0 {
+                return Err("threaded tracer recorded while off".into());
+            }
+            if n_on != wl.n_requests {
+                return Err(format!(
+                    "threaded tracer kept {n_on} of {} timelines",
+                    wl.n_requests
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cross-path acceptance for the tracer: per seed, the threaded pool
+/// and the virtual harness record the SAME per-request event sequence
+/// (payloads included — span lengths, cache skips, workers), because
+/// both drivers feed the one shared lane core. Only timestamps differ
+/// (wall offsets vs. the virtual clock).
+#[test]
+fn trace_event_sequences_match_across_paths() {
+    let wl = Workload {
+        model: "opt-tiny".into(),
+        rate: 600.0,
+        n_requests: 18,
+        prompt_len: LenDist::Uniform(1, 8),
+        output_len: LenDist::Fixed(5),
+        vocab: 512,
+        seed: 77,
+    };
+    let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 2, 4, step_model());
+    vc.trace = true;
+    let virt = run_virtual(&wl, &vc).unwrap();
+    invariants::require(invariants::timelines_match_records(&virt));
+    assert_eq!(virt.timelines.len(), wl.n_requests);
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        max_active_per_worker: 4,
+        policy: SchedulerPolicy::RoundRobin,
+        trace: true,
+        ..CoordinatorConfig::default()
+    });
+    coord.add_pool("opt-tiny", 2, BackendFactory::sim("opt-tiny", 512));
+    let live = run_open_loop(&coord, &wl).unwrap();
+    let (mut live_tls, _) = coord.tracer.drain();
+    coord.shutdown();
+    invariants::require(invariants::threaded_matches_virtual(&virt, &live.token_streams));
+
+    live_tls.sort_by_key(|t| t.request_id);
+    assert_eq!(live_tls.len(), virt.timelines.len());
+    for (t, v) in live_tls.iter().zip(&virt.timelines) {
+        // Threaded pool ids are 1-based; virtual rids are plan indices.
+        assert_eq!(t.request_id, v.request_id + 1);
+        invariants::require(invariants::timeline_well_formed(t));
+        assert_eq!(
+            t.sequence(),
+            v.sequence(),
+            "request {}: event sequences diverge between drivers",
+            v.request_id
+        );
+    }
+}
+
+/// The trace checkers must catch corrupted timelines, not just bless
+/// clean ones: backwards timestamps, misplaced terminals, and a sealed
+/// attribution that no longer recomputes from the events.
+#[test]
+fn harness_rejects_corrupted_timelines() {
+    let wl = Workload {
+        model: "opt-tiny".into(),
+        rate: 800.0,
+        n_requests: 12,
+        prompt_len: LenDist::Uniform(2, 8),
+        output_len: LenDist::Fixed(5),
+        vocab: 512,
+        seed: 13,
+    };
+    let mut vc = VirtualConfig::new(SchedulerPolicy::RoundRobin, 1, 4, step_model());
+    vc.trace = true;
+    let r = run_virtual(&wl, &vc).unwrap();
+    invariants::require(invariants::timelines_match_records(&r));
+    let tl = r
+        .timelines
+        .iter()
+        .find(|t| t.events.len() >= 4 && t.attribution.is_some())
+        .expect("a completed traced request");
+
+    // Timestamp gap/overlap: an event stamped after its successor.
+    let mut backwards = tl.clone();
+    backwards.events[1].t_s = backwards.events.last().unwrap().t_s + 1.0;
+    assert!(invariants::timeline_well_formed(&backwards)
+        .unwrap_err()
+        .contains("backwards"));
+
+    // A terminal event anywhere but last is a torn lifecycle.
+    let mut torn = tl.clone();
+    let t0 = torn.events[0].t_s;
+    torn.events.insert(1, TraceEvent { t_s: t0, ev: SpanEvent::Finished });
+    assert!(invariants::timeline_well_formed(&torn)
+        .unwrap_err()
+        .contains("terminal"));
+
+    // An attribution that stops summing to TTFT + decode is caught.
+    let mut skewed = tl.clone();
+    if let Some(a) = &mut skewed.attribution {
+        a.queue_wait_s += 0.25;
+    }
+    assert!(invariants::timeline_well_formed(&skewed)
+        .unwrap_err()
+        .contains("attribution"));
+
+    // Dropping a DecodeStep breaks the trace/record walk agreement.
+    let mut dropped = r.clone();
+    let victim = r
+        .timelines
+        .iter()
+        .position(|t| t.events.iter().any(|e| matches!(e.ev, SpanEvent::DecodeStep)))
+        .unwrap();
+    let step = dropped.timelines[victim]
+        .events
+        .iter()
+        .position(|e| matches!(e.ev, SpanEvent::DecodeStep))
+        .unwrap();
+    dropped.timelines[victim].events.remove(step);
+    assert!(invariants::timelines_match_records(&dropped).is_err());
 }
 
 /// Chaos acceptance, virtual path: a replica crash plus a partition in
